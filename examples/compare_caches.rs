@@ -1,0 +1,67 @@
+//! Side-by-side comparison of every cache method on one workload —
+//! the "which method should I serve with?" walkthrough.
+//!
+//!   cargo run --release --example compare_caches -- [--task mbpp_s] [--samples 8]
+
+use anyhow::Result;
+use spa_cache::bench::runner::{eval_method, task_samples};
+use spa_cache::bench::{fmt_acc, fmt_tps, Table};
+use spa_cache::coordinator::decode::UnmaskMode;
+use spa_cache::coordinator::methods::{IndexPolicy, MethodSpec};
+use spa_cache::model::tasks::Task;
+use spa_cache::runtime::engine::Engine;
+use spa_cache::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let engine = Engine::from_default_artifacts()?;
+    let model = args.str_or("model", "llada_s");
+    let task = Task::from_name(&args.str_or("task", "gsm8k_s"))
+        .ok_or_else(|| anyhow::anyhow!("unknown task"))?;
+    let samples = task_samples(&engine, task, args.usize_or("samples", 8), args.u64_or("seed", 3));
+    let k = task.block_len().min(32);
+
+    let seq = UnmaskMode::Sequential;
+    let par = UnmaskMode::Parallel { threshold: 0.9 };
+    let blk = UnmaskMode::BlockParallel { threshold: 0.9 };
+    let cases: Vec<(&str, MethodSpec, UnmaskMode)> = vec![
+        ("vanilla (sequential)", MethodSpec::Vanilla, seq),
+        ("vanilla (parallel)", MethodSpec::Vanilla, par),
+        ("dLLM-Cache", MethodSpec::Spa { variant: "spa_value_u25".into(), refresh_interval: 16 }, seq),
+        ("Fast-dLLM", MethodSpec::Manual { k, policy: IndexPolicy::Block, refresh_interval: 0 }, blk),
+        ("dKV-Cache", MethodSpec::Manual { k, policy: IndexPolicy::Window, refresh_interval: 16 }, seq),
+        ("d2Cache", MethodSpec::Manual { k, policy: IndexPolicy::LowConfidence, refresh_interval: 16 }, seq),
+        ("SPA-Cache (sequential)", MethodSpec::Spa { variant: "spa_default".into(), refresh_interval: 0 }, seq),
+        ("SPA-Cache (parallel)", MethodSpec::Spa { variant: "spa_default".into(), refresh_interval: 0 }, par),
+        ("SPA-Cache (fused msteps)", MethodSpec::Multistep, par),
+    ];
+
+    let mut table = Table::new(
+        &format!("compare_caches — {model} on {} ({} samples)", task.name(), samples.len()),
+        &["method", "TPS", "TTFT(ms)", "steps", "accuracy", "agreement"],
+    );
+    let mut baseline_tps = 0.0;
+    let mut reference = None;
+    for (name, spec, mode) in cases {
+        if name.contains("msteps") && model != "llada_s" {
+            continue;
+        }
+        let r = eval_method(&engine, &model, spec, mode, &samples, reference.as_ref())?;
+        if baseline_tps == 0.0 {
+            baseline_tps = r.tps;
+        }
+        table.row(vec![
+            name.into(),
+            fmt_tps(r.tps, baseline_tps),
+            format!("{:.1}", r.ttft_ms),
+            format!("{}", r.steps),
+            fmt_acc(r.accuracy, r.n),
+            format!("{:.3}", r.agreement),
+        ]);
+        if reference.is_none() {
+            reference = Some(r);
+        }
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,130 @@
+//! END-TO-END DRIVER (DESIGN.md / EXPERIMENTS.md): start the SPA-Cache
+//! server on the toy LLaDA model, fire a mixed-task client load at it over
+//! TCP, and report serving latency/throughput — proving all layers compose:
+//! Pallas-validated kernels → AOT HLO → PJRT runtime → coordinator →
+//! batcher/scheduler → TCP frontend.
+//!
+//!   cargo run --release --example serve_e2e -- [--requests 24] [--clients 6]
+//!                                              [--method spa] [--model llada_s]
+
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use spa_cache::coordinator::batcher::BatcherConfig;
+use spa_cache::coordinator::decode::{Sampler, UnmaskMode};
+use spa_cache::coordinator::methods::{Method, MethodSpec};
+use spa_cache::coordinator::scheduler::{Command, Scheduler};
+use spa_cache::coordinator::server::{self, Client};
+use spa_cache::model::tasks::{render_prompt, ALL_TASKS};
+use spa_cache::runtime::engine::Engine;
+use spa_cache::util::cli::Args;
+use spa_cache::util::json::Json;
+use spa_cache::util::rng::Rng;
+use spa_cache::util::stats::Summary;
+
+fn main() -> Result<()> {
+    spa_cache::util::log::init();
+    let args = Args::parse();
+    let n_requests = args.usize_or("requests", 24);
+    let n_clients = args.usize_or("clients", 6);
+    let method_name = args.str_or("method", "spa");
+    let model = args.str_or("model", "llada_s");
+    let addr = args.str_or("addr", "127.0.0.1:7391");
+    let threshold = args.f64_or("threshold", 0.9);
+
+    let (seq_len, charset) = {
+        let e = Engine::from_default_artifacts()?;
+        (e.manifest.seq_len, e.manifest.charset.clone())
+    };
+
+    // Scheduler thread owns the engine (PJRT handles are !Send).
+    let (tx, rx) = channel::<Command>();
+    let sched = std::thread::spawn({
+        let method_name = method_name.clone();
+        let model = model.clone();
+        move || -> Result<()> {
+            let engine = Engine::from_default_artifacts()?;
+            let spec = MethodSpec::by_name(&method_name, 16)?;
+            let method = Method::new(&engine, &model, spec)?;
+            let mode = if method_name == "fast_dllm" {
+                UnmaskMode::BlockParallel { threshold }
+            } else {
+                UnmaskMode::Parallel { threshold }
+            };
+            let sampler = Sampler::greedy(mode);
+            let batcher =
+                BatcherConfig { batch: 4, min_free: 2, max_wait: Duration::from_millis(100) };
+            Scheduler::new(engine, method, sampler, batcher, 6 * seq_len).run(rx)
+        }
+    });
+    let server = std::thread::spawn({
+        let addr = addr.clone();
+        let charset = charset.clone();
+        let tx = tx.clone();
+        move || server::serve(&addr, seq_len, &charset, tx)
+    });
+    std::thread::sleep(Duration::from_millis(200));
+
+    // Client fleet: each worker sends its share of mixed-task requests.
+    println!(
+        "serve_e2e: {n_requests} requests over {n_clients} clients, method={method_name}, model={model}"
+    );
+    let results = Arc::new(Mutex::new(Vec::<(f64, f64, f64)>::new()));
+    let t_start = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        let results = Arc::clone(&results);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + c as u64);
+            let mut client = Client::connect(&addr).expect("connect");
+            let share = n_requests / n_clients + usize::from(c < n_requests % n_clients);
+            for i in 0..share {
+                let task = ALL_TASKS[(c + i) % ALL_TASKS.len()];
+                let (q, _truth) = task.gen(&mut rng);
+                let prompt = render_prompt(task, &mut rng, &q);
+                let t0 = Instant::now();
+                let r = client
+                    .request(&Json::obj(vec![
+                        ("op", Json::str("generate")),
+                        ("task", Json::str(task.name())),
+                        ("prompt", Json::Str(prompt)),
+                    ]))
+                    .expect("generate");
+                let wall = t0.elapsed().as_secs_f64() * 1e3;
+                let ttft = r.get("ttft_ms").and_then(|x| x.as_f64()).unwrap_or(f64::NAN);
+                let decoded = r.get("decoded").and_then(|x| x.as_f64()).unwrap_or(0.0);
+                results.lock().unwrap().push((wall, ttft, decoded));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let total_s = t_start.elapsed().as_secs_f64();
+
+    let results = results.lock().unwrap();
+    let walls: Vec<f64> = results.iter().map(|r| r.0).collect();
+    let ttfts: Vec<f64> = results.iter().map(|r| r.1).filter(|x| x.is_finite()).collect();
+    let tokens: f64 = results.iter().map(|r| r.2).sum();
+    let lw = Summary::of(&walls);
+    println!("\n=== serve_e2e results ({} completed) ===", results.len());
+    println!("wall time           : {total_s:.1} s");
+    println!("serving throughput  : {:.1} tok/s, {:.2} req/s", tokens / total_s, results.len() as f64 / total_s);
+    println!("request latency ms  : mean {:.0}  p50 {:.0}  p90 {:.0}  p99 {:.0}", lw.mean, lw.p50, lw.p90, lw.p99);
+    if !ttfts.is_empty() {
+        let ts = Summary::of(&ttfts);
+        println!("TTFT ms             : mean {:.0}  p50 {:.0}  p90 {:.0}", ts.mean, ts.p50, ts.p90);
+    }
+
+    // Server-side metrics + shutdown.
+    let mut c = Client::connect(&addr)?;
+    println!("\nserver metrics:\n{}", c.stats()?);
+    c.shutdown()?;
+    let _ = tx.send(Command::Shutdown);
+    sched.join().unwrap()?;
+    let _ = server.join();
+    Ok(())
+}

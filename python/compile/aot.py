@@ -1,0 +1,422 @@
+"""AOT pipeline: train → calibrate → lower every variant to HLO text.
+
+This is the only entry point ``make artifacts`` runs.  It produces, under
+``artifacts/``:
+
+* ``weights-<model>.npz``   — trained parameters (python-side cache)
+* ``weights-<model>.bin``   — flat f32 tensor blob consumed by Rust
+* ``calib-<model>.json``    — drift profile, fitted Eq.5 schedule, eval accuracy
+* ``<variant>.hlo.txt``     — one HLO-text executable per variant
+* ``index.json``            — the manifest tying everything together (models,
+                              tensor offsets, variant IO signatures, goldens)
+
+HLO **text** is the interchange format: jax ≥ 0.5 serialises HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Lowering is incremental: a variant is re-lowered only when its spec
+fingerprint or the model weights changed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, drift, model, specs, train_toy
+from .model import MODELS, VariantConfig
+from .schedule import RhoSchedule
+
+TRAIN_STEPS = {"llada_s": 1300, "dream_s": 900, "llada15_s": 450}
+
+# llada15_s warm-starts from llada_s, mirroring LLaDA-1.5's relationship to
+# LLaDA-8B (a post-trained continuation, not a fresh pretrain).
+WARM_START = {"llada15_s": "llada_s"}
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def variant_needs_wr(v: VariantConfig) -> bool:
+    """Whether the flat parameter list includes the SVD proxy matrices."""
+    if v.kind in ("probe", "multistep"):
+        return True
+    if v.kind in ("spa", "spa_refresh"):
+        return v.identifier == "singular"
+    return False
+
+
+def variant_param_names(v: VariantConfig) -> tuple[list[str], list[str]]:
+    """(model-side names, blob tensor names) for the flat param prefix."""
+    cfg = MODELS[v.model]
+    names = model.param_order(cfg, with_wr=variant_needs_wr(v))
+    blob = [
+        f"wr{v.rank}.{n[: n.index('.')]}" if n.endswith(".wr") else n for n in names
+    ]
+    return names, blob
+
+
+def variant_io(v: VariantConfig) -> tuple[list[dict], list[dict]]:
+    """Runtime (non-parameter) input and output signatures for the manifest."""
+    cfg = MODELS[v.model]
+    L, B, N = cfg.n_layers, v.batch, v.seq_len
+    pr = v.proxy_dim()
+    kv = [L, B, N, cfg.n_kv_heads, cfg.d_head]
+    hs = [L, B, N, cfg.d_model]
+    tok = {"name": "tokens", "shape": [B, N], "dtype": "i32"}
+    logits = {"name": "logits", "shape": [B, N, cfg.vocab_size], "dtype": "f32"}
+    f32 = lambda name, shape: {"name": name, "shape": shape, "dtype": "f32"}
+    pc = f32("pcache", [L, B, N, pr])
+    kc, vc, hc = f32("kcache", kv), f32("vcache", kv), f32("hcache", hs)
+    if v.kind == "vanilla":
+        return [tok], [logits]
+    if v.kind == "spa":
+        return [tok, pc, kc, vc, hc], [logits, pc, kc, vc, hc]
+    if v.kind == "spa_refresh":
+        return [tok], [logits, pc, kc, vc, hc]
+    if v.kind == "manual":
+        idx = {"name": "idx", "shape": [B, v.manual_k], "dtype": "i32"}
+        return [tok, idx, kc, vc, hc], [logits, kc, vc, hc]
+    if v.kind == "probe":
+        xin = f32("xin", hs)
+        val = f32("val", [L, B, N, cfg.d_kv])
+        prox = f32("prox", [L, B, N, v.rank])
+        ao = f32("ao", [L, B, N, cfg.d_q])
+        outr = f32("out", hs)
+        sims = f32("sims", [L, B, N, 5])
+        return [tok, xin, val, prox, ao, outr], [logits, xin, val, prox, ao, outr, sims]
+    if v.kind == "multistep":
+        return [tok, pc, kc, vc, hc], [tok, pc, kc, vc, hc]
+    raise ValueError(v.kind)
+
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def variant_entry(v: VariantConfig):
+    """(callable, example-args) pair ready for ``jax.jit(...).lower``."""
+    cfg = MODELS[v.model]
+    names, _ = variant_param_names(v)
+    shapes = model.param_shapes(cfg, v.rank, with_wr=variant_needs_wr(v))
+    pspecs = [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names]
+    rins, _ = variant_io(v)
+    rspecs = [jax.ShapeDtypeStruct(tuple(i["shape"]), _DTYPES[i["dtype"]]) for i in rins]
+    np_ = len(names)
+
+    def fn(*args):
+        params = dict(zip(names, args[:np_]))
+        rt = args[np_:]
+        if v.kind == "vanilla":
+            return (model.vanilla_forward(params, cfg, rt[0]),)
+        if v.kind == "spa":
+            return model.spa_step(params, cfg, v, *rt)
+        if v.kind == "spa_refresh":
+            return model.spa_refresh(params, cfg, v, rt[0])
+        if v.kind == "manual":
+            return model.manual_step(params, cfg, v, *rt)
+        if v.kind == "probe":
+            return model.probe_step(params, cfg, v, *rt)
+        if v.kind == "multistep":
+            return model.multistep(params, cfg, v, *rt)
+        raise ValueError(v.kind)
+
+    return fn, pspecs + rspecs
+
+
+# ---------------------------------------------------------------------------
+# Weights + calibration
+# ---------------------------------------------------------------------------
+
+
+def load_or_train(name: str, out_dir: str, force: bool) -> dict[str, jnp.ndarray]:
+    path = os.path.join(out_dir, f"weights-{name}.npz")
+    if os.path.exists(path) and not force:
+        data = np.load(path)
+        return {k: jnp.asarray(data[k]) for k in data.files}
+    init = None
+    if name in WARM_START:
+        base = os.path.join(out_dir, f"weights-{WARM_START[name]}.npz")
+        if os.path.exists(base):
+            data = np.load(base)
+            init = {k: jnp.asarray(data[k]) for k in data.files}
+            print(f"[aot] warm-starting {name} from {WARM_START[name]}", flush=True)
+    print(f"[aot] training {name} ({TRAIN_STEPS[name]} steps)", flush=True)
+    params, losses = train_toy.train(
+        name, steps=TRAIN_STEPS[name], seed=hash(name) % 1000, init_params=init
+    )
+    np.savez(path, **{k: np.asarray(p) for k, p in params.items()})
+    with open(os.path.join(out_dir, f"losses-{name}.json"), "w") as f:
+        json.dump(losses, f)
+    return params
+
+
+def load_or_calibrate(
+    name: str, params, out_dir: str, force: bool
+) -> tuple[RhoSchedule, list[float], dict]:
+    path = os.path.join(out_dir, f"calib-{name}.json")
+    cfg = MODELS[name]
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            d = json.load(f)
+        return RhoSchedule(**d["schedule"]), d["profile"], d.get("eval", {})
+    print(f"[aot] calibrating drift profile for {name}", flush=True)
+    sched, profile = drift.calibrate_schedule(params, cfg, specs.DEFAULT_RANK[name])
+    print(f"[aot] evaluating {name}", flush=True)
+    acc = train_toy.evaluate(params, cfg)
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "schedule": dataclasses.asdict(sched),
+                "profile": list(map(float, profile)),
+                "eval": acc,
+            },
+            f,
+            indent=1,
+        )
+    return sched, list(map(float, profile)), acc
+
+
+def write_blob(name: str, params, ranks: list[int], out_dir: str) -> list[dict]:
+    """Write the flat f32 tensor blob + return the tensor table."""
+    cfg = MODELS[name]
+    tensors: list[tuple[str, np.ndarray]] = []
+    for n in model.param_order(cfg, with_wr=False):
+        tensors.append((n, np.asarray(params[n], np.float32)))
+    for r in ranks:
+        wr = model.singular_proxies(params, cfg, r)
+        for i in range(cfg.n_layers):
+            tensors.append((f"wr{r}.l{i}", np.asarray(wr[f"l{i}.wr"], np.float32)))
+    table, offset = [], 0
+    with open(os.path.join(out_dir, f"weights-{name}.bin"), "wb") as f:
+        for n, arr in tensors:
+            b = arr.tobytes()
+            f.write(b)
+            table.append({"name": n, "shape": list(arr.shape), "offset": offset})
+            offset += len(b)
+    return table
+
+
+# ---------------------------------------------------------------------------
+# Goldens (cross-layer contract tests; verified by rust integration tests)
+# ---------------------------------------------------------------------------
+
+
+def make_goldens(all_params: dict, fitted: dict[str, RhoSchedule]) -> dict:
+    m = "llada_s"
+    cfg = MODELS[m]
+    params = dict(all_params[m])
+    r = specs.DEFAULT_RANK[m]
+    params.update(model.singular_proxies(params, cfg, r))
+    adaptive = specs.scale_to_peak(fitted[m], specs.RHO_P)
+
+    rng = np.random.default_rng(42)
+    toks = np.stack(
+        [
+            corpus.make_sample(corpus.TASKS["gsm8k_s"], rng, specs.SEQ_LEN)[0]
+            for _ in range(specs.BATCH)
+        ]
+    )
+
+    # Vanilla logits checksum.
+    logits = np.asarray(
+        jax.jit(lambda t: model.vanilla_forward(params, cfg, t))(jnp.asarray(toks))
+    )
+
+    # Short SPA decode trace (refresh + 5 steps, threshold 0.6).
+    v = VariantConfig(
+        "golden", "spa", m, specs.BATCH, specs.SEQ_LEN,
+        identifier="singular", rank=r, schedule=adaptive,
+    )
+    trace = [toks.tolist()]
+    l0, pc, kc, vc, hc = jax.jit(lambda t: model.spa_refresh(params, cfg, v, t))(
+        jnp.asarray(toks)
+    )
+    step = jax.jit(lambda t, p, k, v_, h: model.spa_step(params, cfg, v, t, p, k, v_, h))
+    t = model.confidence_unmask(jnp.asarray(toks), l0, 0.6)
+    trace.append(np.asarray(t).tolist())
+    for _ in range(5):
+        lg, pc, kc, vc, hc = step(t, pc, kc, vc, hc)
+        t = model.confidence_unmask(t, lg, 0.6)
+        trace.append(np.asarray(t).tolist())
+
+    return {
+        "model": m,
+        "tokens": toks.tolist(),
+        "vanilla_logits_sum": float(np.abs(logits).sum()),
+        "vanilla_logits_sample": [float(x) for x in logits[0, 0, :8]],
+        "spa_decode_trace": trace,
+        "spa_variant": "llada_s__spa_default",
+        "unmask_threshold": 0.6,
+        "schedules": {
+            name: {
+                "params": dataclasses.asdict(specs.scale_to_peak(fitted[name], specs.RHO_P)),
+                "rho": [
+                    specs.scale_to_peak(fitted[name], specs.RHO_P).rho(l, MODELS[name].n_layers)
+                    for l in range(1, MODELS[name].n_layers + 1)
+                ],
+                "k_per_layer": specs.scale_to_peak(fitted[name], specs.RHO_P).k_per_layer(
+                    MODELS[name].n_layers, specs.SEQ_LEN
+                ),
+            }
+            for name in MODELS
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--force-train", action="store_true")
+    ap.add_argument("--force-lower", action="store_true")
+    ap.add_argument("--only", default="", help="comma list of variant names to lower")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+
+    all_params: dict[str, dict] = {}
+    fitted: dict[str, RhoSchedule] = {}
+    evals: dict[str, dict] = {}
+    profiles: dict[str, list[float]] = {}
+    for name in MODELS:
+        params = load_or_train(name, out_dir, args.force_train)
+        all_params[name] = params
+        sched, profile, acc = load_or_calibrate(name, params, out_dir, args.force_train)
+        fitted[name], profiles[name], evals[name] = sched, profile, acc
+
+    variant_list = specs.build_specs(fitted)
+    only = {s for s in args.only.split(",") if s}
+
+    # Tensor blobs (one per model, covering every rank any variant needs).
+    tensor_tables = {
+        name: write_blob(name, all_params[name], specs.ranks_needed(variant_list, name), out_dir)
+        for name in MODELS
+    }
+
+    # Incremental lowering.
+    index_path = os.path.join(out_dir, "index.json")
+    old_fps: dict[str, str] = {}
+    if os.path.exists(index_path):
+        try:
+            with open(index_path) as f:
+                old = json.load(f)
+            old_fps = {v["name"]: v.get("fingerprint", "") for v in old.get("variants", [])}
+        except Exception:
+            pass
+
+    manifest_variants = []
+    for v in variant_list:
+        fp = hashlib.sha256(specs.spec_fingerprint(v).encode()).hexdigest()[:16]
+        fname = f"{v.name}.hlo.txt"
+        fpath = os.path.join(out_dir, fname)
+        names, blob_names = variant_param_names(v)
+        rins, routs = variant_io(v)
+        if (
+            (only and v.name not in only)
+            or (not args.force_lower and os.path.exists(fpath) and old_fps.get(v.name) == fp)
+        ):
+            pass  # keep existing artifact
+        else:
+            t0 = time.time()
+            # Attach the model's wr tensors so the entry can close over names.
+            params = dict(all_params[v.model])
+            if variant_needs_wr(v):
+                params.update(model.singular_proxies(params, MODELS[v.model], v.rank))
+            fn, exspecs = variant_entry(v)
+            lowered = jax.jit(fn).lower(*exspecs)
+            text = to_hlo_text(lowered)
+            with open(fpath, "w") as f:
+                f.write(text)
+            print(
+                f"[aot] lowered {v.name} ({len(text)//1024} KiB, {time.time()-t0:.1f}s)",
+                flush=True,
+            )
+        manifest_variants.append(
+            {
+                "name": v.name,
+                "kind": v.kind,
+                "model": v.model,
+                "file": fname,
+                "fingerprint": fp,
+                "batch": v.batch,
+                "seq_len": v.seq_len,
+                "identifier": v.identifier,
+                "rank": v.rank,
+                "schedule": dataclasses.asdict(v.schedule),
+                "k_per_layer": v.k_per_layer() if v.kind in ("spa", "multistep") else [],
+                "manual_k": v.manual_k,
+                "msteps": v.msteps,
+                "threshold": v.threshold,
+                "kernel_backend": v.kernel_backend,
+                "params": blob_names,
+                "inputs": rins,
+                "outputs": routs,
+            }
+        )
+
+    print("[aot] writing goldens + index.json", flush=True)
+    goldens = make_goldens(all_params, fitted)
+    index = {
+        "version": 1,
+        "batch": specs.BATCH,
+        "seq_len": specs.SEQ_LEN,
+        "tokenizer": {
+            "specials": corpus.SPECIALS,
+            "charset": corpus.CHARSET,
+            "vocab_size": corpus.VOCAB_SIZE,
+        },
+        "models": {
+            name: {
+                "config": dataclasses.asdict(MODELS[name]),
+                "weights_file": f"weights-{name}.bin",
+                "tensors": tensor_tables[name],
+                "default_rank": specs.DEFAULT_RANK[name],
+                "fitted_schedule": dataclasses.asdict(fitted[name]),
+                "drift_profile": profiles[name],
+                "eval_accuracy": evals[name],
+            }
+            for name in MODELS
+        },
+        "variants": manifest_variants,
+        "goldens": goldens,
+        "tasks": {
+            name: {
+                "paper_name": t.paper_name,
+                "n_shot": t.n_shot,
+                "gen_len": t.gen_len,
+                "block_len": t.block_len,
+            }
+            for name, t in corpus.TASKS.items()
+        },
+    }
+    with open(index_path, "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"[aot] done: {len(manifest_variants)} variants in {out_dir}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,202 @@
+"""Synthetic task corpus for the toy diffusion language models.
+
+The paper evaluates on GSM8K/GPQA/MATH500/BBH/MMLU-pro/MBPP/HumanEval with
+LLaDA-8B / Dream-7B.  Neither the models nor the datasets are available in
+this offline environment, so we substitute seven synthetic task suites over a
+small deterministic grammar (see DESIGN.md §2).  Each suite mirrors the
+*decode configuration* of its paper counterpart (Table 7, scaled down) and
+provides exact-match accuracy, so cache-induced quality degradation is
+measurable exactly like in the paper.
+
+Sequence format (char-level tokens):
+
+    <BOS> [exemplar ';'] ... '#q ' <question> '#a ' <answer> <EOS> <PAD>*
+
+During serving, everything up to and including ``'#a '`` is the prompt; the
+generation region (``gen_len`` positions) starts fully masked and is decoded
+by the diffusion sampler.  Accuracy = exact match of the answer string
+(PAD/EOS stripped).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Tokenizer: fixed char-level vocabulary. Keep in sync with rust/src/model/tokenizer.rs
+# ---------------------------------------------------------------------------
+
+PAD, MASK, BOS, EOS = 0, 1, 2, 3
+SPECIALS = ["<pad>", "<mask>", "<bos>", "<eos>"]
+CHARSET = "0123456789abcdefghijklmnopqrstuvwxyz+-*/=()<>?:;,.#@!| "
+VOCAB_SIZE = 64  # 4 specials + 56 chars + 4 reserved
+
+assert len(SPECIALS) + len(CHARSET) <= VOCAB_SIZE
+
+_CHAR_TO_ID = {c: i + len(SPECIALS) for i, c in enumerate(CHARSET)}
+_ID_TO_CHAR = {i + len(SPECIALS): c for i, c in enumerate(CHARSET)}
+
+
+def encode(text: str) -> list[int]:
+    """Encode a string into token ids (raises on unknown chars)."""
+    return [_CHAR_TO_ID[c] for c in text]
+
+
+def decode(ids) -> str:
+    """Decode token ids into a string; specials are dropped."""
+    return "".join(_ID_TO_CHAR.get(int(i), "") for i in ids)
+
+
+# ---------------------------------------------------------------------------
+# Task generators. Each returns (question, answer) as plain strings.
+# ---------------------------------------------------------------------------
+
+
+def _gsm8k_s(rng: np.random.Generator) -> tuple[str, str]:
+    """Addition table: 3+4=? -> 7  (paper: GSM8K)."""
+    a, b = int(rng.integers(0, 10)), int(rng.integers(0, 10))
+    return f"{a}+{b}=?", str(a + b)
+
+
+def _gpqa_s(rng: np.random.Generator) -> tuple[str, str]:
+    """Relation lookup: p>q;r>s;r>? -> s  (paper: GPQA)."""
+    syms = rng.choice(list("abcdefghijklmnopqrstuvwxyz"), size=4, replace=False)
+    p, q, r, s = (str(x) for x in syms)
+    facts = [f"{p}>{q}", f"{r}>{s}"]
+    rng.shuffle(facts)
+    query, ans = (r, s) if rng.integers(0, 2) else (p, q)
+    return ";".join(facts) + f";{query}>?", ans
+
+
+def _math_s(rng: np.random.Generator) -> tuple[str, str]:
+    """Times table: 7*3=? -> 21  (paper: MATH500)."""
+    a, b = int(rng.integers(2, 10)), int(rng.integers(2, 10))
+    return f"{a}*{b}=?", str(a * b)
+
+
+def _bbh_s(rng: np.random.Generator) -> tuple[str, str]:
+    """Short reversal: rev(abc)=? -> cba  (paper: BBH)."""
+    s = "".join(rng.choice(list("abcdefghijklmnopqrstuvwxyz"), size=3))
+    return f"rev({s})=?", s[::-1]
+
+
+def _mmlu_s(rng: np.random.Generator) -> tuple[str, str]:
+    """Option value lookup: a:3 b:7 c:9 get b? -> 7  (paper: MMLU-pro)."""
+    vals = rng.choice(np.arange(10), size=3, replace=False)
+    key = int(rng.integers(0, 3))
+    opts = " ".join(f"{o}:{int(v)}" for o, v in zip("abc", vals))
+    return f"{opts} get {'abc'[key]}?", str(int(vals[key]))
+
+
+def _mbpp_s(rng: np.random.Generator) -> tuple[str, str]:
+    """Pattern program: dup(ab)=? -> abab  (paper: MBPP)."""
+    s = "".join(rng.choice(list("abcdefghijklmnopqrstuvwxyz"), size=2))
+    return f"dup({s})=?", s + s
+
+
+def _he_s(rng: np.random.Generator) -> tuple[str, str]:
+    """Alphabet successor: nxt(cd)=? -> de  (paper: HumanEval)."""
+    start = int(rng.integers(0, 24))
+    s = "".join(chr(ord("a") + start + i) for i in range(2))
+    nxt = "".join(chr(ord(c) + 1) for c in s)
+    return f"nxt({s})=?", nxt
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """A synthetic analogue of one paper benchmark.
+
+    ``n_shot``/``gen_len``/``block_len`` mirror the paper's Table 7 decode
+    configuration (scaled to the toy model; see DESIGN.md §2).
+    """
+
+    name: str
+    paper_name: str
+    gen: Callable[[np.random.Generator], tuple[str, str]]
+    n_shot: int
+    gen_len: int
+    block_len: int
+
+
+TASKS: dict[str, TaskSpec] = {
+    t.name: t
+    for t in [
+        TaskSpec("gsm8k_s", "GSM8K", _gsm8k_s, n_shot=2, gen_len=64, block_len=8),
+        TaskSpec("gpqa_s", "GPQA", _gpqa_s, n_shot=2, gen_len=32, block_len=16),
+        TaskSpec("math_s", "MATH500", _math_s, n_shot=2, gen_len=64, block_len=16),
+        TaskSpec("bbh_s", "BBH", _bbh_s, n_shot=1, gen_len=64, block_len=64),
+        TaskSpec("mmlu_s", "MMLU-pro", _mmlu_s, n_shot=1, gen_len=64, block_len=64),
+        TaskSpec("mbpp_s", "MBPP", _mbpp_s, n_shot=1, gen_len=64, block_len=16),
+        TaskSpec("he_s", "HumanEval", _he_s, n_shot=0, gen_len=64, block_len=16),
+    ]
+}
+
+
+def render_prompt(task: TaskSpec, rng: np.random.Generator, question: str) -> str:
+    """Render the few-shot prompt text for ``question`` (without the answer)."""
+    shots = []
+    for _ in range(task.n_shot):
+        q, a = task.gen(rng)
+        shots.append(f"#q {q}#a {a};")
+    return "".join(shots) + f"#q {question}#a "
+
+
+def make_sample(
+    task: TaskSpec, rng: np.random.Generator, seq_len: int
+) -> tuple[np.ndarray, int, str]:
+    """Build one serving sample.
+
+    Returns ``(tokens, prompt_len, answer)`` where ``tokens`` is the padded
+    i32 sequence of length ``seq_len`` with the generation region MASKed.
+    ``prompt_len`` counts BOS + prompt chars.
+    """
+    q, a = task.gen(rng)
+    prompt = render_prompt(task, rng, q)
+    ids = [BOS] + encode(prompt)
+    gen_region = min(task.gen_len, seq_len - len(ids))
+    if gen_region <= 0:
+        raise ValueError(f"prompt too long for seq_len={seq_len}: {len(ids)}")
+    toks = np.full((seq_len,), PAD, dtype=np.int32)
+    toks[: len(ids)] = ids
+    toks[len(ids) : len(ids) + gen_region] = MASK
+    return toks, len(ids), a
+
+
+def make_training_batch(
+    rng: np.random.Generator, batch: int, seq_len: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Build a training batch of *complete* sequences (answers included).
+
+    The diffusion trainer masks tokens itself; here we only produce clean
+    targets: BOS + prompt + answer + EOS + PAD*.  Tasks are mixed uniformly.
+
+    Returns ``(tokens [B,N], ans_start [B])`` where ``ans_start`` is the
+    index of the first answer token — the boundary the SFT-style masking in
+    ``train_toy.diffusion_loss`` conditions on (LLaDA masks only response
+    tokens during instruction tuning; we mix that with uniform masking).
+    """
+    names = list(TASKS)
+    out = np.full((batch, seq_len), PAD, dtype=np.int32)
+    ans_start = np.zeros((batch,), dtype=np.int32)
+    for i in range(batch):
+        task = TASKS[names[int(rng.integers(0, len(names)))]]
+        q, a = task.gen(rng)
+        prompt = render_prompt(task, rng, q)
+        head = [BOS] + encode(prompt)
+        ids = (head + encode(a) + [EOS])[:seq_len]
+        out[i, : len(ids)] = ids
+        ans_start[i] = min(len(head), seq_len - 1)
+    return out, ans_start
+
+
+def extract_answer(tokens: np.ndarray, prompt_len: int) -> str:
+    """Extract the generated answer string from a decoded sequence."""
+    ids = []
+    for t in tokens[prompt_len:]:
+        if int(t) in (EOS, PAD, MASK):
+            break
+        ids.append(int(t))
+    return decode(ids).rstrip(";").strip()

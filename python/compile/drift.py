@@ -1,0 +1,88 @@
+"""Build-time drift profiling (paper Fig. 2 / Table 6, python side).
+
+Runs a few sequential decodes through ``probe_step`` to measure, per layer,
+the fraction of tokens whose layer-output similarity between adjacent steps
+falls below the paper's threshold τ = 0.95.  The profile is fitted with the
+piecewise Gaussian of Eq. 5 (``schedule.fit_piecewise_gaussian``) and baked
+into the adaptive variants at AOT time — exactly the offline calibration the
+paper performs once per model (its Table 6).
+
+The Rust side re-derives the same profile at runtime from the ``probe``
+artifact (``rust/src/analysis``) for the figure benches; the two paths are
+cross-checked by the goldens in the manifest.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+from .schedule import RhoSchedule, fit_piecewise_gaussian
+
+TAU = 0.95  # paper's drift threshold
+
+
+def measure_drift(
+    params,
+    cfg: model.ModelConfig,
+    rank: int,
+    seq_len: int = 128,
+    batch: int = 4,
+    steps: int = 24,
+    seed: int = 7,
+    threshold: float = 0.6,
+) -> np.ndarray:
+    """Average per-layer fraction of drifting tokens (output sim < τ).
+
+    Decodes ``batch`` mixed-task samples for ``steps`` unmasking steps and
+    averages the drift fraction over steps 2..T (step 1 has no predecessor).
+    Returns ``[L]`` float64.
+    """
+    if f"l0.wr" not in params:
+        params = dict(params)
+        params.update(model.singular_proxies(params, cfg, rank))
+    variant = model.VariantConfig(
+        "drift_probe", "probe", cfg.name, batch, seq_len, identifier="singular", rank=rank
+    )
+    probe = jax.jit(
+        lambda t, a, b, c, d, e: model.probe_step(params, cfg, variant, t, a, b, c, d, e)
+    )
+
+    rng = np.random.default_rng(seed)
+    names = list(corpus.TASKS)
+    toks = np.stack(
+        [
+            corpus.make_sample(corpus.TASKS[names[i % len(names)]], rng, seq_len)[0]
+            for i in range(batch)
+        ]
+    )
+    toks = jnp.asarray(toks)
+
+    L, B, N = cfg.n_layers, batch, seq_len
+    z = lambda dim: jnp.zeros((L, B, N, dim), jnp.float32)
+    rec = (z(cfg.d_model), z(cfg.d_kv), z(rank), z(cfg.d_q), z(cfg.d_model))
+
+    drift_sum = np.zeros(L)
+    count = 0
+    for s in range(steps):
+        logits, *new_rec, sims = probe(toks, *rec)
+        rec = tuple(new_rec)
+        if s > 0:  # first step compares against zeros — skip
+            out_sim = np.asarray(sims[..., 4])  # [L,B,N] layer-output channel
+            drift_sum += (out_sim < TAU).mean(axis=(1, 2))
+            count += 1
+        toks = model.confidence_unmask(toks, logits, threshold)
+        if not bool(jnp.any(toks == corpus.MASK)):
+            break
+    return drift_sum / max(count, 1)
+
+
+def calibrate_schedule(
+    params, cfg: model.ModelConfig, rank: int, rho_cap: float = 0.5, **kw
+) -> tuple[RhoSchedule, np.ndarray]:
+    """Measure the drift profile and fit Eq. 5. Returns (schedule, profile)."""
+    profile = measure_drift(params, cfg, rank, **kw)
+    sched = fit_piecewise_gaussian(list(profile), rho_cap=rho_cap)
+    return sched, profile

@@ -1,0 +1,71 @@
+"""Pallas kernel: fused SwiGLU feed-forward over the selected token rows.
+
+Paper Phase 3 (Algorithm 1): only the ``kq = N·ρ`` selected rows pass through
+the FFN; the rest reuse ``H^c``.  The kernel tiles the row axis — one
+``(block_m, d)`` activation tile in VMEM — and keeps all three weight
+matrices resident (fine at toy scale; at the paper's d=4096/f=11008 scale the
+``f`` axis would additionally be tiled with a revolving accumulator, which
+changes the BlockSpec but not the fused silu·gate structure).
+
+``interpret=True`` — see ``proxy.py`` for why.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    x = x_ref[...]  # [bm, d]
+    a = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    g = a * (1.0 / (1.0 + jnp.exp(-a)))  # SiLU on the MXU output
+    u = jnp.dot(x, w3_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(g * u, w2_ref[...], preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def ffn_swiglu(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    w3: jnp.ndarray,
+    w2: jnp.ndarray,
+    block_m: int = 64,
+) -> jnp.ndarray:
+    """Fused SwiGLU (see ``ref.ffn_swiglu_ref``).
+
+    Args:
+      x: ``[M, d]`` selected rows (callers flatten ``[B, kq, d]``).
+      w1/w3: ``[d, f]`` gate/up projections.
+      w2: ``[f, d]`` down projection.
+    """
+    m, d = x.shape
+    f = w1.shape[1]
+    if m % block_m != 0:
+        block_m = m
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=True,
+    )(x, w1, w3, w2)
+
+
+def vmem_footprint_bytes(d: int, f: int, block_m: int, itemsize: int = 4) -> int:
+    """Analytic VMEM footprint of one program instance (DESIGN.md §8)."""
+    x_tile = block_m * d * itemsize
+    weights = (2 * d * f + f * d) * itemsize
+    inter = 2 * block_m * f * itemsize
+    return x_tile + weights + inter

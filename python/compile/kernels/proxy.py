@@ -1,0 +1,96 @@
+"""Pallas kernel for singular-proxy drift scoring — the paper's L1 hot-spot.
+
+The identification overhead is the bottleneck SPA-Cache removes (paper §3.3,
+Fig. 4): dLLM-Cache projects every token into the full ``d``-dim Value space
+each step; SPA-Cache projects into the ``r ≪ d`` principal subspace
+``p = Λ_r V_rᵀ h`` and scores drift there.
+
+TPU mapping (DESIGN.md §8): the grid tiles the token axis; each program
+streams one ``(block_n, d)`` tile of ``H`` from HBM into VMEM, multiplies it
+against the VMEM-resident ``W_rᵀ`` (``d×r``, one MXU tile column for
+``r ≤ 128``), and fuses the cosine comparison against the cached proxies in
+the same pass — no ``[N, d]`` intermediate ever materialises.
+
+``interpret=True`` everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute; correctness is validated against
+``ref.proxy_score_ref`` and TPU performance is estimated analytically in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS
+
+
+def _proxy_kernel(h_ref, wr_ref, pc_ref, score_ref, p_ref):
+    """One (batch, token-block) program: project + cosine-score a tile."""
+    h = h_ref[0]  # [bn, d] VMEM tile
+    wr = wr_ref[...]  # [r, d] resident
+    p = jnp.dot(h, wr.T, preferred_element_type=jnp.float32)  # MXU: [bn, r]
+    pc = pc_ref[0]  # [bn, r]
+    num = jnp.sum(p * pc, axis=-1)
+    den = jnp.sqrt(jnp.sum(p * p, axis=-1)) * jnp.sqrt(jnp.sum(pc * pc, axis=-1)) + EPS
+    score_ref[0, :] = 1.0 - num / den
+    p_ref[0] = p.astype(p_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def proxy_score(
+    h: jnp.ndarray,
+    w_r: jnp.ndarray,
+    p_cache: jnp.ndarray,
+    block_n: int = 64,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused proxy projection + drift scoring (see ``ref.proxy_score_ref``).
+
+    Args:
+      h: ``[B, N, d]`` normed layer inputs.
+      w_r: ``[r, d]`` truncated singular projection.
+      p_cache: ``[B, N, r]`` proxies at each token's last refresh.
+      block_n: token-axis tile size (VMEM tile height).
+
+    Returns ``(scores [B,N], proxies [B,N,r])``.
+    """
+    b, n, d = h.shape
+    r = w_r.shape[0]
+    if n % block_n != 0:
+        block_n = n  # fall back to a single tile for ragged sizes
+    grid = (b, n // block_n)
+    return pl.pallas_call(
+        _proxy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((r, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, block_n, r), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n, r), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, n, r), h.dtype),
+        ],
+        interpret=True,
+    )(h, w_r, p_cache)
+
+
+def vmem_footprint_bytes(d: int, r: int, block_n: int, itemsize: int = 4) -> int:
+    """Analytic VMEM footprint of one program instance (DESIGN.md §8).
+
+    h tile + resident W_r + proxy-cache tile + outputs.  Used by the perf
+    notes to check the schedule fits the ~16 MiB/core VMEM budget at the
+    paper's scale (d=4096, r=128).
+    """
+    h_tile = block_n * d * itemsize
+    wr = r * d * itemsize
+    pc_tile = block_n * r * itemsize
+    out = block_n * (r + 1) * itemsize
+    return h_tile + wr + pc_tile + out

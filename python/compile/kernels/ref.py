@@ -1,0 +1,78 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness anchors).
+
+Every Pallas kernel in this package must agree with its oracle here to
+``assert_allclose`` tolerance; ``python/tests/test_kernels.py`` sweeps shapes
+and dtypes with hypothesis.  These references are also used directly by the
+default (fused-jnp) artifact build — identical math, one HLO fusion.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+def rmsnorm_ref(x: jnp.ndarray, gamma: jnp.ndarray) -> jnp.ndarray:
+    """RMSNorm over the last axis (Zhang & Sennrich, 2019)."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + EPS)) * gamma
+
+
+def proxy_score_ref(
+    h: jnp.ndarray, w_r: jnp.ndarray, p_cache: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Singular-proxy drift scoring (paper Alg. 2 with Eq. 3).
+
+    Args:
+      h: ``[B, N, d]`` layer-input states (already normed).
+      w_r: ``[r, d]`` truncated projection ``Λ_r V_rᵀ`` (or any identifier
+        projection — the value/query/key identifiers reuse this oracle with
+        their own matrices).
+      p_cache: ``[B, N, r]`` proxies cached at each token's last refresh.
+
+    Returns:
+      ``(scores, p)`` where ``scores[b, n] = 1 - cos(p[b,n], p_cache[b,n])``
+      (higher = more drift) and ``p = h @ w_rᵀ`` are the fresh proxies.
+    """
+    p = jnp.einsum("bnd,rd->bnr", h, w_r)
+    num = jnp.sum(p * p_cache, axis=-1)
+    den = jnp.linalg.norm(p, axis=-1) * jnp.linalg.norm(p_cache, axis=-1) + EPS
+    return 1.0 - num / den, p
+
+
+def softmax_lastdim(x: jnp.ndarray) -> jnp.ndarray:
+    """Numerically stable softmax over the last axis."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def sparse_attn_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, scale: float
+) -> jnp.ndarray:
+    """Attention of ``kq`` sparse queries against the full KV cache.
+
+    Args:
+      q: ``[B, kq, H, dh]`` queries for the selected (drifting) tokens only.
+      k: ``[B, N, H, dh]`` full (partially refreshed) key cache.
+      v: ``[B, N, H, dh]`` full (partially refreshed) value cache.
+      scale: softmax temperature, usually ``1/sqrt(dh)``.
+
+    Returns ``[B, kq, H, dh]`` attention outputs for the selected tokens.
+    """
+    logits = jnp.einsum("bqhd,bnhd->bhqn", q, k) * scale
+    w = softmax_lastdim(logits)
+    return jnp.einsum("bhqn,bnhd->bqhd", w, v)
+
+
+def ffn_swiglu_ref(
+    x: jnp.ndarray, w1: jnp.ndarray, w3: jnp.ndarray, w2: jnp.ndarray
+) -> jnp.ndarray:
+    """SwiGLU feed-forward: ``(silu(x W1) * (x W3)) W2``.
+
+    ``x: [..., d]``, ``w1/w3: [d, f]``, ``w2: [f, d]``.
+    """
+    a = x @ w1
+    g = a * (1.0 / (1.0 + jnp.exp(-a)))  # SiLU
+    return (g * (x @ w3)) @ w2

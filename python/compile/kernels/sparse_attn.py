@@ -1,0 +1,97 @@
+"""Pallas kernel: sparse-query attention over a partially refreshed KV cache.
+
+Paper Phase 2 (Algorithm 1): only the ``kq = N·ρ`` drifting tokens produce
+fresh queries, which attend to the *full* (partially updated) KV cache.  On
+GPU the paper realises this by launching threadblocks for the selected rows
+only; the TPU analogue tiles the selected queries into VMEM and streams the
+key/value cache through in ``block_k`` chunks with an online-softmax
+accumulator (flash-attention style), so HBM traffic is ``O(N·dh)`` per query
+tile and nothing of size ``[kq, N]`` is materialised.
+
+``interpret=True`` — see ``proxy.py`` for why.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, block_k: int):
+    """One (batch, head) program: online-softmax over key chunks."""
+    q = q_ref[0, 0] * scale  # [kq, dh]
+    kq, dh = q.shape
+    n = k_ref.shape[2]
+    steps = n // block_k
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        ks = k_ref[0, 0, pl.dslice(i * block_k, block_k), :]  # [bk, dh]
+        vs = v_ref[0, 0, pl.dslice(i * block_k, block_k), :]
+        s = jnp.dot(q, ks.T, preferred_element_type=jnp.float32)  # [kq, bk]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, vs, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((kq,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((kq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((kq, dh), dtype=jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, steps, body, (m0, l0, acc0))
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k"))
+def sparse_attn(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    scale: float,
+    block_k: int = 64,
+) -> jnp.ndarray:
+    """Flash-style sparse-query attention (see ``ref.sparse_attn_ref``).
+
+    Args:
+      q: ``[B, kq, H, dh]`` queries of the selected tokens.
+      k/v: ``[B, N, H, dh]`` full key/value cache (GQA heads pre-repeated).
+      scale: softmax temperature.
+      block_k: key-axis streaming chunk.
+
+    Returns ``[B, kq, H, dh]``.
+    """
+    b, kq, h, dh = q.shape
+    n = k.shape[1]
+    if n % block_k != 0:
+        block_k = n
+    # [B, H, S, dh] layout so each program owns one (batch, head) pair.
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, block_k=block_k),
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, kq, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, n, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, n, dh), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, kq, dh), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, kq, dh), q.dtype),
+        interpret=True,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)
+
+
+def vmem_footprint_bytes(kq: int, n: int, dh: int, block_k: int, itemsize: int = 4) -> int:
+    """Analytic VMEM footprint of one program instance (DESIGN.md §8)."""
+    q_tile = kq * dh * itemsize
+    kv_chunk = 2 * block_k * dh * itemsize
+    acc = kq * (dh + 2) * itemsize
+    return q_tile + kv_chunk + acc

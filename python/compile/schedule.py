@@ -1,0 +1,103 @@
+"""Adaptive budget allocation (paper Eq. 5).
+
+The per-layer update ratio follows a piecewise Gaussian peaking at layer
+``l_p``:
+
+    rho(l) = rho_p * exp(ln(rho_1/rho_p) * ((l - l_p)/(l_p - 1))^2)   l <= l_p
+    rho(l) = rho_p * exp(ln(rho_L/rho_p) * ((l - l_p)/(L - l_p))^2)   l >  l_p
+
+Layers are 1-indexed as in the paper.  This module is the source of truth;
+``rust/src/model/schedule.rs`` mirrors it and is cross-checked against the
+golden values exported into the artifact manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class RhoSchedule:
+    """Parameters of the piecewise Gaussian budget curve (paper Table 6)."""
+
+    l_p: int  # peak layer (1-indexed)
+    rho_p: float  # peak update ratio
+    rho_1: float  # ratio at the first layer
+    rho_l: float  # ratio at the last layer
+
+    def rho(self, layer: int, n_layers: int) -> float:
+        """Update ratio for 1-indexed ``layer`` of an ``n_layers`` model."""
+        if not 1 <= layer <= n_layers:
+            raise ValueError(f"layer {layer} out of range 1..{n_layers}")
+        lp = min(max(self.l_p, 1), n_layers)
+        if layer <= lp:
+            denom = max(lp - 1, 1)
+            frac = (layer - lp) / denom
+            return self.rho_p * math.exp(math.log(self.rho_1 / self.rho_p) * frac * frac)
+        denom = max(n_layers - lp, 1)
+        frac = (layer - lp) / denom
+        return self.rho_p * math.exp(math.log(self.rho_l / self.rho_p) * frac * frac)
+
+    def k_per_layer(self, n_layers: int, seq_len: int, align: int = 8) -> list[int]:
+        """Static per-layer update counts ``k_l = ceil(N * rho(l))``.
+
+        ``k`` is rounded up to a multiple of ``align``: unaligned gather/
+        matmul extents fall off XLA's vectorised fast path (measured 3x
+        slower at k=31 vs k=32 on CPU — EXPERIMENTS.md §Perf; the GPU
+        analogue is tile quantisation to the warp/MMA shape).
+        """
+        out = []
+        for l in range(1, n_layers + 1):
+            k = max(1, math.ceil(seq_len * self.rho(l, n_layers)))
+            k = min(seq_len, ((k + align - 1) // align) * align)
+            out.append(k)
+        return out
+
+    def mean_rho(self, n_layers: int) -> float:
+        """Average update ratio across layers (paper Table 4's ``avg rho``)."""
+        return sum(self.rho(l, n_layers) for l in range(1, n_layers + 1)) / n_layers
+
+
+def uniform(rho: float) -> "RhoSchedule":
+    """A degenerate schedule with the same ratio at every layer."""
+    return RhoSchedule(l_p=1, rho_p=rho, rho_1=rho, rho_l=rho)
+
+
+def fit_piecewise_gaussian(drift: list[float], rho_cap: float = 1.0) -> RhoSchedule:
+    """Fit Eq. 5 to a measured per-layer drift profile (paper Fig. 2 -> Table 6).
+
+    ``drift[l-1]`` is the measured fraction of high-drift tokens at layer l.
+    The fit picks the peak at the argmax and least-squares the boundary
+    ratios in log space, which is exact for the parametric family.
+    """
+    n = len(drift)
+    if n < 2:
+        raise ValueError("need at least two layers to fit")
+    eps = 1e-4
+    d = [float(min(max(x, eps), rho_cap)) for x in drift]
+    lp = max(range(n), key=lambda i: d[i]) + 1
+    rho_p = d[lp - 1]
+
+    def _fit_side(idxs: list[int], denom: int) -> float:
+        # log rho(l) = log rho_p + log(rho_b/rho_p) * ((l-lp)/denom)^2
+        # least squares for c = log(rho_b/rho_p) over the side's layers.
+        num, den = 0.0, 0.0
+        for l in idxs:
+            x = ((l - lp) / denom) ** 2
+            y = math.log(d[l - 1] / rho_p)
+            num += x * y
+            den += x * x
+        if den == 0.0:
+            return 0.0
+        return num / den
+
+    left = [l for l in range(1, lp + 1)]
+    right = [l for l in range(lp, n + 1)]
+    c1 = _fit_side(left, max(lp - 1, 1))
+    cl = _fit_side(right, max(n - lp, 1))
+    rho_1 = min(rho_cap, rho_p * math.exp(min(c1, 0.0)))
+    rho_l = min(rho_cap, rho_p * math.exp(min(cl, 0.0)))
+    return RhoSchedule(
+        l_p=int(lp), rho_p=float(rho_p), rho_1=float(max(rho_1, eps)), rho_l=float(max(rho_l, eps))
+    )

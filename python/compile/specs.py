@@ -1,0 +1,155 @@
+"""Variant registry: the set of AOT executables ``make artifacts`` builds.
+
+Every benchmark table/figure in the paper maps to one or more variants here
+(DESIGN.md §5).  Names are stable identifiers consumed by the Rust side via
+``artifacts/index.json``.
+
+Naming: ``<model>__<variant>``, e.g. ``llada_s__spa_default``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .model import MODELS, VariantConfig
+from .schedule import RhoSchedule, uniform
+
+# Global serving geometry: single bucket (see DESIGN.md §4).
+BATCH = 4
+SEQ_LEN = 128
+
+# Default singular-proxy rank per model (paper: r=128 for d=4096 LLaDA,
+# r=32 for GQA Dream — i.e. d/32 and d_kv/16; we scale to d=128).
+DEFAULT_RANK = {"llada_s": 16, "dream_s": 8, "llada15_s": 16}
+
+# Ranks swept by Table 5 (paper sweeps 32..512 against d=4096).
+RANK_SWEEP = [2, 4, 8, 16, 32, 64]
+
+# Block/window sizes for the manual-index substrate (Fast-dLLM, dKV, …).
+MANUAL_KS = [8, 16, 32]
+
+# Peak update ratio — the paper's headline hyperparameter.
+RHO_P = 0.25
+
+
+def scale_to_peak(s: RhoSchedule, rho_p: float) -> RhoSchedule:
+    """Rescale a fitted schedule so its peak is ``rho_p`` (paper §4.1).
+
+    The paper fits l_p/ρ_1/ρ_L from the drift profile but pins the peak to
+    ρ_p = 0.25; boundary ratios keep their fitted proportion to the peak.
+    """
+    f = rho_p / s.rho_p
+    clip = lambda x: min(max(x * f, 1e-3), 1.0)
+    return RhoSchedule(l_p=s.l_p, rho_p=rho_p, rho_1=clip(s.rho_1), rho_l=clip(s.rho_l))
+
+
+def spa_pair(
+    model: str,
+    tag: str,
+    identifier: str,
+    rank: int,
+    sched: RhoSchedule,
+    backend: str = "jnp",
+) -> list[VariantConfig]:
+    """An SPA step variant plus its matching refresh (prefill) variant."""
+    base = dict(
+        model=model,
+        batch=BATCH,
+        seq_len=SEQ_LEN,
+        identifier=identifier,
+        rank=rank,
+        schedule=sched,
+        kernel_backend=backend,
+    )
+    return [
+        VariantConfig(name=f"{model}__{tag}", kind="spa", **base),
+        VariantConfig(name=f"{model}__{tag}_refresh", kind="spa_refresh", **base),
+    ]
+
+
+def build_specs(fitted: dict[str, RhoSchedule]) -> list[VariantConfig]:
+    """The full artifact set. ``fitted[model]`` are the calibrated schedules."""
+    out: list[VariantConfig] = []
+    for m in MODELS:
+        r = DEFAULT_RANK[m]
+        adaptive = scale_to_peak(fitted[m], RHO_P)
+        out.append(VariantConfig(name=f"{m}__vanilla", kind="vanilla", model=m, batch=BATCH, seq_len=SEQ_LEN, rank=r))
+        out += spa_pair(m, "spa_default", "singular", r, adaptive)
+        for k in MANUAL_KS:
+            out.append(
+                VariantConfig(
+                    name=f"{m}__manual_k{k}", kind="manual", model=m, batch=BATCH,
+                    seq_len=SEQ_LEN, rank=r, manual_k=k,
+                )
+            )
+        out.append(
+            VariantConfig(
+                name=f"{m}__manual_full", kind="manual", model=m, batch=BATCH,
+                seq_len=SEQ_LEN, rank=r, manual_k=SEQ_LEN,
+            )
+        )
+        out.append(
+            VariantConfig(
+                name=f"{m}__probe", kind="probe", model=m, batch=BATCH, seq_len=SEQ_LEN, rank=r
+            )
+        )
+        # dLLM-Cache baseline (value identifier, uniform rho) for every model.
+        out += spa_pair(m, "spa_value_u25", "value", r, uniform(RHO_P))
+
+    # --- llada_s-only ablation variants (paper Tables 1, 4, 5; Fig 4) ---
+    m = "llada_s"
+    r = DEFAULT_RANK[m]
+    adaptive = scale_to_peak(fitted[m], RHO_P)
+    u25 = uniform(RHO_P)
+
+    # Table 1: identifier comparison at uniform rho=0.25.
+    for ident, tag in [
+        ("query", "spa_query_u25"),
+        ("key", "spa_key_u25"),
+        ("attn_in", "spa_attnin_u25"),
+        ("attn_out", "spa_attnout_u25"),
+        ("singular", "spa_singular16_u25"),
+    ]:
+        out += spa_pair(m, tag, ident, r, u25)
+
+    # Table 5: proxy rank sweep at uniform rho=0.25.
+    for rr in RANK_SWEEP:
+        if rr == r:
+            continue  # singular16_u25 already built
+        out += spa_pair(m, f"spa_singular{rr}_u25", "singular", rr, u25)
+
+    # Table 4: budget ablation — uniform at the adaptive schedule's mean.
+    mean_rho = adaptive.mean_rho(MODELS[m].n_layers)
+    out += spa_pair(m, "spa_singular16_umean", "singular", r, uniform(mean_rho))
+
+    # Perf: fused multistep (in-graph unmasking).
+    out.append(
+        VariantConfig(
+            name=f"{m}__multistep_default", kind="multistep", model=m, batch=BATCH,
+            seq_len=SEQ_LEN, identifier="singular", rank=r, schedule=adaptive,
+            msteps=4, threshold=0.9,
+        )
+    )
+
+    # L1 parity: the same default pair lowered through the Pallas kernels.
+    out += spa_pair(m, "spa_default_pallas", "singular", r, adaptive, backend="pallas")
+
+    names = [v.name for v in out]
+    assert len(names) == len(set(names)), "duplicate variant names"
+    return out
+
+
+def ranks_needed(specs: list[VariantConfig], model: str) -> list[int]:
+    """All singular ranks whose ``wr`` tensors must be in the weight blob."""
+    ranks = {v.rank for v in specs if v.model == model}
+    return sorted(ranks)
+
+
+def spec_fingerprint(v: VariantConfig) -> str:
+    """Stable hash input identifying a lowered artifact.
+
+    The trailing salt captures codegen-relevant constants that live outside
+    the dataclass (currently the k-alignment policy).
+    """
+    d = dataclasses.asdict(v)
+    return repr(sorted(d.items())) + "|kalign=8"

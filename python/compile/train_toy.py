@@ -1,0 +1,157 @@
+"""Build-time training of the toy masked-diffusion models.
+
+The paper evaluates on pretrained LLaDA/Dream checkpoints which are not
+available offline, so ``make artifacts`` trains small stand-ins on the
+synthetic corpus (DESIGN.md §2).  Training uses the LLaDA objective: sample a
+mask ratio ``t ~ U(0.02, 1)`` per sequence, mask tokens i.i.d. with
+probability ``t``, and minimise the ``1/t``-weighted cross-entropy on masked
+positions.  The optimiser is a hand-rolled Adam (optax is not installed).
+
+This module is build-time only — it never runs on the serving path.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+
+
+def diffusion_loss(
+    params,
+    cfg: model.ModelConfig,
+    tokens: jnp.ndarray,
+    ans_start: jnp.ndarray,
+    key,
+    p_sft: float = 0.7,
+) -> jnp.ndarray:
+    """LLaDA masked-diffusion loss for a batch of clean sequences.
+
+    With probability ``p_sft`` a sequence uses *SFT masking* (LLaDA's
+    instruction-tuning recipe): only tokens at or after ``ans_start`` are
+    maskable, the prompt stays clean — exactly the conditional the serving
+    path queries.  Otherwise uniform pretraining masking over the whole
+    sequence.  Loss is the ``1/t``-weighted cross-entropy on masked tokens.
+    """
+    b, n = tokens.shape
+    kt, km, ks = jax.random.split(key, 3)
+    t = jax.random.uniform(kt, (b, 1), minval=0.02, maxval=1.0)
+    u = jax.random.uniform(km, (b, n))
+    pos = jnp.arange(n)[None, :]
+    in_answer = pos >= ans_start[:, None]
+    sft = jax.random.uniform(ks, (b, 1)) < p_sft
+    maskable = jnp.where(sft, in_answer, jnp.ones_like(in_answer))
+    mask = (u < t) & maskable
+    noisy = jnp.where(mask, corpus.MASK, tokens)
+    logits = model.vanilla_forward(params, cfg, noisy)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]
+    w = mask.astype(jnp.float32) / t  # 1/t importance weight (LLaDA Eq. 5)
+    # PAD targets dominate the answer tail; downweight them so the gradient
+    # is carried by content tokens (otherwise the model decodes "" eagerly).
+    w = w * jnp.where(tokens == corpus.PAD, 0.05, 1.0)
+    return jnp.sum(nll * w) / (jnp.sum(mask) + 1.0)
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.01):
+    """One AdamW step (hand-rolled; no optax in this environment)."""
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh_scale = 1.0 / (1.0 - b1**t)
+    vh_scale = 1.0 / (1.0 - b2**t)
+
+    def upd(p, m_, v_):
+        step = lr * (m_ * mh_scale) / (jnp.sqrt(v_ * vh_scale) + eps)
+        return p - step - lr * wd * p
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def lr_schedule(step: int, total: int, peak: float) -> float:
+    """Linear warmup (10%) then cosine decay to 10% of peak."""
+    warm = max(1, total // 10)
+    if step < warm:
+        return peak * (step + 1) / warm
+    frac = (step - warm) / max(1, total - warm)
+    return peak * (0.1 + 0.9 * 0.5 * (1 + np.cos(np.pi * frac)))
+
+
+def train(
+    model_name: str,
+    steps: int = 500,
+    batch: int = 12,
+    seq_len: int = 128,
+    peak_lr: float = 3e-3,
+    seed: int = 0,
+    log_every: int = 50,
+    init_params: dict | None = None,
+) -> tuple[dict, list[float]]:
+    """Train one toy model; returns (params, loss_curve).
+
+    ``init_params`` warm-starts training (used for llada15_s, which — like
+    the real LLaDA-1.5 — is a post-trained continuation of the base model).
+    """
+    cfg = model.MODELS[model_name]
+    params = init_params if init_params is not None else model.init_params(cfg, seed)
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed + 1)
+    key = jax.random.PRNGKey(seed + 2)
+
+    @jax.jit
+    def step_fn(params, opt, tokens, ans_start, key, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: diffusion_loss(p, cfg, tokens, ans_start, key)
+        )(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    losses: list[float] = []
+    t0 = time.time()
+    for s in range(steps):
+        toks_np, ans_np = corpus.make_training_batch(rng, batch, seq_len)
+        tokens, ans_start = jnp.asarray(toks_np), jnp.asarray(ans_np)
+        key, sub = jax.random.split(key)
+        lr = jnp.asarray(lr_schedule(s, steps, peak_lr), jnp.float32)
+        params, opt, loss = step_fn(params, opt, tokens, ans_start, sub, lr)
+        losses.append(float(loss))
+        if log_every and (s % log_every == 0 or s == steps - 1):
+            print(
+                f"[train {model_name}] step {s:4d}/{steps} loss {float(loss):.4f} "
+                f"lr {float(lr):.2e} ({time.time()-t0:.0f}s)",
+                flush=True,
+            )
+    return params, losses
+
+
+def evaluate(
+    params, cfg: model.ModelConfig, seq_len: int = 128, samples_per_task: int = 4, seed: int = 123
+) -> dict[str, float]:
+    """Exact-match accuracy per task via the sequential vanilla decoder."""
+    rng = np.random.default_rng(seed)
+    acc: dict[str, float] = {}
+    for name, task in corpus.TASKS.items():
+        toks, plens, answers = [], [], []
+        for _ in range(samples_per_task):
+            t, p, a = corpus.make_sample(task, rng, seq_len)
+            toks.append(t)
+            plens.append(p)
+            answers.append(a)
+        batch = np.stack(toks)
+        out = model.decode_vanilla(params, cfg, batch, steps=seq_len, threshold=0.9)
+        hits = sum(
+            corpus.extract_answer(out[i], plens[i]) == answers[i]
+            for i in range(samples_per_task)
+        )
+        acc[name] = hits / samples_per_task
+    return acc

@@ -1,0 +1,100 @@
+"""AOT pipeline: variant registry, IO signatures, HLO-text lowering."""
+
+import jax
+import numpy as np
+
+from compile import aot, model, specs
+from compile.model import VariantConfig, MODELS
+from compile.schedule import uniform, RhoSchedule
+
+
+FITTED = {m: RhoSchedule(l_p=4, rho_p=0.07, rho_1=0.05, rho_l=0.06) for m in MODELS}
+
+
+def test_build_specs_unique_and_complete():
+    variants = specs.build_specs(FITTED)
+    names = [v.name for v in variants]
+    assert len(names) == len(set(names))
+    # every spa variant has a refresh twin
+    for v in variants:
+        if v.kind == "spa":
+            assert f"{v.name}_refresh" in names, v.name
+    # the method lineup the coordinator expects
+    for m in MODELS:
+        for needed in ["vanilla", "spa_default", "spa_default_refresh", "manual_full", "probe"]:
+            assert f"{m}__{needed}" in names
+    for needed in [
+        "llada_s__spa_value_u25",
+        "llada_s__spa_attnout_u25",
+        "llada_s__multistep_default",
+        "llada_s__spa_default_pallas",
+    ]:
+        assert needed in names
+
+
+def test_scale_to_peak():
+    s = RhoSchedule(l_p=3, rho_p=0.1, rho_1=0.05, rho_l=0.08)
+    out = specs.scale_to_peak(s, 0.25)
+    assert abs(out.rho_p - 0.25) < 1e-12
+    assert abs(out.rho_1 - 0.125) < 1e-12
+    assert out.l_p == 3
+
+
+def test_variant_io_shapes_consistent():
+    variants = specs.build_specs(FITTED)
+    for v in variants:
+        ins, outs = aot.variant_io(v)
+        cfg = MODELS[v.model]
+        by_name = {i["name"]: i for i in ins}
+        assert by_name["tokens"]["shape"] == [v.batch, v.seq_len]
+        if v.kind in ("spa", "multistep"):
+            assert by_name["pcache"]["shape"][-1] == v.proxy_dim()
+            assert by_name["kcache"]["shape"] == [
+                cfg.n_layers, v.batch, v.seq_len, cfg.n_kv_heads, cfg.d_head,
+            ]
+        if v.kind == "manual":
+            assert by_name["idx"]["shape"] == [v.batch, v.manual_k]
+        # outputs: logits or tokens first
+        assert outs[0]["name"] in ("logits", "tokens")
+
+
+def test_param_names_align_with_blob():
+    v = VariantConfig("x", "spa", "llada_s", 2, 32, identifier="singular", rank=8)
+    names, blob = aot.variant_param_names(v)
+    assert len(names) == len(blob)
+    assert "l0.wr" in names
+    assert "wr8.l0" in blob
+    v2 = VariantConfig("x", "spa", "llada_s", 2, 32, identifier="value")
+    names2, blob2 = aot.variant_param_names(v2)
+    assert "l0.wr" not in names2
+    assert names2 == blob2
+
+
+def test_lowering_emits_parseable_hlo_text():
+    """Lower a small vanilla variant and sanity-check the HLO text.
+
+    Ensures no `topk(..., largest=true)` instruction sneaks in — the
+    xla_extension 0.5.1 parser rejects it (see model.top_k_indices).
+    """
+    v = VariantConfig("x", "spa", "llada_s", 1, 16, rank=4, schedule=uniform(0.5))
+    fn, ex = aot.variant_entry(v)
+    text = aot.to_hlo_text(jax.jit(fn).lower(*ex))
+    assert text.startswith("HloModule")
+    assert "topk(" not in text, "lax.top_k leaked into the HLO"
+    assert "ENTRY" in text
+
+
+def test_write_blob_roundtrip(tmp_path):
+    cfg = MODELS["dream_s"]
+    params = model.init_params(cfg, 0)
+    table = aot.write_blob("dream_s", params, ranks=[4], out_dir=str(tmp_path))
+    blob = (tmp_path / "weights-dream_s.bin").read_bytes()
+    by_name = {t["name"]: t for t in table}
+    assert "embed" in by_name and "wr4.l0" in by_name
+    t = by_name["l0.wq"]
+    n = int(np.prod(t["shape"]))
+    got = np.frombuffer(blob[t["offset"] : t["offset"] + 4 * n], np.float32).reshape(t["shape"])
+    np.testing.assert_array_equal(got, np.asarray(params["l0.wq"]))
+    # offsets are non-overlapping and ordered
+    offs = [e["offset"] for e in table]
+    assert offs == sorted(offs)

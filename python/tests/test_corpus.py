@@ -1,0 +1,87 @@
+"""Synthetic corpus: tokenizer round-trips and task-generator contracts."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from compile import corpus
+
+hypothesis.settings.register_profile("ci", max_examples=25, deadline=None, derandomize=True)
+hypothesis.settings.load_profile("ci")
+
+
+@hypothesis.given(st.text(alphabet=corpus.CHARSET, max_size=64))
+def test_tokenizer_roundtrip(s):
+    assert corpus.decode(corpus.encode(s)) == s
+
+
+def test_vocab_fits():
+    assert len(corpus.SPECIALS) + len(corpus.CHARSET) <= corpus.VOCAB_SIZE
+    ids = corpus.encode(corpus.CHARSET)
+    assert max(ids) < corpus.VOCAB_SIZE
+    assert min(ids) >= len(corpus.SPECIALS)
+
+
+@hypothesis.given(st.integers(0, 2**32 - 1), st.sampled_from(sorted(corpus.TASKS)))
+def test_task_answers_encodable_and_nonempty(seed, name):
+    rng = np.random.default_rng(seed)
+    q, a = corpus.TASKS[name].gen(rng)
+    assert a
+    corpus.encode(q)
+    corpus.encode(a)
+
+
+def test_task_answer_semantics():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        q, a = corpus.TASKS["gsm8k_s"].gen(rng)
+        x, rest = q.split("+")
+        y = rest.split("=")[0]
+        assert int(a) == int(x) + int(y)
+        q, a = corpus.TASKS["bbh_s"].gen(rng)
+        inner = q[len("rev(") : -len(")=?")]
+        assert a == inner[::-1]
+        q, a = corpus.TASKS["mbpp_s"].gen(rng)
+        inner = q[len("dup(") : -len(")=?")]
+        assert a == inner + inner
+
+
+@hypothesis.given(st.integers(0, 2**32 - 1), st.sampled_from(sorted(corpus.TASKS)))
+def test_make_sample_layout(seed, name):
+    rng = np.random.default_rng(seed)
+    task = corpus.TASKS[name]
+    toks, plen, ans = corpus.make_sample(task, rng, 128)
+    assert toks.shape == (128,)
+    assert toks[0] == corpus.BOS
+    assert (toks[1:plen] >= len(corpus.SPECIALS)).all(), "prompt has no specials"
+    gen_region = toks[plen:]
+    n_mask = (gen_region == corpus.MASK).sum()
+    assert n_mask >= min(task.gen_len, 8)
+    # masked region is contiguous from plen
+    first_nonmask = np.argmax(gen_region != corpus.MASK)
+    assert (gen_region[:first_nonmask] == corpus.MASK).all()
+
+
+def test_extract_answer_roundtrip():
+    rng = np.random.default_rng(1)
+    task = corpus.TASKS["math_s"]
+    toks, plen, ans = corpus.make_sample(task, rng, 128)
+    # simulate a perfect decode
+    out = toks.copy()
+    ids = corpus.encode(ans) + [corpus.EOS]
+    out[plen : plen + len(ids)] = ids
+    out[out == corpus.MASK] = corpus.PAD
+    assert corpus.extract_answer(out, plen) == ans
+
+
+def test_training_batch_contract():
+    rng = np.random.default_rng(2)
+    toks, ans_start = corpus.make_training_batch(rng, 8, 96)
+    assert toks.shape == (8, 96)
+    assert ans_start.shape == (8,)
+    for i in range(8):
+        assert toks[i, 0] == corpus.BOS
+        assert 0 < ans_start[i] < 96
+        # the char right before the answer is the ' ' of '#a '
+        assert corpus.decode([toks[i, ans_start[i] - 1]]) == " "
+        assert (toks[i] != corpus.MASK).all(), "training batches are clean"

@@ -1,0 +1,132 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and magnitudes; every kernel must match its
+`kernels.ref` oracle to allclose tolerance (the CORE correctness signal for
+the compute layer — DESIGN.md §3).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ffn, proxy, ref, sparse_attn
+
+hypothesis.settings.register_profile(
+    "ci", max_examples=12, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def arr(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(0.0, scale, size=shape), jnp.float32)
+
+
+@hypothesis.given(
+    b=st.sampled_from([1, 2]),
+    n=st.sampled_from([8, 32, 64]),
+    d=st.sampled_from([16, 64]),
+    r=st.sampled_from([2, 8, 16]),
+    block_n=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_proxy_score_matches_ref(b, n, d, r, block_n, seed):
+    rng = np.random.default_rng(seed)
+    h = arr(rng, b, n, d)
+    w_r = arr(rng, r, d)
+    pc = arr(rng, b, n, r)
+    s_ref, p_ref = ref.proxy_score_ref(h, w_r, pc)
+    s_pal, p_pal = proxy.proxy_score(h, w_r, pc, block_n=block_n)
+    np.testing.assert_allclose(s_ref, s_pal, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(p_ref, p_pal, rtol=2e-5, atol=2e-5)
+
+
+def test_proxy_score_zero_cache_safe():
+    """Zero proxy cache (first step) must not produce NaN scores."""
+    rng = np.random.default_rng(0)
+    h, w_r = arr(rng, 1, 8, 16), arr(rng, 4, 16)
+    pc = jnp.zeros((1, 8, 4), jnp.float32)
+    s, _ = proxy.proxy_score(h, w_r, pc)
+    assert np.isfinite(np.asarray(s)).all()
+
+
+@hypothesis.given(
+    b=st.sampled_from([1, 2]),
+    kq=st.sampled_from([1, 4, 16]),
+    n=st.sampled_from([16, 64]),
+    h=st.sampled_from([1, 4]),
+    dh=st.sampled_from([8, 32]),
+    block_k=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_sparse_attn_matches_ref(b, kq, n, h, dh, block_k, seed):
+    rng = np.random.default_rng(seed)
+    q = arr(rng, b, kq, h, dh)
+    k = arr(rng, b, n, h, dh)
+    v = arr(rng, b, n, h, dh)
+    scale = 1.0 / np.sqrt(dh)
+    o_ref = ref.sparse_attn_ref(q, k, v, scale)
+    o_pal = sparse_attn.sparse_attn(q, k, v, scale, block_k=block_k)
+    np.testing.assert_allclose(o_ref, o_pal, rtol=1e-4, atol=1e-5)
+
+
+def test_sparse_attn_extreme_logits_stable():
+    """Online softmax must survive large logit magnitudes."""
+    rng = np.random.default_rng(1)
+    q = arr(rng, 1, 2, 1, 8, scale=30.0)
+    k = arr(rng, 1, 16, 1, 8, scale=30.0)
+    v = arr(rng, 1, 16, 1, 8)
+    out = sparse_attn.sparse_attn(q, k, v, 1.0, block_k=8)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(
+        out, ref.sparse_attn_ref(q, k, v, 1.0), rtol=1e-3, atol=1e-4
+    )
+
+
+@hypothesis.given(
+    m=st.sampled_from([1, 8, 24]),
+    d=st.sampled_from([16, 64]),
+    f=st.sampled_from([32, 96]),
+    block_m=st.sampled_from([4, 8, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_ffn_matches_ref(m, d, f, block_m, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, m, d)
+    w1 = arr(rng, d, f, scale=0.2)
+    w3 = arr(rng, d, f, scale=0.2)
+    w2 = arr(rng, f, d, scale=0.2)
+    o_ref = ref.ffn_swiglu_ref(x, w1, w3, w2)
+    o_pal = ffn.ffn_swiglu(x, w1, w3, w2, block_m=block_m)
+    np.testing.assert_allclose(o_ref, o_pal, rtol=2e-4, atol=2e-5)
+
+
+def test_rmsnorm_unit_scale():
+    rng = np.random.default_rng(2)
+    x = arr(rng, 4, 32)
+    g = jnp.ones((32,), jnp.float32)
+    out = np.asarray(ref.rmsnorm_ref(x, g))
+    rms = np.sqrt((out**2).mean(axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_vmem_footprints_fit_tpu_budget():
+    """Analytic VMEM check at the paper's scale (DESIGN.md §8)."""
+    vmem = 16 * 1024 * 1024
+    # proxy kernel at LLaDA-8B scale: d=4096, r=128, block 128
+    assert proxy.vmem_footprint_bytes(4096, 128, 128) < vmem
+    # sparse attention: 128 queries, N=2048 keys streamed in 512-chunks
+    assert sparse_attn.vmem_footprint_bytes(128, 2048, 128, 512) < vmem
+    # ffn tile at d=4096, f=11008 would NOT fit un-tiled (documented limit)
+    assert ffn.vmem_footprint_bytes(4096, 11008, 128) > vmem
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_proxy_dtype_roundtrip(dtype):
+    rng = np.random.default_rng(3)
+    h = jnp.asarray(rng.normal(size=(1, 8, 16)), dtype)
+    w = jnp.asarray(rng.normal(size=(4, 16)), dtype)
+    pc = jnp.asarray(rng.normal(size=(1, 8, 4)), dtype)
+    _, p = proxy.proxy_score(h, w, pc)
+    assert p.dtype == dtype

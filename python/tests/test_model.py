@@ -1,0 +1,185 @@
+"""L2 correctness: SPA step variants against the vanilla oracle.
+
+The load-bearing invariants (DESIGN.md §7):
+* spa_refresh / manual(full indices) reproduce vanilla logits exactly;
+* spa_step with rho = 1 equals vanilla (caching is lossless at full budget);
+* the pallas backend equals the jnp backend graph-for-graph;
+* sparse steps on *unchanged* inputs stay at the refresh fixed point.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import corpus, model
+from compile.model import VariantConfig
+from compile.schedule import uniform, RhoSchedule
+
+B, N = 2, 64
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = model.MODELS["llada_s"]
+    params = model.init_params(cfg, 0)
+    params.update(model.singular_proxies(params, cfg, 16))
+    rng = np.random.default_rng(1)
+    toks = rng.integers(4, 60, size=(B, N)).astype(np.int32)
+    logits = np.asarray(jax.jit(lambda t: model.vanilla_forward(params, cfg, t))(toks))
+    return cfg, params, toks, logits
+
+
+def test_spa_refresh_equals_vanilla(setup):
+    cfg, params, toks, logits = setup
+    v = VariantConfig("t", "spa_refresh", "llada_s", B, N, rank=16, schedule=uniform(1.0))
+    l0, *_ = jax.jit(lambda t: model.spa_refresh(params, cfg, v, t))(toks)
+    np.testing.assert_allclose(l0, logits, rtol=1e-5, atol=1e-5)
+
+
+def test_spa_step_full_budget_equals_vanilla(setup):
+    cfg, params, toks, logits = setup
+    v = VariantConfig("t", "spa", "llada_s", B, N, rank=16, schedule=uniform(1.0))
+    _, pc, kc, vc, hc = jax.jit(lambda t: model.spa_refresh(params, cfg, v, t))(toks)
+    l1, *_ = jax.jit(
+        lambda t, p, k, v_, h: model.spa_step(params, cfg, v, t, p, k, v_, h)
+    )(toks, pc, kc, vc, hc)
+    np.testing.assert_allclose(l1, logits, rtol=1e-4, atol=1e-4)
+
+
+def test_manual_full_equals_vanilla(setup):
+    cfg, params, toks, logits = setup
+    v = VariantConfig("t", "manual", "llada_s", B, N, rank=16, manual_k=N)
+    lr, kc, vc, hc = jax.jit(lambda t: model.refresh(params, cfg, v, t))(toks)
+    np.testing.assert_allclose(lr, logits, rtol=1e-5, atol=1e-5)
+    idx = np.tile(np.arange(N, dtype=np.int32), (B, 1))
+    lm, *_ = jax.jit(
+        lambda t, i, k, v_, h: model.manual_step(params, cfg, v, t, i, k, v_, h)
+    )(toks, idx, kc, vc, hc)
+    np.testing.assert_allclose(lm, logits, rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_step_fixed_point(setup):
+    """Unchanged tokens → sparse recompute must stay at the refresh output."""
+    cfg, params, toks, _ = setup
+    sched = RhoSchedule(l_p=4, rho_p=0.25, rho_1=0.05, rho_l=0.13)
+    v = VariantConfig("t", "spa", "llada_s", B, N, rank=16, schedule=sched)
+    lp, pc, kc, vc, hc = jax.jit(lambda t: model.spa_refresh(params, cfg, v, t))(toks)
+    l2, *_ = jax.jit(
+        lambda t, p, k, v_, h: model.spa_step(params, cfg, v, t, p, k, v_, h)
+    )(toks, pc, kc, vc, hc)
+    np.testing.assert_allclose(l2, lp, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("identifier", list(model.IDENTIFIERS))
+def test_all_identifiers_run(setup, identifier):
+    cfg, params, toks, _ = setup
+    v = VariantConfig(
+        "t", "spa", "llada_s", B, N, identifier=identifier, rank=16, schedule=uniform(0.25)
+    )
+    lg, pc, kc, vc, hc = jax.jit(lambda t: model.spa_refresh(params, cfg, v, t))(toks)
+    l1, pc1, *_ = jax.jit(
+        lambda t, p, k, v_, h: model.spa_step(params, cfg, v, t, p, k, v_, h)
+    )(toks, pc, kc, vc, hc)
+    assert l1.shape == (B, N, cfg.vocab_size)
+    assert pc1.shape[-1] == cfg.identifier_dim(identifier, 16)
+    assert np.isfinite(np.asarray(l1)).all()
+
+
+def test_gqa_model_consistency():
+    cfg = model.MODELS["dream_s"]
+    params = model.init_params(cfg, 2)
+    params.update(model.singular_proxies(params, cfg, 8))
+    rng = np.random.default_rng(3)
+    toks = rng.integers(4, 60, size=(B, N)).astype(np.int32)
+    logits = np.asarray(jax.jit(lambda t: model.vanilla_forward(params, cfg, t))(toks))
+    v = VariantConfig("t", "spa", "dream_s", B, N, rank=8, schedule=uniform(1.0))
+    _, pc, kc, vc, hc = jax.jit(lambda t: model.spa_refresh(params, cfg, v, t))(toks)
+    l1, *_ = jax.jit(
+        lambda t, p, k, v_, h: model.spa_step(params, cfg, v, t, p, k, v_, h)
+    )(toks, pc, kc, vc, hc)
+    np.testing.assert_allclose(l1, logits, rtol=1e-4, atol=1e-4)
+    assert kc.shape == (cfg.n_layers, B, N, cfg.n_kv_heads, cfg.d_head)
+
+
+def test_pallas_backend_matches_jnp(setup):
+    cfg, params, toks, _ = setup
+    sched = uniform(0.25)
+    vj = VariantConfig("t", "spa", "llada_s", B, N, rank=16, schedule=sched)
+    vp = VariantConfig(
+        "t", "spa", "llada_s", B, N, rank=16, schedule=sched, kernel_backend="pallas"
+    )
+    lj, pj, kj, vvj, hj = jax.jit(lambda t: model.spa_refresh(params, cfg, vj, t))(toks)
+    lp, pp, kp, vvp, hp = jax.jit(lambda t: model.spa_refresh(params, cfg, vp, t))(toks)
+    np.testing.assert_allclose(lj, lp, rtol=1e-4, atol=1e-4)
+    s_j, *_ = jax.jit(lambda t, p, k, v_, h: model.spa_step(params, cfg, vj, t, p, k, v_, h))(
+        toks, pj, kj, vvj, hj
+    )
+    s_p, *_ = jax.jit(lambda t, p, k, v_, h: model.spa_step(params, cfg, vp, t, p, k, v_, h))(
+        toks, pp, kp, vvp, hp
+    )
+    np.testing.assert_allclose(s_j, s_p, rtol=1e-3, atol=1e-4)
+
+
+def test_probe_self_similarity_is_one(setup):
+    """Probing twice with the same tokens → adjacent-step sims ≈ 1."""
+    cfg, params, toks, _ = setup
+    v = VariantConfig("t", "probe", "llada_s", B, N, rank=16)
+    L = cfg.n_layers
+    z = lambda dim: jnp.zeros((L, B, N, dim), jnp.float32)
+    probe = jax.jit(lambda t, a, b, c, d, e: model.probe_step(params, cfg, v, t, a, b, c, d, e))
+    _, *rec, _ = probe(toks, z(cfg.d_model), z(cfg.d_kv), z(16), z(cfg.d_q), z(cfg.d_model))
+    _, *_, sims = probe(toks, *rec)
+    np.testing.assert_allclose(np.asarray(sims), 1.0, atol=1e-3)
+
+
+def test_multistep_makes_progress(setup):
+    cfg, params, _, _ = setup
+    rng = np.random.default_rng(7)
+    seqs = np.stack(
+        [corpus.make_sample(corpus.TASKS["gsm8k_s"], rng, N)[0] for _ in range(B)]
+    )
+    sched = RhoSchedule(l_p=4, rho_p=0.25, rho_1=0.05, rho_l=0.13)
+    v = VariantConfig(
+        "t", "multistep", "llada_s", B, N, rank=16, schedule=sched, msteps=3, threshold=0.99
+    )
+    vr = VariantConfig("t", "spa_refresh", "llada_s", B, N, rank=16, schedule=sched)
+    _, pc, kc, vc, hc = jax.jit(lambda t: model.spa_refresh(params, cfg, vr, t))(seqs)
+    tk, *_ = jax.jit(
+        lambda t, p, k, v_, h: model.multistep(params, cfg, v, t, p, k, v_, h)
+    )(seqs, pc, kc, vc, hc)
+    before = int((seqs == corpus.MASK).sum())
+    after = int((np.asarray(tk) == corpus.MASK).sum())
+    assert after <= before - B * 3, "each fused step must commit ≥1 token per row"
+
+
+def test_confidence_unmask_never_emits_mask():
+    logits = np.zeros((1, 4, corpus.VOCAB_SIZE), np.float32)
+    logits[..., corpus.MASK] = 100.0
+    toks = np.full((1, 4), corpus.MASK, np.int32)
+    out = np.asarray(model.confidence_unmask(jnp.asarray(toks), jnp.asarray(logits), 0.0))
+    assert (out != corpus.MASK).all()
+    assert (out != corpus.BOS).all()
+
+
+def test_top_k_indices_matches_numpy():
+    rng = np.random.default_rng(11)
+    for _ in range(10):
+        s = rng.normal(size=(3, 32)).astype(np.float32)
+        k = int(rng.integers(1, 32))
+        got = np.asarray(model.top_k_indices(jnp.asarray(s), k))
+        want = np.argsort(-s, axis=-1, kind="stable")[:, :k]
+        np.testing.assert_array_equal(got, want)
+
+
+def test_singular_proxy_subspace_projection():
+    """W_r h must equal the top-r SVD reconstruction's coordinates."""
+    cfg = model.MODELS["llada_s"]
+    params = model.init_params(cfg, 5)
+    wr = model.singular_proxies(params, cfg, rank=8)
+    wv = np.asarray(params["l0.wv"])
+    u, s, vt = np.linalg.svd(wv, full_matrices=False)
+    h = np.random.default_rng(0).normal(size=(cfg.d_model,)).astype(np.float32)
+    p = np.asarray(wr["l0.wr"]) @ h
+    want = (s[:8, None] * u[:, :8].T) @ h
+    np.testing.assert_allclose(p, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,87 @@
+"""Eq. 5 budget schedule: shape properties + fit recovery (paper §3.4)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from compile.schedule import RhoSchedule, fit_piecewise_gaussian, uniform
+
+hypothesis.settings.register_profile("ci", max_examples=25, deadline=None, derandomize=True)
+hypothesis.settings.load_profile("ci")
+
+
+def test_uniform_flat():
+    s = uniform(0.25)
+    assert all(abs(s.rho(l, 8) - 0.25) < 1e-12 for l in range(1, 9))
+    assert s.k_per_layer(8, 128) == [32] * 8
+
+
+def test_paper_table6_shape():
+    # LLaDA-8B row of Table 6: l_p=24, rho_p=25%, rho_1=3%, rho_L=13%, L=32.
+    s = RhoSchedule(l_p=24, rho_p=0.25, rho_1=0.03, rho_l=0.13)
+    rhos = [s.rho(l, 32) for l in range(1, 33)]
+    assert abs(rhos[0] - 0.03) < 1e-9
+    assert abs(rhos[23] - 0.25) < 1e-9
+    assert abs(rhos[31] - 0.13) < 1e-9
+    # unimodal: nondecreasing to the peak, nonincreasing after
+    assert all(rhos[i] <= rhos[i + 1] + 1e-12 for i in range(23))
+    assert all(rhos[i] >= rhos[i + 1] - 1e-12 for i in range(23, 31))
+
+
+@hypothesis.given(
+    lp=st.integers(1, 8),
+    rho_p=st.floats(0.05, 0.5),
+    f1=st.floats(0.1, 1.0),
+    fl=st.floats(0.1, 1.0),
+)
+def test_rho_bounded_by_peak(lp, rho_p, f1, fl):
+    s = RhoSchedule(l_p=lp, rho_p=rho_p, rho_1=rho_p * f1, rho_l=rho_p * fl)
+    for l in range(1, 9):
+        r = s.rho(l, 8)
+        assert r <= rho_p + 1e-9
+        assert r >= min(s.rho_1, s.rho_l) - 1e-9
+
+
+@hypothesis.given(
+    lp=st.integers(1, 8),
+    rho_p=st.floats(0.05, 0.5),
+    f1=st.floats(0.1, 1.0),
+    fl=st.floats(0.1, 1.0),
+    n=st.sampled_from([32, 128]),
+)
+def test_k_per_layer_valid(lp, rho_p, f1, fl, n):
+    s = RhoSchedule(l_p=lp, rho_p=rho_p, rho_1=rho_p * f1, rho_l=rho_p * fl)
+    ks = s.k_per_layer(8, n)
+    assert len(ks) == 8
+    assert all(1 <= k <= n for k in ks)
+
+
+def test_fit_recovers_family_members():
+    truth = RhoSchedule(l_p=5, rho_p=0.3, rho_1=0.04, rho_l=0.15)
+    profile = [truth.rho(l, 8) for l in range(1, 9)]
+    fit = fit_piecewise_gaussian(profile)
+    assert fit.l_p == 5
+    assert abs(fit.rho_p - 0.3) < 1e-9
+    assert abs(fit.rho_1 - 0.04) < 1e-6
+    assert abs(fit.rho_l - 0.15) < 1e-6
+
+
+def test_fit_flat_profile():
+    fit = fit_piecewise_gaussian([0.07] * 6)
+    assert all(abs(fit.rho(l, 6) - 0.07) < 1e-9 for l in range(1, 7))
+
+
+def test_fit_monotone_profile_puts_peak_at_edge():
+    fit = fit_piecewise_gaussian([0.02, 0.04, 0.06, 0.08])
+    assert fit.l_p == 4
+
+
+def test_fit_rejects_tiny():
+    with pytest.raises(ValueError):
+        fit_piecewise_gaussian([0.1])
+
+
+def test_mean_rho_between_bounds():
+    s = RhoSchedule(l_p=4, rho_p=0.25, rho_1=0.03, rho_l=0.13)
+    m = s.mean_rho(8)
+    assert 0.03 < m < 0.25

@@ -1,0 +1,72 @@
+"""Trainer substrate: Adam, LR schedule, diffusion loss masking semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import corpus, model, train_toy
+
+
+def test_adam_minimises_quadratic():
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    opt = train_toy.adam_init(params)
+    for _ in range(300):
+        grads = {"x": 2.0 * params["x"]}
+        params, opt = train_toy.adam_update(params, grads, opt, lr=0.1, wd=0.0)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_lr_schedule_shape():
+    peak = 3e-3
+    total = 100
+    lrs = [train_toy.lr_schedule(s, total, peak) for s in range(total)]
+    assert max(lrs) <= peak + 1e-12
+    assert lrs[0] < lrs[9] <= peak  # warmup rises
+    assert lrs[-1] < 0.2 * peak  # decays
+    assert lrs[-1] >= 0.09 * peak  # but not to zero
+
+
+def test_diffusion_loss_runs_and_is_finite():
+    cfg = model.MODELS["dream_s"]
+    params = model.init_params(cfg, 0)
+    rng = np.random.default_rng(0)
+    toks, ans = corpus.make_training_batch(rng, 4, 64)
+    loss = train_toy.diffusion_loss(
+        params, cfg, jnp.asarray(toks), jnp.asarray(ans), jax.random.PRNGKey(0)
+    )
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0.5  # untrained → near-uniform over vocab
+
+
+def test_sft_masking_never_touches_prompt():
+    """With p_sft=1 the noisy input must keep every prompt token intact."""
+    cfg = model.MODELS["dream_s"]
+    params = model.init_params(cfg, 0)
+    rng = np.random.default_rng(1)
+    toks, ans = corpus.make_training_batch(rng, 4, 64)
+
+    # re-derive the mask exactly as diffusion_loss does
+    key = jax.random.PRNGKey(7)
+    kt, km, ks = jax.random.split(key, 3)
+    b, n = toks.shape
+    t = jax.random.uniform(kt, (b, 1), minval=0.02, maxval=1.0)
+    u = jax.random.uniform(km, (b, n))
+    pos = jnp.arange(n)[None, :]
+    in_answer = pos >= jnp.asarray(ans)[:, None]
+    mask = (u < t) & in_answer
+    assert not bool(mask[:, 0].any())
+    for i in range(b):
+        assert not bool(mask[i, : ans[i]].any())
+    # and the loss still runs under that masking
+    loss = train_toy.diffusion_loss(
+        params, cfg, jnp.asarray(toks), jnp.asarray(ans), key, p_sft=1.0
+    )
+    assert np.isfinite(float(loss))
+
+
+def test_short_training_reduces_loss():
+    """Five steps on dream_s must move the loss down (smoke, ~20s)."""
+    params, losses = train_toy.train(
+        "dream_s", steps=6, batch=4, seq_len=64, log_every=0, peak_lr=2e-3
+    )
+    assert losses[-1] < losses[0]

@@ -1,0 +1,75 @@
+//! Paper Figure 2 (+ Figure 6 via --model, Table 6 fit): distribution of
+//! drifting tokens across layers, the fitted Eq. 5 dynamic threshold, and
+//! the uniform threshold it replaces.
+
+use spa_cache::analysis::drift::run_probe;
+use spa_cache::bench::Table;
+use spa_cache::coordinator::group::pack_group;
+use spa_cache::model::schedule::fit_piecewise_gaussian;
+use spa_cache::model::tasks::{make_sample, ALL_TASKS};
+use spa_cache::model::tokenizer::Tokenizer;
+use spa_cache::runtime::engine::Engine;
+use spa_cache::util::cli::Args;
+use spa_cache::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let engine = Engine::from_default_artifacts()?;
+    let steps = args.usize_or("steps", 16);
+    let models: Vec<String> = args
+        .str_or("models", "llada_s,dream_s,llada15_s")
+        .split(',')
+        .map(String::from)
+        .collect();
+
+    let mut fit_table = Table::new(
+        "Table 6 — fitted piecewise-Gaussian hyperparameters",
+        &["model", "l_p", "rho_p", "rho_1", "rho_L", "python-fit l_p/rho_p"],
+    );
+
+    for model in &models {
+        let tok = Tokenizer::from_manifest(&engine.manifest.charset);
+        let mut rng = Rng::new(args.u64_or("seed", 7));
+        let (b, n) = (engine.manifest.batch, engine.manifest.seq_len);
+        let samples: Vec<_> = (0..b)
+            .map(|i| make_sample(ALL_TASKS[i % ALL_TASKS.len()], &mut rng, &tok, n))
+            .collect();
+        let (mut tokens, mut slots) = pack_group(&samples, b, n, 16);
+        let profile = run_probe(&engine, model, &mut tokens, &mut slots, steps, 0.6)?;
+        let drift = profile.mean_drift();
+        let fit = fit_piecewise_gaussian(&drift, 0.5);
+
+        let mut table = Table::new(
+            &format!("Figure 2/6 — drift fraction across layers, {model} (tau=0.95)"),
+            &["layer", "drift frac", "fitted rho(l)", "uniform rho_p", "bar"],
+        );
+        let nl = drift.len();
+        for (i, &d) in drift.iter().enumerate() {
+            let bar: String =
+                std::iter::repeat('#').take((d * 200.0).round() as usize).collect();
+            table.row(vec![
+                format!("{}", i + 1),
+                format!("{:.4}", d),
+                format!("{:.4}", fit.rho(i + 1, nl)),
+                format!("{:.4}", fit.rho_p),
+                bar,
+            ]);
+        }
+        table.print();
+        table.append_to("bench_results.txt");
+
+        // Cross-check against the python build-time fit in the manifest.
+        let py = &engine.manifest.model(model)?.fitted_schedule;
+        fit_table.row(vec![
+            model.clone(),
+            format!("{}", fit.l_p),
+            format!("{:.3}", fit.rho_p),
+            format!("{:.3}", fit.rho_1),
+            format!("{:.3}", fit.rho_l),
+            format!("{}/{:.3}", py.l_p, py.rho_p),
+        ]);
+    }
+    fit_table.print();
+    fit_table.append_to("bench_results.txt");
+    Ok(())
+}

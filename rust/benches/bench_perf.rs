@@ -1,0 +1,134 @@
+//! §Perf: per-step latency decomposition of the serving hot path.
+//! Measures executable dispatch cost, host<->device traffic and compute for
+//! the main variants; drives the optimization log in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use spa_cache::bench::{time_ms, Table};
+use spa_cache::model::tasks::{make_sample, Task};
+use spa_cache::model::tokenizer::Tokenizer;
+use spa_cache::runtime::engine::Engine;
+use spa_cache::runtime::tensor::{literal_i32, to_f32_vec};
+use spa_cache::util::cli::Args;
+use spa_cache::util::rng::Rng;
+use xla::Literal;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let engine = Engine::from_default_artifacts()?;
+    let model = args.str_or("model", "llada_s");
+    let iters = args.usize_or("iters", 15);
+
+    let tok = Tokenizer::from_manifest(&engine.manifest.charset);
+    let mut rng = Rng::new(7);
+    let (b, n) = (engine.manifest.batch, engine.manifest.seq_len);
+    let tokens: Vec<i32> =
+        (0..b).flat_map(|_| make_sample(Task::Gsm8kS, &mut rng, &tok, n).tokens).collect();
+    let tok_lit = literal_i32(&[b, n], &tokens)?;
+
+    let mut table = Table::new(
+        &format!("Perf — step latency breakdown, {model}, B={b} N={n}"),
+        &["variant", "mean ms", "p50", "p90", "tokens/s @1tok/step"],
+    );
+
+    // vanilla
+    let van = engine.load_variant(&format!("{model}__vanilla"))?;
+    let s = time_ms(3, iters, || {
+        engine.run(&van, &[&tok_lit]).unwrap();
+    });
+    table.row(vec![
+        "vanilla".into(),
+        format!("{:.2}", s.mean),
+        format!("{:.2}", s.p50),
+        format!("{:.2}", s.p90),
+        format!("{:.1}", b as f64 * 1e3 / s.mean),
+    ]);
+
+    // spa default (step, after refresh)
+    for variant in [
+        format!("{model}__spa_default"),
+        format!("{model}__spa_value_u25"),
+        format!("{model}__spa_singular16_u25"),
+        format!("{model}__manual_k16"),
+        format!("{model}__multistep_default"),
+    ] {
+        if !engine.manifest.variants.contains_key(&variant) {
+            continue;
+        }
+        let v = engine.load_variant(&variant)?;
+        let mut inputs: Vec<Literal> = Vec::new();
+        match v.info.kind.as_str() {
+            "spa" | "multistep" => {
+                let rname = if v.info.kind == "multistep" {
+                    format!("{model}__spa_default_refresh")
+                } else {
+                    format!("{variant}_refresh")
+                };
+                let rfr = engine.load_variant(&rname)?;
+                let mut outs = engine.run(&rfr, &[&tok_lit])?;
+                inputs = outs.drain(1..).collect();
+            }
+            "manual" => {
+                let k = v.info.manual_k;
+                let idx: Vec<i32> = (0..b).flat_map(|_| (0..k as i32)).collect();
+                inputs.push(literal_i32(&[b, k], &idx)?);
+                let rfr = engine.load_variant(&format!("{model}__manual_full"))?;
+                let full_k = rfr.info.manual_k;
+                let fidx: Vec<i32> = (0..b).flat_map(|_| (0..full_k as i32)).collect();
+                let fidx_lit = literal_i32(&[b, full_k], &fidx)?;
+                let zeros: Vec<Literal> = rfr
+                    .info
+                    .inputs
+                    .iter()
+                    .filter(|i| i.name != "tokens" && i.name != "idx")
+                    .map(|i| spa_cache::runtime::tensor::literal_zeros_f32(&i.shape))
+                    .collect::<anyhow::Result<_>>()?;
+                let mut refs: Vec<&Literal> = vec![&tok_lit, &fidx_lit];
+                refs.extend(zeros.iter());
+                let mut outs = engine.run(&rfr, &refs)?;
+                inputs.extend(outs.drain(1..));
+            }
+            _ => {}
+        }
+        let mut refs: Vec<&Literal> = vec![&tok_lit];
+        refs.extend(inputs.iter());
+        let s = time_ms(3, iters, || {
+            engine.run(&v, &refs).unwrap();
+        });
+        let toks_per_step = if v.info.kind == "multistep" { v.info.msteps } else { 1 };
+        table.row(vec![
+            variant.clone(),
+            format!("{:.2}", s.mean),
+            format!("{:.2}", s.p50),
+            format!("{:.2}", s.p90),
+            format!("{:.1}", (b * toks_per_step) as f64 * 1e3 / s.mean),
+        ]);
+    }
+
+    // Host-copy cost accounting: logits + cache literal readback.
+    let spa = engine.load_variant(&format!("{model}__spa_default"))?;
+    let rfr = engine.load_variant(&format!("{model}__spa_default_refresh"))?;
+    let outs = engine.run(&rfr, &[&tok_lit])?;
+    let t0 = Instant::now();
+    let mut bytes = 0usize;
+    for o in &outs {
+        bytes += to_f32_vec(o).map(|v| v.len() * 4).unwrap_or(0);
+    }
+    let copy_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let _ = spa;
+    table.print();
+    table.append_to("bench_results.txt");
+    println!(
+        "cache+logits host readback: {:.1} MiB in {:.2} ms ({:.1} GB/s)",
+        bytes as f64 / 1048576.0,
+        copy_ms,
+        bytes as f64 / 1e6 / copy_ms
+    );
+    let st = engine.stats();
+    println!(
+        "engine totals: {} executions, mean {:.2} ms",
+        st.executions,
+        st.exec_ms_total / st.executions.max(1) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Paper Table 1: identifier-type comparison on GSM8K (LLaDA-s).
+//! Query/Key/Value/attn-input/attn-output/singular identifiers at a uniform
+//! ρ=0.25 budget versus the no-cache baseline.
+
+use spa_cache::bench::runner::{eval_method, sample_count, task_samples};
+use spa_cache::bench::{fmt_acc, fmt_tps, Table};
+use spa_cache::coordinator::decode::UnmaskMode;
+use spa_cache::coordinator::methods::MethodSpec;
+use spa_cache::model::tasks::Task;
+use spa_cache::runtime::engine::Engine;
+use spa_cache::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let engine = Engine::from_default_artifacts()?;
+    let n = args.usize_or("samples", sample_count(!args.flag("full")));
+    let samples = task_samples(&engine, Task::Gsm8kS, n, args.u64_or("seed", 42));
+    let model = args.str_or("model", "llada_s");
+
+    let rows: Vec<(&str, Option<&str>)> = vec![
+        ("baseline (none)", None),
+        ("query", Some("spa_query_u25")),
+        ("key", Some("spa_key_u25")),
+        ("value", Some("spa_value_u25")),
+        ("attn. input", Some("spa_attnin_u25")),
+        ("attn. output", Some("spa_attnout_u25")),
+        ("singular (ours)", Some("spa_singular16_u25")),
+    ];
+
+    let mut table = Table::new(
+        &format!("Table 1 — identifier comparison, {model}, gsm8k_s, uniform rho=0.25"),
+        &["identifier", "TPS", "TTFT(ms)", "accuracy", "agreement"],
+    );
+    let mut baseline_tps = 0.0;
+    let mut reference = None;
+    for (name, variant) in rows {
+        let spec = match variant {
+            None => MethodSpec::Vanilla,
+            Some(v) => MethodSpec::Spa { variant: v.into(), refresh_interval: 0 },
+        };
+        let r = eval_method(
+            &engine, &model, spec, UnmaskMode::Sequential, &samples, reference.as_ref(),
+        )?;
+        if variant.is_none() {
+            baseline_tps = r.tps;
+        }
+        table.row(vec![
+            name.into(),
+            fmt_tps(r.tps, baseline_tps),
+            format!("{:.1}", r.ttft_ms),
+            fmt_acc(r.accuracy, r.n),
+            format!("{:.3}", r.agreement),
+        ]);
+        if variant.is_none() {
+            reference = Some(r);
+        }
+    }
+    table.print();
+    table.append_to("bench_results.txt");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Paper Table 2: main results — {baseline, dLLM-Cache, Fast-dLLM, ours}
+//! across the seven task suites on LLaDA-s and Dream-s.
+//! Columns: TPS (with speedup), TTFT (ms), accuracy (±CI), agreement.
+//!
+//! Usage: cargo bench --bench bench_table2 [-- --samples 8 --models llada_s]
+
+use spa_cache::bench::runner::{eval_method, paper_methods, sample_count, task_samples};
+use spa_cache::bench::{fmt_acc, fmt_tps, Table};
+use spa_cache::model::tasks::ALL_TASKS;
+use spa_cache::runtime::engine::Engine;
+use spa_cache::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let engine = Engine::from_default_artifacts()?;
+    let samples_n = args.usize_or("samples", sample_count(!args.flag("full")));
+    let seed = args.u64_or("seed", 42);
+    let models: Vec<String> = args
+        .str_or("models", "llada_s,dream_s")
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let only_task = args.get("task").map(|s| s.to_string());
+
+    for model in &models {
+        let mut table = Table::new(
+            &format!("Table 2 — {model} (paper: {}, N={} samples/task)",
+                engine.manifest.model(model)?.arch.name, samples_n),
+            &["task", "method", "TPS", "TTFT(ms)", "accuracy", "agreement"],
+        );
+        for task in ALL_TASKS {
+            if let Some(t) = &only_task {
+                if t != task.name() {
+                    continue;
+                }
+            }
+            let samples = task_samples(&engine, task, samples_n, seed);
+            let mut baseline_tps = 0.0;
+            let mut reference = None;
+            for (name, spec, mode) in paper_methods(task.block_len().min(32)) {
+                let r = eval_method(&engine, model, spec, mode, &samples, reference.as_ref())?;
+                if name == "baseline" {
+                    baseline_tps = r.tps;
+                }
+                table.row(vec![
+                    task.name().into(),
+                    name.into(),
+                    fmt_tps(r.tps, baseline_tps),
+                    format!("{:.1}", r.ttft_ms),
+                    fmt_acc(r.accuracy, r.n),
+                    format!("{:.3}", r.agreement),
+                ]);
+                if name == "baseline" {
+                    reference = Some(r);
+                }
+            }
+        }
+        table.print();
+        table.append_to("bench_results.txt");
+    }
+    Ok(())
+}

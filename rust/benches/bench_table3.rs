@@ -1,0 +1,71 @@
+//! Paper Table 3: SPA-Cache × parallel decoding (Fast-dLLM threshold
+//! unmasking).  Compares baseline / Fast-dLLM-parallel / ours+parallel /
+//! ours+fused-multistep across the task suites.
+
+use spa_cache::bench::runner::{eval_method, sample_count, task_samples};
+use spa_cache::bench::{fmt_acc, fmt_tps, Table};
+use spa_cache::coordinator::decode::UnmaskMode;
+use spa_cache::coordinator::methods::{IndexPolicy, MethodSpec};
+use spa_cache::model::tasks::ALL_TASKS;
+use spa_cache::runtime::engine::Engine;
+use spa_cache::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let engine = Engine::from_default_artifacts()?;
+    let n = args.usize_or("samples", sample_count(!args.flag("full")));
+    let seed = args.u64_or("seed", 42);
+    let model = args.str_or("model", "llada_s");
+    let thr = args.f64_or("threshold", 0.9);
+
+    let mut table = Table::new(
+        &format!("Table 3 — parallel decoding integration, {model} (threshold {thr})"),
+        &["task", "method", "TPS", "accuracy", "agreement"],
+    );
+    for task in ALL_TASKS {
+        let samples = task_samples(&engine, task, n, seed);
+        let par = UnmaskMode::Parallel { threshold: thr };
+        let cases: Vec<(&str, MethodSpec, UnmaskMode)> = vec![
+            ("baseline", MethodSpec::Vanilla, UnmaskMode::Sequential),
+            (
+                "+ Fast-dLLM",
+                MethodSpec::Manual {
+                    k: task.block_len().min(32),
+                    policy: IndexPolicy::Block,
+                    refresh_interval: 0,
+                },
+                UnmaskMode::BlockParallel { threshold: thr },
+            ),
+            (
+                "+ Ours (parallel)",
+                MethodSpec::Spa { variant: "spa_default".into(), refresh_interval: 0 },
+                par,
+            ),
+            ("+ Ours (fused msteps)", MethodSpec::Multistep, par),
+        ];
+        let mut baseline_tps = 0.0;
+        let mut reference = None;
+        for (name, spec, mode) in cases {
+            if name.contains("fused") && model != "llada_s" {
+                continue; // multistep variant is built for llada_s only
+            }
+            let r = eval_method(&engine, &model, spec, mode, &samples, reference.as_ref())?;
+            if name == "baseline" {
+                baseline_tps = r.tps;
+            }
+            table.row(vec![
+                task.name().into(),
+                name.into(),
+                fmt_tps(r.tps, baseline_tps),
+                fmt_acc(r.accuracy, r.n),
+                format!("{:.3}", r.agreement),
+            ]);
+            if name == "baseline" {
+                reference = Some(r);
+            }
+        }
+    }
+    table.print();
+    table.append_to("bench_results.txt");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Paper Table 4: ablation of the identifier and the adaptive budget.
+//! Rows: none / value@25% / singular@25% / singular@adaptive /
+//! singular@uniform-mean — isolating each contribution.
+
+use spa_cache::bench::runner::{eval_method, sample_count, task_samples};
+use spa_cache::bench::{fmt_acc, Table};
+use spa_cache::coordinator::decode::UnmaskMode;
+use spa_cache::coordinator::methods::MethodSpec;
+use spa_cache::model::tasks::Task;
+use spa_cache::runtime::engine::Engine;
+use spa_cache::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let engine = Engine::from_default_artifacts()?;
+    let n = args.usize_or("samples", sample_count(!args.flag("full")));
+    let samples = task_samples(&engine, Task::Gsm8kS, n, args.u64_or("seed", 42));
+    let model = args.str_or("model", "llada_s");
+
+    let rows: Vec<(&str, Option<&str>)> = vec![
+        ("none (baseline)", None),
+        ("value, uniform peak", Some("spa_value_u25")),
+        ("singular16, uniform peak", Some("spa_singular16_u25")),
+        ("singular16, adaptive (Eq.5)", Some("spa_default")),
+        ("singular16, uniform @ adaptive mean", Some("spa_singular16_umean")),
+    ];
+
+    let mut table = Table::new(
+        &format!("Table 4 — identifier x budget ablation, {model}, gsm8k_s"),
+        &["identifier / budget", "peak rho", "avg rho", "TPS", "accuracy", "agreement"],
+    );
+    let mut reference = None;
+    for (name, variant) in rows {
+        let (spec, peak, mean) = match variant {
+            None => (MethodSpec::Vanilla, 1.0, 1.0),
+            Some(v) => {
+                let info = engine.manifest.variant(&format!("{model}__{v}"))?;
+                (
+                    MethodSpec::Spa { variant: v.into(), refresh_interval: 0 },
+                    info.schedule.rho_p,
+                    info.mean_rho(),
+                )
+            }
+        };
+        let r = eval_method(
+            &engine, &model, spec, UnmaskMode::Sequential, &samples, reference.as_ref(),
+        )?;
+        table.row(vec![
+            name.into(),
+            format!("{:.0}%", peak * 100.0),
+            format!("{:.0}%", mean * 100.0),
+            format!("{:.2}", r.tps),
+            fmt_acc(r.accuracy, r.n),
+            format!("{:.3}", r.agreement),
+        ]);
+        if variant.is_none() {
+            reference = Some(r);
+        }
+    }
+    table.print();
+    table.append_to("bench_results.txt");
+    Ok(())
+}

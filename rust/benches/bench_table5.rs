@@ -1,0 +1,57 @@
+//! Paper Table 5: impact of the singular-proxy rank r (paper sweeps
+//! 32..512 against d=4096; we sweep 2..64 against d=128 — same ratios).
+//! Also prints the Theorem 3.4 bound proxy (per-layer mean 2(λ_{r+1}/λ_r)²
+//! is reported by the python side; here we show TPS/accuracy trade-off).
+
+use spa_cache::bench::runner::{eval_method, sample_count, task_samples};
+use spa_cache::bench::{fmt_acc, fmt_tps, Table};
+use spa_cache::coordinator::decode::UnmaskMode;
+use spa_cache::coordinator::methods::MethodSpec;
+use spa_cache::model::tasks::Task;
+use spa_cache::runtime::engine::Engine;
+use spa_cache::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let engine = Engine::from_default_artifacts()?;
+    let n = args.usize_or("samples", sample_count(!args.flag("full")));
+    let samples = task_samples(&engine, Task::Gsm8kS, n, args.u64_or("seed", 42));
+    let model = args.str_or("model", "llada_s");
+
+    let mut rows: Vec<(String, Option<String>)> =
+        vec![("none (baseline)".into(), None), ("value (full d)".into(), Some("spa_value_u25".into()))];
+    for r in [64, 32, 16, 8, 4, 2] {
+        rows.push((format!("singular r={r}"), Some(format!("spa_singular{r}_u25"))));
+    }
+
+    let mut table = Table::new(
+        &format!("Table 5 — proxy rank sweep, {model}, gsm8k_s, uniform rho=0.25"),
+        &["identifier", "TPS", "accuracy", "agreement"],
+    );
+    let mut baseline_tps = 0.0;
+    let mut reference = None;
+    for (name, variant) in rows {
+        let spec = match &variant {
+            None => MethodSpec::Vanilla,
+            Some(v) => MethodSpec::Spa { variant: v.clone(), refresh_interval: 0 },
+        };
+        let r = eval_method(
+            &engine, &model, spec, UnmaskMode::Sequential, &samples, reference.as_ref(),
+        )?;
+        if variant.is_none() {
+            baseline_tps = r.tps;
+        }
+        table.row(vec![
+            name,
+            fmt_tps(r.tps, baseline_tps),
+            fmt_acc(r.accuracy, r.n),
+            format!("{:.3}", r.agreement),
+        ]);
+        if variant.is_none() {
+            reference = Some(r);
+        }
+    }
+    table.print();
+    table.append_to("bench_results.txt");
+    Ok(())
+}

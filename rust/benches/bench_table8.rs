@@ -1,0 +1,67 @@
+//! Paper Table 8: the method lineup on LLaDA-1.5 (our warm-started
+//! llada15_s), all seven tasks, plus peak cache memory per method.
+
+use spa_cache::bench::runner::{eval_method, paper_methods, sample_count, task_samples};
+use spa_cache::bench::{fmt_acc, fmt_tps, Table};
+use spa_cache::model::tasks::ALL_TASKS;
+use spa_cache::runtime::engine::Engine;
+use spa_cache::util::cli::Args;
+
+/// Cache-state bytes a method keeps resident per batch group (analytic).
+fn cache_mib(engine: &Engine, model: &str, variant: &str) -> f64 {
+    let v = match engine.manifest.variants.get(&format!("{model}__{variant}")) {
+        Some(v) => v,
+        None => return 0.0,
+    };
+    let mut bytes = 0usize;
+    for i in &v.inputs {
+        if i.name != "tokens" && i.name != "idx" {
+            bytes += 4 * i.shape.iter().product::<usize>();
+        }
+    }
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let engine = Engine::from_default_artifacts()?;
+    let n = args.usize_or("samples", sample_count(!args.flag("full")));
+    let seed = args.u64_or("seed", 42);
+    let model = args.str_or("model", "llada15_s");
+
+    let mut table = Table::new(
+        &format!("Table 8 — LLaDA-1.5 analogue ({model})"),
+        &["task", "method", "TPS", "TTFT(ms)", "accuracy", "cache MiB"],
+    );
+    for task in ALL_TASKS {
+        let samples = task_samples(&engine, task, n, seed);
+        let mut baseline_tps = 0.0;
+        let mut reference = None;
+        for (name, spec, mode) in paper_methods(task.block_len().min(32)) {
+            let mem = match name {
+                "baseline" => 0.0,
+                "+ dLLM-Cache" => cache_mib(&engine, &model, "spa_value_u25"),
+                "+ Fast-dLLM" => cache_mib(&engine, &model, "manual_k16"),
+                _ => cache_mib(&engine, &model, "spa_default"),
+            };
+            let r = eval_method(&engine, &model, spec, mode, &samples, reference.as_ref())?;
+            if name == "baseline" {
+                baseline_tps = r.tps;
+            }
+            table.row(vec![
+                task.name().into(),
+                name.into(),
+                fmt_tps(r.tps, baseline_tps),
+                format!("{:.1}", r.ttft_ms),
+                fmt_acc(r.accuracy, r.n),
+                format!("{mem:.1}"),
+            ]);
+            if name == "baseline" {
+                reference = Some(r);
+            }
+        }
+    }
+    table.print();
+    table.append_to("bench_results.txt");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Paper Table 9: against dKV-Cache / Elastic-Cache / d2Cache analogues on
+//! GSM8K + MBPP for both models.  (The analogues substitute host-side
+//! confidence/locality signals for attention-weight statistics — see
+//! DESIGN.md §2 and coordinator::methods.)
+
+use spa_cache::bench::runner::{eval_method, sample_count, task_samples};
+use spa_cache::bench::{fmt_acc, fmt_tps, Table};
+use spa_cache::coordinator::decode::UnmaskMode;
+use spa_cache::coordinator::methods::{IndexPolicy, MethodSpec};
+use spa_cache::model::tasks::Task;
+use spa_cache::runtime::engine::Engine;
+use spa_cache::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let engine = Engine::from_default_artifacts()?;
+    let n = args.usize_or("samples", sample_count(!args.flag("full")));
+    let seed = args.u64_or("seed", 42);
+    let models: Vec<String> =
+        args.str_or("models", "llada_s,dream_s").split(',').map(String::from).collect();
+
+    let mut table = Table::new(
+        "Table 9 — vs dKV-Cache / Elastic-Cache / d2Cache analogues",
+        &["model", "task", "method", "TPS", "TTFT(ms)", "accuracy", "agreement"],
+    );
+    for model in &models {
+        for task in [Task::Gsm8kS, Task::MbppS] {
+            let samples = task_samples(&engine, task, n, seed);
+            let k = task.block_len().min(32).max(16);
+            let seq = UnmaskMode::Sequential;
+            let cases: Vec<(&str, MethodSpec)> = vec![
+                ("vanilla", MethodSpec::Vanilla),
+                ("dKV-Cache", MethodSpec::Manual { k, policy: IndexPolicy::Window, refresh_interval: 16 }),
+                ("Elastic-Cache", MethodSpec::Manual { k, policy: IndexPolicy::Window, refresh_interval: 8 }),
+                ("d2Cache", MethodSpec::Manual { k, policy: IndexPolicy::LowConfidence, refresh_interval: 16 }),
+                ("Ours", MethodSpec::Spa { variant: "spa_default".into(), refresh_interval: 0 }),
+            ];
+            let mut baseline_tps = 0.0;
+            let mut reference = None;
+            for (name, spec) in cases {
+                let r = eval_method(&engine, model, spec, seq, &samples, reference.as_ref())?;
+                if name == "vanilla" {
+                    baseline_tps = r.tps;
+                }
+                table.row(vec![
+                    model.clone(),
+                    task.name().into(),
+                    name.into(),
+                    fmt_tps(r.tps, baseline_tps),
+                    format!("{:.1}", r.ttft_ms),
+                    fmt_acc(r.accuracy, r.n),
+                    format!("{:.3}", r.agreement),
+                ]);
+                if name == "vanilla" {
+                    reference = Some(r);
+                }
+            }
+        }
+    }
+    table.print();
+    table.append_to("bench_results.txt");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Anisotropy analysis (paper Fig. 5 + Appendix B).
+//!
+//! Compares the cross-token cosine-similarity distribution of Value states
+//! against attention outputs.  Isotropic features (values) cluster near 0;
+//! the attention output collapses into a narrow cone (similarities → 1),
+//! which masks per-token drift — the paper's explanation for why the
+//! attn-output identifier fails (Table 1).
+
+use crate::util::rng::Rng;
+use crate::util::stats::Histogram;
+
+/// Cross-token cosine-similarity histogram for one feature matrix
+/// `[tokens, dim]` (row-major), sampling `pairs` random i≠j pairs.
+pub fn pair_similarity_hist(
+    feats: &[f32],
+    tokens: usize,
+    dim: usize,
+    pairs: usize,
+    rng: &mut Rng,
+) -> Histogram {
+    assert_eq!(feats.len(), tokens * dim);
+    let mut h = Histogram::new(-1.0, 1.0000001, 40);
+    let norms: Vec<f64> = (0..tokens)
+        .map(|t| {
+            feats[t * dim..(t + 1) * dim]
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>()
+                .sqrt()
+        })
+        .collect();
+    for _ in 0..pairs {
+        let i = rng.range(0, tokens);
+        let mut j = rng.range(0, tokens);
+        if i == j {
+            j = (j + 1) % tokens;
+        }
+        if norms[i] < 1e-9 || norms[j] < 1e-9 {
+            continue;
+        }
+        let dot: f64 = (0..dim)
+            .map(|d| feats[i * dim + d] as f64 * feats[j * dim + d] as f64)
+            .sum();
+        h.push(dot / (norms[i] * norms[j]));
+    }
+    h
+}
+
+/// Mean of a histogram interpreted over its bin centres.
+pub fn hist_mean(h: &Histogram) -> f64 {
+    let nb = h.bins.len();
+    let w = (h.hi - h.lo) / nb as f64;
+    let total: u64 = h.bins.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    h.bins
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| (h.lo + (i as f64 + 0.5) * w) * c as f64)
+        .sum::<f64>()
+        / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orthogonal_features_center_near_zero() {
+        // random gaussian features are near-orthogonal in high dim
+        let mut rng = Rng::new(1);
+        let (t, d) = (64, 128);
+        let feats: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let h = pair_similarity_hist(&feats, t, d, 2000, &mut rng);
+        assert!(hist_mean(&h).abs() < 0.1);
+    }
+
+    #[test]
+    fn common_direction_shifts_mean_up() {
+        // v_i = c + s_i with ||c|| >> ||s_i||  (paper Eq. 39/40)
+        let mut rng = Rng::new(2);
+        let (t, d) = (64, 128);
+        let common: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 3.0).collect();
+        let mut feats = vec![0.0f32; t * d];
+        for i in 0..t {
+            for j in 0..d {
+                feats[i * d + j] = common[j] + rng.normal() as f32 * 0.3;
+            }
+        }
+        let h = pair_similarity_hist(&feats, t, d, 2000, &mut rng);
+        assert!(hist_mean(&h) > 0.8, "mean {}", hist_mean(&h));
+    }
+}

@@ -1,0 +1,141 @@
+//! Probe-driven drift analysis (paper Figures 1, 2, 6, 7 and Table 6).
+//!
+//! Drives the `<model>__probe` variant through a decode, collecting the
+//! in-graph adjacent-step cosine similarities for five features per layer:
+//! input, value, singular proxy, attention output, layer output.
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::coordinator::decode::{Sampler, UnmaskMode};
+use crate::coordinator::request::SlotState;
+use crate::model::tokenizer::MASK;
+use crate::runtime::engine::Engine;
+use crate::runtime::tensor::{literal_i32, literal_zeros_f32, to_f32_vec};
+
+/// Similarity channels in the probe's `sims` output, in order.
+pub const CHANNELS: [&str; 5] = ["input", "value", "proxy", "attn_out", "output"];
+pub const TAU: f64 = 0.95; // paper's drift threshold
+
+/// Per-step similarity record: `sims[layer][channel]` = mean over tokens,
+/// plus the raw per-token output-similarity for drift fractions.
+#[derive(Debug, Clone)]
+pub struct StepSims {
+    pub mean: Vec<[f64; 5]>,          // [L][channel]
+    pub drift_fraction: Vec<f64>,     // [L]: fraction of tokens with out-sim < τ
+    pub per_token_output: Vec<Vec<f32>>, // [L][B*N]
+}
+
+/// Full result of a probe decode.
+#[derive(Debug)]
+pub struct DriftProfile {
+    pub model: String,
+    pub steps: Vec<StepSims>,
+    pub n_layers: usize,
+}
+
+impl DriftProfile {
+    /// Average drift fraction per layer over steps ≥ 1 (paper Fig. 2).
+    pub fn mean_drift(&self) -> Vec<f64> {
+        let l = self.n_layers;
+        let mut acc = vec![0.0; l];
+        let mut cnt = 0usize;
+        for s in self.steps.iter().skip(1) {
+            for (i, d) in s.drift_fraction.iter().enumerate() {
+                acc[i] += d;
+            }
+            cnt += 1;
+        }
+        acc.iter().map(|x| x / cnt.max(1) as f64).collect()
+    }
+
+    /// Mean similarity per (layer, channel) over steps ≥ 1 (Fig. 1/7).
+    pub fn mean_sims(&self) -> Vec<[f64; 5]> {
+        let l = self.n_layers;
+        let mut acc = vec![[0.0; 5]; l];
+        let mut cnt = 0usize;
+        for s in self.steps.iter().skip(1) {
+            for i in 0..l {
+                for c in 0..5 {
+                    acc[i][c] += s.mean[i][c];
+                }
+            }
+            cnt += 1;
+        }
+        for row in &mut acc {
+            for c in row.iter_mut() {
+                *c /= cnt.max(1) as f64;
+            }
+        }
+        acc
+    }
+}
+
+/// Run a probe decode and collect similarities.
+///
+/// `tokens` is a packed `[B, N]` buffer (see `group::pack_group`); decoding
+/// uses the sequential greedy sampler so every step has exactly B commits.
+pub fn run_probe(
+    engine: &Engine,
+    model: &str,
+    tokens: &mut Vec<i32>,
+    slots: &mut Vec<SlotState>,
+    max_steps: usize,
+    threshold: f64,
+) -> Result<DriftProfile> {
+    let variant = engine.load_variant(&format!("{model}__probe"))?;
+    let vinfo = &variant.info;
+    let (b, n) = (vinfo.batch, vinfo.seq_len);
+    let l = engine.manifest.model(model)?.arch.n_layers;
+    let vocab = vinfo.outputs[0].shape[2];
+
+    // Zero-initialised records for step 0.
+    let mut records: Vec<Literal> = vinfo
+        .inputs
+        .iter()
+        .filter(|i| i.name != "tokens")
+        .map(|i| literal_zeros_f32(&i.shape))
+        .collect::<Result<_>>()?;
+
+    let mut sampler = Sampler::greedy(UnmaskMode::Parallel { threshold });
+    let mut steps = Vec::new();
+    for _ in 0..max_steps {
+        if !tokens.iter().any(|&t| t == MASK) {
+            break;
+        }
+        let tok_lit = literal_i32(&[b, n], tokens)?;
+        let mut inputs: Vec<&Literal> = vec![&tok_lit];
+        inputs.extend(records.iter());
+        let mut outs = engine.run(&variant, &inputs)?;
+        // outputs: [logits, xin, val, prox, ao, out, sims]
+        let sims_lit = outs.pop().unwrap();
+        let logits = to_f32_vec(&outs[0])?;
+        records = outs.drain(1..).collect();
+
+        let sims = to_f32_vec(&sims_lit)?; // [L,B,N,5]
+        let mut mean = vec![[0.0f64; 5]; l];
+        let mut drift = vec![0.0f64; l];
+        let mut per_tok = vec![vec![0.0f32; b * n]; l];
+        for li in 0..l {
+            for p in 0..b * n {
+                for c in 0..5 {
+                    let v = sims[(li * b * n + p) * 5 + c] as f64;
+                    mean[li][c] += v;
+                }
+                let out_sim = sims[(li * b * n + p) * 5 + 4];
+                per_tok[li][p] = out_sim;
+                if (out_sim as f64) < TAU {
+                    drift[li] += 1.0;
+                }
+            }
+            for c in 0..5 {
+                mean[li][c] /= (b * n) as f64;
+            }
+            drift[li] /= (b * n) as f64;
+        }
+        steps.push(StepSims { mean, drift_fraction: drift, per_token_output: per_tok });
+
+        sampler.unmask(tokens, &logits, b, n, vocab, slots);
+    }
+    Ok(DriftProfile { model: model.to_string(), steps, n_layers: l })
+}

@@ -1,0 +1,6 @@
+//! Analysis toolkit regenerating the paper's figures from the `probe`
+//! artifact: adjacent-step similarities (Fig 1/7), layer drift profiles and
+//! Eq. 5 fits (Fig 2/6, Table 6), and anisotropy densities (Fig 5).
+
+pub mod anisotropy;
+pub mod drift;

@@ -1,0 +1,141 @@
+//! Bench harness substrate (criterion is unavailable offline).
+//!
+//! Provides warmup+measure timing loops and an aligned table printer that
+//! mirrors the paper's table layout (TPS with speedup factors, TTFT,
+//! accuracy with binomial CIs).  Every `rust/benches/bench_*.rs` target uses
+//! this; `cargo bench` runs them all.
+
+pub mod runner;
+
+use std::time::Instant;
+
+use crate::util::stats::{binomial_ci95, Summary};
+
+/// Time `f` for `iters` iterations after `warmup` ones; returns per-iter ms.
+pub fn time_ms<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Summary::of(&samples)
+}
+
+/// Paper-style cell formatters.
+pub fn fmt_tps(tps: f64, baseline_tps: f64) -> String {
+    if baseline_tps > 0.0 {
+        format!("{tps:.2} ({:.1}x)", tps / baseline_tps)
+    } else {
+        format!("{tps:.2}")
+    }
+}
+
+pub fn fmt_acc(acc: f64, n: usize) -> String {
+    format!("{:.2} (±{:.2})", acc * 100.0, binomial_ci95(acc, n) * 100.0)
+}
+
+/// Aligned ASCII table printer.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let line = |cells: &[String], width: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = width[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &width));
+        out.push('\n');
+        out.push_str(&"-".repeat(width.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &width));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// Append the rendered table to a results file (bench log).
+    pub fn append_to(&self, path: &str) {
+        use std::io::Write;
+        if let Ok(mut f) =
+            std::fs::OpenOptions::new().create(true).append(true).open(path)
+        {
+            let _ = writeln!(f, "{}", self.render());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["method", "tps"]);
+        t.row(vec!["baseline".into(), "29.67 (1.0x)".into()]);
+        t.row(vec!["ours".into(), "190.73 (6.4x)".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("baseline"));
+        let lines: Vec<&str> = s.lines().collect();
+        // header and rows aligned to same column start
+        let hpos = lines[2].find("tps").unwrap();
+        assert_eq!(lines[4].find("29.67"), Some(hpos));
+    }
+
+    #[test]
+    fn timing_returns_iters() {
+        let s = time_ms(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_tps(60.0, 30.0), "60.00 (2.0x)");
+        assert!(fmt_acc(0.5, 16).starts_with("50.00"));
+    }
+}

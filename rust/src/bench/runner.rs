@@ -1,0 +1,146 @@
+//! Shared evaluation runner for the paper-table benches: decode task
+//! samples under a cache method and report TPS / TTFT / accuracy /
+//! agreement-with-vanilla — the paper's metrics (DESIGN.md §6).
+
+use anyhow::Result;
+
+use crate::coordinator::decode::{Sampler, UnmaskMode};
+use crate::coordinator::group::{pack_group, run_group};
+use crate::coordinator::methods::{Method, MethodSpec};
+use crate::model::tasks::{extract_answer, make_sample, Sample, Task};
+use crate::model::tokenizer::Tokenizer;
+use crate::runtime::engine::Engine;
+use crate::util::rng::Rng;
+
+/// Aggregated evaluation of one (method, task) cell.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub tps: f64,
+    pub ttft_ms: f64,
+    pub accuracy: f64,
+    pub n: usize,
+    /// Fraction of generated tokens identical to the vanilla decode
+    /// (fidelity metric; 1.0 = lossless caching).
+    pub agreement: f64,
+    pub steps: usize,
+    pub total_ms: f64,
+    /// Final token rows (for use as a reference by other methods).
+    pub outputs: Vec<Vec<i32>>,
+}
+
+/// Deterministic task samples shared across methods (same seed = same set).
+pub fn task_samples(
+    engine: &Engine,
+    task: Task,
+    count: usize,
+    seed: u64,
+) -> Vec<Sample> {
+    let tok = Tokenizer::from_manifest(&engine.manifest.charset);
+    let n = engine.manifest.seq_len;
+    let mut rng = Rng::new(seed ^ (task.name().len() as u64) << 13);
+    (0..count).map(|_| make_sample(task, &mut rng, &tok, n)).collect()
+}
+
+/// Decode `samples` under `spec` and aggregate the paper metrics.
+pub fn eval_method(
+    engine: &Engine,
+    model: &str,
+    spec: MethodSpec,
+    mode: UnmaskMode,
+    samples: &[Sample],
+    reference: Option<&EvalResult>,
+) -> Result<EvalResult> {
+    let mut method = Method::new(engine, model, spec)?;
+    let (b, n, _) = method.geometry();
+    let tok = Tokenizer::from_manifest(&engine.manifest.charset);
+
+    let mut outputs = Vec::new();
+    let mut total_ms = 0.0;
+    let mut total_decoded = 0usize;
+    let mut ttfts = Vec::new();
+    let mut hits = 0usize;
+    let mut steps = 0usize;
+    for chunk in samples.chunks(b) {
+        // manual_k artifacts exist for k ∈ {8,16,32}; clamp larger blocks.
+        let block = chunk[0].task.block_len().min(32);
+        let (mut tokens, mut slots) = pack_group(chunk, b, n, block);
+        let mut sampler = Sampler::greedy(mode);
+        let out = run_group(engine, &mut method, &mut sampler, &mut tokens, &mut slots, 6 * n)?;
+        total_ms += out.total_ms;
+        steps += out.steps;
+        for (i, s) in chunk.iter().enumerate() {
+            total_decoded += out.decoded[i];
+            ttfts.push(out.ttft_ms[i]);
+            let row = out.tokens[i * n..(i + 1) * n].to_vec();
+            if extract_answer(&tok, &row, s.prompt_len) == s.answer {
+                hits += 1;
+            }
+            outputs.push(row);
+        }
+    }
+
+    // Agreement: committed-token match against the reference decode.
+    let agreement = match reference {
+        Some(r) => {
+            let mut same = 0usize;
+            let mut total = 0usize;
+            for (i, s) in samples.iter().enumerate() {
+                let gen_end = n;
+                for p in s.prompt_len..gen_end {
+                    if s.tokens[p] == crate::model::tokenizer::MASK {
+                        total += 1;
+                        if outputs[i][p] == r.outputs[i][p] {
+                            same += 1;
+                        }
+                    }
+                }
+            }
+            if total == 0 { 1.0 } else { same as f64 / total as f64 }
+        }
+        None => 1.0,
+    };
+
+    Ok(EvalResult {
+        tps: if total_ms > 0.0 { total_decoded as f64 / (total_ms / 1e3) } else { 0.0 },
+        ttft_ms: ttfts.iter().copied().filter(|x| x.is_finite()).sum::<f64>()
+            / ttfts.len().max(1) as f64,
+        accuracy: hits as f64 / samples.len().max(1) as f64,
+        n: samples.len(),
+        agreement,
+        steps,
+        total_ms,
+        outputs,
+    })
+}
+
+/// The paper's standard method lineup for comparison tables.
+pub fn paper_methods(block_k: usize) -> Vec<(&'static str, MethodSpec, UnmaskMode)> {
+    let seq = UnmaskMode::Sequential;
+    vec![
+        ("baseline", MethodSpec::Vanilla, seq),
+        (
+            "+ dLLM-Cache",
+            MethodSpec::Spa { variant: "spa_value_u25".into(), refresh_interval: 16 },
+            seq,
+        ),
+        (
+            "+ Fast-dLLM",
+            MethodSpec::Manual {
+                k: block_k,
+                policy: crate::coordinator::methods::IndexPolicy::Block,
+                refresh_interval: 0,
+            },
+            UnmaskMode::BlockParallel { threshold: 0.9 },
+        ),
+        (
+            "+ Ours",
+            MethodSpec::Spa { variant: "spa_default".into(), refresh_interval: 0 },
+            seq,
+        ),
+    ]
+}
+
+/// Quick-mode sample counts: keep `cargo bench` tractable on 1 CPU core.
+pub fn sample_count(quick: bool) -> usize {
+    if quick { 4 } else { 16 }
+}

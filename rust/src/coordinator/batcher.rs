@@ -1,0 +1,167 @@
+//! Dynamic batcher: FIFO admission queue feeding fixed-shape batch slots.
+//!
+//! The AOT executables pin `[B, N]`, so batching is slot-based: up to B
+//! resident requests decode together; empty slots carry PAD rows.  The
+//! batcher decides *when* to admit waiting requests into free slots —
+//! admission forces a cache refresh (one full-cost step), so it trades
+//! prefill cost against slot utilisation, controlled by `min_free` and
+//! `max_wait`.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub batch: usize,
+    /// Admit as soon as this many slots are free (1 = aggressive).
+    pub min_free: usize,
+    /// ... or when the oldest queued request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { batch: 4, min_free: 2, max_wait: Duration::from_millis(200) }
+    }
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<Request>,
+    pub admitted: u64,
+    pub submitted: u64,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher { cfg, queue: VecDeque::new(), admitted: 0, submitted: 0 }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.submitted += 1;
+        self.queue.push_back(req);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Decide whether to admit now, given the number of free slots.
+    /// Returns the requests to place (at most `free_slots`).
+    pub fn admit(&mut self, free_slots: usize, now: Instant) -> Vec<Request> {
+        if self.queue.is_empty() || free_slots == 0 {
+            return Vec::new();
+        }
+        let oldest_wait =
+            self.queue.front().map(|r| now.duration_since(r.submitted)).unwrap_or_default();
+        let should =
+            free_slots >= self.cfg.min_free.min(self.cfg.batch) || oldest_wait >= self.cfg.max_wait;
+        if !should {
+            return Vec::new();
+        }
+        let take = free_slots.min(self.queue.len());
+        let out: Vec<Request> = self.queue.drain(..take).collect();
+        self.admitted += out.len() as u64;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tokenizer::MASK;
+
+    fn req(id: u64, age_ms: u64) -> Request {
+        Request {
+            id,
+            tokens: vec![MASK; 8],
+            prompt_len: 2,
+            answer: None,
+            task: None,
+            submitted: Instant::now() - Duration::from_millis(age_ms),
+        }
+    }
+
+    #[test]
+    fn admits_when_enough_slots_free() {
+        let mut b = Batcher::new(BatcherConfig { batch: 4, min_free: 2, max_wait: Duration::from_secs(10) });
+        b.submit(req(1, 0));
+        assert!(b.admit(1, Instant::now()).is_empty(), "one free < min_free and queue < free");
+        b.submit(req(2, 0));
+        b.submit(req(3, 0));
+        let admitted = b.admit(2, Instant::now());
+        assert_eq!(admitted.len(), 2);
+        assert_eq!(admitted[0].id, 1);
+    }
+
+    #[test]
+    fn admits_on_deadline() {
+        let mut b = Batcher::new(BatcherConfig { batch: 4, min_free: 4, max_wait: Duration::from_millis(50) });
+        b.submit(req(1, 100)); // already waited 100ms
+        let admitted = b.admit(1, Instant::now());
+        assert_eq!(admitted.len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        for i in 0..6 {
+            b.submit(req(i, 1000));
+        }
+        let first = b.admit(4, Instant::now());
+        let second = b.admit(4, Instant::now());
+        let ids: Vec<u64> = first.iter().chain(second.iter()).map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn property_no_request_lost_or_duplicated() {
+        crate::util::proptest::check(
+            "batcher_conservation",
+            |r| {
+                // sequence of (submit count, free slots) events
+                (0..r.range(1, 20))
+                    .map(|_| (r.range(0, 4), r.range(0, 5)))
+                    .collect::<Vec<(usize, usize)>>()
+            },
+            |events| {
+                let mut b = Batcher::new(BatcherConfig {
+                    batch: 4,
+                    min_free: 1,
+                    max_wait: Duration::from_millis(0),
+                });
+                let mut next_id = 0u64;
+                let mut out = Vec::new();
+                for &(subs, free) in events {
+                    for _ in 0..subs {
+                        b.submit(req(next_id, 10));
+                        next_id += 1;
+                    }
+                    for r in b.admit(free, Instant::now()) {
+                        out.push(r.id);
+                        if out.len() > next_id as usize {
+                            return Err("more admitted than submitted".into());
+                        }
+                    }
+                }
+                // drain the rest
+                loop {
+                    let batch = b.admit(4, Instant::now());
+                    if batch.is_empty() {
+                        break;
+                    }
+                    out.extend(batch.iter().map(|r| r.id));
+                }
+                let want: Vec<u64> = (0..next_id).collect();
+                if out == want {
+                    Ok(())
+                } else {
+                    Err(format!("order/conservation broken: {out:?} vs 0..{next_id}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,307 @@
+//! Unmasking policies — the coordinator half of the diffusion sampler.
+//!
+//! The AOT step executables produce logits; committing tokens is L3's job so
+//! scheduling stays in Rust.  Mirrors `model.confidence_unmask` (greedy path
+//! is pinned by the golden trace test), plus temperature sampling and the
+//! block-restricted semi-AR mode used by Fast-dLLM.
+
+use crate::model::tokenizer::{BOS, MASK};
+use crate::util::rng::Rng;
+
+use super::request::SlotState;
+
+/// How masked positions are committed each step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum UnmaskMode {
+    /// One token per step per sequence (highest confidence) — the paper's
+    /// default decoding.
+    Sequential,
+    /// Fast-dLLM-style: every masked position with confidence above the
+    /// threshold (plus the best one, to guarantee progress).
+    Parallel { threshold: f64 },
+    /// Parallel, restricted to the slot's active semi-AR block.
+    BlockParallel { threshold: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    pub mode: UnmaskMode,
+    /// 0.0 = greedy (paper setting); >0 = Gumbel temperature sampling.
+    pub temperature: f64,
+    pub rng: Rng,
+}
+
+impl Sampler {
+    pub fn greedy(mode: UnmaskMode) -> Sampler {
+        Sampler { mode, temperature: 0.0, rng: Rng::new(0) }
+    }
+
+    /// Commit tokens for one batch. `logits` is `[B, N, V]` row-major,
+    /// `tokens` is `[B, N]`.  Returns per-slot newly-decoded position lists.
+    pub fn unmask(
+        &mut self,
+        tokens: &mut [i32],
+        logits: &[f32],
+        batch: usize,
+        seq_len: usize,
+        vocab: usize,
+        slots: &mut [SlotState],
+    ) -> Vec<Vec<usize>> {
+        assert_eq!(tokens.len(), batch * seq_len);
+        assert_eq!(logits.len(), batch * seq_len * vocab);
+        let mut decoded = vec![Vec::new(); batch];
+        for b in 0..batch {
+            let slot = &mut slots[b];
+            if !slot.occupied {
+                continue;
+            }
+            let row = &mut tokens[b * seq_len..(b + 1) * seq_len];
+            // Active range for this slot's policy.
+            let (lo, hi) = match self.mode {
+                UnmaskMode::BlockParallel { .. } => (
+                    slot.block_start,
+                    (slot.block_start + slot.block_len).min(slot.gen_end),
+                ),
+                _ => (0, seq_len),
+            };
+            // Gather masked positions with (confidence, pick).
+            let mut best: Option<(f64, usize, i32)> = None;
+            let mut commits: Vec<(usize, i32)> = Vec::new();
+            for n in lo..hi {
+                if row[n] != MASK {
+                    continue;
+                }
+                let lrow = &logits[(b * seq_len + n) * vocab..(b * seq_len + n + 1) * vocab];
+                let (conf, pick) = self.confidence(lrow);
+                match self.mode {
+                    UnmaskMode::Sequential => {
+                        if best.map(|(c, _, _)| conf > c).unwrap_or(true) {
+                            best = Some((conf, n, pick));
+                        }
+                    }
+                    UnmaskMode::Parallel { threshold }
+                    | UnmaskMode::BlockParallel { threshold } => {
+                        if conf > threshold {
+                            commits.push((n, pick));
+                        } else if best.map(|(c, _, _)| conf > c).unwrap_or(true) {
+                            best = Some((conf, n, pick));
+                        }
+                    }
+                }
+            }
+            // Guarantee progress: commit the single best if nothing passed.
+            if commits.is_empty() {
+                if let Some((_, n, pick)) = best {
+                    commits.push((n, pick));
+                }
+            }
+            for (n, pick) in commits {
+                row[n] = pick;
+                decoded[b].push(n);
+            }
+            // Advance the semi-AR block if it is fully decoded.
+            if let UnmaskMode::BlockParallel { .. } = self.mode {
+                loop {
+                    let hi = (slot.block_start + slot.block_len).min(slot.gen_end);
+                    let block_done =
+                        (slot.block_start..hi).all(|n| row[n] != MASK);
+                    if block_done && hi < slot.gen_end {
+                        slot.block_start = hi;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            slot.last_decoded = decoded[b].clone();
+            slot.decoded_since_refresh.extend(decoded[b].iter().copied());
+            slot.steps += 1;
+        }
+        decoded
+    }
+
+    /// (top-1 probability, committed token) for one logit row.
+    /// MASK and BOS can never be emitted (mirrors `confidence_unmask`).
+    fn confidence(&mut self, logits: &[f32]) -> (f64, i32) {
+        let mut max = f64::MIN;
+        for (i, &x) in logits.iter().enumerate() {
+            if i as i32 == MASK || i as i32 == BOS {
+                continue;
+            }
+            if (x as f64) > max {
+                max = x as f64;
+            }
+        }
+        let mut denom = 0.0f64;
+        let mut best_p = 0.0f64;
+        let mut best_i = 0usize;
+        let mut best_score = f64::MIN;
+        for (i, &x) in logits.iter().enumerate() {
+            if i as i32 == MASK || i as i32 == BOS {
+                continue;
+            }
+            let p = ((x as f64) - max).exp();
+            denom += p;
+            if p > best_p {
+                best_p = p;
+            }
+            // Token choice: greedy or Gumbel-perturbed.
+            let score = if self.temperature > 0.0 {
+                (x as f64) / self.temperature + self.rng.gumbel()
+            } else {
+                x as f64
+            };
+            if score > best_score {
+                best_score = score;
+                best_i = i;
+            }
+        }
+        (best_p / denom, best_i as i32)
+    }
+}
+
+/// True when a slot's generation region holds no MASK tokens.
+pub fn slot_done(tokens: &[i32], seq_len: usize, b: usize, slot: &SlotState) -> bool {
+    if !slot.occupied {
+        return true;
+    }
+    let row = &tokens[b * seq_len..(b + 1) * seq_len];
+    !row.iter().any(|&t| t == MASK)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tokenizer::{EOS, PAD};
+
+    fn mk_logits(b: usize, n: usize, v: usize) -> Vec<f32> {
+        vec![0.0; b * n * v]
+    }
+
+    fn slot(prompt: usize, gen_end: usize, block: usize) -> SlotState {
+        let mut s = SlotState::empty();
+        s.occupied = true;
+        s.prompt_len = prompt;
+        s.gen_end = gen_end;
+        s.block_start = prompt;
+        s.block_len = block;
+        s
+    }
+
+    #[test]
+    fn sequential_commits_exactly_one() {
+        let (b, n, v) = (1, 8, 8);
+        let mut tokens = vec![PAD; n];
+        tokens[0] = BOS;
+        tokens[2] = MASK;
+        tokens[3] = MASK;
+        let mut logits = mk_logits(b, n, v);
+        logits[2 * v + 5] = 3.0; // pos 2 prefers token 5, high conf
+        logits[3 * v + 6] = 1.0;
+        let mut slots = vec![slot(2, 4, usize::MAX)];
+        let mut s = Sampler::greedy(UnmaskMode::Sequential);
+        let d = s.unmask(&mut tokens, &logits, b, n, v, &mut slots);
+        assert_eq!(d[0], vec![2]);
+        assert_eq!(tokens[2], 5);
+        assert_eq!(tokens[3], MASK);
+    }
+
+    #[test]
+    fn parallel_commits_above_threshold() {
+        let (b, n, v) = (1, 6, 8);
+        let mut tokens = vec![MASK; n];
+        let mut logits = mk_logits(b, n, v);
+        for pos in 0..n {
+            logits[pos * v + 4] = 10.0; // very confident everywhere
+        }
+        let mut slots = vec![slot(0, n, usize::MAX)];
+        let mut s = Sampler::greedy(UnmaskMode::Parallel { threshold: 0.9 });
+        let d = s.unmask(&mut tokens, &logits, b, n, v, &mut slots);
+        assert_eq!(d[0].len(), n);
+        assert!(tokens.iter().all(|&t| t == 4));
+    }
+
+    #[test]
+    fn parallel_forces_progress_below_threshold() {
+        let (b, n, v) = (1, 4, 8);
+        let mut tokens = vec![MASK; n];
+        let logits = mk_logits(b, n, v); // uniform -> low confidence
+        let mut slots = vec![slot(0, n, usize::MAX)];
+        let mut s = Sampler::greedy(UnmaskMode::Parallel { threshold: 0.99 });
+        let d = s.unmask(&mut tokens, &logits, b, n, v, &mut slots);
+        assert_eq!(d[0].len(), 1, "exactly the forced best");
+    }
+
+    #[test]
+    fn never_emits_mask_or_bos() {
+        let (b, n, v) = (1, 2, 8);
+        let mut tokens = vec![MASK, MASK];
+        let mut logits = mk_logits(b, n, v);
+        for pos in 0..n {
+            logits[pos * v + MASK as usize] = 100.0;
+            logits[pos * v + BOS as usize] = 90.0;
+            logits[pos * v + EOS as usize] = 1.0;
+        }
+        let mut slots = vec![slot(0, n, usize::MAX)];
+        let mut s = Sampler::greedy(UnmaskMode::Parallel { threshold: 0.0 });
+        s.unmask(&mut tokens, &logits, b, n, v, &mut slots);
+        assert!(tokens.iter().all(|&t| t != MASK && t != BOS));
+    }
+
+    #[test]
+    fn block_mode_respects_and_advances_block() {
+        let (b, n, v) = (1, 8, 8);
+        let mut tokens = vec![BOS, 5, MASK, MASK, MASK, MASK, PAD, PAD];
+        let mut logits = mk_logits(b, n, v);
+        for pos in 0..n {
+            logits[pos * v + 4] = 10.0;
+        }
+        let mut slots = vec![slot(2, 6, 2)];
+        let mut s = Sampler::greedy(UnmaskMode::BlockParallel { threshold: 0.9 });
+        let d = s.unmask(&mut tokens, &logits, b, n, v, &mut slots);
+        // only the first block [2,4) decodes this step
+        assert_eq!(d[0], vec![2, 3]);
+        assert_eq!(tokens[4], MASK);
+        // block advanced
+        assert_eq!(slots[0].block_start, 4);
+    }
+
+    #[test]
+    fn slot_done_checks_masks() {
+        let tokens = vec![BOS, 5, 6, PAD];
+        let s = slot(2, 3, usize::MAX);
+        assert!(slot_done(&tokens, 4, 0, &s));
+        let tokens2 = vec![BOS, MASK, 6, PAD];
+        assert!(!slot_done(&tokens2, 4, 0, &s));
+    }
+
+    #[test]
+    fn property_unmask_only_changes_masked() {
+        crate::util::proptest::check(
+            "unmask_only_masked",
+            |r| {
+                let n = 16usize;
+                let v = 8usize;
+                let toks: Vec<i32> =
+                    (0..n).map(|_| if r.bool(0.4) { MASK } else { r.below(8) as i32 }).collect();
+                let logits: Vec<f32> = (0..n * v).map(|_| r.normal() as f32).collect();
+                let thr = r.f64();
+                (toks, logits, thr)
+            },
+            |(toks, logits, thr)| {
+                let mut t = toks.clone();
+                let mut slots = vec![slot(0, 16, usize::MAX)];
+                let mut s = Sampler::greedy(UnmaskMode::Parallel { threshold: *thr });
+                s.unmask(&mut t, logits, 1, 16, 8, &mut slots);
+                for i in 0..16 {
+                    if toks[i] != MASK && t[i] != toks[i] {
+                        return Err(format!("pos {i} changed from {} to {}", toks[i], t[i]));
+                    }
+                    if toks[i] == MASK && t[i] == BOS {
+                        return Err("emitted BOS".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,156 @@
+//! Batch-group decode loop: drives a `Method` + `Sampler` over one batch of
+//! requests until every slot finishes (or a step budget runs out).
+//!
+//! This is the unit the benches use directly; the serving scheduler reuses
+//! the same per-step pieces but interleaves slot joins between steps.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::model::tokenizer::MASK;
+use crate::runtime::engine::Engine;
+
+use super::decode::{slot_done, Sampler};
+use super::methods::{Method, StepOut};
+use super::request::SlotState;
+
+/// Outcome of decoding one group to completion.
+#[derive(Debug, Clone)]
+pub struct GroupOutcome {
+    pub tokens: Vec<i32>,
+    pub steps: usize,
+    pub refreshes: u64,
+    /// Wall time of each step (ms); step 0 is the prefill (TTFT).
+    pub step_ms: Vec<f64>,
+    /// Tokens decoded per slot.
+    pub decoded: Vec<usize>,
+    /// TTFT per slot (ms) — time to the first step's logits.
+    pub ttft_ms: Vec<f64>,
+    pub total_ms: f64,
+}
+
+impl GroupOutcome {
+    /// Aggregate decode throughput: tokens committed per second over the
+    /// whole group decode (the paper's TPS metric).
+    pub fn tps(&self) -> f64 {
+        let toks: usize = self.decoded.iter().sum();
+        if self.total_ms <= 0.0 {
+            return 0.0;
+        }
+        toks as f64 / (self.total_ms / 1e3)
+    }
+}
+
+/// Decode a whole group to completion.
+pub fn run_group(
+    engine: &Engine,
+    method: &mut Method,
+    sampler: &mut Sampler,
+    tokens: &mut Vec<i32>,
+    slots: &mut Vec<SlotState>,
+    max_steps: usize,
+) -> Result<GroupOutcome> {
+    let (b, n, v) = method.geometry();
+    anyhow::ensure!(tokens.len() == b * n, "token buffer mismatch");
+    method.invalidate();
+
+    let t_start = Instant::now();
+    let mut step_ms = Vec::new();
+    let mut ttft_ms = vec![f64::NAN; b];
+    let initial_masks: Vec<usize> = (0..b)
+        .map(|bi| tokens[bi * n..(bi + 1) * n].iter().filter(|&&t| t == MASK).count())
+        .collect();
+
+    let mut steps = 0usize;
+    while steps < max_steps {
+        let all_done = (0..b).all(|bi| slot_done(tokens, n, bi, &slots[bi]));
+        if all_done {
+            break;
+        }
+        let t0 = Instant::now();
+        let out: StepOut = method.step(engine, tokens, slots)?;
+        match out {
+            StepOut { logits: Some(logits), .. } => {
+                sampler.unmask(tokens, &logits, b, n, v, slots);
+            }
+            StepOut { new_tokens: Some(nt), .. } => {
+                // In-graph decoding: infer per-slot commits from the diff.
+                for bi in 0..b {
+                    if !slots[bi].occupied {
+                        continue;
+                    }
+                    let mut dec = Vec::new();
+                    for p in 0..n {
+                        if tokens[bi * n + p] == MASK && nt[bi * n + p] != MASK {
+                            dec.push(p);
+                        }
+                    }
+                    slots[bi].decoded_since_refresh.extend(dec.iter().copied());
+                    slots[bi].last_decoded = dec;
+                    slots[bi].steps += 1;
+                }
+                *tokens = nt;
+            }
+            _ => anyhow::bail!("step produced neither logits nor tokens"),
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        step_ms.push(ms);
+        if steps == 0 {
+            for bi in 0..b {
+                if slots[bi].occupied {
+                    ttft_ms[bi] = ms;
+                    slots[bi].ttft_ms = Some(ms);
+                }
+            }
+        }
+        steps += 1;
+    }
+
+    let decoded: Vec<usize> = (0..b)
+        .map(|bi| {
+            let left =
+                tokens[bi * n..(bi + 1) * n].iter().filter(|&&t| t == MASK).count();
+            initial_masks[bi] - left
+        })
+        .collect();
+    Ok(GroupOutcome {
+        tokens: tokens.clone(),
+        steps,
+        refreshes: method.refreshes,
+        step_ms,
+        decoded,
+        ttft_ms,
+        total_ms: t_start.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// Build a `[B, N]` token buffer + slots from up to B samples.
+pub fn pack_group(
+    samples: &[crate::model::tasks::Sample],
+    batch: usize,
+    seq_len: usize,
+    block_len: usize,
+) -> (Vec<i32>, Vec<SlotState>) {
+    use crate::model::tokenizer::PAD;
+    let mut tokens = vec![PAD; batch * seq_len];
+    let mut slots = Vec::with_capacity(batch);
+    for bi in 0..batch {
+        if bi < samples.len() {
+            let s = &samples[bi];
+            tokens[bi * seq_len..(bi + 1) * seq_len].copy_from_slice(&s.tokens);
+            let req = super::request::Request {
+                id: bi as u64,
+                tokens: s.tokens.clone(),
+                prompt_len: s.prompt_len,
+                answer: Some(s.answer.clone()),
+                task: Some(s.task),
+                submitted: Instant::now(),
+            };
+            slots.push(SlotState::assign(&req, block_len));
+        } else {
+            slots.push(SlotState::empty());
+        }
+    }
+    (tokens, slots)
+}

@@ -1,0 +1,376 @@
+//! Cache methods: SPA-Cache plus every baseline the paper compares against.
+//!
+//! A `Method` owns a step executable, an optional refresh executable, the
+//! per-group cache state, and (for the manual-index substrate) the host-side
+//! index-selection policy.  The mapping to the paper:
+//!
+//! | paper method        | step variant            | index policy            |
+//! |---------------------|-------------------------|-------------------------|
+//! | vanilla             | `<m>__vanilla`          | —                       |
+//! | SPA-Cache (ours)    | `<m>__spa_default`      | in-graph singular proxy |
+//! | dLLM-Cache          | `<m>__spa_value_u25`    | in-graph value proxy    |
+//! | Fast-dLLM           | `<m>__manual_k{B}`      | active semi-AR block    |
+//! | dKV-Cache           | `<m>__manual_k{B}`      | locality window         |
+//! | d2Cache (analogue)  | `<m>__manual_k{B}`      | low-confidence + window |
+//! | Elastic (analogue)  | `<m>__manual_k{B}`      | window + eager refresh  |
+//! | SPA multistep       | `<m>__multistep_default`| in-graph (fused steps)  |
+//!
+//! d2Cache/Elastic-Cache rank positions with attention-weight statistics the
+//! fused attention path does not materialise (the paper's Table 9 point);
+//! our analogues substitute confidence/locality signals — see DESIGN.md §2.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+use xla::PjRtBuffer;
+
+use crate::runtime::engine::{Engine, LoadedVariant};
+use crate::util::topk::bottom_k_asc;
+
+use super::request::SlotState;
+
+/// Which cache strategy a `Method` implements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MethodSpec {
+    /// Full recompute every step (paper baseline).
+    Vanilla,
+    /// Any `spa`-kind variant pair (`name` + `name_refresh`): SPA-Cache
+    /// itself, the dLLM-Cache value identifier, ablation identifiers, ranks.
+    Spa { variant: String, refresh_interval: usize },
+    /// Manual-index substrate with a host-side selection policy.
+    Manual { k: usize, policy: IndexPolicy, refresh_interval: usize },
+    /// Fused multi-step SPA with in-graph unmasking (perf variant).
+    Multistep,
+}
+
+/// Host-side index selection for the `manual` substrate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum IndexPolicy {
+    /// Fast-dLLM: the active semi-AR block.
+    Block,
+    /// dKV-Cache: window around recently decoded positions.
+    Window,
+    /// d2Cache analogue: lowest-confidence positions + recent decodes.
+    LowConfidence,
+}
+
+impl MethodSpec {
+    /// Standard method lineup by paper name.
+    pub fn by_name(name: &str, block_k: usize) -> Result<MethodSpec> {
+        Ok(match name {
+            "vanilla" => MethodSpec::Vanilla,
+            "spa" | "ours" => MethodSpec::Spa { variant: "spa_default".into(), refresh_interval: 0 },
+            "dllm_cache" => MethodSpec::Spa { variant: "spa_value_u25".into(), refresh_interval: 16 },
+            "fast_dllm" => MethodSpec::Manual { k: block_k, policy: IndexPolicy::Block, refresh_interval: 0 },
+            "dkv_cache" => MethodSpec::Manual { k: block_k, policy: IndexPolicy::Window, refresh_interval: 16 },
+            "d2_cache" => MethodSpec::Manual { k: block_k, policy: IndexPolicy::LowConfidence, refresh_interval: 16 },
+            "elastic_cache" => MethodSpec::Manual { k: block_k, policy: IndexPolicy::Window, refresh_interval: 8 },
+            "multistep" => MethodSpec::Multistep,
+            other => anyhow::bail!("unknown method '{other}'"),
+        })
+    }
+}
+
+/// Output of one engine step as seen by the decode loop.
+pub struct StepOut {
+    /// Host logits `[B, N, V]`; `None` for in-graph decoding (multistep).
+    pub logits: Option<Vec<f32>>,
+    /// Replacement tokens (multistep only).
+    pub new_tokens: Option<Vec<i32>>,
+    pub was_refresh: bool,
+}
+
+/// A cache method bound to one model + engine, holding group cache state.
+pub struct Method {
+    pub spec: MethodSpec,
+    pub model: String,
+    step_var: Rc<LoadedVariant>,
+    refresh_var: Option<Rc<LoadedVariant>>,
+    /// Device-resident cache buffers, in the step variant's trailing
+    /// input order (never copied back to the host — see engine perf notes).
+    caches: Option<Vec<PjRtBuffer>>,
+    steps_since_refresh: usize,
+    pub needs_refresh: bool,
+    pub refreshes: u64,
+    pub steps: u64,
+    /// Last-step per-position confidence (for the LowConfidence policy).
+    last_conf: Vec<f32>,
+    rr_cursor: usize,
+}
+
+impl Method {
+    pub fn new(engine: &Engine, model: &str, spec: MethodSpec) -> Result<Method> {
+        let (step_name, refresh_name): (String, Option<String>) = match &spec {
+            MethodSpec::Vanilla => (format!("{model}__vanilla"), None),
+            MethodSpec::Spa { variant, .. } => (
+                format!("{model}__{variant}"),
+                Some(format!("{model}__{variant}_refresh")),
+            ),
+            MethodSpec::Manual { k, .. } => (
+                format!("{model}__manual_k{k}"),
+                Some(format!("{model}__manual_full")),
+            ),
+            MethodSpec::Multistep => (
+                format!("{model}__multistep_default"),
+                Some(format!("{model}__spa_default_refresh")),
+            ),
+        };
+        let step_var = engine.load_variant(&step_name)?;
+        let refresh_var = match refresh_name {
+            Some(n) => Some(engine.load_variant(&n)?),
+            None => None,
+        };
+        Ok(Method {
+            spec,
+            model: model.to_string(),
+            step_var,
+            refresh_var,
+            caches: None,
+            steps_since_refresh: 0,
+            needs_refresh: true,
+            refreshes: 0,
+            steps: 0,
+            last_conf: Vec::new(),
+            rr_cursor: 0,
+        })
+    }
+
+    pub fn geometry(&self) -> (usize, usize, usize) {
+        let v = &self.step_var.info;
+        let vocab = v
+            .outputs
+            .iter()
+            .chain(v.inputs.iter())
+            .find(|o| o.name == "logits")
+            .map(|o| o.shape[2])
+            .unwrap_or(64);
+        (v.batch, v.seq_len, vocab)
+    }
+
+    pub fn step_variant(&self) -> &LoadedVariant {
+        &self.step_var
+    }
+
+    /// Drop all cache state (new batch composition → must refresh).
+    pub fn invalidate(&mut self) {
+        self.caches = None;
+        self.needs_refresh = true;
+        self.steps_since_refresh = 0;
+    }
+
+    /// Run one decode step (possibly a refresh) for the whole group.
+    pub fn step(
+        &mut self,
+        engine: &Engine,
+        tokens: &[i32],
+        slots: &[SlotState],
+    ) -> Result<StepOut> {
+        let (b, n, _v) = self.geometry();
+        anyhow::ensure!(tokens.len() == b * n, "token buffer shape mismatch");
+        let tok_lit = engine.upload_i32(&[b, n], tokens)?;
+
+        let interval = match &self.spec {
+            MethodSpec::Spa { refresh_interval, .. } => *refresh_interval,
+            MethodSpec::Manual { refresh_interval, .. } => *refresh_interval,
+            _ => 0,
+        };
+        let due = interval > 0 && self.steps_since_refresh >= interval;
+        let refresh = self.needs_refresh || due || self.caches.is_none();
+
+        let spec = self.spec.clone();
+        let out = match &spec {
+            MethodSpec::Vanilla => {
+                let outs = engine.run_buffers(&self.step_var, &[&tok_lit])?;
+                StepOut {
+                    logits: Some(engine.read_f32(&outs[0])?),
+                    new_tokens: None,
+                    was_refresh: false,
+                }
+            }
+            MethodSpec::Spa { .. } | MethodSpec::Multistep if refresh => {
+                let rv = self.refresh_var.as_ref().context("refresh variant")?;
+                let mut outs = engine.run_buffers(rv, &[&tok_lit])?;
+                let logits = engine.read_f32(&outs[0])?;
+                self.caches = Some(outs.drain(1..).collect());
+                self.refreshes += 1;
+                self.steps_since_refresh = 0;
+                self.needs_refresh = false;
+                StepOut { logits: Some(logits), new_tokens: None, was_refresh: true }
+            }
+            MethodSpec::Spa { .. } => {
+                let caches = self.caches.as_ref().unwrap();
+                let mut inputs: Vec<&PjRtBuffer> = vec![&tok_lit];
+                inputs.extend(caches.iter());
+                let mut outs = engine.run_buffers(&self.step_var, &inputs)?;
+                let logits = engine.read_f32(&outs[0])?;
+                self.caches = Some(outs.drain(1..).collect());
+                self.steps_since_refresh += 1;
+                StepOut { logits: Some(logits), new_tokens: None, was_refresh: false }
+            }
+            MethodSpec::Multistep => {
+                let caches = self.caches.as_ref().unwrap();
+                let mut inputs: Vec<&PjRtBuffer> = vec![&tok_lit];
+                inputs.extend(caches.iter());
+                let mut outs = engine.run_buffers(&self.step_var, &inputs)?;
+                let new_tokens = engine.read_i32(&outs[0])?;
+                self.caches = Some(outs.drain(1..).collect());
+                self.steps_since_refresh += 1;
+                StepOut { logits: None, new_tokens: Some(new_tokens), was_refresh: false }
+            }
+            MethodSpec::Manual { k, policy, .. } => {
+                if refresh {
+                    let rv = self.refresh_var.as_ref().context("manual_full")?;
+                    let full_k = rv.info.manual_k;
+                    let idx: Vec<i32> =
+                        (0..b).flat_map(|_| (0..full_k as i32).collect::<Vec<_>>()).collect();
+                    let idx_lit = engine.upload_i32(&[b, full_k], &idx)?;
+                    let caches = self.zero_caches(engine, rv)?;
+                    let mut inputs: Vec<&PjRtBuffer> = vec![&tok_lit, &idx_lit];
+                    inputs.extend(caches.iter());
+                    let mut outs = engine.run_buffers(rv, &inputs)?;
+                    let logits = engine.read_f32(&outs[0])?;
+                    self.caches = Some(outs.drain(1..).collect());
+                    self.refreshes += 1;
+                    self.steps_since_refresh = 0;
+                    self.needs_refresh = false;
+                    StepOut { logits: Some(logits), new_tokens: None, was_refresh: true }
+                } else {
+                    let (k, policy) = (*k, *policy);
+                    let idx = self.select_indices(k, policy, tokens, slots, b, n);
+                    let idx_lit = engine.upload_i32(&[b, k], &idx)?;
+                    let caches = self.caches.as_ref().unwrap();
+                    let mut inputs: Vec<&PjRtBuffer> = vec![&tok_lit, &idx_lit];
+                    inputs.extend(caches.iter());
+                    let mut outs = engine.run_buffers(&self.step_var, &inputs)?;
+                    let logits = engine.read_f32(&outs[0])?;
+                    self.caches = Some(outs.drain(1..).collect());
+                    self.steps_since_refresh += 1;
+                    StepOut { logits: Some(logits), new_tokens: None, was_refresh: false }
+                }
+            }
+        };
+        self.steps += 1;
+        if let Some(l) = &out.logits {
+            self.update_confidence(l, b, n);
+        }
+        Ok(out)
+    }
+
+    /// Zero-initialised cache buffers matching a variant's cache inputs
+    /// (everything after tokens/idx).
+    fn zero_caches(&self, engine: &Engine, var: &LoadedVariant) -> Result<Vec<PjRtBuffer>> {
+        var.info
+            .inputs
+            .iter()
+            .filter(|i| i.name != "tokens" && i.name != "idx")
+            .map(|i| engine.upload_zeros_f32(&i.shape))
+            .collect()
+    }
+
+    /// Host-side index selection for the manual substrate.
+    fn select_indices(
+        &mut self,
+        k: usize,
+        policy: IndexPolicy,
+        tokens: &[i32],
+        slots: &[SlotState],
+        b: usize,
+        n: usize,
+    ) -> Vec<i32> {
+        use crate::model::tokenizer::MASK;
+        let mut out = Vec::with_capacity(b * k);
+        for bi in 0..b {
+            let slot = &slots[bi.min(slots.len() - 1)];
+            let row = &tokens[bi * n..(bi + 1) * n];
+            let mut picked: Vec<usize> = Vec::with_capacity(k);
+            let mut seen = vec![false; n];
+            let mut push = |p: usize, picked: &mut Vec<usize>, seen: &mut Vec<bool>| {
+                if p < n && !seen[p] && picked.len() < k {
+                    seen[p] = true;
+                    picked.push(p);
+                }
+            };
+            match policy {
+                IndexPolicy::Block => {
+                    let start = slot.block_start.min(n.saturating_sub(1));
+                    for p in start..(start + k).min(n) {
+                        push(p, &mut picked, &mut seen);
+                    }
+                }
+                IndexPolicy::Window => {
+                    // Recently decoded positions ± 2, most recent first.
+                    for &p in slot.last_decoded.iter().rev() {
+                        for d in 0..=2usize {
+                            push(p.saturating_sub(d), &mut picked, &mut seen);
+                            push(p + d, &mut picked, &mut seen);
+                        }
+                    }
+                }
+                IndexPolicy::LowConfidence => {
+                    for &p in slot.last_decoded.iter().rev() {
+                        push(p, &mut picked, &mut seen);
+                    }
+                    if !self.last_conf.is_empty() {
+                        let conf_row = &self.last_conf[bi * n..(bi + 1) * n];
+                        // masked positions by ascending confidence
+                        let masked: Vec<usize> =
+                            (0..n).filter(|&p| row[p] == MASK).collect();
+                        let scores: Vec<f32> =
+                            masked.iter().map(|&p| conf_row[p]).collect();
+                        for j in bottom_k_asc(&scores, k) {
+                            push(masked[j], &mut picked, &mut seen);
+                        }
+                    }
+                }
+            }
+            // Pad with a round-robin cursor so stale rows refresh eventually.
+            while picked.len() < k {
+                let p = self.rr_cursor % n;
+                self.rr_cursor = self.rr_cursor.wrapping_add(1);
+                if !seen[p] {
+                    seen[p] = true;
+                    picked.push(p);
+                } else if seen.iter().all(|&s| s) {
+                    picked.push(p); // everything selected; duplicates are benign
+                }
+            }
+            out.extend(picked.into_iter().map(|p| p as i32));
+        }
+        out
+    }
+
+    /// Cache per-position top-1 softmax confidence for the next selection.
+    fn update_confidence(&mut self, logits: &[f32], b: usize, n: usize) {
+        let v = logits.len() / (b * n);
+        self.last_conf.resize(b * n, 0.0);
+        for p in 0..b * n {
+            let row = &logits[p * v..(p + 1) * v];
+            let max = row.iter().cloned().fold(f32::MIN, f32::max);
+            let mut denom = 0.0f32;
+            let mut top = 0.0f32;
+            for &x in row {
+                let e = (x - max).exp();
+                denom += e;
+                if e > top {
+                    top = e;
+                }
+            }
+            self.last_conf[p] = top / denom;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_spec_names() {
+        assert_eq!(MethodSpec::by_name("vanilla", 16).unwrap(), MethodSpec::Vanilla);
+        assert!(matches!(
+            MethodSpec::by_name("fast_dllm", 8).unwrap(),
+            MethodSpec::Manual { k: 8, policy: IndexPolicy::Block, .. }
+        ));
+        assert!(MethodSpec::by_name("nope", 8).is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Serving metrics: request latency/TTFT/throughput aggregation plus a
+//! Prometheus-style text dump (scrape endpoint substrate).
+
+use std::time::Instant;
+
+use crate::util::stats::{Summary, Welford};
+
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    pub requests_submitted: u64,
+    pub requests_completed: u64,
+    pub tokens_decoded: u64,
+    pub steps: u64,
+    pub refreshes: u64,
+    pub ttft: Welford,
+    pub latency: Welford,
+    ttft_samples: Vec<f64>,
+    latency_samples: Vec<f64>,
+    pub queue_depth: usize,
+    pub active_slots: usize,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            started: Instant::now(),
+            requests_submitted: 0,
+            requests_completed: 0,
+            tokens_decoded: 0,
+            steps: 0,
+            refreshes: 0,
+            ttft: Welford::default(),
+            latency: Welford::default(),
+            ttft_samples: Vec::new(),
+            latency_samples: Vec::new(),
+            queue_depth: 0,
+            active_slots: 0,
+        }
+    }
+}
+
+impl Metrics {
+    pub fn record_completion(&mut self, ttft_ms: f64, latency_ms: f64, decoded: usize) {
+        self.requests_completed += 1;
+        self.tokens_decoded += decoded as u64;
+        if ttft_ms.is_finite() {
+            self.ttft.push(ttft_ms);
+            self.ttft_samples.push(ttft_ms);
+        }
+        self.latency.push(latency_ms);
+        self.latency_samples.push(latency_ms);
+    }
+
+    /// Decoded tokens per wall-clock second since startup.
+    pub fn tps(&self) -> f64 {
+        let dt = self.started.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.tokens_decoded as f64 / dt
+        }
+    }
+
+    pub fn latency_summary(&self) -> Option<Summary> {
+        if self.latency_samples.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.latency_samples))
+        }
+    }
+
+    pub fn ttft_summary(&self) -> Option<Summary> {
+        if self.ttft_samples.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.ttft_samples))
+        }
+    }
+
+    /// Prometheus-style exposition text.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let kv = [
+            ("spa_requests_submitted", self.requests_submitted as f64),
+            ("spa_requests_completed", self.requests_completed as f64),
+            ("spa_tokens_decoded", self.tokens_decoded as f64),
+            ("spa_steps_total", self.steps as f64),
+            ("spa_refreshes_total", self.refreshes as f64),
+            ("spa_queue_depth", self.queue_depth as f64),
+            ("spa_active_slots", self.active_slots as f64),
+            ("spa_tps", self.tps()),
+            ("spa_ttft_ms_mean", self.ttft.mean()),
+            ("spa_latency_ms_mean", self.latency.mean()),
+        ];
+        for (k, v) in kv {
+            s.push_str(&format!("{k} {v}\n"));
+        }
+        if let Some(l) = self.latency_summary() {
+            s.push_str(&format!("spa_latency_ms_p50 {}\n", l.p50));
+            s.push_str(&format!("spa_latency_ms_p99 {}\n", l.p99));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let mut m = Metrics::default();
+        m.record_completion(10.0, 100.0, 64);
+        m.record_completion(20.0, 200.0, 32);
+        assert_eq!(m.requests_completed, 2);
+        assert_eq!(m.tokens_decoded, 96);
+        assert!((m.ttft.mean() - 15.0).abs() < 1e-9);
+        let text = m.render();
+        assert!(text.contains("spa_requests_completed 2"));
+        assert!(text.contains("spa_latency_ms_p50"));
+    }
+
+    #[test]
+    fn nan_ttft_skipped() {
+        let mut m = Metrics::default();
+        m.record_completion(f64::NAN, 50.0, 1);
+        assert_eq!(m.ttft.count(), 0);
+        assert_eq!(m.latency.count(), 1);
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator — the serving-side system contribution.
+//!
+//! Pipeline: `server` (TCP frontend) → `batcher` (admission) → `scheduler`
+//! (continuous batching over fixed slots) → `methods` (cache strategies:
+//! SPA-Cache + all paper baselines) → `decode` (unmasking policies) with
+//! `metrics` throughout.  `group` is the batch-at-once loop the benches use.
+
+pub mod batcher;
+pub mod decode;
+pub mod group;
+pub mod metrics;
+pub mod methods;
+pub mod request;
+pub mod scheduler;
+pub mod server;

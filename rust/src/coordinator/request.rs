@@ -1,0 +1,86 @@
+//! Request/response types of the serving API.
+
+use std::time::Instant;
+
+use crate::model::tasks::Task;
+
+/// A generation request entering the router.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Full sequence: BOS + prompt tokens, generation region MASKed, PAD tail.
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// Optional ground truth (benches / accuracy accounting).
+    pub answer: Option<String>,
+    pub task: Option<Task>,
+    pub submitted: Instant,
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// Tokens decoded (MASK positions committed).
+    pub decoded: usize,
+    pub steps: usize,
+    pub ttft_ms: f64,
+    pub latency_ms: f64,
+}
+
+/// Per-request decode progress while resident in a batch slot.
+#[derive(Debug, Clone)]
+pub struct SlotState {
+    pub occupied: bool,
+    pub request_id: u64,
+    pub prompt_len: usize,
+    /// End of the generation region (exclusive).
+    pub gen_end: usize,
+    /// Semi-AR active block cursor (Fast-dLLM).
+    pub block_start: usize,
+    pub block_len: usize,
+    /// Positions decoded on the most recent step (locality heuristics).
+    pub last_decoded: Vec<usize>,
+    /// All positions decoded since the last full refresh.
+    pub decoded_since_refresh: Vec<usize>,
+    pub steps: usize,
+    pub ttft_ms: Option<f64>,
+    pub started: Option<Instant>,
+}
+
+impl SlotState {
+    pub fn empty() -> SlotState {
+        SlotState {
+            occupied: false,
+            request_id: 0,
+            prompt_len: 0,
+            gen_end: 0,
+            block_start: 0,
+            block_len: usize::MAX,
+            last_decoded: Vec::new(),
+            decoded_since_refresh: Vec::new(),
+            steps: 0,
+            ttft_ms: None,
+            started: None,
+        }
+    }
+
+    pub fn assign(req: &Request, block_len: usize) -> SlotState {
+        SlotState {
+            occupied: true,
+            request_id: req.id,
+            prompt_len: req.prompt_len,
+            gen_end: req.tokens.len(),
+            block_start: req.prompt_len,
+            block_len,
+            last_decoded: Vec::new(),
+            decoded_since_refresh: Vec::new(),
+            steps: 0,
+            ttft_ms: None,
+            started: Some(Instant::now()),
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Continuous-batching scheduler: the serving loop.
+//!
+//! Single-threaded over the engine (PJRT handles intra-op parallelism);
+//! requests arrive over an mpsc channel, responses leave through per-request
+//! reply channels.  Slot lifecycle:
+//!
+//!   queue → [admit] → slot (forces cache refresh) → steps → done → response
+//!
+//! Admission invalidates the group caches (the diffusion state is batch-
+//! global), so the batcher controls admission timing (see `batcher.rs`).
+
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::model::tasks::extract_answer;
+use crate::model::tokenizer::{Tokenizer, PAD};
+use crate::runtime::engine::Engine;
+use crate::{debug, info};
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::decode::{slot_done, Sampler};
+use super::metrics::Metrics;
+use super::methods::{Method, StepOut};
+use super::request::{Request, Response, SlotState};
+
+pub enum Command {
+    Submit(Request, Sender<Response>),
+    /// Render metrics into the reply channel.
+    Stats(Sender<String>),
+    Shutdown,
+}
+
+pub struct Scheduler {
+    engine: Engine,
+    method: Method,
+    sampler: Sampler,
+    batcher: Batcher,
+    tokenizer: Tokenizer,
+    tokens: Vec<i32>,
+    slots: Vec<SlotState>,
+    replies: Vec<Option<Sender<Response>>>,
+    requests: Vec<Option<Request>>,
+    /// Reply channels for requests still in the batcher queue, by id.
+    pending: Vec<(u64, Sender<Response>)>,
+    pub metrics: Metrics,
+    max_steps_per_request: usize,
+    default_block_len: usize,
+}
+
+impl Scheduler {
+    pub fn new(
+        engine: Engine,
+        method: Method,
+        sampler: Sampler,
+        batcher_cfg: BatcherConfig,
+        max_steps_per_request: usize,
+    ) -> Scheduler {
+        let (b, n, _) = method.geometry();
+        let tokenizer = Tokenizer::from_manifest(&engine.manifest.charset);
+        Scheduler {
+            engine,
+            method,
+            sampler,
+            batcher: Batcher::new(BatcherConfig { batch: b, ..batcher_cfg }),
+            tokenizer,
+            tokens: vec![PAD; b * n],
+            slots: vec![SlotState::empty(); b],
+            replies: vec![None; b],
+            requests: vec![None; b],
+            pending: Vec::new(),
+            metrics: Metrics::default(),
+            max_steps_per_request,
+            default_block_len: 16,
+        }
+    }
+
+    /// Run until `Shutdown` (or channel close) — the server's main loop.
+    pub fn run(&mut self, rx: Receiver<Command>) -> Result<()> {
+        loop {
+            let busy =
+                self.slots.iter().any(|s| s.occupied) || self.batcher.queue_len() > 0;
+            // Drain commands; block only when idle.
+            loop {
+                let cmd = if busy {
+                    match rx.try_recv() {
+                        Ok(c) => Some(c),
+                        Err(TryRecvError::Empty) => None,
+                        Err(TryRecvError::Disconnected) => return Ok(()),
+                    }
+                } else {
+                    match rx.recv() {
+                        Ok(c) => Some(c),
+                        Err(_) => return Ok(()),
+                    }
+                };
+                match cmd {
+                    Some(Command::Submit(req, reply)) => {
+                        self.metrics.requests_submitted += 1;
+                        self.pending.push((req.id, reply));
+                        self.batcher.submit(req);
+                        if !busy {
+                            break; // re-evaluate busyness with the new work
+                        }
+                    }
+                    Some(Command::Stats(reply)) => {
+                        let _ = reply.send(self.metrics.render());
+                    }
+                    Some(Command::Shutdown) => return Ok(()),
+                    None => break,
+                }
+            }
+            self.admit_waiting();
+            if self.slots.iter().any(|s| s.occupied) {
+                self.step()?;
+            }
+            self.metrics.queue_depth = self.batcher.queue_len();
+            self.metrics.active_slots = self.slots.iter().filter(|s| s.occupied).count();
+        }
+    }
+
+    fn admit_waiting(&mut self) {
+        let free: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| !self.slots[i].occupied).collect();
+        if free.is_empty() {
+            return;
+        }
+        let admitted = self.batcher.admit(free.len(), Instant::now());
+        if admitted.is_empty() {
+            return;
+        }
+        let (_, n, _) = self.method.geometry();
+        for (slot_i, req) in free.into_iter().zip(admitted) {
+            let mut row = vec![PAD; n];
+            let len = req.tokens.len().min(n);
+            row[..len].copy_from_slice(&req.tokens[..len]);
+            self.tokens[slot_i * n..(slot_i + 1) * n].copy_from_slice(&row);
+            let block =
+                req.task.map(|t| t.block_len()).unwrap_or(self.default_block_len);
+            self.slots[slot_i] = SlotState::assign(&req, block);
+            if let Some(pos) = self.pending.iter().position(|(id, _)| *id == req.id) {
+                let (_, ch) = self.pending.remove(pos);
+                self.replies[slot_i] = Some(ch);
+            }
+            self.requests[slot_i] = Some(req);
+            debug!("sched", "admitted request into slot {slot_i}");
+        }
+        // Any change in group composition invalidates the caches.
+        self.method.invalidate();
+    }
+
+    fn step(&mut self) -> Result<()> {
+        let (b, n, v) = self.method.geometry();
+        let t0 = Instant::now();
+        let out: StepOut = self.method.step(&self.engine, &self.tokens, &self.slots)?;
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.metrics.steps += 1;
+        if out.was_refresh {
+            self.metrics.refreshes += 1;
+        }
+        match out {
+            StepOut { logits: Some(logits), .. } => {
+                self.sampler.unmask(&mut self.tokens, &logits, b, n, v, &mut self.slots);
+            }
+            StepOut { new_tokens: Some(nt), .. } => {
+                for bi in 0..b {
+                    if !self.slots[bi].occupied {
+                        continue;
+                    }
+                    self.slots[bi].steps += 1;
+                }
+                self.tokens = nt;
+            }
+            _ => {}
+        }
+        // First logits after admission = TTFT for newly admitted slots.
+        for s in self.slots.iter_mut().filter(|s| s.occupied) {
+            if s.ttft_ms.is_none() {
+                s.ttft_ms = Some(step_ms);
+            }
+        }
+        // Completion scan.
+        for bi in 0..b {
+            let done = self.slots[bi].occupied
+                && (slot_done(&self.tokens, n, bi, &self.slots[bi])
+                    || self.slots[bi].steps >= self.max_steps_per_request);
+            if !done {
+                continue;
+            }
+            let slot = std::mem::replace(&mut self.slots[bi], SlotState::empty());
+            let req = self.requests[bi].take();
+            let row = self.tokens[bi * n..(bi + 1) * n].to_vec();
+            // Count commits from the original mask count.
+            let decoded = req
+                .as_ref()
+                .map(|r| {
+                    r.tokens
+                        .iter()
+                        .filter(|&&t| t == crate::model::tokenizer::MASK)
+                        .count()
+                        .saturating_sub(
+                            row.iter().filter(|&&t| t == crate::model::tokenizer::MASK).count(),
+                        )
+                })
+                .unwrap_or(slot.decoded_since_refresh.len());
+            let latency_ms =
+                slot.started.map(|t| t.elapsed().as_secs_f64() * 1e3).unwrap_or(f64::NAN);
+            let ttft = slot.ttft_ms.unwrap_or(f64::NAN);
+            self.metrics.record_completion(ttft, latency_ms, decoded);
+            let text = extract_answer(&self.tokenizer, &row, slot.prompt_len);
+            let resp = Response {
+                id: req.as_ref().map(|r| r.id).unwrap_or(slot.request_id),
+                text,
+                tokens: row,
+                prompt_len: slot.prompt_len,
+                decoded,
+                steps: slot.steps,
+                ttft_ms: ttft,
+                latency_ms,
+            };
+            if let Some(ch) = self.replies[bi].take() {
+                let _ = ch.send(resp);
+            }
+            for t in &mut self.tokens[bi * n..(bi + 1) * n] {
+                *t = PAD;
+            }
+            info!("sched", "slot {bi} finished in {} steps", slot.steps);
+        }
+        Ok(())
+    }
+}

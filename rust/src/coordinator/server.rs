@@ -1,0 +1,209 @@
+//! TCP serving frontend: newline-delimited JSON over plain sockets
+//! (tokio is unavailable offline; connections are handled by the
+//! `util::threadpool` substrate, generation by the scheduler thread).
+//!
+//! Protocol (one JSON object per line):
+//!   → {"op":"generate","id":1,"task":"gsm8k_s","prompt":"...","gen_len":64}
+//!   ← {"id":1,"text":"8","steps":12,"ttft_ms":41.2,"latency_ms":180.3}
+//!   → {"op":"stats"}          ← prometheus-style text in {"stats": "..."}
+//!   → {"op":"shutdown"}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::model::tasks::Task;
+use crate::model::tokenizer::{Tokenizer, BOS, MASK, PAD};
+use crate::util::json::{parse, Json};
+use crate::util::threadpool::ThreadPool;
+use crate::info;
+
+use super::request::Request;
+use super::scheduler::Command;
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Build a Request from a (task, prompt, gen_len) triple.
+pub fn build_request(
+    tok: &Tokenizer,
+    seq_len: usize,
+    task: Option<Task>,
+    prompt: &str,
+    gen_len: usize,
+) -> Result<Request> {
+    let mut ids = vec![BOS];
+    ids.extend(tok.encode(prompt)?);
+    let prompt_len = ids.len();
+    anyhow::ensure!(prompt_len + 1 < seq_len, "prompt too long");
+    let gen = gen_len.min(seq_len - prompt_len);
+    let mut tokens = vec![PAD; seq_len];
+    tokens[..prompt_len].copy_from_slice(&ids);
+    for t in tokens.iter_mut().take(prompt_len + gen).skip(prompt_len) {
+        *t = MASK;
+    }
+    Ok(Request {
+        id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+        tokens,
+        prompt_len,
+        answer: None,
+        task,
+        submitted: Instant::now(),
+    })
+}
+
+/// Serve until a client sends `{"op":"shutdown"}`.
+///
+/// The accept loop polls a non-blocking listener so a shutdown requested by
+/// a connection handler (shared atomic flag) is honoured promptly even when
+/// no further connections arrive.
+pub fn serve(addr: &str, seq_len: usize, charset: &str, cmd_tx: Sender<Command>) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    listener.set_nonblocking(true)?;
+    info!("server", "listening on {addr}");
+    let pool = ThreadPool::new(8);
+    let tok = Arc::new(Tokenizer::from_manifest(charset));
+    let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nonblocking(false);
+                let tx = cmd_tx.clone();
+                let tok = Arc::clone(&tok);
+                let shutdown = Arc::clone(&shutdown);
+                pool.execute(move || {
+                    if handle_conn(stream, seq_len, &tok, tx).unwrap_or(false) {
+                        shutdown.store(true, Ordering::Relaxed);
+                    }
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(_) => continue,
+        }
+    }
+    drop(pool); // join handlers so in-flight replies finish
+    let _ = cmd_tx.send(Command::Shutdown);
+    Ok(())
+}
+
+/// Returns Ok(true) if the client requested shutdown.
+fn handle_conn(
+    stream: TcpStream,
+    seq_len: usize,
+    tok: &Tokenizer,
+    cmd_tx: Sender<Command>,
+) -> Result<bool> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let msg = match parse(&line) {
+            Ok(m) => m,
+            Err(e) => {
+                writeln!(writer, r#"{{"error":"bad json: {e}"}}"#)?;
+                continue;
+            }
+        };
+        match msg.get("op").and_then(|o| o.as_str()).unwrap_or("generate") {
+            "shutdown" => {
+                writeln!(writer, r#"{{"ok":true}}"#)?;
+                return Ok(true);
+            }
+            "stats" => {
+                let (tx, rx) = channel();
+                cmd_tx.send(Command::Stats(tx)).ok();
+                let text = rx.recv().unwrap_or_default();
+                let out = Json::obj(vec![("stats", Json::Str(text))]);
+                writeln!(writer, "{}", out.to_string())?;
+            }
+            _ => {
+                let prompt = msg.get("prompt").and_then(|p| p.as_str()).unwrap_or("");
+                let task = msg
+                    .get("task")
+                    .and_then(|t| t.as_str())
+                    .and_then(Task::from_name);
+                let gen_len = msg
+                    .get("gen_len")
+                    .and_then(|g| g.as_usize())
+                    .or_else(|| task.map(|t| t.gen_len()))
+                    .unwrap_or(64);
+                let client_id = msg.get("id").and_then(|i| i.as_i64()).unwrap_or(0);
+                match build_request(tok, seq_len, task, prompt, gen_len) {
+                    Ok(req) => {
+                        let (tx, rx) = channel();
+                        cmd_tx.send(Command::Submit(req, tx)).ok();
+                        match rx.recv() {
+                            Ok(resp) => {
+                                let out = Json::obj(vec![
+                                    ("id", Json::Num(client_id as f64)),
+                                    ("text", Json::Str(resp.text)),
+                                    ("steps", Json::Num(resp.steps as f64)),
+                                    ("decoded", Json::Num(resp.decoded as f64)),
+                                    ("ttft_ms", Json::Num(resp.ttft_ms)),
+                                    ("latency_ms", Json::Num(resp.latency_ms)),
+                                ]);
+                                writeln!(writer, "{}", out.to_string())?;
+                            }
+                            Err(_) => {
+                                writeln!(writer, r#"{{"error":"scheduler gone"}}"#)?;
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        writeln!(writer, r#"{{"error":"{e}"}}"#)?;
+                    }
+                }
+            }
+        }
+    }
+    info!("server", "connection from {peer:?} closed");
+    Ok(false)
+}
+
+/// Minimal blocking client for examples/tests.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        Ok(Client { stream: TcpStream::connect(addr)? })
+    }
+
+    pub fn request(&mut self, body: &Json) -> Result<Json> {
+        writeln!(self.stream, "{}", body.to_string())?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        Ok(parse(&line)?)
+    }
+
+    pub fn generate(&mut self, task: &str, prompt: &str) -> Result<Json> {
+        self.request(&Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("task", Json::str(task)),
+            ("prompt", Json::str(prompt)),
+        ]))
+    }
+
+    pub fn stats(&mut self) -> Result<String> {
+        let r = self.request(&Json::obj(vec![("op", Json::str("stats"))]))?;
+        Ok(r.get("stats").and_then(|s| s.as_str()).unwrap_or("").to_string())
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        let _ = self.request(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
+        Ok(())
+    }
+}

@@ -1,0 +1,22 @@
+//! SPA-Cache: Singular Proxies for Adaptive Caching in Diffusion Language
+//! Models — a three-layer Rust + JAX + Pallas reproduction.
+//!
+//! Layering (see DESIGN.md):
+//! * L1/L2 live in `python/compile/` and run only at build time, producing
+//!   AOT HLO-text executables under `artifacts/`.
+//! * [`runtime`] loads and executes those artifacts via PJRT (the `xla`
+//!   crate) — python is never on the request path.
+//! * [`coordinator`] is the serving system: router/batcher/scheduler,
+//!   cache methods (SPA-Cache + every baseline), decode policies, metrics,
+//!   and a TCP server.
+//! * [`analysis`] regenerates the paper's figures from probe artifacts.
+//! * [`bench`] is a criterion-substitute harness for the paper tables.
+//! * [`util`] holds the from-scratch substrates (json/cli/rng/stats/
+//!   threadpool/proptest) required by the offline environment.
+
+pub mod analysis;
+pub mod bench;
+pub mod coordinator;
+pub mod model;
+pub mod runtime;
+pub mod util;

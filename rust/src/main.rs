@@ -1,0 +1,216 @@
+//! SPA-Cache CLI: serve | generate | analyze | selftest | list
+//!
+//! Examples:
+//!   spa-cache list
+//!   spa-cache generate --model llada_s --method spa --task gsm8k_s --samples 4
+//!   spa-cache serve --addr 127.0.0.1:7377 --model llada_s --method spa
+//!   spa-cache analyze --model llada_s --steps 12
+//!   spa-cache selftest
+
+use anyhow::Result;
+
+use spa_cache::coordinator::batcher::BatcherConfig;
+use spa_cache::coordinator::decode::{Sampler, UnmaskMode};
+use spa_cache::coordinator::group::{pack_group, run_group};
+use spa_cache::coordinator::methods::{Method, MethodSpec};
+use spa_cache::coordinator::scheduler::{Command, Scheduler};
+use spa_cache::coordinator::server;
+use spa_cache::model::tasks::{make_sample, Task, extract_answer, ALL_TASKS};
+use spa_cache::model::tokenizer::Tokenizer;
+use spa_cache::runtime::engine::Engine;
+use spa_cache::util::cli::Args;
+use spa_cache::util::rng::Rng;
+
+fn main() -> Result<()> {
+    spa_cache::util::log::init();
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "list" => list(&args),
+        "generate" => generate(&args),
+        "serve" => serve(&args),
+        "analyze" => analyze(&args),
+        "selftest" => selftest(&args),
+        _ => {
+            eprintln!(
+                "usage: spa-cache <list|generate|serve|analyze|selftest> \
+                 [--model llada_s] [--method vanilla|spa|dllm_cache|fast_dllm|dkv_cache|d2_cache|elastic_cache|multistep] \
+                 [--task gsm8k_s] [--samples N] [--addr host:port] [--threshold 0.9]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn list(args: &Args) -> Result<()> {
+    let engine = engine(args)?;
+    println!("models:");
+    for (name, m) in &engine.manifest.models {
+        println!(
+            "  {name}: d={} L={} heads={}/{} vocab={} (eval: {:?})",
+            m.arch.d_model, m.arch.n_layers, m.arch.n_heads, m.arch.n_kv_heads,
+            m.arch.vocab_size, m.eval_accuracy
+        );
+    }
+    println!("\nvariants ({}):", engine.manifest.variants.len());
+    for (name, v) in &engine.manifest.variants {
+        println!("  {name} [{}] id={} r={} k={:?}", v.kind, v.identifier, v.rank, v.k_per_layer);
+    }
+    println!("\ntasks:");
+    for (name, t) in &engine.manifest.tasks {
+        println!("  {name} -> {} (gen {}, block {})", t.paper_name, t.gen_len, t.block_len);
+    }
+    Ok(())
+}
+
+fn engine(args: &Args) -> Result<Engine> {
+    match args.get("artifacts") {
+        Some(dir) => Engine::new(dir),
+        None => Engine::from_default_artifacts(),
+    }
+}
+
+fn sampler(args: &Args) -> Sampler {
+    let threshold = args.f64_or("threshold", 0.0);
+    let mode = if args.flag("block") {
+        UnmaskMode::BlockParallel { threshold: if threshold > 0.0 { threshold } else { 0.9 } }
+    } else if threshold > 0.0 {
+        UnmaskMode::Parallel { threshold }
+    } else {
+        UnmaskMode::Sequential
+    };
+    let mut s = Sampler::greedy(mode);
+    s.temperature = args.f64_or("temperature", 0.0);
+    s
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let engine = engine(args)?;
+    let model = args.str_or("model", "llada_s");
+    let task = Task::from_name(&args.str_or("task", "gsm8k_s"))
+        .ok_or_else(|| anyhow::anyhow!("unknown task"))?;
+    let method_name = args.str_or("method", "spa");
+    let samples = args.usize_or("samples", 4);
+    let seed = args.u64_or("seed", 1);
+
+    let spec = MethodSpec::by_name(&method_name, task.block_len())?;
+    let mut method = Method::new(&engine, &model, spec)?;
+    let (b, n, _) = method.geometry();
+    let tok = Tokenizer::from_manifest(&engine.manifest.charset);
+    let mut rng = Rng::new(seed);
+    let mut sampler = sampler(args);
+    if method_name == "fast_dllm" {
+        sampler.mode = UnmaskMode::BlockParallel { threshold: args.f64_or("threshold", 0.9) };
+    }
+
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut done = 0usize;
+    while done < samples {
+        let batch: Vec<_> =
+            (0..b.min(samples - done)).map(|_| make_sample(task, &mut rng, &tok, n)).collect();
+        let real = batch.len();
+        let (mut tokens, mut slots) = pack_group(&batch, b, n, task.block_len());
+        let out = run_group(&engine, &mut method, &mut sampler, &mut tokens, &mut slots, 4 * n)?;
+        for (i, s) in batch.iter().enumerate() {
+            let row = &out.tokens[i * n..(i + 1) * n];
+            let answer = extract_answer(&tok, row, s.prompt_len);
+            let hit = answer == s.answer;
+            correct += hit as usize;
+            total += 1;
+            println!(
+                "[{}] Q: {:?}\n    -> {:?} (truth {:?}) {}",
+                s.task.name(),
+                tok.decode(&s.tokens[..s.prompt_len]),
+                answer,
+                s.answer,
+                if hit { "✓" } else { "✗" }
+            );
+        }
+        println!(
+            "group: {} steps, {:.1} tok/s, ttft {:.1} ms",
+            out.steps,
+            out.tps(),
+            out.ttft_ms[0]
+        );
+        done += real;
+    }
+    println!("\naccuracy: {}/{} = {:.1}%", correct, total, 100.0 * correct as f64 / total as f64);
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let engine = engine(args)?;
+    let model = args.str_or("model", "llada_s");
+    let method_name = args.str_or("method", "spa");
+    let addr = args.str_or("addr", "127.0.0.1:7377");
+    let spec = MethodSpec::by_name(&method_name, args.usize_or("block-k", 16))?;
+    let method = Method::new(&engine, &model, spec)?;
+    let seq_len = engine.manifest.seq_len;
+    let charset = engine.manifest.charset.clone();
+    let mut sam = sampler(args);
+    if method_name == "fast_dllm" {
+        sam.mode = UnmaskMode::BlockParallel { threshold: args.f64_or("threshold", 0.9) };
+    } else if args.get("threshold").is_none() {
+        sam.mode = UnmaskMode::Parallel { threshold: 0.9 };
+    }
+
+    let (tx, rx) = std::sync::mpsc::channel::<Command>();
+    let batcher = BatcherConfig::default();
+    let mut sched = Scheduler::new(engine, method, sam, batcher, 4 * seq_len);
+    let server_tx = tx.clone();
+    let handle = std::thread::spawn(move || server::serve(&addr, seq_len, &charset, server_tx));
+    sched.run(rx)?;
+    handle.join().ok();
+    Ok(())
+}
+
+fn analyze(args: &Args) -> Result<()> {
+    use spa_cache::analysis::drift::{run_probe, CHANNELS};
+    use spa_cache::model::schedule::fit_piecewise_gaussian;
+    let engine = engine(args)?;
+    let model = args.str_or("model", "llada_s");
+    let steps = args.usize_or("steps", 12);
+    let tok = Tokenizer::from_manifest(&engine.manifest.charset);
+    let mut rng = Rng::new(args.u64_or("seed", 7));
+    let (b, n) = (engine.manifest.batch, engine.manifest.seq_len);
+    let samples: Vec<_> = (0..b)
+        .map(|i| make_sample(ALL_TASKS[i % ALL_TASKS.len()], &mut rng, &tok, n))
+        .collect();
+    let (mut tokens, mut slots) = pack_group(&samples, b, n, 16);
+    let profile = run_probe(&engine, &model, &mut tokens, &mut slots, steps, 0.6)?;
+    println!("mean adjacent-step similarity per layer:");
+    println!("layer  {}", CHANNELS.join("      "));
+    for (i, row) in profile.mean_sims().iter().enumerate() {
+        println!(
+            "{:>5}  {:.4}  {:.4}  {:.4}  {:.4}  {:.4}",
+            i + 1, row[0], row[1], row[2], row[3], row[4]
+        );
+    }
+    let drift = profile.mean_drift();
+    println!("\ndrift fraction (out-sim < 0.95) per layer: {drift:?}");
+    let fit = fit_piecewise_gaussian(&drift, 0.5);
+    println!("fitted Eq.5 schedule: {fit:?}");
+    Ok(())
+}
+
+fn selftest(args: &Args) -> Result<()> {
+    let engine = engine(args)?;
+    let model = args.str_or("model", "llada_s");
+    println!("selftest: vanilla forward + spa decode on {model}");
+    let tok = Tokenizer::from_manifest(&engine.manifest.charset);
+    let mut rng = Rng::new(0);
+    let (b, n, _) = (engine.manifest.batch, engine.manifest.seq_len, 0);
+    let samples: Vec<_> =
+        (0..b).map(|_| make_sample(Task::Gsm8kS, &mut rng, &tok, n)).collect();
+    for m in ["vanilla", "spa"] {
+        let spec = MethodSpec::by_name(m, 16)?;
+        let mut method = Method::new(&engine, &model, spec)?;
+        let mut sampler = Sampler::greedy(UnmaskMode::Parallel { threshold: 0.6 });
+        let (mut tokens, mut slots) = pack_group(&samples, b, n, 16);
+        let out = run_group(&engine, &mut method, &mut sampler, &mut tokens, &mut slots, 4 * n)?;
+        println!("  {m}: {} steps, {:.1} tok/s", out.steps, out.tps());
+    }
+    println!("selftest OK");
+    Ok(())
+}

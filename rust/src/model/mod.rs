@@ -1,0 +1,7 @@
+//! Model-side metadata: tokenizer, budget schedule (Eq. 5) and the
+//! synthetic task suites. Mirrors of the python build-time modules; the
+//! golden tests pin both sides together.
+
+pub mod schedule;
+pub mod tasks;
+pub mod tokenizer;

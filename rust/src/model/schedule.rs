@@ -1,0 +1,170 @@
+//! Adaptive budget allocation (paper Eq. 5) — mirror of
+//! `python/compile/schedule.py`, cross-checked against the manifest goldens.
+
+/// Parameters of the piecewise-Gaussian update-ratio curve (paper Table 6).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RhoSchedule {
+    pub l_p: usize, // peak layer, 1-indexed
+    pub rho_p: f64,
+    pub rho_1: f64,
+    pub rho_l: f64,
+}
+
+impl RhoSchedule {
+    pub fn uniform(rho: f64) -> RhoSchedule {
+        RhoSchedule { l_p: 1, rho_p: rho, rho_1: rho, rho_l: rho }
+    }
+
+    /// Update ratio for 1-indexed `layer` of an `n_layers`-deep model.
+    pub fn rho(&self, layer: usize, n_layers: usize) -> f64 {
+        assert!(layer >= 1 && layer <= n_layers, "layer out of range");
+        let lp = self.l_p.clamp(1, n_layers);
+        if layer <= lp {
+            let denom = (lp.max(2) - 1) as f64;
+            let frac = (layer as f64 - lp as f64) / denom;
+            self.rho_p * ((self.rho_1 / self.rho_p).ln() * frac * frac).exp()
+        } else {
+            let denom = (n_layers - lp).max(1) as f64;
+            let frac = (layer as f64 - lp as f64) / denom;
+            self.rho_p * ((self.rho_l / self.rho_p).ln() * frac * frac).exp()
+        }
+    }
+
+    /// Static per-layer update counts `k_l = ceil(N * rho(l))`, rounded up
+    /// to a multiple of 8 — unaligned extents fall off XLA's vectorised
+    /// fast path (mirror of schedule.py; see EXPERIMENTS.md §Perf).
+    pub fn k_per_layer(&self, n_layers: usize, seq_len: usize) -> Vec<usize> {
+        const ALIGN: usize = 8;
+        (1..=n_layers)
+            .map(|l| {
+                let k = ((seq_len as f64 * self.rho(l, n_layers)).ceil() as usize).max(1);
+                ((k + ALIGN - 1) / ALIGN * ALIGN).min(seq_len)
+            })
+            .collect()
+    }
+
+    pub fn mean_rho(&self, n_layers: usize) -> f64 {
+        (1..=n_layers).map(|l| self.rho(l, n_layers)).sum::<f64>() / n_layers as f64
+    }
+}
+
+/// Fit Eq. 5 to a measured drift profile — mirror of
+/// `schedule.fit_piecewise_gaussian` (used by the Table 6 bench).
+pub fn fit_piecewise_gaussian(drift: &[f64], rho_cap: f64) -> RhoSchedule {
+    assert!(drift.len() >= 2, "need at least two layers");
+    let eps = 1e-4;
+    let d: Vec<f64> = drift.iter().map(|&x| x.clamp(eps, rho_cap)).collect();
+    let n = d.len();
+    let lp = d
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i + 1)
+        .unwrap();
+    let rho_p = d[lp - 1];
+
+    let fit_side = |layers: &[usize], denom: usize| -> f64 {
+        let (mut num, mut den) = (0.0, 0.0);
+        for &l in layers {
+            let x = ((l as f64 - lp as f64) / denom as f64).powi(2);
+            let y = (d[l - 1] / rho_p).ln();
+            num += x * y;
+            den += x * x;
+        }
+        if den == 0.0 {
+            0.0
+        } else {
+            num / den
+        }
+    };
+
+    let left: Vec<usize> = (1..=lp).collect();
+    let right: Vec<usize> = (lp..=n).collect();
+    let c1 = fit_side(&left, (lp - 1).max(1));
+    let cl = fit_side(&right, (n - lp).max(1));
+    let rho_1 = (rho_p * c1.min(0.0).exp()).min(rho_cap).max(eps);
+    let rho_l = (rho_p * cl.min(0.0).exp()).min(rho_cap).max(eps);
+    RhoSchedule { l_p: lp, rho_p, rho_1, rho_l }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_is_flat() {
+        let s = RhoSchedule::uniform(0.25);
+        for l in 1..=8 {
+            assert!((s.rho(l, 8) - 0.25).abs() < 1e-12);
+        }
+        assert_eq!(s.k_per_layer(8, 128), vec![32; 8]);
+    }
+
+    #[test]
+    fn peak_at_lp() {
+        let s = RhoSchedule { l_p: 4, rho_p: 0.25, rho_1: 0.03, rho_l: 0.13 };
+        let rhos: Vec<f64> = (1..=8).map(|l| s.rho(l, 8)).collect();
+        let max = rhos.iter().cloned().fold(f64::MIN, f64::max);
+        assert!((rhos[3] - max).abs() < 1e-12, "{rhos:?}");
+        assert!((rhos[3] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boundaries_hit_fitted_values() {
+        let s = RhoSchedule { l_p: 4, rho_p: 0.25, rho_1: 0.03, rho_l: 0.13 };
+        assert!((s.rho(1, 8) - 0.03).abs() < 1e-9);
+        assert!((s.rho(8, 8) - 0.13).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k_per_layer_bounds() {
+        crate::util::proptest::check(
+            "k_per_layer_in_bounds",
+            |r| {
+                let lp = r.range(1, 9);
+                let rp = 0.05 + r.f64() * 0.45;
+                RhoSchedule {
+                    l_p: lp,
+                    rho_p: rp,
+                    rho_1: (0.01 + r.f64() * rp).min(rp),
+                    rho_l: (0.01 + r.f64() * rp).min(rp),
+                }
+            },
+            |s| {
+                let ks = s.k_per_layer(8, 128);
+                let kp_aligned = ((128.0 * s.rho_p).ceil() as usize).div_ceil(8) * 8;
+                for (i, &k) in ks.iter().enumerate() {
+                    if k < 1 || k > 128 {
+                        return Err(format!("k[{i}]={k} out of range"));
+                    }
+                    if k % 8 != 0 && k != 128 {
+                        return Err(format!("k[{i}]={k} not aligned"));
+                    }
+                    if k > kp_aligned.min(128) {
+                        return Err(format!("k[{i}]={k} exceeds aligned peak {kp_aligned}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fit_recovers_exact_family() {
+        let truth = RhoSchedule { l_p: 4, rho_p: 0.30, rho_1: 0.05, rho_l: 0.12 };
+        let profile: Vec<f64> = (1..=8).map(|l| truth.rho(l, 8)).collect();
+        let fit = fit_piecewise_gaussian(&profile, 1.0);
+        assert_eq!(fit.l_p, 4);
+        assert!((fit.rho_p - 0.30).abs() < 1e-9);
+        assert!((fit.rho_1 - 0.05).abs() < 1e-6, "{fit:?}");
+        assert!((fit.rho_l - 0.12).abs() < 1e-6, "{fit:?}");
+    }
+
+    #[test]
+    fn fit_handles_flat_profile() {
+        let fit = fit_piecewise_gaussian(&[0.1; 6], 1.0);
+        for l in 1..=6 {
+            assert!((fit.rho(l, 6) - 0.1).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Synthetic task-suite generators — Rust mirror of `python/compile/corpus.py`.
+//!
+//! The coordinator and the benches generate their own workloads (prompt +
+//! masked generation region + ground-truth answer), so accuracy is measured
+//! natively in Rust without touching Python at serving time.  Each suite
+//! mirrors one paper benchmark's decode configuration (paper Table 7).
+
+use super::tokenizer::{Tokenizer, BOS, EOS, MASK, PAD};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    Gsm8kS,
+    GpqaS,
+    MathS,
+    BbhS,
+    MmluS,
+    MbppS,
+    HeS,
+}
+
+pub const ALL_TASKS: [Task; 7] =
+    [Task::Gsm8kS, Task::GpqaS, Task::MathS, Task::BbhS, Task::MmluS, Task::MbppS, Task::HeS];
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Gsm8kS => "gsm8k_s",
+            Task::GpqaS => "gpqa_s",
+            Task::MathS => "math_s",
+            Task::BbhS => "bbh_s",
+            Task::MmluS => "mmlu_s",
+            Task::MbppS => "mbpp_s",
+            Task::HeS => "he_s",
+        }
+    }
+
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            Task::Gsm8kS => "GSM8K",
+            Task::GpqaS => "GPQA",
+            Task::MathS => "MATH500",
+            Task::BbhS => "BBH",
+            Task::MmluS => "MMLU-pro",
+            Task::MbppS => "MBPP",
+            Task::HeS => "HumanEval",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Task> {
+        ALL_TASKS.iter().copied().find(|t| t.name() == s)
+    }
+
+    /// Few-shot exemplars in the prompt (paper Table 7, scaled).
+    pub fn n_shot(&self) -> usize {
+        match self {
+            Task::Gsm8kS | Task::GpqaS | Task::MathS => 2,
+            Task::BbhS | Task::MmluS | Task::MbppS => 1,
+            Task::HeS => 0,
+        }
+    }
+
+    /// Generation-region length (paper Table 7, scaled).
+    pub fn gen_len(&self) -> usize {
+        match self {
+            Task::GpqaS => 32,
+            _ => 64,
+        }
+    }
+
+    /// Semi-AR block length for Fast-dLLM (paper Table 7, scaled).
+    pub fn block_len(&self) -> usize {
+        match self {
+            Task::Gsm8kS => 8,
+            Task::BbhS | Task::MmluS => 64,
+            _ => 16,
+        }
+    }
+
+    /// One (question, answer) pair — mirror of the python generators
+    /// (statistically, not bitwise: the RNGs differ).
+    pub fn gen(&self, rng: &mut Rng) -> (String, String) {
+        const LETTERS: &[u8] = b"abcdefghijklmnopqrstuvwxyz";
+        match self {
+            Task::Gsm8kS => {
+                let a = rng.below(10);
+                let b = rng.below(10);
+                (format!("{a}+{b}=?"), (a + b).to_string())
+            }
+            Task::GpqaS => {
+                let idx = rng.sample_indices(26, 4);
+                let (p, q, r, s) = (
+                    LETTERS[idx[0]] as char,
+                    LETTERS[idx[1]] as char,
+                    LETTERS[idx[2]] as char,
+                    LETTERS[idx[3]] as char,
+                );
+                let mut facts = vec![format!("{p}>{q}"), format!("{r}>{s}")];
+                rng.shuffle(&mut facts);
+                let (query, ans) = if rng.bool(0.5) { (r, s) } else { (p, q) };
+                (format!("{};{};{query}>?", facts[0], facts[1]), ans.to_string())
+            }
+            Task::MathS => {
+                let a = rng.range(2, 10);
+                let b = rng.range(2, 10);
+                (format!("{a}*{b}=?"), (a * b).to_string())
+            }
+            Task::BbhS => {
+                let s: String = (0..3).map(|_| LETTERS[rng.range(0, 26)] as char).collect();
+                let rev: String = s.chars().rev().collect();
+                (format!("rev({s})=?"), rev)
+            }
+            Task::MmluS => {
+                let vals = rng.sample_indices(10, 3);
+                let key = rng.range(0, 3);
+                let opts: Vec<String> = "abc"
+                    .chars()
+                    .zip(&vals)
+                    .map(|(o, v)| format!("{o}:{v}"))
+                    .collect();
+                (
+                    format!("{} get {}?", opts.join(" "), "abc".chars().nth(key).unwrap()),
+                    vals[key].to_string(),
+                )
+            }
+            Task::MbppS => {
+                let s: String = (0..2).map(|_| LETTERS[rng.range(0, 26)] as char).collect();
+                (format!("dup({s})=?"), format!("{s}{s}"))
+            }
+            Task::HeS => {
+                let start = rng.range(0, 24);
+                let s: String = (0..2).map(|i| (b'a' + (start + i) as u8) as char).collect();
+                let nxt: String = s.chars().map(|c| ((c as u8) + 1) as char).collect();
+                (format!("nxt({s})=?"), nxt)
+            }
+        }
+    }
+}
+
+/// One serving sample: tokens with a masked generation region + ground truth.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    pub answer: String,
+    pub task: Task,
+}
+
+/// Build the few-shot prompt text for `question` (mirror of corpus.render_prompt).
+pub fn render_prompt(task: Task, rng: &mut Rng, question: &str) -> String {
+    let mut out = String::new();
+    for _ in 0..task.n_shot() {
+        let (q, a) = task.gen(rng);
+        out.push_str(&format!("#q {q}#a {a};"));
+    }
+    out.push_str(&format!("#q {question}#a "));
+    out
+}
+
+/// Build one sample of total length `seq_len` (mirror of corpus.make_sample).
+pub fn make_sample(task: Task, rng: &mut Rng, tok: &Tokenizer, seq_len: usize) -> Sample {
+    let (q, answer) = task.gen(rng);
+    let prompt = render_prompt(task, rng, &q);
+    let mut ids = vec![BOS];
+    ids.extend(tok.encode(&prompt).expect("grammar closed"));
+    let prompt_len = ids.len();
+    let gen_region = task.gen_len().min(seq_len.saturating_sub(prompt_len));
+    assert!(gen_region > 0, "prompt too long for seq_len={seq_len}");
+    let mut tokens = vec![PAD; seq_len];
+    tokens[..prompt_len].copy_from_slice(&ids);
+    for t in tokens.iter_mut().take(prompt_len + gen_region).skip(prompt_len) {
+        *t = MASK;
+    }
+    Sample { tokens, prompt_len, answer, task }
+}
+
+/// Extract the generated answer (mirror of corpus.extract_answer).
+pub fn extract_answer(tok: &Tokenizer, tokens: &[i32], prompt_len: usize) -> String {
+    let mut ids = Vec::new();
+    for &t in &tokens[prompt_len.min(tokens.len())..] {
+        if t == EOS || t == PAD || t == MASK {
+            break;
+        }
+        ids.push(t);
+    }
+    tok.decode(&ids).trim_end_matches(';').trim().to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_valid_samples() {
+        let tok = Tokenizer::default();
+        let mut rng = Rng::new(1);
+        for task in ALL_TASKS {
+            for _ in 0..20 {
+                let s = make_sample(task, &mut rng, &tok, 128);
+                assert_eq!(s.tokens.len(), 128);
+                assert_eq!(s.tokens[0], BOS);
+                assert!(s.tokens.contains(&MASK));
+                assert!(!s.answer.is_empty());
+                // every answer is encodable
+                tok.encode(&s.answer).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn answers_are_correct_for_known_cases() {
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let (q, a) = Task::BbhS.gen(&mut rng);
+            // rev(s)=? -> reversed
+            let inner = &q["rev(".len()..q.len() - ")=?".len()];
+            assert_eq!(a, inner.chars().rev().collect::<String>());
+        }
+        for _ in 0..50 {
+            let (q, a) = Task::MathS.gen(&mut rng);
+            let (l, r) = q[..q.len() - 2].split_once('*').unwrap();
+            assert_eq!(a.parse::<usize>().unwrap(), l.parse::<usize>().unwrap() * r.parse::<usize>().unwrap());
+        }
+    }
+
+    #[test]
+    fn extract_answer_stops_at_eos() {
+        let tok = Tokenizer::default();
+        let mut toks = vec![BOS];
+        toks.extend(tok.encode("#a ").unwrap());
+        let plen = toks.len();
+        toks.extend(tok.encode("42").unwrap());
+        toks.push(EOS);
+        toks.extend(tok.encode("junk").unwrap());
+        assert_eq!(extract_answer(&tok, &toks, plen), "42");
+    }
+
+    #[test]
+    fn gen_region_masked_then_pad() {
+        let tok = Tokenizer::default();
+        let mut rng = Rng::new(3);
+        let s = make_sample(Task::GpqaS, &mut rng, &tok, 128);
+        let gen_end = s.prompt_len + Task::GpqaS.gen_len();
+        for (i, &t) in s.tokens.iter().enumerate() {
+            if i < s.prompt_len {
+                assert_ne!(t, MASK);
+            } else if i < gen_end {
+                assert_eq!(t, MASK);
+            } else {
+                assert_eq!(t, PAD);
+            }
+        }
+    }
+
+    #[test]
+    fn property_prompt_fits() {
+        let tok = Tokenizer::default();
+        crate::util::proptest::check(
+            "prompt_fits_128",
+            |r| (r.next_u64(), ALL_TASKS[r.range(0, 7)]),
+            |&(seed, task)| {
+                let mut rng = Rng::new(seed);
+                let s = make_sample(task, &mut rng, &Tokenizer::default(), 128);
+                let _ = &tok;
+                if s.prompt_len + 8 > 128 {
+                    return Err(format!("prompt too long: {}", s.prompt_len));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,133 @@
+//! Char-level tokenizer, mirror of `python/compile/corpus.py`.
+//!
+//! The charset is also shipped in `artifacts/index.json`; `Tokenizer::from_manifest`
+//! builds from that (and the unit tests pin the compiled-in copy to the same
+//! constants so drift between the layers is caught at test time).
+
+pub const PAD: i32 = 0;
+pub const MASK: i32 = 1;
+pub const BOS: i32 = 2;
+pub const EOS: i32 = 3;
+
+pub const SPECIALS: [&str; 4] = ["<pad>", "<mask>", "<bos>", "<eos>"];
+pub const CHARSET: &str = "0123456789abcdefghijklmnopqrstuvwxyz+-*/=()<>?:;,.#@!| ";
+pub const VOCAB_SIZE: usize = 64;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    charset: Vec<char>,
+    to_id: [i32; 128],
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new(CHARSET)
+    }
+}
+
+impl Tokenizer {
+    pub fn new(charset: &str) -> Tokenizer {
+        let chars: Vec<char> = charset.chars().collect();
+        let mut to_id = [-1i32; 128];
+        for (i, &c) in chars.iter().enumerate() {
+            to_id[c as usize] = (i + SPECIALS.len()) as i32;
+        }
+        Tokenizer { charset: chars, to_id }
+    }
+
+    pub fn from_manifest(charset: &str) -> Tokenizer {
+        Tokenizer::new(charset)
+    }
+
+    /// Encode text; unknown characters are an error (the grammar is closed).
+    pub fn encode(&self, text: &str) -> anyhow::Result<Vec<i32>> {
+        text.chars()
+            .map(|c| {
+                let i = (c as usize).checked_sub(0).filter(|&i| i < 128);
+                match i.map(|i| self.to_id[i]) {
+                    Some(id) if id >= 0 => Ok(id),
+                    _ => anyhow::bail!("unknown char {c:?}"),
+                }
+            })
+            .collect()
+    }
+
+    /// Decode ids; specials and out-of-range ids are dropped.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter_map(|&id| {
+                let i = id as usize;
+                if id < SPECIALS.len() as i32 {
+                    None
+                } else {
+                    self.charset.get(i - SPECIALS.len()).copied()
+                }
+            })
+            .collect()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB_SIZE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::default();
+        let s = "#q rev(abc)=?#a cba;";
+        let ids = t.encode(s).unwrap();
+        assert_eq!(t.decode(&ids), s);
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        let t = Tokenizer::default();
+        let mut ids = vec![BOS];
+        ids.extend(t.encode("ab").unwrap());
+        ids.push(EOS);
+        ids.push(PAD);
+        assert_eq!(t.decode(&ids), "ab");
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        let t = Tokenizer::default();
+        assert!(t.encode("Ü").is_err());
+        assert!(t.encode("A").is_err()); // uppercase not in grammar
+    }
+
+    #[test]
+    fn ids_match_python_layout() {
+        let t = Tokenizer::default();
+        // '0' is the first charset char -> id 4; space is the last.
+        assert_eq!(t.encode("0").unwrap(), vec![4]);
+        assert_eq!(
+            t.encode(" ").unwrap(),
+            vec![4 + CHARSET.chars().count() as i32 - 1]
+        );
+    }
+
+    #[test]
+    fn property_roundtrip_random() {
+        let t = Tokenizer::default();
+        crate::util::proptest::check(
+            "tokenizer_roundtrip",
+            |r| {
+                let cs: Vec<char> = CHARSET.chars().collect();
+                (0..r.range(0, 40)).map(|_| *r.choice(&cs)).collect::<String>()
+            },
+            |s| {
+                let ids = t.encode(s).map_err(|e| e.to_string())?;
+                if t.decode(&ids) == *s {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,224 @@
+//! PJRT engine: compiles AOT artifacts once and executes decode steps.
+//!
+//! One `Engine` owns the PJRT CPU client, the manifest, the resident model
+//! weights and a cache of compiled executables.  Step execution is
+//! manifest-driven: the caller supplies runtime inputs (tokens, caches) and
+//! the engine prepends the weight parameters.
+//!
+//! Perf notes (EXPERIMENTS.md §Perf):
+//! * weights are uploaded to device buffers **once** and reused every step
+//!   (the stock `execute` path re-uploaded ~7 MiB of parameters per step);
+//! * executions go through the forked crate's `execute_b_untuple`, so a
+//!   tuple-rooted step returns one `PjRtBuffer` per output leaf — cache
+//!   outputs feed the next step **without any host round-trip**; only the
+//!   logits are copied back.
+//!
+//! Adapted from /opt/xla-example/load_hlo (HLO **text** interchange — see
+//! python/compile/aot.py for why text instead of serialised protos).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{Manifest, VariantInfo};
+use super::weights::ModelWeights;
+use crate::info;
+
+/// A compiled variant plus its IO contract.
+pub struct LoadedVariant {
+    pub info: VariantInfo,
+    exe: PjRtLoadedExecutable,
+    pub compile_ms: f64,
+}
+
+/// Cumulative engine counters (consumed by metrics and the perf bench).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub exec_ms_total: f64,
+    pub compiles: u64,
+    pub compile_ms_total: f64,
+    pub upload_bytes: u64,
+    pub readback_bytes: u64,
+}
+
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    weights: RefCell<HashMap<String, Rc<ModelWeights>>>,
+    variants: RefCell<HashMap<String, Rc<LoadedVariant>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Create an engine over an artifact directory (compiles lazily).
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        crate::util::log::init();
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().context("PJRT cpu client")?;
+        info!(
+            "engine",
+            "PJRT {} up, {} variants in manifest",
+            client.platform_name(),
+            manifest.variants.len()
+        );
+        Ok(Engine {
+            client,
+            manifest,
+            weights: RefCell::new(HashMap::new()),
+            variants: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    /// Engine over the default artifact dir (`$SPA_ARTIFACTS` or ./artifacts).
+    pub fn from_default_artifacts() -> Result<Engine> {
+        Engine::new(Manifest::default_dir())
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    // ----- host <-> device helpers -----
+
+    /// Upload an i32 tensor to the device.
+    pub fn upload_i32(&self, shape: &[usize], data: &[i32]) -> Result<PjRtBuffer> {
+        self.stats.borrow_mut().upload_bytes += (data.len() * 4) as u64;
+        Ok(self.client.buffer_from_host_buffer::<i32>(data, shape, None)?)
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload_f32(&self, shape: &[usize], data: &[f32]) -> Result<PjRtBuffer> {
+        self.stats.borrow_mut().upload_bytes += (data.len() * 4) as u64;
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, shape, None)?)
+    }
+
+    /// Upload a zero-filled f32 tensor (cache initialisation).
+    pub fn upload_zeros_f32(&self, shape: &[usize]) -> Result<PjRtBuffer> {
+        let n: usize = shape.iter().product();
+        self.upload_f32(shape, &vec![0.0; n])
+    }
+
+    /// Read an f32 buffer back to the host.  (TFRT-CPU lacks CopyRawToHost,
+    /// so this goes through a literal — one bounded extra copy.)
+    pub fn read_f32(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let out = buf.to_literal_sync()?.to_vec::<f32>()?;
+        self.stats.borrow_mut().readback_bytes += (out.len() * 4) as u64;
+        Ok(out)
+    }
+
+    /// Read an i32 buffer back to the host (via literal — see read_f32).
+    pub fn read_i32(&self, buf: &PjRtBuffer) -> Result<Vec<i32>> {
+        let out = buf.to_literal_sync()?.to_vec::<i32>()?;
+        self.stats.borrow_mut().readback_bytes += (out.len() * 4) as u64;
+        Ok(out)
+    }
+
+    // ----- weights / variants -----
+
+    /// Resident (device) weights for a model, uploaded once.
+    pub fn weights(&self, model: &str) -> Result<Rc<ModelWeights>> {
+        if let Some(w) = self.weights.borrow().get(model) {
+            return Ok(Rc::clone(w));
+        }
+        let minfo = self.manifest.model(model)?;
+        let w = Rc::new(ModelWeights::load(&self.client, &self.manifest, minfo)?);
+        info!(
+            "engine",
+            "loaded weights for {model}: {} tensors, {} KiB (device-resident)",
+            w.tensor_count(),
+            w.total_bytes / 1024
+        );
+        self.weights.borrow_mut().insert(model.to_string(), Rc::clone(&w));
+        Ok(w)
+    }
+
+    /// Compile (or fetch cached) a variant executable.
+    pub fn load_variant(&self, name: &str) -> Result<Rc<LoadedVariant>> {
+        if let Some(v) = self.variants.borrow().get(name) {
+            return Ok(Rc::clone(v));
+        }
+        let vinfo = self.manifest.variant(name)?.clone();
+        let path = self.manifest.dir.join(&vinfo.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_ms_total += compile_ms;
+        }
+        info!("engine", "compiled {name} in {:.1}s", compile_ms / 1e3);
+        let v = Rc::new(LoadedVariant { info: vinfo, exe, compile_ms });
+        self.variants.borrow_mut().insert(name.to_string(), Rc::clone(&v));
+        Ok(v)
+    }
+
+    // ----- execution -----
+
+    /// Hot path: execute with device-resident runtime inputs; outputs stay
+    /// on device (one buffer per output leaf, `variant.info.outputs` order).
+    pub fn run_buffers(
+        &self,
+        variant: &LoadedVariant,
+        runtime_inputs: &[&PjRtBuffer],
+    ) -> Result<Vec<PjRtBuffer>> {
+        anyhow::ensure!(
+            runtime_inputs.len() == variant.info.inputs.len(),
+            "variant {} expects {} runtime inputs, got {}",
+            variant.info.name,
+            variant.info.inputs.len(),
+            runtime_inputs.len()
+        );
+        let weights = self.weights(&variant.info.model)?;
+        let mut args: Vec<&PjRtBuffer> = weights.param_refs(&variant.info.params)?;
+        args.extend_from_slice(runtime_inputs);
+
+        let t0 = Instant::now();
+        let mut bufs = variant.exe.execute_b_untuple::<&PjRtBuffer>(&args)?;
+        let outs = std::mem::take(&mut bufs[0]);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.exec_ms_total += ms;
+        }
+        anyhow::ensure!(
+            outs.len() == variant.info.outputs.len(),
+            "variant {} returned {} outputs, manifest says {}",
+            variant.info.name,
+            outs.len(),
+            variant.info.outputs.len()
+        );
+        Ok(outs)
+    }
+
+    /// Convenience path (tests/analysis): literal inputs, literal outputs.
+    pub fn run(&self, variant: &LoadedVariant, runtime_inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let uploaded: Vec<PjRtBuffer> = runtime_inputs
+            .iter()
+            .map(|l| Ok(self.client.buffer_from_host_literal(None, l)?))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&PjRtBuffer> = uploaded.iter().collect();
+        let outs = self.run_buffers(variant, &refs)?;
+        outs.iter().map(|b| Ok(b.to_literal_sync()?)).collect()
+    }
+
+    /// Convenience: load-and-run by variant name.
+    pub fn run_by_name(&self, name: &str, runtime_inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let v = self.load_variant(name)?;
+        self.run(&v, runtime_inputs)
+    }
+}

@@ -1,0 +1,281 @@
+//! Typed view of `artifacts/index.json` — the contract between the python
+//! compile path and the rust serving path (DESIGN.md §4).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::tensor::Dtype;
+use crate::model::schedule::RhoSchedule;
+use crate::util::json::{parse, Json};
+
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelArch {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub arch: ModelArch,
+    pub weights_file: String,
+    pub tensors: Vec<TensorEntry>,
+    pub default_rank: usize,
+    pub fitted_schedule: RhoSchedule,
+    pub drift_profile: Vec<f64>,
+    pub eval_accuracy: BTreeMap<String, f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    pub name: String,
+    pub kind: String,
+    pub model: String,
+    pub file: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub identifier: String,
+    pub rank: usize,
+    pub k_per_layer: Vec<usize>,
+    pub manual_k: usize,
+    pub msteps: usize,
+    pub threshold: f64,
+    pub kernel_backend: String,
+    pub params: Vec<String>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub schedule: RhoSchedule,
+}
+
+impl VariantInfo {
+    /// Mean update ratio implied by the static k schedule (Table 4's ρ̄).
+    pub fn mean_rho(&self) -> f64 {
+        if self.k_per_layer.is_empty() {
+            return 1.0;
+        }
+        self.k_per_layer.iter().map(|&k| k as f64 / self.seq_len as f64).sum::<f64>()
+            / self.k_per_layer.len() as f64
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskInfo {
+    pub paper_name: String,
+    pub n_shot: usize,
+    pub gen_len: usize,
+    pub block_len: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub charset: String,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub variants: BTreeMap<String, VariantInfo>,
+    pub tasks: BTreeMap<String, TaskInfo>,
+    /// Raw goldens section (consumed by the golden integration tests).
+    pub goldens: Json,
+}
+
+fn sched_from_json(j: &Json) -> Result<RhoSchedule> {
+    Ok(RhoSchedule {
+        l_p: j.req("l_p")?.as_usize().context("l_p")?,
+        rho_p: j.req("rho_p")?.as_f64().context("rho_p")?,
+        rho_1: j.req("rho_1")?.as_f64().context("rho_1")?,
+        rho_l: j.req("rho_l")?.as_f64().context("rho_l")?,
+    })
+}
+
+fn io_from_json(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.req("name")?.as_str().context("name")?.to_string(),
+        shape: j.req("shape")?.usize_vec().context("shape")?,
+        dtype: Dtype::parse(j.req("dtype")?.as_str().context("dtype")?)?,
+    })
+}
+
+impl Manifest {
+    /// Load `index.json` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("index.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = parse(&text).context("parsing index.json")?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj().context("models")? {
+            let c = m.req("config")?;
+            let arch = ModelArch {
+                name: name.clone(),
+                vocab_size: c.req("vocab_size")?.as_usize().unwrap(),
+                d_model: c.req("d_model")?.as_usize().unwrap(),
+                n_layers: c.req("n_layers")?.as_usize().unwrap(),
+                n_heads: c.req("n_heads")?.as_usize().unwrap(),
+                n_kv_heads: c.req("n_kv_heads")?.as_usize().unwrap(),
+                d_head: c.req("d_head")?.as_usize().unwrap(),
+                d_ff: c.req("d_ff")?.as_usize().unwrap(),
+            };
+            let tensors = m
+                .req("tensors")?
+                .as_arr()
+                .context("tensors")?
+                .iter()
+                .map(|t| {
+                    Ok(TensorEntry {
+                        name: t.req("name")?.as_str().unwrap().to_string(),
+                        shape: t.req("shape")?.usize_vec().unwrap(),
+                        offset: t.req("offset")?.as_usize().unwrap(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let eval = m
+                .get("eval_accuracy")
+                .and_then(|e| e.as_obj())
+                .map(|pairs| {
+                    pairs
+                        .iter()
+                        .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                        .collect()
+                })
+                .unwrap_or_default();
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    arch,
+                    weights_file: m.req("weights_file")?.as_str().unwrap().to_string(),
+                    tensors,
+                    default_rank: m.req("default_rank")?.as_usize().unwrap(),
+                    fitted_schedule: sched_from_json(m.req("fitted_schedule")?)?,
+                    drift_profile: m.req("drift_profile")?.f64_vec().unwrap_or_default(),
+                    eval_accuracy: eval,
+                },
+            );
+        }
+
+        let mut variants = BTreeMap::new();
+        for v in j.req("variants")?.as_arr().context("variants")? {
+            let name = v.req("name")?.as_str().unwrap().to_string();
+            variants.insert(
+                name.clone(),
+                VariantInfo {
+                    name,
+                    kind: v.req("kind")?.as_str().unwrap().to_string(),
+                    model: v.req("model")?.as_str().unwrap().to_string(),
+                    file: v.req("file")?.as_str().unwrap().to_string(),
+                    batch: v.req("batch")?.as_usize().unwrap(),
+                    seq_len: v.req("seq_len")?.as_usize().unwrap(),
+                    identifier: v.req("identifier")?.as_str().unwrap().to_string(),
+                    rank: v.req("rank")?.as_usize().unwrap(),
+                    k_per_layer: v.req("k_per_layer")?.usize_vec().unwrap_or_default(),
+                    manual_k: v.req("manual_k")?.as_usize().unwrap(),
+                    msteps: v.req("msteps")?.as_usize().unwrap(),
+                    threshold: v.req("threshold")?.as_f64().unwrap(),
+                    kernel_backend: v.req("kernel_backend")?.as_str().unwrap().to_string(),
+                    params: v
+                        .req("params")?
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|p| p.as_str().unwrap().to_string())
+                        .collect(),
+                    inputs: v
+                        .req("inputs")?
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(io_from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: v
+                        .req("outputs")?
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(io_from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    schedule: sched_from_json(v.req("schedule")?)?,
+                },
+            );
+        }
+
+        let mut tasks = BTreeMap::new();
+        for (name, t) in j.req("tasks")?.as_obj().context("tasks")? {
+            tasks.insert(
+                name.clone(),
+                TaskInfo {
+                    paper_name: t.req("paper_name")?.as_str().unwrap().to_string(),
+                    n_shot: t.req("n_shot")?.as_usize().unwrap(),
+                    gen_len: t.req("gen_len")?.as_usize().unwrap(),
+                    block_len: t.req("block_len")?.as_usize().unwrap(),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            batch: j.req("batch")?.as_usize().context("batch")?,
+            seq_len: j.req("seq_len")?.as_usize().context("seq_len")?,
+            charset: j
+                .req("tokenizer")?
+                .req("charset")?
+                .as_str()
+                .context("charset")?
+                .to_string(),
+            models,
+            variants,
+            tasks,
+            goldens: j.req("goldens")?.clone(),
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantInfo> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown variant '{name}' (have: {:?})", self.variants.keys().take(8).collect::<Vec<_>>()))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))
+    }
+
+    /// Default artifact dir: `$SPA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SPA_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            // Walk up from cwd looking for artifacts/index.json (tests run
+            // from the workspace root; examples may run elsewhere).
+            let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            loop {
+                let cand = dir.join("artifacts");
+                if cand.join("index.json").exists() {
+                    return cand;
+                }
+                if !dir.pop() {
+                    return PathBuf::from("artifacts");
+                }
+            }
+        })
+    }
+}

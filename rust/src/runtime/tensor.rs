@@ -1,0 +1,96 @@
+//! Host-side tensor helpers bridging `Vec<f32>/Vec<i32>` and XLA literals.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+/// Dtype of a manifest IO slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        match self {
+            Dtype::F32 => ElementType::F32,
+            Dtype::I32 => ElementType::S32,
+        }
+    }
+}
+
+pub fn elem_count(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Build an f32 literal from host data.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    anyhow::ensure!(data.len() == elem_count(shape), "shape/data mismatch");
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, bytes)
+        .context("create f32 literal")
+}
+
+/// Build an i32 literal from host data.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    anyhow::ensure!(data.len() == elem_count(shape), "shape/data mismatch");
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, bytes)
+        .context("create i32 literal")
+}
+
+/// Zero-filled f32 literal (cache initialisation).
+pub fn literal_zeros_f32(shape: &[usize]) -> Result<Literal> {
+    literal_f32(shape, &vec![0.0; elem_count(shape)])
+}
+
+/// Read back a literal as f32s.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read back a literal as i32s.
+pub fn to_i32_vec(lit: &Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = literal_f32(&[2, 3], &data).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), data);
+        assert_eq!(lit.element_count(), 6);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![-1i32, 0, 7];
+        let lit = literal_i32(&[3], &data).unwrap();
+        assert_eq!(to_i32_vec(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(literal_f32(&[2, 2], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn zeros() {
+        let lit = literal_zeros_f32(&[4, 4]).unwrap();
+        assert!(to_f32_vec(&lit).unwrap().iter().all(|&x| x == 0.0));
+    }
+}

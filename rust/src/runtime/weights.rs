@@ -1,0 +1,61 @@
+//! Trained-weight loading: maps the flat f32 blob written by `aot.py`
+//! (`weights-<model>.bin`) into **device-resident** PJRT buffers, uploaded
+//! once per process (EXPERIMENTS.md §Perf — the stock literal path paid a
+//! ~7 MiB parameter upload on every step).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+use xla::{PjRtBuffer, PjRtClient};
+
+use super::manifest::{Manifest, ModelInfo};
+use super::tensor::elem_count;
+
+/// All tensors of one model, keyed by the blob name used in variant
+/// `params` lists (e.g. `l3.wv`, `wr16.l3`, `embed`).
+pub struct ModelWeights {
+    pub model: String,
+    tensors: BTreeMap<String, PjRtBuffer>,
+    pub total_bytes: usize,
+}
+
+impl ModelWeights {
+    pub fn load(client: &PjRtClient, manifest: &Manifest, info: &ModelInfo) -> Result<ModelWeights> {
+        let path = manifest.dir.join(&info.weights_file);
+        let blob = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        let mut tensors = BTreeMap::new();
+        for t in &info.tensors {
+            let n = elem_count(&t.shape);
+            let end = t.offset + n * 4;
+            anyhow::ensure!(end <= blob.len(), "tensor {} out of blob bounds", t.name);
+            let bytes = &blob[t.offset..end];
+            // Blob is f32 little-endian by construction (aot.py).
+            let floats: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let buf = client.buffer_from_host_buffer::<f32>(&floats, &t.shape, None)?;
+            tensors.insert(t.name.clone(), buf);
+        }
+        Ok(ModelWeights {
+            model: info.arch.name.clone(),
+            total_bytes: blob.len(),
+            tensors,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&PjRtBuffer> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing weight tensor '{name}' for {}", self.model))
+    }
+
+    /// Assemble the parameter prefix for a variant, in manifest order.
+    pub fn param_refs(&self, names: &[String]) -> Result<Vec<&PjRtBuffer>> {
+        names.iter().map(|n| self.get(n)).collect()
+    }
+
+    pub fn tensor_count(&self) -> usize {
+        self.tensors.len()
+    }
+}

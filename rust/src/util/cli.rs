@@ -1,0 +1,105 @@
+//! CLI argument substrate (the offline registry has no clap).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments.  Used by the main binary, every example and every bench.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit argv (without the program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment (skips cargo-bench's `--bench`).
+    pub fn parse() -> Args {
+        let argv: Vec<String> =
+            std::env::args().skip(1).filter(|a| a != "--bench").collect();
+        Args::parse_from(argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn kv_forms() {
+        let a = parse("--model llada_s --rank=16 serve");
+        assert_eq!(a.get("model"), Some("llada_s"));
+        assert_eq!(a.usize_or("rank", 0), 16);
+        assert_eq!(a.positional, vec!["serve"]);
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = parse("--quick --out file.txt");
+        assert!(a.flag("quick"));
+        assert_eq!(a.get("out"), Some("file.txt"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn trailing_bool() {
+        let a = parse("--a 1 --verbose");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("a", 0), 1);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.f64_or("x", 0.5), 0.5);
+        assert_eq!(a.str_or("s", "d"), "d");
+    }
+}

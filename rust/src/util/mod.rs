@@ -1,0 +1,12 @@
+//! Substrate utilities built from scratch for the offline environment
+//! (no serde/clap/rand/tokio/criterion/proptest in the vendored registry —
+//! see DESIGN.md §2).
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod topk;

@@ -1,0 +1,122 @@
+//! Property-testing mini-framework (the offline registry has no proptest).
+//!
+//! `check` runs a property over `iters` generated cases from a seeded RNG;
+//! on failure it retries with progressively simpler cases produced by the
+//! optional `shrink` callback and panics with the smallest failing input's
+//! Debug rendering and the reproduction seed.
+//!
+//! Used for the coordinator invariants listed in DESIGN.md §7.
+
+use super::rng::Rng;
+
+pub struct Config {
+    pub iters: usize,
+    pub seed: u64,
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { iters: 256, seed: 0xC0FFEE, max_shrink: 200 }
+    }
+}
+
+/// Run `prop` over random cases from `gen`. Panics on the first failure
+/// (after shrinking) with a reproducible report.
+pub fn check<T, G, P>(name: &str, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    check_with(Config::default(), name, gen, prop, |_| Vec::new())
+}
+
+/// `check` with a shrinker: `shrink(case)` proposes strictly simpler cases.
+pub fn check_shrink<T, G, P, S>(name: &str, gen: G, prop: P, shrink: S)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+    S: Fn(&T) -> Vec<T>,
+{
+    check_with(Config::default(), name, gen, prop, shrink)
+}
+
+pub fn check_with<T, G, P, S>(cfg: Config, name: &str, gen: G, prop: P, shrink: S)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for i in 0..cfg.iters {
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            // Shrink: greedily accept any simpler failing case.
+            let mut best = case.clone();
+            let mut best_msg = msg;
+            let mut budget = cfg.max_shrink;
+            'outer: loop {
+                for cand in shrink(&best) {
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed at iter {i} (seed {:#x}):\n  case: {best:?}\n  error: {best_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check(
+            "reverse_involution",
+            |r| (0..r.range(0, 20)).map(|_| r.below(100)).collect::<Vec<u64>>(),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if w == *v {
+                    Ok(())
+                } else {
+                    Err("not involutive".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn reports_failure() {
+        check("always_fails", |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "case: 0")]
+    fn shrinks_to_minimal() {
+        // Property "x < 0" fails for everything; shrinker walks to 0.
+        check_shrink(
+            "shrinks",
+            |r| r.below(100) + 1,
+            |&x| if x > 1000 { Ok(()) } else { Err(format!("x={x}")) },
+            |&x| if x > 0 { vec![x / 2, x - 1] } else { vec![] },
+        );
+    }
+}

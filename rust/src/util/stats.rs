@@ -1,0 +1,196 @@
+//! Statistics substrate for the bench harness and metrics (no criterion).
+//!
+//! Percentiles use the nearest-rank method on a sorted copy; confidence
+//! intervals are normal-approximation binomial (matching the ± columns the
+//! paper reports for accuracy).
+
+/// Summary statistics of a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            max: s[n - 1],
+            p50: percentile_sorted(&s, 50.0),
+            p90: percentile_sorted(&s, 90.0),
+            p99: percentile_sorted(&s, 99.0),
+        }
+    }
+}
+
+/// Nearest-rank percentile of an already sorted slice.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = ((pct / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Normal-approximation binomial 95% half-interval: `1.96 * sqrt(p(1-p)/n)`.
+/// This is the ±x.xx the paper attaches to accuracy numbers.
+pub fn binomial_ci95(p: f64, n: usize) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    1.96 * (p * (1.0 - p) / n as f64).sqrt()
+}
+
+/// Streaming mean/variance (Welford) for metrics counters.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Fixed-bin histogram over [lo, hi] — used for the Fig. 5 density plots.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Histogram {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], underflow: 0, overflow: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let nb = self.bins.len();
+            let i = ((x - self.lo) / (self.hi - self.lo) * nb as f64) as usize;
+            self.bins[i.min(nb - 1)] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Normalised densities per bin (sums to 1 over in-range mass).
+    pub fn density(&self) -> Vec<f64> {
+        let t = self.total().max(1) as f64;
+        self.bins.iter().map(|&c| c as f64 / t).collect()
+    }
+
+    /// Render a terminal sparkline (for bench output).
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.bins.iter().copied().max().unwrap_or(0).max(1) as f64;
+        self.bins
+            .iter()
+            .map(|&c| GLYPHS[((c as f64 / max) * 7.0).round() as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        let s = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile_sorted(&s, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&s, 100.0), 5.0);
+        assert_eq!(percentile_sorted(&s, 50.0), 3.0);
+    }
+
+    #[test]
+    fn welford_matches_summary() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut w = Welford::default();
+        for x in xs {
+            w.push(x);
+        }
+        let s = Summary::of(&xs);
+        assert!((w.mean() - s.mean).abs() < 1e-12);
+        assert!((w.std() - s.std).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ci95_sane() {
+        assert_eq!(binomial_ci95(0.5, 0), 0.0);
+        let ci = binomial_ci95(0.5, 100);
+        assert!((ci - 0.098).abs() < 0.001);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        for i in 0..100 {
+            h.push(i as f64 / 100.0);
+        }
+        h.push(-1.0);
+        h.push(2.0);
+        assert_eq!(h.total(), 102);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert!(h.bins.iter().all(|&c| c == 10));
+    }
+}

@@ -1,0 +1,63 @@
+//! Top-k selection mirroring the in-graph identifier (L2 `top_k_indices`).
+//!
+//! The AOT graphs select update indices with a stable descending argsort;
+//! this Rust mirror exists for (a) the coordinator-side baselines that pick
+//! indices on the host (d2Cache/Elastic analogues) and (b) cross-checking
+//! the golden traces.  Ties break toward the lower index, exactly like
+//! `jnp.argsort(-scores, stable=True)`.
+
+/// Indices of the `k` largest values, ties toward lower index.
+pub fn top_k_desc(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    // Stable sort by descending score; stability gives lower-index-first ties.
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.truncate(k);
+    idx
+}
+
+/// Indices of the `k` smallest values (lowest similarity = most drift).
+pub fn bottom_k_asc(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic() {
+        assert_eq!(top_k_desc(&[1.0, 5.0, 3.0], 2), vec![1, 2]);
+        assert_eq!(bottom_k_asc(&[1.0, 5.0, 3.0], 2), vec![0, 2]);
+    }
+
+    #[test]
+    fn ties_prefer_lower_index() {
+        assert_eq!(top_k_desc(&[2.0, 2.0, 2.0, 1.0], 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn k_clamped() {
+        assert_eq!(top_k_desc(&[1.0], 5), vec![0]);
+    }
+
+    #[test]
+    fn matches_sort_oracle() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        for _ in 0..50 {
+            let n = rng.range(1, 40);
+            let k = rng.range(1, n + 1);
+            let xs: Vec<f32> = (0..n).map(|_| (rng.below(8) as f32) / 2.0).collect();
+            let got = top_k_desc(&xs, k);
+            // oracle: full stable sort
+            let mut pairs: Vec<(usize, f32)> = xs.iter().copied().enumerate().collect();
+            pairs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            let want: Vec<usize> = pairs.iter().take(k).map(|p| p.0).collect();
+            assert_eq!(got, want);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Golden cross-layer contract tests: the python build path exports exact
+//! tokens/logits/traces into the manifest; the rust serving path must
+//! reproduce them bit-for-bit (modulo float tolerance).  This is the test
+//! that pins L1+L2 (jax) to L3 (rust) — if either side's decode semantics
+//! drift, it fails.
+
+use spa_cache::coordinator::decode::{Sampler, UnmaskMode};
+use spa_cache::coordinator::request::SlotState;
+use spa_cache::runtime::engine::Engine;
+use spa_cache::runtime::tensor::{literal_i32, to_f32_vec};
+use spa_cache::util::json::Json;
+use xla::Literal;
+
+
+
+fn golden_tokens(g: &Json, key: &str) -> Vec<Vec<i32>> {
+    g.req(key)
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|row| row.as_arr().unwrap().iter().map(|x| x.as_i64().unwrap() as i32).collect())
+        .collect()
+}
+
+fn vanilla_logits_match_python_checksum(e: &Engine) {
+    let g = &e.manifest.goldens;
+    let toks2d = golden_tokens(g, "tokens");
+    let (b, n) = (toks2d.len(), toks2d[0].len());
+    let flat: Vec<i32> = toks2d.concat();
+    let v = e.load_variant("llada_s__vanilla").unwrap();
+    let lit = literal_i32(&[b, n], &flat).unwrap();
+    let logits = to_f32_vec(&e.run(&v, &[&lit]).unwrap()[0]).unwrap();
+
+    let want_sum = g.req("vanilla_logits_sum").unwrap().as_f64().unwrap();
+    let got_sum: f64 = logits.iter().map(|x| x.abs() as f64).sum();
+    let rel = (got_sum - want_sum).abs() / want_sum.abs().max(1.0);
+    assert!(rel < 1e-4, "|logits| sum mismatch: got {got_sum}, want {want_sum}");
+
+    let sample = g.req("vanilla_logits_sample").unwrap().f64_vec().unwrap();
+    for (i, want) in sample.iter().enumerate() {
+        let got = logits[i] as f64;
+        assert!(
+            (got - want).abs() < 1e-3 * want.abs().max(1.0),
+            "logits[0,0,{i}]: got {got}, want {want}"
+        );
+    }
+}
+
+fn spa_decode_trace_matches_python(e: &Engine) {
+    // Replay the exact decode the python oracle recorded: refresh + steps
+    // with threshold-0.6 greedy unmasking; token state must match after
+    // every step.
+    let g = &e.manifest.goldens;
+    let trace = g.req("spa_decode_trace").unwrap().as_arr().unwrap();
+    let threshold = g.req("unmask_threshold").unwrap().as_f64().unwrap();
+    let variant_name = g.req("spa_variant").unwrap().as_str().unwrap();
+
+    let steps: Vec<Vec<i32>> = trace
+        .iter()
+        .map(|step| {
+            step.as_arr()
+                .unwrap()
+                .iter()
+                .flat_map(|row| {
+                    row.as_arr().unwrap().iter().map(|x| x.as_i64().unwrap() as i32)
+                })
+                .collect()
+        })
+        .collect();
+
+    let rfr = e.load_variant(&format!("{variant_name}_refresh")).unwrap();
+    let stp = e.load_variant(variant_name).unwrap();
+    let (b, n) = (rfr.info.batch, rfr.info.seq_len);
+    let vocab = rfr.info.outputs[0].shape[2];
+
+    let mut tokens = steps[0].clone();
+    let mut slots: Vec<SlotState> = (0..b)
+        .map(|_| {
+            let mut s = SlotState::empty();
+            s.occupied = true;
+            s.gen_end = n;
+            s
+        })
+        .collect();
+    let mut sampler = Sampler::greedy(UnmaskMode::Parallel { threshold });
+
+    // refresh
+    let tok_lit = literal_i32(&[b, n], &tokens).unwrap();
+    let mut outs = e.run(&rfr, &[&tok_lit]).unwrap();
+    let logits = to_f32_vec(&outs[0]).unwrap();
+    let mut caches: Vec<Literal> = outs.drain(1..).collect();
+    sampler.unmask(&mut tokens, &logits, b, n, vocab, &mut slots);
+    assert_eq!(tokens, steps[1], "tokens diverged after the refresh step");
+
+    // Python (jaxlib ≥0.8 XLA) and rust (xla_extension 0.5.1 XLA) compile
+    // the same HLO with different fusion choices; last-ulp logit noise can
+    // flip a confidence-threshold decision deep into the decode.  We demand
+    // the first sparse step be exact (pins decode semantics) and bound the
+    // cumulative divergence afterwards.
+    for (si, want) in steps.iter().enumerate().skip(2) {
+        let tok_lit = literal_i32(&[b, n], &tokens).unwrap();
+        let mut inputs = vec![&tok_lit];
+        inputs.extend(caches.iter());
+        let mut outs = e.run(&stp, &inputs).unwrap();
+        let logits = to_f32_vec(&outs[0]).unwrap();
+        caches = outs.drain(1..).collect();
+        sampler.unmask(&mut tokens, &logits, b, n, vocab, &mut slots);
+        let diff = tokens.iter().zip(want.iter()).filter(|(a, b)| a != b).count();
+        if si == 2 {
+            assert_eq!(diff, 0, "first sparse step diverged ({diff} positions)");
+        } else {
+            let budget = (b * n) / 20; // ≤5% cumulative cross-XLA drift
+            assert!(
+                diff <= budget,
+                "tokens diverged at golden step {si}: {diff} positions (> {budget})"
+            );
+        }
+    }
+}
+
+fn schedule_goldens_match_rust_mirror(e: &Engine) {
+    use spa_cache::model::schedule::RhoSchedule;
+    let g = e.manifest.goldens.req("schedules").unwrap();
+    for (model, entry) in g.as_obj().unwrap() {
+        let p = entry.req("params").unwrap();
+        let sched = RhoSchedule {
+            l_p: p.req("l_p").unwrap().as_usize().unwrap(),
+            rho_p: p.req("rho_p").unwrap().as_f64().unwrap(),
+            rho_1: p.req("rho_1").unwrap().as_f64().unwrap(),
+            rho_l: p.req("rho_l").unwrap().as_f64().unwrap(),
+        };
+        let n_layers = e.manifest.model(model).unwrap().arch.n_layers;
+        let want_rho = entry.req("rho").unwrap().f64_vec().unwrap();
+        for (i, w) in want_rho.iter().enumerate() {
+            let got = sched.rho(i + 1, n_layers);
+            assert!((got - w).abs() < 1e-9, "{model} rho({}): {got} vs {w}", i + 1);
+        }
+        let want_k = entry.req("k_per_layer").unwrap().usize_vec().unwrap();
+        assert_eq!(sched.k_per_layer(n_layers, e.manifest.seq_len), want_k, "{model}");
+    }
+}
+
+fn manifest_k_per_layer_matches_schedule(e: &Engine) {
+    for (name, v) in &e.manifest.variants {
+        if v.kind != "spa" {
+            continue;
+        }
+        let n_layers = e.manifest.model(&v.model).unwrap().arch.n_layers;
+        let want = v.schedule.k_per_layer(n_layers, v.seq_len);
+        assert_eq!(v.k_per_layer, want, "{name}");
+    }
+}
+
+#[test]
+fn golden_suite() {
+    let e = Engine::from_default_artifacts().expect("run `make artifacts` first");
+    eprintln!("[golden] vanilla_logits_match_python_checksum");
+    vanilla_logits_match_python_checksum(&e);
+    eprintln!("[golden] spa_decode_trace_matches_python");
+    spa_decode_trace_matches_python(&e);
+    eprintln!("[golden] schedule_goldens_match_rust_mirror");
+    schedule_goldens_match_rust_mirror(&e);
+    eprintln!("[golden] manifest_k_per_layer_matches_schedule");
+    manifest_k_per_layer_matches_schedule(&e);
+}

@@ -1,0 +1,180 @@
+//! Integration tests over the real artifacts (require `make artifacts`).
+//!
+//! PJRT handles are !Send, so one engine is built per process and every
+//! check runs sequentially inside a single #[test].
+
+use spa_cache::coordinator::decode::{Sampler, UnmaskMode};
+use spa_cache::coordinator::group::{pack_group, run_group};
+use spa_cache::coordinator::methods::{IndexPolicy, Method, MethodSpec};
+use spa_cache::model::tasks::{make_sample, Task};
+use spa_cache::model::tokenizer::{Tokenizer, MASK};
+use spa_cache::runtime::engine::Engine;
+use spa_cache::runtime::tensor::{literal_i32, to_f32_vec};
+use spa_cache::util::rng::Rng;
+
+
+fn sample_tokens(e: &Engine, b: usize, n: usize, seed: u64) -> (Vec<i32>, Vec<spa_cache::coordinator::request::SlotState>) {
+    let tok = Tokenizer::from_manifest(&e.manifest.charset);
+    let mut rng = Rng::new(seed);
+    let samples: Vec<_> = (0..b).map(|_| make_sample(Task::Gsm8kS, &mut rng, &tok, n)).collect();
+    pack_group(&samples, b, n, 16)
+}
+
+fn manifest_loads_and_is_complete(e: &Engine) {
+    assert!(e.manifest.variants.len() >= 40, "expected the full variant registry");
+    for m in ["llada_s", "dream_s", "llada15_s"] {
+        assert!(e.manifest.models.contains_key(m));
+        for v in ["vanilla", "spa_default", "spa_default_refresh", "manual_full", "probe"] {
+            assert!(e.manifest.variants.contains_key(&format!("{m}__{v}")), "{m}__{v}");
+        }
+    }
+    assert_eq!(e.manifest.tasks.len(), 7);
+}
+
+fn weights_load_for_all_models(e: &Engine) {
+    for m in ["llada_s", "dream_s", "llada15_s"] {
+        let w = e.weights(m).unwrap();
+        assert!(w.tensor_count() > 50, "{m}: {}", w.tensor_count());
+        // embedding exists with the right element count (device-resident)
+        let emb = w.get("embed").unwrap();
+        let shape = xla::ArrayShape::try_from(&emb.on_device_shape().unwrap()).unwrap();
+        assert_eq!(shape.element_count(), 64 * 128);
+    }
+}
+
+fn vanilla_forward_produces_finite_logits(e: &Engine) {
+    let v = e.load_variant("llada_s__vanilla").unwrap();
+    let (b, n) = (v.info.batch, v.info.seq_len);
+    let (tokens, _) = sample_tokens(e, b, n, 3);
+    let tok_lit = literal_i32(&[b, n], &tokens).unwrap();
+    let outs = e.run(&v, &[&tok_lit]).unwrap();
+    let logits = to_f32_vec(&outs[0]).unwrap();
+    assert_eq!(logits.len(), b * n * 64);
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+fn spa_full_budget_matches_vanilla_logits(e: &Engine) {
+    // spa_refresh logits must equal the vanilla executable's logits exactly
+    // (same math, different graph) — the cross-executable consistency check.
+    let van = e.load_variant("llada_s__vanilla").unwrap();
+    let rfr = e.load_variant("llada_s__spa_default_refresh").unwrap();
+    let (b, n) = (van.info.batch, van.info.seq_len);
+    let (tokens, _) = sample_tokens(e, b, n, 4);
+    let tok_lit = literal_i32(&[b, n], &tokens).unwrap();
+    let lv = to_f32_vec(&e.run(&van, &[&tok_lit]).unwrap()[0]).unwrap();
+    let lr = to_f32_vec(&e.run(&rfr, &[&tok_lit]).unwrap()[0]).unwrap();
+    let max_err = lv
+        .iter()
+        .zip(&lr)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "vanilla vs spa_refresh logits diverge: {max_err}");
+}
+
+fn spa_step_is_fixed_point_on_unchanged_tokens(e: &Engine) {
+    let rfr = e.load_variant("llada_s__spa_default_refresh").unwrap();
+    let stp = e.load_variant("llada_s__spa_default").unwrap();
+    let (b, n) = (rfr.info.batch, rfr.info.seq_len);
+    let (tokens, _) = sample_tokens(e, b, n, 5);
+    let tok_lit = literal_i32(&[b, n], &tokens).unwrap();
+    let mut outs = e.run(&rfr, &[&tok_lit]).unwrap();
+    let l0 = to_f32_vec(&outs[0]).unwrap();
+    let caches: Vec<_> = outs.drain(1..).collect();
+    let mut inputs = vec![&tok_lit];
+    inputs.extend(caches.iter());
+    let outs2 = e.run(&stp, &inputs).unwrap();
+    let l1 = to_f32_vec(&outs2[0]).unwrap();
+    let max_err = l0.iter().zip(&l1).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "sparse step drifted on unchanged input: {max_err}");
+}
+
+fn pallas_variant_matches_jnp_variant(e: &Engine) {
+    let jn = e.load_variant("llada_s__spa_default_refresh").unwrap();
+    let pl = e.load_variant("llada_s__spa_default_pallas_refresh").unwrap();
+    let (b, n) = (jn.info.batch, jn.info.seq_len);
+    let (tokens, _) = sample_tokens(e, b, n, 6);
+    let tok_lit = literal_i32(&[b, n], &tokens).unwrap();
+    let lj = to_f32_vec(&e.run(&jn, &[&tok_lit]).unwrap()[0]).unwrap();
+    let lp = to_f32_vec(&e.run(&pl, &[&tok_lit]).unwrap()[0]).unwrap();
+    let max_err = lj.iter().zip(&lp).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_err < 1e-2, "pallas vs jnp backend diverge: {max_err}");
+}
+
+fn full_decode_all_methods_complete(e: &Engine) {
+    let specs = [
+        ("vanilla", MethodSpec::Vanilla),
+        ("spa", MethodSpec::Spa { variant: "spa_default".into(), refresh_interval: 0 }),
+        ("manual/window", MethodSpec::Manual { k: 16, policy: IndexPolicy::Window, refresh_interval: 16 }),
+        ("manual/block", MethodSpec::Manual { k: 16, policy: IndexPolicy::Block, refresh_interval: 0 }),
+        ("manual/conf", MethodSpec::Manual { k: 16, policy: IndexPolicy::LowConfidence, refresh_interval: 16 }),
+        ("multistep", MethodSpec::Multistep),
+    ];
+    for (name, spec) in specs {
+        let mut method = Method::new(e, "llada_s", spec).unwrap();
+        let (b, n, _) = method.geometry();
+        let (mut tokens, mut slots) = sample_tokens(e, b, n, 7);
+        let mode = if name == "manual/block" {
+            UnmaskMode::BlockParallel { threshold: 0.9 }
+        } else {
+            UnmaskMode::Parallel { threshold: 0.9 }
+        };
+        let mut sampler = Sampler::greedy(mode);
+        let out = run_group(e, &mut method, &mut sampler, &mut tokens, &mut slots, 6 * n).unwrap();
+        assert!(
+            !tokens.iter().any(|&t| t == MASK),
+            "{name}: decode left masks after {} steps",
+            out.steps
+        );
+        assert!(out.steps >= 1);
+        assert!(out.decoded.iter().sum::<usize>() > 0);
+    }
+}
+
+fn decode_is_deterministic(e: &Engine) {
+    let mut results = Vec::new();
+    for _ in 0..2 {
+        let spec = MethodSpec::Spa { variant: "spa_default".into(), refresh_interval: 0 };
+        let mut method = Method::new(e, "llada_s", spec).unwrap();
+        let (b, n, _) = method.geometry();
+        let (mut tokens, mut slots) = sample_tokens(e, b, n, 8);
+        let mut sampler = Sampler::greedy(UnmaskMode::Parallel { threshold: 0.9 });
+        run_group(e, &mut method, &mut sampler, &mut tokens, &mut slots, 6 * n).unwrap();
+        results.push(tokens);
+    }
+    assert_eq!(results[0], results[1], "greedy decode must be deterministic");
+}
+
+fn gqa_model_decodes(e: &Engine) {
+    let spec = MethodSpec::Spa { variant: "spa_default".into(), refresh_interval: 0 };
+    let mut method = Method::new(e, "dream_s", spec).unwrap();
+    let (b, n, _) = method.geometry();
+    let (mut tokens, mut slots) = sample_tokens(e, b, n, 9);
+    let mut sampler = Sampler::greedy(UnmaskMode::Parallel { threshold: 0.9 });
+    let out = run_group(e, &mut method, &mut sampler, &mut tokens, &mut slots, 6 * n).unwrap();
+    assert!(!tokens.iter().any(|&t| t == MASK), "left masks after {} steps", out.steps);
+}
+
+/// One engine per process: PJRT handles are !Send, so all checks run
+/// sequentially inside a single #[test].
+#[test]
+fn integration_suite() {
+    let e = Engine::from_default_artifacts().expect("run `make artifacts` first");
+    eprintln!("[integration] manifest_loads_and_is_complete");
+    manifest_loads_and_is_complete(&e);
+    eprintln!("[integration] weights_load_for_all_models");
+    weights_load_for_all_models(&e);
+    eprintln!("[integration] vanilla_forward_produces_finite_logits");
+    vanilla_forward_produces_finite_logits(&e);
+    eprintln!("[integration] spa_full_budget_matches_vanilla_logits");
+    spa_full_budget_matches_vanilla_logits(&e);
+    eprintln!("[integration] spa_step_is_fixed_point_on_unchanged_tokens");
+    spa_step_is_fixed_point_on_unchanged_tokens(&e);
+    eprintln!("[integration] pallas_variant_matches_jnp_variant");
+    pallas_variant_matches_jnp_variant(&e);
+    eprintln!("[integration] full_decode_all_methods_complete");
+    full_decode_all_methods_complete(&e);
+    eprintln!("[integration] decode_is_deterministic");
+    decode_is_deterministic(&e);
+    eprintln!("[integration] gqa_model_decodes");
+    gqa_model_decodes(&e);
+}

@@ -1,0 +1,84 @@
+//! End-to-end serving test: TCP server + scheduler + continuous batching
+//! over the real artifacts.  Submits more requests than slots to exercise
+//! queueing, admission and slot reuse.
+
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use spa_cache::coordinator::batcher::BatcherConfig;
+use spa_cache::coordinator::decode::{Sampler, UnmaskMode};
+use spa_cache::coordinator::methods::{Method, MethodSpec};
+use spa_cache::coordinator::scheduler::{Command, Scheduler};
+use spa_cache::coordinator::server::{self, Client};
+use spa_cache::runtime::engine::Engine;
+use spa_cache::util::json::Json;
+
+#[test]
+fn serve_e2e_queue_and_batching() {
+    // The engine is !Send, so the scheduler thread builds it itself; the
+    // manifest facts the server needs are read out up front.
+    let (seq_len, charset) = {
+        let e = Engine::from_default_artifacts().expect("run `make artifacts` first");
+        (e.manifest.seq_len, e.manifest.charset.clone())
+    };
+
+    let (tx, rx) = channel::<Command>();
+    let addr = "127.0.0.1:7411";
+    let server_tx = tx.clone();
+    let server = std::thread::spawn({
+        let addr = addr.to_string();
+        let charset = charset.clone();
+        move || server::serve(&addr, seq_len, &charset, server_tx)
+    });
+    let sched_thread = std::thread::spawn(move || {
+        let engine = Engine::from_default_artifacts().unwrap();
+        let spec = MethodSpec::Spa { variant: "spa_default".into(), refresh_interval: 0 };
+        let method = Method::new(&engine, "llada_s", spec).unwrap();
+        let sampler = Sampler::greedy(UnmaskMode::Parallel { threshold: 0.9 });
+        let batcher =
+            BatcherConfig { batch: 4, min_free: 2, max_wait: Duration::from_millis(50) };
+        let mut sched = Scheduler::new(engine, method, sampler, batcher, 4 * seq_len);
+        sched.run(rx)
+    });
+    std::thread::sleep(Duration::from_millis(100));
+
+    // 6 concurrent clients > 4 slots -> forces queueing + slot reuse.
+    let clients: Vec<_> = (0..6)
+        .map(|i| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).expect("connect");
+                let prompt = format!("#q {}+{}=?#a ", i % 5, (i + 2) % 5);
+                let r = c
+                    .request(&Json::obj(vec![
+                        ("op", Json::str("generate")),
+                        ("id", Json::Num(i as f64)),
+                        ("task", Json::str("gsm8k_s")),
+                        ("prompt", Json::Str(prompt)),
+                        ("gen_len", Json::Num(16.0)),
+                    ]))
+                    .expect("request");
+                assert!(r.get("error").is_none(), "server error: {r:?}");
+                assert!(r.get("latency_ms").and_then(|x| x.as_f64()).unwrap_or(-1.0) > 0.0);
+                r
+            })
+        })
+        .collect();
+
+    let mut ids = Vec::new();
+    for c in clients {
+        let r = c.join().unwrap();
+        ids.push(r.get("id").and_then(|x| x.as_i64()).unwrap());
+    }
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2, 3, 4, 5], "every client answered exactly once");
+
+    // stats + shutdown
+    let mut c = Client::connect(addr).unwrap();
+    let stats = c.stats().unwrap();
+    assert!(stats.contains("spa_requests_completed 6"), "stats:\n{stats}");
+    c.shutdown().unwrap();
+    let _ = tx.send(Command::Shutdown);
+    sched_thread.join().unwrap().unwrap();
+    let _ = server.join();
+}

@@ -1,13 +1,15 @@
-//! END-TO-END DRIVER (DESIGN.md / EXPERIMENTS.md): start the SPA-Cache
-//! server on the toy LLaDA model, fire a mixed-task client load at it over
-//! TCP, and report serving latency/throughput — proving all layers compose:
-//! Pallas-validated kernels → AOT HLO → PJRT runtime → coordinator →
+//! END-TO-END DRIVER (DESIGN.md §8 / EXPERIMENTS.md): start the SPA-Cache
+//! server on the toy LLaDA model with N engine workers behind the request
+//! router, fire a mixed-task client load at it over TCP, and report serving
+//! latency/throughput — proving all layers compose: Pallas-validated
+//! kernels → AOT HLO → PJRT runtime → router → per-worker
 //! batcher/scheduler → TCP frontend.
 //!
 //!   cargo run --release --example serve_e2e -- [--requests 24] [--clients 6]
-//!                                              [--method spa] [--model llada_s]
+//!                                              [--workers 2] [--method spa]
+//!                                              [--model llada_s]
 
-use std::sync::mpsc::channel;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -15,10 +17,12 @@ use anyhow::Result;
 use spa_cache::coordinator::batcher::BatcherConfig;
 use spa_cache::coordinator::decode::{Sampler, UnmaskMode};
 use spa_cache::coordinator::methods::{Method, MethodSpec};
-use spa_cache::coordinator::scheduler::{Command, Scheduler};
+use spa_cache::coordinator::router::Router;
+use spa_cache::coordinator::scheduler::Worker;
 use spa_cache::coordinator::server::{self, Client};
 use spa_cache::model::tasks::{render_prompt, ALL_TASKS};
 use spa_cache::runtime::engine::Engine;
+use spa_cache::runtime::manifest::Manifest;
 use spa_cache::util::cli::Args;
 use spa_cache::util::json::Json;
 use spa_cache::util::rng::Rng;
@@ -28,24 +32,24 @@ fn main() -> Result<()> {
     spa_cache::util::log::init();
     let args = Args::parse();
     let n_requests = args.usize_or("requests", 24);
-    let n_clients = args.usize_or("clients", 6);
+    let n_clients = args.count_or("clients", 6);
+    let n_workers = args.count_or("workers", 2);
     let method_name = args.str_or("method", "spa");
     let model = args.str_or("model", "llada_s");
     let addr = args.str_or("addr", "127.0.0.1:7391");
     let threshold = args.f64_or("threshold", 0.9);
 
-    let (seq_len, charset) = {
-        let e = Engine::from_default_artifacts()?;
-        (e.manifest.seq_len, e.manifest.charset.clone())
-    };
+    // Manifest parsed once; each worker thread builds its own engine from a
+    // clone (PJRT handles are !Send).
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let seq_len = manifest.seq_len;
+    let charset = manifest.charset.clone();
 
-    // Scheduler thread owns the engine (PJRT handles are !Send).
-    let (tx, rx) = channel::<Command>();
-    let sched = std::thread::spawn({
+    let (router, worker_handles) = Router::spawn(n_workers, {
         let method_name = method_name.clone();
         let model = model.clone();
-        move || -> Result<()> {
-            let engine = Engine::from_default_artifacts()?;
+        move |id| {
+            let engine = Engine::from_manifest(manifest.clone())?;
             let spec = MethodSpec::by_name(&method_name, 16)?;
             let method = Method::new(&engine, &model, spec)?;
             let mode = if method_name == "fast_dllm" {
@@ -56,22 +60,23 @@ fn main() -> Result<()> {
             let sampler = Sampler::greedy(mode);
             let batcher =
                 BatcherConfig { batch: 4, min_free: 2, max_wait: Duration::from_millis(100) };
-            Scheduler::new(engine, method, sampler, batcher, 6 * seq_len).run(rx)
+            Ok(Worker::new(id, engine, method, sampler, batcher, 6 * seq_len))
         }
-    });
+    })?;
     let server = std::thread::spawn({
         let addr = addr.clone();
         let charset = charset.clone();
-        let tx = tx.clone();
-        move || server::serve(&addr, seq_len, &charset, tx)
+        let router = router.clone();
+        move || server::serve(&addr, seq_len, &charset, router)
     });
     std::thread::sleep(Duration::from_millis(200));
 
     // Client fleet: each worker sends its share of mixed-task requests.
     println!(
-        "serve_e2e: {n_requests} requests over {n_clients} clients, method={method_name}, model={model}"
+        "serve_e2e: {n_requests} requests over {n_clients} clients, \
+         {n_workers} engine workers, method={method_name}, model={model}"
     );
-    let results = Arc::new(Mutex::new(Vec::<(f64, f64, f64)>::new()));
+    let results = Arc::new(Mutex::new(Vec::<(f64, f64, f64, i64)>::new()));
     let t_start = Instant::now();
     let mut handles = Vec::new();
     for c in 0..n_clients {
@@ -96,7 +101,8 @@ fn main() -> Result<()> {
                 let wall = t0.elapsed().as_secs_f64() * 1e3;
                 let ttft = r.get("ttft_ms").and_then(|x| x.as_f64()).unwrap_or(f64::NAN);
                 let decoded = r.get("decoded").and_then(|x| x.as_f64()).unwrap_or(0.0);
-                results.lock().unwrap().push((wall, ttft, decoded));
+                let worker = r.get("worker").and_then(|x| x.as_i64()).unwrap_or(-1);
+                results.lock().unwrap().push((wall, ttft, decoded, worker));
             }
         }));
     }
@@ -109,6 +115,10 @@ fn main() -> Result<()> {
     let walls: Vec<f64> = results.iter().map(|r| r.0).collect();
     let ttfts: Vec<f64> = results.iter().map(|r| r.1).filter(|x| x.is_finite()).collect();
     let tokens: f64 = results.iter().map(|r| r.2).sum();
+    let mut per_worker: BTreeMap<i64, usize> = BTreeMap::new();
+    for r in results.iter() {
+        *per_worker.entry(r.3).or_default() += 1;
+    }
     let lw = Summary::of(&walls);
     println!("\n=== serve_e2e results ({} completed) ===", results.len());
     println!("wall time           : {total_s:.1} s");
@@ -118,13 +128,20 @@ fn main() -> Result<()> {
         let ts = Summary::of(&ttfts);
         println!("TTFT ms             : mean {:.0}  p50 {:.0}  p90 {:.0}", ts.mean, ts.p50, ts.p90);
     }
+    let shares: Vec<String> =
+        per_worker.iter().map(|(w, n)| format!("worker {w}: {n}")).collect();
+    println!("dispatch (JSQ)      : {}", shares.join(", "));
 
     // Server-side metrics + shutdown.
     let mut c = Client::connect(&addr)?;
     println!("\nserver metrics:\n{}", c.stats()?);
     c.shutdown()?;
-    let _ = tx.send(Command::Shutdown);
-    sched.join().unwrap()?;
+    for h in worker_handles {
+        match h.join() {
+            Ok(r) => r?,
+            Err(_) => anyhow::bail!("worker thread panicked"),
+        }
+    }
     let _ = server.join();
     Ok(())
 }

@@ -64,7 +64,7 @@ def ffn_swiglu(
 
 
 def vmem_footprint_bytes(d: int, f: int, block_m: int, itemsize: int = 4) -> int:
-    """Analytic VMEM footprint of one program instance (DESIGN.md §8)."""
+    """Analytic VMEM footprint of one program instance (DESIGN.md §9)."""
     x_tile = block_m * d * itemsize
     weights = (2 * d * f + f * d) * itemsize
     inter = 2 * block_m * f * itemsize

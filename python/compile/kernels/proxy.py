@@ -5,7 +5,7 @@ Fig. 4): dLLM-Cache projects every token into the full ``d``-dim Value space
 each step; SPA-Cache projects into the ``r ≪ d`` principal subspace
 ``p = Λ_r V_rᵀ h`` and scores drift there.
 
-TPU mapping (DESIGN.md §8): the grid tiles the token axis; each program
+TPU mapping (DESIGN.md §9): the grid tiles the token axis; each program
 streams one ``(block_n, d)`` tile of ``H`` from HBM into VMEM, multiplies it
 against the VMEM-resident ``W_rᵀ`` (``d×r``, one MXU tile column for
 ``r ≤ 128``), and fuses the cosine comparison against the cached proxies in
@@ -83,7 +83,7 @@ def proxy_score(
 
 
 def vmem_footprint_bytes(d: int, r: int, block_n: int, itemsize: int = 4) -> int:
-    """Analytic VMEM footprint of one program instance (DESIGN.md §8).
+    """Analytic VMEM footprint of one program instance (DESIGN.md §9).
 
     h tile + resident W_r + proxy-cache tile + outputs.  Used by the perf
     notes to check the schedule fits the ~16 MiB/core VMEM budget at the

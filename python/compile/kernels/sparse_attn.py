@@ -90,7 +90,7 @@ def sparse_attn(
 
 
 def vmem_footprint_bytes(kq: int, n: int, dh: int, block_k: int, itemsize: int = 4) -> int:
-    """Analytic VMEM footprint of one program instance (DESIGN.md §8)."""
+    """Analytic VMEM footprint of one program instance (DESIGN.md §9)."""
     q_tile = kq * dh * itemsize
     kv_chunk = 2 * block_k * dh * itemsize
     acc = kq * (dh + 2) * itemsize

@@ -112,7 +112,7 @@ def test_rmsnorm_unit_scale():
 
 
 def test_vmem_footprints_fit_tpu_budget():
-    """Analytic VMEM check at the paper's scale (DESIGN.md §8)."""
+    """Analytic VMEM check at the paper's scale (DESIGN.md §9)."""
     vmem = 16 * 1024 * 1024
     # proxy kernel at LLaDA-8B scale: d=4096, r=128, block 128
     assert proxy.vmem_footprint_bytes(4096, 128, 128) < vmem

@@ -1,8 +1,10 @@
 //! Batch-group decode loop: drives a `Method` + `Sampler` over one batch of
 //! requests until every slot finishes (or a step budget runs out).
 //!
-//! This is the unit the benches use directly; the serving scheduler reuses
-//! the same per-step pieces but interleaves slot joins between steps.
+//! This is the unit the benches use directly; the serving worker
+//! (`scheduler::Worker`) reuses [`apply_step_out`] / [`masks_in_row`] so the
+//! per-step decode semantics exist in exactly one place, and interleaves
+//! slot joins between steps.
 
 use std::time::Instant;
 
@@ -42,6 +44,50 @@ impl GroupOutcome {
     }
 }
 
+/// MASK count in row `bi` of a `[B, N]` token buffer (decode progress).
+pub fn masks_in_row(tokens: &[i32], seq_len: usize, bi: usize) -> usize {
+    tokens[bi * seq_len..(bi + 1) * seq_len].iter().filter(|&&t| t == MASK).count()
+}
+
+/// Apply one engine [`StepOut`] to the token buffer + slot state: logits go
+/// through the sampler's unmasking policy; in-graph token updates
+/// (multistep) are diff-committed so per-slot progress/locality state stays
+/// accurate.  Shared by [`run_group`] and the serving worker.
+pub fn apply_step_out(
+    out: StepOut,
+    tokens: &mut Vec<i32>,
+    slots: &mut [SlotState],
+    sampler: &mut Sampler,
+    geometry: (usize, usize, usize),
+) -> Result<()> {
+    let (b, n, v) = geometry;
+    match out {
+        StepOut { logits: Some(logits), .. } => {
+            sampler.unmask(tokens, &logits, b, n, v, slots);
+        }
+        StepOut { new_tokens: Some(nt), .. } => {
+            // In-graph decoding: infer per-slot commits from the diff.
+            for bi in 0..b {
+                if !slots[bi].occupied {
+                    continue;
+                }
+                let mut dec = Vec::new();
+                for p in 0..n {
+                    if tokens[bi * n + p] == MASK && nt[bi * n + p] != MASK {
+                        dec.push(p);
+                    }
+                }
+                slots[bi].decoded_since_refresh.extend(dec.iter().copied());
+                slots[bi].last_decoded = dec;
+                slots[bi].steps += 1;
+            }
+            *tokens = nt;
+        }
+        _ => anyhow::bail!("step produced neither logits nor tokens"),
+    }
+    Ok(())
+}
+
 /// Decode a whole group to completion.
 pub fn run_group(
     engine: &Engine,
@@ -58,9 +104,7 @@ pub fn run_group(
     let t_start = Instant::now();
     let mut step_ms = Vec::new();
     let mut ttft_ms = vec![f64::NAN; b];
-    let initial_masks: Vec<usize> = (0..b)
-        .map(|bi| tokens[bi * n..(bi + 1) * n].iter().filter(|&&t| t == MASK).count())
-        .collect();
+    let initial_masks: Vec<usize> = (0..b).map(|bi| masks_in_row(tokens, n, bi)).collect();
 
     let mut steps = 0usize;
     while steps < max_steps {
@@ -70,30 +114,7 @@ pub fn run_group(
         }
         let t0 = Instant::now();
         let out: StepOut = method.step(engine, tokens, slots)?;
-        match out {
-            StepOut { logits: Some(logits), .. } => {
-                sampler.unmask(tokens, &logits, b, n, v, slots);
-            }
-            StepOut { new_tokens: Some(nt), .. } => {
-                // In-graph decoding: infer per-slot commits from the diff.
-                for bi in 0..b {
-                    if !slots[bi].occupied {
-                        continue;
-                    }
-                    let mut dec = Vec::new();
-                    for p in 0..n {
-                        if tokens[bi * n + p] == MASK && nt[bi * n + p] != MASK {
-                            dec.push(p);
-                        }
-                    }
-                    slots[bi].decoded_since_refresh.extend(dec.iter().copied());
-                    slots[bi].last_decoded = dec;
-                    slots[bi].steps += 1;
-                }
-                *tokens = nt;
-            }
-            _ => anyhow::bail!("step produced neither logits nor tokens"),
-        }
+        apply_step_out(out, tokens, slots, sampler, (b, n, v))?;
         let ms = t0.elapsed().as_secs_f64() * 1e3;
         step_ms.push(ms);
         if steps == 0 {
@@ -107,13 +128,8 @@ pub fn run_group(
         steps += 1;
     }
 
-    let decoded: Vec<usize> = (0..b)
-        .map(|bi| {
-            let left =
-                tokens[bi * n..(bi + 1) * n].iter().filter(|&&t| t == MASK).count();
-            initial_masks[bi] - left
-        })
-        .collect();
+    let decoded: Vec<usize> =
+        (0..b).map(|bi| initial_masks[bi] - masks_in_row(tokens, n, bi)).collect();
     Ok(GroupOutcome {
         tokens: tokens.clone(),
         steps,

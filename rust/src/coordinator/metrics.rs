@@ -1,11 +1,36 @@
 //! Serving metrics: request latency/TTFT/throughput aggregation plus a
-//! Prometheus-style text dump (scrape endpoint substrate).
+//! Prometheus-style text dump (scrape endpoint substrate) — DESIGN.md §6.
+//!
+//! Each worker owns a private `Metrics`; `Command::Stats` replies with a
+//! clone (the snapshot), and the router merges snapshots at render time:
+//! aggregate (unlabelled) series first, then per-worker gauges labelled
+//! `{worker="<id>"}`.  TTFT and latency are measured from
+//! `Request::submitted`, so time spent in the batcher queue is included —
+//! `queue_wait` isolates that component for the router's dispatch policy.
 
 use std::time::Instant;
 
+use crate::util::rng::Rng;
 use crate::util::stats::{Summary, Welford};
 
-#[derive(Debug)]
+/// Cap on retained samples per series: means (Welford) stay exact, while
+/// percentiles degrade to a uniform reservoir approximation past the cap —
+/// and `Command::Stats` snapshots stay O(1) instead of O(requests served).
+const SAMPLE_CAP: usize = 4096;
+
+/// Reservoir insert: `seen` is the total observations including `x`.
+fn reservoir_push(rng: &mut Rng, samples: &mut Vec<f64>, seen: u64, x: f64) {
+    if samples.len() < SAMPLE_CAP {
+        samples.push(x);
+    } else {
+        let j = rng.below(seen) as usize;
+        if j < SAMPLE_CAP {
+            samples[j] = x;
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
 pub struct Metrics {
     started: Instant,
     pub requests_submitted: u64,
@@ -15,8 +40,11 @@ pub struct Metrics {
     pub refreshes: u64,
     pub ttft: Welford,
     pub latency: Welford,
+    pub queue_wait: Welford,
     ttft_samples: Vec<f64>,
     latency_samples: Vec<f64>,
+    queue_wait_samples: Vec<f64>,
+    rng: Rng,
     pub queue_depth: usize,
     pub active_slots: usize,
 }
@@ -32,8 +60,11 @@ impl Default for Metrics {
             refreshes: 0,
             ttft: Welford::default(),
             latency: Welford::default(),
+            queue_wait: Welford::default(),
             ttft_samples: Vec::new(),
             latency_samples: Vec::new(),
+            queue_wait_samples: Vec::new(),
+            rng: Rng::new(0x5A3B1E5),
             queue_depth: 0,
             active_slots: 0,
         }
@@ -46,10 +77,23 @@ impl Metrics {
         self.tokens_decoded += decoded as u64;
         if ttft_ms.is_finite() {
             self.ttft.push(ttft_ms);
-            self.ttft_samples.push(ttft_ms);
+            reservoir_push(&mut self.rng, &mut self.ttft_samples, self.ttft.count(), ttft_ms);
         }
         self.latency.push(latency_ms);
-        self.latency_samples.push(latency_ms);
+        reservoir_push(&mut self.rng, &mut self.latency_samples, self.latency.count(), latency_ms);
+    }
+
+    /// Time a request spent queued in the batcher before admission.
+    pub fn record_queue_wait(&mut self, wait_ms: f64) {
+        if wait_ms.is_finite() {
+            self.queue_wait.push(wait_ms);
+            reservoir_push(
+                &mut self.rng,
+                &mut self.queue_wait_samples,
+                self.queue_wait.count(),
+                wait_ms,
+            );
+        }
     }
 
     /// Decoded tokens per wall-clock second since startup.
@@ -78,10 +122,41 @@ impl Metrics {
         }
     }
 
-    /// Prometheus-style exposition text.
-    pub fn render(&self) -> String {
-        let mut s = String::new();
-        let kv = [
+    /// Fold `other` into `self` (used to aggregate worker snapshots).
+    /// Counters add; Welford states merge exactly (counts/means stay
+    /// exact even past `SAMPLE_CAP`); percentile reservoirs concatenate
+    /// (bounded, approximate); gauges (queue depth, active slots) add;
+    /// `started` keeps the earliest epoch so `tps` stays a whole-system
+    /// rate.
+    pub fn merge(&mut self, other: &Metrics) {
+        if other.started < self.started {
+            self.started = other.started;
+        }
+        self.requests_submitted += other.requests_submitted;
+        self.requests_completed += other.requests_completed;
+        self.tokens_decoded += other.tokens_decoded;
+        self.steps += other.steps;
+        self.refreshes += other.refreshes;
+        self.queue_depth += other.queue_depth;
+        self.active_slots += other.active_slots;
+        self.ttft.merge(&other.ttft);
+        self.latency.merge(&other.latency);
+        self.queue_wait.merge(&other.queue_wait);
+        let seen = self.latency.count().max(1);
+        for &x in &other.ttft_samples {
+            reservoir_push(&mut self.rng, &mut self.ttft_samples, seen, x);
+        }
+        for &x in &other.latency_samples {
+            reservoir_push(&mut self.rng, &mut self.latency_samples, seen, x);
+        }
+        for &x in &other.queue_wait_samples {
+            reservoir_push(&mut self.rng, &mut self.queue_wait_samples, seen, x);
+        }
+    }
+
+    /// Gauge/counter series as (name, value) pairs.
+    fn series(&self) -> Vec<(&'static str, f64)> {
+        vec![
             ("spa_requests_submitted", self.requests_submitted as f64),
             ("spa_requests_completed", self.requests_completed as f64),
             ("spa_tokens_decoded", self.tokens_decoded as f64),
@@ -92,13 +167,42 @@ impl Metrics {
             ("spa_tps", self.tps()),
             ("spa_ttft_ms_mean", self.ttft.mean()),
             ("spa_latency_ms_mean", self.latency.mean()),
-        ];
-        for (k, v) in kv {
-            s.push_str(&format!("{k} {v}\n"));
+            ("spa_queue_wait_ms_mean", self.queue_wait.mean()),
+        ]
+    }
+
+    /// Render with an optional Prometheus label set (e.g. `{worker="0"}`)
+    /// appended to every metric name.
+    fn render_with_labels(&self, labels: &str) -> String {
+        let mut s = String::new();
+        for (k, v) in self.series() {
+            s.push_str(&format!("{k}{labels} {v}\n"));
         }
         if let Some(l) = self.latency_summary() {
-            s.push_str(&format!("spa_latency_ms_p50 {}\n", l.p50));
-            s.push_str(&format!("spa_latency_ms_p99 {}\n", l.p99));
+            s.push_str(&format!("spa_latency_ms_p50{labels} {}\n", l.p50));
+            s.push_str(&format!("spa_latency_ms_p99{labels} {}\n", l.p99));
+        }
+        s
+    }
+
+    /// Prometheus-style exposition text (single worker / aggregate).
+    pub fn render(&self) -> String {
+        self.render_with_labels("")
+    }
+
+    /// Exposition text for a set of per-worker snapshots: aggregate series
+    /// first (unlabelled, as a single-worker server would emit), then the
+    /// same series per worker with `{worker="<id>"}` labels.
+    pub fn render_workers(snaps: &[(usize, Metrics)]) -> String {
+        let mut total = Metrics::default();
+        // `total.started` begins at "now"; merging pulls it back to the
+        // earliest worker epoch so the aggregate tps is meaningful.
+        for (_, m) in snaps {
+            total.merge(m);
+        }
+        let mut s = total.render();
+        for (id, m) in snaps {
+            s.push_str(&m.render_with_labels(&format!("{{worker=\"{id}\"}}")));
         }
         s
     }
@@ -127,5 +231,48 @@ mod tests {
         m.record_completion(f64::NAN, 50.0, 1);
         assert_eq!(m.ttft.count(), 0);
         assert_eq!(m.latency.count(), 1);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_samples() {
+        let mut a = Metrics::default();
+        a.record_completion(10.0, 100.0, 8);
+        a.queue_depth = 2;
+        let mut b = Metrics::default();
+        b.record_completion(30.0, 300.0, 4);
+        b.record_completion(50.0, 500.0, 4);
+        b.active_slots = 3;
+        a.merge(&b);
+        assert_eq!(a.requests_completed, 3);
+        assert_eq!(a.tokens_decoded, 16);
+        assert_eq!(a.queue_depth, 2);
+        assert_eq!(a.active_slots, 3);
+        assert_eq!(a.latency.count(), 3);
+        assert!((a.ttft.mean() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_worker_labels() {
+        let mut w0 = Metrics::default();
+        w0.record_completion(10.0, 100.0, 8);
+        let mut w1 = Metrics::default();
+        w1.record_completion(20.0, 200.0, 8);
+        w1.queue_depth = 1;
+        let text = Metrics::render_workers(&[(0, w0), (1, w1)]);
+        // Aggregate first, unlabelled.
+        assert!(text.contains("spa_requests_completed 2\n"), "aggregate:\n{text}");
+        // Then per-worker labelled series.
+        assert!(text.contains("spa_requests_completed{worker=\"0\"} 1"), "{text}");
+        assert!(text.contains("spa_queue_depth{worker=\"1\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn queue_wait_tracked() {
+        let mut m = Metrics::default();
+        m.record_queue_wait(40.0);
+        m.record_queue_wait(60.0);
+        assert_eq!(m.queue_wait.count(), 2);
+        assert!((m.queue_wait.mean() - 50.0).abs() < 1e-9);
+        assert!(m.render().contains("spa_queue_wait_ms_mean 50"));
     }
 }

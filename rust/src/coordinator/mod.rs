@@ -1,9 +1,13 @@
 //! L3 coordinator — the serving-side system contribution.
 //!
-//! Pipeline: `server` (TCP frontend) → `batcher` (admission) → `scheduler`
-//! (continuous batching over fixed slots) → `methods` (cache strategies:
-//! SPA-Cache + all paper baselines) → `decode` (unmasking policies) with
-//! `metrics` throughout.  `group` is the batch-at-once loop the benches use.
+//! Pipeline: `server` (TCP frontend) → `router` (join-shortest-queue
+//! dispatch across N engine workers) → per-worker `batcher` (admission) →
+//! `scheduler::Worker` (continuous batching over fixed slots) → `methods`
+//! (cache strategies: SPA-Cache + all paper baselines) → `decode`
+//! (unmasking policies) with `metrics` throughout.  `group` is the
+//! batch-at-once loop the benches use; the worker shares its per-step
+//! semantics (`group::apply_step_out`).  See DESIGN.md §8 for the
+//! worker/router architecture.
 
 pub mod batcher;
 pub mod decode;
@@ -11,5 +15,6 @@ pub mod group;
 pub mod metrics;
 pub mod methods;
 pub mod request;
+pub mod router;
 pub mod scheduler;
 pub mod server;

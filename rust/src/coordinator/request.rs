@@ -48,6 +48,10 @@ pub struct SlotState {
     pub decoded_since_refresh: Vec<usize>,
     pub steps: usize,
     pub ttft_ms: Option<f64>,
+    /// When the request entered the system (`Request::submitted`) — TTFT and
+    /// latency are measured from here so batcher queueing delay is visible.
+    pub submitted: Option<Instant>,
+    /// When the request was admitted into this slot.
     pub started: Option<Instant>,
 }
 
@@ -64,6 +68,7 @@ impl SlotState {
             decoded_since_refresh: Vec::new(),
             steps: 0,
             ttft_ms: None,
+            submitted: None,
             started: None,
         }
     }
@@ -80,6 +85,7 @@ impl SlotState {
             decoded_since_refresh: Vec::new(),
             steps: 0,
             ttft_ms: None,
+            submitted: Some(req.submitted),
             started: Some(Instant::now()),
         }
     }

@@ -1,0 +1,408 @@
+//! Request router: shards serving across N independent decode workers
+//! (DESIGN.md §8).
+//!
+//! DLM cache state is batch-global — admitting one request invalidates the
+//! caches of everything decoding alongside it — so the scaling axis is
+//! horizontal: N workers, each owning its own engine + method + batcher +
+//! slot set on a dedicated thread.  The router dispatches each incoming
+//! request with a join-shortest-queue policy over shared load gauges
+//! (inflight count, published queue depth and free slots) and fans
+//! `stats`/`shutdown` out to every worker.
+//!
+//! PJRT handles are `!Send`, so [`Router::spawn`] takes a *factory* closure
+//! and each worker thread constructs its own engine; the manifest is parsed
+//! once up front and cloned into the factory (see `Engine::from_manifest`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::info;
+
+use super::metrics::Metrics;
+use super::request::{Request, Response};
+use super::scheduler::{Command, Worker};
+
+/// Shared load gauges for one worker: the router increments `inflight` at
+/// dispatch, the worker decrements it at completion and publishes its queue
+/// depth / free slot count every loop iteration.
+#[derive(Debug, Default)]
+pub struct WorkerStatus {
+    inflight: AtomicUsize,
+    queue_depth: AtomicUsize,
+    free_slots: AtomicUsize,
+}
+
+impl WorkerStatus {
+    pub fn inc_inflight(&self) {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn dec_inflight(&self) {
+        // Saturating: a shutdown can drop queued requests after dispatch.
+        let _ = self.inflight.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |x| {
+            Some(x.saturating_sub(1))
+        });
+    }
+
+    pub fn set_queue_depth(&self, d: usize) {
+        self.queue_depth.store(d, Ordering::SeqCst);
+    }
+
+    pub fn set_free_slots(&self, f: usize) {
+        self.free_slots.store(f, Ordering::SeqCst);
+    }
+
+    pub fn load(&self) -> WorkerLoad {
+        WorkerLoad {
+            inflight: self.inflight.load(Ordering::SeqCst),
+            queue_depth: self.queue_depth.load(Ordering::SeqCst),
+            free_slots: self.free_slots.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// A point-in-time view of one worker's load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerLoad {
+    /// Requests dispatched to this worker and not yet completed.
+    pub inflight: usize,
+    /// Batcher queue depth as last published by the worker.
+    pub queue_depth: usize,
+    /// Free batch slots as last published by the worker.
+    pub free_slots: usize,
+}
+
+impl WorkerLoad {
+    /// Join-shortest-queue score: inflight work beyond the spare slot
+    /// capacity, with the worker-published queue depth weighing queued
+    /// (not-yet-decoding) requests extra.  Lower is better.
+    pub fn jsq_score(&self) -> usize {
+        self.inflight.saturating_sub(self.free_slots) + self.queue_depth
+    }
+
+    /// The router's total dispatch order: JSQ score, then inflight count,
+    /// then cyclic distance from the rotating cursor (round-robins exact
+    /// ties).  `pick_worker` and `Router::submit` both rank by this key, so
+    /// the policy has exactly one definition.
+    fn order_key(&self, idx: usize, start: usize, n: usize) -> (usize, usize, usize) {
+        (self.jsq_score(), self.inflight, (idx + n - start % n) % n)
+    }
+}
+
+/// Pure JSQ selection over a load vector: minimise [`WorkerLoad::order_key`]
+/// with the tie-rotation anchored at `start`.  Returns the winning index.
+pub fn pick_worker(loads: &[WorkerLoad], start: usize) -> usize {
+    assert!(!loads.is_empty(), "router has no workers");
+    let n = loads.len();
+    (0..n).min_by_key(|&i| loads[i].order_key(i, start, n)).unwrap()
+}
+
+/// One worker's router-side endpoint: command channel + shared load gauges.
+#[derive(Clone)]
+pub struct WorkerEndpoint {
+    pub id: usize,
+    pub tx: Sender<Command>,
+    pub status: Arc<WorkerStatus>,
+}
+
+/// Dispatches requests across worker endpoints.  Cheaply cloneable — every
+/// server connection handler gets its own clone (mpsc senders are `Send +
+/// Clone` but historically not `Sync`).
+#[derive(Clone)]
+pub struct Router {
+    workers: Vec<WorkerEndpoint>,
+    /// Serialises pick+increment so concurrent submits see each other's
+    /// inflight bumps, and rotates ties round-robin.
+    cursor: Arc<Mutex<usize>>,
+}
+
+impl Router {
+    /// Build a router over existing endpoints (tests; embedded setups).
+    pub fn new(workers: Vec<WorkerEndpoint>) -> Router {
+        assert!(!workers.is_empty(), "router needs at least one worker");
+        Router { workers, cursor: Arc::new(Mutex::new(0)) }
+    }
+
+    /// Spawn `n` worker threads, each constructing its own `Worker` via
+    /// `factory(id)` (engines are `!Send`, so construction must happen on
+    /// the worker's thread).  Blocks until every worker has constructed
+    /// successfully — a bad model/method/artifact path fails loudly here
+    /// instead of leaving the server fronting dead workers.  Returns the
+    /// router plus the join handles; a handle resolves when its worker sees
+    /// `Shutdown` or its channel closes, yielding the run error if any.
+    pub fn spawn<F>(n: usize, factory: F) -> Result<(Router, Vec<JoinHandle<Result<()>>>)>
+    where
+        F: Fn(usize) -> Result<Worker> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(n > 0, "need at least one worker");
+        let factory = Arc::new(factory);
+        let (ready_tx, ready_rx) = channel::<(usize, bool)>();
+        let mut endpoints = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for id in 0..n {
+            let (tx, rx) = channel::<Command>();
+            let status = Arc::new(WorkerStatus::default());
+            let factory = Arc::clone(&factory);
+            let thread_status = Arc::clone(&status);
+            let ready = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("spa-engine-{id}"))
+                .spawn(move || -> Result<()> {
+                    let mut worker = match factory(id) {
+                        Ok(w) => {
+                            let _ = ready.send((id, true));
+                            w
+                        }
+                        Err(e) => {
+                            let _ = ready.send((id, false));
+                            return Err(e);
+                        }
+                    };
+                    worker.set_status(thread_status);
+                    info!("router", "worker {id} up");
+                    worker.run(rx)
+                })
+                .expect("spawn engine worker");
+            endpoints.push(WorkerEndpoint { id, tx, status });
+            handles.push(handle);
+        }
+        drop(ready_tx);
+
+        // Engine construction is slow (PJRT init, weight upload, lazy
+        // compiles kick in on the first request) — wait for every worker's
+        // readiness report rather than polling on a timer.
+        let teardown = |endpoints: &[WorkerEndpoint], handles: Vec<JoinHandle<Result<()>>>| {
+            for ep in endpoints {
+                let _ = ep.tx.send(Command::Shutdown);
+            }
+            let mut first_err = None;
+            for h in handles {
+                match h.join() {
+                    Ok(Err(e)) if first_err.is_none() => first_err = Some(e),
+                    _ => {}
+                }
+            }
+            first_err
+        };
+        for _ in 0..n {
+            match ready_rx.recv() {
+                Ok((_, true)) => {}
+                Ok((id, false)) => {
+                    let err = teardown(&endpoints, handles);
+                    return Err(err
+                        .unwrap_or_else(|| anyhow::anyhow!("worker {id} failed to start")));
+                }
+                Err(_) => {
+                    let err = teardown(&endpoints, handles);
+                    return Err(err.unwrap_or_else(|| {
+                        anyhow::anyhow!("a worker thread panicked during startup")
+                    }));
+                }
+            }
+        }
+        Ok((Router::new(endpoints), handles))
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Current load of every worker, by index.
+    pub fn loads(&self) -> Vec<WorkerLoad> {
+        self.workers.iter().map(|w| w.status.load()).collect()
+    }
+
+    /// Dispatch a request to the least-loaded worker; the response arrives
+    /// on `reply`.  Returns the chosen worker id, or `None` if every worker
+    /// channel is closed (the dropped `reply` sender then surfaces as a
+    /// recv error at the caller).
+    pub fn submit(&self, req: Request, reply: Sender<Response>) -> Option<usize> {
+        let mut cursor = self.cursor.lock().unwrap();
+        let start = *cursor;
+        *cursor = cursor.wrapping_add(1);
+        let loads = self.loads();
+        // Try in policy order so a dead worker (closed channel) falls
+        // through to the next-best candidate.
+        let n = self.workers.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| loads[i].order_key(i, start, n));
+        let mut req = req;
+        for i in order {
+            let ep = &self.workers[i];
+            ep.status.inc_inflight();
+            match ep.tx.send(Command::Submit(req, reply.clone())) {
+                Ok(()) => return Some(ep.id),
+                Err(std::sync::mpsc::SendError(cmd)) => {
+                    ep.status.dec_inflight();
+                    match cmd {
+                        Command::Submit(r, _) => req = r,
+                        _ => unreachable!("submit send returned a different command"),
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Fan `stats` out to every worker and render the merged Prometheus
+    /// text: aggregate series first, then per-worker labelled series.
+    pub fn stats(&self) -> String {
+        let mut snaps = Vec::with_capacity(self.workers.len());
+        for ep in &self.workers {
+            let (tx, rx) = channel();
+            if ep.tx.send(Command::Stats(tx)).is_err() {
+                continue;
+            }
+            // Workers drain commands between decode steps, so this answers
+            // promptly; the timeout guards against a wedged worker.
+            if let Ok(m) = rx.recv_timeout(Duration::from_secs(10)) {
+                snaps.push((ep.id, m));
+            }
+        }
+        Metrics::render_workers(&snaps)
+    }
+
+    /// Fan `shutdown` out to every worker.
+    pub fn shutdown(&self) {
+        for ep in &self.workers {
+            let _ = ep.tx.send(Command::Shutdown);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::Receiver;
+    use std::time::Instant;
+
+    fn load(inflight: usize, queue_depth: usize, free_slots: usize) -> WorkerLoad {
+        WorkerLoad { inflight, queue_depth, free_slots }
+    }
+
+    #[test]
+    fn jsq_prefers_free_capacity() {
+        // Worker 0 saturated (4 inflight, 0 free), worker 1 has room.
+        let loads = vec![load(4, 0, 0), load(1, 0, 3)];
+        assert_eq!(pick_worker(&loads, 0), 1);
+        // Both have capacity: fewer inflight wins.
+        let loads = vec![load(2, 0, 2), load(0, 0, 4)];
+        assert_eq!(pick_worker(&loads, 0), 1);
+        // Queueing depth dominates spare capacity.
+        let loads = vec![load(6, 2, 0), load(5, 1, 0)];
+        assert_eq!(pick_worker(&loads, 0), 1);
+    }
+
+    #[test]
+    fn jsq_rotates_ties() {
+        let loads = vec![load(0, 0, 4), load(0, 0, 4), load(0, 0, 4)];
+        assert_eq!(pick_worker(&loads, 0), 0);
+        assert_eq!(pick_worker(&loads, 1), 1);
+        assert_eq!(pick_worker(&loads, 2), 2);
+        assert_eq!(pick_worker(&loads, 3), 0);
+    }
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            tokens: vec![0; 4],
+            prompt_len: 1,
+            answer: None,
+            task: None,
+            submitted: Instant::now(),
+        }
+    }
+
+    /// Endpoints backed by bare channels (no engine): the receivers stand
+    /// in for worker threads.
+    fn bare_router(n: usize) -> (Router, Vec<Receiver<Command>>) {
+        let mut eps = Vec::new();
+        let mut rxs = Vec::new();
+        for id in 0..n {
+            let (tx, rx) = channel::<Command>();
+            eps.push(WorkerEndpoint { id, tx, status: Arc::new(WorkerStatus::default()) });
+            rxs.push(rx);
+        }
+        (Router::new(eps), rxs)
+    }
+
+    #[test]
+    fn submit_spreads_idle_traffic() {
+        let (router, rxs) = bare_router(2);
+        let (reply, _keep) = channel();
+        let w0 = router.submit(req(1), reply.clone()).unwrap();
+        let w1 = router.submit(req(2), reply.clone()).unwrap();
+        assert_ne!(w0, w1, "two dispatches with nothing completed must shard");
+        let delivered: usize = rxs.iter().map(|rx| rx.try_iter().count()).sum();
+        assert_eq!(delivered, 2);
+    }
+
+    #[test]
+    fn submit_falls_through_dead_worker() {
+        let (router, mut rxs) = bare_router(2);
+        rxs.remove(0); // worker 0's channel closes
+        let (reply, _keep) = channel();
+        for i in 0..4 {
+            assert_eq!(router.submit(req(i), reply.clone()), Some(1));
+        }
+        assert_eq!(rxs[0].try_iter().count(), 4);
+    }
+
+    /// The batcher conservation property, extended to the router: every
+    /// submitted request is delivered to exactly one worker — none lost,
+    /// none duplicated — regardless of the load gauges it dispatches by.
+    #[test]
+    fn property_router_conserves_requests() {
+        crate::util::proptest::check(
+            "router_conservation",
+            |r| {
+                let workers = r.range(1, 5);
+                // (request count, per-step gauge mutations)
+                let events: Vec<(usize, usize, usize)> = (0..r.range(1, 30))
+                    .map(|_| (r.range(0, 4), r.range(0, 3), r.range(0, 5)))
+                    .collect();
+                (workers, events)
+            },
+            |(workers, events)| {
+                let (router, rxs) = bare_router(*workers);
+                let (reply, _keep) = channel();
+                let mut submitted = 0u64;
+                for &(count, depth, free) in events {
+                    for _ in 0..count {
+                        let id = submitted;
+                        submitted += 1;
+                        if router.submit(req(id), reply.clone()).is_none() {
+                            return Err("submit failed with live workers".into());
+                        }
+                    }
+                    // Perturb the gauges the way a live worker would.
+                    for ep in &router.workers {
+                        ep.status.set_queue_depth(depth);
+                        ep.status.set_free_slots(free);
+                    }
+                }
+                let mut ids: Vec<u64> = Vec::new();
+                for rx in &rxs {
+                    for cmd in rx.try_iter() {
+                        match cmd {
+                            Command::Submit(r, _) => ids.push(r.id),
+                            _ => return Err("unexpected command".into()),
+                        }
+                    }
+                }
+                ids.sort_unstable();
+                let want: Vec<u64> = (0..submitted).collect();
+                if ids == want {
+                    Ok(())
+                } else {
+                    Err(format!("conservation broken: {ids:?} vs 0..{submitted}"))
+                }
+            },
+        );
+    }
+}

@@ -1,38 +1,54 @@
-//! Continuous-batching scheduler: the serving loop.
+//! Per-worker continuous-batching decode loop (DESIGN.md §8).
 //!
-//! Single-threaded over the engine (PJRT handles intra-op parallelism);
-//! requests arrive over an mpsc channel, responses leave through per-request
-//! reply channels.  Slot lifecycle:
+//! A [`Worker`] owns one engine + method + batcher + slot set and runs
+//! single-threaded over them (PJRT handles intra-op parallelism; PJRT
+//! handles are `!Send`, so each worker constructs its engine on its own
+//! thread — see `router::Router::spawn`).  Requests arrive over an mpsc
+//! channel, responses leave through per-request reply channels.  Slot
+//! lifecycle:
 //!
 //!   queue → [admit] → slot (forces cache refresh) → steps → done → response
 //!
 //! Admission invalidates the group caches (the diffusion state is batch-
 //! global), so the batcher controls admission timing (see `batcher.rs`).
+//! Sharding traffic across N workers keeps that refresh blast radius local
+//! to one group — the router (`router.rs`) decides which group pays it.
+//!
+//! TTFT and latency are measured from `Request::submitted`, so batcher
+//! queueing delay is part of both (the component the router's JSQ policy is
+//! meant to shrink).
 
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::model::tasks::extract_answer;
-use crate::model::tokenizer::{Tokenizer, PAD};
+use crate::model::tokenizer::{Tokenizer, MASK, PAD};
 use crate::runtime::engine::Engine;
 use crate::{debug, info};
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::decode::{slot_done, Sampler};
+use super::group::{apply_step_out, masks_in_row};
 use super::metrics::Metrics;
 use super::methods::{Method, StepOut};
 use super::request::{Request, Response, SlotState};
+use super::router::WorkerStatus;
 
 pub enum Command {
     Submit(Request, Sender<Response>),
-    /// Render metrics into the reply channel.
-    Stats(Sender<String>),
+    /// Reply with a metrics snapshot (the router merges snapshots and
+    /// renders the Prometheus text with per-worker labels).
+    Stats(Sender<Metrics>),
     Shutdown,
 }
 
-pub struct Scheduler {
+/// One decode group's worth of serving state: engine, cache method, batcher
+/// queue, resident slots and reply channels.  `run` is the worker loop.
+pub struct Worker {
+    pub id: usize,
     engine: Engine,
     method: Method,
     sampler: Sampler,
@@ -45,21 +61,27 @@ pub struct Scheduler {
     /// Reply channels for requests still in the batcher queue, by id.
     pending: Vec<(u64, Sender<Response>)>,
     pub metrics: Metrics,
+    /// Shared load gauges read by the router's dispatch policy.
+    status: Arc<WorkerStatus>,
     max_steps_per_request: usize,
     default_block_len: usize,
 }
 
-impl Scheduler {
+impl Worker {
     pub fn new(
+        id: usize,
         engine: Engine,
         method: Method,
         sampler: Sampler,
         batcher_cfg: BatcherConfig,
         max_steps_per_request: usize,
-    ) -> Scheduler {
+    ) -> Worker {
         let (b, n, _) = method.geometry();
         let tokenizer = Tokenizer::from_manifest(&engine.manifest.charset);
-        Scheduler {
+        let status = Arc::new(WorkerStatus::default());
+        status.set_free_slots(b);
+        Worker {
+            id,
             engine,
             method,
             sampler,
@@ -71,16 +93,25 @@ impl Scheduler {
             requests: vec![None; b],
             pending: Vec::new(),
             metrics: Metrics::default(),
+            status,
             max_steps_per_request,
             default_block_len: 16,
         }
     }
 
-    /// Run until `Shutdown` (or channel close) — the server's main loop.
+    /// Replace the load-gauge block with one shared with the router.
+    pub fn set_status(&mut self, status: Arc<WorkerStatus>) {
+        status.set_free_slots(self.slots.len());
+        self.status = status;
+    }
+
+    /// Run until `Shutdown` (or channel close) — one worker thread's main
+    /// loop.
     pub fn run(&mut self, rx: Receiver<Command>) -> Result<()> {
         loop {
             let busy =
                 self.slots.iter().any(|s| s.occupied) || self.batcher.queue_len() > 0;
+            self.publish_status();
             // Drain commands; block only when idle.
             loop {
                 let cmd = if busy {
@@ -105,7 +136,7 @@ impl Scheduler {
                         }
                     }
                     Some(Command::Stats(reply)) => {
-                        let _ = reply.send(self.metrics.render());
+                        let _ = reply.send(self.metrics.clone());
                     }
                     Some(Command::Shutdown) => return Ok(()),
                     None => break,
@@ -117,7 +148,16 @@ impl Scheduler {
             }
             self.metrics.queue_depth = self.batcher.queue_len();
             self.metrics.active_slots = self.slots.iter().filter(|s| s.occupied).count();
+            self.publish_status();
         }
+    }
+
+    /// Mirror queue depth / free slots into the shared gauges the router
+    /// reads for join-shortest-queue dispatch.
+    fn publish_status(&self) {
+        self.status.set_queue_depth(self.batcher.queue_len());
+        self.status
+            .set_free_slots(self.slots.iter().filter(|s| !s.occupied).count());
     }
 
     fn admit_waiting(&mut self) {
@@ -126,7 +166,8 @@ impl Scheduler {
         if free.is_empty() {
             return;
         }
-        let admitted = self.batcher.admit(free.len(), Instant::now());
+        let now = Instant::now();
+        let admitted = self.batcher.admit(free.len(), now);
         if admitted.is_empty() {
             return;
         }
@@ -138,13 +179,15 @@ impl Scheduler {
             self.tokens[slot_i * n..(slot_i + 1) * n].copy_from_slice(&row);
             let block =
                 req.task.map(|t| t.block_len()).unwrap_or(self.default_block_len);
+            self.metrics
+                .record_queue_wait(now.duration_since(req.submitted).as_secs_f64() * 1e3);
             self.slots[slot_i] = SlotState::assign(&req, block);
             if let Some(pos) = self.pending.iter().position(|(id, _)| *id == req.id) {
                 let (_, ch) = self.pending.remove(pos);
                 self.replies[slot_i] = Some(ch);
             }
             self.requests[slot_i] = Some(req);
-            debug!("sched", "admitted request into slot {slot_i}");
+            debug!("sched", "worker {} admitted request into slot {slot_i}", self.id);
         }
         // Any change in group composition invalidates the caches.
         self.method.invalidate();
@@ -152,32 +195,20 @@ impl Scheduler {
 
     fn step(&mut self) -> Result<()> {
         let (b, n, v) = self.method.geometry();
-        let t0 = Instant::now();
         let out: StepOut = self.method.step(&self.engine, &self.tokens, &self.slots)?;
-        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
         self.metrics.steps += 1;
         if out.was_refresh {
             self.metrics.refreshes += 1;
         }
-        match out {
-            StepOut { logits: Some(logits), .. } => {
-                self.sampler.unmask(&mut self.tokens, &logits, b, n, v, &mut self.slots);
-            }
-            StepOut { new_tokens: Some(nt), .. } => {
-                for bi in 0..b {
-                    if !self.slots[bi].occupied {
-                        continue;
-                    }
-                    self.slots[bi].steps += 1;
-                }
-                self.tokens = nt;
-            }
-            _ => {}
-        }
-        // First logits after admission = TTFT for newly admitted slots.
+        apply_step_out(out, &mut self.tokens, &mut self.slots, &mut self.sampler, (b, n, v))?;
+        // First logits since admission: TTFT, measured from submission so
+        // batcher queueing is included.
+        let now = Instant::now();
         for s in self.slots.iter_mut().filter(|s| s.occupied) {
             if s.ttft_ms.is_none() {
-                s.ttft_ms = Some(step_ms);
+                let base = s.submitted.or(s.started);
+                s.ttft_ms =
+                    base.map(|t| now.duration_since(t).as_secs_f64() * 1e3);
             }
         }
         // Completion scan.
@@ -197,15 +228,16 @@ impl Scheduler {
                 .map(|r| {
                     r.tokens
                         .iter()
-                        .filter(|&&t| t == crate::model::tokenizer::MASK)
+                        .filter(|&&t| t == MASK)
                         .count()
-                        .saturating_sub(
-                            row.iter().filter(|&&t| t == crate::model::tokenizer::MASK).count(),
-                        )
+                        .saturating_sub(masks_in_row(&self.tokens, n, bi))
                 })
                 .unwrap_or(slot.decoded_since_refresh.len());
-            let latency_ms =
-                slot.started.map(|t| t.elapsed().as_secs_f64() * 1e3).unwrap_or(f64::NAN);
+            let latency_ms = slot
+                .submitted
+                .or(slot.started)
+                .map(|t| t.elapsed().as_secs_f64() * 1e3)
+                .unwrap_or(f64::NAN);
             let ttft = slot.ttft_ms.unwrap_or(f64::NAN);
             self.metrics.record_completion(ttft, latency_ms, decoded);
             let text = extract_answer(&self.tokenizer, &row, slot.prompt_len);
@@ -222,10 +254,14 @@ impl Scheduler {
             if let Some(ch) = self.replies[bi].take() {
                 let _ = ch.send(resp);
             }
+            self.status.dec_inflight();
             for t in &mut self.tokens[bi * n..(bi + 1) * n] {
                 *t = PAD;
             }
-            info!("sched", "slot {bi} finished in {} steps", slot.steps);
+            info!(
+                "sched",
+                "worker {} slot {bi} finished in {} steps", self.id, slot.steps
+            );
         }
         Ok(())
     }

@@ -1,31 +1,38 @@
 //! TCP serving frontend: newline-delimited JSON over plain sockets
 //! (tokio is unavailable offline; connections are handled by the
-//! `util::threadpool` substrate, generation by the scheduler thread).
+//! `util::threadpool` substrate, generation by the engine worker threads
+//! behind the request router).
 //!
 //! Protocol (one JSON object per line):
 //!   → {"op":"generate","id":1,"task":"gsm8k_s","prompt":"...","gen_len":64}
-//!   ← {"id":1,"text":"8","steps":12,"ttft_ms":41.2,"latency_ms":180.3}
-//!   → {"op":"stats"}          ← prometheus-style text in {"stats": "..."}
+//!   ← {"id":1,"text":"8","steps":12,"ttft_ms":41.2,"latency_ms":180.3,
+//!      "worker":0}
+//!   → {"op":"stats"}   ← prometheus-style text in {"stats": "..."} with
+//!                        aggregate series plus `{worker="<id>"}` labels
 //!   → {"op":"shutdown"}
+//!
+//! All replies — errors included — are built with `util::json::Json`, so
+//! arbitrary error text (quotes, backslashes, control characters) is always
+//! escaped into valid JSON.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::info;
 use crate::model::tasks::Task;
 use crate::model::tokenizer::{Tokenizer, BOS, MASK, PAD};
 use crate::util::json::{parse, Json};
 use crate::util::threadpool::ThreadPool;
-use crate::info;
 
 use super::request::Request;
-use super::scheduler::Command;
+use super::router::Router;
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
@@ -57,15 +64,21 @@ pub fn build_request(
     })
 }
 
-/// Serve until a client sends `{"op":"shutdown"}`.
+/// A `{"error": msg}` reply with the message properly JSON-escaped.
+pub fn error_reply(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string()
+}
+
+/// Serve until a client sends `{"op":"shutdown"}`, then fan the shutdown
+/// out to every worker via the router.
 ///
 /// The accept loop polls a non-blocking listener so a shutdown requested by
 /// a connection handler (shared atomic flag) is honoured promptly even when
 /// no further connections arrive.
-pub fn serve(addr: &str, seq_len: usize, charset: &str, cmd_tx: Sender<Command>) -> Result<()> {
+pub fn serve(addr: &str, seq_len: usize, charset: &str, router: Router) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
     listener.set_nonblocking(true)?;
-    info!("server", "listening on {addr}");
+    info!("server", "listening on {addr} ({} workers)", router.worker_count());
     let pool = ThreadPool::new(8);
     let tok = Arc::new(Tokenizer::from_manifest(charset));
     let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -73,11 +86,11 @@ pub fn serve(addr: &str, seq_len: usize, charset: &str, cmd_tx: Sender<Command>)
         match listener.accept() {
             Ok((stream, _)) => {
                 let _ = stream.set_nonblocking(false);
-                let tx = cmd_tx.clone();
+                let router = router.clone();
                 let tok = Arc::clone(&tok);
                 let shutdown = Arc::clone(&shutdown);
                 pool.execute(move || {
-                    if handle_conn(stream, seq_len, &tok, tx).unwrap_or(false) {
+                    if handle_conn(stream, seq_len, &tok, router).unwrap_or(false) {
                         shutdown.store(true, Ordering::Relaxed);
                     }
                 });
@@ -89,7 +102,7 @@ pub fn serve(addr: &str, seq_len: usize, charset: &str, cmd_tx: Sender<Command>)
         }
     }
     drop(pool); // join handlers so in-flight replies finish
-    let _ = cmd_tx.send(Command::Shutdown);
+    router.shutdown();
     Ok(())
 }
 
@@ -98,7 +111,7 @@ fn handle_conn(
     stream: TcpStream,
     seq_len: usize,
     tok: &Tokenizer,
-    cmd_tx: Sender<Command>,
+    router: Router,
 ) -> Result<bool> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
@@ -111,19 +124,17 @@ fn handle_conn(
         let msg = match parse(&line) {
             Ok(m) => m,
             Err(e) => {
-                writeln!(writer, r#"{{"error":"bad json: {e}"}}"#)?;
+                writeln!(writer, "{}", error_reply(&format!("bad json: {e}")))?;
                 continue;
             }
         };
         match msg.get("op").and_then(|o| o.as_str()).unwrap_or("generate") {
             "shutdown" => {
-                writeln!(writer, r#"{{"ok":true}}"#)?;
+                writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]).to_string())?;
                 return Ok(true);
             }
             "stats" => {
-                let (tx, rx) = channel();
-                cmd_tx.send(Command::Stats(tx)).ok();
-                let text = rx.recv().unwrap_or_default();
+                let text = router.stats();
                 let out = Json::obj(vec![("stats", Json::Str(text))]);
                 writeln!(writer, "{}", out.to_string())?;
             }
@@ -142,7 +153,7 @@ fn handle_conn(
                 match build_request(tok, seq_len, task, prompt, gen_len) {
                     Ok(req) => {
                         let (tx, rx) = channel();
-                        cmd_tx.send(Command::Submit(req, tx)).ok();
+                        let worker = router.submit(req, tx);
                         match rx.recv() {
                             Ok(resp) => {
                                 let out = Json::obj(vec![
@@ -152,16 +163,22 @@ fn handle_conn(
                                     ("decoded", Json::Num(resp.decoded as f64)),
                                     ("ttft_ms", Json::Num(resp.ttft_ms)),
                                     ("latency_ms", Json::Num(resp.latency_ms)),
+                                    (
+                                        "worker",
+                                        worker
+                                            .map(|w| Json::Num(w as f64))
+                                            .unwrap_or(Json::Null),
+                                    ),
                                 ]);
                                 writeln!(writer, "{}", out.to_string())?;
                             }
                             Err(_) => {
-                                writeln!(writer, r#"{{"error":"scheduler gone"}}"#)?;
+                                writeln!(writer, "{}", error_reply("workers gone"))?;
                             }
                         }
                     }
                     Err(e) => {
-                        writeln!(writer, r#"{{"error":"{e}"}}"#)?;
+                        writeln!(writer, "{}", error_reply(&format!("{e:#}")))?;
                     }
                 }
             }
@@ -205,5 +222,27 @@ impl Client {
     pub fn shutdown(&mut self) -> Result<()> {
         let _ = self.request(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_replies_escape_hostile_messages() {
+        // A message full of JSON metacharacters must round-trip through the
+        // wire format (the old `format!`-interpolated reply emitted invalid
+        // JSON for any message containing '"' or '\').
+        let hostile = "bad \"quote\" and \\backslash\\ and\nnewline\tand ctrl \u{1}";
+        let wire = error_reply(hostile);
+        let parsed = parse(&wire).expect("error reply must be valid JSON");
+        assert_eq!(parsed.get("error").and_then(|e| e.as_str()), Some(hostile));
+    }
+
+    #[test]
+    fn error_reply_is_single_line() {
+        let wire = error_reply("line1\nline2");
+        assert!(!wire.contains('\n'), "newline must be escaped: {wire}");
     }
 }

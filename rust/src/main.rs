@@ -3,7 +3,7 @@
 //! Examples:
 //!   spa-cache list
 //!   spa-cache generate --model llada_s --method spa --task gsm8k_s --samples 4
-//!   spa-cache serve --addr 127.0.0.1:7377 --model llada_s --method spa
+//!   spa-cache serve --addr 127.0.0.1:7377 --model llada_s --method spa --workers 4
 //!   spa-cache analyze --model llada_s --steps 12
 //!   spa-cache selftest
 
@@ -13,11 +13,13 @@ use spa_cache::coordinator::batcher::BatcherConfig;
 use spa_cache::coordinator::decode::{Sampler, UnmaskMode};
 use spa_cache::coordinator::group::{pack_group, run_group};
 use spa_cache::coordinator::methods::{Method, MethodSpec};
-use spa_cache::coordinator::scheduler::{Command, Scheduler};
+use spa_cache::coordinator::router::Router;
+use spa_cache::coordinator::scheduler::Worker;
 use spa_cache::coordinator::server;
 use spa_cache::model::tasks::{make_sample, Task, extract_answer, ALL_TASKS};
 use spa_cache::model::tokenizer::Tokenizer;
 use spa_cache::runtime::engine::Engine;
+use spa_cache::runtime::manifest::Manifest;
 use spa_cache::util::cli::Args;
 use spa_cache::util::rng::Rng;
 
@@ -35,7 +37,7 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: spa-cache <list|generate|serve|analyze|selftest> \
                  [--model llada_s] [--method vanilla|spa|dllm_cache|fast_dllm|dkv_cache|d2_cache|elastic_cache|multistep] \
-                 [--task gsm8k_s] [--samples N] [--addr host:port] [--threshold 0.9]"
+                 [--task gsm8k_s] [--samples N] [--addr host:port] [--workers N] [--threshold 0.9]"
             );
             Ok(())
         }
@@ -140,28 +142,45 @@ fn generate(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let engine = engine(args)?;
+    // Parse the manifest once; each worker thread clones it into its own
+    // engine (PJRT handles are !Send, so engines are built per-thread).
+    let artifacts = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    let manifest = Manifest::load(&artifacts)?;
+    let seq_len = manifest.seq_len;
+    let charset = manifest.charset.clone();
+
     let model = args.str_or("model", "llada_s");
     let method_name = args.str_or("method", "spa");
     let addr = args.str_or("addr", "127.0.0.1:7377");
-    let spec = MethodSpec::by_name(&method_name, args.usize_or("block-k", 16))?;
-    let method = Method::new(&engine, &model, spec)?;
-    let seq_len = engine.manifest.seq_len;
-    let charset = engine.manifest.charset.clone();
+    let workers = args.count_or("workers", 1);
+    let block_k = args.usize_or("block-k", 16);
     let mut sam = sampler(args);
     if method_name == "fast_dllm" {
         sam.mode = UnmaskMode::BlockParallel { threshold: args.f64_or("threshold", 0.9) };
     } else if args.get("threshold").is_none() {
         sam.mode = UnmaskMode::Parallel { threshold: 0.9 };
     }
-
-    let (tx, rx) = std::sync::mpsc::channel::<Command>();
     let batcher = BatcherConfig::default();
-    let mut sched = Scheduler::new(engine, method, sam, batcher, 4 * seq_len);
-    let server_tx = tx.clone();
-    let handle = std::thread::spawn(move || server::serve(&addr, seq_len, &charset, server_tx));
-    sched.run(rx)?;
-    handle.join().ok();
+
+    // Spawn blocks until every worker's engine is constructed, so a bad
+    // model/method/artifact path fails here instead of serving dead workers.
+    let (router, handles) = Router::spawn(workers, move |id| {
+        let engine = Engine::from_manifest(manifest.clone())?;
+        let spec = MethodSpec::by_name(&method_name, block_k)?;
+        let method = Method::new(&engine, &model, spec)?;
+        Ok(Worker::new(id, engine, method, sam.clone(), batcher.clone(), 4 * seq_len))
+    })?;
+
+    server::serve(&addr, seq_len, &charset, router)?;
+    for h in handles {
+        match h.join() {
+            Ok(r) => r?,
+            Err(_) => anyhow::bail!("worker thread panicked"),
+        }
+    }
     Ok(())
 }
 

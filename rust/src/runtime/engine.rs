@@ -57,8 +57,15 @@ pub struct Engine {
 impl Engine {
     /// Create an engine over an artifact directory (compiles lazily).
     pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        Engine::from_manifest(Manifest::load(dir)?)
+    }
+
+    /// Create an engine from an already-parsed manifest.  The multi-worker
+    /// router parses the manifest **once** on the main thread and clones it
+    /// into each worker's engine factory — engines themselves are `!Send`
+    /// (PJRT handles), so each worker thread calls this on its own.
+    pub fn from_manifest(manifest: Manifest) -> Result<Engine> {
         crate::util::log::init();
-        let manifest = Manifest::load(dir)?;
         let client = PjRtClient::cpu().context("PJRT cpu client")?;
         info!(
             "engine",

@@ -87,7 +87,7 @@ pub struct TaskInfo {
     pub block_len: usize,
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Manifest {
     pub dir: PathBuf,
     pub batch: usize,
@@ -259,6 +259,13 @@ impl Manifest {
 
     pub fn model(&self, name: &str) -> Result<&ModelInfo> {
         self.models.get(name).ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))
+    }
+
+    /// True when the default artifact directory holds an `index.json` —
+    /// used by artifact-gated tests to skip gracefully on fresh checkouts
+    /// instead of failing (`cargo test -q` stays green without artifacts).
+    pub fn artifacts_present() -> bool {
+        Manifest::default_dir().join("index.json").exists()
     }
 
     /// Default artifact dir: `$SPA_ARTIFACTS` or `./artifacts`.

@@ -63,6 +63,12 @@ impl Args {
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// `usize_or` clamped to at least 1 — for worker/thread/client counts
+    /// (`--workers 0` means "one worker", never "no workers").
+    pub fn count_or(&self, key: &str, default: usize) -> usize {
+        self.usize_or(key, default).max(1)
+    }
 }
 
 #[cfg(test)]
@@ -101,5 +107,13 @@ mod tests {
         let a = parse("");
         assert_eq!(a.f64_or("x", 0.5), 0.5);
         assert_eq!(a.str_or("s", "d"), "d");
+    }
+
+    #[test]
+    fn counts_clamp_to_one() {
+        let a = parse("--workers 0 --clients 6");
+        assert_eq!(a.count_or("workers", 4), 1);
+        assert_eq!(a.count_or("clients", 1), 6);
+        assert_eq!(a.count_or("missing", 3), 3);
     }
 }

@@ -89,6 +89,25 @@ impl Welford {
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
+
+    /// Fold another accumulator in (Chan et al. parallel combination):
+    /// exact for count and mean, numerically stable for variance.  Used to
+    /// aggregate per-worker serving metrics at render time.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let (n1, n2) = (self.n as f64, other.n as f64);
+        let delta = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.n += other.n;
+    }
 }
 
 /// Fixed-bin histogram over [lo, hi] — used for the Fig. 5 density plots.
@@ -171,6 +190,32 @@ mod tests {
         let s = Summary::of(&xs);
         assert!((w.mean() - s.mean).abs() < 1e-12);
         assert!((w.std() - s.std).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welford_merge_matches_single_stream() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0, 5.0, 3.5];
+        let mut whole = Welford::default();
+        for x in xs {
+            whole.push(x);
+        }
+        let (mut a, mut b) = (Welford::default(), Welford::default());
+        for x in &xs[..3] {
+            a.push(*x);
+        }
+        for x in &xs[3..] {
+            b.push(*x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert!((a.std() - whole.std()).abs() < 1e-9);
+        // Merging an empty accumulator is the identity, both ways.
+        let mut empty = Welford::default();
+        empty.merge(&whole);
+        assert!((empty.mean() - whole.mean()).abs() < 1e-12);
+        whole.merge(&Welford::default());
+        assert_eq!(whole.count(), xs.len() as u64);
     }
 
     #[test]

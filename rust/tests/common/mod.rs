@@ -1,0 +1,37 @@
+//! Shared helpers for the artifact-gated integration-test binaries
+//! (golden / integration / serving).  Each binary compiles its own copy via
+//! `mod common;` and uses a subset, hence the allow.
+#![allow(dead_code)]
+
+use spa_cache::runtime::engine::Engine;
+use spa_cache::runtime::manifest::Manifest;
+
+/// Parsed manifest, or a graceful skip (green, with a message) when the
+/// artifacts are missing or unreadable — `cargo test -q` must pass on a
+/// fresh checkout.
+pub fn manifest_or_skip(tag: &str) -> Option<Manifest> {
+    if !Manifest::artifacts_present() {
+        eprintln!("[{tag}] SKIP: artifacts missing (set $SPA_ARTIFACTS or run `make artifacts`)");
+        return None;
+    }
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("[{tag}] SKIP: manifest unreadable: {e:#}");
+            None
+        }
+    }
+}
+
+/// Engine over the default artifacts, or a graceful skip when the PJRT
+/// runtime is unavailable too (vendored xla stub, missing plugin, ...).
+pub fn engine_or_skip(tag: &str) -> Option<Engine> {
+    let manifest = manifest_or_skip(tag)?;
+    match Engine::from_manifest(manifest) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("[{tag}] SKIP: engine unavailable: {e:#}");
+            None
+        }
+    }
+}

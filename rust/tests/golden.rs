@@ -11,6 +11,8 @@ use spa_cache::runtime::tensor::{literal_i32, to_f32_vec};
 use spa_cache::util::json::Json;
 use xla::Literal;
 
+mod common;
+
 
 
 fn golden_tokens(g: &Json, key: &str) -> Vec<Vec<i32>> {
@@ -154,7 +156,10 @@ fn manifest_k_per_layer_matches_schedule(e: &Engine) {
 
 #[test]
 fn golden_suite() {
-    let e = Engine::from_default_artifacts().expect("run `make artifacts` first");
+    let e = match common::engine_or_skip("golden") {
+        Some(e) => e,
+        None => return,
+    };
     eprintln!("[golden] vanilla_logits_match_python_checksum");
     vanilla_logits_match_python_checksum(&e);
     eprintln!("[golden] spa_decode_trace_matches_python");

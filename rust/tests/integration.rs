@@ -12,6 +12,8 @@ use spa_cache::runtime::engine::Engine;
 use spa_cache::runtime::tensor::{literal_i32, to_f32_vec};
 use spa_cache::util::rng::Rng;
 
+mod common;
+
 
 fn sample_tokens(e: &Engine, b: usize, n: usize, seed: u64) -> (Vec<i32>, Vec<spa_cache::coordinator::request::SlotState>) {
     let tok = Tokenizer::from_manifest(&e.manifest.charset);
@@ -158,7 +160,10 @@ fn gqa_model_decodes(e: &Engine) {
 /// sequentially inside a single #[test].
 #[test]
 fn integration_suite() {
-    let e = Engine::from_default_artifacts().expect("run `make artifacts` first");
+    let e = match common::engine_or_skip("integration") {
+        Some(e) => e,
+        None => return,
+    };
     eprintln!("[integration] manifest_loads_and_is_complete");
     manifest_loads_and_is_complete(&e);
     eprintln!("[integration] weights_load_for_all_models");

@@ -1,0 +1,299 @@
+//! Vendored `xla` API surface (DESIGN.md §2).
+//!
+//! The real dependency is a fork of `xla-rs` exposing `execute_b_untuple`
+//! over PJRT.  This vendored crate keeps the whole SPA-Cache tree compiling
+//! and unit-testable in environments without the PJRT runtime:
+//!
+//! * [`Literal`] is **fully functional** host-side (bytes + shape + dtype),
+//!   so every tensor/manifest/decode unit test runs for real.
+//! * [`PjRtClient::cpu`] returns an error, which the engine surfaces as
+//!   "PJRT unavailable"; artifact-gated integration tests skip gracefully.
+//!
+//! Swapping the real runtime back in is a one-line change in the root
+//! `Cargo.toml` (point the `xla` path dependency at the fork).
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type for every fallible operation in this crate.
+#[derive(Debug, Clone)]
+pub struct XlaError {
+    pub msg: String,
+}
+
+impl XlaError {
+    fn new(msg: impl Into<String>) -> XlaError {
+        XlaError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+const STUB_MSG: &str = "PJRT runtime unavailable: spa-cache was built against the vendored \
+                        xla stub (point the `xla` path dependency at the PJRT fork to enable \
+                        device execution)";
+
+/// XLA primitive element types used by the SPA-Cache artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_size(&self) -> usize {
+        4
+    }
+}
+
+/// Host native types that map onto an [`ElementType`].
+pub trait NativeType: Copy + 'static {
+    const ELEMENT_TYPE: ElementType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+    fn to_le(self) -> [u8; 4];
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
+    }
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        i32::from_le_bytes(bytes)
+    }
+    fn to_le(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+}
+
+/// A host-side tensor: dtype + dims + little-endian bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let want = dims.iter().product::<usize>() * ty.byte_size();
+        if data.len() != want {
+            return Err(XlaError::new(format!(
+                "literal data size {} does not match shape {dims:?} ({want} bytes)",
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::ELEMENT_TYPE != self.ty {
+            return Err(XlaError::new(format!(
+                "dtype mismatch: literal is {:?}, requested {:?}",
+                self.ty,
+                T::ELEMENT_TYPE
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Logical device shape of a buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Shape {
+    ty: ElementType,
+    dims: Vec<usize>,
+}
+
+/// Array view of a [`Shape`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<usize>,
+}
+
+impl ArrayShape {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+}
+
+impl TryFrom<&Shape> for ArrayShape {
+    type Error = XlaError;
+
+    fn try_from(s: &Shape) -> Result<ArrayShape> {
+        Ok(ArrayShape { ty: s.ty, dims: s.dims.clone() })
+    }
+}
+
+/// A device buffer.  In the stub it wraps a host [`Literal`].
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+
+    pub fn on_device_shape(&self) -> Result<Shape> {
+        Ok(Shape { ty: self.lit.ty, dims: self.lit.dims.clone() })
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| XlaError::new(format!("reading {:?}: {e}", path.as_ref())))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// An XLA computation (opaque in the stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _p: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _p: () }
+    }
+}
+
+/// A compiled executable.  Execution is unavailable in the stub.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _p: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Untupled execution: one `Vec<PjRtBuffer>` per device.
+    pub fn execute_b_untuple<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::new(STUB_MSG))
+    }
+}
+
+/// The PJRT client.  `cpu()` fails in the stub, so the engine reports the
+/// runtime as unavailable before any execution is attempted.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _p: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::new(STUB_MSG))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for x in data {
+            bytes.extend_from_slice(&x.to_le());
+        }
+        Ok(PjRtBuffer {
+            lit: Literal::create_from_shape_and_untyped_data(T::ELEMENT_TYPE, dims, &bytes)?,
+        })
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { lit: lit.clone() })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::new(STUB_MSG))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data: Vec<f32> = vec![1.5, -2.0, 0.0, 4.0];
+        let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &bytes)
+                .unwrap();
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert!(lit.to_vec::<i32>().is_err(), "dtype mismatch must fail");
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[3], &[0u8; 4])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+    }
+}

@@ -1,0 +1,72 @@
+//! LOAD-GENERATOR DRIVER (DESIGN.md §10): spin up the multi-worker server
+//! in-process, fire an open-loop (Poisson) or closed-loop client load at it
+//! over TCP, and append the measured TTFT/latency/TPS trajectory entry to
+//! `BENCH_serving.json` — the datapoint successive PRs compare against.
+//!
+//!   cargo run --release --example bench_serve -- [--method spa] [--workers 2]
+//!       [--qps 8 | --clients 6] [--duration 5s] [--warmup 1s]
+//!       [--tasks gsm8k_s,mmlu_s] [--gen-len 32 | 16:64]
+//!       [--out BENCH_serving.json]
+//!
+//! Skips gracefully when the artifacts or the PJRT runtime are unavailable,
+//! like the artifact-gated tests (`spa-cache bench-serve` is the same flow
+//! with a multi-method lineup).
+
+use std::path::Path;
+
+use anyhow::Result;
+use spa_cache::bench::loadgen::{self, LoadGenConfig};
+use spa_cache::coordinator::methods::MethodSpec;
+use spa_cache::runtime::manifest::Manifest;
+use spa_cache::util::cli::Args;
+
+fn main() -> Result<()> {
+    spa_cache::util::log::init();
+    let args = Args::parse();
+    if !Manifest::artifacts_present() {
+        println!("bench_serve: SKIP (artifacts missing — set $SPA_ARTIFACTS or run `make artifacts`)");
+        return Ok(());
+    }
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let seq_len = manifest.seq_len;
+    let charset = manifest.charset.clone();
+
+    let method_name = args.str_or("method", "spa");
+    let model = args.str_or("model", "llada_s");
+    let workers = args.count_or("workers", 2);
+    let block_k = args.usize_or("block-k", 16);
+    let threshold = args.f64_or("threshold", 0.9);
+    // A typo'd method errors here; SKIP below is reserved for engine/PJRT
+    // unavailability.
+    MethodSpec::by_name(&method_name, block_k)
+        .map_err(|e| anyhow::anyhow!("--method '{method_name}': {e:#}"))?;
+
+    // Shared flag parsing and worker assembly with `spa-cache bench-serve`
+    // so the two front-ends record comparable trajectory entries.
+    let cfg = LoadGenConfig::from_args(&args)?;
+
+    let report = match loadgen::run_method(
+        &method_name,
+        workers,
+        seq_len,
+        &charset,
+        &cfg,
+        loadgen::worker_factory(manifest, model.clone(), method_name.clone(), block_k, threshold),
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            println!("bench_serve: SKIP (workers unavailable: {e:#})");
+            return Ok(());
+        }
+    };
+
+    loadgen::print_reports(&[report.clone()]);
+    let out = args.str_or("out", "BENCH_serving.json");
+    loadgen::append_trajectory(
+        Path::new(&out),
+        loadgen::config_json(&cfg, workers, &model),
+        &[report],
+    )?;
+    println!("bench_serve: appended trajectory entry to {out}");
+    Ok(())
+}

@@ -1,0 +1,1021 @@
+//! Serving load generator: open/closed-loop traffic against the TCP
+//! frontend, plus the `BENCH_serving.json` perf-trajectory writer
+//! (DESIGN.md §10).
+//!
+//! The paper's headline numbers are *throughput* claims; this module is how
+//! the repo measures them honestly on the serving path rather than in a
+//! closed warmup/measure timing loop:
+//!
+//! * **Open loop** — Poisson arrivals at a target QPS, independent of
+//!   completions.  Models external traffic; queueing delay shows up in the
+//!   latency percentiles instead of silently throttling the offered load.
+//!   Arrivals beyond `max_inflight` outstanding requests are *dropped and
+//!   counted* (an overload signal), never queued client-side — queueing
+//!   them would close the loop and understate tail latency.
+//! * **Closed loop** — N concurrent clients, each issuing its next request
+//!   the moment the previous reply lands.  Models saturating batch
+//!   workloads; measures capacity rather than latency-under-load.
+//!
+//! Both phases share a warmup window: requests *issued* before the warmup
+//! deadline are excluded from every summary (caches cold, lazy compiles).
+//! Per-request TTFT/latency go into bounded [`Reservoir`]s (exact
+//! percentiles until the cap, unbiased estimates past it); worker-side
+//! counters (refreshes, steps, per-worker completions) are scraped from
+//! the Prometheus `stats` op at the warmup boundary and again after a
+//! `drain` barrier, and differenced — so the reported window never
+//! includes half-finished work.
+
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::decode::{Sampler, UnmaskMode};
+use crate::coordinator::methods::{Method, MethodSpec};
+use crate::coordinator::metrics::{scrape_value, scrape_worker_series};
+use crate::coordinator::router::Router;
+use crate::coordinator::scheduler::Worker;
+use crate::coordinator::server::{self, Client};
+use crate::model::tasks::{render_prompt, Task};
+use crate::runtime::engine::Engine;
+use crate::runtime::manifest::Manifest;
+use crate::util::cli::Args;
+use crate::util::json::{parse, Json};
+use crate::util::rng::Rng;
+use crate::util::stats::{Histogram, Reservoir, Summary};
+
+use super::Table;
+
+/// Schema version stamped into `BENCH_serving.json`; bump on any breaking
+/// change to the entry layout (readers must check it).
+pub const TRAJECTORY_SCHEMA: f64 = 1.0;
+
+/// Per-request sample cap: exact percentiles below this, reservoir
+/// estimates above (a 10-minute run at 100 QPS still fits exactly).
+const LOADGEN_SAMPLE_CAP: usize = 65_536;
+
+/// Arrival process driven against the server.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalMode {
+    /// Poisson arrivals at `qps`, independent of completions (open loop).
+    Open {
+        /// Offered load in requests per second (> 0).
+        qps: f64,
+    },
+    /// `clients` concurrent connections, each back-to-back (closed loop).
+    Closed {
+        /// Number of concurrent client connections (> 0).
+        clients: usize,
+    },
+}
+
+/// Uniform request-length distribution over `[lo, hi]` generated tokens
+/// (`lo == hi` → fixed length).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GenLenDist {
+    /// Inclusive lower bound.
+    pub lo: usize,
+    /// Inclusive upper bound.
+    pub hi: usize,
+}
+
+impl GenLenDist {
+    /// Fixed request length.
+    pub fn fixed(n: usize) -> GenLenDist {
+        GenLenDist { lo: n, hi: n }
+    }
+
+    /// Draw one length.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        if self.hi <= self.lo {
+            self.lo
+        } else {
+            rng.range(self.lo, self.hi + 1)
+        }
+    }
+
+    /// Parse `"32"` (fixed) or `"16:64"` (uniform range).
+    pub fn parse(s: &str) -> Option<GenLenDist> {
+        match s.split_once(':') {
+            Some((lo, hi)) => {
+                let (lo, hi) = (lo.trim().parse().ok()?, hi.trim().parse().ok()?);
+                if lo == 0 || hi < lo {
+                    return None;
+                }
+                Some(GenLenDist { lo, hi })
+            }
+            None => {
+                let n: usize = s.trim().parse().ok()?;
+                if n == 0 {
+                    return None;
+                }
+                Some(GenLenDist::fixed(n))
+            }
+        }
+    }
+}
+
+/// Everything one load-generation run is parameterised by.
+#[derive(Debug, Clone)]
+pub struct LoadGenConfig {
+    /// Open (target QPS) or closed (concurrent clients) arrivals.
+    pub mode: ArrivalMode,
+    /// Requests issued before this deadline are excluded from summaries.
+    pub warmup: Duration,
+    /// Measured-window length (after warmup).
+    pub duration: Duration,
+    /// Task mix, cycled per request (weights via repetition).
+    pub tasks: Vec<Task>,
+    /// Request-length distribution; `None` → each task's default.
+    pub gen_len: Option<GenLenDist>,
+    /// Seed for prompts, lengths and arrival gaps (runs are reproducible
+    /// modulo server timing).
+    pub seed: u64,
+    /// Open-loop cap on outstanding requests before arrivals are dropped.
+    pub max_inflight: usize,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            mode: ArrivalMode::Open { qps: 8.0 },
+            warmup: Duration::from_secs(1),
+            duration: Duration::from_secs(5),
+            tasks: vec![Task::Gsm8kS],
+            gen_len: None,
+            seed: 1,
+            max_inflight: 256,
+        }
+    }
+}
+
+impl LoadGenConfig {
+    /// Build a config from CLI flags — `--clients N` (closed loop) or
+    /// `--qps X` (open loop, default 8), `--duration` / `--warmup`
+    /// (human durations), `--tasks a,b,c`, `--gen-len N|LO:HI`, `--seed`,
+    /// `--max-inflight`.  Shared by `spa-cache bench-serve` and
+    /// `examples/bench_serve.rs` so the two front-ends cannot drift.
+    /// Unknown task names and malformed `--gen-len`/`--qps`/`--clients`/
+    /// `--max-inflight`/`--warmup`/`--duration` are errors, not silent
+    /// fallbacks (a typo'd flag must not measure — and permanently
+    /// record — the wrong load).
+    pub fn from_args(args: &Args) -> Result<LoadGenConfig> {
+        // Strict count parse: a typo'd count must not silently measure the
+        // default load (the trajectory file is append-only history).
+        let strict_count = |key: &str| -> Result<Option<usize>> {
+            match args.get(key) {
+                None => Ok(None),
+                Some(s) => {
+                    let n: usize = s.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("bad --{key} '{s}' (want a positive count)")
+                    })?;
+                    anyhow::ensure!(n > 0, "--{key} must be at least 1");
+                    Ok(Some(n))
+                }
+            }
+        };
+        let mode = match strict_count("clients")? {
+            Some(clients) => ArrivalMode::Closed { clients },
+            None => {
+                let qps = match args.get("qps") {
+                    Some(s) => {
+                        let q: f64 = s
+                            .trim()
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad --qps '{s}' (want a number)"))?;
+                        anyhow::ensure!(
+                            q.is_finite() && q > 0.0,
+                            "--qps must be positive (got {s})"
+                        );
+                        q
+                    }
+                    None => 8.0,
+                };
+                ArrivalMode::Open { qps }
+            }
+        };
+        let tasks = args
+            .str_or("tasks", "gsm8k_s")
+            .split(',')
+            .map(|s| {
+                Task::from_name(s.trim())
+                    .ok_or_else(|| anyhow::anyhow!("unknown task '{}' in --tasks", s.trim()))
+            })
+            .collect::<Result<Vec<Task>>>()?;
+        let gen_len = match args.get("gen-len") {
+            Some(s) => Some(
+                GenLenDist::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("bad --gen-len '{s}' (want N or LO:HI)"))?,
+            ),
+            None => None,
+        };
+        // Durations parse strictly too — `--duration 60ss` must not
+        // silently record a default-length run (duration_or's lenient
+        // fallback is for non-recording callers).
+        let strict_duration = |key: &str, default: Duration| -> Result<Duration> {
+            match args.get(key) {
+                None => Ok(default),
+                Some(s) => crate::util::cli::parse_duration(s).ok_or_else(|| {
+                    anyhow::anyhow!("bad --{key} '{s}' (want e.g. 500ms, 5s, 2m)")
+                }),
+            }
+        };
+        Ok(LoadGenConfig {
+            mode,
+            warmup: strict_duration("warmup", Duration::from_secs(1))?,
+            duration: strict_duration("duration", Duration::from_secs(5))?,
+            tasks,
+            gen_len,
+            seed: args.u64_or("seed", 1),
+            max_inflight: strict_count("max-inflight")?.unwrap_or(256),
+        })
+    }
+}
+
+/// One completed request as observed by the client side.
+#[derive(Debug, Clone, Copy)]
+struct Obs {
+    /// Issue time, seconds since run start (warmup filtering).
+    issued_s: f64,
+    /// Completion time, seconds since run start.
+    done_s: f64,
+    /// Client-measured wall time (ms), includes the wire.
+    wall_ms: f64,
+    /// Server-reported time to first committed token (ms).
+    ttft_ms: f64,
+    /// Server-reported end-to-end latency (ms), includes queue wait.
+    latency_ms: f64,
+    /// Tokens the server decoded for this request.
+    decoded: f64,
+    /// The reply was `{"error": ...}`.
+    error: bool,
+}
+
+/// Aggregated outcome of one load run against one server configuration —
+/// one row of the `BENCH_serving.json` per-method table.
+#[derive(Debug, Clone)]
+pub struct MethodReport {
+    /// Method label (`spa`, `vanilla`, ...).
+    pub method: String,
+    /// Requests completed inside the measured window.
+    pub requests: usize,
+    /// Of those, how many came back as `{"error": ...}`.
+    pub errors: usize,
+    /// Open-loop arrivals inside the measured window dropped at the
+    /// `max_inflight` cap (overload; warmup-window drops are not counted).
+    pub dropped: usize,
+    /// Length of the measured window actually observed (s).
+    pub measured_s: f64,
+    /// Configured offered load (open loop) or NaN (closed loop).
+    pub offered_qps: f64,
+    /// Completions per second inside the measured window.
+    pub achieved_qps: f64,
+    /// Decoded tokens per second inside the measured window.
+    pub tps: f64,
+    /// TTFT percentiles over measured requests (server-reported).
+    pub ttft: Option<Summary>,
+    /// End-to-end latency percentiles (server-reported, includes queue).
+    pub latency: Option<Summary>,
+    /// Client-side wall-time percentiles (latency + wire).
+    pub wall: Option<Summary>,
+    /// Mean batcher queue wait *inside the measured window*, reconstructed
+    /// from the scraped mean+count pairs at the warmup boundary and end of
+    /// run (a lifetime mean would smear warmup cold-start waits into every
+    /// trajectory entry).
+    pub queue_wait_ms_mean: f64,
+    /// Cache refreshes inside the measured window (scraped, differenced).
+    pub refreshes: f64,
+    /// Engine steps inside the measured window (scraped, differenced).
+    pub steps: f64,
+    /// Per-worker completions inside the measured window (scraped,
+    /// differenced) — the router's load-balance evidence.
+    pub per_worker_completed: Vec<(usize, f64)>,
+    /// Retained latency sample for distribution sketches.
+    latency_samples: Vec<f64>,
+}
+
+/// Sleep until `t0 + target` (no-op if already past).
+fn sleep_until(t0: Instant, target: Duration) {
+    let elapsed = t0.elapsed();
+    if elapsed < target {
+        std::thread::sleep(target - elapsed);
+    }
+}
+
+/// Issue one generate request and observe the reply; `None` on a broken
+/// connection (the caller's loop exits).
+fn one_request(
+    client: &mut Client,
+    cfg: &LoadGenConfig,
+    rng: &mut Rng,
+    seq: usize,
+    t0: Instant,
+) -> Option<Obs> {
+    let task = cfg.tasks[seq % cfg.tasks.len()];
+    let (q, _truth) = task.gen(rng);
+    let prompt = render_prompt(task, rng, &q);
+    let gen_len = cfg.gen_len.map(|d| d.sample(rng)).unwrap_or_else(|| task.gen_len());
+    let issued_s = t0.elapsed().as_secs_f64();
+    let w0 = Instant::now();
+    let r = client
+        .request(&Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("task", Json::str(task.name())),
+            ("prompt", Json::Str(prompt)),
+            ("gen_len", Json::Num(gen_len as f64)),
+        ]))
+        .ok()?;
+    Some(Obs {
+        issued_s,
+        done_s: t0.elapsed().as_secs_f64(),
+        wall_ms: w0.elapsed().as_secs_f64() * 1e3,
+        ttft_ms: r.get("ttft_ms").and_then(|x| x.as_f64()).unwrap_or(f64::NAN),
+        latency_ms: r.get("latency_ms").and_then(|x| x.as_f64()).unwrap_or(f64::NAN),
+        decoded: r.get("decoded").and_then(|x| x.as_f64()).unwrap_or(0.0),
+        error: r.get("error").is_some(),
+    })
+}
+
+/// Closed loop: one thread per client, back-to-back requests until the
+/// total (warmup + duration) deadline.
+fn spawn_closed(
+    addr: &str,
+    cfg: &LoadGenConfig,
+    t0: Instant,
+    obs: &Arc<Mutex<Vec<Obs>>>,
+    clients: usize,
+) -> Vec<JoinHandle<()>> {
+    let total = cfg.warmup + cfg.duration;
+    (0..clients)
+        .map(|c| {
+            let addr = addr.to_string();
+            let cfg = cfg.clone();
+            let obs = Arc::clone(obs);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(cfg.seed ^ (0xC10 + c as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                let mut client = match Client::connect(&addr) {
+                    Ok(cl) => cl,
+                    Err(_) => return,
+                };
+                let mut seq = c;
+                while t0.elapsed() < total {
+                    match one_request(&mut client, &cfg, &mut rng, seq, t0) {
+                        Some(o) => obs.lock().unwrap().push(o),
+                        None => return,
+                    }
+                    seq += clients;
+                }
+            })
+        })
+        .collect()
+}
+
+/// Open loop: a dispatcher thread draws exponential inter-arrival gaps and
+/// hands each arrival to a short-lived request thread (connections are
+/// pooled and reused).  Arrivals past `max_inflight` are dropped+counted.
+fn spawn_open(
+    addr: &str,
+    cfg: &LoadGenConfig,
+    t0: Instant,
+    obs: &Arc<Mutex<Vec<Obs>>>,
+    dropped: &Arc<AtomicUsize>,
+    qps: f64,
+) -> Vec<JoinHandle<()>> {
+    let total = cfg.warmup + cfg.duration;
+    let addr = addr.to_string();
+    let cfg = cfg.clone();
+    let obs = Arc::clone(obs);
+    let dropped = Arc::clone(dropped);
+    let dispatcher = std::thread::spawn(move || {
+        let mut rng = Rng::new(cfg.seed ^ 0x09E4_11AD);
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let pool: Arc<Mutex<Vec<Client>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut workers: Vec<JoinHandle<()>> = Vec::new();
+        let mut next = Duration::ZERO;
+        let mut seq = 0usize;
+        loop {
+            // Exponential inter-arrival gap (1 - u is in (0, 1], so ln is
+            // finite); qps > 0 is validated by `drive`.
+            let gap = -(1.0 - rng.f64()).ln() / qps;
+            next += Duration::from_secs_f64(gap);
+            if next >= total {
+                break;
+            }
+            sleep_until(t0, next);
+            if inflight.load(Ordering::SeqCst) >= cfg.max_inflight {
+                // Only measured-window drops count as an overload signal:
+                // a cap hit during warmup (cold caches, lazy compiles) is
+                // exactly what the warmup window exists to absorb.
+                if next >= cfg.warmup {
+                    dropped.fetch_add(1, Ordering::SeqCst);
+                }
+                seq += 1;
+                continue;
+            }
+            inflight.fetch_add(1, Ordering::SeqCst);
+            let addr = addr.clone();
+            let cfg = cfg.clone();
+            let obs = Arc::clone(&obs);
+            let pool = Arc::clone(&pool);
+            let inflight = Arc::clone(&inflight);
+            let mut req_rng = rng.fork();
+            let s = seq;
+            seq += 1;
+            workers.push(std::thread::spawn(move || {
+                let client = pool.lock().unwrap().pop();
+                let client = match client {
+                    Some(c) => Some(c),
+                    None => Client::connect(&addr).ok(),
+                };
+                if let Some(mut client) = client {
+                    if let Some(o) = one_request(&mut client, &cfg, &mut req_rng, s, t0) {
+                        obs.lock().unwrap().push(o);
+                        pool.lock().unwrap().push(client);
+                    }
+                }
+                inflight.fetch_sub(1, Ordering::SeqCst);
+            }));
+            if workers.len() >= 128 {
+                // Bound the handle list; finished threads just detach.
+                workers.retain(|h| !h.is_finished());
+            }
+        }
+        for h in workers {
+            let _ = h.join();
+        }
+    });
+    vec![dispatcher]
+}
+
+/// Drive one load run against a serving frontend at `addr` and aggregate
+/// the measured window into a [`MethodReport`].
+///
+/// Scrapes the Prometheus `stats` op twice — once at the warmup boundary
+/// (under load) and once after all clients joined and the server confirmed
+/// a `drain` — and reports counter *differences*, so warmup work never
+/// pollutes the measured refresh/step counts.
+pub fn drive(addr: &str, method: &str, cfg: &LoadGenConfig) -> Result<MethodReport> {
+    anyhow::ensure!(!cfg.tasks.is_empty(), "load generator needs a non-empty task mix");
+    if let ArrivalMode::Open { qps } = cfg.mode {
+        anyhow::ensure!(qps > 0.0 && qps.is_finite(), "open-loop qps must be positive");
+    }
+    let t0 = Instant::now();
+    let obs: Arc<Mutex<Vec<Obs>>> = Arc::new(Mutex::new(Vec::new()));
+    let dropped = Arc::new(AtomicUsize::new(0));
+
+    let generators = match cfg.mode {
+        ArrivalMode::Closed { clients } => spawn_closed(addr, cfg, t0, &obs, clients.max(1)),
+        ArrivalMode::Open { qps } => spawn_open(addr, cfg, t0, &obs, &dropped, qps),
+    };
+
+    // Counter baseline at the warmup boundary, scraped *under load*.  A
+    // failed scrape degrades to an all-zero baseline (counters then span
+    // the whole run, warmup included) — loudly, never silently.
+    sleep_until(t0, cfg.warmup);
+    let baseline = match Client::connect(addr).and_then(|mut c| c.stats()) {
+        Ok(text) => text,
+        Err(e) => {
+            crate::warnlog!(
+                "loadgen",
+                "warmup-boundary stats scrape failed ({e:#}); \
+                 recorded counters will include warmup work"
+            );
+            String::new()
+        }
+    };
+
+    for h in generators {
+        let _ = h.join();
+    }
+
+    // Every client thread joined ⇒ all replies received; the drain barrier
+    // double-checks the workers report idle before the final scrape.
+    let mut control = Client::connect(addr).context("connect for final scrape")?;
+    let drained = control.drain(Duration::from_secs(30))?;
+    if !drained {
+        crate::warnlog!("loadgen", "server did not drain within 30s; final counters may be low");
+    }
+    let end = control.stats()?;
+
+    Ok(aggregate(method, cfg, &obs.lock().unwrap(), dropped.load(Ordering::SeqCst), &baseline, &end))
+}
+
+/// Fold raw observations + the two stats scrapes into a [`MethodReport`].
+fn aggregate(
+    method: &str,
+    cfg: &LoadGenConfig,
+    obs: &[Obs],
+    dropped: usize,
+    baseline: &str,
+    end: &str,
+) -> MethodReport {
+    let warm = cfg.warmup.as_secs_f64();
+    let measured: Vec<&Obs> = obs.iter().filter(|o| o.issued_s >= warm).collect();
+    let errors = measured.iter().filter(|o| o.error).count();
+    let ok: Vec<&&Obs> = measured.iter().filter(|o| !o.error).collect();
+
+    let end_s = measured.iter().map(|o| o.done_s).fold(warm, f64::max);
+    let measured_s = (end_s - warm).max(1e-9);
+
+    let mut ttft = Reservoir::new(LOADGEN_SAMPLE_CAP);
+    let mut latency = Reservoir::new(LOADGEN_SAMPLE_CAP);
+    let mut wall = Reservoir::new(LOADGEN_SAMPLE_CAP);
+    let mut decoded_total = 0.0;
+    for o in &ok {
+        ttft.push(o.ttft_ms);
+        latency.push(o.latency_ms);
+        wall.push(o.wall_ms);
+        decoded_total += o.decoded;
+    }
+
+    let diff = |name: &str| -> f64 {
+        scrape_value(end, name).unwrap_or(0.0) - scrape_value(baseline, name).unwrap_or(0.0)
+    };
+    // Windowed mean from two (mean, count) snapshots: the sums subtract.
+    let queue_wait_ms_mean = {
+        let scrape_mc = |text: &str| {
+            (
+                scrape_value(text, "spa_queue_wait_ms_mean").unwrap_or(0.0),
+                scrape_value(text, "spa_queue_wait_ms_count").unwrap_or(0.0),
+            )
+        };
+        let (m_end, n_end) = scrape_mc(end);
+        let (m_base, n_base) = scrape_mc(baseline);
+        let n = n_end - n_base;
+        if n > 0.0 {
+            (m_end * n_end - m_base * n_base) / n
+        } else {
+            0.0
+        }
+    };
+    let base_completed: Vec<(usize, f64)> = scrape_worker_series(baseline, "spa_requests_completed");
+    let per_worker_completed = scrape_worker_series(end, "spa_requests_completed")
+        .into_iter()
+        .map(|(id, v)| {
+            let b = base_completed.iter().find(|(i, _)| *i == id).map(|(_, v)| *v).unwrap_or(0.0);
+            (id, v - b)
+        })
+        .collect();
+
+    MethodReport {
+        method: method.to_string(),
+        requests: measured.len(),
+        errors,
+        dropped,
+        measured_s,
+        offered_qps: match cfg.mode {
+            ArrivalMode::Open { qps } => qps,
+            ArrivalMode::Closed { .. } => f64::NAN,
+        },
+        achieved_qps: ok.len() as f64 / measured_s,
+        tps: decoded_total / measured_s,
+        ttft: ttft.summary(),
+        latency: latency.summary(),
+        wall: wall.summary(),
+        queue_wait_ms_mean,
+        refreshes: diff("spa_refreshes_total"),
+        steps: diff("spa_steps_total"),
+        per_worker_completed,
+        latency_samples: latency.samples().to_vec(),
+    }
+}
+
+/// Shared worker factory for the bench front-ends (`spa-cache bench-serve`
+/// and `examples/bench_serve.rs`): greedy sampler, `fast_dllm` gets the
+/// semi-AR block-parallel unmask mode, everything else confidence-parallel
+/// at `threshold`.  Centralised so the two front-ends build identical
+/// workers for identical flags — trajectory entries stay comparable.
+pub fn worker_factory(
+    manifest: Manifest,
+    model: String,
+    method: String,
+    block_k: usize,
+    threshold: f64,
+) -> impl Fn(usize) -> Result<Worker> + Send + Sync + 'static {
+    let unmask = if method == "fast_dllm" {
+        UnmaskMode::BlockParallel { threshold }
+    } else {
+        UnmaskMode::Parallel { threshold }
+    };
+    let seq_len = manifest.seq_len;
+    move |id| {
+        let engine = Engine::from_manifest(manifest.clone())?;
+        let spec = MethodSpec::by_name(&method, block_k)?;
+        let m = Method::new(&engine, &model, spec)?;
+        let sampler = Sampler::greedy(unmask);
+        Ok(Worker::new(id, engine, m, sampler, BatcherConfig::default(), 4 * seq_len))
+    }
+}
+
+/// Spawn a router + in-process server for one method, run the load against
+/// it, then drain, shut down and join everything.  `factory` builds one
+/// [`Worker`] per worker thread, exactly as `spa-cache serve` does.
+pub fn run_method<F>(
+    method: &str,
+    workers: usize,
+    seq_len: usize,
+    charset: &str,
+    cfg: &LoadGenConfig,
+    factory: F,
+) -> Result<MethodReport>
+where
+    F: Fn(usize) -> Result<Worker> + Send + Sync + 'static,
+{
+    let (router, worker_handles) = Router::spawn(workers, factory)?;
+    // Bind port 0 ourselves so the address is known before serving starts.
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind loadgen port")?;
+    let addr = listener.local_addr()?.to_string();
+    // Size the server's connection-handler pool above our own concurrency
+    // cap (+ control/scrape connections): generated connections must never
+    // starve in the accept queue, or joins would hang.
+    let conn_threads = match cfg.mode {
+        ArrivalMode::Open { .. } => cfg.max_inflight + 8,
+        ArrivalMode::Closed { clients } => clients + 8,
+    };
+    let server = std::thread::spawn({
+        let charset = charset.to_string();
+        let router = router.clone();
+        move || server::serve_listener(listener, seq_len, &charset, router, conn_threads)
+    });
+
+    let report = drive(&addr, method, cfg);
+
+    // Tear down regardless of how the drive went.
+    let shutdown = Client::connect(&addr).and_then(|mut c| c.shutdown());
+    if shutdown.is_err() {
+        router.shutdown();
+    }
+    for h in worker_handles {
+        match h.join() {
+            Ok(r) => r?,
+            Err(_) => anyhow::bail!("worker thread panicked during bench-serve"),
+        }
+    }
+    match server.join() {
+        Ok(r) => r?,
+        Err(_) => anyhow::bail!("server thread panicked during bench-serve"),
+    }
+    report
+}
+
+fn fmt_pct(s: &Option<Summary>) -> (String, String, String) {
+    match s {
+        Some(s) => {
+            (format!("{:.0}", s.p50), format!("{:.0}", s.p90), format!("{:.0}", s.p99))
+        }
+        None => ("-".into(), "-".into(), "-".into()),
+    }
+}
+
+/// Print the per-method serving table (and a latency-distribution
+/// sparkline per method) in the house bench style.
+pub fn print_reports(reports: &[MethodReport]) {
+    let mut t = Table::new(
+        "bench-serve: serving under load",
+        &[
+            "method", "req", "err", "drop", "qps", "tps", "ttft p50", "p90", "p99",
+            "lat p50", "p90", "p99", "refresh",
+        ],
+    );
+    for r in reports {
+        let (tp50, tp90, tp99) = fmt_pct(&r.ttft);
+        let (lp50, lp90, lp99) = fmt_pct(&r.latency);
+        t.row(vec![
+            r.method.clone(),
+            r.requests.to_string(),
+            r.errors.to_string(),
+            r.dropped.to_string(),
+            format!("{:.2}", r.achieved_qps),
+            format!("{:.2}", r.tps),
+            tp50,
+            tp90,
+            tp99,
+            lp50,
+            lp90,
+            lp99,
+            format!("{:.0}", r.refreshes),
+        ]);
+    }
+    t.print();
+    for r in reports {
+        if r.latency_samples.len() >= 2 {
+            let hi = r.latency_samples.iter().cloned().fold(f64::MIN, f64::max);
+            if hi > 0.0 {
+                let mut h = Histogram::new(0.0, hi * 1.01, 32);
+                for &x in &r.latency_samples {
+                    h.push(x);
+                }
+                println!("latency ms {:>10}  0 |{}| {:.0}", r.method, h.sparkline(), hi);
+            }
+        }
+        let shares: Vec<String> = r
+            .per_worker_completed
+            .iter()
+            .map(|(id, n)| format!("{id}:{n:.0}"))
+            .collect();
+        if !shares.is_empty() {
+            println!("per-worker {:>10}  {}", r.method, shares.join("  "));
+        }
+    }
+}
+
+fn summary_json(s: &Option<Summary>) -> Json {
+    match s {
+        None => Json::Null,
+        Some(s) => Json::obj(vec![
+            ("n", Json::Num(s.n as f64)),
+            ("mean", Json::Num(s.mean)),
+            ("min", Json::Num(s.min)),
+            ("p50", Json::Num(s.p50)),
+            ("p90", Json::Num(s.p90)),
+            ("p99", Json::Num(s.p99)),
+            ("max", Json::Num(s.max)),
+        ]),
+    }
+}
+
+fn finite_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// One method row of a trajectory entry.
+pub fn report_json(r: &MethodReport) -> Json {
+    Json::obj(vec![
+        ("method", Json::str(&r.method)),
+        ("requests", Json::Num(r.requests as f64)),
+        ("errors", Json::Num(r.errors as f64)),
+        ("dropped", Json::Num(r.dropped as f64)),
+        ("measured_s", Json::Num(r.measured_s)),
+        ("offered_qps", finite_or_null(r.offered_qps)),
+        ("achieved_qps", Json::Num(r.achieved_qps)),
+        ("tps", Json::Num(r.tps)),
+        ("ttft_ms", summary_json(&r.ttft)),
+        ("latency_ms", summary_json(&r.latency)),
+        ("wall_ms", summary_json(&r.wall)),
+        ("queue_wait_ms_mean", Json::Num(r.queue_wait_ms_mean)),
+        ("refreshes", Json::Num(r.refreshes)),
+        ("steps", Json::Num(r.steps)),
+        (
+            "per_worker_completed",
+            Json::Arr(
+                r.per_worker_completed
+                    .iter()
+                    .map(|(id, n)| {
+                        Json::obj(vec![
+                            ("worker", Json::Num(*id as f64)),
+                            ("completed", Json::Num(*n)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// The `config` block of a trajectory entry — everything needed to decide
+/// whether two entries are comparable.
+pub fn config_json(cfg: &LoadGenConfig, workers: usize, model: &str) -> Json {
+    let (mode, load) = match cfg.mode {
+        ArrivalMode::Open { qps } => ("open", Json::Num(qps)),
+        ArrivalMode::Closed { clients } => ("closed", Json::Num(clients as f64)),
+    };
+    Json::obj(vec![
+        ("mode", Json::str(mode)),
+        ("load", load),
+        ("workers", Json::Num(workers as f64)),
+        ("model", Json::str(model)),
+        ("warmup_s", Json::Num(cfg.warmup.as_secs_f64())),
+        ("duration_s", Json::Num(cfg.duration.as_secs_f64())),
+        (
+            "tasks",
+            Json::Arr(cfg.tasks.iter().map(|t| Json::str(t.name())).collect()),
+        ),
+        (
+            "gen_len",
+            match cfg.gen_len {
+                None => Json::Null,
+                Some(d) => Json::obj(vec![
+                    ("lo", Json::Num(d.lo as f64)),
+                    ("hi", Json::Num(d.hi as f64)),
+                ]),
+            },
+        ),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("max_inflight", Json::Num(cfg.max_inflight as f64)),
+    ])
+}
+
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Append one entry (config + per-method reports + git rev + timestamp) to
+/// the schema-versioned trajectory file at `path`, creating it if absent.
+///
+/// The file is `{"schema": 1, "entries": [...]}`; successive PRs append
+/// comparable datapoints rather than overwriting history.  An existing
+/// file that fails to parse or carries a different schema is an error —
+/// never silently clobbered.
+pub fn append_trajectory(path: &Path, config: Json, reports: &[MethodReport]) -> Result<()> {
+    let mut entries: Vec<Json> = match std::fs::read_to_string(path) {
+        Ok(text) => {
+            let doc = parse(&text)
+                .with_context(|| format!("existing {} is not valid JSON", path.display()))?;
+            let schema = doc.get("schema").and_then(|s| s.as_f64());
+            anyhow::ensure!(
+                schema == Some(TRAJECTORY_SCHEMA),
+                "{}: schema {:?} != {TRAJECTORY_SCHEMA} (refusing to mix)",
+                path.display(),
+                schema,
+            );
+            doc.get("entries").and_then(|e| e.as_arr()).map(|a| a.to_vec()).unwrap_or_default()
+        }
+        // Only a genuinely absent file starts a fresh history; any other
+        // read failure (corrupt UTF-8, permissions, transient IO) must not
+        // silently clobber the existing trajectory on the write below.
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => {
+            return Err(e).with_context(|| format!("read {}", path.display()));
+        }
+    };
+    let unix = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    entries.push(Json::obj(vec![
+        ("git_rev", Json::Str(git_rev())),
+        ("unix_time", Json::Num(unix)),
+        ("config", config),
+        ("methods", Json::Arr(reports.iter().map(report_json).collect())),
+    ]));
+    let doc = Json::obj(vec![
+        ("schema", Json::Num(TRAJECTORY_SCHEMA)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    std::fs::write(path, doc.to_string() + "\n")
+        .with_context(|| format!("write {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_len_dist_parses() {
+        assert_eq!(GenLenDist::parse("32"), Some(GenLenDist::fixed(32)));
+        assert_eq!(GenLenDist::parse("16:64"), Some(GenLenDist { lo: 16, hi: 64 }));
+        assert_eq!(GenLenDist::parse("0"), None);
+        assert_eq!(GenLenDist::parse("64:16"), None);
+        assert_eq!(GenLenDist::parse("x"), None);
+        let mut rng = Rng::new(7);
+        let d = GenLenDist { lo: 16, hi: 64 };
+        for _ in 0..100 {
+            let n = d.sample(&mut rng);
+            assert!((16..=64).contains(&n));
+        }
+        assert_eq!(GenLenDist::fixed(8).sample(&mut rng), 8);
+    }
+
+    #[test]
+    fn from_args_is_strict_about_load_flags() {
+        let parse = |s: &str| Args::parse_from(s.split_whitespace().map(|x| x.to_string()));
+        let cfg = LoadGenConfig::from_args(&parse(
+            "--qps 20 --duration 2s --tasks gsm8k_s,mmlu_s --gen-len 16:64",
+        ))
+        .unwrap();
+        assert_eq!(cfg.mode, ArrivalMode::Open { qps: 20.0 });
+        assert_eq!(cfg.duration, Duration::from_secs(2));
+        assert_eq!(cfg.tasks, vec![Task::Gsm8kS, Task::MmluS]);
+        assert_eq!(cfg.gen_len, Some(GenLenDist { lo: 16, hi: 64 }));
+        let cfg = LoadGenConfig::from_args(&parse("--clients 4")).unwrap();
+        assert_eq!(cfg.mode, ArrivalMode::Closed { clients: 4 });
+        // A typo'd flag must error, never measure (and record) the wrong
+        // load: the trajectory file is append-only history.
+        assert!(LoadGenConfig::from_args(&parse("--qps 0")).is_err());
+        assert!(LoadGenConfig::from_args(&parse("--qps -3")).is_err());
+        assert!(LoadGenConfig::from_args(&parse("--clients 1O")).is_err());
+        assert!(LoadGenConfig::from_args(&parse("--max-inflight nope")).is_err());
+        assert!(LoadGenConfig::from_args(&parse("--tasks gsm8k_s,bogus")).is_err());
+        assert!(LoadGenConfig::from_args(&parse("--gen-len 64:16")).is_err());
+        assert!(LoadGenConfig::from_args(&parse("--duration 60ss")).is_err());
+        assert!(LoadGenConfig::from_args(&parse("--warmup nonsense")).is_err());
+    }
+
+    #[test]
+    fn aggregate_filters_warmup_and_diffs_counters() {
+        let cfg = LoadGenConfig {
+            warmup: Duration::from_secs(1),
+            ..LoadGenConfig::default()
+        };
+        let obs = vec![
+            // Issued during warmup: excluded from everything.
+            Obs {
+                issued_s: 0.5,
+                done_s: 1.2,
+                wall_ms: 700.0,
+                ttft_ms: 100.0,
+                latency_ms: 650.0,
+                decoded: 64.0,
+                error: false,
+            },
+            Obs {
+                issued_s: 1.5,
+                done_s: 2.0,
+                wall_ms: 500.0,
+                ttft_ms: 50.0,
+                latency_ms: 450.0,
+                decoded: 32.0,
+                error: false,
+            },
+            Obs {
+                issued_s: 2.0,
+                done_s: 3.0,
+                wall_ms: 1000.0,
+                ttft_ms: 70.0,
+                latency_ms: 950.0,
+                decoded: 32.0,
+                error: false,
+            },
+            Obs {
+                issued_s: 2.5,
+                done_s: 2.6,
+                wall_ms: 100.0,
+                ttft_ms: f64::NAN,
+                latency_ms: f64::NAN,
+                decoded: 0.0,
+                error: true,
+            },
+        ];
+        let baseline = "spa_refreshes_total 10\nspa_steps_total 100\n\
+                        spa_queue_wait_ms_mean 30.0\n\
+                        spa_queue_wait_ms_count 2\n\
+                        spa_requests_completed{worker=\"0\"} 4\n";
+        let end = "spa_refreshes_total 25\nspa_steps_total 400\n\
+                   spa_queue_wait_ms_mean 20.0\n\
+                   spa_queue_wait_ms_count 6\n\
+                   spa_requests_completed{worker=\"0\"} 10\n\
+                   spa_requests_completed{worker=\"1\"} 3\n";
+        let r = aggregate("spa", &cfg, &obs, 2, baseline, end);
+        assert_eq!(r.requests, 3, "warmup-issued request excluded");
+        assert_eq!(r.errors, 1);
+        assert_eq!(r.dropped, 2);
+        // Measured window: warmup end (1.0) to last completion (3.0).
+        assert!((r.measured_s - 2.0).abs() < 1e-9);
+        assert!((r.tps - 32.0).abs() < 1e-9, "64 tokens / 2 s");
+        assert!((r.achieved_qps - 1.0).abs() < 1e-9, "2 ok / 2 s");
+        let lat = r.latency.as_ref().unwrap();
+        assert_eq!(lat.n, 2);
+        assert_eq!(lat.p50, 450.0);
+        assert_eq!(lat.p99, 950.0);
+        assert!((r.refreshes - 15.0).abs() < 1e-9);
+        assert!((r.steps - 300.0).abs() < 1e-9);
+        // Windowed, not lifetime: (20*6 - 30*2) / (6 - 2) = 15 — the
+        // warmup's expensive waits (mean 30) are subtracted back out.
+        assert!((r.queue_wait_ms_mean - 15.0).abs() < 1e-9);
+        assert_eq!(r.per_worker_completed, vec![(0, 6.0), (1, 3.0)]);
+    }
+
+    #[test]
+    fn trajectory_appends_and_validates_schema() {
+        let path = std::env::temp_dir()
+            .join(format!("spa_trajectory_unit_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let cfg = LoadGenConfig::default();
+        let report = aggregate("spa", &cfg, &[], 0, "", "");
+        append_trajectory(&path, config_json(&cfg, 2, "llada_s"), &[report.clone()]).unwrap();
+        append_trajectory(&path, config_json(&cfg, 2, "llada_s"), &[report]).unwrap();
+        let doc = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("schema").and_then(|s| s.as_f64()), Some(TRAJECTORY_SCHEMA));
+        let entries = doc.get("entries").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(entries.len(), 2, "entries append, never overwrite");
+        let entry = &entries[0];
+        assert!(entry.get("git_rev").and_then(|g| g.as_str()).is_some());
+        let methods = entry.get("methods").and_then(|m| m.as_arr()).unwrap();
+        assert_eq!(methods[0].get("method").and_then(|m| m.as_str()), Some("spa"));
+        assert!(methods[0].get("ttft_ms").is_some());
+        // A non-trajectory file at the path must be refused, not clobbered.
+        std::fs::write(&path, "not json").unwrap();
+        let cfg2 = LoadGenConfig::default();
+        let r2 = aggregate("spa", &cfg2, &[], 0, "", "");
+        assert!(append_trajectory(&path, config_json(&cfg2, 1, "m"), &[r2]).is_err());
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "not json");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -3,8 +3,11 @@
 //! Provides warmup+measure timing loops and an aligned table printer that
 //! mirrors the paper's table layout (TPS with speedup factors, TTFT,
 //! accuracy with binomial CIs).  Every `rust/benches/bench_*.rs` target uses
-//! this; `cargo bench` runs them all.
+//! this; `cargo bench` runs them all.  [`loadgen`] is the serving-path
+//! complement: open/closed-loop traffic through the TCP frontend rather
+//! than closed timing loops (DESIGN.md §10).
 
+pub mod loadgen;
 pub mod runner;
 
 use std::time::Instant;
@@ -25,7 +28,7 @@ pub fn time_ms<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
     Summary::of(&samples)
 }
 
-/// Paper-style cell formatters.
+/// Paper-style TPS cell: absolute value plus speedup over the baseline.
 pub fn fmt_tps(tps: f64, baseline_tps: f64) -> String {
     if baseline_tps > 0.0 {
         format!("{tps:.2} ({:.1}x)", tps / baseline_tps)
@@ -34,18 +37,23 @@ pub fn fmt_tps(tps: f64, baseline_tps: f64) -> String {
     }
 }
 
+/// Paper-style accuracy cell: percentage with a binomial 95% CI.
 pub fn fmt_acc(acc: f64, n: usize) -> String {
     format!("{:.2} (±{:.2})", acc * 100.0, binomial_ci95(acc, n) * 100.0)
 }
 
 /// Aligned ASCII table printer.
 pub struct Table {
+    /// Printed as `== title ==` above the table.
     pub title: String,
+    /// Column headings; every row must match this arity.
     pub headers: Vec<String>,
+    /// Cell text, row-major.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with the given title and column headings.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -54,11 +62,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells);
     }
 
+    /// Render the aligned table as text.
     pub fn render(&self) -> String {
         let ncol = self.headers.len();
         let mut width = vec![0usize; ncol];
@@ -91,6 +101,7 @@ impl Table {
         out
     }
 
+    /// Render to stdout.
     pub fn print(&self) {
         println!("{}", self.render());
     }

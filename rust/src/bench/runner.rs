@@ -15,14 +15,20 @@ use crate::util::rng::Rng;
 /// Aggregated evaluation of one (method, task) cell.
 #[derive(Debug, Clone)]
 pub struct EvalResult {
+    /// Decoded tokens per second across all sample chunks.
     pub tps: f64,
+    /// Mean time to first committed token (ms).
     pub ttft_ms: f64,
+    /// Exact-answer accuracy in [0, 1].
     pub accuracy: f64,
+    /// Number of samples evaluated.
     pub n: usize,
     /// Fraction of generated tokens identical to the vanilla decode
     /// (fidelity metric; 1.0 = lossless caching).
     pub agreement: f64,
+    /// Total decode steps across all chunks.
     pub steps: usize,
+    /// Total wall time (ms) across all chunks.
     pub total_ms: f64,
     /// Final token rows (for use as a reference by other methods).
     pub outputs: Vec<Vec<i32>>,

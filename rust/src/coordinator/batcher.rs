@@ -12,8 +12,10 @@ use std::time::{Duration, Instant};
 
 use super::request::Request;
 
+/// Admission-timing knobs (the refresh-cost vs. utilisation trade-off).
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
+    /// Batch slots available (fixed by the AOT executable's `B`).
     pub batch: usize,
     /// Admit as soon as this many slots are free (1 = aggressive).
     pub min_free: usize,
@@ -27,24 +29,30 @@ impl Default for BatcherConfig {
     }
 }
 
+/// FIFO admission queue in front of one worker's batch slots.
 #[derive(Debug)]
 pub struct Batcher {
     cfg: BatcherConfig,
     queue: VecDeque<Request>,
+    /// Requests admitted into slots so far (counter).
     pub admitted: u64,
+    /// Requests submitted to the queue so far (counter).
     pub submitted: u64,
 }
 
 impl Batcher {
+    /// Empty queue under the given admission policy.
     pub fn new(cfg: BatcherConfig) -> Batcher {
         Batcher { cfg, queue: VecDeque::new(), admitted: 0, submitted: 0 }
     }
 
+    /// Enqueue a request (admission happens later, in `admit`).
     pub fn submit(&mut self, req: Request) {
         self.submitted += 1;
         self.queue.push_back(req);
     }
 
+    /// Requests currently waiting for a slot.
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }

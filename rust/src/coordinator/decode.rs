@@ -23,15 +23,20 @@ pub enum UnmaskMode {
     BlockParallel { threshold: f64 },
 }
 
+/// Token-commit policy: which masked positions to fill each step, and how
+/// the replacement token is chosen.
 #[derive(Debug, Clone)]
 pub struct Sampler {
+    /// Unmasking policy (sequential / confidence-parallel / semi-AR block).
     pub mode: UnmaskMode,
     /// 0.0 = greedy (paper setting); >0 = Gumbel temperature sampling.
     pub temperature: f64,
+    /// Gumbel-noise source for temperature sampling.
     pub rng: Rng,
 }
 
 impl Sampler {
+    /// Greedy (temperature 0) sampler under the given unmask mode.
     pub fn greedy(mode: UnmaskMode) -> Sampler {
         Sampler { mode, temperature: 0.0, rng: Rng::new(0) }
     }

@@ -20,8 +20,11 @@ use super::request::SlotState;
 /// Outcome of decoding one group to completion.
 #[derive(Debug, Clone)]
 pub struct GroupOutcome {
+    /// Final `[B, N]` token buffer.
     pub tokens: Vec<i32>,
+    /// Decode steps executed.
     pub steps: usize,
+    /// Full-cost refresh steps among them.
     pub refreshes: u64,
     /// Wall time of each step (ms); step 0 is the prefill (TTFT).
     pub step_ms: Vec<f64>,
@@ -29,6 +32,7 @@ pub struct GroupOutcome {
     pub decoded: Vec<usize>,
     /// TTFT per slot (ms) — time to the first step's logits.
     pub ttft_ms: Vec<f64>,
+    /// Total wall time of the group decode (ms).
     pub total_ms: f64,
 }
 

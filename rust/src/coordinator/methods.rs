@@ -77,12 +77,15 @@ pub struct StepOut {
     pub logits: Option<Vec<f32>>,
     /// Replacement tokens (multistep only).
     pub new_tokens: Option<Vec<i32>>,
+    /// This step paid the full refresh cost (metrics / refresh counters).
     pub was_refresh: bool,
 }
 
 /// A cache method bound to one model + engine, holding group cache state.
 pub struct Method {
+    /// Which cache strategy this method implements.
     pub spec: MethodSpec,
+    /// Model name the variants were compiled for.
     pub model: String,
     step_var: Rc<LoadedVariant>,
     refresh_var: Option<Rc<LoadedVariant>>,
@@ -90,8 +93,11 @@ pub struct Method {
     /// input order (never copied back to the host — see engine perf notes).
     caches: Option<Vec<PjRtBuffer>>,
     steps_since_refresh: usize,
+    /// The next step must be a full-cost refresh (set by `invalidate`).
     pub needs_refresh: bool,
+    /// Full-cost refresh steps executed (counter).
     pub refreshes: u64,
+    /// Total decode steps executed (counter).
     pub steps: u64,
     /// Last-step per-position confidence (for the LowConfidence policy).
     last_conf: Vec<f32>,
@@ -99,6 +105,9 @@ pub struct Method {
 }
 
 impl Method {
+    /// Bind `spec` to a model: resolves and loads the step (and, where the
+    /// method has one, refresh) executables from the engine's variant
+    /// registry.
     pub fn new(engine: &Engine, model: &str, spec: MethodSpec) -> Result<Method> {
         let (step_name, refresh_name): (String, Option<String>) = match &spec {
             MethodSpec::Vanilla => (format!("{model}__vanilla"), None),
@@ -135,6 +144,7 @@ impl Method {
         })
     }
 
+    /// `(batch, seq_len, vocab)` of the step executable.
     pub fn geometry(&self) -> (usize, usize, usize) {
         let v = &self.step_var.info;
         let vocab = v
@@ -147,6 +157,7 @@ impl Method {
         (v.batch, v.seq_len, vocab)
     }
 
+    /// The loaded step executable (shape/geometry introspection).
     pub fn step_variant(&self) -> &LoadedVariant {
         &self.step_var
     }

@@ -10,42 +10,44 @@
 
 use std::time::Instant;
 
-use crate::util::rng::Rng;
-use crate::util::stats::{Summary, Welford};
+use crate::util::stats::{Reservoir, Summary, Welford};
 
 /// Cap on retained samples per series: means (Welford) stay exact, while
 /// percentiles degrade to a uniform reservoir approximation past the cap —
 /// and `Command::Stats` snapshots stay O(1) instead of O(requests served).
 const SAMPLE_CAP: usize = 4096;
 
-/// Reservoir insert: `seen` is the total observations including `x`.
-fn reservoir_push(rng: &mut Rng, samples: &mut Vec<f64>, seen: u64, x: f64) {
-    if samples.len() < SAMPLE_CAP {
-        samples.push(x);
-    } else {
-        let j = rng.below(seen) as usize;
-        if j < SAMPLE_CAP {
-            samples[j] = x;
-        }
-    }
-}
-
+/// Per-worker serving counters, gauges and latency digests.
+///
+/// Counters (`requests_*`, `tokens_decoded`, `steps`, `refreshes`) are
+/// monotone; gauges (`queue_depth`, `active_slots`) are point-in-time;
+/// latency series keep an exact Welford mean plus a bounded
+/// [`Reservoir`] for percentiles.
 #[derive(Debug, Clone)]
 pub struct Metrics {
     started: Instant,
+    /// Requests handed to this worker by the router.
     pub requests_submitted: u64,
+    /// Requests fully decoded and replied to.
     pub requests_completed: u64,
+    /// MASK positions committed across all completed and in-flight slots.
     pub tokens_decoded: u64,
+    /// Engine decode steps executed.
     pub steps: u64,
+    /// Steps that were full-cost cache refreshes (admission or schedule).
     pub refreshes: u64,
+    /// Time-to-first-token stream, measured from `Request::submitted`.
     pub ttft: Welford,
+    /// End-to-end request latency stream (includes batcher queueing).
     pub latency: Welford,
+    /// Time spent queued in the batcher before admission.
     pub queue_wait: Welford,
-    ttft_samples: Vec<f64>,
-    latency_samples: Vec<f64>,
-    queue_wait_samples: Vec<f64>,
-    rng: Rng,
+    ttft_samples: Reservoir,
+    latency_samples: Reservoir,
+    queue_wait_samples: Reservoir,
+    /// Batcher queue depth at the last snapshot.
     pub queue_depth: usize,
+    /// Occupied batch slots at the last snapshot.
     pub active_slots: usize,
 }
 
@@ -61,10 +63,9 @@ impl Default for Metrics {
             ttft: Welford::default(),
             latency: Welford::default(),
             queue_wait: Welford::default(),
-            ttft_samples: Vec::new(),
-            latency_samples: Vec::new(),
-            queue_wait_samples: Vec::new(),
-            rng: Rng::new(0x5A3B1E5),
+            ttft_samples: Reservoir::new(SAMPLE_CAP),
+            latency_samples: Reservoir::new(SAMPLE_CAP),
+            queue_wait_samples: Reservoir::new(SAMPLE_CAP),
             queue_depth: 0,
             active_slots: 0,
         }
@@ -72,27 +73,24 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Record one finished request (NaN TTFT — e.g. a zero-step decode —
+    /// is skipped; latency is always recorded).
     pub fn record_completion(&mut self, ttft_ms: f64, latency_ms: f64, decoded: usize) {
         self.requests_completed += 1;
         self.tokens_decoded += decoded as u64;
         if ttft_ms.is_finite() {
             self.ttft.push(ttft_ms);
-            reservoir_push(&mut self.rng, &mut self.ttft_samples, self.ttft.count(), ttft_ms);
+            self.ttft_samples.push(ttft_ms);
         }
         self.latency.push(latency_ms);
-        reservoir_push(&mut self.rng, &mut self.latency_samples, self.latency.count(), latency_ms);
+        self.latency_samples.push(latency_ms);
     }
 
     /// Time a request spent queued in the batcher before admission.
     pub fn record_queue_wait(&mut self, wait_ms: f64) {
         if wait_ms.is_finite() {
             self.queue_wait.push(wait_ms);
-            reservoir_push(
-                &mut self.rng,
-                &mut self.queue_wait_samples,
-                self.queue_wait.count(),
-                wait_ms,
-            );
+            self.queue_wait_samples.push(wait_ms);
         }
     }
 
@@ -106,25 +104,19 @@ impl Metrics {
         }
     }
 
+    /// Percentile summary of the retained latency sample, if any.
     pub fn latency_summary(&self) -> Option<Summary> {
-        if self.latency_samples.is_empty() {
-            None
-        } else {
-            Some(Summary::of(&self.latency_samples))
-        }
+        self.latency_samples.summary()
     }
 
+    /// Percentile summary of the retained TTFT sample, if any.
     pub fn ttft_summary(&self) -> Option<Summary> {
-        if self.ttft_samples.is_empty() {
-            None
-        } else {
-            Some(Summary::of(&self.ttft_samples))
-        }
+        self.ttft_samples.summary()
     }
 
     /// Fold `other` into `self` (used to aggregate worker snapshots).
     /// Counters add; Welford states merge exactly (counts/means stay
-    /// exact even past `SAMPLE_CAP`); percentile reservoirs concatenate
+    /// exact even past `SAMPLE_CAP`); percentile reservoirs merge
     /// (bounded, approximate); gauges (queue depth, active slots) add;
     /// `started` keeps the earliest epoch so `tps` stays a whole-system
     /// rate.
@@ -142,16 +134,9 @@ impl Metrics {
         self.ttft.merge(&other.ttft);
         self.latency.merge(&other.latency);
         self.queue_wait.merge(&other.queue_wait);
-        let seen = self.latency.count().max(1);
-        for &x in &other.ttft_samples {
-            reservoir_push(&mut self.rng, &mut self.ttft_samples, seen, x);
-        }
-        for &x in &other.latency_samples {
-            reservoir_push(&mut self.rng, &mut self.latency_samples, seen, x);
-        }
-        for &x in &other.queue_wait_samples {
-            reservoir_push(&mut self.rng, &mut self.queue_wait_samples, seen, x);
-        }
+        self.ttft_samples.merge(&other.ttft_samples);
+        self.latency_samples.merge(&other.latency_samples);
+        self.queue_wait_samples.merge(&other.queue_wait_samples);
     }
 
     /// Gauge/counter series as (name, value) pairs.
@@ -168,6 +153,9 @@ impl Metrics {
             ("spa_ttft_ms_mean", self.ttft.mean()),
             ("spa_latency_ms_mean", self.latency.mean()),
             ("spa_queue_wait_ms_mean", self.queue_wait.mean()),
+            // Mean + count lets a scraper reconstruct the sum and
+            // difference means across a time window (bench/loadgen.rs).
+            ("spa_queue_wait_ms_count", self.queue_wait.count() as f64),
         ]
     }
 
@@ -206,6 +194,39 @@ impl Metrics {
         }
         s
     }
+}
+
+/// Read one *unlabelled* series value back out of exposition text produced
+/// by [`Metrics::render`] / [`Metrics::render_workers`] — the inverse half
+/// the load generator needs to diff counters across a measurement window.
+pub fn scrape_value(text: &str, name: &str) -> Option<f64> {
+    for line in text.lines() {
+        if let Some((key, val)) = line.split_once(' ') {
+            if key == name {
+                return val.trim().parse().ok();
+            }
+        }
+    }
+    None
+}
+
+/// Read every `name{worker="<id>"}` series out of exposition text, as
+/// `(worker id, value)` pairs in document order.
+pub fn scrape_worker_series(text: &str, name: &str) -> Vec<(usize, f64)> {
+    let prefix = format!("{name}{{worker=\"");
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if let Some((key, val)) = line.split_once(' ') {
+            if let Some(rest) = key.strip_prefix(&prefix) {
+                if let Some(id) = rest.strip_suffix("\"}") {
+                    if let (Ok(id), Ok(v)) = (id.parse::<usize>(), val.trim().parse::<f64>()) {
+                        out.push((id, v));
+                    }
+                }
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -267,12 +288,30 @@ mod tests {
     }
 
     #[test]
+    fn scrape_roundtrips_render() {
+        let mut w0 = Metrics::default();
+        w0.record_completion(10.0, 100.0, 8);
+        let mut w1 = Metrics::default();
+        w1.record_completion(20.0, 200.0, 4);
+        let text = Metrics::render_workers(&[(0, w0), (1, w1)]);
+        assert_eq!(scrape_value(&text, "spa_requests_completed"), Some(2.0));
+        assert_eq!(scrape_value(&text, "spa_tokens_decoded"), Some(12.0));
+        assert_eq!(scrape_value(&text, "no_such_series"), None);
+        let per_worker = scrape_worker_series(&text, "spa_requests_completed");
+        assert_eq!(per_worker, vec![(0, 1.0), (1, 1.0)]);
+        let decoded = scrape_worker_series(&text, "spa_tokens_decoded");
+        assert_eq!(decoded, vec![(0, 8.0), (1, 4.0)]);
+    }
+
+    #[test]
     fn queue_wait_tracked() {
         let mut m = Metrics::default();
         m.record_queue_wait(40.0);
         m.record_queue_wait(60.0);
         assert_eq!(m.queue_wait.count(), 2);
         assert!((m.queue_wait.mean() - 50.0).abs() < 1e-9);
-        assert!(m.render().contains("spa_queue_wait_ms_mean 50"));
+        let text = m.render();
+        assert!(text.contains("spa_queue_wait_ms_mean 50"));
+        assert!(text.contains("spa_queue_wait_ms_count 2"));
     }
 }

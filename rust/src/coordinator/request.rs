@@ -7,46 +7,64 @@ use crate::model::tasks::Task;
 /// A generation request entering the router.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Server-assigned unique id (distinct from any client-side id).
     pub id: u64,
     /// Full sequence: BOS + prompt tokens, generation region MASKed, PAD tail.
     pub tokens: Vec<i32>,
+    /// Prompt prefix length (BOS included).
     pub prompt_len: usize,
     /// Optional ground truth (benches / accuracy accounting).
     pub answer: Option<String>,
+    /// Task the prompt was drawn from, when known (sets block length).
     pub task: Option<Task>,
+    /// When the request entered the system; TTFT/latency are measured
+    /// from here, so queueing delay is included.
     pub submitted: Instant,
 }
 
 /// A finished generation.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// Echo of [`Request::id`].
     pub id: u64,
+    /// Extracted answer text (see `tasks::extract_answer`).
     pub text: String,
+    /// Final token row, PAD tail included.
     pub tokens: Vec<i32>,
+    /// Echo of [`Request::prompt_len`].
     pub prompt_len: usize,
     /// Tokens decoded (MASK positions committed).
     pub decoded: usize,
+    /// Decode steps this request was resident for.
     pub steps: usize,
+    /// Time to first committed token (ms, from submission).
     pub ttft_ms: f64,
+    /// End-to-end latency (ms, from submission).
     pub latency_ms: f64,
 }
 
 /// Per-request decode progress while resident in a batch slot.
 #[derive(Debug, Clone)]
 pub struct SlotState {
+    /// A request is resident in this slot (empty slots decode PAD rows).
     pub occupied: bool,
+    /// [`Request::id`] of the resident request.
     pub request_id: u64,
+    /// Prompt prefix length of the resident request.
     pub prompt_len: usize,
     /// End of the generation region (exclusive).
     pub gen_end: usize,
     /// Semi-AR active block cursor (Fast-dLLM).
     pub block_start: usize,
+    /// Semi-AR block length (`usize::MAX` disables blocking).
     pub block_len: usize,
     /// Positions decoded on the most recent step (locality heuristics).
     pub last_decoded: Vec<usize>,
     /// All positions decoded since the last full refresh.
     pub decoded_since_refresh: Vec<usize>,
+    /// Steps this slot has been decoded for.
     pub steps: usize,
+    /// Time to first committed token, once observed.
     pub ttft_ms: Option<f64>,
     /// When the request entered the system (`Request::submitted`) — TTFT and
     /// latency are measured from here so batcher queueing delay is visible.
@@ -56,6 +74,7 @@ pub struct SlotState {
 }
 
 impl SlotState {
+    /// An unoccupied slot (PAD row).
     pub fn empty() -> SlotState {
         SlotState {
             occupied: false,
@@ -73,6 +92,7 @@ impl SlotState {
         }
     }
 
+    /// Slot state for a freshly admitted request.
     pub fn assign(req: &Request, block_len: usize) -> SlotState {
         SlotState {
             occupied: true,

@@ -17,7 +17,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -38,10 +38,12 @@ pub struct WorkerStatus {
 }
 
 impl WorkerStatus {
+    /// Count one request dispatched to this worker (router side).
     pub fn inc_inflight(&self) {
         self.inflight.fetch_add(1, Ordering::SeqCst);
     }
 
+    /// Count one request completed by this worker (worker side).
     pub fn dec_inflight(&self) {
         // Saturating: a shutdown can drop queued requests after dispatch.
         let _ = self.inflight.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |x| {
@@ -49,14 +51,17 @@ impl WorkerStatus {
         });
     }
 
+    /// Publish the batcher queue depth (worker loop, every iteration).
     pub fn set_queue_depth(&self, d: usize) {
         self.queue_depth.store(d, Ordering::SeqCst);
     }
 
+    /// Publish the free batch-slot count (worker loop, every iteration).
     pub fn set_free_slots(&self, f: usize) {
         self.free_slots.store(f, Ordering::SeqCst);
     }
 
+    /// Point-in-time read of all three gauges.
     pub fn load(&self) -> WorkerLoad {
         WorkerLoad {
             inflight: self.inflight.load(Ordering::SeqCst),
@@ -94,7 +99,7 @@ impl WorkerLoad {
     }
 }
 
-/// Pure JSQ selection over a load vector: minimise [`WorkerLoad::order_key`]
+/// Pure JSQ selection over a load vector: minimise `WorkerLoad::order_key`
 /// with the tie-rotation anchored at `start`.  Returns the winning index.
 pub fn pick_worker(loads: &[WorkerLoad], start: usize) -> usize {
     assert!(!loads.is_empty(), "router has no workers");
@@ -105,8 +110,11 @@ pub fn pick_worker(loads: &[WorkerLoad], start: usize) -> usize {
 /// One worker's router-side endpoint: command channel + shared load gauges.
 #[derive(Clone)]
 pub struct WorkerEndpoint {
+    /// Worker index (stable across the server's lifetime).
     pub id: usize,
+    /// Command channel into the worker's mailbox.
     pub tx: Sender<Command>,
+    /// Load gauges shared between router and worker.
     pub status: Arc<WorkerStatus>,
 }
 
@@ -208,6 +216,7 @@ impl Router {
         Ok((Router::new(endpoints), handles))
     }
 
+    /// Number of workers behind this router.
     pub fn worker_count(&self) -> usize {
         self.workers.len()
     }
@@ -251,20 +260,53 @@ impl Router {
 
     /// Fan `stats` out to every worker and render the merged Prometheus
     /// text: aggregate series first, then per-worker labelled series.
+    ///
+    /// All `Stats` commands are sent *before* any reply is awaited, so the
+    /// per-worker snapshots are taken as close together in time as the
+    /// worker command loops allow.  The previous send→wait→send loop let a
+    /// worker mid-decode delay the next worker's snapshot by whole decode
+    /// steps (seconds under load), interleaving counters from visibly
+    /// different instants into one "aggregate" — see the
+    /// `stats_fans_out_before_collecting` regression test.
     pub fn stats(&self) -> String {
-        let mut snaps = Vec::with_capacity(self.workers.len());
+        let mut pending = Vec::with_capacity(self.workers.len());
         for ep in &self.workers {
             let (tx, rx) = channel();
-            if ep.tx.send(Command::Stats(tx)).is_err() {
-                continue;
+            if ep.tx.send(Command::Stats(tx)).is_ok() {
+                pending.push((ep.id, rx));
             }
+        }
+        let mut snaps = Vec::with_capacity(pending.len());
+        for (id, rx) in pending {
             // Workers drain commands between decode steps, so this answers
             // promptly; the timeout guards against a wedged worker.
             if let Ok(m) = rx.recv_timeout(Duration::from_secs(10)) {
-                snaps.push((ep.id, m));
+                snaps.push((id, m));
             }
         }
         Metrics::render_workers(&snaps)
+    }
+
+    /// Block until every worker reports zero inflight requests and an empty
+    /// queue, or `timeout` elapses; returns `true` when fully drained.
+    /// The load generator calls this (via the server's `drain` op) to put a
+    /// clean boundary between the measured window and the final stats
+    /// scrape, so end-of-run counters never include half-finished work.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        loop {
+            let idle = self
+                .loads()
+                .iter()
+                .all(|l| l.inflight == 0 && l.queue_depth == 0);
+            if idle {
+                return true;
+            }
+            if t0.elapsed() >= timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
     }
 
     /// Fan `shutdown` out to every worker.
@@ -351,6 +393,64 @@ mod tests {
             assert_eq!(router.submit(req(i), reply.clone()), Some(1));
         }
         assert_eq!(rxs[0].try_iter().count(), 4);
+    }
+
+    /// Regression test for the stats-scrape interleave: the router must
+    /// fan the `Stats` command out to every worker before waiting on any
+    /// reply.  Worker 0 stalls for 300 ms before answering (a worker
+    /// mid-decode); worker 1 records when its command *arrived*.  With the
+    /// old send→wait→send loop worker 1 would not even see the command
+    /// until worker 0 had answered.
+    #[test]
+    fn stats_fans_out_before_collecting() {
+        let mut eps = Vec::new();
+        let mut threads = Vec::new();
+        let t0 = Instant::now();
+        let w1_received = Arc::new(Mutex::new(None::<Duration>));
+        for id in 0..2usize {
+            let (tx, rx) = channel::<Command>();
+            let received = Arc::clone(&w1_received);
+            threads.push(std::thread::spawn(move || {
+                for cmd in rx {
+                    if let Command::Stats(reply) = cmd {
+                        if id == 0 {
+                            std::thread::sleep(Duration::from_millis(300));
+                        } else {
+                            *received.lock().unwrap() = Some(t0.elapsed());
+                        }
+                        let _ = reply.send(Metrics::default());
+                    }
+                }
+            }));
+            eps.push(WorkerEndpoint { id, tx, status: Arc::new(WorkerStatus::default()) });
+        }
+        let router = Router::new(eps);
+        let text = router.stats();
+        assert!(text.contains("spa_requests_completed{worker=\"1\"}"), "{text}");
+        let arrived = w1_received.lock().unwrap().expect("worker 1 never saw Stats");
+        assert!(
+            arrived < Duration::from_millis(150),
+            "worker 1's snapshot was serialised behind worker 0's stall: {arrived:?}"
+        );
+        drop(router);
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn drain_waits_for_inflight() {
+        let (router, rxs) = bare_router(1);
+        let (reply, _keep) = channel();
+        router.submit(req(1), reply).unwrap();
+        // One inflight request: drain must time out...
+        assert!(!router.drain(Duration::from_millis(30)));
+        // ...until the "worker" completes it.
+        match rxs[0].try_recv().unwrap() {
+            Command::Submit(_, _) => router.workers[0].status.dec_inflight(),
+            _ => panic!("expected submit"),
+        }
+        assert!(router.drain(Duration::from_millis(100)));
     }
 
     /// The batcher conservation property, extended to the router: every

@@ -7,7 +7,7 @@
 //! channel, responses leave through per-request reply channels.  Slot
 //! lifecycle:
 //!
-//!   queue → [admit] → slot (forces cache refresh) → steps → done → response
+//!   queue → `[admit]` → slot (forces cache refresh) → steps → done → response
 //!
 //! Admission invalidates the group caches (the diffusion state is batch-
 //! global), so the batcher controls admission timing (see `batcher.rs`).
@@ -37,17 +37,22 @@ use super::methods::{Method, StepOut};
 use super::request::{Request, Response, SlotState};
 use super::router::WorkerStatus;
 
+/// A worker's mailbox protocol — everything the router can ask of it.
 pub enum Command {
+    /// Enqueue a request; the response is sent on the paired channel when
+    /// the request finishes decoding.
     Submit(Request, Sender<Response>),
     /// Reply with a metrics snapshot (the router merges snapshots and
     /// renders the Prometheus text with per-worker labels).
     Stats(Sender<Metrics>),
+    /// Exit the worker loop; queued and resident requests are dropped.
     Shutdown,
 }
 
 /// One decode group's worth of serving state: engine, cache method, batcher
 /// queue, resident slots and reply channels.  `run` is the worker loop.
 pub struct Worker {
+    /// Worker index, used as the Prometheus `{worker="<id>"}` label.
     pub id: usize,
     engine: Engine,
     method: Method,
@@ -60,6 +65,7 @@ pub struct Worker {
     requests: Vec<Option<Request>>,
     /// Reply channels for requests still in the batcher queue, by id.
     pending: Vec<(u64, Sender<Response>)>,
+    /// Serving counters/gauges/digests for this worker (see `metrics.rs`).
     pub metrics: Metrics,
     /// Shared load gauges read by the router's dispatch policy.
     status: Arc<WorkerStatus>,
@@ -68,6 +74,8 @@ pub struct Worker {
 }
 
 impl Worker {
+    /// Assemble a worker over an engine + cache method; the batcher's batch
+    /// size is forced to the method's geometry (slots are batch rows).
     pub fn new(
         id: usize,
         engine: Engine,
@@ -136,7 +144,7 @@ impl Worker {
                         }
                     }
                     Some(Command::Stats(reply)) => {
-                        let _ = reply.send(self.metrics.clone());
+                        let _ = reply.send(self.snapshot());
                     }
                     Some(Command::Shutdown) => return Ok(()),
                     None => break,
@@ -150,6 +158,19 @@ impl Worker {
             self.metrics.active_slots = self.slots.iter().filter(|s| s.occupied).count();
             self.publish_status();
         }
+    }
+
+    /// Metrics snapshot with the queue/slot gauges refreshed *at snapshot
+    /// time*.  `self.metrics` only has its gauges written after a decode
+    /// step, so a `Stats` command drained mid-loop (e.g. right after a
+    /// burst of submits) would otherwise ship stale `queue_depth` /
+    /// `active_slots` values that interleave inconsistently when the
+    /// router merges per-worker snapshots at render time.
+    fn snapshot(&self) -> Metrics {
+        let mut m = self.metrics.clone();
+        m.queue_depth = self.batcher.queue_len();
+        m.active_slots = self.slots.iter().filter(|s| s.occupied).count();
+        m
     }
 
     /// Mirror queue depth / free slots into the shared gauges the router

@@ -7,9 +7,17 @@
 //!   → {"op":"generate","id":1,"task":"gsm8k_s","prompt":"...","gen_len":64}
 //!   ← {"id":1,"text":"8","steps":12,"ttft_ms":41.2,"latency_ms":180.3,
 //!      "worker":0}
-//!   → {"op":"stats"}   ← prometheus-style text in {"stats": "..."} with
-//!                        aggregate series plus `{worker="<id>"}` labels
-//!   → {"op":"shutdown"}
+//!   → {"op":"stats"}    ← prometheus-style text in {"stats": "..."} with
+//!                         aggregate series plus `{worker="<id>"}` labels
+//!   → {"op":"drain","timeout_ms":5000}
+//!                       ← {"ok":true} once every worker is idle (false on
+//!                         timeout) — load-generator end-of-run barrier
+//!   → {"op":"shutdown"} ← {"ok":true}, then the server exits
+//!
+//! Every failure is a single-line `{"error": "..."}` reply on the same
+//! connection; the stream stays usable.  For example:
+//!   → {"op":"generate","prompt":"ÜNSUPPORTED"}
+//!   ← {"error":"unknown char 'Ü'"}
 //!
 //! All replies — errors included — are built with `util::json::Json`, so
 //! arbitrary error text (quotes, backslashes, control characters) is always
@@ -69,17 +77,40 @@ pub fn error_reply(msg: &str) -> String {
     Json::obj(vec![("error", Json::str(msg))]).to_string()
 }
 
+/// Default connection-handler thread count.  Connections are long-lived
+/// (clients pipeline many requests per socket), so this bounds *concurrent
+/// clients*, not requests: the N+1th connection waits in the pool queue
+/// until one of the first N closes.
+pub const DEFAULT_CONN_THREADS: usize = 64;
+
 /// Serve until a client sends `{"op":"shutdown"}`, then fan the shutdown
 /// out to every worker via the router.
+pub fn serve(addr: &str, seq_len: usize, charset: &str, router: Router) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    serve_listener(listener, seq_len, charset, router, DEFAULT_CONN_THREADS)
+}
+
+/// [`serve`] over an already-bound listener and an explicit concurrent-
+/// connection bound.  The load generator binds port 0 itself so it knows
+/// the ephemeral address before the accept loop starts (no sleep-and-hope
+/// handshake), and sizes `conn_threads` above its own concurrency cap so
+/// generated connections can never starve each other.
 ///
 /// The accept loop polls a non-blocking listener so a shutdown requested by
 /// a connection handler (shared atomic flag) is honoured promptly even when
 /// no further connections arrive.
-pub fn serve(addr: &str, seq_len: usize, charset: &str, router: Router) -> Result<()> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+pub fn serve_listener(
+    listener: TcpListener,
+    seq_len: usize,
+    charset: &str,
+    router: Router,
+    conn_threads: usize,
+) -> Result<()> {
     listener.set_nonblocking(true)?;
-    info!("server", "listening on {addr} ({} workers)", router.worker_count());
-    let pool = ThreadPool::new(8);
+    if let Ok(addr) = listener.local_addr() {
+        info!("server", "listening on {addr} ({} workers)", router.worker_count());
+    }
+    let pool = ThreadPool::new(conn_threads.max(1));
     let tok = Arc::new(Tokenizer::from_manifest(charset));
     let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
     while !shutdown.load(Ordering::Relaxed) {
@@ -138,6 +169,15 @@ fn handle_conn(
                 let out = Json::obj(vec![("stats", Json::Str(text))]);
                 writeln!(writer, "{}", out.to_string())?;
             }
+            "drain" => {
+                let timeout_ms = msg
+                    .get("timeout_ms")
+                    .and_then(|x| x.as_f64())
+                    .filter(|x| x.is_finite() && *x >= 0.0)
+                    .unwrap_or(10_000.0);
+                let ok = router.drain(std::time::Duration::from_millis(timeout_ms as u64));
+                writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(ok))]).to_string())?;
+            }
             _ => {
                 let prompt = msg.get("prompt").and_then(|p| p.as_str()).unwrap_or("");
                 let task = msg
@@ -194,10 +234,12 @@ pub struct Client {
 }
 
 impl Client {
+    /// Open one connection to a serving frontend.
     pub fn connect(addr: &str) -> Result<Client> {
         Ok(Client { stream: TcpStream::connect(addr)? })
     }
 
+    /// Send one JSON line and block for the single JSON-line reply.
     pub fn request(&mut self, body: &Json) -> Result<Json> {
         writeln!(self.stream, "{}", body.to_string())?;
         let mut reader = BufReader::new(self.stream.try_clone()?);
@@ -206,6 +248,7 @@ impl Client {
         Ok(parse(&line)?)
     }
 
+    /// `generate` op with the task's default `gen_len`.
     pub fn generate(&mut self, task: &str, prompt: &str) -> Result<Json> {
         self.request(&Json::obj(vec![
             ("op", Json::str("generate")),
@@ -214,11 +257,23 @@ impl Client {
         ]))
     }
 
+    /// `stats` op → the Prometheus exposition text.
     pub fn stats(&mut self) -> Result<String> {
         let r = self.request(&Json::obj(vec![("op", Json::str("stats"))]))?;
         Ok(r.get("stats").and_then(|s| s.as_str()).unwrap_or("").to_string())
     }
 
+    /// `drain` op: block until the workers are idle; `Ok(true)` when fully
+    /// drained within `timeout`.
+    pub fn drain(&mut self, timeout: std::time::Duration) -> Result<bool> {
+        let r = self.request(&Json::obj(vec![
+            ("op", Json::str("drain")),
+            ("timeout_ms", Json::Num(timeout.as_secs_f64() * 1e3)),
+        ]))?;
+        Ok(r.get("ok").and_then(|x| x.as_bool()).unwrap_or(false))
+    }
+
+    /// `shutdown` op: stop the server (and its workers) after the reply.
     pub fn shutdown(&mut self) -> Result<()> {
         let _ = self.request(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
         Ok(())

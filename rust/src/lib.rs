@@ -10,7 +10,8 @@
 //!   cache methods (SPA-Cache + every baseline), decode policies, metrics,
 //!   and a TCP server.
 //! * [`analysis`] regenerates the paper's figures from probe artifacts.
-//! * [`bench`] is a criterion-substitute harness for the paper tables.
+//! * [`bench`] is a criterion-substitute harness for the paper tables,
+//!   plus the serving load generator behind `spa-cache bench-serve`.
 //! * [`util`] holds the from-scratch substrates (json/cli/rng/stats/
 //!   threadpool/proptest) required by the offline environment.
 

@@ -1,11 +1,15 @@
-//! SPA-Cache CLI: serve | generate | analyze | selftest | list
+//! SPA-Cache CLI: serve | bench-serve | generate | analyze | selftest | list
 //!
 //! Examples:
 //!   spa-cache list
 //!   spa-cache generate --model llada_s --method spa --task gsm8k_s --samples 4
 //!   spa-cache serve --addr 127.0.0.1:7377 --model llada_s --method spa --workers 4
+//!   spa-cache bench-serve --workers 2 --qps 50 --duration 5s --methods vanilla,spa
+//!   spa-cache bench-serve --workers 2 --clients 8 --duration 10s   (closed loop)
 //!   spa-cache analyze --model llada_s --steps 12
 //!   spa-cache selftest
+
+use std::path::Path;
 
 use anyhow::Result;
 
@@ -31,13 +35,16 @@ fn main() -> Result<()> {
         "list" => list(&args),
         "generate" => generate(&args),
         "serve" => serve(&args),
+        "bench-serve" => bench_serve(&args),
         "analyze" => analyze(&args),
         "selftest" => selftest(&args),
         _ => {
             eprintln!(
-                "usage: spa-cache <list|generate|serve|analyze|selftest> \
+                "usage: spa-cache <list|generate|serve|bench-serve|analyze|selftest> \
                  [--model llada_s] [--method vanilla|spa|dllm_cache|fast_dllm|dkv_cache|d2_cache|elastic_cache|multistep] \
-                 [--task gsm8k_s] [--samples N] [--addr host:port] [--workers N] [--threshold 0.9]"
+                 [--task gsm8k_s] [--samples N] [--addr host:port] [--workers N] [--threshold 0.9]\n\
+                 bench-serve: [--methods vanilla,spa] [--qps 8 | --clients N] [--duration 5s] \
+                 [--warmup 1s] [--tasks gsm8k_s,mmlu_s] [--gen-len 32 | 16:64] [--out BENCH_serving.json]"
             );
             Ok(())
         }
@@ -181,6 +188,88 @@ fn serve(args: &Args) -> Result<()> {
             Err(_) => anyhow::bail!("worker thread panicked"),
         }
     }
+    Ok(())
+}
+
+/// Drive the multi-worker serving path under generated load and append a
+/// trajectory entry to `BENCH_serving.json` (DESIGN.md §10).  Skips
+/// gracefully (exit 0, with a message) when artifacts or the PJRT runtime
+/// are unavailable, mirroring the artifact-gated tests.
+fn bench_serve(args: &Args) -> Result<()> {
+    use spa_cache::bench::loadgen::{self, LoadGenConfig};
+
+    let artifacts = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    // Gate on the resolved dir, so an explicit --artifacts is honoured.
+    if !artifacts.join("index.json").exists() {
+        println!(
+            "bench-serve: SKIP (no artifacts at {} — set --artifacts/$SPA_ARTIFACTS \
+             or run `make artifacts`)",
+            artifacts.display()
+        );
+        return Ok(());
+    }
+    let manifest = Manifest::load(&artifacts)?;
+    let seq_len = manifest.seq_len;
+    let charset = manifest.charset.clone();
+
+    let model = args.str_or("model", "llada_s");
+    let workers = args.count_or("workers", 2);
+    let block_k = args.usize_or("block-k", 16);
+    let threshold = args.f64_or("threshold", 0.9);
+    let methods: Vec<String> = args
+        .str_or("methods", "vanilla,spa")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    // A typo'd method must error here, not surface as a per-method SKIP
+    // (SKIP is reserved for engine/PJRT unavailability — a CI smoke must
+    // never go green having measured zero methods by typo).
+    for m in &methods {
+        MethodSpec::by_name(m, block_k)
+            .map_err(|e| anyhow::anyhow!("--methods '{m}': {e:#}"))?;
+    }
+
+    // --clients N selects the closed loop; otherwise open loop at --qps
+    // (shared flag parsing with examples/bench_serve.rs).
+    let cfg = LoadGenConfig::from_args(args)?;
+
+    let mut reports = Vec::new();
+    for method_name in &methods {
+        let spawned = loadgen::run_method(
+            method_name,
+            workers,
+            seq_len,
+            &charset,
+            &cfg,
+            loadgen::worker_factory(
+                manifest.clone(),
+                model.clone(),
+                method_name.clone(),
+                block_k,
+                threshold,
+            ),
+        );
+        match spawned {
+            Ok(r) => reports.push(r),
+            Err(e) => println!("bench-serve: SKIP method {method_name}: {e:#}"),
+        }
+    }
+    if reports.is_empty() {
+        println!("bench-serve: no method ran (engine/PJRT unavailable?) — nothing recorded");
+        return Ok(());
+    }
+    loadgen::print_reports(&reports);
+    let out = args.str_or("out", "BENCH_serving.json");
+    loadgen::append_trajectory(
+        Path::new(&out),
+        loadgen::config_json(&cfg, workers, &model),
+        &reports,
+    )?;
+    println!("bench-serve: appended {} method row(s) to {out}", reports.len());
     Ok(())
 }
 

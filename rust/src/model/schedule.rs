@@ -116,6 +116,50 @@ mod tests {
         assert!((s.rho(8, 8) - 0.13).abs() < 1e-9);
     }
 
+    /// Degenerate-geometry table: peak at the first layer, peak at the
+    /// last layer, and a single-layer model.  These hit the `lp.max(2)` /
+    /// `(n_layers - lp).max(1)` denominator guards — a regression here
+    /// would divide by zero or put the peak on the wrong side.
+    #[test]
+    fn rho_edge_case_table() {
+        // (l_p, n_layers, layer, expected)
+        let s = |l_p| RhoSchedule { l_p, rho_p: 0.4, rho_1: 0.1, rho_l: 0.2 };
+        let cases: &[(usize, usize, usize, f64)] = &[
+            // Peak at layer 1: the left branch collapses to rho_p at l=1,
+            // the right branch decays towards rho_l at l=n.
+            (1, 8, 1, 0.4),
+            (1, 8, 8, 0.2),
+            // Peak at the last layer: the right branch is empty, the left
+            // branch starts from rho_1 at l=1.
+            (8, 8, 8, 0.4),
+            (8, 8, 1, 0.1),
+            // Single-layer model: the only layer is the peak.
+            (1, 1, 1, 0.4),
+            // l_p beyond n_layers clamps to n_layers.
+            (9, 4, 4, 0.4),
+        ];
+        for &(l_p, n_layers, layer, want) in cases {
+            let got = s(l_p).rho(layer, n_layers);
+            assert!(
+                (got - want).abs() < 1e-9,
+                "rho(l={layer}, n={n_layers}) with l_p={l_p}: got {got}, want {want}"
+            );
+        }
+        // Interior values stay within (min(rho_1, rho_l), rho_p] on every
+        // degenerate geometry.
+        for &(l_p, n_layers) in &[(1usize, 8usize), (8, 8), (1, 1), (2, 2)] {
+            let sched = s(l_p);
+            for l in 1..=n_layers {
+                let r = sched.rho(l, n_layers);
+                assert!(
+                    r <= 0.4 + 1e-12 && r >= 0.1 - 1e-12,
+                    "rho out of band: l_p={l_p} n={n_layers} l={l} -> {r}"
+                );
+                assert!(r.is_finite());
+            }
+        }
+    }
+
     #[test]
     fn k_per_layer_bounds() {
         crate::util::proptest::check(

@@ -4,6 +4,27 @@
 //! arguments.  Used by the main binary, every example and every bench.
 
 use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Parse a human duration: `5s`, `500ms`, `2m`, `1h`, `1.5s`, or a bare
+/// number (seconds).  Returns `None` on anything unparsable or negative.
+pub fn parse_duration(s: &str) -> Option<Duration> {
+    let s = s.trim();
+    let split = s.find(|c: char| c.is_ascii_alphabetic()).unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let v: f64 = num.trim().parse().ok()?;
+    if !v.is_finite() || v < 0.0 {
+        return None;
+    }
+    let secs = match unit {
+        "ms" => v / 1e3,
+        "" | "s" => v,
+        "m" => v * 60.0,
+        "h" => v * 3600.0,
+        _ => return None,
+    };
+    Some(Duration::from_secs_f64(secs))
+}
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -69,6 +90,12 @@ impl Args {
     pub fn count_or(&self, key: &str, default: usize) -> usize {
         self.usize_or(key, default).max(1)
     }
+
+    /// Human-duration flag (`--duration 5s`, `200ms`, `2m`, bare seconds);
+    /// unparsable values fall back to the default, like every other getter.
+    pub fn duration_or(&self, key: &str, default: Duration) -> Duration {
+        self.get(key).and_then(parse_duration).unwrap_or(default)
+    }
 }
 
 #[cfg(test)]
@@ -107,6 +134,23 @@ mod tests {
         let a = parse("");
         assert_eq!(a.f64_or("x", 0.5), 0.5);
         assert_eq!(a.str_or("s", "d"), "d");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(parse_duration("5s"), Some(Duration::from_secs(5)));
+        assert_eq!(parse_duration("500ms"), Some(Duration::from_millis(500)));
+        assert_eq!(parse_duration("2m"), Some(Duration::from_secs(120)));
+        assert_eq!(parse_duration("1h"), Some(Duration::from_secs(3600)));
+        assert_eq!(parse_duration("1.5s"), Some(Duration::from_millis(1500)));
+        assert_eq!(parse_duration("3"), Some(Duration::from_secs(3)));
+        assert_eq!(parse_duration("-1s"), None);
+        assert_eq!(parse_duration("5x"), None);
+        assert_eq!(parse_duration(""), None);
+        let a = parse("--duration 5s --warmup nonsense");
+        assert_eq!(a.duration_or("duration", Duration::ZERO), Duration::from_secs(5));
+        assert_eq!(a.duration_or("warmup", Duration::from_secs(1)), Duration::from_secs(1));
+        assert_eq!(a.duration_or("missing", Duration::from_secs(2)), Duration::from_secs(2));
     }
 
     #[test]

@@ -102,7 +102,7 @@ impl Json {
         }
     }
 
-    /// Array of numbers → Vec<f64> (manifest shapes, profiles, traces).
+    /// Array of numbers → `Vec<f64>` (manifest shapes, profiles, traces).
     pub fn f64_vec(&self) -> Option<Vec<f64>> {
         self.as_arr()?.iter().map(|x| x.as_f64()).collect()
     }

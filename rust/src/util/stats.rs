@@ -45,6 +45,97 @@ pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
     sorted[rank.min(sorted.len()) - 1]
 }
 
+/// Nearest-rank percentile of an unsorted sample (sorts a copy) — exact on
+/// any sample size.  Convenience wrapper over [`percentile_sorted`] for
+/// one-off quantile queries; [`Summary::of`] is the bulk path.
+pub fn percentile(xs: &[f64], pct: f64) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, pct)
+}
+
+/// Bounded uniform reservoir sampler (Vitter's algorithm R).
+///
+/// Below `cap` retained observations the sample is *exact* — percentiles
+/// computed from it are true order statistics.  Past `cap` it degrades to a
+/// uniform random subsample, so percentiles become unbiased estimates while
+/// memory stays O(cap).  Used by serving [`crate::coordinator::metrics::Metrics`]
+/// and the load generator's per-request latency records.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: crate::util::rng::Rng,
+}
+
+impl Reservoir {
+    /// Empty reservoir retaining at most `cap` samples (`cap > 0`).
+    pub fn new(cap: usize) -> Reservoir {
+        assert!(cap > 0, "reservoir cap must be positive");
+        Reservoir { cap, seen: 0, samples: Vec::new(), rng: crate::util::rng::Rng::new(0x5A3B1E5) }
+    }
+
+    /// Observe one value (non-finite values are counted but not retained).
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if !x.is_finite() {
+            return;
+        }
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            let j = self.rng.below(self.seen) as usize;
+            if j < self.cap {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    /// Total observations pushed (including any evicted past `cap`).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Number of currently retained samples (`<= cap`).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when nothing has been retained yet.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// The retained sample (unordered).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Summary statistics over the retained sample, or `None` when empty.
+    /// Exact while `seen <= cap`; a reservoir approximation afterwards.
+    pub fn summary(&self) -> Option<Summary> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.samples))
+        }
+    }
+
+    /// Fold another reservoir's retained samples in.  Bounded and
+    /// approximate (each retained sample of `other` competes for a slot as
+    /// if it were a fresh observation) — used when merging per-worker
+    /// metric snapshots at render time.
+    pub fn merge(&mut self, other: &Reservoir) {
+        for &x in &other.samples {
+            self.push(x);
+        }
+        // `push` already counted the retained samples; add only the ones
+        // `other` evicted so `seen` stays the true observation count.
+        self.seen += other.seen.saturating_sub(other.samples.len() as u64);
+    }
+}
+
 /// Normal-approximation binomial 95% half-interval: `1.96 * sqrt(p(1-p)/n)`.
 /// This is the ±x.xx the paper attaches to accuracy numbers.
 pub fn binomial_ci95(p: f64, n: usize) -> f64 {
@@ -148,6 +239,32 @@ impl Histogram {
         self.bins.iter().map(|&c| c as f64 / t).collect()
     }
 
+    /// Quantile estimate (`q` in [0, 1]) from the cumulative bin counts,
+    /// linearly interpolated inside the containing bin.  Underflow/overflow
+    /// mass clamps to the range edges.  The bounded complement to exact
+    /// [`Reservoir`] percentiles: usable when only a histogram was kept.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return self.lo;
+        }
+        let target = q.clamp(0.0, 1.0) * total as f64;
+        let mut cum = self.underflow as f64;
+        if target <= cum {
+            return self.lo;
+        }
+        let bin_w = (self.hi - self.lo) / self.bins.len() as f64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            let next = cum + c as f64;
+            if target <= next && c > 0 {
+                let frac = (target - cum) / c as f64;
+                return self.lo + (i as f64 + frac) * bin_w;
+            }
+            cum = next;
+        }
+        self.hi
+    }
+
     /// Render a terminal sparkline (for bench output).
     pub fn sparkline(&self) -> String {
         const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
@@ -223,6 +340,89 @@ mod tests {
         assert_eq!(binomial_ci95(0.5, 0), 0.0);
         let ci = binomial_ci95(0.5, 100);
         assert!((ci - 0.098).abs() < 0.001);
+    }
+
+    #[test]
+    fn percentile_exact_on_small_samples() {
+        // Unsorted input; nearest-rank on n=4: p50 -> 2nd order statistic.
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 90.0), 4.0);
+        assert_eq!(percentile(&xs, 99.0), 4.0);
+        assert_eq!(percentile(&[7.0], 50.0), 7.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+        // n=2: p50 is the lower value, p51+ the upper.
+        assert_eq!(percentile(&[10.0, 20.0], 50.0), 10.0);
+        assert_eq!(percentile(&[10.0, 20.0], 75.0), 20.0);
+    }
+
+    #[test]
+    fn reservoir_exact_below_cap() {
+        let mut r = Reservoir::new(64);
+        for i in 0..50 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.seen(), 50);
+        assert_eq!(r.len(), 50);
+        let s = r.summary().unwrap();
+        assert_eq!(s.n, 50);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 49.0);
+        assert_eq!(s.p50, percentile(&(0..50).map(|i| i as f64).collect::<Vec<_>>(), 50.0));
+    }
+
+    #[test]
+    fn reservoir_bounded_past_cap() {
+        let mut r = Reservoir::new(32);
+        for i in 0..10_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.seen(), 10_000);
+        assert_eq!(r.len(), 32, "retained sample must stay at cap");
+        // Uniform subsample of 0..10000: the mean should land well inside
+        // the range (loose sanity bound, deterministic rng).
+        let s = r.summary().unwrap();
+        assert!(s.mean > 1_000.0 && s.mean < 9_000.0, "mean {}", s.mean);
+    }
+
+    #[test]
+    fn reservoir_skips_non_finite_and_merges() {
+        let mut a = Reservoir::new(16);
+        a.push(f64::NAN);
+        a.push(1.0);
+        assert_eq!(a.seen(), 2);
+        assert_eq!(a.len(), 1);
+        let mut b = Reservoir::new(16);
+        b.push(3.0);
+        b.push(5.0);
+        a.merge(&b);
+        assert_eq!(a.seen(), 4);
+        assert_eq!(a.len(), 3);
+        let s = a.summary().unwrap();
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn reservoir_empty_has_no_summary() {
+        let r = Reservoir::new(8);
+        assert!(r.is_empty());
+        assert!(r.summary().is_none());
+    }
+
+    #[test]
+    fn histogram_quantile_interpolates() {
+        let mut h = Histogram::new(0.0, 100.0, 10);
+        for i in 0..100 {
+            h.push(i as f64);
+        }
+        // Uniform fill: quantiles track the value range linearly.
+        assert!((h.quantile(0.5) - 50.0).abs() < 10.0 + 1e-9);
+        assert!((h.quantile(0.9) - 90.0).abs() < 10.0 + 1e-9);
+        assert!(h.quantile(0.0) <= h.quantile(1.0));
+        assert_eq!(h.quantile(1.0), 100.0);
+        // Empty histogram clamps low.
+        assert_eq!(Histogram::new(0.0, 1.0, 4).quantile(0.5), 0.0);
     }
 
     #[test]

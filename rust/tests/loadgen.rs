@@ -1,0 +1,179 @@
+//! Load-generator end-to-end tests over *stub* workers — no artifacts or
+//! PJRT runtime needed, so unlike the serving test this exercises the whole
+//! loadgen pipeline (TCP protocol → router → worker mailbox → stats scrape
+//! → drain barrier → `BENCH_serving.json`) on every checkout.
+//!
+//! A stub worker answers `Submit` after a fixed decode delay with a canned
+//! `Response`, keeps honest `Metrics`, and answers `Stats`/`Shutdown` like
+//! the real scheduler loop.
+
+use std::net::TcpListener;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use spa_cache::bench::loadgen::{
+    self, ArrivalMode, GenLenDist, LoadGenConfig, TRAJECTORY_SCHEMA,
+};
+use spa_cache::coordinator::metrics::Metrics;
+use spa_cache::coordinator::router::{Router, WorkerEndpoint, WorkerStatus};
+use spa_cache::coordinator::scheduler::Command;
+use spa_cache::coordinator::server::{self, Client};
+use spa_cache::coordinator::request::Response;
+use spa_cache::model::tokenizer::CHARSET;
+use spa_cache::util::json::parse;
+use spa_cache::model::tasks::Task;
+
+const SEQ_LEN: usize = 128;
+
+/// A worker that "decodes" by sleeping `decode_ms` per request.
+fn spawn_stub_worker(id: usize, decode_ms: u64) -> (WorkerEndpoint, JoinHandle<()>) {
+    let (tx, rx) = channel::<Command>();
+    let status = Arc::new(WorkerStatus::default());
+    status.set_free_slots(4);
+    let worker_status = Arc::clone(&status);
+    let handle = std::thread::spawn(move || {
+        let mut metrics = Metrics::default();
+        for cmd in rx {
+            match cmd {
+                Command::Submit(req, reply) => {
+                    metrics.requests_submitted += 1;
+                    std::thread::sleep(Duration::from_millis(decode_ms));
+                    let latency_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+                    let ttft_ms = latency_ms / 2.0;
+                    let decoded = 4usize;
+                    metrics.record_completion(ttft_ms, latency_ms, decoded);
+                    metrics.steps += 2;
+                    metrics.refreshes += 1;
+                    let _ = reply.send(Response {
+                        id: req.id,
+                        text: "7".to_string(),
+                        tokens: req.tokens.clone(),
+                        prompt_len: req.prompt_len,
+                        decoded,
+                        steps: 2,
+                        ttft_ms,
+                        latency_ms,
+                    });
+                    worker_status.dec_inflight();
+                }
+                Command::Stats(reply) => {
+                    let _ = reply.send(metrics.clone());
+                }
+                Command::Shutdown => break,
+            }
+        }
+    });
+    (WorkerEndpoint { id, tx, status }, handle)
+}
+
+/// Stub server on an ephemeral port: returns (addr, server thread, worker
+/// threads).  Shut down via `Client::shutdown`.
+fn stub_server(
+    workers: usize,
+    decode_ms: u64,
+) -> (String, JoinHandle<anyhow::Result<()>>, Vec<JoinHandle<()>>) {
+    let mut eps = Vec::new();
+    let mut handles = Vec::new();
+    for id in 0..workers {
+        let (ep, h) = spawn_stub_worker(id, decode_ms);
+        eps.push(ep);
+        handles.push(h);
+    }
+    let router = Router::new(eps);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        server::serve_listener(listener, SEQ_LEN, CHARSET, router, 128)
+    });
+    (addr, server, handles)
+}
+
+fn traj_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("BENCH_serving_{tag}_{}.json", std::process::id()))
+}
+
+#[test]
+fn open_loop_drives_and_records_trajectory() {
+    let (addr, server, workers) = stub_server(2, 5);
+    let cfg = LoadGenConfig {
+        mode: ArrivalMode::Open { qps: 100.0 },
+        warmup: Duration::from_millis(150),
+        duration: Duration::from_millis(600),
+        tasks: vec![Task::Gsm8kS, Task::MmluS],
+        gen_len: Some(GenLenDist { lo: 8, hi: 16 }),
+        seed: 7,
+        max_inflight: 64,
+    };
+    let report = loadgen::drive(&addr, "stub", &cfg).expect("drive");
+
+    assert!(report.requests > 10, "poisson at 100qps over 0.6s: {}", report.requests);
+    assert_eq!(report.errors, 0, "stub never errors");
+    assert!(report.achieved_qps > 10.0, "qps {}", report.achieved_qps);
+    assert!(report.tps > 0.0);
+    let ttft = report.ttft.as_ref().expect("ttft summary");
+    let lat = report.latency.as_ref().expect("latency summary");
+    assert!(ttft.p50 <= lat.p50, "ttft below total latency");
+    assert!(lat.p50 >= 5.0, "stub decode delay visible: {}", lat.p50);
+    assert!(lat.p99 >= lat.p50 && lat.p90 >= lat.p50);
+    // Counters were scraped and differenced over the measured window.
+    assert!(report.steps > 0.0 && report.refreshes > 0.0);
+    assert_eq!(report.per_worker_completed.len(), 2, "both workers labelled");
+    let total_scraped: f64 = report.per_worker_completed.iter().map(|(_, n)| n).sum();
+    assert!(total_scraped > 0.0, "JSQ spread work: {:?}", report.per_worker_completed);
+
+    // Trajectory file: schema-versioned, appends across runs.
+    let path = traj_path("open");
+    let _ = std::fs::remove_file(&path);
+    loadgen::append_trajectory(&path, loadgen::config_json(&cfg, 2, "stub"), &[report.clone()])
+        .unwrap();
+    loadgen::append_trajectory(&path, loadgen::config_json(&cfg, 2, "stub"), &[report]).unwrap();
+    let doc = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(doc.get("schema").and_then(|s| s.as_f64()), Some(TRAJECTORY_SCHEMA));
+    let entries = doc.get("entries").and_then(|e| e.as_arr()).unwrap();
+    assert_eq!(entries.len(), 2);
+    let m = &entries[1].get("methods").and_then(|m| m.as_arr()).unwrap()[0];
+    assert_eq!(m.get("method").and_then(|s| s.as_str()), Some("stub"));
+    assert!(m.get("ttft_ms").and_then(|t| t.get("p99")).is_some(), "p99 recorded");
+    assert!(m.get("latency_ms").and_then(|t| t.get("p50")).is_some());
+    let config = entries[1].get("config").unwrap();
+    assert_eq!(config.get("mode").and_then(|s| s.as_str()), Some("open"));
+    assert_eq!(config.get("workers").and_then(|w| w.as_f64()), Some(2.0));
+    let _ = std::fs::remove_file(&path);
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.shutdown().unwrap();
+    for h in workers {
+        h.join().unwrap();
+    }
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn closed_loop_drives_and_drains() {
+    let (addr, server, workers) = stub_server(2, 3);
+    let cfg = LoadGenConfig {
+        mode: ArrivalMode::Closed { clients: 4 },
+        warmup: Duration::from_millis(100),
+        duration: Duration::from_millis(400),
+        tasks: vec![Task::Gsm8kS],
+        gen_len: Some(GenLenDist::fixed(8)),
+        seed: 3,
+        max_inflight: 64,
+    };
+    let report = loadgen::drive(&addr, "stub-closed", &cfg).expect("drive");
+    assert!(report.requests > 4, "4 clients back-to-back: {}", report.requests);
+    assert_eq!(report.dropped, 0, "closed loop never drops");
+    assert!(report.offered_qps.is_nan(), "closed loop has no offered qps");
+    assert!(report.latency.is_some());
+
+    // Drain op: idle server reports drained immediately.
+    let mut c = Client::connect(&addr).unwrap();
+    assert!(c.drain(Duration::from_secs(1)).unwrap());
+    c.shutdown().unwrap();
+    for h in workers {
+        h.join().unwrap();
+    }
+    server.join().unwrap().unwrap();
+}

@@ -15,31 +15,46 @@
 use std::path::Path;
 
 use anyhow::Result;
-use spa_cache::bench::loadgen::{self, LoadGenConfig};
-use spa_cache::coordinator::methods::MethodSpec;
+use spa_cache::bench::loadgen::{self, LoadGenConfig, PolicyFlags};
+use spa_cache::coordinator::cache::MethodSpec;
 use spa_cache::runtime::manifest::Manifest;
 use spa_cache::util::cli::Args;
 
 fn main() -> Result<()> {
     spa_cache::util::log::init();
     let args = Args::parse();
-    if !Manifest::artifacts_present() {
-        println!("bench_serve: SKIP (artifacts missing — set $SPA_ARTIFACTS or run `make artifacts`)");
-        return Ok(());
-    }
-    let manifest = Manifest::load(Manifest::default_dir())?;
+    // Resolve the artifact dir exactly like `spa-cache bench-serve`
+    // (shared helper — the two front-ends cannot drift).
+    let artifacts = match loadgen::resolve_artifacts(&args) {
+        Ok(dir) => dir,
+        Err(why) => {
+            println!("bench_serve: SKIP ({why})");
+            return Ok(());
+        }
+    };
+    let manifest = Manifest::load(&artifacts)?;
     let seq_len = manifest.seq_len;
     let charset = manifest.charset.clone();
 
     let method_name = args.str_or("method", "spa");
     let model = args.str_or("model", "llada_s");
-    let workers = args.count_or("workers", 2);
+    // Strict: worker count lands in the recorded trajectory config.
+    let workers = args.strict_count("workers")?.unwrap_or(2);
     let block_k = args.usize_or("block-k", 16);
     let threshold = args.f64_or("threshold", 0.9);
+    // Strict policy flags, shared with `spa-cache bench-serve` — a typo
+    // must not record a trajectory entry for the wrong configuration.
+    let policy = PolicyFlags::from_args(&args)?;
     // A typo'd method errors here; SKIP below is reserved for engine/PJRT
-    // unavailability.
-    MethodSpec::by_name(&method_name, block_k)
+    // unavailability.  Policy flags must apply to the selected method —
+    // the recorded config must never claim gates the run ignored.
+    let spec = MethodSpec::by_name(&method_name, block_k)
         .map_err(|e| anyhow::anyhow!("--method '{method_name}': {e:#}"))?;
+    loadgen::validate_policy_flags(
+        policy,
+        args.get("partial-refresh").is_some(),
+        std::slice::from_ref(&spec),
+    )?;
 
     // Shared flag parsing and worker assembly with `spa-cache bench-serve`
     // so the two front-ends record comparable trajectory entries.
@@ -51,7 +66,14 @@ fn main() -> Result<()> {
         seq_len,
         &charset,
         &cfg,
-        loadgen::worker_factory(manifest, model.clone(), method_name.clone(), block_k, threshold),
+        loadgen::worker_factory(
+            manifest,
+            model.clone(),
+            method_name.clone(),
+            block_k,
+            threshold,
+            policy,
+        ),
     ) {
         Ok(r) => r,
         Err(e) => {
@@ -64,7 +86,7 @@ fn main() -> Result<()> {
     let out = args.str_or("out", "BENCH_serving.json");
     loadgen::append_trajectory(
         Path::new(&out),
-        loadgen::config_json(&cfg, workers, &model),
+        loadgen::config_json(&cfg, workers, &model, policy),
         &[report],
     )?;
     println!("bench_serve: appended trajectory entry to {out}");

@@ -7,7 +7,7 @@ use anyhow::Result;
 use spa_cache::bench::runner::{eval_method, task_samples};
 use spa_cache::bench::{fmt_acc, fmt_tps, Table};
 use spa_cache::coordinator::decode::UnmaskMode;
-use spa_cache::coordinator::methods::{IndexPolicy, MethodSpec};
+use spa_cache::coordinator::cache::{IndexPolicy, MethodSpec};
 use spa_cache::model::tasks::Task;
 use spa_cache::runtime::engine::Engine;
 use spa_cache::util::cli::Args;

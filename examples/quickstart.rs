@@ -9,7 +9,7 @@
 use anyhow::Result;
 use spa_cache::coordinator::decode::{Sampler, UnmaskMode};
 use spa_cache::coordinator::group::{pack_group, run_group};
-use spa_cache::coordinator::methods::{Method, MethodSpec};
+use spa_cache::coordinator::cache::{Method, MethodSpec};
 use spa_cache::model::tasks::{extract_answer, make_sample, Task};
 use spa_cache::model::tokenizer::Tokenizer;
 use spa_cache::runtime::engine::Engine;

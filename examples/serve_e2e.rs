@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 use spa_cache::coordinator::batcher::BatcherConfig;
 use spa_cache::coordinator::decode::{Sampler, UnmaskMode};
-use spa_cache::coordinator::methods::{Method, MethodSpec};
+use spa_cache::coordinator::cache::{Method, MethodSpec};
 use spa_cache::coordinator::router::Router;
 use spa_cache::coordinator::scheduler::Worker;
 use spa_cache::coordinator::server::{self, Client};
@@ -58,8 +58,12 @@ fn main() -> Result<()> {
                 UnmaskMode::Parallel { threshold }
             };
             let sampler = Sampler::greedy(mode);
-            let batcher =
-                BatcherConfig { batch: 4, min_free: 2, max_wait: Duration::from_millis(100) };
+            let batcher = BatcherConfig {
+                batch: 4,
+                min_free: 2,
+                max_wait: Duration::from_millis(100),
+                ..BatcherConfig::default()
+            };
             Ok(Worker::new(id, engine, method, sampler, batcher, 6 * seq_len))
         }
     })?;

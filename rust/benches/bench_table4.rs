@@ -5,7 +5,7 @@
 use spa_cache::bench::runner::{eval_method, sample_count, task_samples};
 use spa_cache::bench::{fmt_acc, Table};
 use spa_cache::coordinator::decode::UnmaskMode;
-use spa_cache::coordinator::methods::MethodSpec;
+use spa_cache::coordinator::cache::MethodSpec;
 use spa_cache::model::tasks::Task;
 use spa_cache::runtime::engine::Engine;
 use spa_cache::util::cli::Args;

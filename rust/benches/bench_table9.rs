@@ -1,12 +1,12 @@
 //! Paper Table 9: against dKV-Cache / Elastic-Cache / d2Cache analogues on
 //! GSM8K + MBPP for both models.  (The analogues substitute host-side
 //! confidence/locality signals for attention-weight statistics — see
-//! DESIGN.md §2 and coordinator::methods.)
+//! DESIGN.md §2 and coordinator::cache.)
 
 use spa_cache::bench::runner::{eval_method, sample_count, task_samples};
 use spa_cache::bench::{fmt_acc, fmt_tps, Table};
 use spa_cache::coordinator::decode::UnmaskMode;
-use spa_cache::coordinator::methods::{IndexPolicy, MethodSpec};
+use spa_cache::coordinator::cache::{IndexPolicy, MethodSpec};
 use spa_cache::model::tasks::Task;
 use spa_cache::runtime::engine::Engine;
 use spa_cache::util::cli::Args;

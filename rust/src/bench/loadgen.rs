@@ -26,7 +26,7 @@
 //! includes half-finished work.
 
 use std::net::TcpListener;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -35,8 +35,11 @@ use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::cache::{Method, MethodSpec};
+// Policy gates live with the cache subsystem; re-exported here so the
+// bench front-ends keep one import surface.
+pub use crate::coordinator::cache::PolicyFlags;
 use crate::coordinator::decode::{Sampler, UnmaskMode};
-use crate::coordinator::methods::{Method, MethodSpec};
 use crate::coordinator::metrics::{scrape_value, scrape_worker_series};
 use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::Worker;
@@ -161,25 +164,11 @@ impl LoadGenConfig {
     /// `--max-inflight`.  Shared by `spa-cache bench-serve` and
     /// `examples/bench_serve.rs` so the two front-ends cannot drift.
     /// Unknown task names and malformed `--gen-len`/`--qps`/`--clients`/
-    /// `--max-inflight`/`--warmup`/`--duration` are errors, not silent
-    /// fallbacks (a typo'd flag must not measure — and permanently
+    /// `--max-inflight`/`--warmup`/`--duration`/`--seed` are errors, not
+    /// silent fallbacks (a typo'd flag must not measure — and permanently
     /// record — the wrong load).
     pub fn from_args(args: &Args) -> Result<LoadGenConfig> {
-        // Strict count parse: a typo'd count must not silently measure the
-        // default load (the trajectory file is append-only history).
-        let strict_count = |key: &str| -> Result<Option<usize>> {
-            match args.get(key) {
-                None => Ok(None),
-                Some(s) => {
-                    let n: usize = s.trim().parse().map_err(|_| {
-                        anyhow::anyhow!("bad --{key} '{s}' (want a positive count)")
-                    })?;
-                    anyhow::ensure!(n > 0, "--{key} must be at least 1");
-                    Ok(Some(n))
-                }
-            }
-        };
-        let mode = match strict_count("clients")? {
+        let mode = match args.strict_count("clients")? {
             Some(clients) => ArrivalMode::Closed { clients },
             None => {
                 let qps = match args.get("qps") {
@@ -231,11 +220,18 @@ impl LoadGenConfig {
             duration: strict_duration("duration", Duration::from_secs(5))?,
             tasks,
             gen_len,
-            seed: args.u64_or("seed", 1),
-            max_inflight: strict_count("max-inflight")?.unwrap_or(256),
+            // Seed is recorded in the config block — strict like the rest.
+            seed: match args.get("seed") {
+                None => 1,
+                Some(s) => s.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("bad --seed '{s}' (want an unsigned integer)")
+                })?,
+            },
+            max_inflight: args.strict_count("max-inflight")?.unwrap_or(256),
         })
     }
 }
+
 
 /// One completed request as observed by the client side.
 #[derive(Debug, Clone, Copy)]
@@ -292,6 +288,17 @@ pub struct MethodReport {
     pub refreshes: f64,
     /// Engine steps inside the measured window (scraped, differenced).
     pub steps: f64,
+    /// Full-refresh steps per engine step inside the window — the
+    /// per-method refresh-rate column of the trajectory (0 when no steps
+    /// were observed).
+    pub refresh_rate: f64,
+    /// Dirty rows healed by targeted partial servicing inside the window
+    /// (scraped, differenced) — admissions that did not cost a refresh.
+    pub partial_refreshes: f64,
+    /// Rows whose cache validity was dropped on admission inside the
+    /// window (scraped, differenced; includes the blanket-invalidate
+    /// blast radius for policies without partial support).
+    pub rows_invalidated: f64,
     /// Per-worker completions inside the measured window (scraped,
     /// differenced) — the router's load-balance evidence.
     pub per_worker_completed: Vec<(usize, f64)>,
@@ -553,6 +560,9 @@ fn aggregate(
             0.0
         }
     };
+    let refreshes = diff("spa_refreshes_total");
+    let steps = diff("spa_steps_total");
+    let refresh_rate = if steps > 0.0 { refreshes / steps } else { 0.0 };
     let base_completed: Vec<(usize, f64)> = scrape_worker_series(baseline, "spa_requests_completed");
     let per_worker_completed = scrape_worker_series(end, "spa_requests_completed")
         .into_iter()
@@ -578,24 +588,80 @@ fn aggregate(
         latency: latency.summary(),
         wall: wall.summary(),
         queue_wait_ms_mean,
-        refreshes: diff("spa_refreshes_total"),
-        steps: diff("spa_steps_total"),
+        refreshes,
+        steps,
+        refresh_rate,
+        partial_refreshes: diff("spa_partial_refreshes_total"),
+        rows_invalidated: diff("spa_rows_invalidated_total"),
         per_worker_completed,
         latency_samples: latency.samples().to_vec(),
+    }
+}
+
+/// Refuse policy flags that no method in the bench lineup can apply —
+/// the flags land in the recorded trajectory `config`, and an entry must
+/// never claim gates the run silently ignored (`Vanilla`/`Multistep`
+/// have no refresh interval and no partial-refresh capability).
+/// `explicit_partial` is whether `--partial-refresh` was supplied at all
+/// (the default is not a claim).
+pub fn validate_policy_flags(
+    policy: PolicyFlags,
+    explicit_partial: bool,
+    specs: &[MethodSpec],
+) -> Result<()> {
+    let tunable = specs
+        .iter()
+        .any(|s| matches!(s, MethodSpec::Spa { .. } | MethodSpec::Manual { .. }));
+    if policy.refresh_interval.is_some() && !tunable {
+        anyhow::bail!(
+            "--refresh-interval applies to none of the selected methods \
+             (vanilla/multistep have no scheduled refresh)"
+        );
+    }
+    if explicit_partial && !tunable {
+        anyhow::bail!(
+            "--partial-refresh applies to none of the selected methods \
+             (vanilla/multistep have no partial-refresh capability)"
+        );
+    }
+    Ok(())
+}
+
+/// Resolve the artifact directory for a bench front-end (`--artifacts`,
+/// else `$SPA_ARTIFACTS`/`./artifacts`) and check the skip gate on the
+/// *resolved* dir.  Shared by `spa-cache bench-serve` and
+/// `examples/bench_serve.rs` so the two front-ends cannot drift on which
+/// artifacts a recorded trajectory entry measured.  `Err` carries the
+/// human-readable skip reason.
+pub fn resolve_artifacts(args: &Args) -> std::result::Result<PathBuf, String> {
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    if dir.join("index.json").exists() {
+        Ok(dir)
+    } else {
+        Err(format!(
+            "no artifacts at {} — set --artifacts/$SPA_ARTIFACTS or run `make artifacts`",
+            dir.display()
+        ))
     }
 }
 
 /// Shared worker factory for the bench front-ends (`spa-cache bench-serve`
 /// and `examples/bench_serve.rs`): greedy sampler, `fast_dllm` gets the
 /// semi-AR block-parallel unmask mode, everything else confidence-parallel
-/// at `threshold`.  Centralised so the two front-ends build identical
-/// workers for identical flags — trajectory entries stay comparable.
+/// at `threshold`; `policy` carries the `--partial-refresh` /
+/// `--refresh-interval` gates.  Centralised so the two front-ends build
+/// identical workers for identical flags — trajectory entries stay
+/// comparable.
 pub fn worker_factory(
     manifest: Manifest,
     model: String,
     method: String,
     block_k: usize,
     threshold: f64,
+    policy: PolicyFlags,
 ) -> impl Fn(usize) -> Result<Worker> + Send + Sync + 'static {
     let unmask = if method == "fast_dllm" {
         UnmaskMode::BlockParallel { threshold }
@@ -605,8 +671,10 @@ pub fn worker_factory(
     let seq_len = manifest.seq_len;
     move |id| {
         let engine = Engine::from_manifest(manifest.clone())?;
-        let spec = MethodSpec::by_name(&method, block_k)?;
-        let m = Method::new(&engine, &model, spec)?;
+        let spec = MethodSpec::by_name(&method, block_k)?
+            .with_refresh_interval(policy.refresh_interval);
+        let mut m = Method::new(&engine, &model, spec)?;
+        m.set_partial_refresh(policy.partial_refresh);
         let sampler = Sampler::greedy(unmask);
         Ok(Worker::new(id, engine, m, sampler, BatcherConfig::default(), 4 * seq_len))
     }
@@ -679,7 +747,7 @@ pub fn print_reports(reports: &[MethodReport]) {
         "bench-serve: serving under load",
         &[
             "method", "req", "err", "drop", "qps", "tps", "ttft p50", "p90", "p99",
-            "lat p50", "p90", "p99", "refresh",
+            "lat p50", "p90", "p99", "refresh", "ref/step", "partial",
         ],
     );
     for r in reports {
@@ -699,6 +767,8 @@ pub fn print_reports(reports: &[MethodReport]) {
             lp90,
             lp99,
             format!("{:.0}", r.refreshes),
+            format!("{:.3}", r.refresh_rate),
+            format!("{:.0}", r.partial_refreshes),
         ]);
     }
     t.print();
@@ -764,6 +834,9 @@ pub fn report_json(r: &MethodReport) -> Json {
         ("queue_wait_ms_mean", Json::Num(r.queue_wait_ms_mean)),
         ("refreshes", Json::Num(r.refreshes)),
         ("steps", Json::Num(r.steps)),
+        ("refresh_rate", Json::Num(r.refresh_rate)),
+        ("partial_refreshes", Json::Num(r.partial_refreshes)),
+        ("rows_invalidated", Json::Num(r.rows_invalidated)),
         (
             "per_worker_completed",
             Json::Arr(
@@ -782,8 +855,14 @@ pub fn report_json(r: &MethodReport) -> Json {
 }
 
 /// The `config` block of a trajectory entry — everything needed to decide
-/// whether two entries are comparable.
-pub fn config_json(cfg: &LoadGenConfig, workers: usize, model: &str) -> Json {
+/// whether two entries are comparable, the policy gates included (two
+/// runs differing only in `--partial-refresh` must be distinguishable).
+pub fn config_json(
+    cfg: &LoadGenConfig,
+    workers: usize,
+    model: &str,
+    policy: PolicyFlags,
+) -> Json {
     let (mode, load) = match cfg.mode {
         ArrivalMode::Open { qps } => ("open", Json::Num(qps)),
         ArrivalMode::Closed { clients } => ("closed", Json::Num(clients as f64)),
@@ -793,6 +872,14 @@ pub fn config_json(cfg: &LoadGenConfig, workers: usize, model: &str) -> Json {
         ("load", load),
         ("workers", Json::Num(workers as f64)),
         ("model", Json::str(model)),
+        ("partial_refresh", Json::Bool(policy.partial_refresh)),
+        (
+            "refresh_interval",
+            match policy.refresh_interval {
+                None => Json::Null,
+                Some(i) => Json::Num(i as f64),
+            },
+        ),
         ("warmup_s", Json::Num(cfg.warmup.as_secs_f64())),
         ("duration_s", Json::Num(cfg.duration.as_secs_f64())),
         (
@@ -869,8 +956,14 @@ pub fn append_trajectory(path: &Path, config: Json, reports: &[MethodReport]) ->
         ("schema", Json::Num(TRAJECTORY_SCHEMA)),
         ("entries", Json::Arr(entries)),
     ]);
-    std::fs::write(path, doc.to_string() + "\n")
-        .with_context(|| format!("write {}", path.display()))
+    // Atomic replace: write a sibling temp file and rename it over the
+    // trajectory.  A truncating in-place write could destroy the whole
+    // append-only history on a mid-write kill or a full disk.
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, doc.to_string() + "\n")
+        .with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} over {}", tmp.display(), path.display()))
 }
 
 #[cfg(test)]
@@ -916,6 +1009,30 @@ mod tests {
         assert!(LoadGenConfig::from_args(&parse("--gen-len 64:16")).is_err());
         assert!(LoadGenConfig::from_args(&parse("--duration 60ss")).is_err());
         assert!(LoadGenConfig::from_args(&parse("--warmup nonsense")).is_err());
+        assert!(LoadGenConfig::from_args(&parse("--seed 12x")).is_err());
+        assert!(parse("--workers 4x").strict_count("workers").is_err());
+        assert!(parse("--workers 0").strict_count("workers").is_err());
+        assert_eq!(parse("--workers 4").strict_count("workers").unwrap(), Some(4));
+        assert_eq!(parse("").strict_count("workers").unwrap(), None);
+    }
+
+    #[test]
+    fn policy_flags_must_apply_to_some_method() {
+        let spa = MethodSpec::by_name("spa", 16).unwrap();
+        let multi = MethodSpec::by_name("multistep", 16).unwrap();
+        let flags = PolicyFlags { partial_refresh: true, refresh_interval: Some(4) };
+        // No tunable method in the lineup: both explicit gates error.
+        assert!(validate_policy_flags(flags, false, std::slice::from_ref(&multi)).is_err());
+        assert!(validate_policy_flags(
+            PolicyFlags::default(),
+            true,
+            std::slice::from_ref(&multi)
+        )
+        .is_err());
+        // One tunable method makes the gates meaningful.
+        assert!(validate_policy_flags(flags, true, &[multi, spa.clone()]).is_ok());
+        // Defaults are never a claim.
+        assert!(validate_policy_flags(PolicyFlags::default(), false, &[spa]).is_ok());
     }
 
     #[test]
@@ -964,10 +1081,14 @@ mod tests {
             },
         ];
         let baseline = "spa_refreshes_total 10\nspa_steps_total 100\n\
+                        spa_partial_refreshes_total 5\n\
+                        spa_rows_invalidated_total 8\n\
                         spa_queue_wait_ms_mean 30.0\n\
                         spa_queue_wait_ms_count 2\n\
                         spa_requests_completed{worker=\"0\"} 4\n";
         let end = "spa_refreshes_total 25\nspa_steps_total 400\n\
+                   spa_partial_refreshes_total 45\n\
+                   spa_rows_invalidated_total 50\n\
                    spa_queue_wait_ms_mean 20.0\n\
                    spa_queue_wait_ms_count 6\n\
                    spa_requests_completed{worker=\"0\"} 10\n\
@@ -986,6 +1107,9 @@ mod tests {
         assert_eq!(lat.p99, 950.0);
         assert!((r.refreshes - 15.0).abs() < 1e-9);
         assert!((r.steps - 300.0).abs() < 1e-9);
+        assert!((r.refresh_rate - 0.05).abs() < 1e-9, "15 refreshes / 300 steps");
+        assert!((r.partial_refreshes - 40.0).abs() < 1e-9);
+        assert!((r.rows_invalidated - 42.0).abs() < 1e-9);
         // Windowed, not lifetime: (20*6 - 30*2) / (6 - 2) = 15 — the
         // warmup's expensive waits (mean 30) are subtracted back out.
         assert!((r.queue_wait_ms_mean - 15.0).abs() < 1e-9);
@@ -999,8 +1123,8 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         let cfg = LoadGenConfig::default();
         let report = aggregate("spa", &cfg, &[], 0, "", "");
-        append_trajectory(&path, config_json(&cfg, 2, "llada_s"), &[report.clone()]).unwrap();
-        append_trajectory(&path, config_json(&cfg, 2, "llada_s"), &[report]).unwrap();
+        append_trajectory(&path, config_json(&cfg, 2, "llada_s", PolicyFlags::default()), &[report.clone()]).unwrap();
+        append_trajectory(&path, config_json(&cfg, 2, "llada_s", PolicyFlags::default()), &[report]).unwrap();
         let doc = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(doc.get("schema").and_then(|s| s.as_f64()), Some(TRAJECTORY_SCHEMA));
         let entries = doc.get("entries").and_then(|e| e.as_arr()).unwrap();
@@ -1010,11 +1134,13 @@ mod tests {
         let methods = entry.get("methods").and_then(|m| m.as_arr()).unwrap();
         assert_eq!(methods[0].get("method").and_then(|m| m.as_str()), Some("spa"));
         assert!(methods[0].get("ttft_ms").is_some());
+        assert!(methods[0].get("refresh_rate").is_some(), "refresh-rate column recorded");
+        assert!(methods[0].get("partial_refreshes").is_some());
         // A non-trajectory file at the path must be refused, not clobbered.
         std::fs::write(&path, "not json").unwrap();
         let cfg2 = LoadGenConfig::default();
         let r2 = aggregate("spa", &cfg2, &[], 0, "", "");
-        assert!(append_trajectory(&path, config_json(&cfg2, 1, "m"), &[r2]).is_err());
+        assert!(append_trajectory(&path, config_json(&cfg2, 1, "m", PolicyFlags::default()), &[r2]).is_err());
         assert_eq!(std::fs::read_to_string(&path).unwrap(), "not json");
         let _ = std::fs::remove_file(&path);
     }

@@ -6,7 +6,7 @@ use anyhow::Result;
 
 use crate::coordinator::decode::{Sampler, UnmaskMode};
 use crate::coordinator::group::{pack_group, run_group};
-use crate::coordinator::methods::{Method, MethodSpec};
+use crate::coordinator::cache::{Method, MethodSpec};
 use crate::model::tasks::{extract_answer, make_sample, Sample, Task};
 use crate::model::tokenizer::Tokenizer;
 use crate::runtime::engine::Engine;
@@ -133,7 +133,7 @@ pub fn paper_methods(block_k: usize) -> Vec<(&'static str, MethodSpec, UnmaskMod
             "+ Fast-dLLM",
             MethodSpec::Manual {
                 k: block_k,
-                policy: crate::coordinator::methods::IndexPolicy::Block,
+                policy: crate::coordinator::cache::IndexPolicy::Block,
                 refresh_interval: 0,
             },
             UnmaskMode::BlockParallel { threshold: 0.9 },

@@ -2,10 +2,15 @@
 //!
 //! The AOT executables pin `[B, N]`, so batching is slot-based: up to B
 //! resident requests decode together; empty slots carry PAD rows.  The
-//! batcher decides *when* to admit waiting requests into free slots —
-//! admission forces a cache refresh (one full-cost step), so it trades
-//! prefill cost against slot utilisation, controlled by `min_free` and
-//! `max_wait`.
+//! batcher decides *when* to admit waiting requests into free slots.  Its
+//! cost model consults the cache policy's admission-cost capability
+//! (`cache::CachePolicy::admission_forces_refresh`, mirrored into
+//! [`BatcherConfig::admission_forces_refresh`] by the worker) instead of
+//! hardcoding "admission ⇒ full refresh": when admission costs a group
+//! refresh, `min_free`/`max_wait` trade that prefill cost against slot
+//! utilisation by batching admissions up; when it is free (partial-refresh
+//! healing, or a stateless method), waiting buys nothing and requests are
+//! admitted as soon as any slot frees.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -21,11 +26,22 @@ pub struct BatcherConfig {
     pub min_free: usize,
     /// ... or when the oldest queued request has waited this long.
     pub max_wait: Duration,
+    /// Admission costs a group-wide cache refresh
+    /// (`CachePolicy::admission_forces_refresh`).  When `false`,
+    /// `min_free` batching is pointless and admission happens on the
+    /// first free slot.  The serving worker overwrites this from the
+    /// active policy's capability.
+    pub admission_forces_refresh: bool,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { batch: 4, min_free: 2, max_wait: Duration::from_millis(200) }
+        BatcherConfig {
+            batch: 4,
+            min_free: 2,
+            max_wait: Duration::from_millis(200),
+            admission_forces_refresh: true,
+        }
     }
 }
 
@@ -65,8 +81,12 @@ impl Batcher {
         }
         let oldest_wait =
             self.queue.front().map(|r| now.duration_since(r.submitted)).unwrap_or_default();
+        // Cheap admission (policy heals admitted rows in place): there is
+        // no refresh cost to amortise, so never hold a request back while
+        // a slot is free.
+        let min_free = if self.cfg.admission_forces_refresh { self.cfg.min_free } else { 1 };
         let should =
-            free_slots >= self.cfg.min_free.min(self.cfg.batch) || oldest_wait >= self.cfg.max_wait;
+            free_slots >= min_free.min(self.cfg.batch) || oldest_wait >= self.cfg.max_wait;
         if !should {
             return Vec::new();
         }
@@ -95,7 +115,12 @@ mod tests {
 
     #[test]
     fn admits_when_enough_slots_free() {
-        let mut b = Batcher::new(BatcherConfig { batch: 4, min_free: 2, max_wait: Duration::from_secs(10) });
+        let mut b = Batcher::new(BatcherConfig {
+            batch: 4,
+            min_free: 2,
+            max_wait: Duration::from_secs(10),
+            ..BatcherConfig::default()
+        });
         b.submit(req(1, 0));
         assert!(b.admit(1, Instant::now()).is_empty(), "one free < min_free and queue < free");
         b.submit(req(2, 0));
@@ -107,10 +132,30 @@ mod tests {
 
     #[test]
     fn admits_on_deadline() {
-        let mut b = Batcher::new(BatcherConfig { batch: 4, min_free: 4, max_wait: Duration::from_millis(50) });
+        let mut b = Batcher::new(BatcherConfig {
+            batch: 4,
+            min_free: 4,
+            max_wait: Duration::from_millis(50),
+            ..BatcherConfig::default()
+        });
         b.submit(req(1, 100)); // already waited 100ms
         let admitted = b.admit(1, Instant::now());
         assert_eq!(admitted.len(), 1);
+    }
+
+    #[test]
+    fn cheap_admission_ignores_min_free_batching() {
+        // Same setup that held the request back above, but the policy
+        // heals admitted rows in place — nothing to amortise, admit now.
+        let mut b = Batcher::new(BatcherConfig {
+            batch: 4,
+            min_free: 2,
+            max_wait: Duration::from_secs(10),
+            admission_forces_refresh: false,
+        });
+        b.submit(req(1, 0));
+        let admitted = b.admit(1, Instant::now());
+        assert_eq!(admitted.len(), 1, "partial-refresh policies admit eagerly");
     }
 
     #[test]
@@ -140,6 +185,7 @@ mod tests {
                     batch: 4,
                     min_free: 1,
                     max_wait: Duration::from_millis(0),
+                    ..BatcherConfig::default()
                 });
                 let mut next_id = 0u64;
                 let mut out = Vec::new();

@@ -1,0 +1,172 @@
+//! Manual-index substrate: host-side position selection feeding the
+//! `<m>__manual_k{K}` executables (Fast-dLLM / dKV-Cache / d2Cache /
+//! Elastic-Cache analogues).
+
+use super::policy::{CachePolicy, Exec, PartialRefresh, Plan, PlanCtx, RowService};
+use super::state::{dirty_rows, max_steps_since_refresh};
+use crate::coordinator::request::SlotState;
+use crate::model::tokenizer::MASK;
+use crate::util::topk::bottom_k_asc;
+
+/// Host-side index selection for the `manual` substrate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum IndexPolicy {
+    /// Fast-dLLM: the active semi-AR block.
+    Block,
+    /// dKV-Cache: window around recently decoded positions.
+    Window,
+    /// d2Cache analogue: lowest-confidence positions + recent decodes.
+    LowConfidence,
+}
+
+/// Manual substrate with a host-side selection policy.
+///
+/// Admission-aware partial refresh comes directly from the index
+/// substrate: a dirty (freshly admitted) row's `[K]` indices are overridden
+/// with a coverage sweep — positions `[cover, cover+K)` — so the whole row
+/// is recomputed over ⌈N/K⌉ cached steps while every other row keeps its
+/// own policy selection, its cache, and its `steps_since_refresh`.
+#[derive(Debug)]
+pub struct ManualPolicy {
+    k: usize,
+    policy: IndexPolicy,
+    refresh_interval: usize,
+    partial: bool,
+    /// Round-robin pad cursor so stale positions refresh eventually.
+    rr_cursor: usize,
+}
+
+impl ManualPolicy {
+    /// Substrate with `k` recomputed positions per row per step.
+    pub fn new(k: usize, policy: IndexPolicy, refresh_interval: usize) -> ManualPolicy {
+        ManualPolicy { k, policy, refresh_interval, partial: true, rr_cursor: 0 }
+    }
+
+    /// One clean row's index selection under the configured policy.
+    fn select_row(
+        &mut self,
+        row: &[i32],
+        slot: &SlotState,
+        conf_row: Option<&[f32]>,
+        n: usize,
+    ) -> Vec<usize> {
+        let k = self.k;
+        let mut picked: Vec<usize> = Vec::with_capacity(k);
+        let mut seen = vec![false; n];
+        match self.policy {
+            IndexPolicy::Block => {
+                let start = slot.block_start.min(n.saturating_sub(1));
+                for p in start..(start + k).min(n) {
+                    push(p, n, k, &mut picked, &mut seen);
+                }
+            }
+            IndexPolicy::Window => {
+                // Recently decoded positions ± 2, most recent first.
+                for &p in slot.last_decoded.iter().rev() {
+                    for d in 0..=2usize {
+                        push(p.saturating_sub(d), n, k, &mut picked, &mut seen);
+                        push(p + d, n, k, &mut picked, &mut seen);
+                    }
+                }
+            }
+            IndexPolicy::LowConfidence => {
+                for &p in slot.last_decoded.iter().rev() {
+                    push(p, n, k, &mut picked, &mut seen);
+                }
+                if let Some(conf_row) = conf_row {
+                    // Masked positions by ascending confidence.
+                    let masked: Vec<usize> = (0..n).filter(|&p| row[p] == MASK).collect();
+                    let scores: Vec<f32> = masked.iter().map(|&p| conf_row[p]).collect();
+                    for j in bottom_k_asc(&scores, k) {
+                        push(masked[j], n, k, &mut picked, &mut seen);
+                    }
+                }
+            }
+        }
+        // Pad with a round-robin cursor so stale rows refresh eventually.
+        while picked.len() < k {
+            let p = self.rr_cursor % n;
+            self.rr_cursor = self.rr_cursor.wrapping_add(1);
+            if !seen[p] {
+                seen[p] = true;
+                picked.push(p);
+            } else if seen.iter().all(|&s| s) {
+                picked.push(p); // everything selected; duplicates are benign
+            }
+        }
+        picked
+    }
+}
+
+/// Dedup-guarded position push shared by the selection arms.
+fn push(p: usize, n: usize, k: usize, picked: &mut Vec<usize>, seen: &mut [bool]) {
+    if p < n && !seen[p] && picked.len() < k {
+        seen[p] = true;
+        picked.push(p);
+    }
+}
+
+impl CachePolicy for ManualPolicy {
+    fn variant_names(&self, model: &str) -> (String, Option<String>) {
+        (format!("{model}__manual_k{}", self.k), Some(format!("{model}__manual_full")))
+    }
+
+    fn partial_refresh(&self) -> PartialRefresh {
+        if self.partial {
+            PartialRefresh::Supported
+        } else {
+            PartialRefresh::Unsupported
+        }
+    }
+
+    fn needs_confidence(&self) -> bool {
+        matches!(self.policy, IndexPolicy::LowConfidence)
+    }
+
+    fn set_partial(&mut self, on: bool) {
+        self.partial = on;
+    }
+
+    fn plan(&mut self, cx: &PlanCtx<'_>) -> Plan {
+        if !cx.state.primed || cx.state.force_refresh {
+            return Plan { exec: Exec::RefreshManual, serviced: Vec::new() };
+        }
+        if self.refresh_interval > 0
+            && max_steps_since_refresh(cx.slots) >= self.refresh_interval
+        {
+            return Plan { exec: Exec::RefreshManual, serviced: Vec::new() };
+        }
+        let (b, n, k) = (cx.batch, cx.seq_len, self.k);
+        let dirty = dirty_rows(cx.slots);
+        let mut indices: Vec<i32> = Vec::with_capacity(b * k);
+        let mut serviced = Vec::with_capacity(dirty.len());
+        for bi in 0..b {
+            let slot = &cx.slots[bi.min(cx.slots.len().saturating_sub(1))];
+            let picked = if dirty.contains(&bi) {
+                // Dirty row: coverage sweep [cover, cover+k) rebuilds the
+                // whole row over ⌈n/k⌉ steps; pad re-covers from the top.
+                let start = slot.cache_cover.min(n);
+                let mut picked: Vec<usize> = (start..(start + k).min(n)).collect();
+                let covered = picked.len();
+                serviced.push(RowService {
+                    row: bi,
+                    covered,
+                    complete: start + covered >= n,
+                });
+                let mut wrap = 0usize;
+                while picked.len() < k {
+                    picked.push(wrap % n.max(1));
+                    wrap += 1;
+                }
+                picked
+            } else {
+                let conf_row = (cx.last_conf.len() >= (bi + 1) * n)
+                    .then(|| &cx.last_conf[bi * n..(bi + 1) * n]);
+                let row = &cx.tokens[bi * n..(bi + 1) * n];
+                self.select_row(row, slot, conf_row, n)
+            };
+            indices.extend(picked.into_iter().map(|p| p as i32));
+        }
+        Plan { exec: Exec::Cached { indices: Some(indices) }, serviced }
+    }
+}

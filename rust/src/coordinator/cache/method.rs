@@ -1,0 +1,463 @@
+//! `Method`: a [`CachePolicy`](super::CachePolicy) bound to one model +
+//! engine, plus the **shared step executor** — the single
+//! upload → run → collect path every policy's plans execute through
+//! (previously copy-pasted across five match arms of the old
+//! `methods.rs` monolith).
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+use xla::PjRtBuffer;
+
+use crate::runtime::engine::{Engine, LoadedVariant};
+use crate::runtime::manifest::VariantInfo;
+use crate::runtime::tensor::Dtype;
+
+use super::policy::{CachePolicy, Exec, PlanCtx};
+use super::state::CacheState;
+use super::MethodSpec;
+use crate::coordinator::request::SlotState;
+
+/// Output of one engine step as seen by the decode loop.
+pub struct StepOut {
+    /// Host logits `[B, N, V]`; `None` for in-graph decoding (multistep).
+    pub logits: Option<Vec<f32>>,
+    /// Replacement tokens (multistep only).
+    pub new_tokens: Option<Vec<i32>>,
+    /// This step paid the full refresh cost (metrics / refresh counters).
+    pub was_refresh: bool,
+}
+
+/// A cache method bound to one model + engine, holding group cache state.
+pub struct Method {
+    /// Which cache strategy this method implements.
+    pub spec: MethodSpec,
+    /// Model name the variants were compiled for.
+    pub model: String,
+    /// Host-side cache state: group flags + refresh/step/partial counters
+    /// (per-slot validity lives on [`SlotState`]).
+    pub state: CacheState,
+    policy: Box<dyn CachePolicy>,
+    step_var: Rc<LoadedVariant>,
+    refresh_var: Option<Rc<LoadedVariant>>,
+    /// Device-resident cache buffers, in the step variant's trailing
+    /// input order (never copied back to the host — see engine perf notes).
+    caches: Option<Vec<PjRtBuffer>>,
+    /// Cached steps of in-graph servicing that heal one dirty row
+    /// (≈ ⌈1/ρ̄⌉ from the step variant's schedule).
+    heal_budget: usize,
+    /// Last-step per-position confidence; only maintained when the active
+    /// policy declares it needs one (the host softmax is O(B·N·V)).
+    last_conf: Vec<f32>,
+}
+
+impl Method {
+    /// Bind `spec` to a model: resolves and loads the step (and, where the
+    /// method has one, refresh) executables from the engine's variant
+    /// registry.
+    pub fn new(engine: &Engine, model: &str, spec: MethodSpec) -> Result<Method> {
+        let policy = spec.policy();
+        let (step_name, refresh_name) = policy.variant_names(model);
+        let step_var = engine.load_variant(&step_name)?;
+        let refresh_var = match refresh_name {
+            Some(n) => Some(engine.load_variant(&n)?),
+            None => None,
+        };
+        let rho = step_var.info.mean_rho();
+        let heal_budget = if rho.is_finite() && rho > 0.0 {
+            ((1.0 / rho).ceil() as usize).clamp(1, 8)
+        } else {
+            1
+        };
+        Ok(Method {
+            spec,
+            model: model.to_string(),
+            state: CacheState::default(),
+            policy,
+            step_var,
+            refresh_var,
+            caches: None,
+            heal_budget,
+            last_conf: Vec::new(),
+        })
+    }
+
+    /// `(batch, seq_len, vocab)` of the step executable.
+    pub fn geometry(&self) -> (usize, usize, usize) {
+        let v = &self.step_var.info;
+        let vocab = v
+            .outputs
+            .iter()
+            .chain(v.inputs.iter())
+            .find(|o| o.name == "logits")
+            .map(|o| o.shape[2])
+            .unwrap_or(64);
+        (v.batch, v.seq_len, vocab)
+    }
+
+    /// The loaded step executable (shape/geometry introspection).
+    pub fn step_variant(&self) -> &LoadedVariant {
+        &self.step_var
+    }
+
+    /// Whether admission costs a full-price refresh step (the batcher's
+    /// admission cost model consults this instead of assuming
+    /// admission ⇒ refresh).
+    pub fn admission_forces_refresh(&self) -> bool {
+        self.policy.admission_forces_refresh()
+    }
+
+    /// Toggle admission-time partial refresh (`--partial-refresh` CLI
+    /// gate); policies without the capability ignore it.
+    pub fn set_partial_refresh(&mut self, on: bool) {
+        self.policy.set_partial(on);
+    }
+
+    /// Drop all cache state: every row is dirtied and the next step pays a
+    /// full refresh (fresh static batch — `group::run_group` — or an
+    /// explicit group-global invalidate).
+    pub fn invalidate(&mut self, slots: &mut [SlotState]) {
+        self.caches = None;
+        self.state.invalidate_all(slots);
+    }
+
+    /// Admission hook: dirty exactly the incoming slot rows when the
+    /// policy supports partial refresh, else escalate to the group-global
+    /// invalidate (the pre-subsystem blanket behaviour, kept explicitly).
+    /// Returns the number of rows whose cache validity was dropped.
+    pub fn on_admitted(&mut self, rows: &[usize], slots: &mut [SlotState]) -> usize {
+        let n = self.state.admit(rows, self.policy.partial_refresh(), slots);
+        if !self.state.primed {
+            self.caches = None;
+        }
+        n
+    }
+
+    /// Run one decode step (possibly a refresh) for the whole group: ask
+    /// the policy for a plan, execute it through the shared executor, fold
+    /// the outcome back into the per-slot cache state.
+    pub fn step(
+        &mut self,
+        engine: &Engine,
+        tokens: &[i32],
+        slots: &mut [SlotState],
+    ) -> Result<StepOut> {
+        let (b, n, _v) = self.geometry();
+        anyhow::ensure!(tokens.len() == b * n, "token buffer shape mismatch");
+        anyhow::ensure!(slots.len() == b, "slot set shape mismatch");
+
+        let plan = {
+            let cx = PlanCtx {
+                state: &self.state,
+                tokens,
+                slots,
+                last_conf: &self.last_conf,
+                batch: b,
+                seq_len: n,
+                heal_budget: self.heal_budget,
+            };
+            self.policy.plan(&cx)
+        };
+
+        let step_var = Rc::clone(&self.step_var);
+        let tok_lit = engine.upload_i32(&[b, n], tokens)?;
+        let out = match &plan.exec {
+            Exec::Stateless => {
+                let outs = engine.run_buffers(&step_var, &[&tok_lit])?;
+                StepOut {
+                    logits: Some(engine.read_f32(&outs[0])?),
+                    new_tokens: None,
+                    was_refresh: false,
+                }
+            }
+            Exec::Refresh => {
+                let rv = self.refresh_var.clone().context("method has no refresh variant")?;
+                let (first, caches) = run_collect(engine, &rv, &[&tok_lit])?;
+                self.caches = Some(caches);
+                StepOut {
+                    logits: Some(engine.read_f32(&first)?),
+                    new_tokens: None,
+                    was_refresh: true,
+                }
+            }
+            Exec::RefreshManual => {
+                let rv = self.refresh_var.clone().context("method has no refresh variant")?;
+                let full_k = rv.info.manual_k;
+                let idx: Vec<i32> = (0..b).flat_map(|_| 0..full_k as i32).collect();
+                let idx_lit = engine.upload_i32(&[b, full_k], &idx)?;
+                let zeros = zero_caches(engine, &rv)?;
+                let mut inputs: Vec<&PjRtBuffer> = vec![&tok_lit, &idx_lit];
+                inputs.extend(zeros.iter());
+                let (first, caches) = run_collect(engine, &rv, &inputs)?;
+                self.caches = Some(caches);
+                StepOut {
+                    logits: Some(engine.read_f32(&first)?),
+                    new_tokens: None,
+                    was_refresh: true,
+                }
+            }
+            Exec::Cached { indices } => {
+                let idx_lit = match indices {
+                    Some(ix) => {
+                        anyhow::ensure!(
+                            !ix.is_empty() && ix.len() % b == 0,
+                            "index plan shape mismatch ({} for batch {b})",
+                            ix.len()
+                        );
+                        Some(engine.upload_i32(&[b, ix.len() / b], ix)?)
+                    }
+                    None => None,
+                };
+                let caches = self
+                    .caches
+                    .take()
+                    .context("cached step before any refresh primed the group")?;
+                let mut inputs: Vec<&PjRtBuffer> = vec![&tok_lit];
+                if let Some(l) = &idx_lit {
+                    inputs.push(l);
+                }
+                inputs.extend(caches.iter());
+                let (first, new_caches) = match run_collect(engine, &step_var, &inputs) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        self.caches = Some(caches);
+                        return Err(e);
+                    }
+                };
+                self.caches = Some(new_caches);
+                // The first output's declared dtype decides the decode
+                // side: i32 ⇒ in-graph token commits (multistep).
+                if step_var.info.outputs.first().map(|o| o.dtype) == Some(Dtype::I32) {
+                    StepOut {
+                        logits: None,
+                        new_tokens: Some(engine.read_i32(&first)?),
+                        was_refresh: false,
+                    }
+                } else {
+                    StepOut {
+                        logits: Some(engine.read_f32(&first)?),
+                        new_tokens: None,
+                        was_refresh: false,
+                    }
+                }
+            }
+        };
+        self.state.commit(&plan, slots);
+        if self.policy.needs_confidence() {
+            if let Some(l) = &out.logits {
+                update_confidence(&mut self.last_conf, l, b, n, slots);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Shared executor tail: run `var`, hand output 0 to the caller and keep
+/// outputs 1.. as the new device cache set.
+fn run_collect(
+    engine: &Engine,
+    var: &LoadedVariant,
+    inputs: &[&PjRtBuffer],
+) -> Result<(PjRtBuffer, Vec<PjRtBuffer>)> {
+    let mut outs = engine.run_buffers(var, inputs)?;
+    anyhow::ensure!(!outs.is_empty(), "variant {} produced no outputs", var.info.name);
+    let rest: Vec<PjRtBuffer> = outs.drain(1..).collect();
+    let first = outs.pop().expect("output 0 present");
+    Ok((first, rest))
+}
+
+/// Number of leading runtime inputs that are per-step host uploads rather
+/// than cache tensors, by the variant's declared kind: `tokens`, plus the
+/// manual substrate's `idx`.  Positional, replacing the old
+/// `name != "tokens" && name != "idx"` string filter — which silently
+/// mis-sliced the moment a cache tensor's name collided with a runtime
+/// input's (see the round-trip test below).
+pub fn runtime_input_prefix(info: &VariantInfo) -> usize {
+    if info.kind == "manual" {
+        2
+    } else {
+        1
+    }
+}
+
+/// Zero-initialised cache buffers matching a variant's cache inputs
+/// (everything past the runtime-input prefix).
+fn zero_caches(engine: &Engine, var: &LoadedVariant) -> Result<Vec<PjRtBuffer>> {
+    let prefix = runtime_input_prefix(&var.info).min(var.info.inputs.len());
+    var.info.inputs[prefix..]
+        .iter()
+        .map(|i| {
+            anyhow::ensure!(
+                i.dtype == Dtype::F32,
+                "cache input '{}' of {} is not f32 — runtime-input prefix mismatch",
+                i.name,
+                var.info.name
+            );
+            engine.upload_zeros_f32(&i.shape)
+        })
+        .collect()
+}
+
+/// Per-position top-1 softmax confidence over `[B, N, V]` logits, written
+/// into `conf` (`[B, N]`).  Rows without a resident request (PAD rows)
+/// are skipped — their logits never feed index selection, and the softmax
+/// is the single largest host-side per-step cost.
+pub fn update_confidence(
+    conf: &mut Vec<f32>,
+    logits: &[f32],
+    b: usize,
+    n: usize,
+    slots: &[SlotState],
+) {
+    let v = logits.len() / (b * n);
+    conf.resize(b * n, 0.0);
+    for bi in 0..b {
+        if !slots.get(bi).map(|s| s.occupied).unwrap_or(false) {
+            conf[bi * n..(bi + 1) * n].fill(0.0);
+            continue;
+        }
+        for p in bi * n..(bi + 1) * n {
+            let row = &logits[p * v..(p + 1) * v];
+            let max = row.iter().cloned().fold(f32::MIN, f32::max);
+            let mut denom = 0.0f32;
+            let mut top = 0.0f32;
+            for &x in row {
+                let e = (x - max).exp();
+                denom += e;
+                if e > top {
+                    top = e;
+                }
+            }
+            conf[p] = top / denom;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::schedule::RhoSchedule;
+    use crate::runtime::manifest::IoSpec;
+
+    /// Synthetic VariantInfo with the exact runtime-input layouts the
+    /// compile side emits (python/compile/aot.py `variant_io`).
+    fn variant(kind: &str, inputs: Vec<IoSpec>) -> VariantInfo {
+        VariantInfo {
+            name: format!("m__{kind}"),
+            kind: kind.to_string(),
+            model: "m".into(),
+            file: "f.hlo".into(),
+            batch: 4,
+            seq_len: 16,
+            identifier: "singular".into(),
+            rank: 4,
+            k_per_layer: vec![4, 4],
+            manual_k: 16,
+            msteps: 1,
+            threshold: 0.0,
+            kernel_backend: "jnp".into(),
+            params: Vec::new(),
+            inputs,
+            outputs: Vec::new(),
+            schedule: RhoSchedule::uniform(0.25),
+        }
+    }
+
+    fn io(name: &str, dtype: Dtype) -> IoSpec {
+        IoSpec { name: name.into(), shape: vec![2, 2], dtype }
+    }
+
+    #[test]
+    fn runtime_prefix_round_trips_manifest_io_layouts() {
+        // (kind, runtime inputs as the compile side declares them)
+        let cases: Vec<(&str, Vec<IoSpec>)> = vec![
+            ("vanilla", vec![io("tokens", Dtype::I32)]),
+            (
+                "spa",
+                vec![
+                    io("tokens", Dtype::I32),
+                    io("pcache", Dtype::F32),
+                    io("kcache", Dtype::F32),
+                    io("vcache", Dtype::F32),
+                    io("hcache", Dtype::F32),
+                ],
+            ),
+            ("spa_refresh", vec![io("tokens", Dtype::I32)]),
+            (
+                "manual",
+                vec![
+                    io("tokens", Dtype::I32),
+                    io("idx", Dtype::I32),
+                    io("kcache", Dtype::F32),
+                    io("vcache", Dtype::F32),
+                    io("hcache", Dtype::F32),
+                ],
+            ),
+            (
+                "multistep",
+                vec![
+                    io("tokens", Dtype::I32),
+                    io("pcache", Dtype::F32),
+                    io("kcache", Dtype::F32),
+                    io("vcache", Dtype::F32),
+                    io("hcache", Dtype::F32),
+                ],
+            ),
+        ];
+        for (kind, inputs) in cases {
+            let v = variant(kind, inputs);
+            let prefix = runtime_input_prefix(&v);
+            // Positional slicing must select exactly the f32 cache inputs
+            // (what the old name filter *meant*), and every runtime input
+            // in the prefix must be i32.
+            assert!(
+                v.inputs[..prefix].iter().all(|i| i.dtype == Dtype::I32),
+                "{kind}: runtime prefix holds a non-i32 input"
+            );
+            assert!(
+                v.inputs[prefix..].iter().all(|i| i.dtype == Dtype::F32),
+                "{kind}: cache slice holds a non-f32 input"
+            );
+            let by_name: Vec<&str> = v
+                .inputs
+                .iter()
+                .filter(|i| i.name != "tokens" && i.name != "idx")
+                .map(|i| i.name.as_str())
+                .collect();
+            let by_pos: Vec<&str> =
+                v.inputs[prefix..].iter().map(|i| i.name.as_str()).collect();
+            assert_eq!(by_pos, by_name, "{kind}: positional != name filter");
+        }
+        // The case the old string filter got wrong: a cache tensor whose
+        // name collides with a runtime input ("idx") must still be zeroed.
+        let v = variant(
+            "spa",
+            vec![io("tokens", Dtype::I32), io("idx", Dtype::F32), io("kcache", Dtype::F32)],
+        );
+        let prefix = runtime_input_prefix(&v);
+        assert_eq!(
+            v.inputs[prefix..].len(),
+            2,
+            "positional slicing keeps the colliding cache input"
+        );
+    }
+
+    #[test]
+    fn confidence_skips_pad_only_rows() {
+        let (b, n, v) = (2, 2, 4);
+        // Row 0 occupied, row 1 a PAD row.
+        let mut s0 = SlotState::empty();
+        s0.occupied = true;
+        let slots = vec![s0, SlotState::empty()];
+        // Sharp logits everywhere: top-1 confidence near 1.0.
+        let mut logits = vec![0.0f32; b * n * v];
+        for p in 0..b * n {
+            logits[p * v] = 50.0;
+        }
+        let mut conf = Vec::new();
+        update_confidence(&mut conf, &logits, b, n, &slots);
+        assert_eq!(conf.len(), b * n);
+        assert!(conf[..n].iter().all(|&c| c > 0.9), "occupied row computed");
+        assert!(conf[n..].iter().all(|&c| c == 0.0), "PAD row skipped");
+    }
+}

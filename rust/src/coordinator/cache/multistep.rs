@@ -1,0 +1,34 @@
+//! Fused multi-step SPA: several decode steps + unmasking fused into one
+//! executable (the perf variant — logits never leave the device).
+
+use super::policy::{CachePolicy, PartialRefresh, Plan, PlanCtx};
+
+/// `<m>__multistep_default` with the spa refresh variant for priming.
+///
+/// The fused graph commits tokens in-graph, so there is no host-side
+/// index substrate to target dirty rows with — admission keeps the
+/// blanket group invalidate, declared explicitly via
+/// [`PartialRefresh::Unsupported`].
+#[derive(Debug, Default)]
+pub struct MultistepPolicy;
+
+impl CachePolicy for MultistepPolicy {
+    fn variant_names(&self, model: &str) -> (String, Option<String>) {
+        (
+            format!("{model}__multistep_default"),
+            Some(format!("{model}__spa_default_refresh")),
+        )
+    }
+
+    fn partial_refresh(&self) -> PartialRefresh {
+        PartialRefresh::Unsupported
+    }
+
+    fn plan(&mut self, cx: &PlanCtx<'_>) -> Plan {
+        if !cx.state.primed || cx.state.force_refresh {
+            Plan::refresh()
+        } else {
+            Plan::cached()
+        }
+    }
+}

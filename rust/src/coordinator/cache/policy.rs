@@ -1,0 +1,145 @@
+//! The `CachePolicy` trait: per-step selection and refresh decisions as
+//! **pure host logic**, decoupled from engine execution.
+//!
+//! A policy never touches PJRT.  Each step it is shown the group's cache
+//! state and slot set and answers with a [`Plan`]: which executable class
+//! to run ([`Exec`]), which indices to feed the manual substrate, and which
+//! dirty rows this step services toward validity.  The shared executor in
+//! `method.rs` turns the plan into device work; `CacheState::commit` folds
+//! a successfully executed plan back into the per-slot state.  Keeping the
+//! decision layer engine-free is what lets the stub-engine tests in
+//! `rust/tests/cache_policy.rs` and `rust/tests/loadgen.rs` exercise real
+//! refresh logic on checkouts without a PJRT runtime.
+
+use super::state::CacheState;
+use crate::coordinator::request::SlotState;
+
+/// Whether a policy can service freshly admitted rows without discarding
+/// the whole group's device cache (DESIGN.md §8, admission cost model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartialRefresh {
+    /// Admission marks only the incoming rows dirty; the policy heals them
+    /// through targeted index selection on subsequent steps.
+    Supported,
+    /// Admission escalates to a group-global invalidate — the pre-subsystem
+    /// blanket behaviour, kept explicitly.
+    Unsupported,
+}
+
+/// Which executable class the step executor should run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Exec {
+    /// Step variant with no cache IO (vanilla full recompute).
+    Stateless,
+    /// Full-cost refresh through the refresh variant: tokens in, fresh
+    /// logits + cache set out.
+    Refresh,
+    /// Manual-substrate full refresh: identity `[B, full_k]` indices plus
+    /// zero-initialised cache inputs through the refresh variant.
+    RefreshManual,
+    /// Cached step.  `indices` feeds the manual substrate's `[B, K]` idx
+    /// input; `None` means selection happens in-graph (spa / multistep).
+    Cached {
+        /// Row-major `[B, K]` position indices, when the substrate takes
+        /// them on the host side.
+        indices: Option<Vec<i32>>,
+    },
+}
+
+/// One dirty row's share of a step's partial servicing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowService {
+    /// Batch row (slot index) being serviced.
+    pub row: usize,
+    /// Progress added to the row's `cache_cover` this step (positions for
+    /// the manual substrate, healing steps for the in-graph spa proxy).
+    pub covered: usize,
+    /// The row's partial service completes with this step (valid again).
+    pub complete: bool,
+}
+
+/// A policy's decision for one decode step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    /// Executable class + host-side inputs.
+    pub exec: Exec,
+    /// Dirty rows this step services toward validity (empty on refresh
+    /// plans — a full refresh revalidates every row wholesale).
+    pub serviced: Vec<RowService>,
+}
+
+impl Plan {
+    /// A full-cost refresh through the refresh variant.
+    pub fn refresh() -> Plan {
+        Plan { exec: Exec::Refresh, serviced: Vec::new() }
+    }
+
+    /// A cached step with in-graph selection and no partial servicing.
+    pub fn cached() -> Plan {
+        Plan { exec: Exec::Cached { indices: None }, serviced: Vec::new() }
+    }
+
+    /// True when executing this plan pays the full refresh cost.
+    pub fn is_refresh(&self) -> bool {
+        matches!(self.exec, Exec::Refresh | Exec::RefreshManual)
+    }
+}
+
+/// Everything a policy may consult when deciding a step (borrowed views;
+/// building one is free).
+pub struct PlanCtx<'a> {
+    /// Group-level cache state (primed / force-refresh flags, counters).
+    pub state: &'a CacheState,
+    /// `[B, N]` token buffer about to be stepped.
+    pub tokens: &'a [i32],
+    /// Per-slot decode + cache-validity state.
+    pub slots: &'a [SlotState],
+    /// Last step's per-position top-1 confidence (`[B, N]`; empty until a
+    /// confidence-consuming policy has seen logits).
+    pub last_conf: &'a [f32],
+    /// Batch rows.
+    pub batch: usize,
+    /// Sequence length.
+    pub seq_len: usize,
+    /// Cached steps of in-graph servicing that heal one dirty row (derived
+    /// from the step variant's mean update ratio ρ̄; unused by substrates
+    /// with explicit indices).
+    pub heal_budget: usize,
+}
+
+/// A cache strategy: selection + refresh decisions for one method.
+///
+/// Implementations: [`super::vanilla::VanillaPolicy`],
+/// [`super::spa::SpaPolicy`], [`super::manual::ManualPolicy`],
+/// [`super::multistep::MultistepPolicy`].
+pub trait CachePolicy {
+    /// Step and (where the method has one) refresh executable names for
+    /// `model`, matching the variant registry (DESIGN.md §5).
+    fn variant_names(&self, model: &str) -> (String, Option<String>);
+
+    /// Admission capability: can dirty rows be healed in place, or must
+    /// the group pay a blanket invalidate?
+    fn partial_refresh(&self) -> PartialRefresh;
+
+    /// Whether admitting a request costs the group a full-price refresh
+    /// step — the batcher's admission cost model.  Defaults to "yes iff
+    /// no partial-refresh support"; stateless policies (vanilla) override
+    /// to `false` because they have no cache to refresh at all.
+    fn admission_forces_refresh(&self) -> bool {
+        self.partial_refresh() == PartialRefresh::Unsupported
+    }
+
+    /// The policy consumes per-position confidence; the host softmax over
+    /// `[B, N, V]` logits is skipped entirely when no active policy needs
+    /// it (it is O(B·N·V) per step).
+    fn needs_confidence(&self) -> bool {
+        false
+    }
+
+    /// Toggle admission-time partial refresh (the `--partial-refresh` CLI
+    /// gate).  Policies without the capability ignore it.
+    fn set_partial(&mut self, _on: bool) {}
+
+    /// Decide this step's execution plan — pure host logic.
+    fn plan(&mut self, cx: &PlanCtx<'_>) -> Plan;
+}

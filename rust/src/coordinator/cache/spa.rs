@@ -1,0 +1,81 @@
+//! SPA-Cache policy (and the dLLM-Cache value-identifier baseline): cached
+//! steps with **in-graph** proxy-driven selection, full refreshes only on
+//! cold start or a scheduled interval.
+
+use super::policy::{CachePolicy, PartialRefresh, Plan, PlanCtx, RowService};
+use super::state::{dirty_rows, max_steps_since_refresh};
+
+/// Any `spa`-kind variant pair (`<m>__<variant>` + `<m>__<variant>_refresh`):
+/// SPA-Cache itself (`spa_default`), the dLLM-Cache value identifier
+/// (`spa_value_u25`), ablation identifiers and ranks.
+///
+/// Admission-aware partial refresh: the singular-proxy drift detector runs
+/// *in the step graph*, and a freshly admitted row has maximal activation
+/// drift by construction — so the per-layer recompute budget concentrates
+/// on the dirty row for the next `heal_budget` (≈ 1/ρ̄) cached steps
+/// instead of the whole group paying a refresh.  The rows the refresh
+/// variant would have covered wholesale are healed row-targeted; everyone
+/// else keeps their cached logits path and their `steps_since_refresh`.
+#[derive(Debug)]
+pub struct SpaPolicy {
+    variant: String,
+    refresh_interval: usize,
+    partial: bool,
+}
+
+impl SpaPolicy {
+    /// Policy over a named spa variant pair with a scheduled refresh
+    /// interval (0 = never; SPA-Cache's proxies make one unnecessary).
+    pub fn new(variant: String, refresh_interval: usize) -> SpaPolicy {
+        SpaPolicy { variant, refresh_interval, partial: true }
+    }
+}
+
+impl CachePolicy for SpaPolicy {
+    fn variant_names(&self, model: &str) -> (String, Option<String>) {
+        (
+            format!("{model}__{}", self.variant),
+            Some(format!("{model}__{}_refresh", self.variant)),
+        )
+    }
+
+    fn partial_refresh(&self) -> PartialRefresh {
+        if self.partial {
+            PartialRefresh::Supported
+        } else {
+            PartialRefresh::Unsupported
+        }
+    }
+
+    fn set_partial(&mut self, on: bool) {
+        self.partial = on;
+    }
+
+    fn plan(&mut self, cx: &PlanCtx<'_>) -> Plan {
+        if !cx.state.primed || cx.state.force_refresh {
+            return Plan::refresh();
+        }
+        if self.refresh_interval > 0
+            && max_steps_since_refresh(cx.slots) >= self.refresh_interval
+        {
+            return Plan::refresh();
+        }
+        // Dirty (freshly admitted) rows heal through the in-graph proxy:
+        // one cached step of servicing each.  The per-layer recompute
+        // budget (ρ̄) is shared across the batch, so when several rows are
+        // dirty at once each gets a proportionally smaller slice — the
+        // completion threshold scales with the concurrent dirty count so
+        // a row is never declared valid faster than the budget allows.
+        let dirty = dirty_rows(cx.slots);
+        let need = cx.heal_budget * dirty.len().max(1);
+        let serviced = dirty
+            .iter()
+            .map(|&row| RowService {
+                row,
+                covered: 1,
+                complete: cx.slots[row].cache_cover + 1 >= need,
+            })
+            .collect();
+        Plan { serviced, ..Plan::cached() }
+    }
+}

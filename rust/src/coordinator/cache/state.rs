@@ -1,0 +1,283 @@
+//! Group-level cache state + the per-slot validity bookkeeping rules.
+//!
+//! Validity and refresh age are tracked **per slot row** (the fields live
+//! on [`SlotState`] so they travel with the resident request): admission
+//! dirties only the incoming rows, and everything else keeps its
+//! `steps_since_refresh` and its next-step logits path.  `CacheState`
+//! holds what is genuinely group-global — whether a refresh has ever
+//! primed the device cache, whether one is forced, and the counters — and
+//! owns the transition rules ([`CacheState::admit`] on admission,
+//! [`CacheState::commit`] after a successfully executed [`Plan`]).
+//!
+//! Everything here is host-pure: no engine, no device buffers (those live
+//! in `method.rs`), so the stub-engine tests exercise the real rules.
+
+use super::policy::{Exec, PartialRefresh, Plan};
+use crate::coordinator::request::SlotState;
+
+/// Group-global cache state shared by every policy.
+#[derive(Debug, Clone)]
+pub struct CacheState {
+    /// A refresh has produced device cache contents since the last
+    /// group-global invalidate.
+    pub primed: bool,
+    /// The next step must pay a full-cost refresh regardless of row state.
+    pub force_refresh: bool,
+    /// Full-cost refresh steps executed.
+    pub refreshes: u64,
+    /// Decode steps executed.
+    pub steps: u64,
+    /// Dirty rows healed to validity without a group-wide refresh.
+    pub partial_refreshes: u64,
+    /// Rows whose cache validity was dropped (admitted rows, plus the
+    /// blast radius when a policy without partial support escalates to a
+    /// blanket invalidate).
+    pub rows_invalidated: u64,
+}
+
+impl Default for CacheState {
+    fn default() -> Self {
+        CacheState {
+            primed: false,
+            force_refresh: true,
+            refreshes: 0,
+            steps: 0,
+            partial_refreshes: 0,
+            rows_invalidated: 0,
+        }
+    }
+}
+
+/// Occupied rows whose device cache content is stale.
+pub fn dirty_rows(slots: &[SlotState]) -> Vec<usize> {
+    slots
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.occupied && !s.cache_valid)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Oldest per-row refresh age across the group's *resident* rows
+/// (scheduled-interval decisions look at the stalest request, not a
+/// group-global clock — PAD rows have no cache content worth refreshing).
+pub fn max_steps_since_refresh(slots: &[SlotState]) -> usize {
+    slots
+        .iter()
+        .filter(|s| s.occupied)
+        .map(|s| s.steps_since_refresh)
+        .max()
+        .unwrap_or(0)
+}
+
+impl CacheState {
+    /// Group-global invalidate: every row is dirtied and the next step is
+    /// a full refresh.  Used by `run_group` (fresh static batch) and as
+    /// the admission fallback for policies without partial support.
+    pub fn invalidate_all(&mut self, slots: &mut [SlotState]) {
+        self.primed = false;
+        self.force_refresh = true;
+        for s in slots.iter_mut() {
+            s.cache_valid = false;
+            s.steps_since_refresh = 0;
+            s.cache_cover = 0;
+        }
+    }
+
+    /// Admission entry point: dirty exactly the incoming `rows` when the
+    /// policy can heal them in place, else fall back to the group-global
+    /// invalidate.  Returns the number of rows whose *cached content* was
+    /// discarded — `rows.len()` for healing policies, plus every
+    /// still-valid resident row for an escalating policy (the blanket
+    /// invalidate's blast radius), and **0 when nothing was cached yet**:
+    /// a cold group, or a stateless policy that never primes, has nothing
+    /// to invalidate, so `spa_rows_invalidated_total` stays an honest
+    /// per-policy admission-cost signal.
+    pub fn admit(
+        &mut self,
+        rows: &[usize],
+        capability: PartialRefresh,
+        slots: &mut [SlotState],
+    ) -> usize {
+        let mut marked = 0usize;
+        for &r in rows {
+            if let Some(s) = slots.get_mut(r) {
+                s.cache_valid = false;
+                s.steps_since_refresh = 0;
+                s.cache_cover = 0;
+                marked += 1;
+            }
+        }
+        let mut n = if self.primed { marked } else { 0 };
+        if self.primed && capability == PartialRefresh::Unsupported {
+            // Blanket invalidate: every still-valid *resident* row's cache
+            // content is discarded too (PAD rows hold nothing).
+            n += slots.iter().filter(|s| s.occupied && s.cache_valid).count();
+            self.invalidate_all(slots);
+        } else if !self.primed {
+            // Nothing cached yet: the first step is a refresh either way.
+            self.invalidate_all(slots);
+        }
+        self.rows_invalidated += n as u64;
+        n
+    }
+
+    /// Fold a successfully executed plan back into the state.  Refresh
+    /// plans revalidate every row and reset its age; cached plans age
+    /// every row and apply the plan's partial servicing.
+    pub fn commit(&mut self, plan: &Plan, slots: &mut [SlotState]) {
+        self.steps += 1;
+        match &plan.exec {
+            Exec::Stateless => {}
+            Exec::Refresh | Exec::RefreshManual => {
+                self.refreshes += 1;
+                self.primed = true;
+                self.force_refresh = false;
+                for s in slots.iter_mut() {
+                    s.cache_valid = true;
+                    s.steps_since_refresh = 0;
+                    s.cache_cover = 0;
+                }
+            }
+            Exec::Cached { .. } => {
+                // Only resident rows age — an empty slot must never become
+                // the "stalest row" that triggers an interval refresh.
+                for s in slots.iter_mut().filter(|s| s.occupied) {
+                    s.steps_since_refresh += 1;
+                }
+                for sv in &plan.serviced {
+                    if let Some(s) = slots.get_mut(sv.row) {
+                        s.cache_cover += sv.covered;
+                        if sv.complete {
+                            s.cache_valid = true;
+                            s.cache_cover = 0;
+                            self.partial_refreshes += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cache::policy::RowService;
+
+    fn busy_slots(n: usize) -> Vec<SlotState> {
+        (0..n)
+            .map(|i| {
+                let mut s = SlotState::empty();
+                s.occupied = true;
+                s.request_id = i as u64;
+                s.cache_valid = true;
+                s.steps_since_refresh = 3 + i;
+                s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn admit_supported_dirties_only_incoming_rows() {
+        let mut st = CacheState::default();
+        let mut slots = busy_slots(4);
+        st.primed = true;
+        st.force_refresh = false;
+        let n = st.admit(&[1], PartialRefresh::Supported, &mut slots);
+        assert_eq!(n, 1);
+        assert!(!slots[1].cache_valid);
+        assert_eq!(slots[1].steps_since_refresh, 0);
+        for i in [0usize, 2, 3] {
+            assert!(slots[i].cache_valid, "row {i} must keep its validity");
+            assert_eq!(slots[i].steps_since_refresh, 3 + i, "row {i} age reset");
+        }
+        assert!(st.primed && !st.force_refresh, "no group-wide invalidate");
+        assert_eq!(st.rows_invalidated, 1);
+        assert_eq!(dirty_rows(&slots), vec![1]);
+    }
+
+    #[test]
+    fn admit_unsupported_escalates_to_blanket_invalidate() {
+        let mut st = CacheState::default();
+        let mut slots = busy_slots(4);
+        st.primed = true;
+        st.force_refresh = false;
+        let n = st.admit(&[2], PartialRefresh::Unsupported, &mut slots);
+        assert_eq!(n, 4, "admitted row + 3 still-valid residents");
+        assert!(!st.primed && st.force_refresh);
+        assert!(slots.iter().all(|s| !s.cache_valid && s.steps_since_refresh == 0));
+        assert_eq!(st.rows_invalidated, 4);
+    }
+
+    #[test]
+    fn admit_unprimed_group_forces_refresh_without_counting_invalidations() {
+        let mut st = CacheState::default();
+        let mut slots = vec![SlotState::empty(); 4];
+        let n = st.admit(&[0], PartialRefresh::Supported, &mut slots);
+        assert_eq!(n, 0, "nothing cached yet ⇒ nothing invalidated");
+        assert_eq!(st.rows_invalidated, 0);
+        assert!(st.force_refresh, "cold group must refresh first");
+        // A stateless policy never primes, so its admissions never count —
+        // vanilla's rows_invalidated stays 0 in the trajectory.
+        st.admit(&[1], PartialRefresh::Unsupported, &mut slots);
+        assert_eq!(st.rows_invalidated, 0);
+    }
+
+    #[test]
+    fn commit_refresh_revalidates_and_cached_ages() {
+        let mut st = CacheState::default();
+        let mut slots = busy_slots(2);
+        slots[0].cache_valid = false;
+        st.commit(&Plan::refresh(), &mut slots);
+        assert_eq!(st.refreshes, 1);
+        assert!(st.primed && !st.force_refresh);
+        assert!(slots.iter().all(|s| s.cache_valid && s.steps_since_refresh == 0));
+
+        st.commit(&Plan::cached(), &mut slots);
+        assert_eq!(st.steps, 2);
+        assert!(slots.iter().all(|s| s.steps_since_refresh == 1));
+        assert_eq!(max_steps_since_refresh(&slots), 1);
+    }
+
+    #[test]
+    fn pad_rows_never_age_or_count_as_blast_radius() {
+        let mut st = CacheState::default();
+        let mut slots = busy_slots(2);
+        slots.push(SlotState::empty()); // a free PAD slot
+        st.commit(&Plan::refresh(), &mut slots);
+        for _ in 0..10 {
+            st.commit(&Plan::cached(), &mut slots);
+        }
+        assert_eq!(slots[2].steps_since_refresh, 0, "PAD row must not age");
+        assert_eq!(max_steps_since_refresh(&slots), 10, "resident rows age");
+        // Blanket escalation counts resident rows only: 1 admitted + 1
+        // still-valid resident, never the PAD slot.
+        let n = st.admit(&[0], PartialRefresh::Unsupported, &mut slots);
+        assert_eq!(n, 2, "blast radius excludes PAD rows");
+    }
+
+    #[test]
+    fn commit_partial_service_heals_row_and_counts() {
+        let mut st = CacheState::default();
+        let mut slots = busy_slots(2);
+        st.commit(&Plan::refresh(), &mut slots);
+        st.admit(&[1], PartialRefresh::Supported, &mut slots);
+        let plan = Plan {
+            exec: Exec::Cached { indices: None },
+            serviced: vec![RowService { row: 1, covered: 8, complete: false }],
+        };
+        st.commit(&plan, &mut slots);
+        assert!(!slots[1].cache_valid);
+        assert_eq!(slots[1].cache_cover, 8);
+        let done = Plan {
+            exec: Exec::Cached { indices: None },
+            serviced: vec![RowService { row: 1, covered: 8, complete: true }],
+        };
+        st.commit(&done, &mut slots);
+        assert!(slots[1].cache_valid);
+        assert_eq!(slots[1].cache_cover, 0);
+        assert_eq!(st.partial_refreshes, 1);
+        assert_eq!(st.refreshes, 1, "healing never paid a full refresh");
+    }
+}

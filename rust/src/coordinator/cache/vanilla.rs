@@ -1,0 +1,31 @@
+//! Vanilla baseline: full hidden-state recompute every step, no cache.
+
+use super::policy::{CachePolicy, Exec, PartialRefresh, Plan, PlanCtx};
+
+/// The paper's no-cache baseline.  Stateless — every step runs the
+/// `<model>__vanilla` executable from scratch, so admission costs nothing
+/// and there is nothing to partially refresh.
+#[derive(Debug, Default)]
+pub struct VanillaPolicy;
+
+impl CachePolicy for VanillaPolicy {
+    fn variant_names(&self, model: &str) -> (String, Option<String>) {
+        (format!("{model}__vanilla"), None)
+    }
+
+    fn partial_refresh(&self) -> PartialRefresh {
+        // No cache state exists, so there is nothing to heal — admission
+        // keeps the (free) blanket semantics.
+        PartialRefresh::Unsupported
+    }
+
+    fn admission_forces_refresh(&self) -> bool {
+        // Every step is already a full recompute: admission is free, so
+        // the batcher must not hold requests back to amortise anything.
+        false
+    }
+
+    fn plan(&mut self, _cx: &PlanCtx<'_>) -> Plan {
+        Plan { exec: Exec::Stateless, serviced: Vec::new() }
+    }
+}

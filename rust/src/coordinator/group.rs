@@ -13,8 +13,8 @@ use anyhow::Result;
 use crate::model::tokenizer::MASK;
 use crate::runtime::engine::Engine;
 
+use super::cache::{Method, StepOut};
 use super::decode::{slot_done, Sampler};
-use super::methods::{Method, StepOut};
 use super::request::SlotState;
 
 /// Outcome of decoding one group to completion.
@@ -103,7 +103,7 @@ pub fn run_group(
 ) -> Result<GroupOutcome> {
     let (b, n, v) = method.geometry();
     anyhow::ensure!(tokens.len() == b * n, "token buffer mismatch");
-    method.invalidate();
+    method.invalidate(slots);
 
     let t_start = Instant::now();
     let mut step_ms = Vec::new();
@@ -137,7 +137,7 @@ pub fn run_group(
     Ok(GroupOutcome {
         tokens: tokens.clone(),
         steps,
-        refreshes: method.refreshes,
+        refreshes: method.state.refreshes,
         step_ms,
         decoded,
         ttft_ms,

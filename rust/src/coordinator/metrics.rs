@@ -36,6 +36,14 @@ pub struct Metrics {
     pub steps: u64,
     /// Steps that were full-cost cache refreshes (admission or schedule).
     pub refreshes: u64,
+    /// Dirty rows healed to validity by targeted partial servicing —
+    /// admissions that did *not* cost a group refresh (`cache::state`).
+    pub partial_refreshes: u64,
+    /// Rows whose cache validity was dropped on admission (for policies
+    /// without partial support this includes the blanket-invalidate blast
+    /// radius, so `rows_invalidated / requests` exposes the admission
+    /// cost per policy).
+    pub rows_invalidated: u64,
     /// Time-to-first-token stream, measured from `Request::submitted`.
     pub ttft: Welford,
     /// End-to-end request latency stream (includes batcher queueing).
@@ -60,6 +68,8 @@ impl Default for Metrics {
             tokens_decoded: 0,
             steps: 0,
             refreshes: 0,
+            partial_refreshes: 0,
+            rows_invalidated: 0,
             ttft: Welford::default(),
             latency: Welford::default(),
             queue_wait: Welford::default(),
@@ -129,6 +139,8 @@ impl Metrics {
         self.tokens_decoded += other.tokens_decoded;
         self.steps += other.steps;
         self.refreshes += other.refreshes;
+        self.partial_refreshes += other.partial_refreshes;
+        self.rows_invalidated += other.rows_invalidated;
         self.queue_depth += other.queue_depth;
         self.active_slots += other.active_slots;
         self.ttft.merge(&other.ttft);
@@ -147,6 +159,8 @@ impl Metrics {
             ("spa_tokens_decoded", self.tokens_decoded as f64),
             ("spa_steps_total", self.steps as f64),
             ("spa_refreshes_total", self.refreshes as f64),
+            ("spa_partial_refreshes_total", self.partial_refreshes as f64),
+            ("spa_rows_invalidated_total", self.rows_invalidated as f64),
             ("spa_queue_depth", self.queue_depth as f64),
             ("spa_active_slots", self.active_slots as f64),
             ("spa_tps", self.tps()),
@@ -244,6 +258,8 @@ mod tests {
         let text = m.render();
         assert!(text.contains("spa_requests_completed 2"));
         assert!(text.contains("spa_latency_ms_p50"));
+        assert!(text.contains("spa_partial_refreshes_total 0"));
+        assert!(text.contains("spa_rows_invalidated_total 0"));
     }
 
     #[test]
@@ -259,11 +275,16 @@ mod tests {
         let mut a = Metrics::default();
         a.record_completion(10.0, 100.0, 8);
         a.queue_depth = 2;
+        a.partial_refreshes = 2;
+        a.rows_invalidated = 3;
         let mut b = Metrics::default();
         b.record_completion(30.0, 300.0, 4);
         b.record_completion(50.0, 500.0, 4);
         b.active_slots = 3;
+        b.partial_refreshes = 1;
         a.merge(&b);
+        assert_eq!(a.partial_refreshes, 3);
+        assert_eq!(a.rows_invalidated, 3);
         assert_eq!(a.requests_completed, 3);
         assert_eq!(a.tokens_decoded, 16);
         assert_eq!(a.queue_depth, 2);

@@ -2,18 +2,19 @@
 //!
 //! Pipeline: `server` (TCP frontend) → `router` (join-shortest-queue
 //! dispatch across N engine workers) → per-worker `batcher` (admission) →
-//! `scheduler::Worker` (continuous batching over fixed slots) → `methods`
-//! (cache strategies: SPA-Cache + all paper baselines) → `decode`
-//! (unmasking policies) with `metrics` throughout.  `group` is the
-//! batch-at-once loop the benches use; the worker shares its per-step
-//! semantics (`group::apply_step_out`).  See DESIGN.md §8 for the
-//! worker/router architecture.
+//! `scheduler::Worker` (continuous batching over fixed slots) → `cache`
+//! (the cache-policy subsystem: SPA-Cache + all paper baselines behind a
+//! `CachePolicy` trait) → `decode` (unmasking policies) with `metrics`
+//! throughout.  `group` is the batch-at-once loop the benches use; the
+//! worker shares its per-step semantics (`group::apply_step_out`).  See
+//! DESIGN.md §8 for the worker/router architecture and §2 for the method
+//! table → policy mapping.
 
 pub mod batcher;
+pub mod cache;
 pub mod decode;
 pub mod group;
 pub mod metrics;
-pub mod methods;
 pub mod request;
 pub mod router;
 pub mod scheduler;

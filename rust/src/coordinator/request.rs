@@ -64,6 +64,18 @@ pub struct SlotState {
     pub decoded_since_refresh: Vec<usize>,
     /// Steps this slot has been decoded for.
     pub steps: usize,
+    /// The device cache rows for this slot reflect the resident request.
+    /// `false` from [`SlotState::assign`] — a fresh admission is dirty by
+    /// construction; policies with partial-refresh support heal the row
+    /// in place, others escalate to a group invalidate (`cache::state`).
+    pub cache_valid: bool,
+    /// Steps since this row last had a full-cost recompute (per-slot —
+    /// admission into a neighbouring slot does not reset it).
+    pub steps_since_refresh: usize,
+    /// Partial-service progress since the row was marked dirty: positions
+    /// recomputed for the manual substrate, healed steps for the in-graph
+    /// spa proxy.  Reset when the row becomes valid again.
+    pub cache_cover: usize,
     /// Time to first committed token, once observed.
     pub ttft_ms: Option<f64>,
     /// When the request entered the system (`Request::submitted`) — TTFT and
@@ -86,6 +98,11 @@ impl SlotState {
             last_decoded: Vec::new(),
             decoded_since_refresh: Vec::new(),
             steps: 0,
+            // A PAD row has nothing to service; validity transitions are
+            // managed by `cache::CacheState`.
+            cache_valid: true,
+            steps_since_refresh: 0,
+            cache_cover: 0,
             ttft_ms: None,
             submitted: None,
             started: None,
@@ -104,6 +121,11 @@ impl SlotState {
             last_decoded: Vec::new(),
             decoded_since_refresh: Vec::new(),
             steps: 0,
+            // Freshly admitted ⇒ the group's cache rows are stale for
+            // this slot until a refresh or partial service covers it.
+            cache_valid: false,
+            steps_since_refresh: 0,
+            cache_cover: 0,
             ttft_ms: None,
             submitted: Some(req.submitted),
             started: Some(Instant::now()),

@@ -1,10 +1,12 @@
 //! Request router: shards serving across N independent decode workers
 //! (DESIGN.md §8).
 //!
-//! DLM cache state is batch-global — admitting one request invalidates the
-//! caches of everything decoding alongside it — so the scaling axis is
-//! horizontal: N workers, each owning its own engine + method + batcher +
-//! slot set on a dedicated thread.  The router dispatches each incoming
+//! DLM cache state is batch-global — admitting one request perturbs the
+//! cache of everything decoding alongside it (a per-row dirty marking for
+//! policies with partial-refresh support, a group-wide invalidate for the
+//! rest — see `cache::state`) — so the scaling axis is horizontal: N
+//! workers, each owning its own engine + method + batcher + slot set on a
+//! dedicated thread.  The router dispatches each incoming
 //! request with a join-shortest-queue policy over shared load gauges
 //! (inflight count, published queue depth and free slots) and fans
 //! `stats`/`shutdown` out to every worker.

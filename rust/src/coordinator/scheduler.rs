@@ -7,12 +7,17 @@
 //! channel, responses leave through per-request reply channels.  Slot
 //! lifecycle:
 //!
-//!   queue → `[admit]` → slot (forces cache refresh) → steps → done → response
+//!   queue → `[admit]` → slot (marked cache-dirty) → steps → done → response
 //!
-//! Admission invalidates the group caches (the diffusion state is batch-
-//! global), so the batcher controls admission timing (see `batcher.rs`).
-//! Sharding traffic across N workers keeps that refresh blast radius local
-//! to one group — the router (`router.rs`) decides which group pays it.
+//! Admission dirties **only the incoming slot rows**: cache policies with
+//! an index substrate (`cache::SpaPolicy`, `cache::ManualPolicy`) service
+//! dirty rows through targeted selection on subsequent steps, while
+//! policies without one (`Vanilla`, `Multistep`) escalate to the old
+//! group-global invalidate via `PartialRefresh::Unsupported`.  The batcher
+//! consults that capability for its admission cost model (see
+//! `batcher.rs`), and sharding traffic across N workers keeps whatever
+//! refresh cost remains local to one group — the router (`router.rs`)
+//! decides which group pays it.
 //!
 //! TTFT and latency are measured from `Request::submitted`, so batcher
 //! queueing delay is part of both (the component the router's JSQ policy is
@@ -30,10 +35,10 @@ use crate::runtime::engine::Engine;
 use crate::{debug, info};
 
 use super::batcher::{Batcher, BatcherConfig};
+use super::cache::{Method, StepOut};
 use super::decode::{slot_done, Sampler};
 use super::group::{apply_step_out, masks_in_row};
 use super::metrics::Metrics;
-use super::methods::{Method, StepOut};
 use super::request::{Request, Response, SlotState};
 use super::router::WorkerStatus;
 
@@ -88,12 +93,20 @@ impl Worker {
         let tokenizer = Tokenizer::from_manifest(&engine.manifest.charset);
         let status = Arc::new(WorkerStatus::default());
         status.set_free_slots(b);
+        // The batcher's admission cost model follows the policy: when
+        // admission costs no group refresh (partial-refresh healing, or a
+        // stateless method), batching admissions up buys nothing.
+        let admission_forces_refresh = method.admission_forces_refresh();
         Worker {
             id,
             engine,
             method,
             sampler,
-            batcher: Batcher::new(BatcherConfig { batch: b, ..batcher_cfg }),
+            batcher: Batcher::new(BatcherConfig {
+                batch: b,
+                admission_forces_refresh,
+                ..batcher_cfg
+            }),
             tokenizer,
             tokens: vec![PAD; b * n],
             slots: vec![SlotState::empty(); b],
@@ -193,6 +206,7 @@ impl Worker {
             return;
         }
         let (_, n, _) = self.method.geometry();
+        let mut admitted_rows = Vec::new();
         for (slot_i, req) in free.into_iter().zip(admitted) {
             let mut row = vec![PAD; n];
             let len = req.tokens.len().min(n);
@@ -208,19 +222,31 @@ impl Worker {
                 self.replies[slot_i] = Some(ch);
             }
             self.requests[slot_i] = Some(req);
+            admitted_rows.push(slot_i);
             debug!("sched", "worker {} admitted request into slot {slot_i}", self.id);
         }
-        // Any change in group composition invalidates the caches.
-        self.method.invalidate();
+        // Dirty exactly the admitted rows; the policy either services them
+        // in place on subsequent steps or escalates to a group-global
+        // invalidate (`PartialRefresh::Unsupported`).
+        self.method.on_admitted(&admitted_rows, &mut self.slots);
+        self.mirror_cache_counters();
+    }
+
+    /// Serving counters mirror the method's cache-state counters — one
+    /// method per worker, same lifetime, so assignment (not increment)
+    /// keeps `CacheState` the single source of truth.
+    fn mirror_cache_counters(&mut self) {
+        self.metrics.steps = self.method.state.steps;
+        self.metrics.refreshes = self.method.state.refreshes;
+        self.metrics.partial_refreshes = self.method.state.partial_refreshes;
+        self.metrics.rows_invalidated = self.method.state.rows_invalidated;
     }
 
     fn step(&mut self) -> Result<()> {
         let (b, n, v) = self.method.geometry();
-        let out: StepOut = self.method.step(&self.engine, &self.tokens, &self.slots)?;
-        self.metrics.steps += 1;
-        if out.was_refresh {
-            self.metrics.refreshes += 1;
-        }
+        let out: StepOut =
+            self.method.step(&self.engine, &self.tokens, &mut self.slots)?;
+        self.mirror_cache_counters();
         apply_step_out(out, &mut self.tokens, &mut self.slots, &mut self.sampler, (b, n, v))?;
         // First logits since admission: TTFT, measured from submission so
         // batcher queueing is included.

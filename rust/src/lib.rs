@@ -6,9 +6,9 @@
 //!   AOT HLO-text executables under `artifacts/`.
 //! * [`runtime`] loads and executes those artifacts via PJRT (the `xla`
 //!   crate) — python is never on the request path.
-//! * [`coordinator`] is the serving system: router/batcher/scheduler,
-//!   cache methods (SPA-Cache + every baseline), decode policies, metrics,
-//!   and a TCP server.
+//! * [`coordinator`] is the serving system: router/batcher/scheduler, the
+//!   cache-policy subsystem (SPA-Cache + every baseline behind one
+//!   `CachePolicy` trait), decode policies, metrics, and a TCP server.
 //! * [`analysis`] regenerates the paper's figures from probe artifacts.
 //! * [`bench`] is a criterion-substitute harness for the paper tables,
 //!   plus the serving load generator behind `spa-cache bench-serve`.

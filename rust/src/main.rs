@@ -14,9 +14,9 @@ use std::path::Path;
 use anyhow::Result;
 
 use spa_cache::coordinator::batcher::BatcherConfig;
+use spa_cache::coordinator::cache::{Method, MethodSpec, PolicyFlags};
 use spa_cache::coordinator::decode::{Sampler, UnmaskMode};
 use spa_cache::coordinator::group::{pack_group, run_group};
-use spa_cache::coordinator::methods::{Method, MethodSpec};
 use spa_cache::coordinator::router::Router;
 use spa_cache::coordinator::scheduler::Worker;
 use spa_cache::coordinator::server;
@@ -43,6 +43,7 @@ fn main() -> Result<()> {
                 "usage: spa-cache <list|generate|serve|bench-serve|analyze|selftest> \
                  [--model llada_s] [--method vanilla|spa|dllm_cache|fast_dllm|dkv_cache|d2_cache|elastic_cache|multistep] \
                  [--task gsm8k_s] [--samples N] [--addr host:port] [--workers N] [--threshold 0.9]\n\
+                 policy: [--partial-refresh on|off] [--refresh-interval N]\n\
                  bench-serve: [--methods vanilla,spa] [--qps 8 | --clients N] [--duration 5s] \
                  [--warmup 1s] [--tasks gsm8k_s,mmlu_s] [--gen-len 32 | 16:64] [--out BENCH_serving.json]"
             );
@@ -164,6 +165,13 @@ fn serve(args: &Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:7377");
     let workers = args.count_or("workers", 1);
     let block_k = args.usize_or("block-k", 16);
+    // Policy flags: `--partial-refresh off` restores the blanket
+    // admission invalidate; `--refresh-interval N` overrides the method's
+    // scheduled full-refresh cadence.  Strict — an explicitly supplied
+    // but malformed value must not silently serve the default policy.
+    let policy = PolicyFlags::from_args(args)?;
+    let (partial_refresh, refresh_interval) =
+        (policy.partial_refresh, policy.refresh_interval);
     let mut sam = sampler(args);
     if method_name == "fast_dllm" {
         sam.mode = UnmaskMode::BlockParallel { threshold: args.f64_or("threshold", 0.9) };
@@ -176,8 +184,10 @@ fn serve(args: &Args) -> Result<()> {
     // model/method/artifact path fails here instead of serving dead workers.
     let (router, handles) = Router::spawn(workers, move |id| {
         let engine = Engine::from_manifest(manifest.clone())?;
-        let spec = MethodSpec::by_name(&method_name, block_k)?;
-        let method = Method::new(&engine, &model, spec)?;
+        let spec = MethodSpec::by_name(&method_name, block_k)?
+            .with_refresh_interval(refresh_interval);
+        let mut method = Method::new(&engine, &model, spec)?;
+        method.set_partial_refresh(partial_refresh);
         Ok(Worker::new(id, engine, method, sam.clone(), batcher.clone(), 4 * seq_len))
     })?;
 
@@ -198,27 +208,26 @@ fn serve(args: &Args) -> Result<()> {
 fn bench_serve(args: &Args) -> Result<()> {
     use spa_cache::bench::loadgen::{self, LoadGenConfig};
 
-    let artifacts = args
-        .get("artifacts")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(Manifest::default_dir);
-    // Gate on the resolved dir, so an explicit --artifacts is honoured.
-    if !artifacts.join("index.json").exists() {
-        println!(
-            "bench-serve: SKIP (no artifacts at {} — set --artifacts/$SPA_ARTIFACTS \
-             or run `make artifacts`)",
-            artifacts.display()
-        );
-        return Ok(());
-    }
+    // Gate on the resolved dir, so an explicit --artifacts is honoured
+    // (shared with examples/bench_serve.rs — the two must not drift).
+    let artifacts = match loadgen::resolve_artifacts(args) {
+        Ok(dir) => dir,
+        Err(why) => {
+            println!("bench-serve: SKIP ({why})");
+            return Ok(());
+        }
+    };
     let manifest = Manifest::load(&artifacts)?;
     let seq_len = manifest.seq_len;
     let charset = manifest.charset.clone();
 
     let model = args.str_or("model", "llada_s");
-    let workers = args.count_or("workers", 2);
+    // Strict: worker count and policy flags are recorded in the
+    // trajectory config — a typo must error, never record a wrong entry.
+    let workers = args.strict_count("workers")?.unwrap_or(2);
     let block_k = args.usize_or("block-k", 16);
     let threshold = args.f64_or("threshold", 0.9);
+    let policy = PolicyFlags::from_args(args)?;
     let methods: Vec<String> = args
         .str_or("methods", "vanilla,spa")
         .split(',')
@@ -228,10 +237,16 @@ fn bench_serve(args: &Args) -> Result<()> {
     // A typo'd method must error here, not surface as a per-method SKIP
     // (SKIP is reserved for engine/PJRT unavailability — a CI smoke must
     // never go green having measured zero methods by typo).
+    let mut specs = Vec::new();
     for m in &methods {
-        MethodSpec::by_name(m, block_k)
-            .map_err(|e| anyhow::anyhow!("--methods '{m}': {e:#}"))?;
+        specs.push(
+            MethodSpec::by_name(m, block_k)
+                .map_err(|e| anyhow::anyhow!("--methods '{m}': {e:#}"))?,
+        );
     }
+    // Policy flags must be applicable to at least one selected method —
+    // the recorded config must never claim gates the run ignored.
+    loadgen::validate_policy_flags(policy, args.get("partial-refresh").is_some(), &specs)?;
 
     // --clients N selects the closed loop; otherwise open loop at --qps
     // (shared flag parsing with examples/bench_serve.rs).
@@ -251,6 +266,7 @@ fn bench_serve(args: &Args) -> Result<()> {
                 method_name.clone(),
                 block_k,
                 threshold,
+                policy,
             ),
         );
         match spawned {
@@ -266,7 +282,7 @@ fn bench_serve(args: &Args) -> Result<()> {
     let out = args.str_or("out", "BENCH_serving.json");
     loadgen::append_trajectory(
         Path::new(&out),
-        loadgen::config_json(&cfg, workers, &model),
+        loadgen::config_json(&cfg, workers, &model, policy),
         &reports,
     )?;
     println!("bench-serve: appended {} method row(s) to {out}", reports.len());

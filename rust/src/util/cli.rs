@@ -6,6 +6,8 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
+use anyhow::Result;
+
 /// Parse a human duration: `5s`, `500ms`, `2m`, `1h`, `1.5s`, or a bare
 /// number (seconds).  Returns `None` on anything unparsable or negative.
 pub fn parse_duration(s: &str) -> Option<Duration> {
@@ -24,6 +26,17 @@ pub fn parse_duration(s: &str) -> Option<Duration> {
         _ => return None,
     };
     Some(Duration::from_secs_f64(secs))
+}
+
+/// Parse an on/off boolean value: `on|true|1|yes` / `off|false|0|no`.
+/// `None` on anything else — recording callers (bench-serve) treat that
+/// as an error instead of silently measuring the wrong configuration.
+pub fn parse_bool(s: &str) -> Option<bool> {
+    match s.trim() {
+        "true" | "1" | "yes" | "on" => Some(true),
+        "false" | "0" | "no" | "off" => Some(false),
+        _ => None,
+    }
 }
 
 #[derive(Debug, Clone, Default)]
@@ -81,8 +94,11 @@ impl Args {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Bare boolean flag: `--key`, or any value [`parse_bool`] accepts as
+    /// true — one grammar for every boolean flag (`on` works everywhere
+    /// `--partial-refresh on` does).
     pub fn flag(&self, key: &str) -> bool {
-        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+        self.get(key).and_then(parse_bool).unwrap_or(false)
     }
 
     /// `usize_or` clamped to at least 1 — for worker/thread/client counts
@@ -95,6 +111,22 @@ impl Args {
     /// unparsable values fall back to the default, like every other getter.
     pub fn duration_or(&self, key: &str, default: Duration) -> Duration {
         self.get(key).and_then(parse_duration).unwrap_or(default)
+    }
+
+    /// Strict positive-count parse for flags where a typo must error
+    /// rather than silently fall back (worker counts, recorded bench
+    /// configs).  `None` when the flag is absent.
+    pub fn strict_count(&self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => {
+                let n: usize = s.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("bad --{key} '{s}' (want a positive count)")
+                })?;
+                anyhow::ensure!(n > 0, "--{key} must be at least 1");
+                Ok(Some(n))
+            }
+        }
     }
 }
 
@@ -116,10 +148,11 @@ mod tests {
 
     #[test]
     fn bool_flags() {
-        let a = parse("--quick --out file.txt");
+        let a = parse("--quick --out file.txt --full on");
         assert!(a.flag("quick"));
         assert_eq!(a.get("out"), Some("file.txt"));
         assert!(!a.flag("missing"));
+        assert!(a.flag("full"), "flag() shares parse_bool's on/off grammar");
     }
 
     #[test]
@@ -134,6 +167,23 @@ mod tests {
         let a = parse("");
         assert_eq!(a.f64_or("x", 0.5), 0.5);
         assert_eq!(a.str_or("s", "d"), "d");
+    }
+
+    #[test]
+    fn parse_bool_grammar() {
+        assert_eq!(parse_bool("on"), Some(true));
+        assert_eq!(parse_bool("true"), Some(true));
+        assert_eq!(parse_bool(" off "), Some(false));
+        assert_eq!(parse_bool("0"), Some(false));
+        assert_eq!(parse_bool("offf"), None, "junk is not a boolean");
+    }
+
+    #[test]
+    fn strict_counts() {
+        assert_eq!(parse("--workers 4").strict_count("workers").unwrap(), Some(4));
+        assert_eq!(parse("").strict_count("workers").unwrap(), None);
+        assert!(parse("--workers 4x").strict_count("workers").is_err());
+        assert!(parse("--workers 0").strict_count("workers").is_err());
     }
 
     #[test]

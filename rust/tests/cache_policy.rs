@@ -1,0 +1,250 @@
+//! Stub-engine tests for the cache-policy subsystem: the refresh-decision
+//! and per-slot validity rules are pure host logic (`coordinator::cache`),
+//! so — unlike the artifact-gated serving tests — these run on every
+//! checkout, no PJRT runtime or artifacts needed.
+//!
+//! The headline property: **per-slot invalidation conserves resident
+//! rows**.  Admitting into a busy group must not reset the other slots'
+//! `steps_since_refresh`, must not drop their validity, and must not
+//! change their next-step logits path (the plan stays `Cached`, never a
+//! group refresh) for policies with partial-refresh support.
+
+use std::time::Instant;
+
+use spa_cache::coordinator::cache::{
+    CachePolicy, CacheState, Exec, IndexPolicy, ManualPolicy, MultistepPolicy,
+    PartialRefresh, Plan, PlanCtx, SpaPolicy,
+};
+use spa_cache::coordinator::request::{Request, SlotState};
+use spa_cache::model::tokenizer::MASK;
+
+const B: usize = 4;
+const N: usize = 16;
+
+fn request(id: u64) -> Request {
+    Request {
+        id,
+        tokens: vec![MASK; N],
+        prompt_len: 2,
+        answer: None,
+        task: None,
+        submitted: Instant::now(),
+    }
+}
+
+/// A fully occupied group of B slots.
+fn busy_group() -> Vec<SlotState> {
+    (0..B).map(|i| SlotState::assign(&request(i as u64), 4)).collect()
+}
+
+/// Ask the policy for a plan and commit it — one simulated decode step
+/// with the engine stubbed out.
+fn drive_step(
+    policy: &mut dyn CachePolicy,
+    state: &mut CacheState,
+    tokens: &[i32],
+    slots: &mut [SlotState],
+    heal_budget: usize,
+) -> Plan {
+    let plan = {
+        let cx = PlanCtx {
+            state,
+            tokens,
+            slots,
+            last_conf: &[],
+            batch: slots.len(),
+            seq_len: tokens.len() / slots.len(),
+            heal_budget,
+        };
+        policy.plan(&cx)
+    };
+    state.commit(&plan, slots);
+    plan
+}
+
+/// Prime a fresh group: the first plan must be a full refresh.
+fn prime(
+    policy: &mut dyn CachePolicy,
+    state: &mut CacheState,
+    tokens: &[i32],
+    slots: &mut [SlotState],
+) {
+    let plan = drive_step(policy, state, tokens, slots, 2);
+    assert!(plan.is_refresh(), "cold group must start with a refresh");
+    assert!(state.primed);
+}
+
+#[test]
+fn property_per_slot_invalidation_conserves_resident_rows() {
+    spa_cache::util::proptest::check(
+        "per_slot_invalidation_conserves_resident_rows",
+        |r| {
+            // (use manual policy?, sequence of (admit row, cached steps))
+            let manual = r.bool(0.5);
+            let events: Vec<(usize, usize)> = (0..r.range(1, 12))
+                .map(|_| (r.range(0, B), r.range(0, 4)))
+                .collect();
+            (manual, events)
+        },
+        |(manual, events)| {
+            let mut policy: Box<dyn CachePolicy> = if *manual {
+                Box::new(ManualPolicy::new(4, IndexPolicy::Window, 0))
+            } else {
+                Box::new(SpaPolicy::new("spa_default".into(), 0))
+            };
+            let tokens = vec![MASK; B * N];
+            let mut slots = busy_group();
+            let mut state = CacheState::default();
+            prime(policy.as_mut(), &mut state, &tokens, &mut slots);
+            let mut admissions = 0u64;
+            for &(row, steps) in events {
+                // Snapshot every *other* resident row, then admit.
+                let before: Vec<(usize, bool)> = slots
+                    .iter()
+                    .map(|s| (s.steps_since_refresh, s.cache_valid))
+                    .collect();
+                slots[row] = SlotState::assign(&request(admissions + 100), 4);
+                state.admit(&[row], policy.partial_refresh(), &mut slots);
+                admissions += 1;
+                for (i, slot) in slots.iter().enumerate() {
+                    if i == row {
+                        continue;
+                    }
+                    if slot.steps_since_refresh != before[i].0 {
+                        return Err(format!(
+                            "admitting row {row} reset row {i}'s steps_since_refresh"
+                        ));
+                    }
+                    if slot.cache_valid != before[i].1 {
+                        return Err(format!(
+                            "admitting row {row} changed row {i}'s validity"
+                        ));
+                    }
+                }
+                // The next-step logits path of the resident rows must stay
+                // the cached one: no group refresh on admission.
+                for _ in 0..steps {
+                    let plan =
+                        drive_step(policy.as_mut(), &mut state, &tokens, &mut slots, 2);
+                    if plan.is_refresh() {
+                        return Err(
+                            "partial-refresh policy paid a group refresh on admission"
+                                .into(),
+                        );
+                    }
+                }
+            }
+            if state.rows_invalidated != admissions {
+                return Err(format!(
+                    "rows_invalidated {} != admissions {admissions}",
+                    state.rows_invalidated
+                ));
+            }
+            if state.refreshes != 1 {
+                return Err(format!("expected only the priming refresh, saw {}", state.refreshes));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn manual_dirty_row_sweeps_full_coverage_then_revalidates() {
+    let k = 4;
+    let mut policy = ManualPolicy::new(k, IndexPolicy::Block, 0);
+    let tokens = vec![MASK; B * N];
+    let mut slots = busy_group();
+    let mut state = CacheState::default();
+    prime(&mut policy, &mut state, &tokens, &mut slots);
+
+    slots[1] = SlotState::assign(&request(42), 4);
+    state.admit(&[1], policy.partial_refresh(), &mut slots);
+
+    // ⌈N/k⌉ = 4 cached steps sweep positions [0,16) of row 1 in order.
+    for step in 0..N / k {
+        assert!(!slots[1].cache_valid, "row 1 still healing at step {step}");
+        let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2);
+        let indices = match &plan.exec {
+            Exec::Cached { indices: Some(ix) } => ix.clone(),
+            other => panic!("expected indices, got {other:?}"),
+        };
+        let row1: Vec<i32> = indices[k..2 * k].to_vec();
+        let want: Vec<i32> = (0..k as i32).map(|j| (step * k) as i32 + j).collect();
+        assert_eq!(row1, want, "coverage sweep order at step {step}");
+    }
+    assert!(slots[1].cache_valid, "row fully covered ⇒ valid again");
+    assert_eq!(state.partial_refreshes, 1);
+    assert_eq!(state.refreshes, 1, "no admission refresh, only the prime");
+    assert!(slots[0].cache_valid && slots[2].cache_valid && slots[3].cache_valid);
+}
+
+#[test]
+fn spa_dirty_row_heals_within_budget() {
+    let mut policy = SpaPolicy::new("spa_default".into(), 0);
+    let tokens = vec![MASK; B * N];
+    let mut slots = busy_group();
+    let mut state = CacheState::default();
+    prime(&mut policy, &mut state, &tokens, &mut slots);
+
+    slots[2] = SlotState::assign(&request(7), 4);
+    state.admit(&[2], policy.partial_refresh(), &mut slots);
+    let heal = 3;
+    for _ in 0..heal {
+        assert!(!slots[2].cache_valid);
+        let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, heal);
+        assert!(!plan.is_refresh());
+        assert_eq!(plan.serviced.len(), 1, "exactly the dirty row serviced");
+        assert_eq!(plan.serviced[0].row, 2);
+    }
+    assert!(slots[2].cache_valid, "healed after heal_budget steps");
+    assert_eq!(state.partial_refreshes, 1);
+    assert_eq!(state.refreshes, 1);
+}
+
+#[test]
+fn spa_scheduled_interval_still_refreshes_on_stalest_row() {
+    let mut policy = SpaPolicy::new("spa_value_u25".into(), 4);
+    let tokens = vec![MASK; B * N];
+    let mut slots = busy_group();
+    let mut state = CacheState::default();
+    prime(&mut policy, &mut state, &tokens, &mut slots);
+    for _ in 0..4 {
+        let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2);
+        assert!(!plan.is_refresh());
+    }
+    // Every row is now 4 steps old ⇒ the dLLM-Cache interval fires.
+    let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2);
+    assert!(plan.is_refresh(), "interval-due refresh");
+    assert_eq!(state.refreshes, 2);
+}
+
+#[test]
+fn unsupported_policy_escalates_to_group_invalidate() {
+    let mut policy = MultistepPolicy;
+    assert_eq!(policy.partial_refresh(), PartialRefresh::Unsupported);
+    let tokens = vec![MASK; B * N];
+    let mut slots = busy_group();
+    let mut state = CacheState::default();
+    prime(&mut policy, &mut state, &tokens, &mut slots);
+
+    slots[0] = SlotState::assign(&request(9), 4);
+    let n = state.admit(&[0], policy.partial_refresh(), &mut slots);
+    assert_eq!(n, B, "blanket invalidate counts the whole blast radius");
+    assert!(slots.iter().all(|s| !s.cache_valid));
+    let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2);
+    assert!(plan.is_refresh(), "unsupported policy keeps admission ⇒ refresh");
+}
+
+#[test]
+fn partial_refresh_gate_restores_blanket_behaviour() {
+    let mut policy = SpaPolicy::new("spa_default".into(), 0);
+    policy.set_partial(false);
+    let tokens = vec![MASK; B * N];
+    let mut slots = busy_group();
+    let mut state = CacheState::default();
+    prime(&mut policy, &mut state, &tokens, &mut slots);
+    slots[1] = SlotState::assign(&request(5), 4);
+    state.admit(&[1], policy.partial_refresh(), &mut slots);
+    let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2);
+    assert!(plan.is_refresh(), "--partial-refresh off ⇒ admission refreshes");
+}

@@ -5,7 +5,7 @@
 
 use spa_cache::coordinator::decode::{Sampler, UnmaskMode};
 use spa_cache::coordinator::group::{pack_group, run_group};
-use spa_cache::coordinator::methods::{IndexPolicy, Method, MethodSpec};
+use spa_cache::coordinator::cache::{IndexPolicy, Method, MethodSpec};
 use spa_cache::model::tasks::{make_sample, Task};
 use spa_cache::model::tokenizer::{Tokenizer, MASK};
 use spa_cache::runtime::engine::Engine;

@@ -16,11 +16,12 @@ use std::time::Duration;
 use spa_cache::bench::loadgen::{
     self, ArrivalMode, GenLenDist, LoadGenConfig, TRAJECTORY_SCHEMA,
 };
+use spa_cache::coordinator::cache::{CachePolicy, CacheState, PlanCtx, SpaPolicy};
 use spa_cache::coordinator::metrics::Metrics;
 use spa_cache::coordinator::router::{Router, WorkerEndpoint, WorkerStatus};
 use spa_cache::coordinator::scheduler::Command;
 use spa_cache::coordinator::server::{self, Client};
-use spa_cache::coordinator::request::Response;
+use spa_cache::coordinator::request::{Response, SlotState};
 use spa_cache::model::tokenizer::CHARSET;
 use spa_cache::util::json::parse;
 use spa_cache::model::tasks::Task;
@@ -94,6 +95,103 @@ fn traj_path(tag: &str) -> std::path::PathBuf {
     std::env::temp_dir().join(format!("BENCH_serving_{tag}_{}.json", std::process::id()))
 }
 
+/// A worker running the **real** spa cache-policy decision loop over a
+/// stubbed engine: each submit admits into a slot and dirties it through
+/// `CacheState::admit`, then "decodes" by asking [`SpaPolicy`] for plans
+/// and committing them — counting refreshes/partial services into the
+/// same `Metrics` the real scheduler exports.  What is stubbed is only
+/// the device execution; every refresh decision is the production one.
+fn spawn_policy_stub_worker(id: usize, batch: usize) -> (WorkerEndpoint, JoinHandle<()>) {
+    let (tx, rx) = channel::<Command>();
+    let status = Arc::new(WorkerStatus::default());
+    status.set_free_slots(batch);
+    let worker_status = Arc::clone(&status);
+    let handle = std::thread::spawn(move || {
+        let mut metrics = Metrics::default();
+        let mut policy = SpaPolicy::new("spa_default".into(), 0);
+        let mut state = CacheState::default();
+        let mut slots = vec![SlotState::empty(); batch];
+        let tokens = vec![0i32; batch * SEQ_LEN];
+        let mut next_slot = 0usize;
+        for cmd in rx {
+            match cmd {
+                Command::Submit(req, reply) => {
+                    metrics.requests_submitted += 1;
+                    let s = next_slot % batch;
+                    next_slot += 1;
+                    slots[s] = SlotState::assign(&req, 16);
+                    let marked =
+                        state.admit(&[s], policy.partial_refresh(), &mut slots);
+                    metrics.rows_invalidated += marked as u64;
+                    // A few simulated decode steps, exactly the worker's
+                    // plan → execute → commit sequence minus the engine.
+                    for _ in 0..3 {
+                        let plan = {
+                            let cx = PlanCtx {
+                                state: &state,
+                                tokens: &tokens,
+                                slots: &slots,
+                                last_conf: &[],
+                                batch,
+                                seq_len: SEQ_LEN,
+                                heal_budget: 2,
+                            };
+                            policy.plan(&cx)
+                        };
+                        if plan.is_refresh() {
+                            metrics.refreshes += 1;
+                        }
+                        metrics.partial_refreshes +=
+                            plan.serviced.iter().filter(|sv| sv.complete).count() as u64;
+                        state.commit(&plan, &mut slots);
+                        metrics.steps += 1;
+                    }
+                    slots[s] = SlotState::empty();
+                    let latency_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
+                    let decoded = 4usize;
+                    metrics.record_completion(latency_ms / 2.0, latency_ms, decoded);
+                    let _ = reply.send(Response {
+                        id: req.id,
+                        text: "7".to_string(),
+                        tokens: req.tokens.clone(),
+                        prompt_len: req.prompt_len,
+                        decoded,
+                        steps: 3,
+                        ttft_ms: latency_ms / 2.0,
+                        latency_ms,
+                    });
+                    worker_status.dec_inflight();
+                }
+                Command::Stats(reply) => {
+                    let _ = reply.send(metrics.clone());
+                }
+                Command::Shutdown => break,
+            }
+        }
+    });
+    (WorkerEndpoint { id, tx, status }, handle)
+}
+
+/// Stub server whose workers run the real spa policy loop.
+fn policy_stub_server(
+    workers: usize,
+) -> (String, JoinHandle<anyhow::Result<()>>, Vec<JoinHandle<()>>) {
+    let mut eps = Vec::new();
+    let mut handles = Vec::new();
+    for id in 0..workers {
+        let (ep, h) = spawn_policy_stub_worker(id, 4);
+        eps.push(ep);
+        handles.push(h);
+    }
+    let router = Router::new(eps);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        server::serve_listener(listener, SEQ_LEN, CHARSET, router, 128)
+    });
+    (addr, server, handles)
+}
+
 #[test]
 fn open_loop_drives_and_records_trajectory() {
     let (addr, server, workers) = stub_server(2, 5);
@@ -126,9 +224,9 @@ fn open_loop_drives_and_records_trajectory() {
     // Trajectory file: schema-versioned, appends across runs.
     let path = traj_path("open");
     let _ = std::fs::remove_file(&path);
-    loadgen::append_trajectory(&path, loadgen::config_json(&cfg, 2, "stub"), &[report.clone()])
+    loadgen::append_trajectory(&path, loadgen::config_json(&cfg, 2, "stub", loadgen::PolicyFlags::default()), &[report.clone()])
         .unwrap();
-    loadgen::append_trajectory(&path, loadgen::config_json(&cfg, 2, "stub"), &[report]).unwrap();
+    loadgen::append_trajectory(&path, loadgen::config_json(&cfg, 2, "stub", loadgen::PolicyFlags::default()), &[report]).unwrap();
     let doc = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
     assert_eq!(doc.get("schema").and_then(|s| s.as_f64()), Some(TRAJECTORY_SCHEMA));
     let entries = doc.get("entries").and_then(|e| e.as_arr()).unwrap();
@@ -171,6 +269,66 @@ fn closed_loop_drives_and_drains() {
     // Drain op: idle server reports drained immediately.
     let mut c = Client::connect(&addr).unwrap();
     assert!(c.drain(Duration::from_secs(1)).unwrap());
+    c.shutdown().unwrap();
+    for h in workers {
+        h.join().unwrap();
+    }
+    server.join().unwrap().unwrap();
+}
+
+/// Acceptance check for admission-aware partial refresh: under a mixed
+/// open-loop arrival trace, the spa policy's refresh count stays
+/// **strictly below one refresh per admission** (the group refreshes once
+/// to prime, then admissions are healed by targeted partial servicing),
+/// and the new partial-refresh counters flow through the Prometheus
+/// scrape → differencing pipeline into the method report.
+#[test]
+fn spa_partial_refresh_keeps_refreshes_below_admissions() {
+    let (addr, server, workers) = policy_stub_server(2);
+    let cfg = LoadGenConfig {
+        mode: ArrivalMode::Open { qps: 150.0 },
+        warmup: Duration::from_millis(100),
+        duration: Duration::from_millis(500),
+        tasks: vec![Task::Gsm8kS, Task::MmluS],
+        gen_len: Some(GenLenDist::fixed(8)),
+        seed: 11,
+        max_inflight: 64,
+    };
+    let report = loadgen::drive(&addr, "spa-stub", &cfg).expect("drive");
+
+    assert!(report.requests > 10, "mixed trace admitted: {}", report.requests);
+    // Strictly below one-refresh-per-admission: at most the cold prime
+    // shows up in the measured window.
+    assert!(
+        report.refreshes < report.requests as f64,
+        "refreshes {} not below admissions {}",
+        report.refreshes,
+        report.requests
+    );
+    assert!(
+        report.partial_refreshes > 0.0,
+        "admissions must be healed by partial servicing: {report:?}"
+    );
+    assert!(
+        report.rows_invalidated > 0.0,
+        "admissions must dirty rows: {report:?}"
+    );
+    assert!(
+        report.refresh_rate < 0.5,
+        "refresh-rate column stays low: {}",
+        report.refresh_rate
+    );
+
+    // The raw exposition text carries the new counters (aggregate and
+    // per-worker labelled).
+    let mut c = Client::connect(&addr).unwrap();
+    let stats = c.stats().unwrap();
+    assert!(stats.contains("spa_partial_refreshes_total "), "stats:\n{stats}");
+    assert!(stats.contains("spa_rows_invalidated_total "), "stats:\n{stats}");
+    assert!(
+        stats.contains("spa_partial_refreshes_total{worker=\"0\"}"),
+        "per-worker labels:\n{stats}"
+    );
     c.shutdown().unwrap();
     for h in workers {
         h.join().unwrap();

@@ -11,7 +11,7 @@ use std::time::Duration;
 
 use spa_cache::coordinator::batcher::BatcherConfig;
 use spa_cache::coordinator::decode::{Sampler, UnmaskMode};
-use spa_cache::coordinator::methods::{Method, MethodSpec};
+use spa_cache::coordinator::cache::{Method, MethodSpec};
 use spa_cache::coordinator::router::Router;
 use spa_cache::coordinator::scheduler::Worker;
 use spa_cache::coordinator::server::{self, Client};
@@ -42,8 +42,12 @@ fn serve_e2e_multi_worker_queue_and_batching() {
         let spec = MethodSpec::Spa { variant: "spa_default".into(), refresh_interval: 0 };
         let method = Method::new(&engine, "llada_s", spec)?;
         let sampler = Sampler::greedy(UnmaskMode::Parallel { threshold: 0.9 });
-        let batcher =
-            BatcherConfig { batch: 4, min_free: 2, max_wait: Duration::from_millis(50) };
+        let batcher = BatcherConfig {
+            batch: 4,
+            min_free: 2,
+            max_wait: Duration::from_millis(50),
+            ..BatcherConfig::default()
+        };
         Ok(Worker::new(id, engine, method, sampler, batcher, 4 * seq_len))
     });
     let (router, worker_handles) = match spawned {

@@ -4,7 +4,7 @@
 //! `BENCH_serving.json` — the datapoint successive PRs compare against.
 //!
 //!   cargo run --release --example bench_serve -- [--method spa] [--workers 2]
-//!       [--qps 8 | --clients 6] [--duration 5s] [--warmup 1s]
+//!       [--qps 8 | --clients 6 | --pipeline 8] [--duration 5s] [--warmup 1s]
 //!       [--tasks gsm8k_s,mmlu_s] [--gen-len 32 | 16:64]
 //!       [--out BENCH_serving.json]
 //!

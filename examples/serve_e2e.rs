@@ -19,12 +19,11 @@ use spa_cache::coordinator::decode::{Sampler, UnmaskMode};
 use spa_cache::coordinator::cache::{Method, MethodSpec};
 use spa_cache::coordinator::router::Router;
 use spa_cache::coordinator::scheduler::Worker;
-use spa_cache::coordinator::server::{self, Client};
+use spa_cache::coordinator::server::{self, Client, GenRequest};
 use spa_cache::model::tasks::{render_prompt, ALL_TASKS};
 use spa_cache::runtime::engine::Engine;
 use spa_cache::runtime::manifest::Manifest;
 use spa_cache::util::cli::Args;
-use spa_cache::util::json::Json;
 use spa_cache::util::rng::Rng;
 use spa_cache::util::stats::Summary;
 
@@ -95,12 +94,14 @@ fn main() -> Result<()> {
                 let (q, _truth) = task.gen(&mut rng);
                 let prompt = render_prompt(task, &mut rng, &q);
                 let t0 = Instant::now();
+                // One submit → wait round-trip on the v2 session (the
+                // blocking wrapper over the multiplexed handle API).
                 let r = client
-                    .request(&Json::obj(vec![
-                        ("op", Json::str("generate")),
-                        ("task", Json::str(task.name())),
-                        ("prompt", Json::Str(prompt)),
-                    ]))
+                    .generate_opts(&GenRequest {
+                        task: Some(task.name().to_string()),
+                        prompt,
+                        ..GenRequest::default()
+                    })
                     .expect("generate");
                 let wall = t0.elapsed().as_secs_f64() * 1e3;
                 let ttft = r.get("ttft_ms").and_then(|x| x.as_f64()).unwrap_or(f64::NAN);

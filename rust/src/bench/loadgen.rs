@@ -15,6 +15,11 @@
 //! * **Closed loop** — N concurrent clients, each issuing its next request
 //!   the moment the previous reply lands.  Models saturating batch
 //!   workloads; measures capacity rather than latency-under-load.
+//! * **Pipelined loop** — one protocol-v2 session keeping a fixed depth of
+//!   requests in flight over a *single connection* (`--pipeline D`),
+//!   streaming enabled.  Measures what the multiplexed session layer buys:
+//!   head-of-line blocking removed (mean in-flight > 1 on one socket) and
+//!   TTFT observed at the first streamed frame rather than at completion.
 //!
 //! Both phases share a warmup window: requests *issued* before the warmup
 //! deadline are excluded from every summary (caches cold, lazy compiles).
@@ -43,7 +48,7 @@ use crate::coordinator::decode::{Sampler, UnmaskMode};
 use crate::coordinator::metrics::{scrape_value, scrape_worker_series};
 use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::Worker;
-use crate::coordinator::server::{self, Client};
+use crate::coordinator::server::{self, Client, GenRequest, ServerConfig};
 use crate::model::tasks::{render_prompt, Task};
 use crate::runtime::engine::Engine;
 use crate::runtime::manifest::Manifest;
@@ -74,6 +79,12 @@ pub enum ArrivalMode {
     Closed {
         /// Number of concurrent client connections (> 0).
         clients: usize,
+    },
+    /// One v2 session keeping `depth` streaming requests in flight over a
+    /// single connection (closed loop without per-request connections).
+    Pipelined {
+        /// In-flight depth sustained on the one session (> 0).
+        depth: usize,
     },
 }
 
@@ -126,7 +137,8 @@ impl GenLenDist {
 /// Everything one load-generation run is parameterised by.
 #[derive(Debug, Clone)]
 pub struct LoadGenConfig {
-    /// Open (target QPS) or closed (concurrent clients) arrivals.
+    /// Open (target QPS), closed (concurrent clients) or pipelined (one
+    /// v2 session at fixed depth) arrivals.
     pub mode: ArrivalMode,
     /// Requests issued before this deadline are excluded from summaries.
     pub warmup: Duration,
@@ -158,8 +170,9 @@ impl Default for LoadGenConfig {
 }
 
 impl LoadGenConfig {
-    /// Build a config from CLI flags — `--clients N` (closed loop) or
-    /// `--qps X` (open loop, default 8), `--duration` / `--warmup`
+    /// Build a config from CLI flags — `--pipeline D` (pipelined v2
+    /// session), `--clients N` (closed loop) or `--qps X` (open loop,
+    /// default 8), `--duration` / `--warmup`
     /// (human durations), `--tasks a,b,c`, `--gen-len N|LO:HI`, `--seed`,
     /// `--max-inflight`.  Shared by `spa-cache bench-serve` and
     /// `examples/bench_serve.rs` so the two front-ends cannot drift.
@@ -168,25 +181,30 @@ impl LoadGenConfig {
     /// silent fallbacks (a typo'd flag must not measure — and permanently
     /// record — the wrong load).
     pub fn from_args(args: &Args) -> Result<LoadGenConfig> {
-        let mode = match args.strict_count("clients")? {
-            Some(clients) => ArrivalMode::Closed { clients },
-            None => {
-                let qps = match args.get("qps") {
-                    Some(s) => {
-                        let q: f64 = s
-                            .trim()
-                            .parse()
-                            .map_err(|_| anyhow::anyhow!("bad --qps '{s}' (want a number)"))?;
-                        anyhow::ensure!(
-                            q.is_finite() && q > 0.0,
-                            "--qps must be positive (got {s})"
-                        );
-                        q
-                    }
-                    None => 8.0,
-                };
-                ArrivalMode::Open { qps }
-            }
+        let mode = if let Some(depth) = args.strict_count("pipeline")? {
+            anyhow::ensure!(
+                args.get("clients").is_none() && args.get("qps").is_none(),
+                "--pipeline is exclusive with --clients/--qps (one arrival mode per run)"
+            );
+            ArrivalMode::Pipelined { depth }
+        } else if let Some(clients) = args.strict_count("clients")? {
+            ArrivalMode::Closed { clients }
+        } else {
+            let qps = match args.get("qps") {
+                Some(s) => {
+                    let q: f64 = s
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad --qps '{s}' (want a number)"))?;
+                    anyhow::ensure!(
+                        q.is_finite() && q > 0.0,
+                        "--qps must be positive (got {s})"
+                    );
+                    q
+                }
+                None => 8.0,
+            };
+            ArrivalMode::Open { qps }
         };
         let tasks = args
             .str_or("tasks", "gsm8k_s")
@@ -242,7 +260,8 @@ struct Obs {
     done_s: f64,
     /// Client-measured wall time (ms), includes the wire.
     wall_ms: f64,
-    /// Server-reported time to first committed token (ms).
+    /// Time to first committed token (ms): server-reported, except in
+    /// pipelined mode where it is the client-observed first streamed frame.
     ttft_ms: f64,
     /// Server-reported end-to-end latency (ms), includes queue wait.
     latency_ms: f64,
@@ -279,6 +298,11 @@ pub struct MethodReport {
     pub latency: Option<Summary>,
     /// Client-side wall-time percentiles (latency + wire).
     pub wall: Option<Summary>,
+    /// Mean concurrently in-flight requests over the measured window
+    /// (Little's law: Σ wall time / window).  The pipelined mode's
+    /// headline number — >1 on a single connection means head-of-line
+    /// blocking is gone; ≈`clients` in the closed loop.
+    pub mean_inflight: f64,
     /// Mean batcher queue wait *inside the measured window*, reconstructed
     /// from the scraped mean+count pairs at the warmup boundary and end of
     /// run (a lifetime mean would smear warmup cold-start waits into every
@@ -314,8 +338,23 @@ fn sleep_until(t0: Instant, target: Duration) {
     }
 }
 
-/// Issue one generate request and observe the reply; `None` on a broken
-/// connection (the caller's loop exits).
+/// The generate op for position `seq` of the run's task mix.
+fn gen_request(cfg: &LoadGenConfig, rng: &mut Rng, seq: usize, stream: bool) -> GenRequest {
+    let task = cfg.tasks[seq % cfg.tasks.len()];
+    let (q, _truth) = task.gen(rng);
+    let prompt = render_prompt(task, rng, &q);
+    let gen_len = cfg.gen_len.map(|d| d.sample(rng)).unwrap_or_else(|| task.gen_len());
+    GenRequest {
+        task: Some(task.name().to_string()),
+        prompt,
+        gen_len: Some(gen_len),
+        stream,
+        ..GenRequest::default()
+    }
+}
+
+/// Issue one blocking generate request and observe the terminal reply;
+/// `None` on a broken connection (the caller's loop exits).
 fn one_request(
     client: &mut Client,
     cfg: &LoadGenConfig,
@@ -323,20 +362,10 @@ fn one_request(
     seq: usize,
     t0: Instant,
 ) -> Option<Obs> {
-    let task = cfg.tasks[seq % cfg.tasks.len()];
-    let (q, _truth) = task.gen(rng);
-    let prompt = render_prompt(task, rng, &q);
-    let gen_len = cfg.gen_len.map(|d| d.sample(rng)).unwrap_or_else(|| task.gen_len());
+    let req = gen_request(cfg, rng, seq, false);
     let issued_s = t0.elapsed().as_secs_f64();
     let w0 = Instant::now();
-    let r = client
-        .request(&Json::obj(vec![
-            ("op", Json::str("generate")),
-            ("task", Json::str(task.name())),
-            ("prompt", Json::Str(prompt)),
-            ("gen_len", Json::Num(gen_len as f64)),
-        ]))
-        .ok()?;
+    let r = client.generate_opts(&req).ok()?;
     Some(Obs {
         issued_s,
         done_s: t0.elapsed().as_secs_f64(),
@@ -380,6 +409,99 @@ fn spawn_closed(
             })
         })
         .collect()
+}
+
+/// Pipelined loop: one protocol-v2 session over a single connection, kept
+/// at `depth` in-flight streaming requests; whenever one finishes, the next
+/// is submitted.  All frames multiplex onto one channel
+/// (`Client::submit_routed`), so a single thread drives the whole depth.
+/// TTFT is measured client-side at the *first streamed frame* — the
+/// latency a streaming consumer actually observes — falling back to the
+/// server-reported value if a request produced no frames.
+fn spawn_pipelined(
+    addr: &str,
+    cfg: &LoadGenConfig,
+    t0: Instant,
+    obs: &Arc<Mutex<Vec<Obs>>>,
+    depth: usize,
+) -> Vec<JoinHandle<()>> {
+    let total = cfg.warmup + cfg.duration;
+    let addr = addr.to_string();
+    let cfg = cfg.clone();
+    let obs = Arc::clone(obs);
+    vec![std::thread::spawn(move || {
+        struct InFlight {
+            issued_s: f64,
+            started: Instant,
+            first_frame_ms: Option<f64>,
+        }
+        let mut rng = Rng::new(cfg.seed ^ 0x417E_517E);
+        let mut client = match Client::connect(&addr) {
+            Ok(c) => c,
+            Err(_) => return,
+        };
+        let (tx, rx) = std::sync::mpsc::channel::<Json>();
+        let mut inflight: std::collections::HashMap<i64, InFlight> =
+            std::collections::HashMap::new();
+        let mut seq = 0usize;
+        loop {
+            while inflight.len() < depth.max(1) && t0.elapsed() < total {
+                let req = gen_request(&cfg, &mut rng, seq, true);
+                seq += 1;
+                match client.submit_routed(&req, tx.clone()) {
+                    Ok(id) => {
+                        inflight.insert(
+                            id,
+                            InFlight {
+                                issued_s: t0.elapsed().as_secs_f64(),
+                                started: Instant::now(),
+                                first_frame_ms: None,
+                            },
+                        );
+                    }
+                    Err(_) => return,
+                }
+            }
+            if inflight.is_empty() {
+                return; // past the deadline and fully drained
+            }
+            let frame = match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(f) => f,
+                Err(_) => return,
+            };
+            let Some(id) = frame.get("id").and_then(|i| i.as_i64()) else {
+                continue;
+            };
+            if frame.get("event").and_then(|e| e.as_str()) == Some("tokens") {
+                if let Some(fl) = inflight.get_mut(&id) {
+                    if fl.first_frame_ms.is_none() {
+                        fl.first_frame_ms =
+                            Some(fl.started.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+                continue;
+            }
+            if !server::is_terminal(&frame) {
+                continue;
+            }
+            let Some(fl) = inflight.remove(&id) else { continue };
+            let server_ttft = frame.get("ttft_ms").and_then(|x| x.as_f64());
+            obs.lock().unwrap().push(Obs {
+                issued_s: fl.issued_s,
+                done_s: t0.elapsed().as_secs_f64(),
+                wall_ms: fl.started.elapsed().as_secs_f64() * 1e3,
+                ttft_ms: fl.first_frame_ms.or(server_ttft).unwrap_or(f64::NAN),
+                latency_ms: frame
+                    .get("latency_ms")
+                    .and_then(|x| x.as_f64())
+                    .unwrap_or(f64::NAN),
+                decoded: frame.get("decoded").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                // Anything but a clean completion (error frame, cancel) is
+                // excluded from the latency percentiles.
+                error: frame.get("event").and_then(|e| e.as_str()) != Some("done"),
+            });
+        }
+    })]
 }
 
 /// Open loop: a dispatcher thread draws exponential inter-arrival gaps and
@@ -478,6 +600,7 @@ pub fn drive(addr: &str, method: &str, cfg: &LoadGenConfig) -> Result<MethodRepo
     let generators = match cfg.mode {
         ArrivalMode::Closed { clients } => spawn_closed(addr, cfg, t0, &obs, clients.max(1)),
         ArrivalMode::Open { qps } => spawn_open(addr, cfg, t0, &obs, &dropped, qps),
+        ArrivalMode::Pipelined { depth } => spawn_pipelined(addr, cfg, t0, &obs, depth),
     };
 
     // Counter baseline at the warmup boundary, scraped *under load*.  A
@@ -539,6 +662,10 @@ fn aggregate(
         wall.push(o.wall_ms);
         decoded_total += o.decoded;
     }
+    // Little's law over every measured request (errors included — they
+    // occupied capacity too): mean in-flight = total busy time / window.
+    let busy_s: f64 = measured.iter().map(|o| o.wall_ms / 1e3).sum();
+    let mean_inflight = busy_s / measured_s;
 
     let diff = |name: &str| -> f64 {
         scrape_value(end, name).unwrap_or(0.0) - scrape_value(baseline, name).unwrap_or(0.0)
@@ -580,13 +707,14 @@ fn aggregate(
         measured_s,
         offered_qps: match cfg.mode {
             ArrivalMode::Open { qps } => qps,
-            ArrivalMode::Closed { .. } => f64::NAN,
+            ArrivalMode::Closed { .. } | ArrivalMode::Pipelined { .. } => f64::NAN,
         },
         achieved_qps: ok.len() as f64 / measured_s,
         tps: decoded_total / measured_s,
         ttft: ttft.summary(),
         latency: latency.summary(),
         wall: wall.summary(),
+        mean_inflight,
         queue_wait_ms_mean,
         refreshes,
         steps,
@@ -680,6 +808,65 @@ pub fn worker_factory(
     }
 }
 
+/// Size the server's connection-handler pool above the generator's own
+/// concurrency cap (+ control/scrape connections): generated connections
+/// must never starve in the accept queue, or joins would hang.
+fn conn_threads_for(cfg: &LoadGenConfig) -> usize {
+    match cfg.mode {
+        ArrivalMode::Open { .. } => cfg.max_inflight + 8,
+        ArrivalMode::Closed { clients } => clients + 8,
+        // One session connection plus control/scrape headroom.
+        ArrivalMode::Pipelined { .. } => 16,
+    }
+}
+
+/// [`run_method`] over **stub** session workers (`bench::stub`) — the
+/// artifact-free serving smoke.  The full TCP → router → worker pipeline
+/// runs for real; only the device execution is simulated, so CI can
+/// populate the serving trajectory on every checkout (`bench-serve
+/// --stub`).
+pub fn run_stub(
+    method: &str,
+    workers: usize,
+    cfg: &LoadGenConfig,
+    stub: crate::bench::stub::StubConfig,
+) -> Result<MethodReport> {
+    use crate::bench::stub;
+    let (router, worker_handles) = stub::stub_router(workers, &stub);
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind loadgen port")?;
+    let addr = listener.local_addr()?.to_string();
+    let server = std::thread::spawn({
+        let router = router.clone();
+        let server_cfg = ServerConfig::with_conn_threads(conn_threads_for(cfg));
+        move || {
+            server::serve_listener(
+                listener,
+                stub::STUB_SEQ_LEN,
+                crate::model::tokenizer::CHARSET,
+                router,
+                server_cfg,
+            )
+        }
+    });
+
+    let report = drive(&addr, method, cfg);
+
+    let shutdown = Client::connect(&addr).and_then(|mut c| c.shutdown());
+    if shutdown.is_err() {
+        router.shutdown();
+    }
+    for h in worker_handles {
+        if h.join().is_err() {
+            anyhow::bail!("stub worker panicked during bench-serve");
+        }
+    }
+    match server.join() {
+        Ok(r) => r?,
+        Err(_) => anyhow::bail!("server thread panicked during bench-serve"),
+    }
+    report
+}
+
 /// Spawn a router + in-process server for one method, run the load against
 /// it, then drain, shut down and join everything.  `factory` builds one
 /// [`Worker`] per worker thread, exactly as `spa-cache serve` does.
@@ -698,17 +885,11 @@ where
     // Bind port 0 ourselves so the address is known before serving starts.
     let listener = TcpListener::bind("127.0.0.1:0").context("bind loadgen port")?;
     let addr = listener.local_addr()?.to_string();
-    // Size the server's connection-handler pool above our own concurrency
-    // cap (+ control/scrape connections): generated connections must never
-    // starve in the accept queue, or joins would hang.
-    let conn_threads = match cfg.mode {
-        ArrivalMode::Open { .. } => cfg.max_inflight + 8,
-        ArrivalMode::Closed { clients } => clients + 8,
-    };
     let server = std::thread::spawn({
         let charset = charset.to_string();
         let router = router.clone();
-        move || server::serve_listener(listener, seq_len, &charset, router, conn_threads)
+        let server_cfg = ServerConfig::with_conn_threads(conn_threads_for(cfg));
+        move || server::serve_listener(listener, seq_len, &charset, router, server_cfg)
     });
 
     let report = drive(&addr, method, cfg);
@@ -746,8 +927,8 @@ pub fn print_reports(reports: &[MethodReport]) {
     let mut t = Table::new(
         "bench-serve: serving under load",
         &[
-            "method", "req", "err", "drop", "qps", "tps", "ttft p50", "p90", "p99",
-            "lat p50", "p90", "p99", "refresh", "ref/step", "partial",
+            "method", "req", "err", "drop", "qps", "tps", "inflight", "ttft p50",
+            "p90", "p99", "lat p50", "p90", "p99", "refresh", "ref/step", "partial",
         ],
     );
     for r in reports {
@@ -760,6 +941,7 @@ pub fn print_reports(reports: &[MethodReport]) {
             r.dropped.to_string(),
             format!("{:.2}", r.achieved_qps),
             format!("{:.2}", r.tps),
+            format!("{:.2}", r.mean_inflight),
             tp50,
             tp90,
             tp99,
@@ -831,6 +1013,7 @@ pub fn report_json(r: &MethodReport) -> Json {
         ("ttft_ms", summary_json(&r.ttft)),
         ("latency_ms", summary_json(&r.latency)),
         ("wall_ms", summary_json(&r.wall)),
+        ("mean_inflight", Json::Num(r.mean_inflight)),
         ("queue_wait_ms_mean", Json::Num(r.queue_wait_ms_mean)),
         ("refreshes", Json::Num(r.refreshes)),
         ("steps", Json::Num(r.steps)),
@@ -866,6 +1049,7 @@ pub fn config_json(
     let (mode, load) = match cfg.mode {
         ArrivalMode::Open { qps } => ("open", Json::Num(qps)),
         ArrivalMode::Closed { clients } => ("closed", Json::Num(clients as f64)),
+        ArrivalMode::Pipelined { depth } => ("pipelined", Json::Num(depth as f64)),
     };
     Json::obj(vec![
         ("mode", Json::str(mode)),
@@ -999,6 +1183,13 @@ mod tests {
         assert_eq!(cfg.gen_len, Some(GenLenDist { lo: 16, hi: 64 }));
         let cfg = LoadGenConfig::from_args(&parse("--clients 4")).unwrap();
         assert_eq!(cfg.mode, ArrivalMode::Closed { clients: 4 });
+        let cfg = LoadGenConfig::from_args(&parse("--pipeline 8")).unwrap();
+        assert_eq!(cfg.mode, ArrivalMode::Pipelined { depth: 8 });
+        // One arrival mode per run; a malformed depth errors like the rest.
+        assert!(LoadGenConfig::from_args(&parse("--pipeline 8 --clients 2")).is_err());
+        assert!(LoadGenConfig::from_args(&parse("--pipeline 8 --qps 5")).is_err());
+        assert!(LoadGenConfig::from_args(&parse("--pipeline 0")).is_err());
+        assert!(LoadGenConfig::from_args(&parse("--pipeline 8x")).is_err());
         // A typo'd flag must error, never measure (and record) the wrong
         // load: the trajectory file is append-only history.
         assert!(LoadGenConfig::from_args(&parse("--qps 0")).is_err());
@@ -1113,6 +1304,8 @@ mod tests {
         // Windowed, not lifetime: (20*6 - 30*2) / (6 - 2) = 15 — the
         // warmup's expensive waits (mean 30) are subtracted back out.
         assert!((r.queue_wait_ms_mean - 15.0).abs() < 1e-9);
+        // Little's law over the measured walls: (0.5 + 1.0 + 0.1) s / 2 s.
+        assert!((r.mean_inflight - 0.8).abs() < 1e-9);
         assert_eq!(r.per_worker_completed, vec![(0, 6.0), (1, 3.0)]);
     }
 
@@ -1136,6 +1329,7 @@ mod tests {
         assert!(methods[0].get("ttft_ms").is_some());
         assert!(methods[0].get("refresh_rate").is_some(), "refresh-rate column recorded");
         assert!(methods[0].get("partial_refreshes").is_some());
+        assert!(methods[0].get("mean_inflight").is_some(), "inflight column recorded");
         // A non-trajectory file at the path must be refused, not clobbered.
         std::fs::write(&path, "not json").unwrap();
         let cfg2 = LoadGenConfig::default();

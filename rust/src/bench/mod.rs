@@ -9,6 +9,7 @@
 
 pub mod loadgen;
 pub mod runner;
+pub mod stub;
 
 use std::time::Instant;
 

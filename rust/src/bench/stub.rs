@@ -1,0 +1,275 @@
+//! Stub engine workers for artifact-free serving tests and smokes.
+//!
+//! A stub worker speaks the full [`Command`] mailbox protocol the real
+//! `scheduler::Worker` does — slot-based FIFO admission, incremental MASK
+//! commits, streamed [`ReqEvent::Tokens`] frames, cooperative cancellation
+//! (slot freed mid-decode), honest [`Metrics`] — with only the device
+//! execution replaced by a fixed per-step delay.  The v2 session tests and
+//! the CI `bench-serve --stub` smoke drive the whole
+//! TCP → router → worker pipeline through these on any checkout: no
+//! artifacts, no PJRT.
+//!
+//! Determinism contract the tests lean on: request `id` picks the decoded
+//! character (`id % 10`), commits land in ascending position order, and
+//! the final `Response::text` equals the concatenation of every streamed
+//! delta.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{ReqEvent, Request, Response};
+use crate::coordinator::router::{Router, WorkerEndpoint, WorkerStatus};
+use crate::coordinator::scheduler::Command;
+use crate::model::tokenizer::MASK;
+
+/// Sequence length stub servers are driven at (matches the toy manifests).
+pub const STUB_SEQ_LEN: usize = 128;
+
+/// Knobs for one stub worker.
+#[derive(Debug, Clone)]
+pub struct StubConfig {
+    /// Batch slots (concurrent residents per worker).
+    pub batch: usize,
+    /// Wall time per decode step.
+    pub step_ms: u64,
+    /// MASK positions committed per resident per step.
+    pub commits_per_step: usize,
+    /// Optional shared admission log of `(request id, slot index)` — the
+    /// session tests assert a cancelled request's freed slot is re-used.
+    pub slot_log: Option<Arc<Mutex<Vec<(u64, usize)>>>>,
+}
+
+impl Default for StubConfig {
+    fn default() -> Self {
+        StubConfig { batch: 4, step_ms: 2, commits_per_step: 4, slot_log: None }
+    }
+}
+
+/// One request resident in a stub slot.
+struct Resident {
+    req: Request,
+    reply: Sender<ReqEvent>,
+    /// MASK positions of the request's row, ascending.
+    masks: Vec<usize>,
+    /// How many of `masks` have been committed so far.
+    committed: usize,
+    steps: usize,
+    ttft_ms: Option<f64>,
+}
+
+impl Resident {
+    fn decode_char(&self) -> char {
+        char::from_digit((self.req.id % 10) as u32, 10).unwrap_or('x')
+    }
+}
+
+/// Spawn one stub worker thread; the endpoint plugs straight into
+/// [`Router::new`].
+pub fn spawn_stub_worker(id: usize, cfg: StubConfig) -> (WorkerEndpoint, JoinHandle<()>) {
+    let (tx, rx) = channel::<Command>();
+    let status = Arc::new(WorkerStatus::default());
+    status.set_free_slots(cfg.batch.max(1));
+    let worker_status = Arc::clone(&status);
+    let handle = std::thread::Builder::new()
+        .name(format!("spa-stub-{id}"))
+        .spawn(move || run_stub(cfg, rx, worker_status))
+        .expect("spawn stub worker");
+    (WorkerEndpoint { id, tx, status }, handle)
+}
+
+/// A router over `workers` stub workers plus their join handles.
+pub fn stub_router(workers: usize, cfg: &StubConfig) -> (Router, Vec<JoinHandle<()>>) {
+    let mut eps = Vec::new();
+    let mut handles = Vec::new();
+    for id in 0..workers.max(1) {
+        let (ep, h) = spawn_stub_worker(id, cfg.clone());
+        eps.push(ep);
+        handles.push(h);
+    }
+    (Router::new(eps), handles)
+}
+
+fn run_stub(cfg: StubConfig, rx: Receiver<Command>, status: Arc<WorkerStatus>) {
+    let batch = cfg.batch.max(1);
+    let step = Duration::from_millis(cfg.step_ms);
+    let mut metrics = Metrics::default();
+    let mut queue: VecDeque<(Request, Sender<ReqEvent>)> = VecDeque::new();
+    let mut slots: Vec<Option<Resident>> = (0..batch).map(|_| None).collect();
+    let mut next_step = Instant::now();
+    let mut cmds: Vec<Command> = Vec::new();
+    loop {
+        let busy = !queue.is_empty() || slots.iter().any(Option::is_some);
+        status.set_queue_depth(queue.len());
+        status.set_free_slots(slots.iter().filter(|s| s.is_none()).count());
+
+        // Gather commands: block when idle, otherwise wait out the step
+        // pacing (commands arriving mid-step are handled before it runs).
+        cmds.clear();
+        if !busy {
+            match rx.recv() {
+                Ok(c) => cmds.push(c),
+                Err(_) => return,
+            }
+        } else {
+            let now = Instant::now();
+            if now < next_step {
+                match rx.recv_timeout(next_step - now) {
+                    Ok(c) => cmds.push(c),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => return,
+                }
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(c) => cmds.push(c),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return,
+            }
+        }
+        for cmd in cmds.drain(..) {
+            match cmd {
+                Command::Submit(req, reply) => {
+                    metrics.requests_submitted += 1;
+                    queue.push_back((req, reply));
+                }
+                Command::Cancel(id) => {
+                    for (req, _) in queue.iter().filter(|(r, _)| r.id == id) {
+                        req.cancel.store(true, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    for r in slots.iter().flatten() {
+                        if r.req.id == id {
+                            r.req
+                                .cancel
+                                .store(true, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                }
+                Command::Stats(reply) => {
+                    let mut m = metrics.clone();
+                    m.queue_depth = queue.len();
+                    m.active_slots = slots.iter().filter(|s| s.is_some()).count();
+                    let _ = reply.send(m);
+                }
+                Command::Shutdown => return,
+            }
+        }
+
+        // Cancellation sweep: queued requests leave without a slot,
+        // resident ones free theirs mid-decode.
+        for (req, reply) in std::mem::take(&mut queue) {
+            if req.is_cancelled() {
+                let _ = reply.send(ReqEvent::Cancelled { id: req.id, decoded: 0 });
+                metrics.cancelled += 1;
+                status.dec_inflight();
+            } else {
+                queue.push_back((req, reply));
+            }
+        }
+        for slot in slots.iter_mut() {
+            let hit = slot.as_ref().map(|r| r.req.is_cancelled()).unwrap_or(false);
+            if hit {
+                let r = slot.take().expect("cancelled resident present");
+                let _ = r
+                    .reply
+                    .send(ReqEvent::Cancelled { id: r.req.id, decoded: r.committed });
+                metrics.cancelled += 1;
+                status.dec_inflight();
+            }
+        }
+
+        // FIFO admission into free slots; each admission batch costs one
+        // simulated refresh (the counter the loadgen tests difference).
+        let mut admitted = false;
+        for (si, slot) in slots.iter_mut().enumerate() {
+            if slot.is_some() {
+                continue;
+            }
+            let Some((req, reply)) = queue.pop_front() else { break };
+            if let Some(log) = &cfg.slot_log {
+                log.lock().unwrap().push((req.id, si));
+            }
+            metrics
+                .record_queue_wait(req.submitted.elapsed().as_secs_f64() * 1e3);
+            let masks: Vec<usize> = req
+                .tokens
+                .iter()
+                .enumerate()
+                .filter(|(_, &t)| t == MASK)
+                .map(|(i, _)| i)
+                .collect();
+            *slot = Some(Resident {
+                req,
+                reply,
+                masks,
+                committed: 0,
+                steps: 0,
+                ttft_ms: None,
+            });
+            admitted = true;
+        }
+        if admitted {
+            metrics.refreshes += 1;
+        }
+
+        // One paced group step over the resident slots.
+        let due = Instant::now() >= next_step;
+        if !due || !slots.iter().any(Option::is_some) {
+            continue;
+        }
+        metrics.steps += 1;
+        for slot in slots.iter_mut() {
+            let done = {
+                let Some(r) = slot.as_mut() else { continue };
+                r.steps += 1;
+                let ncommit =
+                    cfg.commits_per_step.max(1).min(r.masks.len() - r.committed);
+                let from = r.committed;
+                r.committed += ncommit;
+                let positions = r.masks[from..r.committed].to_vec();
+                if r.ttft_ms.is_none() && !positions.is_empty() {
+                    r.ttft_ms =
+                        Some(r.req.submitted.elapsed().as_secs_f64() * 1e3);
+                }
+                if r.req.params.stream && !positions.is_empty() {
+                    let delta = r.decode_char().to_string().repeat(positions.len());
+                    let _ = r.reply.send(ReqEvent::Tokens {
+                        id: r.req.id,
+                        delta,
+                        positions,
+                    });
+                    metrics.stream_frames += 1;
+                }
+                let cap = r.req.params.max_steps.unwrap_or(usize::MAX);
+                r.committed >= r.masks.len() || r.steps >= cap
+            };
+            if done {
+                let r = slot.take().expect("finished resident present");
+                let latency_ms = r.req.submitted.elapsed().as_secs_f64() * 1e3;
+                let ttft = r.ttft_ms.unwrap_or(f64::NAN);
+                metrics.record_completion(ttft, latency_ms, r.committed);
+                let text = r.decode_char().to_string().repeat(r.committed);
+                let mut tokens = r.req.tokens.clone();
+                for &p in &r.masks[..r.committed] {
+                    tokens[p] = 0;
+                }
+                let _ = r.reply.send(ReqEvent::Done(Response {
+                    id: r.req.id,
+                    text,
+                    tokens,
+                    prompt_len: r.req.prompt_len,
+                    decoded: r.committed,
+                    steps: r.steps,
+                    ttft_ms: ttft,
+                    latency_ms,
+                }));
+                status.dec_inflight();
+            }
+        }
+        next_step = Instant::now() + step;
+    }
+}

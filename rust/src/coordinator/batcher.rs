@@ -73,6 +73,36 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// Set the cancellation flag on a queued request (`Command::Cancel`);
+    /// the worker's sweep then removes and acknowledges it.  Returns
+    /// whether a queued request with this id was found.
+    pub fn cancel(&self, id: u64) -> bool {
+        match self.queue.iter().find(|r| r.id == id) {
+            Some(r) => {
+                r.cancel.store(true, std::sync::atomic::Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Remove every queued request whose cancellation flag is set, in
+    /// queue order — cancelled requests must never reach a batch slot.
+    pub fn remove_cancelled(&mut self) -> Vec<Request> {
+        if !self.queue.iter().any(|r| r.is_cancelled()) {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for r in std::mem::take(&mut self.queue) {
+            if r.is_cancelled() {
+                out.push(r);
+            } else {
+                self.queue.push_back(r);
+            }
+        }
+        out
+    }
+
     /// Decide whether to admit now, given the number of free slots.
     /// Returns the requests to place (at most `free_slots`).
     pub fn admit(&mut self, free_slots: usize, now: Instant) -> Vec<Request> {
@@ -109,8 +139,27 @@ mod tests {
             prompt_len: 2,
             answer: None,
             task: None,
+            params: crate::coordinator::request::GenParams::default(),
+            cancel: std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false)),
             submitted: Instant::now() - Duration::from_millis(age_ms),
         }
+    }
+
+    #[test]
+    fn cancel_removes_from_queue_without_disturbing_order() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        for i in 0..4 {
+            b.submit(req(i, 0));
+        }
+        assert!(b.cancel(2), "queued request found");
+        assert!(!b.cancel(99), "unknown id is a no-op");
+        let removed = b.remove_cancelled();
+        assert_eq!(removed.len(), 1);
+        assert_eq!(removed[0].id, 2);
+        assert_eq!(b.queue_len(), 3);
+        let admitted = b.admit(4, Instant::now() + Duration::from_secs(1));
+        let ids: Vec<u64> = admitted.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 3], "FIFO order survives removal");
     }
 
     #[test]

@@ -69,6 +69,9 @@ impl Sampler {
                 ),
                 _ => (0, seq_len),
             };
+            // Per-request threshold override (protocol v2 generation
+            // params); the mode's threshold is the group default.
+            let slot_thr = slot.threshold;
             // Gather masked positions with (confidence, pick).
             let mut best: Option<(f64, usize, i32)> = None;
             let mut commits: Vec<(usize, i32)> = Vec::new();
@@ -86,7 +89,7 @@ impl Sampler {
                     }
                     UnmaskMode::Parallel { threshold }
                     | UnmaskMode::BlockParallel { threshold } => {
-                        if conf > threshold {
+                        if conf > slot_thr.unwrap_or(threshold) {
                             commits.push((n, pick));
                         } else if best.map(|(c, _, _)| conf > c).unwrap_or(true) {
                             best = Some((conf, n, pick));
@@ -268,6 +271,28 @@ mod tests {
         assert_eq!(tokens[4], MASK);
         // block advanced
         assert_eq!(slots[0].block_start, 4);
+    }
+
+    #[test]
+    fn per_slot_threshold_overrides_group_default() {
+        let (b, n, v) = (1, 6, 8);
+        let mut logits = mk_logits(b, n, v);
+        for pos in 0..n {
+            logits[pos * v + 4] = 10.0; // near-1.0 confidence everywhere
+        }
+        // Group threshold 1.5 is unreachable: only the forced best commits.
+        let mut tokens = vec![MASK; n];
+        let mut slots = vec![slot(0, n, usize::MAX)];
+        let mut s = Sampler::greedy(UnmaskMode::Parallel { threshold: 1.5 });
+        let d = s.unmask(&mut tokens, &logits, b, n, v, &mut slots);
+        assert_eq!(d[0].len(), 1, "unreachable group threshold forces progress");
+        // Same logits with a per-request override: everything commits.
+        let mut tokens = vec![MASK; n];
+        let mut slots = vec![slot(0, n, usize::MAX)];
+        slots[0].threshold = Some(0.5);
+        let mut s = Sampler::greedy(UnmaskMode::Parallel { threshold: 1.5 });
+        let d = s.unmask(&mut tokens, &logits, b, n, v, &mut slots);
+        assert_eq!(d[0].len(), n, "per-slot threshold overrides the group's");
     }
 
     #[test]

@@ -57,20 +57,25 @@ pub fn masks_in_row(tokens: &[i32], seq_len: usize, bi: usize) -> usize {
 /// through the sampler's unmasking policy; in-graph token updates
 /// (multistep) are diff-committed so per-slot progress/locality state stays
 /// accurate.  Shared by [`run_group`] and the serving worker.
+///
+/// Returns the per-slot positions committed *this step* (ascending within
+/// each slot) — the serving worker's per-step commit hook: streamed
+/// `tokens` frames and true first-token TTFT both key off it.
 pub fn apply_step_out(
     out: StepOut,
     tokens: &mut Vec<i32>,
     slots: &mut [SlotState],
     sampler: &mut Sampler,
     geometry: (usize, usize, usize),
-) -> Result<()> {
+) -> Result<Vec<Vec<usize>>> {
     let (b, n, v) = geometry;
-    match out {
+    let committed = match out {
         StepOut { logits: Some(logits), .. } => {
-            sampler.unmask(tokens, &logits, b, n, v, slots);
+            sampler.unmask(tokens, &logits, b, n, v, slots)
         }
         StepOut { new_tokens: Some(nt), .. } => {
             // In-graph decoding: infer per-slot commits from the diff.
+            let mut committed = vec![Vec::new(); b];
             for bi in 0..b {
                 if !slots[bi].occupied {
                     continue;
@@ -82,14 +87,16 @@ pub fn apply_step_out(
                     }
                 }
                 slots[bi].decoded_since_refresh.extend(dec.iter().copied());
-                slots[bi].last_decoded = dec;
+                slots[bi].last_decoded = dec.clone();
                 slots[bi].steps += 1;
+                committed[bi] = dec;
             }
             *tokens = nt;
+            committed
         }
         _ => anyhow::bail!("step produced neither logits nor tokens"),
-    }
-    Ok(())
+    };
+    Ok(committed)
 }
 
 /// Decode a whole group to completion.
@@ -165,6 +172,8 @@ pub fn pack_group(
                 prompt_len: s.prompt_len,
                 answer: Some(s.answer.clone()),
                 task: Some(s.task),
+                params: super::request::GenParams::default(),
+                cancel: std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false)),
                 submitted: Instant::now(),
             };
             slots.push(SlotState::assign(&req, block_len));

@@ -7,6 +7,10 @@
 //! `{worker="<id>"}`.  TTFT and latency are measured from
 //! `Request::submitted`, so time spent in the batcher queue is included —
 //! `queue_wait` isolates that component for the router's dispatch policy.
+//! TTFT is *true first-token* time: the first step that actually committed
+//! a MASK position for the request (what a streaming client observes as
+//! its first `tokens` frame), not merely the first step that produced
+//! logits while the request was resident.
 
 use std::time::Instant;
 
@@ -30,6 +34,11 @@ pub struct Metrics {
     pub requests_submitted: u64,
     /// Requests fully decoded and replied to.
     pub requests_completed: u64,
+    /// Requests cancelled (client `cancel` op or disconnect) — queued or
+    /// mid-decode; a cancelled request never counts as completed.
+    pub cancelled: u64,
+    /// Streamed `tokens` frames emitted to v2 sessions.
+    pub stream_frames: u64,
     /// MASK positions committed across all completed and in-flight slots.
     pub tokens_decoded: u64,
     /// Engine decode steps executed.
@@ -65,6 +74,8 @@ impl Default for Metrics {
             started: Instant::now(),
             requests_submitted: 0,
             requests_completed: 0,
+            cancelled: 0,
+            stream_frames: 0,
             tokens_decoded: 0,
             steps: 0,
             refreshes: 0,
@@ -136,6 +147,8 @@ impl Metrics {
         }
         self.requests_submitted += other.requests_submitted;
         self.requests_completed += other.requests_completed;
+        self.cancelled += other.cancelled;
+        self.stream_frames += other.stream_frames;
         self.tokens_decoded += other.tokens_decoded;
         self.steps += other.steps;
         self.refreshes += other.refreshes;
@@ -156,6 +169,8 @@ impl Metrics {
         vec![
             ("spa_requests_submitted", self.requests_submitted as f64),
             ("spa_requests_completed", self.requests_completed as f64),
+            ("spa_cancelled_total", self.cancelled as f64),
+            ("spa_stream_frames_total", self.stream_frames as f64),
             ("spa_tokens_decoded", self.tokens_decoded as f64),
             ("spa_steps_total", self.steps as f64),
             ("spa_refreshes_total", self.refreshes as f64),
@@ -260,6 +275,8 @@ mod tests {
         assert!(text.contains("spa_latency_ms_p50"));
         assert!(text.contains("spa_partial_refreshes_total 0"));
         assert!(text.contains("spa_rows_invalidated_total 0"));
+        assert!(text.contains("spa_cancelled_total 0"));
+        assert!(text.contains("spa_stream_frames_total 0"));
     }
 
     #[test]
@@ -277,12 +294,18 @@ mod tests {
         a.queue_depth = 2;
         a.partial_refreshes = 2;
         a.rows_invalidated = 3;
+        a.cancelled = 1;
+        a.stream_frames = 5;
         let mut b = Metrics::default();
         b.record_completion(30.0, 300.0, 4);
         b.record_completion(50.0, 500.0, 4);
         b.active_slots = 3;
         b.partial_refreshes = 1;
+        b.cancelled = 2;
+        b.stream_frames = 7;
         a.merge(&b);
+        assert_eq!(a.cancelled, 3);
+        assert_eq!(a.stream_frames, 12);
         assert_eq!(a.partial_refreshes, 3);
         assert_eq!(a.rows_invalidated, 3);
         assert_eq!(a.requests_completed, 3);

@@ -1,8 +1,32 @@
 //! Request/response types of the serving API.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::model::tasks::Task;
+
+/// Per-request generation parameters (serving protocol v2).  Every field is
+/// an *override*: `None` falls back to the task default / worker default,
+/// so a bare v1 request behaves exactly as before.  Validated server-side
+/// before a `Request` is built — a bad value is a protocol error, never a
+/// silently clamped decode.
+#[derive(Debug, Clone, Default)]
+pub struct GenParams {
+    /// Semi-AR block length (Fast-dLLM); `None` → task default.
+    pub block_len: Option<usize>,
+    /// Early-stop confidence threshold for parallel unmasking: positions
+    /// at or above it commit together.  `None` → the worker sampler's
+    /// group-wide threshold.
+    pub threshold: Option<f64>,
+    /// Per-request decode-step cap (the request completes with MASKs
+    /// remaining once hit).  `None` → the worker's global cap; a supplied
+    /// value is additionally bounded by that cap.
+    pub max_steps: Option<usize>,
+    /// Stream incremental `ReqEvent::Tokens` commits to the event sink as
+    /// the worker unmasks positions (protocol v2 `"stream":true`).
+    pub stream: bool,
+}
 
 /// A generation request entering the router.
 #[derive(Debug, Clone)]
@@ -17,9 +41,55 @@ pub struct Request {
     pub answer: Option<String>,
     /// Task the prompt was drawn from, when known (sets block length).
     pub task: Option<Task>,
+    /// Per-request generation overrides (protocol v2).
+    pub params: GenParams,
+    /// Cooperative cancellation flag, shared with the submitting session
+    /// (clones share the flag).  The worker checks it between decode steps:
+    /// a cancelled request's batch slot is freed mid-decode and the sink
+    /// receives [`ReqEvent::Cancelled`] instead of a completion.
+    pub cancel: Arc<AtomicBool>,
     /// When the request entered the system; TTFT/latency are measured
     /// from here, so queueing delay is included.
     pub submitted: Instant,
+}
+
+impl Request {
+    /// True once the owner has asked for this request to be abandoned.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+}
+
+/// What a request's owner observes while it is in flight: zero or more
+/// streamed token commits, then exactly one terminal event (`Done` or
+/// `Cancelled`).  The worker sends these over the per-request event channel
+/// registered at [`Router::submit`](super::router::Router::submit).
+#[derive(Debug, Clone)]
+pub enum ReqEvent {
+    /// Newly committed text, sent only when [`GenParams::stream`] is set.
+    /// Diffusion decoding commits positions out of order, so the delta
+    /// carries the absolute sequence positions alongside the text (both in
+    /// ascending position order) — concatenating deltas of a
+    /// left-to-right decode reconstructs the text; a client that cares
+    /// about exact placement uses `positions`.
+    Tokens {
+        /// Echo of [`Request::id`].
+        id: u64,
+        /// Decoded text of the newly committed positions.
+        delta: String,
+        /// Absolute sequence positions committed this step (ascending).
+        positions: Vec<usize>,
+    },
+    /// The request finished decoding.
+    Done(Response),
+    /// The request was cancelled (client `cancel` op or disconnect); its
+    /// batch slot — if it held one — has been freed for re-admission.
+    Cancelled {
+        /// Echo of [`Request::id`].
+        id: u64,
+        /// Tokens that had been committed before cancellation.
+        decoded: usize,
+    },
 }
 
 /// A finished generation.
@@ -58,6 +128,9 @@ pub struct SlotState {
     pub block_start: usize,
     /// Semi-AR block length (`usize::MAX` disables blocking).
     pub block_len: usize,
+    /// Per-request unmask-threshold override ([`GenParams::threshold`]);
+    /// `None` → the sampler's group-wide threshold.
+    pub threshold: Option<f64>,
     /// Positions decoded on the most recent step (locality heuristics).
     pub last_decoded: Vec<usize>,
     /// All positions decoded since the last full refresh.
@@ -95,6 +168,7 @@ impl SlotState {
             gen_end: 0,
             block_start: 0,
             block_len: usize::MAX,
+            threshold: None,
             last_decoded: Vec::new(),
             decoded_since_refresh: Vec::new(),
             steps: 0,
@@ -118,6 +192,7 @@ impl SlotState {
             gen_end: req.tokens.len(),
             block_start: req.prompt_len,
             block_len,
+            threshold: req.params.threshold,
             last_decoded: Vec::new(),
             decoded_since_refresh: Vec::new(),
             steps: 0,

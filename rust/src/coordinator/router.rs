@@ -26,7 +26,7 @@ use anyhow::Result;
 use crate::info;
 
 use super::metrics::Metrics;
-use super::request::{Request, Response};
+use super::request::{ReqEvent, Request};
 use super::scheduler::{Command, Worker};
 
 /// Shared load gauges for one worker: the router increments `inflight` at
@@ -228,11 +228,11 @@ impl Router {
         self.workers.iter().map(|w| w.status.load()).collect()
     }
 
-    /// Dispatch a request to the least-loaded worker; the response arrives
-    /// on `reply`.  Returns the chosen worker id, or `None` if every worker
-    /// channel is closed (the dropped `reply` sender then surfaces as a
-    /// recv error at the caller).
-    pub fn submit(&self, req: Request, reply: Sender<Response>) -> Option<usize> {
+    /// Dispatch a request to the least-loaded worker; progress and the
+    /// terminal event arrive on `reply` ([`ReqEvent`]).  Returns the chosen
+    /// worker id, or `None` if every worker channel is closed (the dropped
+    /// `reply` sender then surfaces as a recv error at the caller).
+    pub fn submit(&self, req: Request, reply: Sender<ReqEvent>) -> Option<usize> {
         let mut cursor = self.cursor.lock().unwrap();
         let start = *cursor;
         *cursor = cursor.wrapping_add(1);
@@ -258,6 +258,19 @@ impl Router {
             }
         }
         None
+    }
+
+    /// Cancel a request by server id: fan `Command::Cancel` out to every
+    /// worker — ids are unique across the server, so only the owner acts
+    /// (cheaper than tracking an id → worker map in the router, and
+    /// race-free: a worker's mailbox is FIFO, so a `Cancel` can never
+    /// overtake the `Submit` it refers to).  Callers that hold a clone of
+    /// the request's cancel flag may set it as well; the command is what
+    /// guarantees the owning worker sweeps promptly even when idle.
+    pub fn cancel(&self, request_id: u64) {
+        for ep in &self.workers {
+            let _ = ep.tx.send(Command::Cancel(request_id));
+        }
     }
 
     /// Fan `stats` out to every worker and render the merged Prometheus
@@ -358,6 +371,8 @@ mod tests {
             prompt_len: 1,
             answer: None,
             task: None,
+            params: crate::coordinator::request::GenParams::default(),
+            cancel: Arc::new(std::sync::atomic::AtomicBool::new(false)),
             submitted: Instant::now(),
         }
     }
@@ -437,6 +452,18 @@ mod tests {
         drop(router);
         for t in threads {
             t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn cancel_fans_out_to_every_worker() {
+        let (router, rxs) = bare_router(3);
+        router.cancel(42);
+        for rx in &rxs {
+            match rx.try_recv().expect("every worker sees the cancel") {
+                Command::Cancel(id) => assert_eq!(id, 42),
+                _ => panic!("expected Command::Cancel"),
+            }
         }
     }
 

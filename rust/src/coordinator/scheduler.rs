@@ -4,10 +4,13 @@
 //! single-threaded over them (PJRT handles intra-op parallelism; PJRT
 //! handles are `!Send`, so each worker constructs its engine on its own
 //! thread — see `router::Router::spawn`).  Requests arrive over an mpsc
-//! channel, responses leave through per-request reply channels.  Slot
-//! lifecycle:
+//! channel; progress leaves through per-request event channels
+//! ([`ReqEvent`]): zero or more streamed token commits, then exactly one
+//! terminal `Done` or `Cancelled`.  Slot lifecycle:
 //!
-//!   queue → `[admit]` → slot (marked cache-dirty) → steps → done → response
+//!   queue → `[admit]` → slot (marked cache-dirty) → steps → done → event
+//!                 │                  │
+//!              cancel            cancel (slot freed mid-decode)
 //!
 //! Admission dirties **only the incoming slot rows**: cache policies with
 //! an index substrate (`cache::SpaPolicy`, `cache::ManualPolicy`) service
@@ -19,9 +22,19 @@
 //! refresh cost remains local to one group — the router (`router.rs`)
 //! decides which group pays it.
 //!
+//! **Cancellation** is cooperative: `Command::Cancel` (or the shared
+//! per-request flag, set directly by the session layer) marks the request,
+//! and the worker's sweep — run between decode steps — removes it from the
+//! queue or frees its batch slot.  A freed slot PADs its token row and is
+//! immediately re-admittable; the next admission into it runs through the
+//! same per-slot dirty machinery as any other, so cancellation needs no
+//! extra cache bookkeeping.
+//!
 //! TTFT and latency are measured from `Request::submitted`, so batcher
 //! queueing delay is part of both (the component the router's JSQ policy is
-//! meant to shrink).
+//! meant to shrink).  TTFT is *true first-token* time — the first step
+//! that committed a MASK position for the request, which for a streaming
+//! session is exactly when the first `tokens` frame is emitted.
 
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::Arc;
@@ -39,14 +52,18 @@ use super::cache::{Method, StepOut};
 use super::decode::{slot_done, Sampler};
 use super::group::{apply_step_out, masks_in_row};
 use super::metrics::Metrics;
-use super::request::{Request, Response, SlotState};
+use super::request::{ReqEvent, Request, Response, SlotState};
 use super::router::WorkerStatus;
 
 /// A worker's mailbox protocol — everything the router can ask of it.
 pub enum Command {
-    /// Enqueue a request; the response is sent on the paired channel when
-    /// the request finishes decoding.
-    Submit(Request, Sender<Response>),
+    /// Enqueue a request; progress and the terminal event are sent on the
+    /// paired channel ([`ReqEvent`]).
+    Submit(Request, Sender<ReqEvent>),
+    /// Cancel the request with this server id, wherever it is (batcher
+    /// queue or resident batch slot).  Unknown ids are ignored — the
+    /// router fans cancels out to every worker and only the owner acts.
+    Cancel(u64),
     /// Reply with a metrics snapshot (the router merges snapshots and
     /// renders the Prometheus text with per-worker labels).
     Stats(Sender<Metrics>),
@@ -55,7 +72,8 @@ pub enum Command {
 }
 
 /// One decode group's worth of serving state: engine, cache method, batcher
-/// queue, resident slots and reply channels.  `run` is the worker loop.
+/// queue, resident slots and per-request event channels.  `run` is the
+/// worker loop.
 pub struct Worker {
     /// Worker index, used as the Prometheus `{worker="<id>"}` label.
     pub id: usize,
@@ -66,10 +84,10 @@ pub struct Worker {
     tokenizer: Tokenizer,
     tokens: Vec<i32>,
     slots: Vec<SlotState>,
-    replies: Vec<Option<Sender<Response>>>,
+    replies: Vec<Option<Sender<ReqEvent>>>,
     requests: Vec<Option<Request>>,
-    /// Reply channels for requests still in the batcher queue, by id.
-    pending: Vec<(u64, Sender<Response>)>,
+    /// Event channels for requests still in the batcher queue, by id.
+    pending: Vec<(u64, Sender<ReqEvent>)>,
     /// Serving counters/gauges/digests for this worker (see `metrics.rs`).
     pub metrics: Metrics,
     /// Shared load gauges read by the router's dispatch policy.
@@ -156,6 +174,23 @@ impl Worker {
                             break; // re-evaluate busyness with the new work
                         }
                     }
+                    Some(Command::Cancel(id)) => {
+                        // Flag wherever the request lives; the sweep below
+                        // removes it before the next decode step.
+                        if !self.batcher.cancel(id) {
+                            for r in self.requests.iter().flatten() {
+                                if r.id == id {
+                                    r.cancel.store(
+                                        true,
+                                        std::sync::atomic::Ordering::Relaxed,
+                                    );
+                                }
+                            }
+                        }
+                        if !busy {
+                            break; // run the sweep promptly even when idle
+                        }
+                    }
                     Some(Command::Stats(reply)) => {
                         let _ = reply.send(self.snapshot());
                     }
@@ -163,6 +198,7 @@ impl Worker {
                     None => break,
                 }
             }
+            self.sweep_cancelled();
             self.admit_waiting();
             if self.slots.iter().any(|s| s.occupied) {
                 self.step()?;
@@ -194,6 +230,58 @@ impl Worker {
             .set_free_slots(self.slots.iter().filter(|s| !s.occupied).count());
     }
 
+    /// Acknowledge and drop every cancelled request: queued ones leave the
+    /// batcher without ever touching a slot; resident ones free their slot
+    /// mid-decode (PAD row, `SlotState::empty`), exactly like a completion
+    /// minus the response — the next admission into the freed slot runs
+    /// through the usual per-slot dirty machinery.
+    fn sweep_cancelled(&mut self) {
+        for req in self.batcher.remove_cancelled() {
+            if let Some(pos) = self.pending.iter().position(|(id, _)| *id == req.id) {
+                let (_, ch) = self.pending.remove(pos);
+                let _ = ch.send(ReqEvent::Cancelled { id: req.id, decoded: 0 });
+            }
+            self.metrics.cancelled += 1;
+            self.status.dec_inflight();
+            debug!("sched", "worker {} cancelled queued request {}", self.id, req.id);
+        }
+        let (_, n, _) = self.method.geometry();
+        for bi in 0..self.slots.len() {
+            let cancelled = self.slots[bi].occupied
+                && self.requests[bi].as_ref().map(|r| r.is_cancelled()).unwrap_or(false);
+            if !cancelled {
+                continue;
+            }
+            let slot = std::mem::replace(&mut self.slots[bi], SlotState::empty());
+            let req = self.requests[bi].take();
+            let decoded = req
+                .as_ref()
+                .map(|r| {
+                    r.tokens
+                        .iter()
+                        .filter(|&&t| t == MASK)
+                        .count()
+                        .saturating_sub(masks_in_row(&self.tokens, n, bi))
+                })
+                .unwrap_or(0);
+            if let Some(ch) = self.replies[bi].take() {
+                let _ = ch.send(ReqEvent::Cancelled { id: slot.request_id, decoded });
+            }
+            self.metrics.cancelled += 1;
+            self.status.dec_inflight();
+            for t in &mut self.tokens[bi * n..(bi + 1) * n] {
+                *t = PAD;
+            }
+            info!(
+                "sched",
+                "worker {} slot {bi} cancelled after {} steps ({} committed)",
+                self.id,
+                slot.steps,
+                decoded
+            );
+        }
+    }
+
     fn admit_waiting(&mut self) {
         let free: Vec<usize> =
             (0..self.slots.len()).filter(|&i| !self.slots[i].occupied).collect();
@@ -212,8 +300,12 @@ impl Worker {
             let len = req.tokens.len().min(n);
             row[..len].copy_from_slice(&req.tokens[..len]);
             self.tokens[slot_i * n..(slot_i + 1) * n].copy_from_slice(&row);
-            let block =
-                req.task.map(|t| t.block_len()).unwrap_or(self.default_block_len);
+            // Per-request override first, then the task default.
+            let block = req
+                .params
+                .block_len
+                .or_else(|| req.task.map(|t| t.block_len()))
+                .unwrap_or(self.default_block_len);
             self.metrics
                 .record_queue_wait(now.duration_since(req.submitted).as_secs_f64() * 1e3);
             self.slots[slot_i] = SlotState::assign(&req, block);
@@ -242,27 +334,70 @@ impl Worker {
         self.metrics.rows_invalidated = self.method.state.rows_invalidated;
     }
 
+    /// The effective step cap for the request in slot `bi`: the
+    /// per-request `max_steps` override, bounded by the worker's global
+    /// cap (a client must not be able to pin a slot forever).
+    fn step_cap(&self, bi: usize) -> usize {
+        self.requests[bi]
+            .as_ref()
+            .and_then(|r| r.params.max_steps)
+            .map(|m| m.min(self.max_steps_per_request))
+            .unwrap_or(self.max_steps_per_request)
+    }
+
     fn step(&mut self) -> Result<()> {
         let (b, n, v) = self.method.geometry();
         let out: StepOut =
             self.method.step(&self.engine, &self.tokens, &mut self.slots)?;
         self.mirror_cache_counters();
-        apply_step_out(out, &mut self.tokens, &mut self.slots, &mut self.sampler, (b, n, v))?;
-        // First logits since admission: TTFT, measured from submission so
-        // batcher queueing is included.
+        let committed = apply_step_out(
+            out,
+            &mut self.tokens,
+            &mut self.slots,
+            &mut self.sampler,
+            (b, n, v),
+        )?;
+        // Per-step commit hook: true first-token TTFT (the first step that
+        // actually committed a MASK position, measured from submission so
+        // batcher queueing is included) and streamed `tokens` frames.
         let now = Instant::now();
-        for s in self.slots.iter_mut().filter(|s| s.occupied) {
-            if s.ttft_ms.is_none() {
-                let base = s.submitted.or(s.started);
-                s.ttft_ms =
+        for bi in 0..b {
+            if !self.slots[bi].occupied || committed[bi].is_empty() {
+                continue;
+            }
+            if self.slots[bi].ttft_ms.is_none() {
+                let base = self.slots[bi].submitted.or(self.slots[bi].started);
+                self.slots[bi].ttft_ms =
                     base.map(|t| now.duration_since(t).as_secs_f64() * 1e3);
+            }
+            let stream = self.requests[bi]
+                .as_ref()
+                .map(|r| r.params.stream)
+                .unwrap_or(false);
+            if stream {
+                if let Some(ch) = &self.replies[bi] {
+                    let delta: String = self
+                        .tokenizer
+                        .decode(
+                            &committed[bi]
+                                .iter()
+                                .map(|&p| self.tokens[bi * n + p])
+                                .collect::<Vec<i32>>(),
+                        );
+                    let _ = ch.send(ReqEvent::Tokens {
+                        id: self.slots[bi].request_id,
+                        delta,
+                        positions: committed[bi].clone(),
+                    });
+                    self.metrics.stream_frames += 1;
+                }
             }
         }
         // Completion scan.
         for bi in 0..b {
             let done = self.slots[bi].occupied
                 && (slot_done(&self.tokens, n, bi, &self.slots[bi])
-                    || self.slots[bi].steps >= self.max_steps_per_request);
+                    || self.slots[bi].steps >= self.step_cap(bi));
             if !done {
                 continue;
             }
@@ -299,7 +434,7 @@ impl Worker {
                 latency_ms,
             };
             if let Some(ch) = self.replies[bi].take() {
-                let _ = ch.send(resp);
+                let _ = ch.send(ReqEvent::Done(resp));
             }
             self.status.dec_inflight();
             for t in &mut self.tokens[bi * n..(bi + 1) * n] {

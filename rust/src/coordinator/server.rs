@@ -3,7 +3,9 @@
 //! `util::threadpool` substrate, generation by the engine worker threads
 //! behind the request router).
 //!
-//! Protocol (one JSON object per line):
+//! # Protocol v1 (bare lines, the default)
+//!
+//! One JSON object per line, one blocking reply per request:
 //!   → {"op":"generate","id":1,"task":"gsm8k_s","prompt":"...","gen_len":64}
 //!   ← {"id":1,"text":"8","steps":12,"ttft_ms":41.2,"latency_ms":180.3,
 //!      "worker":0}
@@ -14,21 +16,55 @@
 //!                         timeout) — load-generator end-of-run barrier
 //!   → {"op":"shutdown"} ← {"ok":true}, then the server exits
 //!
-//! Every failure is a single-line `{"error": "..."}` reply on the same
-//! connection; the stream stays usable.  For example:
-//!   → {"op":"generate","prompt":"ÜNSUPPORTED"}
-//!   ← {"error":"unknown char 'Ü'"}
+//! A missing `"op"` key defaults to `generate`; any *unknown* op is an
+//! error (`{"error":"unknown op ..."}`) — a typo'd `"stat"` must never
+//! silently decode an empty prompt.
 //!
-//! All replies — errors included — are built with `util::json::Json`, so
-//! arbitrary error text (quotes, backslashes, control characters) is always
-//! escaped into valid JSON.
+//! # Protocol v2 (multiplexed sessions)
+//!
+//! Negotiated per connection with `{"op":"hello","proto":2}` →
+//! `{"ok":true,"proto":2}`.  After that the connection is a *session*:
+//! many `generate` ops may be in flight concurrently, each keyed by a
+//! client-chosen integer `id`, and replies come back as **event frames**,
+//! out of order, as each request progresses:
+//!
+//!   → {"op":"generate","id":7,"prompt":"...","gen_len":32,"stream":true,
+//!      "block_len":16,"threshold":0.9,"max_steps":256}
+//!   ← {"event":"tokens","id":7,"text_delta":"4","positions":[12],
+//!      "done":false}                      (zero or more, opt-in "stream")
+//!   ← {"event":"done","id":7,"text":"42","steps":9,"decoded":32,
+//!      "ttft_ms":18.0,"latency_ms":95.1,"worker":1,"done":true}
+//!   → {"op":"cancel","id":7}
+//!   ← {"event":"cancelled","id":7,"decoded":5,"done":true}
+//!   ← {"event":"error","id":7,"error":"...","done":true}
+//!
+//! Every frame for a request carries its `id`; terminal frames (`done`,
+//! `cancelled`, `error`) carry `"done":true` and end that id's stream.
+//! `cancel` is acknowledged *by the terminal frame*: `cancelled` normally,
+//! or `done` if completion won the race.  Cancelling frees the request's
+//! batch slot mid-decode; the slot is immediately re-admittable (the next
+//! admission runs through the per-slot cache-dirty machinery as usual).
+//! Disconnecting a session cancels everything it still has in flight, and
+//! at most [`ServerConfig::max_inflight_per_conn`] generates may be in
+//! flight per session (ops beyond it get an `error` frame).
+//! `gen_len`, `block_len`, `threshold` (early-stop confidence in (0, 1])
+//! and `max_steps` are validated server-side; a bad value is a per-request
+//! `error` frame, never a silently clamped decode.  Client ids round-trip
+//! as lossless i64 (`util::json::Json::Int`) — ids above 2^53 survive.
+//!
+//! Request lines are bounded ([`ServerConfig::max_line`]); an overlong
+//! line is discarded and answered with an error, and the stream stays
+//! usable.  Every failure is a single-line `{"error": "..."}` reply (or an
+//! `error` frame when the request id is known).  All replies are built
+//! with `util::json::Json`, so arbitrary error text (quotes, backslashes,
+//! control characters) is always escaped into valid JSON.
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-
-use std::sync::mpsc::channel;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -39,18 +75,39 @@ use crate::model::tokenizer::{Tokenizer, BOS, MASK, PAD};
 use crate::util::json::{parse, Json};
 use crate::util::threadpool::ThreadPool;
 
-use super::request::Request;
+use super::request::{GenParams, ReqEvent, Request};
 use super::router::Router;
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
-/// Build a Request from a (task, prompt, gen_len) triple.
+/// The multiplexed-session protocol version this server speaks.
+pub const PROTO_V2: i64 = 2;
+
+/// Lock that shrugs off poisoning: a panicking forwarder must not wedge
+/// every other request on the connection.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Write one frame line to a shared connection writer (frames from
+/// concurrent forwarders interleave at line granularity, never within one).
+fn send_line(w: &Mutex<TcpStream>, line: &str) -> io::Result<()> {
+    let mut g = lock(w);
+    writeln!(g, "{line}")
+}
+
+/// Build a Request from a (task, prompt, gen_len) triple plus per-request
+/// generation params.
 pub fn build_request(
     tok: &Tokenizer,
     seq_len: usize,
     task: Option<Task>,
     prompt: &str,
     gen_len: usize,
+    params: GenParams,
 ) -> Result<Request> {
     let mut ids = vec![BOS];
     ids.extend(tok.encode(prompt)?);
@@ -68,6 +125,8 @@ pub fn build_request(
         prompt_len,
         answer: None,
         task,
+        params,
+        cancel: Arc::new(AtomicBool::new(false)),
         submitted: Instant::now(),
     })
 }
@@ -77,24 +136,77 @@ pub fn error_reply(msg: &str) -> String {
     Json::obj(vec![("error", Json::str(msg))]).to_string()
 }
 
+/// A number that must stay valid JSON: NaN/∞ (e.g. the TTFT of a request
+/// that never committed a token) serialise as `null`, never as `NaN`.
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
 /// Default connection-handler thread count.  Connections are long-lived
 /// (clients pipeline many requests per socket), so this bounds *concurrent
 /// clients*, not requests: the N+1th connection waits in the pool queue
 /// until one of the first N closes.
 pub const DEFAULT_CONN_THREADS: usize = 64;
 
+/// Default request-line cap: far above any real prompt at toy seq lengths,
+/// far below "a client streams an endless line and the server buffers it
+/// all".
+pub const DEFAULT_MAX_LINE: usize = 1 << 20;
+
+/// Default cap on concurrent in-flight generates per v2 session.  Each
+/// in-flight request costs a forwarder thread and a batcher-queue entry;
+/// without a cap, one connection looping `generate` ops could spawn
+/// threads and grow queues without bound (v1 had this backpressure for
+/// free — one blocked request per connection).
+pub const DEFAULT_SESSION_INFLIGHT: usize = 256;
+
+/// Per-listener serving knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Concurrent connection handlers (see [`DEFAULT_CONN_THREADS`]).
+    pub conn_threads: usize,
+    /// Longest accepted request line in bytes; anything longer is
+    /// discarded and answered with an error on the same connection.
+    pub max_line: usize,
+    /// Concurrent in-flight generates allowed per v2 session; ops beyond
+    /// it get an `error` frame (see [`DEFAULT_SESSION_INFLIGHT`]).
+    pub max_inflight_per_conn: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            conn_threads: DEFAULT_CONN_THREADS,
+            max_line: DEFAULT_MAX_LINE,
+            max_inflight_per_conn: DEFAULT_SESSION_INFLIGHT,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Config with a given connection-handler count (the common override —
+    /// the load generator sizes it above its own concurrency cap).
+    pub fn with_conn_threads(conn_threads: usize) -> ServerConfig {
+        ServerConfig { conn_threads, ..ServerConfig::default() }
+    }
+}
+
 /// Serve until a client sends `{"op":"shutdown"}`, then fan the shutdown
 /// out to every worker via the router.
 pub fn serve(addr: &str, seq_len: usize, charset: &str, router: Router) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-    serve_listener(listener, seq_len, charset, router, DEFAULT_CONN_THREADS)
+    serve_listener(listener, seq_len, charset, router, ServerConfig::default())
 }
 
-/// [`serve`] over an already-bound listener and an explicit concurrent-
-/// connection bound.  The load generator binds port 0 itself so it knows
-/// the ephemeral address before the accept loop starts (no sleep-and-hope
-/// handshake), and sizes `conn_threads` above its own concurrency cap so
-/// generated connections can never starve each other.
+/// [`serve`] over an already-bound listener and explicit serving knobs.
+/// The load generator binds port 0 itself so it knows the ephemeral
+/// address before the accept loop starts (no sleep-and-hope handshake),
+/// and sizes `conn_threads` above its own concurrency cap so generated
+/// connections can never starve each other.
 ///
 /// The accept loop polls a non-blocking listener so a shutdown requested by
 /// a connection handler (shared atomic flag) is honoured promptly even when
@@ -104,15 +216,15 @@ pub fn serve_listener(
     seq_len: usize,
     charset: &str,
     router: Router,
-    conn_threads: usize,
+    cfg: ServerConfig,
 ) -> Result<()> {
     listener.set_nonblocking(true)?;
     if let Ok(addr) = listener.local_addr() {
         info!("server", "listening on {addr} ({} workers)", router.worker_count());
     }
-    let pool = ThreadPool::new(conn_threads.max(1));
+    let pool = ThreadPool::new(cfg.conn_threads.max(1));
     let tok = Arc::new(Tokenizer::from_manifest(charset));
-    let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let shutdown = Arc::new(AtomicBool::new(false));
     while !shutdown.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((stream, _)) => {
@@ -120,8 +232,11 @@ pub fn serve_listener(
                 let router = router.clone();
                 let tok = Arc::clone(&tok);
                 let shutdown = Arc::clone(&shutdown);
+                let conn_cfg = cfg.clone();
                 pool.execute(move || {
-                    if handle_conn(stream, seq_len, &tok, router).unwrap_or(false) {
+                    if handle_conn(stream, seq_len, &tok, router, &conn_cfg)
+                        .unwrap_or(false)
+                    {
                         shutdown.store(true, Ordering::Relaxed);
                     }
                 });
@@ -137,37 +252,160 @@ pub fn serve_listener(
     Ok(())
 }
 
+/// Outcome of one bounded line read.
+enum Line {
+    Msg(String),
+    /// The line exceeded the cap; it was consumed and discarded, and the
+    /// stream is positioned at the next line.
+    TooLong,
+    /// The line was not valid UTF-8 (consumed and discarded).
+    BadUtf8,
+    Eof,
+}
+
+/// Read one `\n`-terminated line of at most `max` bytes.  An overlong line
+/// is *drained* (so the connection stays usable) but never buffered beyond
+/// the cap — the whole point is that a client sending an endless line
+/// cannot grow server memory unboundedly.
+fn read_bounded_line(reader: &mut impl BufRead, max: usize) -> io::Result<Line> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut overlong = false;
+    loop {
+        let (saw_newline, taken) = {
+            let chunk = reader.fill_buf()?;
+            if chunk.is_empty() {
+                // EOF: a final unterminated segment still counts as a line
+                // (matching `BufRead::lines`).
+                return Ok(if overlong {
+                    Line::TooLong
+                } else if buf.is_empty() {
+                    Line::Eof
+                } else {
+                    match String::from_utf8(buf) {
+                        Ok(s) => Line::Msg(s),
+                        Err(_) => Line::BadUtf8,
+                    }
+                });
+            }
+            let pos = chunk.iter().position(|&c| c == b'\n');
+            let take = pos.unwrap_or(chunk.len());
+            if !overlong {
+                buf.extend_from_slice(&chunk[..take]);
+                if buf.len() > max {
+                    overlong = true;
+                    buf = Vec::new(); // drop what we buffered; keep draining
+                }
+            }
+            (pos.is_some(), take + usize::from(pos.is_some()))
+        };
+        reader.consume(taken);
+        if saw_newline {
+            return Ok(if overlong {
+                Line::TooLong
+            } else {
+                match String::from_utf8(buf) {
+                    Ok(s) => Line::Msg(s),
+                    Err(_) => Line::BadUtf8,
+                }
+            });
+        }
+    }
+}
+
+/// One in-flight v2 request as the session layer tracks it.
+struct Inflight {
+    /// Server-assigned [`Request::id`] (cancel plumbing).
+    server_id: u64,
+    /// Cancellation flag shared with the `Request`.
+    cancel: Arc<AtomicBool>,
+}
+
+type SessionMap = Arc<Mutex<HashMap<i64, Inflight>>>;
+
 /// Returns Ok(true) if the client requested shutdown.
 fn handle_conn(
     stream: TcpStream,
     seq_len: usize,
     tok: &Tokenizer,
     router: Router,
+    cfg: &ServerConfig,
 ) -> Result<bool> {
+    let max_line = cfg.max_line.max(1);
     let peer = stream.peer_addr().ok();
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let writer: Arc<Mutex<TcpStream>> = Arc::new(Mutex::new(stream.try_clone()?));
+    let mut reader = BufReader::new(stream);
+    let mut proto: i64 = 1;
+    let sessions: SessionMap = Arc::new(Mutex::new(HashMap::new()));
+    let mut requested_shutdown = false;
+    loop {
+        let line = match read_bounded_line(&mut reader, max_line)? {
+            Line::Eof => break,
+            Line::TooLong => {
+                send_line(
+                    &writer,
+                    &error_reply(&format!("line exceeds {max_line} bytes")),
+                )?;
+                continue;
+            }
+            Line::BadUtf8 => {
+                send_line(&writer, &error_reply("line is not valid utf-8"))?;
+                continue;
+            }
+            Line::Msg(l) => l,
+        };
         if line.trim().is_empty() {
             continue;
         }
         let msg = match parse(&line) {
             Ok(m) => m,
             Err(e) => {
-                writeln!(writer, "{}", error_reply(&format!("bad json: {e}")))?;
+                send_line(&writer, &error_reply(&format!("bad json: {e}")))?;
                 continue;
             }
         };
-        match msg.get("op").and_then(|o| o.as_str()).unwrap_or("generate") {
+        // Strict dispatch: only a *missing* op key keeps the bare-line
+        // generate default; a typo'd op is an error, never a decode.
+        let op = match msg.get("op") {
+            None => "generate",
+            Some(o) => match o.as_str() {
+                Some(s) => s,
+                None => {
+                    send_line(&writer, &error_reply("op must be a string"))?;
+                    continue;
+                }
+            },
+        };
+        match op {
+            "hello" => {
+                let want = msg.get("proto").and_then(|p| p.as_i64()).unwrap_or(1);
+                if want == 1 || want == PROTO_V2 {
+                    proto = want;
+                    let reply = Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("proto", Json::int(proto)),
+                    ]);
+                    send_line(&writer, &reply.to_string())?;
+                } else {
+                    send_line(
+                        &writer,
+                        &error_reply(&format!(
+                            "unsupported proto {want} (supported: 1, {PROTO_V2})"
+                        )),
+                    )?;
+                }
+            }
             "shutdown" => {
-                writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]).to_string())?;
-                return Ok(true);
+                send_line(
+                    &writer,
+                    &Json::obj(vec![("ok", Json::Bool(true))]).to_string(),
+                )?;
+                requested_shutdown = true;
+                break;
             }
             "stats" => {
                 let text = router.stats();
                 let out = Json::obj(vec![("stats", Json::Str(text))]);
-                writeln!(writer, "{}", out.to_string())?;
+                send_line(&writer, &out.to_string())?;
             }
             "drain" => {
                 let timeout_ms = msg
@@ -176,85 +414,653 @@ fn handle_conn(
                     .filter(|x| x.is_finite() && *x >= 0.0)
                     .unwrap_or(10_000.0);
                 let ok = router.drain(std::time::Duration::from_millis(timeout_ms as u64));
-                writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(ok))]).to_string())?;
+                send_line(
+                    &writer,
+                    &Json::obj(vec![("ok", Json::Bool(ok))]).to_string(),
+                )?;
             }
-            _ => {
-                let prompt = msg.get("prompt").and_then(|p| p.as_str()).unwrap_or("");
-                let task = msg
-                    .get("task")
-                    .and_then(|t| t.as_str())
-                    .and_then(Task::from_name);
-                let gen_len = msg
-                    .get("gen_len")
-                    .and_then(|g| g.as_usize())
-                    .or_else(|| task.map(|t| t.gen_len()))
-                    .unwrap_or(64);
-                let client_id = msg.get("id").and_then(|i| i.as_i64()).unwrap_or(0);
-                match build_request(tok, seq_len, task, prompt, gen_len) {
-                    Ok(req) => {
-                        let (tx, rx) = channel();
-                        let worker = router.submit(req, tx);
-                        match rx.recv() {
-                            Ok(resp) => {
-                                let out = Json::obj(vec![
-                                    ("id", Json::Num(client_id as f64)),
-                                    ("text", Json::Str(resp.text)),
-                                    ("steps", Json::Num(resp.steps as f64)),
-                                    ("decoded", Json::Num(resp.decoded as f64)),
-                                    ("ttft_ms", Json::Num(resp.ttft_ms)),
-                                    ("latency_ms", Json::Num(resp.latency_ms)),
-                                    (
-                                        "worker",
-                                        worker
-                                            .map(|w| Json::Num(w as f64))
-                                            .unwrap_or(Json::Null),
-                                    ),
-                                ]);
-                                writeln!(writer, "{}", out.to_string())?;
-                            }
-                            Err(_) => {
-                                writeln!(writer, "{}", error_reply("workers gone"))?;
-                            }
-                        }
+            "cancel" => {
+                if proto < PROTO_V2 {
+                    send_line(
+                        &writer,
+                        &error_reply("cancel requires proto 2 (send {\"op\":\"hello\",\"proto\":2} first)"),
+                    )?;
+                    continue;
+                }
+                let cid = match msg.get("id").and_then(|i| i.as_i64()) {
+                    Some(c) => c,
+                    None => {
+                        send_line(&writer, &error_reply("cancel needs an integer id"))?;
+                        continue;
                     }
-                    Err(e) => {
-                        writeln!(writer, "{}", error_reply(&format!("{e:#}")))?;
+                };
+                let found = match lock(&sessions).get(&cid) {
+                    Some(inflight) => {
+                        inflight.cancel.store(true, Ordering::Relaxed);
+                        Some(inflight.server_id)
                     }
+                    None => None,
+                };
+                match found {
+                    // The terminal frame (`cancelled`, or `done` if
+                    // completion raced the cancel) is the acknowledgement.
+                    Some(server_id) => router.cancel(server_id),
+                    // Id-keyed error frame, NOT a bare `{"error":...}`: a
+                    // cancel that loses the race against completion is
+                    // normal client behaviour, and an event-less reply
+                    // here would be mis-routed to the oldest *control*
+                    // waiter on the client (shifting every later
+                    // stats/drain reply by one).  Keyed by id, the client
+                    // demux drops it harmlessly once the id's stream has
+                    // already ended.
+                    None => send_line(
+                        &writer,
+                        &error_frame(cid, &format!("cancel: id {cid} not in flight")),
+                    )?,
+                }
+            }
+            "generate" => {
+                if proto >= PROTO_V2 {
+                    v2_generate(
+                        &msg,
+                        seq_len,
+                        tok,
+                        &router,
+                        &writer,
+                        &sessions,
+                        cfg.max_inflight_per_conn.max(1),
+                    )?;
+                } else {
+                    v1_generate(&msg, seq_len, tok, &router, &writer)?;
+                }
+            }
+            other => {
+                send_line(&writer, &error_reply(&format!("unknown op '{other}'")))?;
+            }
+        }
+    }
+    // Session teardown: whatever is still in flight is cancelled so its
+    // batch slots free up — a vanished client must not pin decode capacity.
+    let leftover: Vec<(i64, Inflight)> = lock(&sessions).drain().collect();
+    for (_, inflight) in leftover {
+        inflight.cancel.store(true, Ordering::Relaxed);
+        router.cancel(inflight.server_id);
+    }
+    info!("server", "connection from {peer:?} closed");
+    Ok(requested_shutdown)
+}
+
+/// Parse + validate the per-request generation params (protocol v2; v1
+/// shares the grammar minus streaming).  Returns the resolved `gen_len`
+/// and the overrides.
+fn parse_gen_params(msg: &Json, task: Option<Task>) -> Result<(usize, GenParams)> {
+    let int_param = |key: &str| -> Result<Option<usize>> {
+        match msg.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                let x = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("{key} must be a positive integer"))?;
+                anyhow::ensure!(
+                    x.is_finite() && x.fract() == 0.0 && x >= 1.0,
+                    "{key} must be a positive integer"
+                );
+                Ok(Some(x as usize))
+            }
+        }
+    };
+    let gen_len = int_param("gen_len")?
+        .or_else(|| task.map(|t| t.gen_len()))
+        .unwrap_or(64);
+    let threshold = match msg.get("threshold") {
+        None => None,
+        Some(v) => {
+            let t = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("threshold must be a number"))?;
+            anyhow::ensure!(
+                t > 0.0 && t <= 1.0,
+                "threshold must be in (0, 1] (got {t})"
+            );
+            Some(t)
+        }
+    };
+    let stream = match msg.get("stream") {
+        None => false,
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("stream must be a boolean"))?,
+    };
+    Ok((
+        gen_len,
+        GenParams {
+            block_len: int_param("block_len")?,
+            threshold,
+            max_steps: int_param("max_steps")?,
+            stream,
+        },
+    ))
+}
+
+/// Shared head of both generate paths: task + validated params + request.
+fn build_from_msg(
+    msg: &Json,
+    seq_len: usize,
+    tok: &Tokenizer,
+) -> Result<Request> {
+    let prompt = msg.get("prompt").and_then(|p| p.as_str()).unwrap_or("");
+    let task = msg.get("task").and_then(|t| t.as_str()).and_then(Task::from_name);
+    let (gen_len, params) = parse_gen_params(msg, task)?;
+    build_request(tok, seq_len, task, prompt, gen_len, params)
+}
+
+/// v1 generate: block until the terminal event, reply with a single line.
+fn v1_generate(
+    msg: &Json,
+    seq_len: usize,
+    tok: &Tokenizer,
+    router: &Router,
+    writer: &Mutex<TcpStream>,
+) -> Result<()> {
+    let client_id = msg.get("id").and_then(|i| i.as_i64()).unwrap_or(0);
+    let req = match build_from_msg(msg, seq_len, tok) {
+        Ok(r) => r,
+        Err(e) => {
+            send_line(writer, &error_reply(&format!("{e:#}")))?;
+            return Ok(());
+        }
+    };
+    if req.params.stream {
+        send_line(
+            writer,
+            &error_reply("stream requires proto 2 (send {\"op\":\"hello\",\"proto\":2} first)"),
+        )?;
+        return Ok(());
+    }
+    let (tx, rx) = channel();
+    let worker = router.submit(req, tx);
+    loop {
+        match rx.recv() {
+            Ok(ReqEvent::Done(resp)) => {
+                let out = Json::obj(vec![
+                    ("id", Json::int(client_id)),
+                    ("text", Json::Str(resp.text)),
+                    ("steps", Json::Num(resp.steps as f64)),
+                    ("decoded", Json::Num(resp.decoded as f64)),
+                    ("ttft_ms", num_or_null(resp.ttft_ms)),
+                    ("latency_ms", num_or_null(resp.latency_ms)),
+                    (
+                        "worker",
+                        worker.map(|w| Json::Num(w as f64)).unwrap_or(Json::Null),
+                    ),
+                ]);
+                send_line(writer, &out.to_string())?;
+                return Ok(());
+            }
+            Ok(ReqEvent::Cancelled { .. }) => {
+                send_line(writer, &error_reply("request cancelled"))?;
+                return Ok(());
+            }
+            Ok(ReqEvent::Tokens { .. }) => continue,
+            Err(_) => {
+                send_line(writer, &error_reply("workers gone"))?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// v2 generate: validate, register in the session map, dispatch, and spawn
+/// a forwarder that turns [`ReqEvent`]s into wire frames — the connection's
+/// read loop keeps accepting ops while this request decodes.
+fn v2_generate(
+    msg: &Json,
+    seq_len: usize,
+    tok: &Tokenizer,
+    router: &Router,
+    writer: &Arc<Mutex<TcpStream>>,
+    sessions: &SessionMap,
+    max_inflight: usize,
+) -> Result<()> {
+    let cid = match msg.get("id").and_then(|i| i.as_i64()) {
+        Some(c) => c,
+        None => {
+            send_line(writer, &error_reply("generate needs an integer id under proto 2"))?;
+            return Ok(());
+        }
+    };
+    let req = match build_from_msg(msg, seq_len, tok) {
+        Ok(r) => r,
+        Err(e) => {
+            send_line(writer, &error_frame(cid, &format!("{e:#}")))?;
+            return Ok(());
+        }
+    };
+    {
+        let mut map = lock(sessions);
+        if map.contains_key(&cid) {
+            drop(map);
+            send_line(writer, &error_frame(cid, "id already in flight"))?;
+            return Ok(());
+        }
+        // Backpressure the v1 protocol had for free: every in-flight
+        // request costs a forwarder thread + a batcher-queue entry, so a
+        // session gets a bounded window, not an open loop.
+        if map.len() >= max_inflight {
+            drop(map);
+            send_line(
+                writer,
+                &error_frame(
+                    cid,
+                    &format!("too many requests in flight (cap {max_inflight})"),
+                ),
+            )?;
+            return Ok(());
+        }
+        map.insert(
+            cid,
+            Inflight { server_id: req.id, cancel: Arc::clone(&req.cancel) },
+        );
+    }
+    let (tx, rx) = channel();
+    // A fully dead worker set drops `tx` inside submit; the forwarder then
+    // sees its channel close and emits the "workers gone" error frame.
+    let worker = router.submit(req, tx);
+    let writer = Arc::clone(writer);
+    let sessions = Arc::clone(sessions);
+    let router = router.clone();
+    std::thread::spawn(move || forward_events(cid, worker, rx, &writer, &sessions, &router));
+    Ok(())
+}
+
+/// An `{"event":"error","id":...,"error":...,"done":true}` frame.
+fn error_frame(cid: i64, msg: &str) -> String {
+    Json::obj(vec![
+        ("event", Json::str("error")),
+        ("id", Json::int(cid)),
+        ("error", Json::str(msg)),
+        ("done", Json::Bool(true)),
+    ])
+    .to_string()
+}
+
+/// Drain one request's events into wire frames until the terminal event
+/// (or the worker side vanishes), then drop it from the session map.
+fn forward_events(
+    cid: i64,
+    worker: Option<usize>,
+    rx: Receiver<ReqEvent>,
+    writer: &Mutex<TcpStream>,
+    sessions: &Mutex<HashMap<i64, Inflight>>,
+    router: &Router,
+) {
+    let mut terminal_sent = false;
+    for ev in rx {
+        let (frame, terminal) = match ev {
+            ReqEvent::Tokens { delta, positions, .. } => (
+                Json::obj(vec![
+                    ("event", Json::str("tokens")),
+                    ("id", Json::int(cid)),
+                    ("text_delta", Json::Str(delta)),
+                    (
+                        "positions",
+                        Json::Arr(
+                            positions.iter().map(|&p| Json::int(p as i64)).collect(),
+                        ),
+                    ),
+                    ("done", Json::Bool(false)),
+                ]),
+                false,
+            ),
+            ReqEvent::Done(resp) => (
+                Json::obj(vec![
+                    ("event", Json::str("done")),
+                    ("id", Json::int(cid)),
+                    ("text", Json::Str(resp.text)),
+                    ("steps", Json::Num(resp.steps as f64)),
+                    ("decoded", Json::Num(resp.decoded as f64)),
+                    ("ttft_ms", num_or_null(resp.ttft_ms)),
+                    ("latency_ms", num_or_null(resp.latency_ms)),
+                    (
+                        "worker",
+                        worker.map(|w| Json::Num(w as f64)).unwrap_or(Json::Null),
+                    ),
+                    ("done", Json::Bool(true)),
+                ]),
+                true,
+            ),
+            ReqEvent::Cancelled { decoded, .. } => (
+                Json::obj(vec![
+                    ("event", Json::str("cancelled")),
+                    ("id", Json::int(cid)),
+                    ("decoded", Json::Num(decoded as f64)),
+                    ("done", Json::Bool(true)),
+                ]),
+                true,
+            ),
+        };
+        if terminal {
+            // Unregister *before* writing the frame: once the client
+            // observes a terminal frame, the session slot is guaranteed
+            // free, so a submit issued right after it can never
+            // spuriously hit the per-session in-flight cap.  A cancel
+            // racing into the gap gets the id-keyed not-in-flight error
+            // frame, which the client demux drops.
+            lock(sessions).remove(&cid);
+        }
+        let sent = send_line(writer, &frame.to_string()).is_ok();
+        if terminal {
+            terminal_sent = true;
+        }
+        if terminal || !sent {
+            break;
+        }
+    }
+    let leftover = lock(sessions).remove(&cid);
+    if !terminal_sent {
+        // Two ways to get here without a terminal event: the workers
+        // vanished (rx closed), or a frame write failed — the client is
+        // gone while its request still decodes.  Either way, cancel it:
+        // without this, a disconnected streaming client's request would
+        // escape the read loop's teardown (this removal races it) and pin
+        // a batch slot to full completion.
+        if let Some(inflight) = leftover {
+            inflight.cancel.store(true, Ordering::Relaxed);
+            router.cancel(inflight.server_id);
+        }
+        // Best-effort close of the id's stream (no-op on a dead socket).
+        let _ = send_line(writer, &error_frame(cid, "request abandoned: workers or client gone"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Everything one generate op is parameterised by, client side.  Fields
+/// mirror the wire params; `None` lets the server apply its defaults.
+#[derive(Debug, Clone, Default)]
+pub struct GenRequest {
+    /// Task name (sets the prompt grammar + default gen_len server-side).
+    pub task: Option<String>,
+    /// Prompt text.
+    pub prompt: String,
+    /// Generated-region length override.
+    pub gen_len: Option<usize>,
+    /// Semi-AR block length override.
+    pub block_len: Option<usize>,
+    /// Early-stop confidence threshold override, in (0, 1].
+    pub threshold: Option<f64>,
+    /// Per-request decode-step cap.
+    pub max_steps: Option<usize>,
+    /// Ask for incremental `tokens` frames.
+    pub stream: bool,
+}
+
+impl GenRequest {
+    /// A plain prompt with server defaults for everything else.
+    pub fn new(prompt: &str) -> GenRequest {
+        GenRequest { prompt: prompt.to_string(), ..GenRequest::default() }
+    }
+
+    /// The wire `generate` op for this request under client id `id`.
+    fn body(&self, id: i64) -> Json {
+        let mut pairs = vec![
+            ("op", Json::str("generate")),
+            ("id", Json::int(id)),
+            ("prompt", Json::str(&self.prompt)),
+        ];
+        if let Some(t) = &self.task {
+            pairs.push(("task", Json::str(t)));
+        }
+        if let Some(g) = self.gen_len {
+            pairs.push(("gen_len", Json::Num(g as f64)));
+        }
+        if let Some(b) = self.block_len {
+            pairs.push(("block_len", Json::Num(b as f64)));
+        }
+        if let Some(t) = self.threshold {
+            pairs.push(("threshold", Json::Num(t)));
+        }
+        if let Some(m) = self.max_steps {
+            pairs.push(("max_steps", Json::Num(m as f64)));
+        }
+        if self.stream {
+            pairs.push(("stream", Json::Bool(true)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Demux state shared between a [`Client`] and its background reader.
+#[derive(Default)]
+struct ClientState {
+    /// Per-request frame routes by client id; removed on terminal frames.
+    routes: Mutex<HashMap<i64, Sender<Json>>>,
+    /// FIFO of waiters for control replies (hello/stats/drain/shutdown) —
+    /// frames without an `event` key resolve the oldest waiter.
+    control: Mutex<VecDeque<Sender<Json>>>,
+}
+
+/// Background demux: event frames route to their request's channel by id,
+/// anything else resolves the oldest control waiter.  Exits on EOF/error,
+/// dropping every route so blocked receivers observe closure.
+fn reader_loop(stream: TcpStream, state: Arc<ClientState>) {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Ok(frame) = parse(line.trim_end()) else { continue };
+        let route_id = frame
+            .get("event")
+            .is_some()
+            .then(|| frame.get("id").and_then(|i| i.as_i64()))
+            .flatten();
+        match route_id {
+            Some(id) => {
+                let terminal =
+                    frame.get("done").and_then(|d| d.as_bool()).unwrap_or(false);
+                let mut routes = lock(&state.routes);
+                if let Some(tx) = routes.get(&id) {
+                    let _ = tx.send(frame);
+                }
+                if terminal {
+                    routes.remove(&id);
+                }
+            }
+            None => {
+                if let Some(tx) = lock(&state.control).pop_front() {
+                    let _ = tx.send(frame);
                 }
             }
         }
     }
-    info!("server", "connection from {peer:?} closed");
-    Ok(false)
+    lock(&state.routes).clear();
+    lock(&state.control).clear();
 }
 
-/// Minimal blocking client for examples/tests.
+/// Handle to one in-flight request on a v2 session: a private frame stream
+/// plus cancellation.  Dropping the handle abandons the frames but not the
+/// request — call [`Pending::cancel`] to actually free the server slot.
+pub struct Pending {
+    /// The client id this handle's frames are keyed by.
+    pub id: i64,
+    rx: Receiver<Json>,
+    writer: Arc<Mutex<TcpStream>>,
+}
+
+/// True for `done` / `cancelled` / `error` frames (they carry
+/// `"done":true` and end the id's stream).
+pub fn is_terminal(frame: &Json) -> bool {
+    frame.get("done").and_then(|d| d.as_bool()).unwrap_or(false)
+}
+
+impl Pending {
+    /// Block for the next frame (a `tokens` delta or the terminal frame).
+    pub fn next_event(&self) -> Result<Json> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("connection closed with request in flight"))
+    }
+
+    /// Block until the terminal frame, discarding stream frames.
+    pub fn wait(&self) -> Result<Json> {
+        loop {
+            let f = self.next_event()?;
+            if is_terminal(&f) {
+                return Ok(f);
+            }
+        }
+    }
+
+    /// Block until the terminal frame, concatenating the streamed
+    /// `text_delta`s along the way.  Returns `(terminal frame, streamed
+    /// text)`.
+    pub fn wait_streaming(&self) -> Result<(Json, String)> {
+        let mut text = String::new();
+        loop {
+            let f = self.next_event()?;
+            if is_terminal(&f) {
+                return Ok((f, text));
+            }
+            if let Some(d) = f.get("text_delta").and_then(|d| d.as_str()) {
+                text.push_str(d);
+            }
+        }
+    }
+
+    /// Ask the server to cancel this request; the acknowledgement is the
+    /// terminal frame (`cancelled`, or `done` if completion raced us).
+    pub fn cancel(&self) -> Result<()> {
+        let body = Json::obj(vec![("op", Json::str("cancel")), ("id", Json::int(self.id))]);
+        send_line(&self.writer, &body.to_string())?;
+        Ok(())
+    }
+}
+
+/// Client for the serving frontend.  [`Client::connect`] negotiates a v2
+/// multiplexed session: a background reader thread demultiplexes frames
+/// into per-request [`Pending`] handles, so many generates can be in
+/// flight — and stream, and be cancelled — over one connection.  The
+/// blocking [`Client::generate`] survives as a thin submit-then-wait
+/// wrapper; [`Client::connect_v1`] keeps the plain one-line-per-reply
+/// protocol for compatibility.
 pub struct Client {
-    stream: TcpStream,
+    writer: Arc<Mutex<TcpStream>>,
+    state: Arc<ClientState>,
+    next_id: i64,
+    proto: i64,
 }
 
 impl Client {
-    /// Open one connection to a serving frontend.
+    /// Open one connection and negotiate the v2 session protocol.
     pub fn connect(addr: &str) -> Result<Client> {
-        Ok(Client { stream: TcpStream::connect(addr)? })
+        let mut c = Client::connect_v1(addr)?;
+        let r = c.request(&Json::obj(vec![
+            ("op", Json::str("hello")),
+            ("proto", Json::int(PROTO_V2)),
+        ]))?;
+        anyhow::ensure!(
+            r.get("ok").and_then(|x| x.as_bool()) == Some(true),
+            "hello rejected: {}",
+            r.to_string()
+        );
+        c.proto = PROTO_V2;
+        Ok(c)
     }
 
-    /// Send one JSON line and block for the single JSON-line reply.
+    /// Open one connection *without* negotiating v2 — requests block for a
+    /// single reply line each, exactly the pre-session protocol.
+    pub fn connect_v1(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = Arc::new(Mutex::new(stream.try_clone()?));
+        let state = Arc::new(ClientState::default());
+        let reader_state = Arc::clone(&state);
+        std::thread::Builder::new()
+            .name("spa-client-reader".into())
+            .spawn(move || reader_loop(stream, reader_state))
+            .expect("spawn client reader");
+        Ok(Client { writer, state, next_id: 1, proto: 1 })
+    }
+
+    /// Negotiated protocol version (1 until a successful hello).
+    pub fn proto(&self) -> i64 {
+        self.proto
+    }
+
+    /// Send one op and block for its *control* reply (stats, drain,
+    /// shutdown, hello — and, on a v1 connection, generate).  Do **not**
+    /// use this for generate on a v2 session: those replies arrive as
+    /// event frames and belong to a [`Pending`] handle from
+    /// [`Client::submit`].
     pub fn request(&mut self, body: &Json) -> Result<Json> {
-        writeln!(self.stream, "{}", body.to_string())?;
-        let mut reader = BufReader::new(self.stream.try_clone()?);
-        let mut line = String::new();
-        reader.read_line(&mut line)?;
-        Ok(parse(&line)?)
+        let (tx, rx) = channel();
+        lock(&self.state.control).push_back(tx);
+        if let Err(e) = send_line(&self.writer, &body.to_string()) {
+            lock(&self.state.control).pop_back();
+            return Err(e.into());
+        }
+        rx.recv().map_err(|_| anyhow::anyhow!("connection closed"))
     }
 
-    /// `generate` op with the task's default `gen_len`.
+    /// Submit a generate op on the session; frames for it flow to the
+    /// returned [`Pending`] handle.  Requires a v2 connection.
+    pub fn submit(&mut self, req: &GenRequest) -> Result<Pending> {
+        let (tx, rx) = channel();
+        let id = self.submit_routed(req, tx)?;
+        Ok(Pending { id, rx, writer: Arc::clone(&self.writer) })
+    }
+
+    /// [`Client::submit`] with a caller-supplied frame channel — lets one
+    /// receiver multiplex many in-flight requests (the pipelined load
+    /// generator waits on a single channel for whichever request
+    /// progresses first).  Returns the assigned client id; frames carry it.
+    pub fn submit_routed(&mut self, req: &GenRequest, route: Sender<Json>) -> Result<i64> {
+        anyhow::ensure!(
+            self.proto >= PROTO_V2,
+            "submit needs a v2 session (Client::connect, not connect_v1)"
+        );
+        let id = self.next_id;
+        self.next_id += 1;
+        lock(&self.state.routes).insert(id, route);
+        if let Err(e) = send_line(&self.writer, &req.body(id).to_string()) {
+            lock(&self.state.routes).remove(&id);
+            return Err(e.into());
+        }
+        Ok(id)
+    }
+
+    /// Cancel an in-flight request by client id (see [`Pending::cancel`]).
+    pub fn cancel(&mut self, id: i64) -> Result<()> {
+        let body = Json::obj(vec![("op", Json::str("cancel")), ("id", Json::int(id))]);
+        send_line(&self.writer, &body.to_string())?;
+        Ok(())
+    }
+
+    /// Blocking `generate` with the task's default `gen_len` — the v1 call
+    /// shape, kept as a thin wrapper over submit → wait.
     pub fn generate(&mut self, task: &str, prompt: &str) -> Result<Json> {
-        self.request(&Json::obj(vec![
-            ("op", Json::str("generate")),
-            ("task", Json::str(task)),
-            ("prompt", Json::str(prompt)),
-        ]))
+        self.generate_opts(&GenRequest {
+            task: Some(task.to_string()),
+            prompt: prompt.to_string(),
+            ..GenRequest::default()
+        })
+    }
+
+    /// Blocking generate with explicit per-request params.
+    pub fn generate_opts(&mut self, req: &GenRequest) -> Result<Json> {
+        if self.proto >= PROTO_V2 {
+            self.submit(req)?.wait()
+        } else {
+            self.request(&req.body(self.next_id))
+        }
     }
 
     /// `stats` op → the Prometheus exposition text.
@@ -280,6 +1086,15 @@ impl Client {
     }
 }
 
+impl Drop for Client {
+    /// Close both socket halves so the background reader exits rather
+    /// than leaking a thread blocked on a half-open connection.
+    fn drop(&mut self) {
+        let g = lock(&self.writer);
+        let _ = g.shutdown(std::net::Shutdown::Both);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,5 +1114,110 @@ mod tests {
     fn error_reply_is_single_line() {
         let wire = error_reply("line1\nline2");
         assert!(!wire.contains('\n'), "newline must be escaped: {wire}");
+    }
+
+    #[test]
+    fn error_frames_are_terminal_and_keyed() {
+        let f = parse(&error_frame(7, "boom")).unwrap();
+        assert!(is_terminal(&f));
+        assert_eq!(f.get("id").and_then(|i| i.as_i64()), Some(7));
+        assert_eq!(f.get("event").and_then(|e| e.as_str()), Some("error"));
+    }
+
+    #[test]
+    fn bounded_reader_caps_and_recovers() {
+        use std::io::Cursor;
+        let long = "x".repeat(64);
+        let input = format!("short\n{long}\nafter\nlast");
+        let mut r = BufReader::with_capacity(8, Cursor::new(input.into_bytes()));
+        match read_bounded_line(&mut r, 16).unwrap() {
+            Line::Msg(s) => assert_eq!(s, "short"),
+            _ => panic!("short line must pass"),
+        }
+        // The 64-byte line exceeds the 16-byte cap: reported, drained.
+        assert!(matches!(read_bounded_line(&mut r, 16).unwrap(), Line::TooLong));
+        // The stream is positioned at the next line — still usable.
+        match read_bounded_line(&mut r, 16).unwrap() {
+            Line::Msg(s) => assert_eq!(s, "after"),
+            _ => panic!("stream must recover after an overlong line"),
+        }
+        // A final unterminated segment still counts as a line.
+        match read_bounded_line(&mut r, 16).unwrap() {
+            Line::Msg(s) => assert_eq!(s, "last"),
+            _ => panic!("final segment without newline"),
+        }
+        assert!(matches!(read_bounded_line(&mut r, 16).unwrap(), Line::Eof));
+    }
+
+    #[test]
+    fn bounded_reader_rejects_bad_utf8() {
+        use std::io::Cursor;
+        let mut input = vec![0xFFu8, 0xFE, b'\n'];
+        input.extend_from_slice(b"ok\n");
+        let mut r = BufReader::new(Cursor::new(input));
+        assert!(matches!(read_bounded_line(&mut r, 64).unwrap(), Line::BadUtf8));
+        match read_bounded_line(&mut r, 64).unwrap() {
+            Line::Msg(s) => assert_eq!(s, "ok"),
+            _ => panic!("stream recovers after bad utf-8"),
+        }
+    }
+
+    #[test]
+    fn gen_params_validate_server_side() {
+        let ok = parse(r#"{"gen_len":32,"block_len":8,"threshold":0.5,"max_steps":100}"#)
+            .unwrap();
+        let (g, p) = parse_gen_params(&ok, None).unwrap();
+        assert_eq!(g, 32);
+        assert_eq!(p.block_len, Some(8));
+        assert_eq!(p.threshold, Some(0.5));
+        assert_eq!(p.max_steps, Some(100));
+        assert!(!p.stream);
+
+        let defaults = parse(r#"{}"#).unwrap();
+        let (g, p) = parse_gen_params(&defaults, None).unwrap();
+        assert_eq!(g, 64);
+        assert_eq!(p.block_len, None);
+        assert!(p.threshold.is_none() && p.max_steps.is_none());
+
+        for bad in [
+            r#"{"gen_len":0}"#,
+            r#"{"gen_len":-4}"#,
+            r#"{"gen_len":1.5}"#,
+            r#"{"gen_len":"x"}"#,
+            r#"{"block_len":0}"#,
+            r#"{"threshold":0.0}"#,
+            r#"{"threshold":1.5}"#,
+            r#"{"threshold":"hot"}"#,
+            r#"{"max_steps":0}"#,
+            r#"{"stream":"yes"}"#,
+        ] {
+            let msg = parse(bad).unwrap();
+            assert!(parse_gen_params(&msg, None).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn gen_request_body_round_trips() {
+        let r = GenRequest {
+            task: Some("gsm8k_s".into()),
+            prompt: "#q 1+1=?#a ".into(),
+            gen_len: Some(16),
+            block_len: Some(4),
+            threshold: Some(0.9),
+            max_steps: Some(64),
+            stream: true,
+        };
+        let body = r.body((1 << 53) + 1);
+        let wire = parse(&body.to_string()).unwrap();
+        assert_eq!(wire.get("op").and_then(|o| o.as_str()), Some("generate"));
+        assert_eq!(wire.get("id").and_then(|i| i.as_i64()), Some((1 << 53) + 1));
+        assert_eq!(wire.get("gen_len").and_then(|g| g.as_usize()), Some(16));
+        assert_eq!(wire.get("stream").and_then(|s| s.as_bool()), Some(true));
+        let (g, p) = parse_gen_params(&wire, None).unwrap();
+        assert_eq!(g, 16);
+        assert_eq!(p.block_len, Some(4));
+        assert_eq!(p.threshold, Some(0.9));
+        assert_eq!(p.max_steps, Some(64));
+        assert!(p.stream);
     }
 }

@@ -6,6 +6,8 @@
 //!   spa-cache serve --addr 127.0.0.1:7377 --model llada_s --method spa --workers 4
 //!   spa-cache bench-serve --workers 2 --qps 50 --duration 5s --methods vanilla,spa
 //!   spa-cache bench-serve --workers 2 --clients 8 --duration 10s   (closed loop)
+//!   spa-cache bench-serve --workers 2 --pipeline 8 --duration 10s  (one v2 session)
+//!   spa-cache bench-serve --stub --pipeline 8 --duration 2s        (no artifacts)
 //!   spa-cache analyze --model llada_s --steps 12
 //!   spa-cache selftest
 
@@ -44,8 +46,10 @@ fn main() -> Result<()> {
                  [--model llada_s] [--method vanilla|spa|dllm_cache|fast_dllm|dkv_cache|d2_cache|elastic_cache|multistep] \
                  [--task gsm8k_s] [--samples N] [--addr host:port] [--workers N] [--threshold 0.9]\n\
                  policy: [--partial-refresh on|off] [--refresh-interval N]\n\
-                 bench-serve: [--methods vanilla,spa] [--qps 8 | --clients N] [--duration 5s] \
-                 [--warmup 1s] [--tasks gsm8k_s,mmlu_s] [--gen-len 32 | 16:64] [--out BENCH_serving.json]"
+                 serve: [--max-line BYTES] [--conn-threads N]\n\
+                 bench-serve: [--methods vanilla,spa] [--qps 8 | --clients N | --pipeline D] \
+                 [--duration 5s] [--warmup 1s] [--tasks gsm8k_s,mmlu_s] [--gen-len 32 | 16:64] \
+                 [--out BENCH_serving.json] [--stub]  (--stub: stub workers, no artifacts needed)"
             );
             Ok(())
         }
@@ -191,7 +195,21 @@ fn serve(args: &Args) -> Result<()> {
         Ok(Worker::new(id, engine, method, sam.clone(), batcher.clone(), 4 * seq_len))
     })?;
 
-    server::serve(&addr, seq_len, &charset, router)?;
+    // Frontend knobs: request-line cap + concurrent connection handlers.
+    let server_cfg = server::ServerConfig {
+        conn_threads: args
+            .strict_count("conn-threads")?
+            .unwrap_or(server::DEFAULT_CONN_THREADS),
+        max_line: args
+            .strict_count("max-line")?
+            .unwrap_or(server::DEFAULT_MAX_LINE),
+        max_inflight_per_conn: args
+            .strict_count("max-session-inflight")?
+            .unwrap_or(server::DEFAULT_SESSION_INFLIGHT),
+    };
+    let listener = std::net::TcpListener::bind(&addr)
+        .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+    server::serve_listener(listener, seq_len, &charset, router, server_cfg)?;
     for h in handles {
         match h.join() {
             Ok(r) => r?,
@@ -207,6 +225,43 @@ fn serve(args: &Args) -> Result<()> {
 /// are unavailable, mirroring the artifact-gated tests.
 fn bench_serve(args: &Args) -> Result<()> {
     use spa_cache::bench::loadgen::{self, LoadGenConfig};
+
+    // --stub: artifact-free smoke over stub session workers — the whole
+    // TCP → router → worker pipeline minus the device execution.  CI uses
+    // this (pipelined mode) so the serving trajectory populates on every
+    // run, not only where artifacts exist.
+    if args.flag("stub") {
+        anyhow::ensure!(
+            args.get("partial-refresh").is_none() && args.get("refresh-interval").is_none(),
+            "policy flags do not apply to stub workers"
+        );
+        let workers = args.strict_count("workers")?.unwrap_or(2);
+        let cfg = LoadGenConfig::from_args(args)?;
+        let methods: Vec<String> = args
+            .str_or("methods", "stub")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        let mut reports = Vec::new();
+        for m in &methods {
+            reports.push(loadgen::run_stub(
+                m,
+                workers,
+                &cfg,
+                spa_cache::bench::stub::StubConfig::default(),
+            )?);
+        }
+        loadgen::print_reports(&reports);
+        let out = args.str_or("out", "BENCH_serving.json");
+        loadgen::append_trajectory(
+            Path::new(&out),
+            loadgen::config_json(&cfg, workers, "stub", loadgen::PolicyFlags::default()),
+            &reports,
+        )?;
+        println!("bench-serve: appended {} stub row(s) to {out}", reports.len());
+        return Ok(());
+    }
 
     // Gate on the resolved dir, so an explicit --artifacts is honoured
     // (shared with examples/bench_serve.rs — the two must not drift).

@@ -2,20 +2,47 @@
 //!
 //! Covers the full value model needed by `artifacts/index.json`, the server
 //! wire protocol and the config files: objects (order-preserving), arrays,
-//! numbers (f64), strings with escapes, bools, null.  `parse ∘ to_string`
-//! round-trips on this model (property-tested in `util::proptest` tests).
+//! numbers (f64, plus lossless i64 for integer literals — client request
+//! ids must survive above 2^53), strings with escapes, bools, null.
+//! `parse ∘ to_string` round-trips on this model (property-tested in
+//! `util::proptest` tests).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    /// Lossless 64-bit integer.  `Num(f64)` silently rounds integers above
+    /// 2^53 — which corrupted client-chosen request ids round-tripping
+    /// through the serving protocol — so integer literals parse into this
+    /// variant and serialise back digit-for-digit.
+    Int(i64),
     Str(String),
     Arr(Vec<Json>),
     Obj(Vec<(String, Json)>),
+}
+
+/// `Int` and `Num` compare *numerically* (`Int(3) == Num(3.0)`): whether a
+/// number arrived as an integer literal is a wire detail, not a value
+/// distinction — callers constructing `Num(3.0)` must keep matching a
+/// parsed `3`.
+impl PartialEq for Json {
+    fn eq(&self, other: &Json) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            (Json::Int(a), Json::Int(b)) => a == b,
+            (Json::Int(a), Json::Num(b)) | (Json::Num(b), Json::Int(a)) => *a as f64 == *b,
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            _ => false,
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -46,6 +73,12 @@ impl Json {
         Json::Num(x)
     }
 
+    /// Lossless integer (ids, counters) — use instead of `Num(x as f64)`
+    /// whenever the value must round-trip exactly above 2^53.
+    pub fn int(x: i64) -> Json {
+        Json::Int(x)
+    }
+
     // ----- accessors -----
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
@@ -62,16 +95,26 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
+            Json::Int(x) => Some(*x as f64),
             _ => None,
         }
     }
 
+    /// Exact for `Int`; `Num` truncates (legacy float callers).
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().map(|x| x as i64)
+        match self {
+            Json::Int(x) => Some(*x),
+            Json::Num(x) => Some(*x as i64),
+            _ => None,
+        }
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        match self {
+            Json::Int(x) => usize::try_from(*x).ok(),
+            Json::Num(x) => Some(*x as usize),
+            _ => None,
+        }
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -133,6 +176,9 @@ impl Json {
                 } else {
                     let _ = write!(out, "{x}");
                 }
+            }
+            Json::Int(x) => {
+                let _ = write!(out, "{x}");
             }
             Json::Str(s) => write_escaped(s, out),
             Json::Arr(v) => {
@@ -255,6 +301,14 @@ impl<'a> Parser<'a> {
             self.pos += 1;
         }
         let s = std::str::from_utf8(&self.b[start..self.pos]).map_err(|_| self.err("utf8"))?;
+        // Integer literals (no fraction/exponent) stay lossless: `Num`'s
+        // f64 silently rounds above 2^53, which is exactly where client
+        // request ids live.  Out-of-i64-range integers fall back to f64.
+        if !s.bytes().any(|c| matches!(c, b'.' | b'e' | b'E')) {
+            if let Ok(i) = s.parse::<i64>() {
+                return Ok(Json::Int(i));
+            }
+        }
         s.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
     }
 
@@ -401,6 +455,29 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("nul").is_err());
         assert!(parse("{}x").is_err());
+    }
+
+    #[test]
+    fn int_round_trips_past_2_pow_53() {
+        // 2^53 + 1 is the first integer f64 cannot represent; client ids
+        // must survive parse → serialise → parse digit-for-digit.
+        let big = (1i64 << 53) + 1;
+        let v = parse(&big.to_string()).unwrap();
+        assert_eq!(v.as_i64(), Some(big));
+        assert_eq!(v.to_string(), big.to_string());
+        let v = parse(&i64::MAX.to_string()).unwrap();
+        assert_eq!(v.as_i64(), Some(i64::MAX));
+        assert_eq!(v.to_string(), i64::MAX.to_string());
+        let v = parse(&i64::MIN.to_string()).unwrap();
+        assert_eq!(v.as_i64(), Some(i64::MIN));
+        // Ints and floats compare numerically, not by variant.
+        assert_eq!(parse("3").unwrap(), Json::Num(3.0));
+        assert_eq!(Json::int(3), parse("3.0").unwrap());
+        assert_ne!(parse("3").unwrap(), Json::Num(3.5));
+        // Fraction/exponent forms still parse as floats.
+        assert_eq!(parse("3e2").unwrap(), Json::Num(300.0));
+        // Integers past i64 range degrade to f64 rather than erroring.
+        assert!(parse("99999999999999999999999").unwrap().as_f64().unwrap() > 9e21);
     }
 
     #[test]

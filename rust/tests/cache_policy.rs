@@ -28,6 +28,8 @@ fn request(id: u64) -> Request {
         prompt_len: 2,
         answer: None,
         task: None,
+        params: spa_cache::coordinator::request::GenParams::default(),
+        cancel: std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false)),
         submitted: Instant::now(),
     }
 }

@@ -3,9 +3,11 @@
 //! loadgen pipeline (TCP protocol → router → worker mailbox → stats scrape
 //! → drain barrier → `BENCH_serving.json`) on every checkout.
 //!
-//! A stub worker answers `Submit` after a fixed decode delay with a canned
-//! `Response`, keeps honest `Metrics`, and answers `Stats`/`Shutdown` like
-//! the real scheduler loop.
+//! The general stub worker lives in `spa_cache::bench::stub` (slot-based
+//! incremental decode, streaming, cancellation — shared with the session
+//! tests and the CI `bench-serve --stub` smoke); this file only keeps the
+//! *policy* stub, which runs the real spa cache-policy decision loop over
+//! a stubbed engine.
 
 use std::net::TcpListener;
 use std::sync::mpsc::channel;
@@ -16,77 +18,37 @@ use std::time::Duration;
 use spa_cache::bench::loadgen::{
     self, ArrivalMode, GenLenDist, LoadGenConfig, TRAJECTORY_SCHEMA,
 };
+use spa_cache::bench::stub::{stub_router, StubConfig};
 use spa_cache::coordinator::cache::{CachePolicy, CacheState, PlanCtx, SpaPolicy};
 use spa_cache::coordinator::metrics::Metrics;
 use spa_cache::coordinator::router::{Router, WorkerEndpoint, WorkerStatus};
 use spa_cache::coordinator::scheduler::Command;
-use spa_cache::coordinator::server::{self, Client};
-use spa_cache::coordinator::request::{Response, SlotState};
+use spa_cache::coordinator::server::{self, Client, ServerConfig};
+use spa_cache::coordinator::request::{ReqEvent, Response, SlotState};
 use spa_cache::model::tokenizer::CHARSET;
 use spa_cache::util::json::parse;
 use spa_cache::model::tasks::Task;
 
 const SEQ_LEN: usize = 128;
 
-/// A worker that "decodes" by sleeping `decode_ms` per request.
-fn spawn_stub_worker(id: usize, decode_ms: u64) -> (WorkerEndpoint, JoinHandle<()>) {
-    let (tx, rx) = channel::<Command>();
-    let status = Arc::new(WorkerStatus::default());
-    status.set_free_slots(4);
-    let worker_status = Arc::clone(&status);
-    let handle = std::thread::spawn(move || {
-        let mut metrics = Metrics::default();
-        for cmd in rx {
-            match cmd {
-                Command::Submit(req, reply) => {
-                    metrics.requests_submitted += 1;
-                    std::thread::sleep(Duration::from_millis(decode_ms));
-                    let latency_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
-                    let ttft_ms = latency_ms / 2.0;
-                    let decoded = 4usize;
-                    metrics.record_completion(ttft_ms, latency_ms, decoded);
-                    metrics.steps += 2;
-                    metrics.refreshes += 1;
-                    let _ = reply.send(Response {
-                        id: req.id,
-                        text: "7".to_string(),
-                        tokens: req.tokens.clone(),
-                        prompt_len: req.prompt_len,
-                        decoded,
-                        steps: 2,
-                        ttft_ms,
-                        latency_ms,
-                    });
-                    worker_status.dec_inflight();
-                }
-                Command::Stats(reply) => {
-                    let _ = reply.send(metrics.clone());
-                }
-                Command::Shutdown => break,
-            }
-        }
-    });
-    (WorkerEndpoint { id, tx, status }, handle)
-}
-
 /// Stub server on an ephemeral port: returns (addr, server thread, worker
 /// threads).  Shut down via `Client::shutdown`.
 fn stub_server(
     workers: usize,
-    decode_ms: u64,
+    step_ms: u64,
 ) -> (String, JoinHandle<anyhow::Result<()>>, Vec<JoinHandle<()>>) {
-    let mut eps = Vec::new();
-    let mut handles = Vec::new();
-    for id in 0..workers {
-        let (ep, h) = spawn_stub_worker(id, decode_ms);
-        eps.push(ep);
-        handles.push(h);
-    }
-    let router = Router::new(eps);
+    let (router, handles) =
+        stub_router(workers, &StubConfig { step_ms, ..StubConfig::default() });
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let server = std::thread::spawn(move || {
-        server::serve_listener(listener, SEQ_LEN, CHARSET, router, 128)
+        server::serve_listener(
+            listener,
+            SEQ_LEN,
+            CHARSET,
+            router,
+            ServerConfig::with_conn_threads(128),
+        )
     });
     (addr, server, handles)
 }
@@ -150,7 +112,7 @@ fn spawn_policy_stub_worker(id: usize, batch: usize) -> (WorkerEndpoint, JoinHan
                     let latency_ms = req.submitted.elapsed().as_secs_f64() * 1e3;
                     let decoded = 4usize;
                     metrics.record_completion(latency_ms / 2.0, latency_ms, decoded);
-                    let _ = reply.send(Response {
+                    let _ = reply.send(ReqEvent::Done(Response {
                         id: req.id,
                         text: "7".to_string(),
                         tokens: req.tokens.clone(),
@@ -159,9 +121,10 @@ fn spawn_policy_stub_worker(id: usize, batch: usize) -> (WorkerEndpoint, JoinHan
                         steps: 3,
                         ttft_ms: latency_ms / 2.0,
                         latency_ms,
-                    });
+                    }));
                     worker_status.dec_inflight();
                 }
+                Command::Cancel(_) => {}
                 Command::Stats(reply) => {
                     let _ = reply.send(metrics.clone());
                 }
@@ -187,7 +150,13 @@ fn policy_stub_server(
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let server = std::thread::spawn(move || {
-        server::serve_listener(listener, SEQ_LEN, CHARSET, router, 128)
+        server::serve_listener(
+            listener,
+            SEQ_LEN,
+            CHARSET,
+            router,
+            ServerConfig::with_conn_threads(128),
+        )
     });
     (addr, server, handles)
 }

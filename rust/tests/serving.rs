@@ -1,7 +1,7 @@
 //! End-to-end serving test: TCP server + JSQ router + N engine workers,
 //! each running continuous batching over the real artifacts.  Submits more
 //! requests than one worker's slots to exercise queueing, admission, slot
-//! reuse and cross-worker sharding.
+//! reuse and cross-worker sharding — over protocol-v2 sessions.
 //!
 //! Skips gracefully (green, with a message) when the artifacts or the PJRT
 //! runtime are unavailable — `cargo test -q` must pass on a fresh checkout.
@@ -14,21 +14,16 @@ use spa_cache::coordinator::decode::{Sampler, UnmaskMode};
 use spa_cache::coordinator::cache::{Method, MethodSpec};
 use spa_cache::coordinator::router::Router;
 use spa_cache::coordinator::scheduler::Worker;
-use spa_cache::coordinator::server::{self, Client};
+use spa_cache::coordinator::server::{self, Client, GenRequest};
 use spa_cache::runtime::engine::Engine;
-use spa_cache::util::json::Json;
 
 mod common;
 
 const WORKERS: usize = 2;
 const CLIENTS: usize = 6;
 
-#[test]
-fn serve_e2e_multi_worker_queue_and_batching() {
-    let manifest = match common::manifest_or_skip("serving") {
-        Some(m) => m,
-        None => return,
-    };
+fn spawn_engine_router() -> Option<(Router, Vec<std::thread::JoinHandle<anyhow::Result<()>>>, usize, String)> {
+    let manifest = common::manifest_or_skip("serving")?;
     let seq_len = manifest.seq_len;
     let charset = manifest.charset.clone();
 
@@ -50,12 +45,19 @@ fn serve_e2e_multi_worker_queue_and_batching() {
         };
         Ok(Worker::new(id, engine, method, sampler, batcher, 4 * seq_len))
     });
-    let (router, worker_handles) = match spawned {
-        Ok(x) => x,
+    match spawned {
+        Ok((router, handles)) => Some((router, handles, seq_len, charset)),
         Err(e) => {
             eprintln!("[serving] SKIP: workers unavailable: {e:#}");
-            return;
+            None
         }
+    }
+}
+
+#[test]
+fn serve_e2e_multi_worker_queue_and_batching() {
+    let Some((router, worker_handles, seq_len, charset)) = spawn_engine_router() else {
+        return;
     };
 
     let addr = "127.0.0.1:7411";
@@ -75,33 +77,33 @@ fn serve_e2e_multi_worker_queue_and_batching() {
             std::thread::spawn(move || {
                 let mut c = Client::connect(&addr).expect("connect");
                 let prompt = format!("#q {}+{}=?#a ", i % 5, (i + 2) % 5);
-                let r = c
-                    .request(&Json::obj(vec![
-                        ("op", Json::str("generate")),
-                        ("id", Json::Num(i as f64)),
-                        ("task", Json::str("gsm8k_s")),
-                        ("prompt", Json::Str(prompt)),
-                        ("gen_len", Json::Num(16.0)),
-                    ]))
-                    .expect("request");
-                assert!(r.get("error").is_none(), "server error: {r:?}");
+                let pending = c
+                    .submit(&GenRequest {
+                        task: Some("gsm8k_s".into()),
+                        prompt,
+                        gen_len: Some(16),
+                        ..GenRequest::default()
+                    })
+                    .expect("submit");
+                let want_id = pending.id;
+                let r = pending.wait().expect("terminal frame");
+                assert_eq!(
+                    r.get("event").and_then(|e| e.as_str()),
+                    Some("done"),
+                    "server error: {r:?}"
+                );
+                assert_eq!(r.get("id").and_then(|x| x.as_i64()), Some(want_id));
                 assert!(r.get("latency_ms").and_then(|x| x.as_f64()).unwrap_or(-1.0) > 0.0);
                 r
             })
         })
         .collect();
 
-    let mut ids = Vec::new();
     let mut workers_used = BTreeSet::new();
     for c in clients {
         let r = c.join().unwrap();
-        ids.push(r.get("id").and_then(|x| x.as_i64()).unwrap());
         workers_used.insert(r.get("worker").and_then(|x| x.as_i64()).unwrap());
     }
-    // Conservation across the router: every client answered exactly once.
-    ids.sort_unstable();
-    let want: Vec<i64> = (0..CLIENTS as i64).collect();
-    assert_eq!(ids, want, "every client answered exactly once");
     // Concurrency: with 6 in-flight requests and multi-second decodes, JSQ
     // must have sharded across at least two decode groups.
     assert!(
@@ -117,6 +119,69 @@ fn serve_e2e_multi_worker_queue_and_batching() {
         assert!(
             stats.contains(&format!("spa_queue_depth{{worker=\"{w}\"}}")),
             "missing worker {w} labels in stats:\n{stats}"
+        );
+    }
+    c.shutdown().unwrap();
+    for h in worker_handles {
+        h.join().unwrap().unwrap();
+    }
+    let _ = server.join();
+}
+
+/// Cancel against the *real* engine worker: a long request is cancelled
+/// mid-decode, its slot frees, and a subsequent request completes through
+/// the same worker pool (artifact-gated like the test above).
+#[test]
+fn serve_e2e_cancel_frees_real_slot() {
+    let Some((router, worker_handles, seq_len, charset)) = spawn_engine_router() else {
+        return;
+    };
+
+    let addr = "127.0.0.1:7412";
+    let server = std::thread::spawn({
+        let addr = addr.to_string();
+        let charset = charset.clone();
+        let router = router.clone();
+        move || server::serve(&addr, seq_len, &charset, router)
+    });
+    std::thread::sleep(Duration::from_millis(100));
+
+    let mut c = Client::connect(addr).unwrap();
+    // A deliberately long decode so the cancel lands mid-flight.
+    let long = c
+        .submit(&GenRequest {
+            task: Some("gsm8k_s".into()),
+            prompt: "#q 2+2=?#a ".into(),
+            gen_len: Some(64),
+            ..GenRequest::default()
+        })
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    long.cancel().unwrap();
+    let end = long.wait().unwrap();
+    let ev = end.get("event").and_then(|e| e.as_str()).unwrap_or("");
+    assert!(
+        ev == "cancelled" || ev == "done",
+        "terminal frame must be cancelled (or done if completion raced): {end:?}"
+    );
+
+    // The pool still serves: a fresh request decodes to completion.
+    let after = c
+        .submit(&GenRequest {
+            task: Some("gsm8k_s".into()),
+            prompt: "#q 1+1=?#a ".into(),
+            gen_len: Some(8),
+            ..GenRequest::default()
+        })
+        .unwrap();
+    let done = after.wait().unwrap();
+    assert_eq!(done.get("event").and_then(|e| e.as_str()), Some("done"), "{done:?}");
+
+    let stats = c.stats().unwrap();
+    if ev == "cancelled" {
+        assert!(
+            !stats.contains("spa_cancelled_total 0\n"),
+            "cancel must be counted:\n{stats}"
         );
     }
     c.shutdown().unwrap();

@@ -1,0 +1,347 @@
+//! Protocol-v2 session-layer tests over stub workers (`bench::stub`) — no
+//! artifacts or PJRT needed, so every checkout exercises the full
+//! TCP → session demux → router → worker pipeline: out-of-order completion
+//! over one connection, streamed frame ordering, cancel-mid-decode freeing
+//! (and re-admitting) a batch slot, v1 bare-line compatibility on the same
+//! port, strict op dispatch, bounded request lines, lossless large ids,
+//! and the pipelined load-generator acceptance numbers.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use spa_cache::bench::loadgen::{self, ArrivalMode, GenLenDist, LoadGenConfig};
+use spa_cache::bench::stub::{stub_router, StubConfig, STUB_SEQ_LEN};
+use spa_cache::coordinator::server::{self, Client, GenRequest, ServerConfig};
+use spa_cache::model::tokenizer::CHARSET;
+use spa_cache::util::json::{parse, Json};
+
+/// Stub server on an ephemeral port with explicit knobs.
+fn session_server(
+    workers: usize,
+    stub: StubConfig,
+    cfg: ServerConfig,
+) -> (String, JoinHandle<anyhow::Result<()>>, Vec<JoinHandle<()>>) {
+    let (router, handles) = stub_router(workers, &stub);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        server::serve_listener(listener, STUB_SEQ_LEN, CHARSET, router, cfg)
+    });
+    (addr, server, handles)
+}
+
+fn teardown(addr: &str, server: JoinHandle<anyhow::Result<()>>, workers: Vec<JoinHandle<()>>) {
+    let mut c = Client::connect(addr).unwrap();
+    c.shutdown().unwrap();
+    for h in workers {
+        h.join().unwrap();
+    }
+    server.join().unwrap().unwrap();
+}
+
+fn genreq(prompt: &str, gen_len: usize, stream: bool) -> GenRequest {
+    GenRequest {
+        prompt: prompt.to_string(),
+        gen_len: Some(gen_len),
+        stream,
+        ..GenRequest::default()
+    }
+}
+
+/// Two requests on one session: the long one is submitted first, the short
+/// one completes first — the demux returns completions out of order, which
+/// the blocking v1 protocol could not.
+#[test]
+fn v2_completions_demux_out_of_order() {
+    let stub = StubConfig { step_ms: 2, commits_per_step: 1, ..StubConfig::default() };
+    let (addr, server, workers) = session_server(1, stub, ServerConfig::default());
+
+    let mut c = Client::connect(&addr).unwrap();
+    let (tx, rx) = channel::<Json>();
+    let long_id = c.submit_routed(&genreq("#q 2+2=?#a ", 48, false), tx.clone()).unwrap();
+    let short_id = c.submit_routed(&genreq("#q 1+1=?#a ", 4, false), tx.clone()).unwrap();
+
+    let mut terminal_order = Vec::new();
+    while terminal_order.len() < 2 {
+        let f = rx.recv_timeout(Duration::from_secs(20)).expect("frame");
+        if server::is_terminal(&f) {
+            assert_eq!(f.get("event").and_then(|e| e.as_str()), Some("done"), "{f:?}");
+            terminal_order.push(f.get("id").and_then(|i| i.as_i64()).unwrap());
+        }
+    }
+    assert_eq!(
+        terminal_order,
+        vec![short_id, long_id],
+        "the short request must finish first despite being submitted second"
+    );
+    teardown(&addr, server, workers);
+}
+
+/// Streamed frames per id: deltas arrive in order, positions ascend, the
+/// terminal frame comes last, and concatenating the deltas reconstructs
+/// the final text exactly.
+#[test]
+fn v2_stream_frames_reassemble_in_order() {
+    let stub = StubConfig { step_ms: 1, commits_per_step: 3, ..StubConfig::default() };
+    let (addr, server, workers) = session_server(1, stub, ServerConfig::default());
+
+    let mut c = Client::connect(&addr).unwrap();
+    let pending = c.submit(&genreq("#q 3+4=?#a ", 16, true)).unwrap();
+    let mut streamed = String::new();
+    let mut last_pos: i64 = -1;
+    let mut frames = 0usize;
+    let done = loop {
+        let f = pending.next_event().expect("frame");
+        if server::is_terminal(&f) {
+            break f;
+        }
+        assert_eq!(f.get("event").and_then(|e| e.as_str()), Some("tokens"), "{f:?}");
+        assert_eq!(f.get("done").and_then(|d| d.as_bool()), Some(false));
+        frames += 1;
+        streamed.push_str(f.get("text_delta").and_then(|d| d.as_str()).unwrap());
+        for p in f.get("positions").and_then(|p| p.as_arr()).unwrap() {
+            let p = p.as_i64().unwrap();
+            assert!(p > last_pos, "positions must ascend across frames");
+            last_pos = p;
+        }
+    };
+    assert_eq!(done.get("event").and_then(|e| e.as_str()), Some("done"), "{done:?}");
+    assert!(frames >= 2, "16 tokens at 3/step must stream several frames");
+    let text = done.get("text").and_then(|t| t.as_str()).unwrap();
+    assert_eq!(streamed, text, "deltas must concatenate to the final text");
+    assert_eq!(
+        done.get("decoded").and_then(|d| d.as_usize()),
+        Some(text.len()),
+        "every decoded token streamed"
+    );
+    teardown(&addr, server, workers);
+}
+
+/// The acceptance scenario: cancel a queued request (never admitted) and a
+/// resident one (slot freed mid-decode); a subsequent request is admitted
+/// into the *same slot* the cancelled one vacated, and the books balance.
+#[test]
+fn v2_cancel_frees_slot_and_readmits() {
+    let slot_log = Arc::new(Mutex::new(Vec::new()));
+    let stub = StubConfig {
+        batch: 1, // single slot: re-admission is unambiguous
+        step_ms: 10,
+        commits_per_step: 1,
+        slot_log: Some(Arc::clone(&slot_log)),
+    };
+    let (addr, server, workers) = session_server(1, stub, ServerConfig::default());
+
+    let mut c = Client::connect(&addr).unwrap();
+    // A occupies the single slot (long decode, streaming so we know when
+    // it is genuinely mid-decode); B waits in the batcher queue.
+    let a = c.submit(&genreq("#q 2+2=?#a ", 64, true)).unwrap();
+    let b = c.submit(&genreq("#q 1+1=?#a ", 8, false)).unwrap();
+    let first = a.next_event().unwrap();
+    assert_eq!(first.get("event").and_then(|e| e.as_str()), Some("tokens"));
+
+    // Cancel the *queued* request first: it must leave without a slot.
+    b.cancel().unwrap();
+    let b_end = b.wait().unwrap();
+    assert_eq!(b_end.get("event").and_then(|e| e.as_str()), Some("cancelled"), "{b_end:?}");
+    assert_eq!(b_end.get("decoded").and_then(|d| d.as_usize()), Some(0));
+
+    // Cancel the resident request mid-decode: its slot frees.
+    a.cancel().unwrap();
+    let a_end = a.wait().unwrap();
+    assert_eq!(a_end.get("event").and_then(|e| e.as_str()), Some("cancelled"), "{a_end:?}");
+    assert!(
+        a_end.get("decoded").and_then(|d| d.as_usize()).unwrap() >= 1,
+        "A had committed tokens before the cancel: {a_end:?}"
+    );
+
+    // A fresh request is admitted into the freed slot and completes.
+    let after = c.submit(&genreq("#q 3+3=?#a ", 4, false)).unwrap();
+    let done = after.wait().unwrap();
+    assert_eq!(done.get("event").and_then(|e| e.as_str()), Some("done"), "{done:?}");
+
+    // Slot conservation: exactly two admissions (A then the follow-up; B
+    // never reached a slot), both into slot 0.
+    let log = slot_log.lock().unwrap().clone();
+    assert_eq!(log.len(), 2, "admissions: A + follow-up, never B: {log:?}");
+    assert_eq!(log[0].1, 0);
+    assert_eq!(log[1].1, 0, "follow-up re-admitted into the freed slot");
+    assert_ne!(log[0].0, log[1].0, "two distinct requests used the slot");
+
+    // Books balance: 3 submitted, 1 completed, 2 cancelled.
+    let stats = c.stats().unwrap();
+    assert!(stats.contains("spa_requests_submitted 3"), "{stats}");
+    assert!(stats.contains("spa_requests_completed 1"), "{stats}");
+    assert!(stats.contains("spa_cancelled_total 2"), "{stats}");
+    teardown(&addr, server, workers);
+}
+
+/// v1 bare lines keep working on the same port, strict op dispatch rejects
+/// typos, and ids echo losslessly above 2^53 through the v2 path.
+#[test]
+fn v1_bare_lines_and_strict_ops_on_same_port() {
+    let stub = StubConfig { step_ms: 1, ..StubConfig::default() };
+    let (addr, server, workers) = session_server(1, stub, ServerConfig::default());
+
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    let roundtrip = |w: &mut TcpStream, r: &mut BufReader<TcpStream>, line: &mut String, msg: &str| -> Json {
+        writeln!(w, "{msg}").unwrap();
+        line.clear();
+        r.read_line(line).unwrap();
+        parse(line.trim_end()).unwrap()
+    };
+
+    // Bare line, no op key: still a v1 generate with a blocking reply.
+    let v1 = roundtrip(
+        &mut w,
+        &mut r,
+        &mut line,
+        r#"{"id":3,"prompt":"#q 1+1=?#a ","gen_len":4}"#,
+    );
+    assert!(v1.get("event").is_none(), "v1 replies carry no event: {v1:?}");
+    assert!(v1.get("text").is_some() && v1.get("latency_ms").is_some(), "{v1:?}");
+    assert_eq!(v1.get("id").and_then(|i| i.as_i64()), Some(3));
+
+    // A typo'd op must error, never fall through to generate.
+    let typo = roundtrip(&mut w, &mut r, &mut line, r#"{"op":"stat"}"#);
+    let err = typo.get("error").and_then(|e| e.as_str()).unwrap_or("");
+    assert!(err.contains("unknown op 'stat'"), "{typo:?}");
+
+    // cancel is a session op: rejected before hello.
+    let early = roundtrip(&mut w, &mut r, &mut line, r#"{"op":"cancel","id":1}"#);
+    assert!(early.get("error").is_some(), "{early:?}");
+
+    // Upgrade the same connection to v2 and round-trip an id above 2^53.
+    let big = (1i64 << 53) + 1;
+    let hello = roundtrip(&mut w, &mut r, &mut line, r#"{"op":"hello","proto":2}"#);
+    assert_eq!(hello.get("proto").and_then(|p| p.as_i64()), Some(2), "{hello:?}");
+    let genline =
+        format!(r#"{{"op":"generate","id":{big},"prompt":"#q 1+1=?#a ","gen_len":4}}"#);
+    writeln!(w, "{genline}").unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    assert!(
+        line.contains(&big.to_string()),
+        "the wire must carry the id digit-for-digit: {line}"
+    );
+    let done = parse(line.trim_end()).unwrap();
+    assert_eq!(done.get("id").and_then(|i| i.as_i64()), Some(big));
+    assert_eq!(done.get("event").and_then(|e| e.as_str()), Some("done"));
+
+    // Unsupported proto is refused without breaking the session.
+    let bad = roundtrip(&mut w, &mut r, &mut line, r#"{"op":"hello","proto":9}"#);
+    assert!(bad.get("error").is_some(), "{bad:?}");
+
+    drop(w);
+    drop(r);
+    teardown(&addr, server, workers);
+}
+
+/// A session's in-flight window is bounded: the op past the cap gets an
+/// id-keyed error frame, and once one request finishes the window reopens.
+#[test]
+fn session_inflight_cap_backpressures() {
+    let stub = StubConfig { batch: 1, step_ms: 10, commits_per_step: 1, ..StubConfig::default() };
+    let server_cfg = ServerConfig { max_inflight_per_conn: 2, ..ServerConfig::default() };
+    let (addr, server, workers) = session_server(1, stub, server_cfg);
+
+    let mut c = Client::connect(&addr).unwrap();
+    let a = c.submit(&genreq("#q 1+1=?#a ", 32, false)).unwrap();
+    let b = c.submit(&genreq("#q 2+2=?#a ", 32, false)).unwrap();
+    // Third concurrent op exceeds the cap: id-keyed error frame, terminal.
+    let over = c.submit(&genreq("#q 3+3=?#a ", 4, false)).unwrap();
+    let rejected = over.wait().unwrap();
+    assert_eq!(rejected.get("event").and_then(|e| e.as_str()), Some("error"), "{rejected:?}");
+    let err = rejected.get("error").and_then(|e| e.as_str()).unwrap_or("");
+    assert!(err.contains("too many requests in flight"), "{rejected:?}");
+
+    // Draining one slot of the window lets the next op in.
+    a.cancel().unwrap();
+    let _ = a.wait().unwrap();
+    let retry = c.submit(&genreq("#q 3+3=?#a ", 4, false)).unwrap();
+    let done = retry.wait().unwrap();
+    assert_eq!(done.get("event").and_then(|e| e.as_str()), Some("done"), "{done:?}");
+    b.cancel().unwrap();
+    let _ = b.wait().unwrap();
+    teardown(&addr, server, workers);
+}
+
+/// Request lines are bounded: an endless line is rejected at the cap, and
+/// the connection stays usable afterwards.
+#[test]
+fn overlong_lines_bounded_and_recoverable() {
+    let stub = StubConfig { step_ms: 1, ..StubConfig::default() };
+    let server_cfg = ServerConfig { max_line: 256, ..ServerConfig::default() };
+    let (addr, server, workers) = session_server(1, stub, server_cfg);
+
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+
+    // 4 KiB against a 256-byte cap.
+    let huge = format!(r#"{{"prompt":"{}"}}"#, "1".repeat(4096));
+    writeln!(w, "{huge}").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let reply = parse(line.trim_end()).unwrap();
+    let err = reply.get("error").and_then(|e| e.as_str()).unwrap_or("");
+    assert!(err.contains("exceeds 256 bytes"), "{reply:?}");
+
+    // Same connection still serves.
+    writeln!(w, r#"{{"prompt":"#q 1+1=?#a ","gen_len":4}}"#).unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    let ok = parse(line.trim_end()).unwrap();
+    assert!(ok.get("text").is_some(), "connection must recover: {ok:?}");
+
+    drop(w);
+    drop(r);
+    teardown(&addr, server, workers);
+}
+
+/// Acceptance: the pipelined closed loop over a **single connection**
+/// sustains more than one request in flight on average — the head-of-line
+/// blocking the v1 protocol imposed is gone — and TTFT comes from the
+/// first streamed frame, strictly below completion latency.
+#[test]
+fn pipelined_loadgen_sustains_inflight_over_one_connection() {
+    let cfg = LoadGenConfig {
+        mode: ArrivalMode::Pipelined { depth: 8 },
+        warmup: Duration::from_millis(100),
+        duration: Duration::from_millis(600),
+        tasks: vec![spa_cache::model::tasks::Task::Gsm8kS],
+        gen_len: Some(GenLenDist::fixed(16)),
+        seed: 5,
+        max_inflight: 64,
+    };
+    let report = loadgen::run_stub(
+        "stub-pipelined",
+        1,
+        &cfg,
+        StubConfig { step_ms: 2, commits_per_step: 2, ..StubConfig::default() },
+    )
+    .expect("run_stub");
+
+    assert!(report.requests > 8, "pipelined window: {}", report.requests);
+    assert_eq!(report.errors, 0, "stub never errors: {report:?}");
+    assert!(
+        report.mean_inflight > 1.0,
+        "one v2 session must hold >1 request in flight (got {:.2})",
+        report.mean_inflight
+    );
+    let ttft = report.ttft.as_ref().expect("ttft from streamed frames");
+    let lat = report.latency.as_ref().expect("latency summary");
+    assert!(
+        ttft.p50 < lat.p50,
+        "first streamed frame lands before completion (ttft {} vs lat {})",
+        ttft.p50,
+        lat.p50
+    );
+    assert!(report.offered_qps.is_nan(), "pipelined loop offers no fixed qps");
+}

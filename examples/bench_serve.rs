@@ -12,8 +12,6 @@
 //! like the artifact-gated tests (`spa-cache bench-serve` is the same flow
 //! with a multi-method lineup).
 
-use std::path::Path;
-
 use anyhow::Result;
 use spa_cache::bench::loadgen::{self, LoadGenConfig, PolicyFlags};
 use spa_cache::coordinator::cache::MethodSpec;
@@ -60,7 +58,7 @@ fn main() -> Result<()> {
     // so the two front-ends record comparable trajectory entries.
     let cfg = LoadGenConfig::from_args(&args)?;
 
-    let report = match loadgen::run_method(
+    let mut report = match loadgen::run_method(
         &method_name,
         workers,
         seq_len,
@@ -81,14 +79,19 @@ fn main() -> Result<()> {
             return Ok(());
         }
     };
+    // The adaptive gate attaches only to spa-kind methods; the recorded
+    // row states what actually ran (same rule as `spa-cache bench-serve`).
+    report.adaptive = loadgen::adaptive_applies(policy, &spec);
 
     loadgen::print_reports(&[report.clone()]);
-    let out = args.str_or("out", "BENCH_serving.json");
+    // Default to the repo-root trajectory (shared history with the CLI
+    // front-end and the CI smoke), honouring an explicit --out.
+    let out = loadgen::out_path(&args);
     loadgen::append_trajectory(
-        Path::new(&out),
+        &out,
         loadgen::config_json(&cfg, workers, &model, policy),
         &[report],
     )?;
-    println!("bench_serve: appended trajectory entry to {out}");
+    println!("bench_serve: appended trajectory entry to {}", out.display());
     Ok(())
 }

@@ -323,6 +323,26 @@ pub struct MethodReport {
     /// window (scraped, differenced; includes the blanket-invalidate
     /// blast radius for policies without partial support).
     pub rows_invalidated: f64,
+    /// Staggered per-row scheduled refreshes begun inside the window
+    /// (scraped, differenced) — interval maintenance paid row-by-row
+    /// instead of as group-global refresh steps.
+    pub scheduled_row_refreshes: f64,
+    /// Online ρ-schedule refits inside the window (scraped, differenced;
+    /// 0 with `--adaptive off`).
+    pub schedule_refits: f64,
+    /// Budget-tier switches inside the window (scraped, differenced) —
+    /// monotone evidence the controller acted, even when the end-of-run
+    /// `budget_tier` gauge has moved back to where it started.
+    pub tier_switches: f64,
+    /// Budget tier at the end of the run (gauge — the highest tier any
+    /// worker was running at; 0 with `--adaptive off`).
+    pub budget_tier: f64,
+    /// The adaptive budget controller was attached for **this method's**
+    /// run.  Per-method because the stub lineup can force it per method
+    /// name (`spa-adaptive`/`spa-fixed`) and an engine lineup applies the
+    /// `--adaptive` gate only to spa-kind methods — the config block's
+    /// flag alone would misdescribe the other rows.
+    pub adaptive: bool,
     /// Per-worker completions inside the measured window (scraped,
     /// differenced) — the router's load-balance evidence.
     pub per_worker_completed: Vec<(usize, f64)>,
@@ -721,6 +741,14 @@ fn aggregate(
         refresh_rate,
         partial_refreshes: diff("spa_partial_refreshes_total"),
         rows_invalidated: diff("spa_rows_invalidated_total"),
+        scheduled_row_refreshes: diff("spa_scheduled_row_refreshes_total"),
+        schedule_refits: diff("spa_schedule_refits_total"),
+        tier_switches: diff("spa_tier_switches_total"),
+        // A gauge, not a counter: the end-of-run value is the signal.
+        budget_tier: scrape_value(end, "spa_budget_tier").unwrap_or(0.0),
+        // Filled in by the run front-end (`run_stub` / bench-serve),
+        // which knows whether the controller was actually attached.
+        adaptive: false,
         per_worker_completed,
         latency_samples: latency.samples().to_vec(),
     }
@@ -729,7 +757,8 @@ fn aggregate(
 /// Refuse policy flags that no method in the bench lineup can apply —
 /// the flags land in the recorded trajectory `config`, and an entry must
 /// never claim gates the run silently ignored (`Vanilla`/`Multistep`
-/// have no refresh interval and no partial-refresh capability).
+/// have no refresh interval and no partial-refresh capability; only
+/// spa-kind methods carry the adaptive controller's tier family).
 /// `explicit_partial` is whether `--partial-refresh` was supplied at all
 /// (the default is not a claim).
 pub fn validate_policy_flags(
@@ -752,7 +781,57 @@ pub fn validate_policy_flags(
              (vanilla/multistep have no partial-refresh capability)"
         );
     }
+    let spa = specs.iter().any(|s| matches!(s, MethodSpec::Spa { .. }));
+    if policy.adaptive && !spa {
+        anyhow::bail!(
+            "--adaptive applies to none of the selected methods \
+             (only spa-kind methods have a hot-swappable budget-tier family)"
+        );
+    }
+    if (policy.row_refresh_per_step.is_some() || policy.refit_interval.is_some()) && !spa {
+        anyhow::bail!(
+            "--row-refresh/--refit-interval apply to none of the selected \
+             methods (staggered scheduled refresh is spa-only)"
+        );
+    }
     Ok(())
+}
+
+/// Default trajectory path: `BENCH_serving.json` at the **repo root**
+/// (nearest ancestor of the cwd holding a `ROADMAP.md`), so the CI smoke
+/// and both bench front-ends append to one shared history no matter which
+/// directory they run from.  Falls back to the cwd-relative name outside
+/// a checkout — the perf trajectory must exist at the root, not wherever
+/// the smoke happened to be invoked.
+pub fn default_trajectory_path() -> PathBuf {
+    let mut dir = match std::env::current_dir() {
+        Ok(d) => d,
+        Err(_) => return PathBuf::from("BENCH_serving.json"),
+    };
+    loop {
+        if dir.join("ROADMAP.md").exists() {
+            return dir.join("BENCH_serving.json");
+        }
+        if !dir.pop() {
+            return PathBuf::from("BENCH_serving.json");
+        }
+    }
+}
+
+/// Trajectory output path for a bench front-end: explicit `--out`, else
+/// [`default_trajectory_path`].  Shared by `spa-cache bench-serve` (both
+/// paths) and `examples/bench_serve.rs` so the front-ends cannot drift.
+pub fn out_path(args: &Args) -> PathBuf {
+    args.get("out").map(PathBuf::from).unwrap_or_else(default_trajectory_path)
+}
+
+/// Whether `--adaptive` actually attaches a controller for `spec` — the
+/// capability rule `Method::configure` applies (spa-kind methods only).
+/// The front-ends stamp each report's per-method `adaptive` column with
+/// this, in one place (an attach *failure* never produces a row at all:
+/// `enable_adaptive` erroring fails the worker factory).
+pub fn adaptive_applies(policy: PolicyFlags, spec: &MethodSpec) -> bool {
+    policy.adaptive && matches!(spec, MethodSpec::Spa { .. })
 }
 
 /// Resolve the artifact directory for a bench front-end (`--artifacts`,
@@ -802,7 +881,9 @@ pub fn worker_factory(
         let spec = MethodSpec::by_name(&method, block_k)?
             .with_refresh_interval(policy.refresh_interval);
         let mut m = Method::new(&engine, &model, spec)?;
-        m.set_partial_refresh(policy.partial_refresh);
+        // Policy gates incl. the adaptive budget controller (tier family
+        // discovery needs the engine's variant registry).
+        m.configure(&engine, &policy)?;
         let sampler = Sampler::greedy(unmask);
         Ok(Worker::new(id, engine, m, sampler, BatcherConfig::default(), 4 * seq_len))
     }
@@ -825,14 +906,62 @@ fn conn_threads_for(cfg: &LoadGenConfig) -> usize {
 /// runs for real; only the device execution is simulated, so CI can
 /// populate the serving trajectory on every checkout (`bench-serve
 /// --stub`).
+///
+/// Method-name dispatch: `"stub"` drives the plain session stub; the
+/// policy lineup drives the **real** spa cache-policy decision loop over
+/// a stubbed engine (`bench::stub::PolicyStubConfig`):
+///
+/// * `"spa"` — staggered per-row scheduled refresh, `policy` flags as
+///   given (so `--adaptive on` attaches the real controller);
+/// * `"spa-adaptive"` — staggered + the adaptive controller, regardless
+///   of `--adaptive`;
+/// * `"spa-fixed"` — the rigid fixed-interval baseline (stalest row ⇒
+///   group-global refresh), controller off.
+///
+/// The adaptive-vs-fixed pair is the acceptance comparison the CI smoke
+/// records into the trajectory.
 pub fn run_stub(
     method: &str,
     workers: usize,
     cfg: &LoadGenConfig,
     stub: crate::bench::stub::StubConfig,
+    policy: PolicyFlags,
 ) -> Result<MethodReport> {
     use crate::bench::stub;
-    let (router, worker_handles) = stub::stub_router(workers, &stub);
+    let policy_cfg = |staggered: bool, adaptive: Option<bool>| {
+        stub::PolicyStubConfig {
+            batch: stub.batch,
+            step_ms: stub.step_ms,
+            commits_per_step: stub.commits_per_step,
+            refresh_interval: policy.refresh_interval.unwrap_or(8),
+            staggered,
+            flags: PolicyFlags {
+                adaptive: adaptive.unwrap_or(policy.adaptive),
+                ..policy
+            },
+            proxy_drift: None,
+        }
+    };
+    let (adaptive_ran, (router, worker_handles)) = match method {
+        "spa" => (
+            policy.adaptive,
+            stub::policy_stub_router(workers, &policy_cfg(true, None)),
+        ),
+        "spa-adaptive" => (
+            true,
+            stub::policy_stub_router(workers, &policy_cfg(true, Some(true))),
+        ),
+        "spa-fixed" => (
+            false,
+            stub::policy_stub_router(workers, &policy_cfg(false, Some(false))),
+        ),
+        other if other.starts_with("spa") => anyhow::bail!(
+            "unknown policy-stub method '{other}' (want spa|spa-adaptive|spa-fixed)"
+        ),
+        // Any other label drives the plain session stub (the tests use
+        // descriptive labels like "stub-pipelined").
+        _ => (false, stub::stub_router(workers, &stub)),
+    };
     let listener = TcpListener::bind("127.0.0.1:0").context("bind loadgen port")?;
     let addr = listener.local_addr()?.to_string();
     let server = std::thread::spawn({
@@ -864,7 +993,12 @@ pub fn run_stub(
         Ok(r) => r?,
         Err(_) => anyhow::bail!("server thread panicked during bench-serve"),
     }
-    report
+    // Stamp what actually ran: the forced stub variants override the CLI
+    // gate, and the row must say so (the config block alone cannot).
+    report.map(|mut r| {
+        r.adaptive = adaptive_ran;
+        r
+    })
 }
 
 /// Spawn a router + in-process server for one method, run the load against
@@ -929,6 +1063,7 @@ pub fn print_reports(reports: &[MethodReport]) {
         &[
             "method", "req", "err", "drop", "qps", "tps", "inflight", "ttft p50",
             "p90", "p99", "lat p50", "p90", "p99", "refresh", "ref/step", "partial",
+            "rowref", "refits", "tier",
         ],
     );
     for r in reports {
@@ -951,6 +1086,9 @@ pub fn print_reports(reports: &[MethodReport]) {
             format!("{:.0}", r.refreshes),
             format!("{:.3}", r.refresh_rate),
             format!("{:.0}", r.partial_refreshes),
+            format!("{:.0}", r.scheduled_row_refreshes),
+            format!("{:.0}", r.schedule_refits),
+            format!("{:.0}", r.budget_tier),
         ]);
     }
     t.print();
@@ -1020,6 +1158,11 @@ pub fn report_json(r: &MethodReport) -> Json {
         ("refresh_rate", Json::Num(r.refresh_rate)),
         ("partial_refreshes", Json::Num(r.partial_refreshes)),
         ("rows_invalidated", Json::Num(r.rows_invalidated)),
+        ("scheduled_row_refreshes", Json::Num(r.scheduled_row_refreshes)),
+        ("schedule_refits", Json::Num(r.schedule_refits)),
+        ("tier_switches", Json::Num(r.tier_switches)),
+        ("budget_tier", Json::Num(r.budget_tier)),
+        ("adaptive", Json::Bool(r.adaptive)),
         (
             "per_worker_completed",
             Json::Arr(
@@ -1060,6 +1203,21 @@ pub fn config_json(
         (
             "refresh_interval",
             match policy.refresh_interval {
+                None => Json::Null,
+                Some(i) => Json::Num(i as f64),
+            },
+        ),
+        ("adaptive", Json::Bool(policy.adaptive)),
+        (
+            "row_refresh_per_step",
+            match policy.row_refresh_per_step {
+                None => Json::Null,
+                Some(i) => Json::Num(i as f64),
+            },
+        ),
+        (
+            "refit_interval",
+            match policy.refit_interval {
                 None => Json::Null,
                 Some(i) => Json::Num(i as f64),
             },
@@ -1211,7 +1369,8 @@ mod tests {
     fn policy_flags_must_apply_to_some_method() {
         let spa = MethodSpec::by_name("spa", 16).unwrap();
         let multi = MethodSpec::by_name("multistep", 16).unwrap();
-        let flags = PolicyFlags { partial_refresh: true, refresh_interval: Some(4) };
+        let manual = MethodSpec::by_name("fast_dllm", 16).unwrap();
+        let flags = PolicyFlags { refresh_interval: Some(4), ..PolicyFlags::default() };
         // No tunable method in the lineup: both explicit gates error.
         assert!(validate_policy_flags(flags, false, std::slice::from_ref(&multi)).is_err());
         assert!(validate_policy_flags(
@@ -1223,7 +1382,18 @@ mod tests {
         // One tunable method makes the gates meaningful.
         assert!(validate_policy_flags(flags, true, &[multi, spa.clone()]).is_ok());
         // Defaults are never a claim.
-        assert!(validate_policy_flags(PolicyFlags::default(), false, &[spa]).is_ok());
+        assert!(validate_policy_flags(PolicyFlags::default(), false, &[spa.clone()]).is_ok());
+        // Adaptive-controller gates are spa-only: a manual-only lineup has
+        // no hot-swappable tier family.
+        let adaptive = PolicyFlags { adaptive: true, ..PolicyFlags::default() };
+        assert!(validate_policy_flags(adaptive, false, std::slice::from_ref(&manual)).is_err());
+        assert!(validate_policy_flags(adaptive, false, &[manual.clone(), spa.clone()]).is_ok());
+        let rowref = PolicyFlags {
+            row_refresh_per_step: Some(2),
+            ..PolicyFlags::default()
+        };
+        assert!(validate_policy_flags(rowref, false, std::slice::from_ref(&manual)).is_err());
+        assert!(validate_policy_flags(rowref, false, &[spa]).is_ok());
     }
 
     #[test]

@@ -106,10 +106,16 @@ pub fn eval_method(
         None => 1.0,
     };
 
+    // Mean over slots that committed at least one token: `run_group`
+    // reports NaN TTFT for a slot that never commits (first-committed
+    // semantics, DESIGN.md §10), and those must drop out of both the
+    // numerator *and* the denominator.
+    let measured_ttfts: Vec<f64> =
+        ttfts.iter().copied().filter(|x| x.is_finite()).collect();
     Ok(EvalResult {
         tps: if total_ms > 0.0 { total_decoded as f64 / (total_ms / 1e3) } else { 0.0 },
-        ttft_ms: ttfts.iter().copied().filter(|x| x.is_finite()).sum::<f64>()
-            / ttfts.len().max(1) as f64,
+        ttft_ms: measured_ttfts.iter().sum::<f64>()
+            / measured_ttfts.len().max(1) as f64,
         accuracy: hits as f64 / samples.len().max(1) as f64,
         n: samples.len(),
         agreement,

@@ -13,6 +13,12 @@
 //! character (`id % 10`), commits land in ascending position order, and
 //! the final `Response::text` equals the concatenation of every streamed
 //! delta.
+//!
+//! Two worker flavours: the plain session stub ([`StubConfig`] /
+//! [`stub_router`]) and the **policy** stub ([`PolicyStubConfig`] /
+//! [`policy_stub_router`]), which runs the real spa cache-policy decision
+//! loop — staggered scheduled refresh and the adaptive budget controller
+//! included — over the same stubbed execution.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -20,8 +26,12 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::cache::{
+    stub_tiers, AdaptiveConfig, AdaptiveController, CachePolicy, CacheState, PlanCtx,
+    PolicyFlags, SpaPolicy, StepObs,
+};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{ReqEvent, Request, Response};
+use crate::coordinator::request::{ReqEvent, Request, Response, SlotState};
 use crate::coordinator::router::{Router, WorkerEndpoint, WorkerStatus};
 use crate::coordinator::scheduler::Command;
 use crate::model::tokenizer::MASK;
@@ -270,6 +280,338 @@ fn run_stub(cfg: StubConfig, rx: Receiver<Command>, status: Arc<WorkerStatus>) {
                 status.dec_inflight();
             }
         }
+        next_step = Instant::now() + step;
+    }
+}
+
+/// Knobs for a **policy** stub worker: the real [`SpaPolicy`] decision
+/// loop (and, with `flags.adaptive`, the real [`AdaptiveController`]) run
+/// over a stubbed engine — every refresh/schedule/tier decision is the
+/// production one, only the device execution is a fixed delay.  This is
+/// what lets the CI `bench-serve --stub` smoke and the loadgen e2e tests
+/// measure the adaptive controller artifact-free.
+#[derive(Debug, Clone)]
+pub struct PolicyStubConfig {
+    /// Batch slots (concurrent residents per worker).
+    pub batch: usize,
+    /// Wall time per decode step.
+    pub step_ms: u64,
+    /// MASK positions committed per resident per step.
+    pub commits_per_step: usize,
+    /// Scheduled refresh interval in steps (0 = never).
+    pub refresh_interval: usize,
+    /// Staggered per-row scheduled refreshes; `false` is the rigid
+    /// fixed-interval baseline (stalest row ⇒ group-global full refresh).
+    pub staggered: bool,
+    /// Policy gates (`--partial-refresh`, `--adaptive`, `--row-refresh`,
+    /// `--refit-interval`), exactly as the CLI records them.
+    pub flags: PolicyFlags,
+    /// Synthetic per-layer proxy residual stats fed to the controller
+    /// (`None` = the commit-activity fallback path).
+    pub proxy_drift: Option<Vec<f64>>,
+}
+
+impl Default for PolicyStubConfig {
+    fn default() -> Self {
+        PolicyStubConfig {
+            batch: 4,
+            step_ms: 2,
+            commits_per_step: 4,
+            refresh_interval: 8,
+            staggered: true,
+            flags: PolicyFlags::default(),
+            proxy_drift: None,
+        }
+    }
+}
+
+/// Spawn one policy stub worker thread; the endpoint plugs straight into
+/// [`Router::new`].
+pub fn spawn_policy_stub_worker(
+    id: usize,
+    cfg: PolicyStubConfig,
+) -> (WorkerEndpoint, JoinHandle<()>) {
+    let (tx, rx) = channel::<Command>();
+    let status = Arc::new(WorkerStatus::default());
+    status.set_free_slots(cfg.batch.max(1));
+    let worker_status = Arc::clone(&status);
+    let handle = std::thread::Builder::new()
+        .name(format!("spa-polstub-{id}"))
+        .spawn(move || run_policy_stub(cfg, rx, worker_status))
+        .expect("spawn policy stub worker");
+    (WorkerEndpoint { id, tx, status }, handle)
+}
+
+/// A router over `workers` policy stub workers plus their join handles.
+pub fn policy_stub_router(
+    workers: usize,
+    cfg: &PolicyStubConfig,
+) -> (Router, Vec<JoinHandle<()>>) {
+    let mut eps = Vec::new();
+    let mut handles = Vec::new();
+    for id in 0..workers.max(1) {
+        let (ep, h) = spawn_policy_stub_worker(id, cfg.clone());
+        eps.push(ep);
+        handles.push(h);
+    }
+    (Router::new(eps), handles)
+}
+
+/// Heal budget the non-adaptive policy stub plans with (the mid stub
+/// tier's static schedule).
+const STUB_HEAL_BUDGET: usize = 4;
+
+fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<WorkerStatus>) {
+    let batch = cfg.batch.max(1);
+    let step = Duration::from_millis(cfg.step_ms);
+    let mut metrics = Metrics::default();
+    let mut queue: VecDeque<(Request, Sender<ReqEvent>)> = VecDeque::new();
+    let mut residents: Vec<Option<Resident>> = (0..batch).map(|_| None).collect();
+    // The production decision loop: per-slot validity state + spa policy
+    // (+ the adaptive controller over the synthetic tier family).
+    let mut slots: Vec<SlotState> = vec![SlotState::empty(); batch];
+    let mut state = CacheState::default();
+    let mut policy = SpaPolicy::new("spa_default".into(), cfg.refresh_interval);
+    policy.set_partial(cfg.flags.partial_refresh);
+    policy.set_staggered(cfg.staggered);
+    let mut ctrl: Option<AdaptiveController> = if cfg.flags.adaptive {
+        let tiers = stub_tiers();
+        let start = 1usize.min(tiers.len() - 1); // mid tier
+        // Same knob resolution as `Method::configure`: flags override the
+        // shared `AdaptiveConfig` defaults, so a stub entry and an engine
+        // entry recording the same flag values measured the same cadence.
+        let defaults = AdaptiveConfig::default();
+        Some(AdaptiveController::new(
+            tiers,
+            start,
+            vec![0.1, 0.3, 0.2, 0.15],
+            AdaptiveConfig {
+                refit_interval: cfg
+                    .flags
+                    .refit_interval
+                    .unwrap_or(defaults.refit_interval),
+                row_refresh_per_step: cfg
+                    .flags
+                    .row_refresh_per_step
+                    .unwrap_or(defaults.row_refresh_per_step),
+                ..defaults
+            },
+        ))
+    } else {
+        None
+    };
+    let plan_tokens = vec![0i32; batch * STUB_SEQ_LEN];
+    let mut next_step = Instant::now();
+    let mut cmds: Vec<Command> = Vec::new();
+    loop {
+        let busy = !queue.is_empty() || residents.iter().any(Option::is_some);
+        status.set_queue_depth(queue.len());
+        status.set_free_slots(residents.iter().filter(|s| s.is_none()).count());
+
+        cmds.clear();
+        if !busy {
+            match rx.recv() {
+                Ok(c) => cmds.push(c),
+                Err(_) => return,
+            }
+        } else {
+            let now = Instant::now();
+            if now < next_step {
+                match rx.recv_timeout(next_step - now) {
+                    Ok(c) => cmds.push(c),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => return,
+                }
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(c) => cmds.push(c),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return,
+            }
+        }
+        for cmd in cmds.drain(..) {
+            match cmd {
+                Command::Submit(req, reply) => {
+                    metrics.requests_submitted += 1;
+                    queue.push_back((req, reply));
+                }
+                Command::Cancel(id) => {
+                    for (req, _) in queue.iter().filter(|(r, _)| r.id == id) {
+                        req.cancel.store(true, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    for r in residents.iter().flatten() {
+                        if r.req.id == id {
+                            r.req
+                                .cancel
+                                .store(true, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                }
+                Command::Stats(reply) => {
+                    let mut m = metrics.clone();
+                    m.queue_depth = queue.len();
+                    m.active_slots = residents.iter().filter(|s| s.is_some()).count();
+                    let _ = reply.send(m);
+                }
+                Command::Shutdown => return,
+            }
+        }
+
+        // Cancellation sweep (queued, then resident — freed slots PAD).
+        for (req, reply) in std::mem::take(&mut queue) {
+            if req.is_cancelled() {
+                let _ = reply.send(ReqEvent::Cancelled { id: req.id, decoded: 0 });
+                metrics.cancelled += 1;
+                status.dec_inflight();
+            } else {
+                queue.push_back((req, reply));
+            }
+        }
+        for (si, slot) in residents.iter_mut().enumerate() {
+            let hit = slot.as_ref().map(|r| r.req.is_cancelled()).unwrap_or(false);
+            if hit {
+                let r = slot.take().expect("cancelled resident present");
+                let _ = r
+                    .reply
+                    .send(ReqEvent::Cancelled { id: r.req.id, decoded: r.committed });
+                metrics.cancelled += 1;
+                status.dec_inflight();
+                slots[si] = SlotState::empty();
+            }
+        }
+
+        // FIFO admission through the production per-slot dirty machinery.
+        let mut admitted_rows: Vec<usize> = Vec::new();
+        for (si, slot) in residents.iter_mut().enumerate() {
+            if slot.is_some() {
+                continue;
+            }
+            let Some((req, reply)) = queue.pop_front() else { break };
+            metrics
+                .record_queue_wait(req.submitted.elapsed().as_secs_f64() * 1e3);
+            let masks: Vec<usize> = req
+                .tokens
+                .iter()
+                .enumerate()
+                .filter(|(_, &t)| t == MASK)
+                .map(|(i, _)| i)
+                .collect();
+            slots[si] = SlotState::assign(&req, 16);
+            *slot = Some(Resident {
+                req,
+                reply,
+                masks,
+                committed: 0,
+                steps: 0,
+                ttft_ms: None,
+            });
+            admitted_rows.push(si);
+        }
+        if !admitted_rows.is_empty() {
+            state.admit(&admitted_rows, policy.partial_refresh(), &mut slots);
+        }
+
+        // One paced decode step: the production plan → commit sequence
+        // (refresh / staggered-scheduled / healing decisions are all
+        // real), then the stubbed "device" commits tokens.
+        let due = Instant::now() >= next_step;
+        if !due || !residents.iter().any(Option::is_some) {
+            continue;
+        }
+        let heal_budget =
+            ctrl.as_ref().map(|c| c.heal_budget()).unwrap_or(STUB_HEAL_BUDGET);
+        let sched_per_step = ctrl
+            .as_ref()
+            .map(|c| c.row_refresh_per_step())
+            .unwrap_or(cfg.flags.row_refresh_per_step.unwrap_or(1));
+        let plan = {
+            let cx = PlanCtx {
+                state: &state,
+                tokens: &plan_tokens,
+                slots: &slots,
+                last_conf: &[],
+                batch,
+                seq_len: STUB_SEQ_LEN,
+                heal_budget,
+                sched_per_step,
+            };
+            policy.plan(&cx)
+        };
+        state.commit(&plan, &mut slots);
+        let mut commits_this_step = 0usize;
+        let active_rows = residents.iter().filter(|s| s.is_some()).count();
+        for (si, slot) in residents.iter_mut().enumerate() {
+            let done = {
+                let Some(r) = slot.as_mut() else { continue };
+                r.steps += 1;
+                let ncommit =
+                    cfg.commits_per_step.max(1).min(r.masks.len() - r.committed);
+                let from = r.committed;
+                r.committed += ncommit;
+                commits_this_step += ncommit;
+                let positions = r.masks[from..r.committed].to_vec();
+                if r.ttft_ms.is_none() && !positions.is_empty() {
+                    r.ttft_ms =
+                        Some(r.req.submitted.elapsed().as_secs_f64() * 1e3);
+                }
+                if r.req.params.stream && !positions.is_empty() {
+                    let delta = r.decode_char().to_string().repeat(positions.len());
+                    let _ = r.reply.send(ReqEvent::Tokens {
+                        id: r.req.id,
+                        delta,
+                        positions,
+                    });
+                    metrics.stream_frames += 1;
+                }
+                let cap = r.req.params.max_steps.unwrap_or(usize::MAX);
+                r.committed >= r.masks.len() || r.steps >= cap
+            };
+            if done {
+                let r = slot.take().expect("finished resident present");
+                slots[si] = SlotState::empty();
+                let latency_ms = r.req.submitted.elapsed().as_secs_f64() * 1e3;
+                let ttft = r.ttft_ms.unwrap_or(f64::NAN);
+                metrics.record_completion(ttft, latency_ms, r.committed);
+                let text = r.decode_char().to_string().repeat(r.committed);
+                let mut tokens = r.req.tokens.clone();
+                for &p in &r.masks[..r.committed] {
+                    tokens[p] = 0;
+                }
+                let _ = r.reply.send(ReqEvent::Done(Response {
+                    id: r.req.id,
+                    text,
+                    tokens,
+                    prompt_len: r.req.prompt_len,
+                    decoded: r.committed,
+                    steps: r.steps,
+                    ttft_ms: ttft,
+                    latency_ms,
+                }));
+                status.dec_inflight();
+            }
+        }
+        if let Some(c) = &mut ctrl {
+            let free = residents.iter().filter(|s| s.is_none()).count();
+            c.observe(&StepObs {
+                commits: commits_this_step,
+                active_rows,
+                queue_depth: queue.len(),
+                free_slots: free,
+                proxy_drift: cfg.proxy_drift.as_deref(),
+            });
+        }
+        // Mirror the production counters — `CacheState`/controller stay
+        // the single source of truth, exactly like the real worker.
+        metrics.steps = state.steps;
+        metrics.refreshes = state.refreshes;
+        metrics.partial_refreshes = state.partial_refreshes;
+        metrics.rows_invalidated = state.rows_invalidated;
+        metrics.scheduled_row_refreshes = state.scheduled_row_refreshes;
+        metrics.schedule_refits = ctrl.as_ref().map(|c| c.refits()).unwrap_or(0);
+        metrics.tier_switches = ctrl.as_ref().map(|c| c.switches()).unwrap_or(0);
+        metrics.budget_tier = ctrl.as_ref().map(|c| c.active_tier()).unwrap_or(0);
         next_step = Instant::now() + step;
     }
 }

@@ -137,6 +137,7 @@ mod tests {
             id,
             tokens: vec![MASK; 8],
             prompt_len: 2,
+            gen_end: 8,
             answer: None,
             task: None,
             params: crate::coordinator::request::GenParams::default(),

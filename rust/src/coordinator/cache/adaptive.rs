@@ -1,0 +1,513 @@
+//! Online adaptive budget controller: re-fits the ρ schedule (paper Eq. 5)
+//! from drift signals measured *at decode time* and selects among compiled
+//! budget-tier step variants under load.
+//!
+//! The paper's second contribution — "allocate fewer updates to stable
+//! layers" — previously existed only as a compile-time schedule baked into
+//! each step executable.  This controller closes the loop at serving time:
+//!
+//! 1. **Drift tracking.** Every decode step the worker feeds it the step's
+//!    commit dynamics (MASK positions committed per resident row) and, when
+//!    the executing variant exports them, per-layer proxy residual stats
+//!    ([`StepOut::proxy_drift`](super::method::StepOut)).  Both are folded
+//!    into an EWMA per-layer drift profile; without in-graph residuals the
+//!    profile is the model's calibration shape scaled by measured commit
+//!    activity (fast-committing rows ⇒ fast-moving activations).
+//! 2. **Online refit.** Every `refit_interval` steps the profile is
+//!    re-fitted through the existing [`fit_piecewise_gaussian`] — the same
+//!    Eq. 5 fit the compile path uses — and the result drives tier choice
+//!    (`spa_schedule_refits_total` counts these).
+//! 3. **Tier selection.** The engine registry already carries a family of
+//!    spa step variants compiled at different budgets (the ablation
+//!    rank/ratio family: `spa_singular16_umean` < `spa_default` <
+//!    `spa_singular16_u25`, …).  Variants whose cache-tensor signatures
+//!    match are hot-swappable mid-decode; the controller picks the
+//!    cheapest tier whose ρ̄ covers the fitted drift, sheds one tier under
+//!    queue pressure (deep batcher queue ⇒ throughput over freshness), and
+//!    moves one tier at a time behind a dwell hysteresis so measurement
+//!    noise cannot thrash the executable choice (`spa_budget_tier` gauge).
+//! 4. **Budget ownership.** The heal budget handed to the policy
+//!    ([`PlanCtx::heal_budget`](super::policy::PlanCtx)) is derived from
+//!    the *active tier's* schedule — its slowest layer, never an arbitrary
+//!    clamp — so low-ρ̄ tiers are never declared healed early.
+//!
+//! Everything here is host-pure (no engine): the stub serving benches and
+//! `rust/tests/cache_policy.rs` drive the real controller artifact-free.
+
+use super::method::runtime_input_prefix;
+use crate::model::schedule::{fit_piecewise_gaussian, RhoSchedule};
+use crate::runtime::manifest::{Manifest, VariantInfo};
+use crate::runtime::tensor::Dtype;
+
+/// One selectable budget level: a compiled step variant plus the static
+/// budget facts the controller needs about it.
+#[derive(Debug, Clone)]
+pub struct BudgetTier {
+    /// Full variant name in the engine registry (`llada_s__spa_default`).
+    pub name: String,
+    /// Mean update ratio ρ̄ of the variant's compiled schedule.
+    pub mean_rho: f64,
+    /// Cached steps to heal one dirty row under this tier's budget
+    /// (slowest layer of its schedule — see [`heal_budget_for`]).
+    pub heal_budget: usize,
+}
+
+impl BudgetTier {
+    /// Tier facts for one registry variant.
+    pub fn from_variant(info: &VariantInfo) -> BudgetTier {
+        BudgetTier {
+            name: info.name.clone(),
+            mean_rho: info.mean_rho(),
+            heal_budget: heal_budget_for(info),
+        }
+    }
+}
+
+/// Cached steps of in-graph servicing needed to recompute one whole row
+/// under a variant's compiled budget: the **slowest layer** bounds it
+/// (`max_l ⌈N / k_l⌉`).  Replaces the old `ceil(1/ρ̄).clamp(1, 8)` — a
+/// mean-based estimate with an arbitrary cap declared low-ρ̄ rows healed
+/// while their slowest layers still held stale entries.
+pub fn heal_budget_for(info: &VariantInfo) -> usize {
+    if info.seq_len == 0 {
+        return 1;
+    }
+    if info.k_per_layer.is_empty() {
+        // No static k table in the manifest: derive straight from the
+        // compiled ρ schedule ([`RhoSchedule::heal_steps`]).  The slowest
+        // layer sits at a schedule boundary, so the nominal depth barely
+        // matters — 8 covers both boundaries and the peak.
+        return info.schedule.heal_steps(8);
+    }
+    info.k_per_layer
+        .iter()
+        .map(|&k| info.seq_len.div_ceil(k.max(1)))
+        .max()
+        .unwrap_or(1)
+        .max(1)
+}
+
+/// Discover the hot-swappable budget-tier family for `base` in the
+/// registry: same-kind spa variants of the same model and geometry whose
+/// cache-tensor input signatures (everything past the `tokens` prefix)
+/// match `base` exactly — shape-compatible executables the worker can swap
+/// between steps without invalidating the device cache.  Sorted by
+/// ascending ρ̄; always contains `base` itself.
+pub fn discover_tiers(manifest: &Manifest, base: &VariantInfo) -> Vec<BudgetTier> {
+    // Cache-tensor signature: everything past the variant's declared
+    // runtime-input prefix (the same positional rule `zero_caches` uses —
+    // see `runtime_input_prefix`), shapes *and* dtypes.
+    let cache_sig = |v: &VariantInfo| -> Vec<(Vec<usize>, Dtype)> {
+        v.inputs
+            .iter()
+            .skip(runtime_input_prefix(v))
+            .map(|i| (i.shape.clone(), i.dtype))
+            .collect()
+    };
+    let base_sig = cache_sig(base);
+    let mut tiers: Vec<BudgetTier> = manifest
+        .variants
+        .values()
+        .filter(|v| {
+            v.kind == base.kind
+                && v.model == base.model
+                && v.batch == base.batch
+                && v.seq_len == base.seq_len
+                && cache_sig(v) == base_sig
+        })
+        .map(BudgetTier::from_variant)
+        .collect();
+    tiers.sort_by(|a, b| a.mean_rho.total_cmp(&b.mean_rho));
+    // Collapse duplicate budgets (keep the base name when it ties, so the
+    // configured variant stays the representative of its level).
+    tiers.dedup_by(|b_, a| {
+        if (a.mean_rho - b_.mean_rho).abs() < 1e-9 {
+            if b_.name == base.name {
+                a.name = b_.name.clone();
+                a.heal_budget = b_.heal_budget;
+            }
+            true
+        } else {
+            false
+        }
+    });
+    tiers
+}
+
+/// Controller knobs (serving defaults; the bench/CLI front-ends override
+/// `refit_interval` / `row_refresh_per_step` through `PolicyFlags`).
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// Decode steps between ρ-schedule refits.
+    pub refit_interval: usize,
+    /// EWMA smoothing factor for the drift profile and activity signal.
+    pub ewma: f64,
+    /// Cap handed to [`fit_piecewise_gaussian`] (paper uses ρ ≤ 0.5).
+    pub rho_cap: f64,
+    /// Queue pressure (`queue / (queue + free slots)`) above which the
+    /// controller sheds one budget tier for throughput.
+    pub pressure_high: f64,
+    /// Consecutive same-direction votes before a tier switch commits.
+    pub dwell: usize,
+    /// Staggered-refresh bound forwarded to the policy: rows in scheduled
+    /// per-row service at once.
+    pub row_refresh_per_step: usize,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            refit_interval: 32,
+            ewma: 0.2,
+            rho_cap: 0.5,
+            pressure_high: 0.5,
+            dwell: 4,
+            row_refresh_per_step: 1,
+        }
+    }
+}
+
+/// One decode step's worth of measurements, as the worker observes them.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepObs<'a> {
+    /// MASK positions committed this step, summed over resident rows.
+    pub commits: usize,
+    /// Resident (occupied) rows this step.
+    pub active_rows: usize,
+    /// Batcher queue depth after the step (load pressure).
+    pub queue_depth: usize,
+    /// Free batch slots after the step.
+    pub free_slots: usize,
+    /// Per-layer proxy residual stats exported by the step executable
+    /// (`StepOut::proxy_drift`), when the variant surfaces them.
+    pub proxy_drift: Option<&'a [f64]>,
+}
+
+/// The runtime controller: EWMA drift profile → periodic Eq. 5 refit →
+/// hysteresis-damped budget-tier selection.
+#[derive(Debug)]
+pub struct AdaptiveController {
+    cfg: AdaptiveConfig,
+    tiers: Vec<BudgetTier>,
+    active: usize,
+    /// Calibration drift shape (per layer) the activity signal scales when
+    /// no in-graph residuals are available.
+    base: Vec<f64>,
+    /// EWMA per-layer drift estimate, refit input.
+    drift: Vec<f64>,
+    /// EWMA commit activity in [0, 1] (~1 ⇒ every resident row saturates
+    /// its parallel-unmask budget each step).
+    activity: f64,
+    /// Latest fitted schedule (starts as the fit of the calibration shape).
+    schedule: RhoSchedule,
+    steps_since_refit: usize,
+    refits: u64,
+    switches: u64,
+    /// Hysteresis accumulator: +1 votes toward a higher tier, -1 lower.
+    votes: i64,
+}
+
+/// Commits-per-row count treated as "fully saturated" when squashing the
+/// activity signal into [0, 1].
+const ACTIVITY_SATURATION: f64 = 8.0;
+
+impl AdaptiveController {
+    /// Controller over an ascending-ρ̄ tier family, starting at
+    /// `start` (the configured method's own variant).  `base_profile` is
+    /// the per-layer calibration drift shape (manifest `drift_profile`, or
+    /// the base variant's compiled schedule when absent); it needs at
+    /// least two layers for the Eq. 5 fit.
+    pub fn new(
+        tiers: Vec<BudgetTier>,
+        start: usize,
+        base_profile: Vec<f64>,
+        cfg: AdaptiveConfig,
+    ) -> AdaptiveController {
+        assert!(!tiers.is_empty(), "adaptive controller needs at least one tier");
+        assert!(base_profile.len() >= 2, "drift profile needs >= 2 layers");
+        let start = start.min(tiers.len() - 1);
+        let drift = base_profile.clone();
+        let schedule = fit_piecewise_gaussian(&drift, cfg.rho_cap);
+        AdaptiveController {
+            cfg,
+            tiers,
+            active: start,
+            base: base_profile,
+            drift,
+            activity: 0.5,
+            schedule,
+            steps_since_refit: 0,
+            refits: 0,
+            switches: 0,
+            votes: 0,
+        }
+    }
+
+    /// Fold one step's measurements in; refits and tier votes happen here.
+    pub fn observe(&mut self, obs: &StepObs<'_>) {
+        if obs.active_rows > 0 {
+            let a = (obs.commits as f64
+                / (obs.active_rows as f64 * ACTIVITY_SATURATION))
+                .min(1.0);
+            self.activity += self.cfg.ewma * (a - self.activity);
+        }
+        let eps = 1e-4;
+        match obs.proxy_drift {
+            // In-graph residual stats: the direct measurement wins.
+            Some(d) if d.len() == self.drift.len() => {
+                for (cur, &x) in self.drift.iter_mut().zip(d) {
+                    let t = x.clamp(eps, self.cfg.rho_cap);
+                    *cur += self.cfg.ewma * (t - *cur);
+                }
+            }
+            // Fallback: calibration shape scaled by commit activity
+            // (activity 0.5 reproduces the calibration profile).
+            _ => {
+                let scale = 2.0 * self.activity;
+                for (cur, &b) in self.drift.iter_mut().zip(&self.base) {
+                    let t = (b * scale).clamp(eps, self.cfg.rho_cap);
+                    *cur += self.cfg.ewma * (t - *cur);
+                }
+            }
+        }
+        self.steps_since_refit += 1;
+        if self.steps_since_refit >= self.cfg.refit_interval.max(1) {
+            self.steps_since_refit = 0;
+            self.schedule = fit_piecewise_gaussian(&self.drift, self.cfg.rho_cap);
+            self.refits += 1;
+        }
+        self.vote(obs.queue_depth, obs.free_slots);
+    }
+
+    /// Tier the measured state asks for, before hysteresis.
+    fn desired(&self, queue_depth: usize, free_slots: usize) -> usize {
+        let n = self.drift.len();
+        let want = self.schedule.mean_rho(n);
+        let mut d = self
+            .tiers
+            .iter()
+            .position(|t| t.mean_rho + 1e-9 >= want)
+            .unwrap_or(self.tiers.len() - 1);
+        let denom = (queue_depth + free_slots).max(1) as f64;
+        if queue_depth as f64 / denom > self.cfg.pressure_high {
+            // Saturated: shed budget, trade freshness for throughput.
+            d = d.saturating_sub(1);
+        }
+        d
+    }
+
+    /// Hysteresis: accumulate same-direction votes, move one tier per
+    /// `dwell` of them so noise cannot thrash the executable choice.
+    fn vote(&mut self, queue_depth: usize, free_slots: usize) {
+        let want = self.desired(queue_depth, free_slots);
+        if want > self.active {
+            self.votes = self.votes.max(0) + 1;
+        } else if want < self.active {
+            self.votes = self.votes.min(0) - 1;
+        } else {
+            self.votes = 0;
+            return;
+        }
+        let dwell = self.cfg.dwell.max(1) as i64;
+        if self.votes >= dwell {
+            self.active += 1;
+            self.switches += 1;
+            self.votes = 0;
+        } else if self.votes <= -dwell {
+            self.active -= 1;
+            self.switches += 1;
+            self.votes = 0;
+        }
+    }
+
+    /// Index of the active tier (the `spa_budget_tier` gauge).
+    pub fn active_tier(&self) -> usize {
+        self.active
+    }
+
+    /// The active tier's registry facts (variant name the worker swaps to).
+    pub fn tier(&self) -> &BudgetTier {
+        &self.tiers[self.active]
+    }
+
+    /// Heal budget under the active tier — the policy's completion
+    /// threshold is owned here, derived from the executing schedule.
+    pub fn heal_budget(&self) -> usize {
+        self.tiers[self.active].heal_budget
+    }
+
+    /// Staggered-refresh bound forwarded to `PlanCtx::sched_per_step`.
+    pub fn row_refresh_per_step(&self) -> usize {
+        self.cfg.row_refresh_per_step
+    }
+
+    /// Online schedule refits performed (`spa_schedule_refits_total`).
+    pub fn refits(&self) -> u64 {
+        self.refits
+    }
+
+    /// Tier switches committed (hysteresis-damped).
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// Latest fitted ρ schedule.
+    pub fn schedule(&self) -> &RhoSchedule {
+        &self.schedule
+    }
+}
+
+/// The synthetic three-level tier family the artifact-free stub benches
+/// drive the real controller with (no engine registry available).
+pub fn stub_tiers() -> Vec<BudgetTier> {
+    vec![
+        BudgetTier { name: "stub__spa_lo".into(), mean_rho: 0.125, heal_budget: 8 },
+        BudgetTier { name: "stub__spa_mid".into(), mean_rho: 0.25, heal_budget: 4 },
+        BudgetTier { name: "stub__spa_hi".into(), mean_rho: 0.5, heal_budget: 2 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctrl(cfg: AdaptiveConfig) -> AdaptiveController {
+        AdaptiveController::new(stub_tiers(), 1, vec![0.1, 0.3, 0.2, 0.15], cfg)
+    }
+
+    fn quiet_obs() -> StepObs<'static> {
+        StepObs { commits: 4, active_rows: 1, queue_depth: 0, free_slots: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn refits_on_interval_and_counts() {
+        let mut c = ctrl(AdaptiveConfig { refit_interval: 8, ..Default::default() });
+        for _ in 0..7 {
+            c.observe(&quiet_obs());
+        }
+        assert_eq!(c.refits(), 0);
+        c.observe(&quiet_obs());
+        assert_eq!(c.refits(), 1, "refit fires on the interval");
+        for _ in 0..16 {
+            c.observe(&quiet_obs());
+        }
+        assert_eq!(c.refits(), 3);
+        // The fitted schedule stays a sane Eq.5 member.
+        let s = c.schedule();
+        assert!(s.rho_p > 0.0 && s.rho_p <= 0.5 + 1e-9);
+    }
+
+    #[test]
+    fn queue_pressure_sheds_a_tier_with_hysteresis() {
+        let mut c = ctrl(AdaptiveConfig {
+            refit_interval: 4,
+            dwell: 3,
+            ..Default::default()
+        });
+        assert_eq!(c.active_tier(), 1, "starts at the configured tier");
+        let loaded = StepObs {
+            commits: 4,
+            active_rows: 1,
+            queue_depth: 12,
+            free_slots: 0,
+            ..Default::default()
+        };
+        // Fewer than `dwell` pressure votes must not switch.
+        c.observe(&loaded);
+        c.observe(&loaded);
+        assert_eq!(c.active_tier(), 1, "hysteresis holds");
+        c.observe(&loaded);
+        assert_eq!(c.active_tier(), 0, "sustained pressure sheds one tier");
+        assert_eq!(c.switches(), 1);
+        // Pressure released: drift pulls the controller back up.
+        for _ in 0..64 {
+            c.observe(&quiet_obs());
+        }
+        assert_eq!(c.active_tier(), 1, "recovers when the queue drains");
+        assert!(c.switches() >= 2);
+    }
+
+    #[test]
+    fn proxy_residuals_override_the_activity_fallback() {
+        let mut c = ctrl(AdaptiveConfig {
+            refit_interval: 1,
+            ewma: 1.0,
+            ..Default::default()
+        });
+        // Hot residuals on every layer push the fit to the cap region and
+        // the desired tier to the top.
+        let hot = [0.5, 0.5, 0.5, 0.5];
+        for _ in 0..16 {
+            c.observe(&StepObs {
+                commits: 0,
+                active_rows: 1,
+                queue_depth: 0,
+                free_slots: 4,
+                proxy_drift: Some(&hot),
+            });
+        }
+        assert_eq!(c.active_tier(), 2, "measured drift drives tier up");
+        // Mismatched residual length falls back to the activity path
+        // instead of corrupting the profile.
+        let short = [0.5];
+        c.observe(&StepObs {
+            commits: 0,
+            active_rows: 1,
+            queue_depth: 0,
+            free_slots: 4,
+            proxy_drift: Some(&short),
+        });
+        assert!(c.schedule().rho_p.is_finite());
+    }
+
+    #[test]
+    fn heal_budget_follows_the_active_tier() {
+        let mut c = ctrl(AdaptiveConfig { dwell: 1, ..Default::default() });
+        assert_eq!(c.heal_budget(), 4, "mid tier");
+        let loaded = StepObs {
+            commits: 0,
+            active_rows: 1,
+            queue_depth: 20,
+            free_slots: 0,
+            ..Default::default()
+        };
+        c.observe(&loaded);
+        assert_eq!(c.active_tier(), 0);
+        assert_eq!(c.heal_budget(), 8, "cheaper tier heals slower");
+        assert_eq!(c.tier().name, "stub__spa_lo");
+    }
+
+    #[test]
+    fn heal_budget_for_uses_the_slowest_layer() {
+        use crate::runtime::manifest::IoSpec;
+        let v = VariantInfo {
+            name: "m__spa_x".into(),
+            kind: "spa".into(),
+            model: "m".into(),
+            file: "f.hlo".into(),
+            batch: 4,
+            seq_len: 128,
+            identifier: "singular".into(),
+            rank: 16,
+            k_per_layer: vec![8, 32, 64],
+            manual_k: 128,
+            msteps: 1,
+            threshold: 0.0,
+            kernel_backend: "jnp".into(),
+            params: Vec::new(),
+            inputs: Vec::<IoSpec>::new(),
+            outputs: Vec::new(),
+            schedule: RhoSchedule::uniform(0.25),
+        };
+        // Slowest layer k=8 over N=128 ⇒ 16 steps — the old clamp(1, 8)
+        // would have declared the row healed at half coverage.
+        assert_eq!(heal_budget_for(&v), 16);
+        // Without a static k table the compiled ρ schedule decides
+        // (uniform 0.25 ⇒ 4 steps), never a silent constant.
+        let mut flat = v.clone();
+        flat.k_per_layer = Vec::new();
+        assert_eq!(heal_budget_for(&flat), 4, "schedule fallback, not clamp");
+        flat.seq_len = 0;
+        assert_eq!(heal_budget_for(&flat), 1, "degenerate geometry ⇒ one step");
+    }
+}

@@ -129,12 +129,12 @@ impl CachePolicy for ManualPolicy {
 
     fn plan(&mut self, cx: &PlanCtx<'_>) -> Plan {
         if !cx.state.primed || cx.state.force_refresh {
-            return Plan { exec: Exec::RefreshManual, serviced: Vec::new() };
+            return Plan { exec: Exec::RefreshManual, ..Plan::cached() };
         }
         if self.refresh_interval > 0
             && max_steps_since_refresh(cx.slots) >= self.refresh_interval
         {
-            return Plan { exec: Exec::RefreshManual, serviced: Vec::new() };
+            return Plan { exec: Exec::RefreshManual, ..Plan::cached() };
         }
         let (b, n, k) = (cx.batch, cx.seq_len, self.k);
         let dirty = dirty_rows(cx.slots);
@@ -167,6 +167,6 @@ impl CachePolicy for ManualPolicy {
             };
             indices.extend(picked.into_iter().map(|p| p as i32));
         }
-        Plan { exec: Exec::Cached { indices: Some(indices) }, serviced }
+        Plan { exec: Exec::Cached { indices: Some(indices) }, serviced, scheduled: Vec::new() }
     }
 }

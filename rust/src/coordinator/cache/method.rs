@@ -13,9 +13,12 @@ use crate::runtime::engine::{Engine, LoadedVariant};
 use crate::runtime::manifest::VariantInfo;
 use crate::runtime::tensor::Dtype;
 
+use super::adaptive::{
+    discover_tiers, heal_budget_for, AdaptiveConfig, AdaptiveController, StepObs,
+};
 use super::policy::{CachePolicy, Exec, PlanCtx};
 use super::state::CacheState;
-use super::MethodSpec;
+use super::{MethodSpec, PolicyFlags};
 use crate::coordinator::request::SlotState;
 
 /// Output of one engine step as seen by the decode loop.
@@ -26,6 +29,11 @@ pub struct StepOut {
     pub new_tokens: Option<Vec<i32>>,
     /// This step paid the full refresh cost (metrics / refresh counters).
     pub was_refresh: bool,
+    /// Per-layer proxy residual stats, when the executing variant exports
+    /// them — the adaptive budget controller's direct drift measurement.
+    /// The current AOT graphs keep residuals in-graph (`None` here); the
+    /// stub engines and future variants surface them through this field.
+    pub proxy_drift: Option<Vec<f64>>,
 }
 
 /// A cache method bound to one model + engine, holding group cache state.
@@ -43,9 +51,24 @@ pub struct Method {
     /// Device-resident cache buffers, in the step variant's trailing
     /// input order (never copied back to the host — see engine perf notes).
     caches: Option<Vec<PjRtBuffer>>,
-    /// Cached steps of in-graph servicing that heal one dirty row
-    /// (≈ ⌈1/ρ̄⌉ from the step variant's schedule).
+    /// Vocab size, resolved once at bind time from the variant's `logits`
+    /// IoSpec or the model's manifest arch — never a silent fallback (a
+    /// malformed manifest would mis-stride the sampler).
+    vocab: usize,
+    /// Cached steps of in-graph servicing that heal one dirty row, from
+    /// the step variant's compiled schedule (its slowest layer — see
+    /// `adaptive::heal_budget_for`).  The adaptive controller overrides
+    /// this per active tier when enabled.
     heal_budget: usize,
+    /// Staggered-refresh bound forwarded to `PlanCtx::sched_per_step`.
+    row_refresh_per_step: usize,
+    /// Online budget controller (`--adaptive on`): drift tracking, ρ
+    /// refits and budget-tier selection (tier swaps happen in
+    /// [`Method::step`]).
+    adaptive: Option<AdaptiveController>,
+    /// Per-layer proxy residual stats from the most recent step, held for
+    /// the next [`Method::observe`] call.
+    last_proxy_drift: Option<Vec<f64>>,
     /// Last-step per-position confidence; only maintained when the active
     /// policy declares it needs one (the host softmax is O(B·N·V)).
     last_conf: Vec<f32>,
@@ -63,12 +86,11 @@ impl Method {
             Some(n) => Some(engine.load_variant(&n)?),
             None => None,
         };
-        let rho = step_var.info.mean_rho();
-        let heal_budget = if rho.is_finite() && rho > 0.0 {
-            ((1.0 / rho).ceil() as usize).clamp(1, 8)
-        } else {
-            1
-        };
+        // Vocab resolution is a bind-time **hard error**, never a silent
+        // fallback: a manifest missing both a `logits` IoSpec and the
+        // model arch would otherwise mis-stride every sampler read.
+        let vocab = resolve_vocab(engine, model, &step_var.info)?;
+        let heal_budget = heal_budget_for(&step_var.info);
         Ok(Method {
             spec,
             model: model.to_string(),
@@ -77,22 +99,76 @@ impl Method {
             step_var,
             refresh_var,
             caches: None,
+            vocab,
             heal_budget,
+            row_refresh_per_step: 1,
+            adaptive: None,
+            last_proxy_drift: None,
             last_conf: Vec::new(),
         })
+    }
+
+    /// Apply the CLI policy gates: admission-time partial refresh,
+    /// staggered-refresh bound, and — when `--adaptive on` — the online
+    /// budget controller over the registry's hot-swappable tier family.
+    ///
+    /// Like `--partial-refresh`, the adaptive gate is a **capability**:
+    /// only spa-kind methods carry a tier family, so on any other method
+    /// it is a no-op here — a mixed `--methods vanilla,spa --adaptive on`
+    /// bench lineup keeps its baselines instead of erroring them into a
+    /// SKIP (the front-ends separately validate that *some* selected
+    /// method can apply the gate, via `loadgen::validate_policy_flags`).
+    pub fn configure(&mut self, engine: &Engine, flags: &PolicyFlags) -> Result<()> {
+        self.policy.set_partial(flags.partial_refresh);
+        if let Some(n) = flags.row_refresh_per_step {
+            self.row_refresh_per_step = n;
+        }
+        if flags.adaptive && self.step_var.info.kind == "spa" {
+            let defaults = AdaptiveConfig::default();
+            let cfg = AdaptiveConfig {
+                refit_interval: flags.refit_interval.unwrap_or(defaults.refit_interval),
+                row_refresh_per_step: self.row_refresh_per_step,
+                ..defaults
+            };
+            self.enable_adaptive(engine, cfg)?;
+        }
+        Ok(())
+    }
+
+    /// Attach the adaptive budget controller: discover the hot-swappable
+    /// budget-tier family for this method's step variant in the engine
+    /// registry and start at the configured variant's own tier.  Only
+    /// spa-kind methods carry a tier family (the ablation ratio/rank
+    /// variants); anything else is a configuration error.
+    pub fn enable_adaptive(&mut self, engine: &Engine, cfg: AdaptiveConfig) -> Result<()> {
+        anyhow::ensure!(
+            self.step_var.info.kind == "spa",
+            "--adaptive requires an spa-kind method (step variant {} is '{}')",
+            self.step_var.info.name,
+            self.step_var.info.kind
+        );
+        let tiers = discover_tiers(&engine.manifest, &self.step_var.info);
+        let start = tiers
+            .iter()
+            .position(|t| t.name == self.step_var.info.name)
+            .context("base variant missing from its own tier family")?;
+        // Calibration drift shape: the model's measured profile when the
+        // manifest has one, else the variant's compiled schedule.
+        let n_layers = engine.manifest.model(&self.model)?.arch.n_layers.max(2);
+        let mut base = engine.manifest.model(&self.model)?.drift_profile.clone();
+        if base.len() < 2 {
+            base = (1..=n_layers)
+                .map(|l| self.step_var.info.schedule.rho(l, n_layers))
+                .collect();
+        }
+        self.adaptive = Some(AdaptiveController::new(tiers, start, base, cfg));
+        Ok(())
     }
 
     /// `(batch, seq_len, vocab)` of the step executable.
     pub fn geometry(&self) -> (usize, usize, usize) {
         let v = &self.step_var.info;
-        let vocab = v
-            .outputs
-            .iter()
-            .chain(v.inputs.iter())
-            .find(|o| o.name == "logits")
-            .map(|o| o.shape[2])
-            .unwrap_or(64);
-        (v.batch, v.seq_len, vocab)
+        (v.batch, v.seq_len, self.vocab)
     }
 
     /// The loaded step executable (shape/geometry introspection).
@@ -107,10 +183,43 @@ impl Method {
         self.policy.admission_forces_refresh()
     }
 
-    /// Toggle admission-time partial refresh (`--partial-refresh` CLI
-    /// gate); policies without the capability ignore it.
-    pub fn set_partial_refresh(&mut self, on: bool) {
-        self.policy.set_partial(on);
+    /// Feed one step's measured dynamics to the adaptive controller (the
+    /// worker calls this after committing tokens): commit counts, load
+    /// pressure, and whatever proxy residual stats the last step exported.
+    /// No-op without `--adaptive on`.
+    pub fn observe(
+        &mut self,
+        commits: usize,
+        active_rows: usize,
+        queue_depth: usize,
+        free_slots: usize,
+    ) {
+        let drift = self.last_proxy_drift.take();
+        if let Some(ctrl) = &mut self.adaptive {
+            ctrl.observe(&StepObs {
+                commits,
+                active_rows,
+                queue_depth,
+                free_slots,
+                proxy_drift: drift.as_deref(),
+            });
+        }
+    }
+
+    /// Active budget-tier index (`spa_budget_tier` gauge; 0 when the
+    /// adaptive controller is off).
+    pub fn budget_tier(&self) -> usize {
+        self.adaptive.as_ref().map(|c| c.active_tier()).unwrap_or(0)
+    }
+
+    /// Online ρ-schedule refits performed (`spa_schedule_refits_total`).
+    pub fn schedule_refits(&self) -> u64 {
+        self.adaptive.as_ref().map(|c| c.refits()).unwrap_or(0)
+    }
+
+    /// Budget-tier switches committed (`spa_tier_switches_total`).
+    pub fn tier_switches(&self) -> u64 {
+        self.adaptive.as_ref().map(|c| c.switches()).unwrap_or(0)
     }
 
     /// Drop all cache state: every row is dirtied and the next step pays a
@@ -146,6 +255,21 @@ impl Method {
         anyhow::ensure!(tokens.len() == b * n, "token buffer shape mismatch");
         anyhow::ensure!(slots.len() == b, "slot set shape mismatch");
 
+        // Budget-tier swap: the controller's tier family only contains
+        // variants whose cache-tensor signatures match the base, so the
+        // device cache carries over and the swap is just an executable
+        // change between steps.
+        let mut heal_budget = self.heal_budget;
+        let mut sched_per_step = self.row_refresh_per_step;
+        if let Some(ctrl) = &self.adaptive {
+            let tier = ctrl.tier();
+            if tier.name != self.step_var.info.name {
+                self.step_var = engine.load_variant(&tier.name)?;
+            }
+            heal_budget = ctrl.heal_budget();
+            sched_per_step = ctrl.row_refresh_per_step();
+        }
+
         let plan = {
             let cx = PlanCtx {
                 state: &self.state,
@@ -154,7 +278,8 @@ impl Method {
                 last_conf: &self.last_conf,
                 batch: b,
                 seq_len: n,
-                heal_budget: self.heal_budget,
+                heal_budget,
+                sched_per_step,
             };
             self.policy.plan(&cx)
         };
@@ -168,6 +293,7 @@ impl Method {
                     logits: Some(engine.read_f32(&outs[0])?),
                     new_tokens: None,
                     was_refresh: false,
+                    proxy_drift: None,
                 }
             }
             Exec::Refresh => {
@@ -178,6 +304,7 @@ impl Method {
                     logits: Some(engine.read_f32(&first)?),
                     new_tokens: None,
                     was_refresh: true,
+                    proxy_drift: None,
                 }
             }
             Exec::RefreshManual => {
@@ -194,6 +321,7 @@ impl Method {
                     logits: Some(engine.read_f32(&first)?),
                     new_tokens: None,
                     was_refresh: true,
+                    proxy_drift: None,
                 }
             }
             Exec::Cached { indices } => {
@@ -232,17 +360,23 @@ impl Method {
                         logits: None,
                         new_tokens: Some(engine.read_i32(&first)?),
                         was_refresh: false,
+                        proxy_drift: None,
                     }
                 } else {
                     StepOut {
                         logits: Some(engine.read_f32(&first)?),
                         new_tokens: None,
                         was_refresh: false,
+                        proxy_drift: None,
                     }
                 }
             }
         };
         self.state.commit(&plan, slots);
+        // Hold any exported residual stats for the worker's post-commit
+        // `observe` call (the controller wants them aligned with that
+        // step's commit dynamics).
+        self.last_proxy_drift = out.proxy_drift.clone();
         if self.policy.needs_confidence() {
             if let Some(l) = &out.logits {
                 update_confidence(&mut self.last_conf, l, b, n, slots);
@@ -250,6 +384,37 @@ impl Method {
         }
         Ok(out)
     }
+}
+
+/// Bind-time vocab resolution: the step variant's `logits` IoSpec when it
+/// has one (outputs first, then inputs), else the model's manifest arch.
+/// A manifest providing neither is rejected outright — the old silent
+/// `unwrap_or(64)` mis-strided the sampler on malformed manifests.
+fn resolve_vocab(engine: &Engine, model: &str, info: &VariantInfo) -> Result<usize> {
+    if let Some(io) = info
+        .outputs
+        .iter()
+        .chain(info.inputs.iter())
+        .find(|o| o.name == "logits")
+    {
+        anyhow::ensure!(
+            io.shape.len() == 3,
+            "variant {}: logits IoSpec has shape {:?}, want [B, N, V]",
+            info.name,
+            io.shape
+        );
+        return Ok(io.shape[2]);
+    }
+    // In-graph decode variants (multistep) carry no logits tensor; the
+    // model arch is authoritative there.
+    let arch_vocab = engine.manifest.model(model).map(|m| m.arch.vocab_size);
+    arch_vocab.with_context(|| {
+        format!(
+            "variant {} declares no logits IoSpec and model '{model}' is not \
+             in the manifest — cannot resolve the sampler's vocab stride",
+            info.name
+        )
+    })
 }
 
 /// Shared executor tail: run `var`, hand output 0 to the caller and keep

@@ -31,6 +31,7 @@
 //! * [`vanilla`] / [`spa`] / [`manual`] / [`multistep`] — the policy
 //!   implementations.
 
+pub mod adaptive;
 pub mod manual;
 pub mod method;
 pub mod multistep;
@@ -39,6 +40,10 @@ pub mod spa;
 pub mod state;
 pub mod vanilla;
 
+pub use adaptive::{
+    discover_tiers, heal_budget_for, stub_tiers, AdaptiveConfig, AdaptiveController,
+    BudgetTier, StepObs,
+};
 pub use manual::{IndexPolicy, ManualPolicy};
 pub use method::{runtime_input_prefix, update_confidence, Method, StepOut};
 pub use multistep::MultistepPolicy;
@@ -61,30 +66,57 @@ pub struct PolicyFlags {
     pub partial_refresh: bool,
     /// Scheduled full-refresh interval override (`None` = method default).
     pub refresh_interval: Option<usize>,
+    /// `--adaptive on`: attach the online budget controller
+    /// ([`AdaptiveController`]) — drift-driven ρ-schedule refits plus
+    /// budget-tier selection over the registry's hot-swappable spa
+    /// variant family.  Default off (the static compiled schedule).
+    pub adaptive: bool,
+    /// `--row-refresh N`: staggered-refresh bound — rows in scheduled
+    /// per-row refresh service at once (`None` = 1).
+    pub row_refresh_per_step: Option<usize>,
+    /// `--refit-interval N`: decode steps between online schedule refits
+    /// (`None` = the controller default).
+    pub refit_interval: Option<usize>,
 }
 
 impl Default for PolicyFlags {
     fn default() -> Self {
-        PolicyFlags { partial_refresh: true, refresh_interval: None }
+        PolicyFlags {
+            partial_refresh: true,
+            refresh_interval: None,
+            adaptive: false,
+            row_refresh_per_step: None,
+            refit_interval: None,
+        }
     }
 }
 
 impl PolicyFlags {
-    /// Parse `--partial-refresh on|off` and `--refresh-interval N`.
+    /// Parse `--partial-refresh on|off`, `--refresh-interval N`,
+    /// `--adaptive on|off`, `--row-refresh N` and `--refit-interval N`.
     pub fn from_args(args: &Args) -> Result<PolicyFlags> {
-        let partial_refresh = match args.get("partial-refresh") {
-            None => true,
-            Some(v) => parse_bool(v).ok_or_else(|| {
-                anyhow::anyhow!("bad --partial-refresh '{v}' (want on|off)")
-            })?,
+        let parse_gate = |key: &str, default: bool| -> Result<bool> {
+            match args.get(key) {
+                None => Ok(default),
+                Some(v) => parse_bool(v)
+                    .ok_or_else(|| anyhow::anyhow!("bad --{key} '{v}' (want on|off)")),
+            }
         };
+        let partial_refresh = parse_gate("partial-refresh", true)?;
+        let adaptive = parse_gate("adaptive", false)?;
         let refresh_interval = match args.get("refresh-interval") {
             None => None,
             Some(s) => Some(s.trim().parse::<usize>().map_err(|_| {
                 anyhow::anyhow!("bad --refresh-interval '{s}' (want a step count)")
             })?),
         };
-        Ok(PolicyFlags { partial_refresh, refresh_interval })
+        Ok(PolicyFlags {
+            partial_refresh,
+            refresh_interval,
+            adaptive,
+            row_refresh_per_step: args.strict_count("row-refresh")?,
+            refit_interval: args.strict_count("refit-interval")?,
+        })
     }
 }
 
@@ -244,9 +276,28 @@ mod tests {
         };
         let p = PolicyFlags::from_args(&parse("--partial-refresh off --refresh-interval 4"))
             .unwrap();
-        assert_eq!(p, PolicyFlags { partial_refresh: false, refresh_interval: Some(4) });
+        assert_eq!(
+            p,
+            PolicyFlags {
+                partial_refresh: false,
+                refresh_interval: Some(4),
+                ..PolicyFlags::default()
+            }
+        );
         assert_eq!(PolicyFlags::from_args(&parse("")).unwrap(), PolicyFlags::default());
         assert!(PolicyFlags::from_args(&parse("--partial-refresh offf")).is_err());
         assert!(PolicyFlags::from_args(&parse("--refresh-interval 4x")).is_err());
+        // Adaptive-controller gates parse strictly too.
+        let p = PolicyFlags::from_args(&parse(
+            "--adaptive on --row-refresh 2 --refit-interval 16",
+        ))
+        .unwrap();
+        assert!(p.adaptive);
+        assert_eq!(p.row_refresh_per_step, Some(2));
+        assert_eq!(p.refit_interval, Some(16));
+        assert!(!PolicyFlags::from_args(&parse("")).unwrap().adaptive, "default off");
+        assert!(PolicyFlags::from_args(&parse("--adaptive onn")).is_err());
+        assert!(PolicyFlags::from_args(&parse("--row-refresh 0")).is_err());
+        assert!(PolicyFlags::from_args(&parse("--refit-interval x")).is_err());
     }
 }

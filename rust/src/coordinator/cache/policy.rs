@@ -66,17 +66,30 @@ pub struct Plan {
     /// Dirty rows this step services toward validity (empty on refresh
     /// plans — a full refresh revalidates every row wholesale).
     pub serviced: Vec<RowService>,
+    /// Rows whose **scheduled per-row refresh** begins this step: the row
+    /// is re-marked dirty at commit time (and counted in
+    /// `spa_scheduled_row_refreshes_total`) so subsequent cached steps
+    /// service it through the same [`RowService`] machinery admissions
+    /// use.  The staggered replacement for the old group-global
+    /// `steps_since_refresh ≥ interval ⇒ full refresh` trigger: at most a
+    /// bounded number of rows pay recompute per step while the rest keep
+    /// their cached path.
+    pub scheduled: Vec<usize>,
 }
 
 impl Plan {
     /// A full-cost refresh through the refresh variant.
     pub fn refresh() -> Plan {
-        Plan { exec: Exec::Refresh, serviced: Vec::new() }
+        Plan { exec: Exec::Refresh, serviced: Vec::new(), scheduled: Vec::new() }
     }
 
     /// A cached step with in-graph selection and no partial servicing.
     pub fn cached() -> Plan {
-        Plan { exec: Exec::Cached { indices: None }, serviced: Vec::new() }
+        Plan {
+            exec: Exec::Cached { indices: None },
+            serviced: Vec::new(),
+            scheduled: Vec::new(),
+        }
     }
 
     /// True when executing this plan pays the full refresh cost.
@@ -102,9 +115,15 @@ pub struct PlanCtx<'a> {
     /// Sequence length.
     pub seq_len: usize,
     /// Cached steps of in-graph servicing that heal one dirty row (derived
-    /// from the step variant's mean update ratio ρ̄; unused by substrates
-    /// with explicit indices).
+    /// from the executing variant's schedule — its slowest layer, see
+    /// `RhoSchedule::heal_steps`; unused by substrates with explicit
+    /// indices).  Owned by the adaptive controller when one is active.
     pub heal_budget: usize,
+    /// Staggered-refresh bound: at most this many rows may *begin* a
+    /// scheduled per-row refresh on one step ([`Plan::scheduled`]), and no
+    /// new row is scheduled while that many are still in service.  0
+    /// disables scheduled per-row refreshes entirely.
+    pub sched_per_step: usize,
 }
 
 /// A cache strategy: selection + refresh decisions for one method.

@@ -1,6 +1,7 @@
 //! SPA-Cache policy (and the dLLM-Cache value-identifier baseline): cached
 //! steps with **in-graph** proxy-driven selection, full refreshes only on
-//! cold start or a scheduled interval.
+//! cold start, and interval maintenance paid as **staggered per-row
+//! scheduled refreshes** instead of group-global refresh steps.
 
 use super::policy::{CachePolicy, PartialRefresh, Plan, PlanCtx, RowService};
 use super::state::{dirty_rows, max_steps_since_refresh};
@@ -12,22 +13,38 @@ use super::state::{dirty_rows, max_steps_since_refresh};
 /// Admission-aware partial refresh: the singular-proxy drift detector runs
 /// *in the step graph*, and a freshly admitted row has maximal activation
 /// drift by construction — so the per-layer recompute budget concentrates
-/// on the dirty row for the next `heal_budget` (≈ 1/ρ̄) cached steps
-/// instead of the whole group paying a refresh.  The rows the refresh
-/// variant would have covered wholesale are healed row-targeted; everyone
-/// else keeps their cached logits path and their `steps_since_refresh`.
+/// on the dirty row for the next `heal_budget` cached steps instead of the
+/// whole group paying a refresh.
+///
+/// Scheduled refreshes are staggered the same way: when a resident row's
+/// `steps_since_refresh` crosses `refresh_interval`, the row is re-marked
+/// dirty ([`Plan::scheduled`]) and healed through the identical
+/// [`RowService`] machinery — oldest rows first, at most
+/// `PlanCtx::sched_per_step` rows in service at a time, everyone else on
+/// their cached path.  The old rigid trigger (stalest row ⇒ *every*
+/// resident pays a full refresh step) survives only as the fallback when
+/// partial refresh is gated off (`--partial-refresh off`) or staggering is
+/// explicitly disabled (the fixed-interval baseline in the benches).
 #[derive(Debug)]
 pub struct SpaPolicy {
     variant: String,
     refresh_interval: usize,
     partial: bool,
+    staggered: bool,
 }
 
 impl SpaPolicy {
     /// Policy over a named spa variant pair with a scheduled refresh
     /// interval (0 = never; SPA-Cache's proxies make one unnecessary).
     pub fn new(variant: String, refresh_interval: usize) -> SpaPolicy {
-        SpaPolicy { variant, refresh_interval, partial: true }
+        SpaPolicy { variant, refresh_interval, partial: true, staggered: true }
+    }
+
+    /// Gate the staggered per-row scheduled refresh (`false` restores the
+    /// rigid group-global interval trigger — the fixed baseline the
+    /// serving benches compare the adaptive controller against).
+    pub fn set_staggered(&mut self, on: bool) {
+        self.staggered = on;
     }
 }
 
@@ -55,27 +72,61 @@ impl CachePolicy for SpaPolicy {
         if !cx.state.primed || cx.state.force_refresh {
             return Plan::refresh();
         }
+        let staggered = self.partial && self.staggered && cx.sched_per_step > 0;
         if self.refresh_interval > 0
+            && !staggered
             && max_steps_since_refresh(cx.slots) >= self.refresh_interval
         {
+            // Rigid fallback: the single stalest row forces the whole
+            // group through a full-cost refresh step.
             return Plan::refresh();
         }
-        // Dirty (freshly admitted) rows heal through the in-graph proxy:
-        // one cached step of servicing each.  The per-layer recompute
-        // budget (ρ̄) is shared across the batch, so when several rows are
-        // dirty at once each gets a proportionally smaller slice — the
-        // completion threshold scales with the concurrent dirty count so
-        // a row is never declared valid faster than the budget allows.
         let dirty = dirty_rows(cx.slots);
-        let need = cx.heal_budget * dirty.len().max(1);
-        let serviced = dirty
+        // Staggered scheduled refreshes: rows past the interval begin a
+        // row-targeted re-compute, oldest first, bounded so at most
+        // `sched_per_step` rows are ever in service at once (admission
+        // healing shares the same service capacity — a burst of
+        // admissions defers maintenance rather than stacking on top).
+        let mut scheduled: Vec<usize> = Vec::new();
+        if staggered && self.refresh_interval > 0 {
+            let capacity = cx.sched_per_step.saturating_sub(dirty.len());
+            if capacity > 0 {
+                let mut due: Vec<(usize, usize)> = cx
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| {
+                        s.occupied
+                            && s.cache_valid
+                            && s.steps_since_refresh >= self.refresh_interval
+                    })
+                    .map(|(i, s)| (s.steps_since_refresh, i))
+                    .collect();
+                due.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+                scheduled.extend(due.into_iter().take(capacity).map(|(_, i)| i));
+            }
+        }
+        // Dirty (freshly admitted or scheduled) rows heal through the
+        // in-graph proxy: one cached step of servicing each.  The
+        // per-layer recompute budget is shared across the batch, so when
+        // several rows are dirty at once each gets a proportionally
+        // smaller slice — the completion threshold scales with the
+        // concurrent dirty count so a row is never declared valid faster
+        // than the budget allows.
+        let in_service = dirty.len() + scheduled.len();
+        let need = cx.heal_budget * in_service.max(1);
+        let serviced: Vec<RowService> = dirty
             .iter()
-            .map(|&row| RowService {
+            .map(|&row| (row, cx.slots[row].cache_cover))
+            // A row scheduled *this* step starts its service from zero
+            // cover (commit resets it before servicing applies).
+            .chain(scheduled.iter().map(|&row| (row, 0)))
+            .map(|(row, cover)| RowService {
                 row,
                 covered: 1,
-                complete: cx.slots[row].cache_cover + 1 >= need,
+                complete: cover + 1 >= need,
             })
             .collect();
-        Plan { serviced, ..Plan::cached() }
+        Plan { serviced, scheduled, ..Plan::cached() }
     }
 }

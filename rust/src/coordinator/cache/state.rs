@@ -33,6 +33,10 @@ pub struct CacheState {
     /// blast radius when a policy without partial support escalates to a
     /// blanket invalidate).
     pub rows_invalidated: u64,
+    /// Scheduled per-row refreshes begun ([`Plan::scheduled`]) — interval
+    /// maintenance paid row-by-row instead of as group-global refresh
+    /// steps.
+    pub scheduled_row_refreshes: u64,
 }
 
 impl Default for CacheState {
@@ -44,6 +48,7 @@ impl Default for CacheState {
             steps: 0,
             partial_refreshes: 0,
             rows_invalidated: 0,
+            scheduled_row_refreshes: 0,
         }
     }
 }
@@ -140,6 +145,18 @@ impl CacheState {
                 }
             }
             Exec::Cached { .. } => {
+                // Scheduled per-row refreshes begin here: the row's cache
+                // content is re-marked dirty so subsequent servicing
+                // recomputes it, without touching any other row's validity
+                // or age (the staggered replacement for group-global
+                // interval refreshes).  PAD rows are never scheduled.
+                for &row in &plan.scheduled {
+                    if let Some(s) = slots.get_mut(row).filter(|s| s.occupied) {
+                        s.cache_valid = false;
+                        s.cache_cover = 0;
+                        self.scheduled_row_refreshes += 1;
+                    }
+                }
                 // Only resident rows age — an empty slot must never become
                 // the "stalest row" that triggers an interval refresh.
                 for s in slots.iter_mut().filter(|s| s.occupied) {
@@ -151,6 +168,10 @@ impl CacheState {
                         if sv.complete {
                             s.cache_valid = true;
                             s.cache_cover = 0;
+                            // The service just recomputed the row: its
+                            // refresh age restarts, so a scheduled per-row
+                            // refresh does not immediately re-trigger.
+                            s.steps_since_refresh = 0;
                             self.partial_refreshes += 1;
                         }
                     }
@@ -264,20 +285,50 @@ mod tests {
         st.commit(&Plan::refresh(), &mut slots);
         st.admit(&[1], PartialRefresh::Supported, &mut slots);
         let plan = Plan {
-            exec: Exec::Cached { indices: None },
             serviced: vec![RowService { row: 1, covered: 8, complete: false }],
+            ..Plan::cached()
         };
         st.commit(&plan, &mut slots);
         assert!(!slots[1].cache_valid);
         assert_eq!(slots[1].cache_cover, 8);
         let done = Plan {
-            exec: Exec::Cached { indices: None },
             serviced: vec![RowService { row: 1, covered: 8, complete: true }],
+            ..Plan::cached()
         };
         st.commit(&done, &mut slots);
         assert!(slots[1].cache_valid);
         assert_eq!(slots[1].cache_cover, 0);
+        assert_eq!(
+            slots[1].steps_since_refresh, 0,
+            "a completed service restarts the row's refresh age"
+        );
         assert_eq!(st.partial_refreshes, 1);
         assert_eq!(st.refreshes, 1, "healing never paid a full refresh");
+    }
+
+    #[test]
+    fn commit_scheduled_rows_begin_dirty_and_count() {
+        let mut st = CacheState::default();
+        let mut slots = busy_slots(3);
+        slots.push(SlotState::empty()); // PAD slot
+        st.commit(&Plan::refresh(), &mut slots);
+        // Schedule row 1 (and, bogusly, the PAD row — which must be a
+        // no-op: scheduled refreshes only ever touch resident rows).
+        let plan = Plan { scheduled: vec![1, 3], ..Plan::cached() };
+        st.commit(&plan, &mut slots);
+        assert!(!slots[1].cache_valid, "scheduled row begins service dirty");
+        assert!(slots[0].cache_valid && slots[2].cache_valid, "others keep validity");
+        assert!(slots[3].cache_valid, "PAD row untouched");
+        assert_eq!(st.scheduled_row_refreshes, 1, "PAD schedule not counted");
+        assert_eq!(st.refreshes, 1, "no group refresh was paid");
+        assert_eq!(dirty_rows(&slots), vec![1]);
+        // Completing the service revalidates and resets the age.
+        let done = Plan {
+            serviced: vec![RowService { row: 1, covered: 1, complete: true }],
+            ..Plan::cached()
+        };
+        st.commit(&done, &mut slots);
+        assert!(slots[1].cache_valid);
+        assert_eq!(slots[1].steps_since_refresh, 0);
     }
 }

@@ -26,6 +26,6 @@ impl CachePolicy for VanillaPolicy {
     }
 
     fn plan(&mut self, _cx: &PlanCtx<'_>) -> Plan {
-        Plan { exec: Exec::Stateless, serviced: Vec::new() }
+        Plan { exec: Exec::Stateless, ..Plan::cached() }
     }
 }

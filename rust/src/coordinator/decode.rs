@@ -167,13 +167,20 @@ impl Sampler {
     }
 }
 
-/// True when a slot's generation region holds no MASK tokens.
+/// True when a slot's generation region `[prompt_len, gen_end)` holds no
+/// MASK tokens.  Only the region is scanned — the prompt prefix and PAD
+/// tail can never hold MASK for a well-formed request, so for full-region
+/// requests this is identical to the old whole-row scan, while a request
+/// with `gen_len < seq_len - prompt_len` no longer depends on the PAD tail
+/// being MASK-free.
 pub fn slot_done(tokens: &[i32], seq_len: usize, b: usize, slot: &SlotState) -> bool {
     if !slot.occupied {
         return true;
     }
     let row = &tokens[b * seq_len..(b + 1) * seq_len];
-    !row.iter().any(|&t| t == MASK)
+    let lo = slot.prompt_len.min(seq_len);
+    let hi = slot.gen_end.clamp(lo, seq_len);
+    !row[lo..hi].iter().any(|&t| t == MASK)
 }
 
 #[cfg(test)]
@@ -300,8 +307,45 @@ mod tests {
         let tokens = vec![BOS, 5, 6, PAD];
         let s = slot(2, 3, usize::MAX);
         assert!(slot_done(&tokens, 4, 0, &s));
-        let tokens2 = vec![BOS, MASK, 6, PAD];
+        let tokens2 = vec![BOS, 5, MASK, PAD];
         assert!(!slot_done(&tokens2, 4, 0, &s));
+    }
+
+    /// The completion scan is region-restricted: a stray MASK outside
+    /// `[prompt_len, gen_end)` (e.g. another slot's leftovers in a shared
+    /// buffer, or a PAD-tail artefact) must not keep the slot resident.
+    #[test]
+    fn slot_done_ignores_masks_outside_generation_region() {
+        // Region [2, 4) fully decoded; position 5 (PAD tail) holds a MASK.
+        let tokens = vec![BOS, 7, 5, 6, PAD, MASK, PAD, PAD];
+        let s = slot(2, 4, usize::MAX);
+        assert!(slot_done(&tokens, 8, 0, &s), "PAD-tail MASK must not block");
+        // A MASK inside the region still blocks completion.
+        let tokens2 = vec![BOS, 7, MASK, 6, PAD, MASK, PAD, PAD];
+        assert!(!slot_done(&tokens2, 8, 0, &s));
+    }
+
+    /// Regression for the gen_end satellite: with the true region end, a
+    /// short-gen request's semi-AR block never advances into the PAD tail.
+    #[test]
+    fn block_advancement_stops_at_true_gen_end() {
+        let (b, n, v) = (1, 8, 8);
+        // prompt [0,2), region [2,5), PAD tail [5,8).
+        let mut tokens = vec![BOS, 5, MASK, MASK, MASK, PAD, PAD, PAD];
+        let mut logits = mk_logits(b, n, v);
+        for pos in 0..n {
+            logits[pos * v + 4] = 10.0;
+        }
+        let mut slots = vec![slot(2, 5, 2)];
+        let mut s = Sampler::greedy(UnmaskMode::BlockParallel { threshold: 0.9 });
+        s.unmask(&mut tokens, &logits, b, n, v, &mut slots);
+        // First block [2,4) decoded; cursor advanced to 4, still < gen_end.
+        assert_eq!(slots[0].block_start, 4);
+        s.unmask(&mut tokens, &logits, b, n, v, &mut slots);
+        // Region exhausted: the cursor must never cross gen_end into PAD.
+        assert_eq!(slots[0].block_start, 4, "cursor stays inside the region");
+        assert!(tokens[5..].iter().all(|&t| t == PAD), "PAD tail untouched");
+        assert!(slot_done(&tokens, n, 0, &slots[0]));
     }
 
     #[test]

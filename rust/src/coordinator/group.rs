@@ -26,11 +26,16 @@ pub struct GroupOutcome {
     pub steps: usize,
     /// Full-cost refresh steps among them.
     pub refreshes: u64,
-    /// Wall time of each step (ms); step 0 is the prefill (TTFT).
+    /// Wall time of each step (ms); step 0 is the prefill.
     pub step_ms: Vec<f64>,
     /// Tokens decoded per slot.
     pub decoded: Vec<usize>,
-    /// TTFT per slot (ms) — time to the first step's logits.
+    /// TTFT per slot (ms): time from group start to the first step that
+    /// *committed a MASK position* for the slot — the same first-token
+    /// semantics the serving path reports, so bench and serving TTFT
+    /// columns in `BENCH_serving.json` are comparable (previously this was
+    /// stamped at step 0's logits for every slot; DESIGN.md §10).  NaN for
+    /// a slot that never committed.
     pub ttft_ms: Vec<f64>,
     /// Total wall time of the group decode (ms).
     pub total_ms: f64,
@@ -125,15 +130,20 @@ pub fn run_group(
         }
         let t0 = Instant::now();
         let out: StepOut = method.step(engine, tokens, slots)?;
-        apply_step_out(out, tokens, slots, sampler, (b, n, v))?;
+        let committed = apply_step_out(out, tokens, slots, sampler, (b, n, v))?;
         let ms = t0.elapsed().as_secs_f64() * 1e3;
         step_ms.push(ms);
-        if steps == 0 {
-            for bi in 0..b {
-                if slots[bi].occupied {
-                    ttft_ms[bi] = ms;
-                    slots[bi].ttft_ms = Some(ms);
-                }
+        // True first-token TTFT: stamp a slot the first time a step
+        // actually commits a MASK position for it, not merely the first
+        // time logits were produced while it was resident.
+        let since_start = t_start.elapsed().as_secs_f64() * 1e3;
+        for bi in 0..b {
+            if slots[bi].occupied
+                && slots[bi].ttft_ms.is_none()
+                && !committed[bi].is_empty()
+            {
+                ttft_ms[bi] = since_start;
+                slots[bi].ttft_ms = Some(since_start);
             }
         }
         steps += 1;
@@ -168,6 +178,7 @@ pub fn pack_group(
             tokens[bi * seq_len..(bi + 1) * seq_len].copy_from_slice(&s.tokens);
             let req = super::request::Request {
                 id: bi as u64,
+                gen_end: super::request::mask_region_end(&s.tokens, s.prompt_len),
                 tokens: s.tokens.clone(),
                 prompt_len: s.prompt_len,
                 answer: Some(s.answer.clone()),

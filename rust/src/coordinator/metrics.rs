@@ -53,6 +53,20 @@ pub struct Metrics {
     /// radius, so `rows_invalidated / requests` exposes the admission
     /// cost per policy).
     pub rows_invalidated: u64,
+    /// Scheduled per-row refreshes begun — interval maintenance paid
+    /// row-by-row (staggered) instead of as group-global refresh steps.
+    pub scheduled_row_refreshes: u64,
+    /// Online ρ-schedule refits performed by the adaptive budget
+    /// controller (0 with `--adaptive off`).
+    pub schedule_refits: u64,
+    /// Budget-tier switches committed by the controller (hysteresis-damped;
+    /// monotone, unlike the `budget_tier` gauge — the evidence that the
+    /// controller acted even after it has moved back).
+    pub tier_switches: u64,
+    /// Active budget tier (gauge; index into the ascending-ρ̄ tier family,
+    /// 0 with `--adaptive off`).  Merged as the **max** across workers —
+    /// summing tier indices would be meaningless.
+    pub budget_tier: usize,
     /// Time-to-first-token stream, measured from `Request::submitted`.
     pub ttft: Welford,
     /// End-to-end request latency stream (includes batcher queueing).
@@ -81,6 +95,10 @@ impl Default for Metrics {
             refreshes: 0,
             partial_refreshes: 0,
             rows_invalidated: 0,
+            scheduled_row_refreshes: 0,
+            schedule_refits: 0,
+            tier_switches: 0,
+            budget_tier: 0,
             ttft: Welford::default(),
             latency: Welford::default(),
             queue_wait: Welford::default(),
@@ -154,6 +172,12 @@ impl Metrics {
         self.refreshes += other.refreshes;
         self.partial_refreshes += other.partial_refreshes;
         self.rows_invalidated += other.rows_invalidated;
+        self.scheduled_row_refreshes += other.scheduled_row_refreshes;
+        self.schedule_refits += other.schedule_refits;
+        self.tier_switches += other.tier_switches;
+        // Tier indices don't sum: the aggregate reports the highest
+        // budget tier any worker is running at.
+        self.budget_tier = self.budget_tier.max(other.budget_tier);
         self.queue_depth += other.queue_depth;
         self.active_slots += other.active_slots;
         self.ttft.merge(&other.ttft);
@@ -176,6 +200,10 @@ impl Metrics {
             ("spa_refreshes_total", self.refreshes as f64),
             ("spa_partial_refreshes_total", self.partial_refreshes as f64),
             ("spa_rows_invalidated_total", self.rows_invalidated as f64),
+            ("spa_scheduled_row_refreshes_total", self.scheduled_row_refreshes as f64),
+            ("spa_schedule_refits_total", self.schedule_refits as f64),
+            ("spa_tier_switches_total", self.tier_switches as f64),
+            ("spa_budget_tier", self.budget_tier as f64),
             ("spa_queue_depth", self.queue_depth as f64),
             ("spa_active_slots", self.active_slots as f64),
             ("spa_tps", self.tps()),
@@ -275,6 +303,9 @@ mod tests {
         assert!(text.contains("spa_latency_ms_p50"));
         assert!(text.contains("spa_partial_refreshes_total 0"));
         assert!(text.contains("spa_rows_invalidated_total 0"));
+        assert!(text.contains("spa_scheduled_row_refreshes_total 0"));
+        assert!(text.contains("spa_schedule_refits_total 0"));
+        assert!(text.contains("spa_budget_tier 0"));
         assert!(text.contains("spa_cancelled_total 0"));
         assert!(text.contains("spa_stream_frames_total 0"));
     }
@@ -296,6 +327,9 @@ mod tests {
         a.rows_invalidated = 3;
         a.cancelled = 1;
         a.stream_frames = 5;
+        a.scheduled_row_refreshes = 4;
+        a.schedule_refits = 2;
+        a.budget_tier = 1;
         let mut b = Metrics::default();
         b.record_completion(30.0, 300.0, 4);
         b.record_completion(50.0, 500.0, 4);
@@ -303,11 +337,17 @@ mod tests {
         b.partial_refreshes = 1;
         b.cancelled = 2;
         b.stream_frames = 7;
+        b.scheduled_row_refreshes = 5;
+        b.schedule_refits = 1;
+        b.budget_tier = 2;
         a.merge(&b);
         assert_eq!(a.cancelled, 3);
         assert_eq!(a.stream_frames, 12);
         assert_eq!(a.partial_refreshes, 3);
         assert_eq!(a.rows_invalidated, 3);
+        assert_eq!(a.scheduled_row_refreshes, 9, "counters add");
+        assert_eq!(a.schedule_refits, 3);
+        assert_eq!(a.budget_tier, 2, "tier gauge merges as max, not sum");
         assert_eq!(a.requests_completed, 3);
         assert_eq!(a.tokens_decoded, 16);
         assert_eq!(a.queue_depth, 2);

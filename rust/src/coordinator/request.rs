@@ -37,6 +37,11 @@ pub struct Request {
     pub tokens: Vec<i32>,
     /// Prompt prefix length (BOS included).
     pub prompt_len: usize,
+    /// End of the MASK generation region (exclusive): `prompt_len + gen`.
+    /// Carried explicitly because the PAD tail is *not* part of the region —
+    /// deriving it as `tokens.len()` silently extends semi-AR blocks and
+    /// completion scans into the PAD tail when `gen < seq_len - prompt_len`.
+    pub gen_end: usize,
     /// Optional ground truth (benches / accuracy accounting).
     pub answer: Option<String>,
     /// Task the prompt was drawn from, when known (sets block length).
@@ -58,6 +63,17 @@ impl Request {
     pub fn is_cancelled(&self) -> bool {
         self.cancel.load(Ordering::Relaxed)
     }
+}
+
+/// End (exclusive) of the contiguous MASK generation region of a freshly
+/// built token row: `prompt_len` plus the run of MASKs that follows it.
+/// Construction sites that only hold a token row (bench group packing,
+/// tests) derive [`Request::gen_end`] through this instead of guessing
+/// `tokens.len()` — the PAD tail is not part of the region.
+pub fn mask_region_end(tokens: &[i32], prompt_len: usize) -> usize {
+    use crate::model::tokenizer::MASK;
+    let p = prompt_len.min(tokens.len());
+    p + tokens[p..].iter().take_while(|&&t| t == MASK).count()
 }
 
 /// What a request's owner observes while it is in flight: zero or more
@@ -189,7 +205,10 @@ impl SlotState {
             occupied: true,
             request_id: req.id,
             prompt_len: req.prompt_len,
-            gen_end: req.tokens.len(),
+            // The true mask-region end, never the full row: a request with
+            // `gen < seq_len - prompt_len` must not advance its semi-AR
+            // blocks (or scan for completion) into the PAD tail.
+            gen_end: req.gen_end.clamp(req.prompt_len, req.tokens.len()),
             block_start: req.prompt_len,
             block_len,
             threshold: req.params.threshold,
@@ -205,5 +224,53 @@ impl SlotState {
             submitted: Some(req.submitted),
             started: Some(Instant::now()),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tokenizer::{BOS, MASK, PAD};
+
+    fn short_gen_request() -> Request {
+        // seq_len 8, prompt 2, gen 3: region is [2, 5), then a PAD tail.
+        let tokens = vec![BOS, 7, MASK, MASK, MASK, PAD, PAD, PAD];
+        Request {
+            id: 1,
+            gen_end: mask_region_end(&tokens, 2),
+            tokens,
+            prompt_len: 2,
+            answer: None,
+            task: None,
+            params: GenParams::default(),
+            cancel: Arc::new(AtomicBool::new(false)),
+            submitted: Instant::now(),
+        }
+    }
+
+    /// Regression: `gen_len < seq_len - prompt_len` must yield the true
+    /// mask-region end, not the full row — a `gen_end` of `tokens.len()`
+    /// silently ran semi-AR block ranges into the PAD tail.
+    #[test]
+    fn assign_carries_true_generation_end() {
+        let req = short_gen_request();
+        assert_eq!(req.gen_end, 5);
+        let slot = SlotState::assign(&req, 2);
+        assert_eq!(slot.gen_end, 5, "region end, not tokens.len()");
+        assert_eq!(slot.block_start, 2);
+        // A degenerate gen_end is clamped into [prompt_len, seq_len].
+        let mut bad = short_gen_request();
+        bad.gen_end = 100;
+        assert_eq!(SlotState::assign(&bad, 2).gen_end, 8);
+        bad.gen_end = 0;
+        assert_eq!(SlotState::assign(&bad, 2).gen_end, 2);
+    }
+
+    #[test]
+    fn mask_region_end_stops_at_first_non_mask() {
+        assert_eq!(mask_region_end(&[BOS, MASK, MASK, PAD], 1), 3);
+        assert_eq!(mask_region_end(&[BOS, 5, 6, PAD], 2), 2, "no region");
+        assert_eq!(mask_region_end(&[MASK; 4], 0), 4, "full-row region");
+        assert_eq!(mask_region_end(&[BOS], 4), 1, "prompt_len clamped");
     }
 }

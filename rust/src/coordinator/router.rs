@@ -369,6 +369,7 @@ mod tests {
             id,
             tokens: vec![0; 4],
             prompt_len: 1,
+            gen_end: 4,
             answer: None,
             task: None,
             params: crate::coordinator::request::GenParams::default(),

@@ -326,12 +326,17 @@ impl Worker {
 
     /// Serving counters mirror the method's cache-state counters — one
     /// method per worker, same lifetime, so assignment (not increment)
-    /// keeps `CacheState` the single source of truth.
+    /// keeps `CacheState` (and the adaptive controller) the single source
+    /// of truth.
     fn mirror_cache_counters(&mut self) {
         self.metrics.steps = self.method.state.steps;
         self.metrics.refreshes = self.method.state.refreshes;
         self.metrics.partial_refreshes = self.method.state.partial_refreshes;
         self.metrics.rows_invalidated = self.method.state.rows_invalidated;
+        self.metrics.scheduled_row_refreshes = self.method.state.scheduled_row_refreshes;
+        self.metrics.schedule_refits = self.method.schedule_refits();
+        self.metrics.tier_switches = self.method.tier_switches();
+        self.metrics.budget_tier = self.method.budget_tier();
     }
 
     /// The effective step cap for the request in slot `bi`: the
@@ -349,7 +354,6 @@ impl Worker {
         let (b, n, v) = self.method.geometry();
         let out: StepOut =
             self.method.step(&self.engine, &self.tokens, &mut self.slots)?;
-        self.mirror_cache_counters();
         let committed = apply_step_out(
             out,
             &mut self.tokens,
@@ -357,6 +361,15 @@ impl Worker {
             &mut self.sampler,
             (b, n, v),
         )?;
+        // Feed the adaptive budget controller this step's measured
+        // dynamics: commit counts plus the load pressure the router's
+        // dispatch also sees (queue depth / free slots) — a no-op without
+        // `--adaptive on`.
+        let commits: usize = committed.iter().map(|c| c.len()).sum();
+        let active = self.slots.iter().filter(|s| s.occupied).count();
+        let free = self.slots.len() - active;
+        self.method.observe(commits, active, self.batcher.queue_len(), free);
+        self.mirror_cache_counters();
         // Per-step commit hook: true first-token TTFT (the first step that
         // actually committed a MASK position, measured from submission so
         // batcher queueing is included) and streamed `tokens` frames.

@@ -123,6 +123,9 @@ pub fn build_request(
         id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
         tokens,
         prompt_len,
+        // True mask-region end: with a PAD tail (`gen < seq_len -
+        // prompt_len`) the region stops where the MASKs do.
+        gen_end: prompt_len + gen,
         answer: None,
         task,
         params,

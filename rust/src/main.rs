@@ -11,8 +11,6 @@
 //!   spa-cache analyze --model llada_s --steps 12
 //!   spa-cache selftest
 
-use std::path::Path;
-
 use anyhow::Result;
 
 use spa_cache::coordinator::batcher::BatcherConfig;
@@ -45,11 +43,14 @@ fn main() -> Result<()> {
                 "usage: spa-cache <list|generate|serve|bench-serve|analyze|selftest> \
                  [--model llada_s] [--method vanilla|spa|dllm_cache|fast_dllm|dkv_cache|d2_cache|elastic_cache|multistep] \
                  [--task gsm8k_s] [--samples N] [--addr host:port] [--workers N] [--threshold 0.9]\n\
-                 policy: [--partial-refresh on|off] [--refresh-interval N]\n\
+                 policy: [--partial-refresh on|off] [--refresh-interval N] \
+                 [--adaptive on|off] [--row-refresh N] [--refit-interval N]\n\
                  serve: [--max-line BYTES] [--conn-threads N]\n\
                  bench-serve: [--methods vanilla,spa] [--qps 8 | --clients N | --pipeline D] \
                  [--duration 5s] [--warmup 1s] [--tasks gsm8k_s,mmlu_s] [--gen-len 32 | 16:64] \
-                 [--out BENCH_serving.json] [--stub]  (--stub: stub workers, no artifacts needed)"
+                 [--out BENCH_serving.json] [--stub]\n\
+                 (--stub: stub workers, no artifacts needed; stub methods \
+                 stub|spa|spa-adaptive|spa-fixed run the real policy loop)"
             );
             Ok(())
         }
@@ -171,11 +172,20 @@ fn serve(args: &Args) -> Result<()> {
     let block_k = args.usize_or("block-k", 16);
     // Policy flags: `--partial-refresh off` restores the blanket
     // admission invalidate; `--refresh-interval N` overrides the method's
-    // scheduled full-refresh cadence.  Strict — an explicitly supplied
-    // but malformed value must not silently serve the default policy.
+    // scheduled full-refresh cadence; `--adaptive on` attaches the online
+    // budget controller (drift-driven ρ refits + tier selection over the
+    // registry's spa variant family).  Strict — an explicitly supplied
+    // but malformed *or inapplicable* value must not silently serve the
+    // default policy (same validation as the bench front-ends).
     let policy = PolicyFlags::from_args(args)?;
-    let (partial_refresh, refresh_interval) =
-        (policy.partial_refresh, policy.refresh_interval);
+    {
+        let spec = MethodSpec::by_name(&method_name, block_k)?;
+        spa_cache::bench::loadgen::validate_policy_flags(
+            policy,
+            args.get("partial-refresh").is_some(),
+            std::slice::from_ref(&spec),
+        )?;
+    }
     let mut sam = sampler(args);
     if method_name == "fast_dllm" {
         sam.mode = UnmaskMode::BlockParallel { threshold: args.f64_or("threshold", 0.9) };
@@ -189,9 +199,9 @@ fn serve(args: &Args) -> Result<()> {
     let (router, handles) = Router::spawn(workers, move |id| {
         let engine = Engine::from_manifest(manifest.clone())?;
         let spec = MethodSpec::by_name(&method_name, block_k)?
-            .with_refresh_interval(refresh_interval);
+            .with_refresh_interval(policy.refresh_interval);
         let mut method = Method::new(&engine, &model, spec)?;
-        method.set_partial_refresh(partial_refresh);
+        method.configure(&engine, &policy)?;
         Ok(Worker::new(id, engine, method, sam.clone(), batcher.clone(), 4 * seq_len))
     })?;
 
@@ -228,21 +238,34 @@ fn bench_serve(args: &Args) -> Result<()> {
 
     // --stub: artifact-free smoke over stub session workers — the whole
     // TCP → router → worker pipeline minus the device execution.  CI uses
-    // this (pipelined mode) so the serving trajectory populates on every
-    // run, not only where artifacts exist.
+    // this so the serving trajectory populates on every run, not only
+    // where artifacts exist.  The `spa`/`spa-adaptive`/`spa-fixed` stub
+    // methods run the *real* cache-policy decision loop (and adaptive
+    // budget controller) over a stubbed engine, so the policy flags apply
+    // here too; plain `stub` ignores them and rejects them explicitly.
     if args.flag("stub") {
-        anyhow::ensure!(
-            args.get("partial-refresh").is_none() && args.get("refresh-interval").is_none(),
-            "policy flags do not apply to stub workers"
-        );
         let workers = args.strict_count("workers")?.unwrap_or(2);
         let cfg = LoadGenConfig::from_args(args)?;
+        let policy = PolicyFlags::from_args(args)?;
         let methods: Vec<String> = args
             .str_or("methods", "stub")
             .split(',')
             .map(|s| s.trim().to_string())
             .filter(|s| !s.is_empty())
             .collect();
+        // Validation mirrors the engine path: pseudo-specs for the
+        // policy-stub methods, nothing for the plain session stub — so
+        // policy flags with a stub-only lineup still error loudly.
+        let pseudo_specs: Vec<MethodSpec> = methods
+            .iter()
+            .filter(|m| m.starts_with("spa"))
+            .map(|_| MethodSpec::Spa { variant: "spa_default".into(), refresh_interval: 0 })
+            .collect();
+        loadgen::validate_policy_flags(
+            policy,
+            args.get("partial-refresh").is_some(),
+            &pseudo_specs,
+        )?;
         let mut reports = Vec::new();
         for m in &methods {
             reports.push(loadgen::run_stub(
@@ -250,16 +273,21 @@ fn bench_serve(args: &Args) -> Result<()> {
                 workers,
                 &cfg,
                 spa_cache::bench::stub::StubConfig::default(),
+                policy,
             )?);
         }
         loadgen::print_reports(&reports);
-        let out = args.str_or("out", "BENCH_serving.json");
+        let out = loadgen::out_path(args);
         loadgen::append_trajectory(
-            Path::new(&out),
-            loadgen::config_json(&cfg, workers, "stub", loadgen::PolicyFlags::default()),
+            &out,
+            loadgen::config_json(&cfg, workers, "stub", policy),
             &reports,
         )?;
-        println!("bench-serve: appended {} stub row(s) to {out}", reports.len());
+        println!(
+            "bench-serve: appended {} stub row(s) to {}",
+            reports.len(),
+            out.display()
+        );
         return Ok(());
     }
 
@@ -308,7 +336,7 @@ fn bench_serve(args: &Args) -> Result<()> {
     let cfg = LoadGenConfig::from_args(args)?;
 
     let mut reports = Vec::new();
-    for method_name in &methods {
+    for (method_name, spec) in methods.iter().zip(&specs) {
         let spawned = loadgen::run_method(
             method_name,
             workers,
@@ -325,7 +353,12 @@ fn bench_serve(args: &Args) -> Result<()> {
             ),
         );
         match spawned {
-            Ok(r) => reports.push(r),
+            Ok(mut r) => {
+                // The adaptive gate is a capability: it attaches only to
+                // spa-kind methods, and the row records what ran.
+                r.adaptive = loadgen::adaptive_applies(policy, spec);
+                reports.push(r);
+            }
             Err(e) => println!("bench-serve: SKIP method {method_name}: {e:#}"),
         }
     }
@@ -334,13 +367,17 @@ fn bench_serve(args: &Args) -> Result<()> {
         return Ok(());
     }
     loadgen::print_reports(&reports);
-    let out = args.str_or("out", "BENCH_serving.json");
+    let out = loadgen::out_path(args);
     loadgen::append_trajectory(
-        Path::new(&out),
+        &out,
         loadgen::config_json(&cfg, workers, &model, policy),
         &reports,
     )?;
-    println!("bench-serve: appended {} method row(s) to {out}", reports.len());
+    println!(
+        "bench-serve: appended {} method row(s) to {}",
+        reports.len(),
+        out.display()
+    );
     Ok(())
 }
 

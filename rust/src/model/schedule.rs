@@ -46,6 +46,26 @@ impl RhoSchedule {
     pub fn mean_rho(&self, n_layers: usize) -> f64 {
         (1..=n_layers).map(|l| self.rho(l, n_layers)).sum::<f64>() / n_layers as f64
     }
+
+    /// Cached steps needed for the in-graph proxy budget to recompute a
+    /// whole row: the **slowest** layer bounds it, `max_l ⌈1/ρ(l)⌉`.  A
+    /// mean-ρ̄ estimate under-counts low-ρ layers and declares rows healed
+    /// before their stale entries were actually recomputed — the budget cap
+    /// is derived from the schedule, never an arbitrary constant.
+    pub fn heal_steps(&self, n_layers: usize) -> usize {
+        (1..=n_layers)
+            .map(|l| {
+                let r = self.rho(l, n_layers);
+                if r.is_finite() && r > 0.0 {
+                    (1.0 / r).ceil() as usize
+                } else {
+                    1
+                }
+            })
+            .max()
+            .unwrap_or(1)
+            .max(1)
+    }
 }
 
 /// Fit Eq. 5 to a measured drift profile — mirror of
@@ -202,6 +222,18 @@ mod tests {
         assert!((fit.rho_p - 0.30).abs() < 1e-9);
         assert!((fit.rho_1 - 0.05).abs() < 1e-6, "{fit:?}");
         assert!((fit.rho_l - 0.12).abs() < 1e-6, "{fit:?}");
+    }
+
+    #[test]
+    fn heal_steps_bounded_by_slowest_layer() {
+        // Uniform 0.25: every layer needs 4 steps.
+        assert_eq!(RhoSchedule::uniform(0.25).heal_steps(8), 4);
+        // Skewed: the rho_1 = 0.05 boundary layer dominates (20 steps),
+        // never the mean (~8 would declare low-ρ rows healed early).
+        let s = RhoSchedule { l_p: 4, rho_p: 0.5, rho_1: 0.05, rho_l: 0.25 };
+        assert_eq!(s.heal_steps(8), 20);
+        // Degenerate single layer.
+        assert_eq!(RhoSchedule::uniform(1.0).heal_steps(1), 1);
     }
 
     #[test]

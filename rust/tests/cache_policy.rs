@@ -3,11 +3,16 @@
 //! so — unlike the artifact-gated serving tests — these run on every
 //! checkout, no PJRT runtime or artifacts needed.
 //!
-//! The headline property: **per-slot invalidation conserves resident
-//! rows**.  Admitting into a busy group must not reset the other slots'
-//! `steps_since_refresh`, must not drop their validity, and must not
-//! change their next-step logits path (the plan stays `Cached`, never a
-//! group refresh) for policies with partial-refresh support.
+//! Headline properties:
+//!
+//! * **Per-slot invalidation conserves resident rows** — admitting into a
+//!   busy group must not reset the other slots' `steps_since_refresh`,
+//!   must not drop their validity, and must not change their next-step
+//!   logits path for policies with partial-refresh support.
+//! * **Staggered per-row scheduled refresh conserves validity
+//!   invariants** — over randomized admit/cancel/step sequences, every
+//!   resident row is refreshed within its deadline, never more than the
+//!   per-step bound begins service at once, and PAD rows are untouched.
 
 use std::time::Instant;
 
@@ -26,6 +31,7 @@ fn request(id: u64) -> Request {
         id,
         tokens: vec![MASK; N],
         prompt_len: 2,
+        gen_end: N,
         answer: None,
         task: None,
         params: spa_cache::coordinator::request::GenParams::default(),
@@ -47,6 +53,7 @@ fn drive_step(
     tokens: &[i32],
     slots: &mut [SlotState],
     heal_budget: usize,
+    sched_per_step: usize,
 ) -> Plan {
     let plan = {
         let cx = PlanCtx {
@@ -57,6 +64,7 @@ fn drive_step(
             batch: slots.len(),
             seq_len: tokens.len() / slots.len(),
             heal_budget,
+            sched_per_step,
         };
         policy.plan(&cx)
     };
@@ -71,7 +79,7 @@ fn prime(
     tokens: &[i32],
     slots: &mut [SlotState],
 ) {
-    let plan = drive_step(policy, state, tokens, slots, 2);
+    let plan = drive_step(policy, state, tokens, slots, 2, 1);
     assert!(plan.is_refresh(), "cold group must start with a refresh");
     assert!(state.primed);
 }
@@ -126,8 +134,14 @@ fn property_per_slot_invalidation_conserves_resident_rows() {
                 // The next-step logits path of the resident rows must stay
                 // the cached one: no group refresh on admission.
                 for _ in 0..steps {
-                    let plan =
-                        drive_step(policy.as_mut(), &mut state, &tokens, &mut slots, 2);
+                    let plan = drive_step(
+                        policy.as_mut(),
+                        &mut state,
+                        &tokens,
+                        &mut slots,
+                        2,
+                        1,
+                    );
                     if plan.is_refresh() {
                         return Err(
                             "partial-refresh policy paid a group refresh on admission"
@@ -150,6 +164,147 @@ fn property_per_slot_invalidation_conserves_resident_rows() {
     );
 }
 
+/// The staggered scheduled-refresh invariants, over randomized
+/// admit/cancel/step traces:
+///
+/// 1. never more than `sched_per_step` rows **begin** scheduled service on
+///    one step, and none while that much service capacity is busy;
+/// 2. PAD rows are never scheduled or serviced;
+/// 3. no group-global refresh fires after priming (the staggered path
+///    fully replaces the rigid trigger);
+/// 4. every resident row is refreshed within its deadline: after a quiet
+///    tail with no admissions, no row's `steps_since_refresh` exceeds
+///    `interval + B * heal * B` (service is bounded-concurrency, so the
+///    worst case is every row due at once, healed `bound` at a time with
+///    the completion threshold scaled by the concurrent dirty count).
+#[test]
+fn property_staggered_refresh_conserves_validity_invariants() {
+    const INTERVAL: usize = 6;
+    const HEAL: usize = 2;
+    spa_cache::util::proptest::check(
+        "staggered_refresh_conserves_validity_invariants",
+        |r| {
+            let bound = r.range(1, 3); // sched_per_step in {1, 2}
+            // (event row, kind): kind 0 = admit, 1 = cancel (free slot),
+            // interleaved with 0..6 decode steps.
+            let events: Vec<(usize, usize, usize)> = (0..r.range(1, 10))
+                .map(|_| (r.range(0, B), r.range(0, 2), r.range(0, 6)))
+                .collect();
+            (bound, events)
+        },
+        |(bound, events)| {
+            let bound = *bound;
+            let mut policy = SpaPolicy::new("spa_default".into(), INTERVAL);
+            let tokens = vec![MASK; B * N];
+            let mut slots = busy_group();
+            let mut state = CacheState::default();
+            prime(&mut policy, &mut state, &tokens, &mut slots);
+            let mut next_id = 1000u64;
+
+            let mut check_step = |policy: &mut SpaPolicy,
+                                  state: &mut CacheState,
+                                  slots: &mut Vec<SlotState>|
+             -> Result<(), String> {
+                let in_service_before = slots
+                    .iter()
+                    .filter(|s| s.occupied && !s.cache_valid)
+                    .count();
+                let plan =
+                    drive_step(policy, state, &tokens, slots, HEAL, bound);
+                if plan.is_refresh() {
+                    return Err("staggered path paid a group refresh".into());
+                }
+                if plan.scheduled.len() > bound {
+                    return Err(format!(
+                        "{} rows began scheduled service (> bound {bound})",
+                        plan.scheduled.len()
+                    ));
+                }
+                if !plan.scheduled.is_empty()
+                    && in_service_before + plan.scheduled.len() > bound
+                {
+                    return Err(format!(
+                        "scheduled {} rows with {in_service_before} already in \
+                         service (bound {bound})",
+                        plan.scheduled.len()
+                    ));
+                }
+                for &row in &plan.scheduled {
+                    if !slots[row].occupied {
+                        return Err(format!("scheduled PAD row {row}"));
+                    }
+                }
+                for sv in &plan.serviced {
+                    if !slots[sv.row].occupied {
+                        return Err(format!("serviced PAD row {}", sv.row));
+                    }
+                }
+                // PAD rows never age, are never dirtied.
+                for (i, s) in slots.iter().enumerate() {
+                    if !s.occupied && (s.steps_since_refresh != 0 || !s.cache_valid) {
+                        return Err(format!("PAD row {i} mutated: {s:?}"));
+                    }
+                }
+                Ok(())
+            };
+
+            for &(row, kind, steps) in events {
+                if kind == 0 {
+                    next_id += 1;
+                    slots[row] = SlotState::assign(&request(next_id), 4);
+                    state.admit(&[row], policy.partial_refresh(), &mut slots);
+                } else {
+                    slots[row] = SlotState::empty();
+                }
+                for _ in 0..steps {
+                    check_step(&mut policy, &mut state, &mut slots)?;
+                }
+            }
+            // Re-fill any cancelled slots so the quiet tail exercises a
+            // fully resident group (a trace that cancelled everything
+            // would otherwise have nothing left to maintain).
+            let empties: Vec<usize> = slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| !s.occupied)
+                .map(|(i, _)| i)
+                .collect();
+            for &i in &empties {
+                next_id += 1;
+                slots[i] = SlotState::assign(&request(next_id), 4);
+            }
+            if !empties.is_empty() {
+                state.admit(&empties, policy.partial_refresh(), &mut slots);
+            }
+            // Quiet tail: no admissions, deadline must hold for everyone.
+            let deadline = INTERVAL + B * HEAL * B;
+            for _ in 0..2 * deadline {
+                check_step(&mut policy, &mut state, &mut slots)?;
+            }
+            for (i, s) in slots.iter().enumerate() {
+                if s.occupied && s.steps_since_refresh > deadline {
+                    return Err(format!(
+                        "row {i} stale for {} steps (> deadline {deadline})",
+                        s.steps_since_refresh
+                    ));
+                }
+            }
+            // And the maintenance actually happened row-by-row.
+            if state.scheduled_row_refreshes == 0 {
+                return Err("no scheduled per-row refresh ever began".into());
+            }
+            if state.refreshes != 1 {
+                return Err(format!(
+                    "staggered maintenance must not pay group refreshes \
+                     (saw {})",
+                    state.refreshes
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn manual_dirty_row_sweeps_full_coverage_then_revalidates() {
     let k = 4;
@@ -165,7 +320,7 @@ fn manual_dirty_row_sweeps_full_coverage_then_revalidates() {
     // ⌈N/k⌉ = 4 cached steps sweep positions [0,16) of row 1 in order.
     for step in 0..N / k {
         assert!(!slots[1].cache_valid, "row 1 still healing at step {step}");
-        let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2);
+        let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2, 1);
         let indices = match &plan.exec {
             Exec::Cached { indices: Some(ix) } => ix.clone(),
             other => panic!("expected indices, got {other:?}"),
@@ -193,7 +348,7 @@ fn spa_dirty_row_heals_within_budget() {
     let heal = 3;
     for _ in 0..heal {
         assert!(!slots[2].cache_valid);
-        let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, heal);
+        let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, heal, 1);
         assert!(!plan.is_refresh());
         assert_eq!(plan.serviced.len(), 1, "exactly the dirty row serviced");
         assert_eq!(plan.serviced[0].row, 2);
@@ -203,21 +358,49 @@ fn spa_dirty_row_heals_within_budget() {
     assert_eq!(state.refreshes, 1);
 }
 
+/// The old rigid trigger — stalest resident row past the interval forces a
+/// group-global refresh step — survives only where staggering is off:
+/// explicitly (the fixed-interval bench baseline) or because partial
+/// refresh is gated off.  With staggering on, the same staleness is paid
+/// as a bounded per-row scheduled service instead.
 #[test]
-fn spa_scheduled_interval_still_refreshes_on_stalest_row() {
+fn spa_interval_staggers_per_row_instead_of_group_refresh() {
     let mut policy = SpaPolicy::new("spa_value_u25".into(), 4);
     let tokens = vec![MASK; B * N];
     let mut slots = busy_group();
     let mut state = CacheState::default();
     prime(&mut policy, &mut state, &tokens, &mut slots);
     for _ in 0..4 {
-        let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2);
+        let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2, 1);
+        assert!(!plan.is_refresh());
+        assert!(plan.scheduled.is_empty(), "nobody due yet");
+    }
+    // Every row is now 4 steps old ⇒ due; the *oldest one* row begins
+    // scheduled service — no group refresh, everyone else stays cached.
+    let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2, 1);
+    assert!(!plan.is_refresh(), "staggered: no group refresh on interval");
+    assert_eq!(plan.scheduled.len(), 1, "one row begins service");
+    assert_eq!(state.scheduled_row_refreshes, 1);
+    assert_eq!(state.refreshes, 1, "still only the prime");
+}
+
+#[test]
+fn spa_rigid_interval_baseline_still_group_refreshes() {
+    let mut policy = SpaPolicy::new("spa_value_u25".into(), 4);
+    policy.set_staggered(false);
+    let tokens = vec![MASK; B * N];
+    let mut slots = busy_group();
+    let mut state = CacheState::default();
+    prime(&mut policy, &mut state, &tokens, &mut slots);
+    for _ in 0..4 {
+        let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2, 1);
         assert!(!plan.is_refresh());
     }
-    // Every row is now 4 steps old ⇒ the dLLM-Cache interval fires.
-    let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2);
-    assert!(plan.is_refresh(), "interval-due refresh");
+    // Every row is now 4 steps old ⇒ the rigid interval fires group-wide.
+    let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2, 1);
+    assert!(plan.is_refresh(), "fixed baseline: interval-due group refresh");
     assert_eq!(state.refreshes, 2);
+    assert_eq!(state.scheduled_row_refreshes, 0);
 }
 
 #[test]
@@ -233,7 +416,7 @@ fn unsupported_policy_escalates_to_group_invalidate() {
     let n = state.admit(&[0], policy.partial_refresh(), &mut slots);
     assert_eq!(n, B, "blanket invalidate counts the whole blast radius");
     assert!(slots.iter().all(|s| !s.cache_valid));
-    let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2);
+    let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2, 1);
     assert!(plan.is_refresh(), "unsupported policy keeps admission ⇒ refresh");
 }
 
@@ -247,6 +430,6 @@ fn partial_refresh_gate_restores_blanket_behaviour() {
     prime(&mut policy, &mut state, &tokens, &mut slots);
     slots[1] = SlotState::assign(&request(5), 4);
     state.admit(&[1], policy.partial_refresh(), &mut slots);
-    let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2);
+    let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2, 1);
     assert!(plan.is_refresh(), "--partial-refresh off ⇒ admission refreshes");
 }

@@ -325,6 +325,7 @@ fn pipelined_loadgen_sustains_inflight_over_one_connection() {
         1,
         &cfg,
         StubConfig { step_ms: 2, commits_per_step: 2, ..StubConfig::default() },
+        loadgen::PolicyFlags::default(),
     )
     .expect("run_stub");
 

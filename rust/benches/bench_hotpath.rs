@@ -1,0 +1,162 @@
+//! §Hotpath: host-side micro-benches for the PR-6 raw-speed work.
+//! Artifact-free (no compiled variants, no PJRT) so it runs on any checkout:
+//! exercises the exact host primitives the serving hot path is built on —
+//! arena-backed zero staging, `TokenDelta` row patching, and the sharded
+//! top-k used by the parallel sampler.  Feeds the ledger methodology note
+//! in DESIGN.md §10.
+
+use spa_cache::bench::{time_ms, Table};
+use spa_cache::coordinator::cache::{DeltaUpload, TokenDelta};
+use spa_cache::runtime::tensor::{literal_f32, literal_i32, literal_zeros_f32};
+use spa_cache::util::cli::Args;
+use spa_cache::util::rng::Rng;
+use spa_cache::util::topk::{top_k_desc, top_k_desc_rows};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let iters = args.usize_or("iters", 30);
+    let b = args.usize_or("rows", 32);
+    let n = args.usize_or("seq", 256);
+    let v = args.usize_or("vocab", 4096);
+    let k = args.usize_or("k", 16);
+
+    // --- arena vs fresh-alloc zero upload staging -----------------------
+    // `zero_caches` used to build `vec![0.0; elems]` per cold admission;
+    // the engine arena now keeps one zero template per shape.  Compare the
+    // literal build with a fresh zeroed vec each iter against one reusing
+    // a preallocated staging buffer.
+    let cache_shape = [b, n, 64];
+    let elems = b * n * 64;
+    let mut table = Table::new(
+        &format!("Hotpath — zero staging, shape {b}x{n}x64 ({elems} f32)"),
+        &["variant", "mean ms", "p50", "p90"],
+    );
+    let s = time_ms(3, iters, || {
+        literal_zeros_f32(&cache_shape).unwrap();
+    });
+    table.row(vec![
+        "fresh-alloc".into(),
+        format!("{:.3}", s.mean),
+        format!("{:.3}", s.p50),
+        format!("{:.3}", s.p90),
+    ]);
+    let staging = vec![0.0f32; elems];
+    let s = time_ms(3, iters, || {
+        literal_f32(&cache_shape, &staging).unwrap();
+    });
+    table.row(vec![
+        "arena".into(),
+        format!("{:.3}", s.mean),
+        format!("{:.3}", s.p50),
+        format!("{:.3}", s.p90),
+    ]);
+    table.print();
+    table.append_to("bench_results.txt");
+
+    // --- delta vs full token upload at varying dirty fractions ----------
+    // Full path rebuilds the [b, n] i32 literal every step; delta path
+    // plans against the host mirror and copies only the changed rows into
+    // the simulated device buffer.  Both closures mutate the same number
+    // of rows per iter so the compare is fair.
+    let mut table = Table::new(
+        &format!("Hotpath — token upload, B={b} N={n}"),
+        &["variant", "dirty", "mean ms", "p50", "rows/step"],
+    );
+    let mut rng = Rng::new(11);
+    let base: Vec<i32> = (0..b * n).map(|_| rng.below(30000) as i32).collect();
+    for dirty_frac in [0.0f64, 0.125, 0.5, 1.0] {
+        let dirty_rows = ((b as f64) * dirty_frac).round() as usize;
+
+        // full upload baseline
+        let mut tokens = base.clone();
+        let mut cursor = 0usize;
+        let s = time_ms(3, iters, || {
+            for i in 0..dirty_rows {
+                let r = (cursor + i) % b;
+                tokens[r * n] = tokens[r * n].wrapping_add(1);
+            }
+            cursor = (cursor + dirty_rows.max(1)) % b;
+            literal_i32(&[b, n], &tokens).unwrap();
+        });
+        table.row(vec![
+            "full".into(),
+            format!("{dirty_frac:.3}"),
+            format!("{:.4}", s.mean),
+            format!("{:.4}", s.p50),
+            format!("{b}"),
+        ]);
+
+        // delta upload: plan + patch only dirty rows
+        let mut tokens = base.clone();
+        let mut device = base.clone();
+        let mut delta = TokenDelta::default();
+        delta.plan(&tokens, n); // absorb the initial Full
+        let mut cursor = 0usize;
+        let mut rows_copied = 0usize;
+        let mut steps = 0usize;
+        let s = time_ms(3, iters, || {
+            for i in 0..dirty_rows {
+                let r = (cursor + i) % b;
+                tokens[r * n] = tokens[r * n].wrapping_add(1);
+            }
+            cursor = (cursor + dirty_rows.max(1)) % b;
+            match delta.plan(&tokens, n) {
+                DeltaUpload::Full => device.copy_from_slice(&tokens),
+                DeltaUpload::Patch => {
+                    for (i, &r) in delta.rows().iter().enumerate() {
+                        device[r * n..(r + 1) * n]
+                            .copy_from_slice(&delta.staged()[i * n..(i + 1) * n]);
+                    }
+                    rows_copied += delta.rows().len();
+                }
+            }
+            steps += 1;
+        });
+        assert_eq!(device, tokens, "delta patching must track the full state");
+        table.row(vec![
+            "delta".into(),
+            format!("{dirty_frac:.3}"),
+            format!("{:.4}", s.mean),
+            format!("{:.4}", s.p50),
+            format!("{:.1}", rows_copied as f64 / steps.max(1) as f64),
+        ]);
+    }
+    table.print();
+    table.append_to("bench_results.txt");
+
+    // --- serial vs sharded host top-k ------------------------------------
+    // The sampler's O(B·V) top-k now runs through `par_row_chunks`; the
+    // sharded variant must agree with the serial loop and win once the
+    // total work clears the parallel threshold.
+    let mut table = Table::new(
+        &format!("Hotpath — top-k, B={b} V={v} k={k}"),
+        &["variant", "mean ms", "p50", "p90"],
+    );
+    let scores: Vec<f32> = (0..b * v).map(|_| rng.f64() as f32).collect();
+    let serial: Vec<Vec<usize>> =
+        scores.chunks_exact(v).map(|row| top_k_desc(row, k)).collect();
+    assert_eq!(serial, top_k_desc_rows(&scores, v, k), "sharded top-k must match serial");
+    let s = time_ms(3, iters, || {
+        for row in scores.chunks_exact(v) {
+            top_k_desc(row, k);
+        }
+    });
+    table.row(vec![
+        "serial".into(),
+        format!("{:.3}", s.mean),
+        format!("{:.3}", s.p50),
+        format!("{:.3}", s.p90),
+    ]);
+    let s = time_ms(3, iters, || {
+        top_k_desc_rows(&scores, v, k);
+    });
+    table.row(vec![
+        "sharded".into(),
+        format!("{:.3}", s.mean),
+        format!("{:.3}", s.p50),
+        format!("{:.3}", s.p90),
+    ]);
+    table.print();
+    table.append_to("bench_results.txt");
+    Ok(())
+}

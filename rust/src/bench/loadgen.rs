@@ -343,6 +343,25 @@ pub struct MethodReport {
     /// `--adaptive` gate only to spa-kind methods — the config block's
     /// flag alone would misdescribe the other rows.
     pub adaptive: bool,
+    /// Per-step cost-ledger phases inside the measured window (μs;
+    /// `spa_step_ledger_us{phase=...}`, scraped + differenced).
+    pub upload_us: f64,
+    /// Device execution time inside the window (μs).
+    pub execute_us: f64,
+    /// Device→host readback time inside the window (μs).
+    pub collect_us: f64,
+    /// Host sampling/commit time inside the window (μs).
+    pub sample_us: f64,
+    /// Frame-serialization time inside the window (μs; process-global).
+    pub serialize_us: f64,
+    /// Whole-step wall time inside the window (μs).
+    pub step_wall_us: f64,
+    /// Token rows uploaded inside the window (scraped, differenced) —
+    /// under delta upload, strictly fewer than steps×batch when any row
+    /// stayed clean across a step.
+    pub rows_uploaded: f64,
+    /// Token rows the delta path kept device-resident inside the window.
+    pub rows_skipped: f64,
     /// Per-worker completions inside the measured window (scraped,
     /// differenced) — the router's load-balance evidence.
     pub per_worker_completed: Vec<(usize, f64)>,
@@ -710,6 +729,10 @@ fn aggregate(
     let refreshes = diff("spa_refreshes_total");
     let steps = diff("spa_steps_total");
     let refresh_rate = if steps > 0.0 { refreshes / steps } else { 0.0 };
+    // Ledger phases are labelled series; `scrape_value` matches the whole
+    // pre-space token, so the full `name{phase="..."}` string selects the
+    // aggregate (unsuffixed) row.
+    let ledger_phase = |phase: &str| diff(&format!("spa_step_ledger_us{{phase=\"{phase}\"}}"));
     let base_completed: Vec<(usize, f64)> = scrape_worker_series(baseline, "spa_requests_completed");
     let per_worker_completed = scrape_worker_series(end, "spa_requests_completed")
         .into_iter()
@@ -749,6 +772,14 @@ fn aggregate(
         // Filled in by the run front-end (`run_stub` / bench-serve),
         // which knows whether the controller was actually attached.
         adaptive: false,
+        upload_us: ledger_phase("upload"),
+        execute_us: ledger_phase("execute"),
+        collect_us: ledger_phase("collect"),
+        sample_us: ledger_phase("sample"),
+        serialize_us: ledger_phase("serialize"),
+        step_wall_us: ledger_phase("step_wall"),
+        rows_uploaded: diff("spa_rows_uploaded_total"),
+        rows_skipped: diff("spa_rows_skipped_total"),
         per_worker_completed,
         latency_samples: latency.samples().to_vec(),
     }
@@ -928,7 +959,7 @@ pub fn run_stub(
     policy: PolicyFlags,
 ) -> Result<MethodReport> {
     use crate::bench::stub;
-    let policy_cfg = |staggered: bool, adaptive: Option<bool>| {
+    let policy_cfg = |staggered: bool, adaptive: Option<bool>, delta_upload: bool| {
         stub::PolicyStubConfig {
             batch: stub.batch,
             step_ms: stub.step_ms,
@@ -940,20 +971,24 @@ pub fn run_stub(
                 ..policy
             },
             proxy_drift: None,
+            delta_upload,
         }
     };
     let (adaptive_ran, (router, worker_handles)) = match method {
         "spa" => (
             policy.adaptive,
-            stub::policy_stub_router(workers, &policy_cfg(true, None)),
+            stub::policy_stub_router(workers, &policy_cfg(true, None, true)),
         ),
         "spa-adaptive" => (
             true,
-            stub::policy_stub_router(workers, &policy_cfg(true, Some(true))),
+            stub::policy_stub_router(workers, &policy_cfg(true, Some(true), true)),
         ),
+        // The fixed-interval baseline also serves as the full-upload
+        // baseline: its ledger rows show every occupied row re-uploading
+        // every step, the datum the delta rows compare against.
         "spa-fixed" => (
             false,
-            stub::policy_stub_router(workers, &policy_cfg(false, Some(false))),
+            stub::policy_stub_router(workers, &policy_cfg(false, Some(false), false)),
         ),
         other if other.starts_with("spa") => anyhow::bail!(
             "unknown policy-stub method '{other}' (want spa|spa-adaptive|spa-fixed)"
@@ -1163,6 +1198,19 @@ pub fn report_json(r: &MethodReport) -> Json {
         ("tier_switches", Json::Num(r.tier_switches)),
         ("budget_tier", Json::Num(r.budget_tier)),
         ("adaptive", Json::Bool(r.adaptive)),
+        (
+            "ledger",
+            Json::obj(vec![
+                ("upload_us", Json::Num(r.upload_us)),
+                ("execute_us", Json::Num(r.execute_us)),
+                ("collect_us", Json::Num(r.collect_us)),
+                ("sample_us", Json::Num(r.sample_us)),
+                ("serialize_us", Json::Num(r.serialize_us)),
+                ("step_wall_us", Json::Num(r.step_wall_us)),
+                ("rows_uploaded", Json::Num(r.rows_uploaded)),
+                ("rows_skipped", Json::Num(r.rows_skipped)),
+            ]),
+        ),
         (
             "per_worker_completed",
             Json::Arr(

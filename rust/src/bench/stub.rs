@@ -27,9 +27,10 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::cache::{
-    stub_tiers, AdaptiveConfig, AdaptiveController, CachePolicy, CacheState, PlanCtx,
+    stub_tiers, AdaptiveConfig, AdaptiveController, CachePolicy, CacheState, Exec, PlanCtx,
     PolicyFlags, SpaPolicy, StepObs,
 };
+use crate::coordinator::ledger::StepLedger;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ReqEvent, Request, Response, SlotState};
 use crate::coordinator::router::{Router, WorkerEndpoint, WorkerStatus};
@@ -309,6 +310,12 @@ pub struct PolicyStubConfig {
     /// Synthetic per-layer proxy residual stats fed to the controller
     /// (`None` = the commit-activity fallback path).
     pub proxy_drift: Option<Vec<f64>>,
+    /// Delta-aware token upload: on cached steps only dirty rows transfer
+    /// (clean rows stay device-resident), mirroring the production
+    /// `TokenDelta` path.  `false` is the full-upload baseline — every
+    /// occupied row re-uploads every step — kept so the trajectory can
+    /// show the upload share shrinking under delta.
+    pub delta_upload: bool,
 }
 
 impl Default for PolicyStubConfig {
@@ -321,6 +328,7 @@ impl Default for PolicyStubConfig {
             staggered: true,
             flags: PolicyFlags::default(),
             proxy_drift: None,
+            delta_upload: true,
         }
     }
 }
@@ -401,6 +409,13 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
         None
     };
     let plan_tokens = vec![0i32; batch * STUB_SEQ_LEN];
+    // Per-step cost ledger (accumulated across the worker's lifetime) and
+    // the reusable host staging buffer the upload accounting memcpys
+    // through — a real row copy per uploaded row, so the `upload` phase
+    // measures genuine work, scaled by exactly the rows the delta path
+    // keeps.
+    let mut ledger_total = StepLedger::default();
+    let mut upload_staging: Vec<i32> = Vec::new();
     let mut next_step = Instant::now();
     let mut cmds: Vec<Command> = Vec::new();
     loop {
@@ -539,7 +554,34 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
             };
             policy.plan(&cx)
         };
+        // Delta-aware upload accounting, **between plan and commit**
+        // (commit revalidates serviced rows, so validity must be read
+        // here): refresh-class plans re-upload every occupied row; cached
+        // plans upload only cache-dirty rows under `delta_upload`, and the
+        // clean remainder stays device-resident.  Each uploaded row is a
+        // real memcpy into the reusable staging buffer so the `upload`
+        // phase carries honest, row-proportional time.
+        let step_t0 = Instant::now();
+        {
+            let full_plan = !matches!(plan.exec, Exec::Cached { .. });
+            upload_staging.clear();
+            for (row, slot) in slots.iter().enumerate().take(batch) {
+                if !slot.occupied {
+                    continue;
+                }
+                if !cfg.delta_upload || full_plan || !slot.cache_valid {
+                    upload_staging.extend_from_slice(
+                        &plan_tokens[row * STUB_SEQ_LEN..(row + 1) * STUB_SEQ_LEN],
+                    );
+                    ledger_total.rows_uploaded += 1;
+                } else {
+                    ledger_total.rows_skipped += 1;
+                }
+            }
+            ledger_total.upload_ns += step_t0.elapsed().as_nanos() as u64;
+        }
         state.commit(&plan, &mut slots);
+        let sample_t0 = Instant::now();
         let mut commits_this_step = 0usize;
         let active_rows = residents.iter().filter(|s| s.is_some()).count();
         for (si, slot) in residents.iter_mut().enumerate() {
@@ -592,6 +634,7 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
                 status.dec_inflight();
             }
         }
+        ledger_total.sample_ns += sample_t0.elapsed().as_nanos() as u64;
         if let Some(c) = &mut ctrl {
             let free = residents.iter().filter(|s| s.is_none()).count();
             c.observe(&StepObs {
@@ -602,6 +645,12 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
                 proxy_drift: cfg.proxy_drift.as_deref(),
             });
         }
+        // The stubbed "device" cost is the step pacing delay; attribute it
+        // to `execute` and close out this step's wall span (host work
+        // measured + the simulated device time).
+        ledger_total.execute_ns += step.as_nanos() as u64;
+        ledger_total.step_wall_ns +=
+            step_t0.elapsed().as_nanos() as u64 + step.as_nanos() as u64;
         // Mirror the production counters — `CacheState`/controller stay
         // the single source of truth, exactly like the real worker.
         metrics.steps = state.steps;
@@ -612,6 +661,7 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
         metrics.schedule_refits = ctrl.as_ref().map(|c| c.refits()).unwrap_or(0);
         metrics.tier_switches = ctrl.as_ref().map(|c| c.switches()).unwrap_or(0);
         metrics.budget_tier = ctrl.as_ref().map(|c| c.active_tier()).unwrap_or(0);
+        metrics.ledger = ledger_total.clone();
         next_step = Instant::now() + step;
     }
 }

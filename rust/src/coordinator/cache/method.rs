@@ -5,6 +5,7 @@
 //! `methods.rs` monolith).
 
 use std::rc::Rc;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 use xla::PjRtBuffer;
@@ -19,7 +20,9 @@ use super::adaptive::{
 use super::policy::{CachePolicy, Exec, PlanCtx};
 use super::state::CacheState;
 use super::{MethodSpec, PolicyFlags};
+use crate::coordinator::ledger::{timed, StepLedger};
 use crate::coordinator::request::SlotState;
+use crate::util::threadpool::par_row_chunks;
 
 /// Output of one engine step as seen by the decode loop.
 pub struct StepOut {
@@ -34,6 +37,78 @@ pub struct StepOut {
     /// The current AOT graphs keep residuals in-graph (`None` here); the
     /// stub engines and future variants surface them through this field.
     pub proxy_drift: Option<Vec<f64>>,
+    /// Per-phase cost attribution for this step (upload/execute/collect,
+    /// host sampling added by the worker, plus the delta-upload row
+    /// counters).  The worker folds it into its metrics ledger.
+    pub ledger: StepLedger,
+}
+
+/// Which upload the token-delta tracker decided on for this step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeltaUpload {
+    /// Whole-tensor upload (first step, shape change, or lost buffer).
+    Full,
+    /// Patch only [`TokenDelta::rows`] with [`TokenDelta::staged`]; clean
+    /// rows keep their device-resident bytes.
+    Patch,
+}
+
+/// Host-side token-delta planner: mirrors what the device token buffer
+/// currently holds and decides, per step, between a full upload and a
+/// row-patch of exactly the changed rows.
+///
+/// The diff is a row-wise compare against the mirror — a strict superset
+/// of the PR-3 per-slot validity bitmap (sampler commits change tokens on
+/// rows the policy still considers cache-clean), which is what makes the
+/// patched device tensor *byte-identical* to a full upload by
+/// construction.  The staging vector is grow-only and reused every step,
+/// so steady-state delta planning allocates nothing.
+#[derive(Debug, Default)]
+pub struct TokenDelta {
+    mirror: Vec<i32>,
+    rows: Vec<usize>,
+    staging: Vec<i32>,
+}
+
+impl TokenDelta {
+    /// Forget the mirror: the next [`TokenDelta::plan`] is a full upload
+    /// (used when the device buffer itself was lost or never existed).
+    pub fn reset(&mut self) {
+        self.mirror.clear();
+    }
+
+    /// Decide the upload for `tokens` (row-major, rows of length `n`) and
+    /// update the mirror to match.  After `Patch`, [`TokenDelta::rows`]
+    /// and [`TokenDelta::staged`] hold the changed row indices and their
+    /// packed row data.
+    pub fn plan(&mut self, tokens: &[i32], n: usize) -> DeltaUpload {
+        assert!(n > 0 && tokens.len() % n == 0, "tokens must be whole rows");
+        if self.mirror.len() != tokens.len() {
+            self.mirror.clear();
+            self.mirror.extend_from_slice(tokens);
+            return DeltaUpload::Full;
+        }
+        self.rows.clear();
+        self.staging.clear();
+        for (r, row) in tokens.chunks_exact(n).enumerate() {
+            if row != &self.mirror[r * n..(r + 1) * n] {
+                self.rows.push(r);
+                self.staging.extend_from_slice(row);
+                self.mirror[r * n..(r + 1) * n].copy_from_slice(row);
+            }
+        }
+        DeltaUpload::Patch
+    }
+
+    /// Changed row indices of the last `Patch` plan.
+    pub fn rows(&self) -> &[usize] {
+        &self.rows
+    }
+
+    /// Packed row data of the last `Patch` plan (`rows().len()` rows).
+    pub fn staged(&self) -> &[i32] {
+        &self.staging
+    }
 }
 
 /// A cache method bound to one model + engine, holding group cache state.
@@ -72,6 +147,11 @@ pub struct Method {
     /// Last-step per-position confidence; only maintained when the active
     /// policy declares it needs one (the host softmax is O(B·N·V)).
     last_conf: Vec<f32>,
+    /// Device-resident token buffer from the previous step; `None` until
+    /// the first upload (or after a step error dropped it).
+    tok_buf: Option<PjRtBuffer>,
+    /// Host mirror + staging for the delta-upload planner.
+    tok_delta: TokenDelta,
 }
 
 impl Method {
@@ -105,6 +185,8 @@ impl Method {
             adaptive: None,
             last_proxy_drift: None,
             last_conf: Vec::new(),
+            tok_buf: None,
+            tok_delta: TokenDelta::default(),
         })
     }
 
@@ -251,6 +333,8 @@ impl Method {
         tokens: &[i32],
         slots: &mut [SlotState],
     ) -> Result<StepOut> {
+        let step_t0 = Instant::now();
+        let mut ledger = StepLedger::default();
         let (b, n, _v) = self.geometry();
         anyhow::ensure!(tokens.len() == b * n, "token buffer shape mismatch");
         anyhow::ensure!(slots.len() == b, "slot set shape mismatch");
@@ -285,43 +369,60 @@ impl Method {
         };
 
         let step_var = Rc::clone(&self.step_var);
-        let tok_lit = engine.upload_i32(&[b, n], tokens)?;
-        let out = match &plan.exec {
+        // Delta-aware token upload: clean rows keep their device-resident
+        // bytes; only rows whose tokens changed since the last step are
+        // transferred.  The buffer is taken out of `self` for the step —
+        // an error path drops it, which the planner recovers from with a
+        // full re-upload on the next step.
+        let tok_lit = {
+            let t0 = Instant::now();
+            let buf = self.upload_tokens(engine, tokens, b, n, &mut ledger)?;
+            ledger.upload_ns += t0.elapsed().as_nanos() as u64;
+            buf
+        };
+        let mut out = match &plan.exec {
             Exec::Stateless => {
-                let outs = engine.run_buffers(&step_var, &[&tok_lit])?;
+                let outs =
+                    timed(&mut ledger.execute_ns, || engine.run_buffers(&step_var, &[&tok_lit]))?;
                 StepOut {
-                    logits: Some(engine.read_f32(&outs[0])?),
+                    logits: Some(timed(&mut ledger.collect_ns, || engine.read_f32(&outs[0]))?),
                     new_tokens: None,
                     was_refresh: false,
                     proxy_drift: None,
+                    ledger: StepLedger::default(),
                 }
             }
             Exec::Refresh => {
                 let rv = self.refresh_var.clone().context("method has no refresh variant")?;
-                let (first, caches) = run_collect(engine, &rv, &[&tok_lit])?;
+                let (first, caches) =
+                    timed(&mut ledger.execute_ns, || run_collect(engine, &rv, &[&tok_lit]))?;
                 self.caches = Some(caches);
                 StepOut {
-                    logits: Some(engine.read_f32(&first)?),
+                    logits: Some(timed(&mut ledger.collect_ns, || engine.read_f32(&first))?),
                     new_tokens: None,
                     was_refresh: true,
                     proxy_drift: None,
+                    ledger: StepLedger::default(),
                 }
             }
             Exec::RefreshManual => {
                 let rv = self.refresh_var.clone().context("method has no refresh variant")?;
                 let full_k = rv.info.manual_k;
                 let idx: Vec<i32> = (0..b).flat_map(|_| 0..full_k as i32).collect();
-                let idx_lit = engine.upload_i32(&[b, full_k], &idx)?;
-                let zeros = zero_caches(engine, &rv)?;
+                let (idx_lit, zeros) = timed(&mut ledger.upload_ns, || -> Result<_> {
+                    Ok((engine.upload_i32(&[b, full_k], &idx)?, zero_caches(engine, &rv)?))
+                })?;
                 let mut inputs: Vec<&PjRtBuffer> = vec![&tok_lit, &idx_lit];
                 inputs.extend(zeros.iter());
-                let (first, caches) = run_collect(engine, &rv, &inputs)?;
+                let (first, caches) =
+                    timed(&mut ledger.execute_ns, || run_collect(engine, &rv, &inputs))?;
                 self.caches = Some(caches);
                 StepOut {
-                    logits: Some(engine.read_f32(&first)?),
+                    logits: Some(timed(&mut ledger.collect_ns, || engine.read_f32(&first))?),
                     new_tokens: None,
                     was_refresh: true,
                     proxy_drift: None,
+                    ledger: StepLedger::default(),
                 }
             }
             Exec::Cached { indices } => {
@@ -332,7 +433,9 @@ impl Method {
                             "index plan shape mismatch ({} for batch {b})",
                             ix.len()
                         );
-                        Some(engine.upload_i32(&[b, ix.len() / b], ix)?)
+                        Some(timed(&mut ledger.upload_ns, || {
+                            engine.upload_i32(&[b, ix.len() / b], ix)
+                        })?)
                     }
                     None => None,
                 };
@@ -345,7 +448,10 @@ impl Method {
                     inputs.push(l);
                 }
                 inputs.extend(caches.iter());
-                let (first, new_caches) = match run_collect(engine, &step_var, &inputs) {
+                let run = timed(&mut ledger.execute_ns, || {
+                    run_collect(engine, &step_var, &inputs)
+                });
+                let (first, new_caches) = match run {
                     Ok(x) => x,
                     Err(e) => {
                         self.caches = Some(caches);
@@ -358,20 +464,29 @@ impl Method {
                 if step_var.info.outputs.first().map(|o| o.dtype) == Some(Dtype::I32) {
                     StepOut {
                         logits: None,
-                        new_tokens: Some(engine.read_i32(&first)?),
+                        new_tokens: Some(
+                            timed(&mut ledger.collect_ns, || engine.read_i32(&first))?,
+                        ),
                         was_refresh: false,
                         proxy_drift: None,
+                        ledger: StepLedger::default(),
                     }
                 } else {
                     StepOut {
-                        logits: Some(engine.read_f32(&first)?),
+                        logits: Some(
+                            timed(&mut ledger.collect_ns, || engine.read_f32(&first))?,
+                        ),
                         new_tokens: None,
                         was_refresh: false,
                         proxy_drift: None,
+                        ledger: StepLedger::default(),
                     }
                 }
             }
         };
+        // The step ran to completion: the device token buffer is live for
+        // the next step's delta plan.
+        self.tok_buf = Some(tok_lit);
         self.state.commit(&plan, slots);
         // Hold any exported residual stats for the worker's post-commit
         // `observe` call (the controller wants them aligned with that
@@ -379,10 +494,46 @@ impl Method {
         self.last_proxy_drift = out.proxy_drift.clone();
         if self.policy.needs_confidence() {
             if let Some(l) = &out.logits {
-                update_confidence(&mut self.last_conf, l, b, n, slots);
+                // Host softmax is sampling-side work: `sample` phase.
+                timed(&mut ledger.sample_ns, || {
+                    update_confidence(&mut self.last_conf, l, b, n, slots)
+                });
             }
         }
+        ledger.step_wall_ns = step_t0.elapsed().as_nanos() as u64;
+        out.ledger = ledger;
         Ok(out)
+    }
+
+    /// Token upload through the delta planner: full upload when the device
+    /// buffer is missing or the shape changed, else an in-place row patch
+    /// of exactly the changed rows.  Row counters land in `ledger`.
+    fn upload_tokens(
+        &mut self,
+        engine: &Engine,
+        tokens: &[i32],
+        b: usize,
+        n: usize,
+        ledger: &mut StepLedger,
+    ) -> Result<PjRtBuffer> {
+        let mut resident = self.tok_buf.take();
+        if resident.is_none() {
+            self.tok_delta.reset();
+        }
+        match self.tok_delta.plan(tokens, n) {
+            DeltaUpload::Full => {
+                ledger.rows_uploaded += b as u64;
+                engine.upload_i32(&[b, n], tokens)
+            }
+            DeltaUpload::Patch => {
+                let mut buf = resident.take().expect("patch plan implies resident buffer");
+                let rows = self.tok_delta.rows();
+                engine.patch_rows_i32(&mut buf, rows, self.tok_delta.staged())?;
+                ledger.rows_uploaded += rows.len() as u64;
+                ledger.rows_skipped += (b - rows.len()) as u64;
+                Ok(buf)
+            }
+        }
     }
 }
 
@@ -466,7 +617,9 @@ fn zero_caches(engine: &Engine, var: &LoadedVariant) -> Result<Vec<PjRtBuffer>> 
 /// Per-position top-1 softmax confidence over `[B, N, V]` logits, written
 /// into `conf` (`[B, N]`).  Rows without a resident request (PAD rows)
 /// are skipped — their logits never feed index selection, and the softmax
-/// is the single largest host-side per-step cost.
+/// is the single largest host-side per-step cost.  Batch rows shard across
+/// scoped threads (`par_row_chunks`): the PAD-skip is a per-row decision,
+/// so it applies unchanged inside every shard; small groups stay serial.
 pub fn update_confidence(
     conf: &mut Vec<f32>,
     logits: &[f32],
@@ -476,12 +629,13 @@ pub fn update_confidence(
 ) {
     let v = logits.len() / (b * n);
     conf.resize(b * n, 0.0);
-    for bi in 0..b {
+    par_row_chunks(&mut conf[..], n, n * v, |bi, conf_row| {
         if !slots.get(bi).map(|s| s.occupied).unwrap_or(false) {
-            conf[bi * n..(bi + 1) * n].fill(0.0);
-            continue;
+            conf_row.fill(0.0);
+            return;
         }
-        for p in bi * n..(bi + 1) * n {
+        for (j, c) in conf_row.iter_mut().enumerate() {
+            let p = bi * n + j;
             let row = &logits[p * v..(p + 1) * v];
             let max = row.iter().cloned().fold(f32::MIN, f32::max);
             let mut denom = 0.0f32;
@@ -493,9 +647,9 @@ pub fn update_confidence(
                     top = e;
                 }
             }
-            conf[p] = top / denom;
+            *c = top / denom;
         }
-    }
+    });
 }
 
 #[cfg(test)]
@@ -605,6 +759,30 @@ mod tests {
             2,
             "positional slicing keeps the colliding cache input"
         );
+    }
+
+    #[test]
+    fn token_delta_plans_full_then_patches_changed_rows() {
+        let n = 4;
+        let mut d = TokenDelta::default();
+        let t0 = vec![1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3];
+        assert_eq!(d.plan(&t0, n), DeltaUpload::Full, "first step uploads all");
+        // No changes: a patch of zero rows.
+        assert_eq!(d.plan(&t0, n), DeltaUpload::Patch);
+        assert!(d.rows().is_empty() && d.staged().is_empty());
+        // Change rows 0 and 2.
+        let t1 = vec![9, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 7];
+        assert_eq!(d.plan(&t1, n), DeltaUpload::Patch);
+        assert_eq!(d.rows(), &[0, 2]);
+        assert_eq!(d.staged(), &[9, 1, 1, 1, 3, 3, 3, 7]);
+        // The mirror advanced: re-planning the same tokens is a no-op.
+        assert_eq!(d.plan(&t1, n), DeltaUpload::Patch);
+        assert!(d.rows().is_empty());
+        // Shape change ⇒ full upload; reset ⇒ full upload.
+        let t2 = vec![5; 8];
+        assert_eq!(d.plan(&t2, n), DeltaUpload::Full);
+        d.reset();
+        assert_eq!(d.plan(&t2, n), DeltaUpload::Full);
     }
 
     #[test]

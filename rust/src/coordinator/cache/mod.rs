@@ -45,7 +45,9 @@ pub use adaptive::{
     BudgetTier, StepObs,
 };
 pub use manual::{IndexPolicy, ManualPolicy};
-pub use method::{runtime_input_prefix, update_confidence, Method, StepOut};
+pub use method::{
+    runtime_input_prefix, update_confidence, DeltaUpload, Method, StepOut, TokenDelta,
+};
 pub use multistep::MultistepPolicy;
 pub use policy::{CachePolicy, Exec, PartialRefresh, Plan, PlanCtx, RowService};
 pub use spa::SpaPolicy;

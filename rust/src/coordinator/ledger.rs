@@ -1,0 +1,165 @@
+//! Per-step cost ledger: where does a decode step's wall time go?
+//!
+//! SPA-Cache's claim is that update identification and refresh are cheap —
+//! which is only checkable if the *host-side* costs around the device step
+//! are attributed, not folded into one opaque step latency.  Each worker
+//! accumulates a [`StepLedger`] of monotonic-clock time per hot-path phase:
+//!
+//! | phase       | measures                                                  |
+//! |-------------|-----------------------------------------------------------|
+//! | `upload`    | host→device tensor transfer (token delta rows, idx, zeros)|
+//! | `execute`   | device step execution (`Engine::run_buffers`)             |
+//! | `collect`   | device→host readback (logits / multistep tokens)          |
+//! | `sample`    | host sampling: softmax/top-k/commit (`apply_step_out`)    |
+//! | `serialize` | rendering v2 frames into connection write buffers         |
+//!
+//! plus `step_wall` (the whole `Method::step` span) and two row counters —
+//! `rows_uploaded` / `rows_skipped` — that prove the delta-upload path
+//! transfers strictly fewer rows than admissions×N would.
+//!
+//! All durations are recorded in **nanoseconds** from `std::time::Instant`
+//! (the host stub's per-phase costs are sub-μs; μs-granularity accumulation
+//! would truncate them to zero) and exported in μs as
+//! `spa_step_ledger_us{phase="..."}` through the metrics pipeline.
+//!
+//! `serialize` is special: frames are rendered on connection threads, not
+//! worker threads, so it is a process-global counter folded into the
+//! *aggregate* exposition only (`Metrics::render_workers`) — per-worker
+//! attribution of connection-thread work would be fiction.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Accumulated per-phase hot-path costs (ns) plus delta-upload counters.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct StepLedger {
+    /// Host→device transfer time (ns).
+    pub upload_ns: u64,
+    /// Device execution time (ns).
+    pub execute_ns: u64,
+    /// Device→host readback time (ns).
+    pub collect_ns: u64,
+    /// Host sampling/commit time (ns).
+    pub sample_ns: u64,
+    /// Frame serialization time (ns) — usually carried by the process
+    /// global (see [`record_serialize_ns`]) rather than per worker.
+    pub serialize_ns: u64,
+    /// Whole-step wall time (ns), the span the phases decompose.
+    pub step_wall_ns: u64,
+    /// Token rows actually transferred to the device.
+    pub rows_uploaded: u64,
+    /// Token rows the delta path proved clean and kept device-resident.
+    pub rows_skipped: u64,
+}
+
+impl StepLedger {
+    /// Fold `other` into `self` (merge across steps or across workers).
+    pub fn add(&mut self, other: &StepLedger) {
+        self.upload_ns += other.upload_ns;
+        self.execute_ns += other.execute_ns;
+        self.collect_ns += other.collect_ns;
+        self.sample_ns += other.sample_ns;
+        self.serialize_ns += other.serialize_ns;
+        self.step_wall_ns += other.step_wall_ns;
+        self.rows_uploaded += other.rows_uploaded;
+        self.rows_skipped += other.rows_skipped;
+    }
+
+    /// `(phase label, accumulated μs)` pairs, exposition order.
+    pub fn phases_us(&self) -> [(&'static str, f64); 6] {
+        [
+            ("upload", self.upload_ns as f64 / 1e3),
+            ("execute", self.execute_ns as f64 / 1e3),
+            ("collect", self.collect_ns as f64 / 1e3),
+            ("sample", self.sample_ns as f64 / 1e3),
+            ("serialize", self.serialize_ns as f64 / 1e3),
+            ("step_wall", self.step_wall_ns as f64 / 1e3),
+        ]
+    }
+
+    /// Sum of the attributed phases (ns), `step_wall` excluded — the
+    /// quantity that should approximate `step_wall_ns` (+ serialize, which
+    /// happens off the step path).
+    pub fn attributed_ns(&self) -> u64 {
+        self.upload_ns + self.execute_ns + self.collect_ns + self.sample_ns
+    }
+}
+
+/// Time `f`, add the elapsed nanoseconds to `*slot`, return its value.
+pub fn timed<T>(slot: &mut u64, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    *slot += t0.elapsed().as_nanos() as u64;
+    out
+}
+
+/// Process-global serialize-phase accumulator (ns).  Connection threads
+/// render frames outside any worker scope; they record here and
+/// `Metrics::render_workers` folds the total into the aggregate ledger.
+static SERIALIZE_NS: AtomicU64 = AtomicU64::new(0);
+
+/// Record frame-rendering time from a connection thread.
+pub fn record_serialize_ns(ns: u64) {
+    SERIALIZE_NS.fetch_add(ns, Ordering::Relaxed);
+}
+
+/// Total frame-rendering time recorded so far (ns, monotone — scrapers
+/// difference it across a window like any other counter).
+pub fn serialize_total_ns() -> u64 {
+    SERIALIZE_NS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates_all_fields() {
+        let mut a = StepLedger {
+            upload_ns: 1,
+            execute_ns: 2,
+            collect_ns: 3,
+            sample_ns: 4,
+            serialize_ns: 5,
+            step_wall_ns: 15,
+            rows_uploaded: 6,
+            rows_skipped: 7,
+        };
+        a.add(&a.clone());
+        assert_eq!(a.upload_ns, 2);
+        assert_eq!(a.execute_ns, 4);
+        assert_eq!(a.collect_ns, 6);
+        assert_eq!(a.sample_ns, 8);
+        assert_eq!(a.serialize_ns, 10);
+        assert_eq!(a.step_wall_ns, 30);
+        assert_eq!(a.rows_uploaded, 12);
+        assert_eq!(a.rows_skipped, 14);
+        assert_eq!(a.attributed_ns(), 20);
+    }
+
+    #[test]
+    fn phases_export_as_us() {
+        let l = StepLedger { upload_ns: 2500, ..StepLedger::default() };
+        let phases = l.phases_us();
+        assert_eq!(phases[0], ("upload", 2.5));
+        assert_eq!(phases[5].0, "step_wall");
+    }
+
+    #[test]
+    fn timed_attributes_elapsed() {
+        let mut slot = 0u64;
+        let v = timed(&mut slot, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(slot >= 1_000_000, "at least ~1ms attributed: {slot}");
+    }
+
+    #[test]
+    fn global_serialize_counter_is_monotone() {
+        let before = serialize_total_ns();
+        record_serialize_ns(123);
+        assert!(serialize_total_ns() >= before + 123);
+    }
+}

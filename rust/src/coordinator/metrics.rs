@@ -14,6 +14,7 @@
 
 use std::time::Instant;
 
+use super::ledger::{self, StepLedger};
 use crate::util::stats::{Reservoir, Summary, Welford};
 
 /// Cap on retained samples per series: means (Welford) stay exact, while
@@ -67,6 +68,13 @@ pub struct Metrics {
     /// 0 with `--adaptive off`).  Merged as the **max** across workers —
     /// summing tier indices would be meaningless.
     pub budget_tier: usize,
+    /// Per-step hot-path cost ledger: μs per phase (upload / execute /
+    /// collect / sample / serialize / step_wall) plus the delta-upload row
+    /// counters, exported as `spa_step_ledger_us{phase="..."}` and
+    /// `spa_rows_{uploaded,skipped}_total`.  The serialize phase is
+    /// process-global (connection threads) and folded into the aggregate
+    /// at [`Metrics::render_workers`] time only.
+    pub ledger: StepLedger,
     /// Time-to-first-token stream, measured from `Request::submitted`.
     pub ttft: Welford,
     /// End-to-end request latency stream (includes batcher queueing).
@@ -99,6 +107,7 @@ impl Default for Metrics {
             schedule_refits: 0,
             tier_switches: 0,
             budget_tier: 0,
+            ledger: StepLedger::default(),
             ttft: Welford::default(),
             latency: Welford::default(),
             queue_wait: Welford::default(),
@@ -178,6 +187,7 @@ impl Metrics {
         // Tier indices don't sum: the aggregate reports the highest
         // budget tier any worker is running at.
         self.budget_tier = self.budget_tier.max(other.budget_tier);
+        self.ledger.add(&other.ledger);
         self.queue_depth += other.queue_depth;
         self.active_slots += other.active_slots;
         self.ttft.merge(&other.ttft);
@@ -204,6 +214,8 @@ impl Metrics {
             ("spa_schedule_refits_total", self.schedule_refits as f64),
             ("spa_tier_switches_total", self.tier_switches as f64),
             ("spa_budget_tier", self.budget_tier as f64),
+            ("spa_rows_uploaded_total", self.ledger.rows_uploaded as f64),
+            ("spa_rows_skipped_total", self.ledger.rows_skipped as f64),
             ("spa_queue_depth", self.queue_depth as f64),
             ("spa_active_slots", self.active_slots as f64),
             ("spa_tps", self.tps()),
@@ -223,6 +235,10 @@ impl Metrics {
         for (k, v) in self.series() {
             s.push_str(&format!("{k}{labels} {v}\n"));
         }
+        for (phase, us) in self.ledger.phases_us() {
+            let composed = merge_labels(&format!("{{phase=\"{phase}\"}}"), labels);
+            s.push_str(&format!("spa_step_ledger_us{composed} {us}\n"));
+        }
         if let Some(l) = self.latency_summary() {
             s.push_str(&format!("spa_latency_ms_p50{labels} {}\n", l.p50));
             s.push_str(&format!("spa_latency_ms_p99{labels} {}\n", l.p99));
@@ -237,7 +253,11 @@ impl Metrics {
 
     /// Exposition text for a set of per-worker snapshots: aggregate series
     /// first (unlabelled, as a single-worker server would emit), then the
-    /// same series per worker with `{worker="<id>"}` labels.
+    /// same series per worker with `{worker="<id>"}` labels.  The
+    /// process-global serialize phase (frames render on connection
+    /// threads, not worker threads) joins the aggregate ledger here — and
+    /// only here, so unit tests rendering private `Metrics` never see
+    /// another test's frames.
     pub fn render_workers(snaps: &[(usize, Metrics)]) -> String {
         let mut total = Metrics::default();
         // `total.started` begins at "now"; merging pulls it back to the
@@ -245,11 +265,28 @@ impl Metrics {
         for (_, m) in snaps {
             total.merge(m);
         }
+        total.ledger.serialize_ns += ledger::serialize_total_ns();
         let mut s = total.render();
         for (id, m) in snaps {
             s.push_str(&m.render_with_labels(&format!("{{worker=\"{id}\"}}")));
         }
         s
+    }
+}
+
+/// Compose two Prometheus label sets (either may be empty): merging
+/// `{phase="upload"}` with `{worker="0"}` yields
+/// `{phase="upload",worker="0"}` — a plain string append would emit the
+/// malformed `{phase="upload"}{worker="0"}`.
+fn merge_labels(a: &str, b: &str) -> String {
+    match (a.is_empty(), b.is_empty()) {
+        (true, _) => b.to_string(),
+        (_, true) => a.to_string(),
+        _ => format!(
+            "{{{},{}}}",
+            a.trim_start_matches('{').trim_end_matches('}'),
+            b.trim_start_matches('{').trim_end_matches('}')
+        ),
     }
 }
 
@@ -385,6 +422,53 @@ mod tests {
         assert_eq!(per_worker, vec![(0, 1.0), (1, 1.0)]);
         let decoded = scrape_worker_series(&text, "spa_tokens_decoded");
         assert_eq!(decoded, vec![(0, 8.0), (1, 4.0)]);
+    }
+
+    #[test]
+    fn label_merge_composes_phase_and_worker() {
+        assert_eq!(merge_labels("", ""), "");
+        assert_eq!(merge_labels("{phase=\"upload\"}", ""), "{phase=\"upload\"}");
+        assert_eq!(merge_labels("", "{worker=\"1\"}"), "{worker=\"1\"}");
+        assert_eq!(
+            merge_labels("{phase=\"upload\"}", "{worker=\"1\"}"),
+            "{phase=\"upload\",worker=\"1\"}"
+        );
+    }
+
+    #[test]
+    fn ledger_series_render_merge_and_scrape() {
+        let mut w0 = Metrics::default();
+        w0.ledger.upload_ns = 2_000; // 2 μs
+        w0.ledger.execute_ns = 10_000;
+        w0.ledger.rows_uploaded = 3;
+        w0.ledger.rows_skipped = 5;
+        let mut w1 = Metrics::default();
+        w1.ledger.upload_ns = 1_000;
+        w1.ledger.rows_uploaded = 2;
+        // Plain render: labelled phase series, no worker label.
+        let solo = w0.render();
+        assert!(solo.contains("spa_step_ledger_us{phase=\"upload\"} 2\n"), "{solo}");
+        assert!(solo.contains("spa_step_ledger_us{phase=\"execute\"} 10\n"), "{solo}");
+        assert!(solo.contains("spa_rows_uploaded_total 3\n"), "{solo}");
+        assert!(solo.contains("spa_rows_skipped_total 5\n"), "{solo}");
+        // Merged exposition: aggregate sums, per-worker labels composed.
+        let text = Metrics::render_workers(&[(0, w0), (1, w1)]);
+        assert_eq!(
+            scrape_value(&text, "spa_step_ledger_us{phase=\"upload\"}"),
+            Some(3.0),
+            "{text}"
+        );
+        assert_eq!(scrape_value(&text, "spa_rows_uploaded_total"), Some(5.0));
+        assert_eq!(scrape_value(&text, "spa_rows_skipped_total"), Some(5.0));
+        assert!(
+            text.contains("spa_step_ledger_us{phase=\"upload\",worker=\"0\"} 2\n"),
+            "composed labels:\n{text}"
+        );
+        // The global serialize counter joins the aggregate (monotone ≥ 0).
+        assert!(
+            scrape_value(&text, "spa_step_ledger_us{phase=\"serialize\"}").is_some(),
+            "{text}"
+        );
     }
 
     #[test]

@@ -14,6 +14,7 @@ pub mod batcher;
 pub mod cache;
 pub mod decode;
 pub mod group;
+pub mod ledger;
 pub mod metrics;
 pub mod request;
 pub mod router;

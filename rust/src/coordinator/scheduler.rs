@@ -51,6 +51,7 @@ use super::batcher::{Batcher, BatcherConfig};
 use super::cache::{Method, StepOut};
 use super::decode::{slot_done, Sampler};
 use super::group::{apply_step_out, masks_in_row};
+use super::ledger;
 use super::metrics::Metrics;
 use super::request::{ReqEvent, Request, Response, SlotState};
 use super::router::WorkerStatus;
@@ -354,13 +355,20 @@ impl Worker {
         let (b, n, v) = self.method.geometry();
         let out: StepOut =
             self.method.step(&self.engine, &self.tokens, &mut self.slots)?;
-        let committed = apply_step_out(
-            out,
-            &mut self.tokens,
-            &mut self.slots,
-            &mut self.sampler,
-            (b, n, v),
-        )?;
+        // Copy the per-step cost ledger out before `apply_step_out` consumes
+        // the StepOut (a field move would leave `out` partially moved);
+        // host-side sampling/commit time lands in `sample`.
+        let mut step_ledger = out.ledger.clone();
+        let committed = ledger::timed(&mut step_ledger.sample_ns, || {
+            apply_step_out(
+                out,
+                &mut self.tokens,
+                &mut self.slots,
+                &mut self.sampler,
+                (b, n, v),
+            )
+        })?;
+        self.metrics.ledger.add(&step_ledger);
         // Feed the adaptive budget controller this step's measured
         // dynamics: commit counts plus the load pressure the router's
         // dispatch also sees (queue depth / free slots) — a no-op without

@@ -75,6 +75,7 @@ use crate::model::tokenizer::{Tokenizer, BOS, MASK, PAD};
 use crate::util::json::{parse, Json};
 use crate::util::threadpool::ThreadPool;
 
+use super::ledger;
 use super::request::{GenParams, ReqEvent, Request};
 use super::router::Router;
 
@@ -92,11 +93,61 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     }
 }
 
+/// One connection's write half: the socket plus a reusable render buffer.
+/// Every frame is rendered with `Json::write_to` into `buf` (grow-only,
+/// reused across frames — no per-frame `to_string` allocation) and flushed
+/// with a single `write_all`; frames queued in the same tick batch into one
+/// buffer fill and one socket write (see [`forward_events`]).  Render time
+/// feeds the process-wide `serialize` ledger phase
+/// (`ledger::record_serialize_ns`) — socket time deliberately excluded, it
+/// is the client's backpressure, not our serialisation cost.
+struct ConnWriter {
+    stream: TcpStream,
+    buf: String,
+}
+
+impl ConnWriter {
+    fn new(stream: TcpStream) -> ConnWriter {
+        ConnWriter { stream, buf: String::new() }
+    }
+
+    /// Render `frames` into the reusable buffer (one line each) and write
+    /// them with one `write_all` — the writev-style batch path.
+    fn send_frames(&mut self, frames: &[Json]) -> io::Result<()> {
+        self.buf.clear();
+        let t0 = Instant::now();
+        for f in frames {
+            f.write_to(&mut self.buf);
+            self.buf.push('\n');
+        }
+        ledger::record_serialize_ns(t0.elapsed().as_nanos() as u64);
+        self.stream.write_all(self.buf.as_bytes())
+    }
+
+    /// Write one pre-rendered line through the same buffer path (the
+    /// `error_reply`/`error_frame` helpers stay `-> String` — their wire
+    /// shape is pinned by tests — but every byte still leaves through the
+    /// shared buffer and is counted by the serialize phase).
+    fn send_str(&mut self, line: &str) -> io::Result<()> {
+        self.buf.clear();
+        let t0 = Instant::now();
+        self.buf.push_str(line);
+        self.buf.push('\n');
+        ledger::record_serialize_ns(t0.elapsed().as_nanos() as u64);
+        self.stream.write_all(self.buf.as_bytes())
+    }
+}
+
 /// Write one frame line to a shared connection writer (frames from
 /// concurrent forwarders interleave at line granularity, never within one).
-fn send_line(w: &Mutex<TcpStream>, line: &str) -> io::Result<()> {
-    let mut g = lock(w);
-    writeln!(g, "{line}")
+fn send_line(w: &Mutex<ConnWriter>, line: &str) -> io::Result<()> {
+    lock(w).send_str(line)
+}
+
+/// Render + write one [`Json`] frame through the connection's reusable
+/// buffer (the common non-batched case).
+fn send_json(w: &Mutex<ConnWriter>, frame: &Json) -> io::Result<()> {
+    lock(w).send_frames(std::slice::from_ref(frame))
 }
 
 /// Build a Request from a (task, prompt, gen_len) triple plus per-request
@@ -335,7 +386,8 @@ fn handle_conn(
 ) -> Result<bool> {
     let max_line = cfg.max_line.max(1);
     let peer = stream.peer_addr().ok();
-    let writer: Arc<Mutex<TcpStream>> = Arc::new(Mutex::new(stream.try_clone()?));
+    let writer: Arc<Mutex<ConnWriter>> =
+        Arc::new(Mutex::new(ConnWriter::new(stream.try_clone()?)));
     let mut reader = BufReader::new(stream);
     let mut proto: i64 = 1;
     let sessions: SessionMap = Arc::new(Mutex::new(HashMap::new()));
@@ -387,7 +439,7 @@ fn handle_conn(
                         ("ok", Json::Bool(true)),
                         ("proto", Json::int(proto)),
                     ]);
-                    send_line(&writer, &reply.to_string())?;
+                    send_json(&writer, &reply)?;
                 } else {
                     send_line(
                         &writer,
@@ -398,17 +450,14 @@ fn handle_conn(
                 }
             }
             "shutdown" => {
-                send_line(
-                    &writer,
-                    &Json::obj(vec![("ok", Json::Bool(true))]).to_string(),
-                )?;
+                send_json(&writer, &Json::obj(vec![("ok", Json::Bool(true))]))?;
                 requested_shutdown = true;
                 break;
             }
             "stats" => {
                 let text = router.stats();
                 let out = Json::obj(vec![("stats", Json::Str(text))]);
-                send_line(&writer, &out.to_string())?;
+                send_json(&writer, &out)?;
             }
             "drain" => {
                 let timeout_ms = msg
@@ -417,10 +466,7 @@ fn handle_conn(
                     .filter(|x| x.is_finite() && *x >= 0.0)
                     .unwrap_or(10_000.0);
                 let ok = router.drain(std::time::Duration::from_millis(timeout_ms as u64));
-                send_line(
-                    &writer,
-                    &Json::obj(vec![("ok", Json::Bool(ok))]).to_string(),
-                )?;
+                send_json(&writer, &Json::obj(vec![("ok", Json::Bool(ok))]))?;
             }
             "cancel" => {
                 if proto < PROTO_V2 {
@@ -563,7 +609,7 @@ fn v1_generate(
     seq_len: usize,
     tok: &Tokenizer,
     router: &Router,
-    writer: &Mutex<TcpStream>,
+    writer: &Mutex<ConnWriter>,
 ) -> Result<()> {
     let client_id = msg.get("id").and_then(|i| i.as_i64()).unwrap_or(0);
     let req = match build_from_msg(msg, seq_len, tok) {
@@ -597,7 +643,7 @@ fn v1_generate(
                         worker.map(|w| Json::Num(w as f64)).unwrap_or(Json::Null),
                     ),
                 ]);
-                send_line(writer, &out.to_string())?;
+                send_json(writer, &out)?;
                 return Ok(());
             }
             Ok(ReqEvent::Cancelled { .. }) => {
@@ -621,7 +667,7 @@ fn v2_generate(
     seq_len: usize,
     tok: &Tokenizer,
     router: &Router,
-    writer: &Arc<Mutex<TcpStream>>,
+    writer: &Arc<Mutex<ConnWriter>>,
     sessions: &SessionMap,
     max_inflight: usize,
 ) -> Result<()> {
@@ -687,61 +733,81 @@ fn error_frame(cid: i64, msg: &str) -> String {
     .to_string()
 }
 
+/// One [`ReqEvent`] as its wire frame, plus whether it ends the stream.
+fn event_frame(cid: i64, worker: Option<usize>, ev: ReqEvent) -> (Json, bool) {
+    match ev {
+        ReqEvent::Tokens { delta, positions, .. } => (
+            Json::obj(vec![
+                ("event", Json::str("tokens")),
+                ("id", Json::int(cid)),
+                ("text_delta", Json::Str(delta)),
+                (
+                    "positions",
+                    Json::Arr(
+                        positions.iter().map(|&p| Json::int(p as i64)).collect(),
+                    ),
+                ),
+                ("done", Json::Bool(false)),
+            ]),
+            false,
+        ),
+        ReqEvent::Done(resp) => (
+            Json::obj(vec![
+                ("event", Json::str("done")),
+                ("id", Json::int(cid)),
+                ("text", Json::Str(resp.text)),
+                ("steps", Json::Num(resp.steps as f64)),
+                ("decoded", Json::Num(resp.decoded as f64)),
+                ("ttft_ms", num_or_null(resp.ttft_ms)),
+                ("latency_ms", num_or_null(resp.latency_ms)),
+                (
+                    "worker",
+                    worker.map(|w| Json::Num(w as f64)).unwrap_or(Json::Null),
+                ),
+                ("done", Json::Bool(true)),
+            ]),
+            true,
+        ),
+        ReqEvent::Cancelled { decoded, .. } => (
+            Json::obj(vec![
+                ("event", Json::str("cancelled")),
+                ("id", Json::int(cid)),
+                ("decoded", Json::Num(decoded as f64)),
+                ("done", Json::Bool(true)),
+            ]),
+            true,
+        ),
+    }
+}
+
 /// Drain one request's events into wire frames until the terminal event
 /// (or the worker side vanishes), then drop it from the session map.
+/// Events already queued when the forwarder wakes (a fast decode step
+/// committing several `tokens` frames, or a `tokens`+`done` pair from the
+/// final step) batch into one buffer render and one socket write.
 fn forward_events(
     cid: i64,
     worker: Option<usize>,
     rx: Receiver<ReqEvent>,
-    writer: &Mutex<TcpStream>,
+    writer: &Mutex<ConnWriter>,
     sessions: &Mutex<HashMap<i64, Inflight>>,
     router: &Router,
 ) {
     let mut terminal_sent = false;
-    for ev in rx {
-        let (frame, terminal) = match ev {
-            ReqEvent::Tokens { delta, positions, .. } => (
-                Json::obj(vec![
-                    ("event", Json::str("tokens")),
-                    ("id", Json::int(cid)),
-                    ("text_delta", Json::Str(delta)),
-                    (
-                        "positions",
-                        Json::Arr(
-                            positions.iter().map(|&p| Json::int(p as i64)).collect(),
-                        ),
-                    ),
-                    ("done", Json::Bool(false)),
-                ]),
-                false,
-            ),
-            ReqEvent::Done(resp) => (
-                Json::obj(vec![
-                    ("event", Json::str("done")),
-                    ("id", Json::int(cid)),
-                    ("text", Json::Str(resp.text)),
-                    ("steps", Json::Num(resp.steps as f64)),
-                    ("decoded", Json::Num(resp.decoded as f64)),
-                    ("ttft_ms", num_or_null(resp.ttft_ms)),
-                    ("latency_ms", num_or_null(resp.latency_ms)),
-                    (
-                        "worker",
-                        worker.map(|w| Json::Num(w as f64)).unwrap_or(Json::Null),
-                    ),
-                    ("done", Json::Bool(true)),
-                ]),
-                true,
-            ),
-            ReqEvent::Cancelled { decoded, .. } => (
-                Json::obj(vec![
-                    ("event", Json::str("cancelled")),
-                    ("id", Json::int(cid)),
-                    ("decoded", Json::Num(decoded as f64)),
-                    ("done", Json::Bool(true)),
-                ]),
-                true,
-            ),
-        };
+    loop {
+        let Ok(first) = rx.recv() else { break };
+        let (frame, mut terminal) = event_frame(cid, worker, first);
+        let mut frames = vec![frame];
+        while !terminal {
+            match rx.try_recv() {
+                Ok(ev) => {
+                    let (frame, t) = event_frame(cid, worker, ev);
+                    frames.push(frame);
+                    terminal = t;
+                }
+                Err(_) => break,
+            }
+        }
         if terminal {
             // Unregister *before* writing the frame: once the client
             // observes a terminal frame, the session slot is guaranteed
@@ -751,7 +817,7 @@ fn forward_events(
             // frame, which the client demux drops.
             lock(sessions).remove(&cid);
         }
-        let sent = send_line(writer, &frame.to_string()).is_ok();
+        let sent = lock(writer).send_frames(&frames).is_ok();
         if terminal {
             terminal_sent = true;
         }
@@ -896,7 +962,7 @@ pub struct Pending {
     /// The client id this handle's frames are keyed by.
     pub id: i64,
     rx: Receiver<Json>,
-    writer: Arc<Mutex<TcpStream>>,
+    writer: Arc<Mutex<ConnWriter>>,
 }
 
 /// True for `done` / `cancelled` / `error` frames (they carry
@@ -943,7 +1009,7 @@ impl Pending {
     /// terminal frame (`cancelled`, or `done` if completion raced us).
     pub fn cancel(&self) -> Result<()> {
         let body = Json::obj(vec![("op", Json::str("cancel")), ("id", Json::int(self.id))]);
-        send_line(&self.writer, &body.to_string())?;
+        send_json(&self.writer, &body)?;
         Ok(())
     }
 }
@@ -956,7 +1022,7 @@ impl Pending {
 /// wrapper; [`Client::connect_v1`] keeps the plain one-line-per-reply
 /// protocol for compatibility.
 pub struct Client {
-    writer: Arc<Mutex<TcpStream>>,
+    writer: Arc<Mutex<ConnWriter>>,
     state: Arc<ClientState>,
     next_id: i64,
     proto: i64,
@@ -983,7 +1049,7 @@ impl Client {
     /// single reply line each, exactly the pre-session protocol.
     pub fn connect_v1(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
-        let writer = Arc::new(Mutex::new(stream.try_clone()?));
+        let writer = Arc::new(Mutex::new(ConnWriter::new(stream.try_clone()?)));
         let state = Arc::new(ClientState::default());
         let reader_state = Arc::clone(&state);
         std::thread::Builder::new()
@@ -1006,7 +1072,7 @@ impl Client {
     pub fn request(&mut self, body: &Json) -> Result<Json> {
         let (tx, rx) = channel();
         lock(&self.state.control).push_back(tx);
-        if let Err(e) = send_line(&self.writer, &body.to_string()) {
+        if let Err(e) = send_json(&self.writer, body) {
             lock(&self.state.control).pop_back();
             return Err(e.into());
         }
@@ -1033,7 +1099,7 @@ impl Client {
         let id = self.next_id;
         self.next_id += 1;
         lock(&self.state.routes).insert(id, route);
-        if let Err(e) = send_line(&self.writer, &req.body(id).to_string()) {
+        if let Err(e) = send_json(&self.writer, &req.body(id)) {
             lock(&self.state.routes).remove(&id);
             return Err(e.into());
         }
@@ -1043,7 +1109,7 @@ impl Client {
     /// Cancel an in-flight request by client id (see [`Pending::cancel`]).
     pub fn cancel(&mut self, id: i64) -> Result<()> {
         let body = Json::obj(vec![("op", Json::str("cancel")), ("id", Json::int(id))]);
-        send_line(&self.writer, &body.to_string())?;
+        send_json(&self.writer, &body)?;
         Ok(())
     }
 
@@ -1094,7 +1160,7 @@ impl Drop for Client {
     /// than leaking a thread blocked on a half-open connection.
     fn drop(&mut self) {
         let g = lock(&self.writer);
-        let _ = g.shutdown(std::net::Shutdown::Both);
+        let _ = g.stream.shutdown(std::net::Shutdown::Both);
     }
 }
 
@@ -1117,6 +1183,34 @@ mod tests {
     fn error_reply_is_single_line() {
         let wire = error_reply("line1\nline2");
         assert!(!wire.contains('\n'), "newline must be escaped: {wire}");
+    }
+
+    #[test]
+    fn conn_writer_renders_batches_as_one_line_per_frame() {
+        // Two frames queued in one tick leave as one buffered write but
+        // still decode as two newline-delimited JSON lines; the buffer is
+        // reused (no growth reset) across sends.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let mut w = ConnWriter::new(server_side);
+        let frames = [
+            Json::obj(vec![("event", Json::str("tokens")), ("id", Json::int(1))]),
+            Json::obj(vec![("event", Json::str("done")), ("id", Json::int(1))]),
+        ];
+        w.send_frames(&frames).unwrap();
+        w.send_str(&error_reply("oops")).unwrap();
+        drop(w);
+        let mut lines = BufReader::new(client).lines();
+        let first = lines.next().unwrap().unwrap();
+        assert_eq!(parse(&first).unwrap().get("event").unwrap().as_str(), Some("tokens"));
+        let second = lines.next().unwrap().unwrap();
+        assert_eq!(parse(&second).unwrap().get("event").unwrap().as_str(), Some("done"));
+        let third = lines.next().unwrap().unwrap();
+        assert_eq!(parse(&third).unwrap().get("error").unwrap().as_str(), Some("oops"));
+        // Rendering time was charged to the process-wide serialize phase.
+        assert!(ledger::serialize_total_ns() > 0);
     }
 
     #[test]

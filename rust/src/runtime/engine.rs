@@ -52,6 +52,12 @@ pub struct Engine {
     weights: RefCell<HashMap<String, Rc<ModelWeights>>>,
     variants: RefCell<HashMap<String, Rc<LoadedVariant>>>,
     stats: RefCell<EngineStats>,
+    /// Upload arena: device-resident zero templates keyed by shape, built
+    /// once and cloned on every later cold admission (`upload_zeros_f32`
+    /// used to re-allocate + re-upload the zero tensor each time), plus a
+    /// grow-only host staging buffer reused across template builds.
+    zero_templates: RefCell<HashMap<Vec<usize>, PjRtBuffer>>,
+    zero_staging: RefCell<Vec<f32>>,
 }
 
 impl Engine {
@@ -79,6 +85,8 @@ impl Engine {
             weights: RefCell::new(HashMap::new()),
             variants: RefCell::new(HashMap::new()),
             stats: RefCell::new(EngineStats::default()),
+            zero_templates: RefCell::new(HashMap::new()),
+            zero_staging: RefCell::new(Vec::new()),
         })
     }
 
@@ -109,10 +117,39 @@ impl Engine {
         Ok(self.client.buffer_from_host_buffer::<f32>(data, shape, None)?)
     }
 
-    /// Upload a zero-filled f32 tensor (cache initialisation).
+    /// Upload a zero-filled f32 tensor (cache initialisation).  Backed by
+    /// the arena: the first request per shape builds a device template
+    /// (through the reusable staging buffer), later requests clone it —
+    /// no host allocation and no re-upload on repeat cold admissions.
     pub fn upload_zeros_f32(&self, shape: &[usize]) -> Result<PjRtBuffer> {
+        if let Some(t) = self.zero_templates.borrow().get(shape) {
+            return Ok(t.clone());
+        }
         let n: usize = shape.iter().product();
-        self.upload_f32(shape, &vec![0.0; n])
+        let buf = {
+            let mut staging = self.zero_staging.borrow_mut();
+            if staging.len() < n {
+                staging.resize(n, 0.0);
+            }
+            self.upload_f32(shape, &staging[..n])?
+        };
+        self.zero_templates.borrow_mut().insert(shape.to_vec(), buf.clone());
+        Ok(buf)
+    }
+
+    /// Delta upload: patch only the named leading-dim rows of a resident
+    /// device buffer from host data (`data` = `rows.len()` packed rows).
+    /// Clean rows keep their device bytes; only the patched bytes count
+    /// toward `upload_bytes`.
+    pub fn patch_rows_i32(
+        &self,
+        buf: &mut PjRtBuffer,
+        rows: &[usize],
+        data: &[i32],
+    ) -> Result<()> {
+        self.stats.borrow_mut().upload_bytes += (data.len() * 4) as u64;
+        buf.copy_rows_from_host::<i32>(rows, data)?;
+        Ok(())
     }
 
     /// Read an f32 buffer back to the host.  (TFRT-CPU lacks CopyRawToHost,

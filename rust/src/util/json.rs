@@ -166,6 +166,14 @@ impl Json {
         s
     }
 
+    /// Serialise into a caller-owned buffer — the server's per-connection
+    /// write path renders frames into one reusable `String` instead of
+    /// allocating a fresh one per frame (`to_string` stays as the
+    /// convenience wrapper).
+    pub fn write_to(&self, out: &mut String) {
+        self.write(out);
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),

@@ -4,6 +4,12 @@
 //! generators in the e2e example.  Jobs are boxed closures over an mpsc
 //! channel guarded by a mutex (the classic "rust book" pool, hardened with
 //! graceful shutdown and panic isolation).
+//!
+//! [`par_row_chunks`] is the scoped complement for the decode hot path:
+//! pool jobs must be `'static`, but the O(B·N·V) host softmax/top-k work
+//! borrows step-local slices, so it fans out over `std::thread::scope`
+//! instead — sharded by batch row, threshold-gated so small batches stay
+//! serial.
 
 use std::panic::AssertUnwindSafe;
 use std::sync::mpsc;
@@ -11,6 +17,46 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Minimum total work (caller-estimated element ops) before
+/// [`par_row_chunks`] spawns threads; below it, spawn/join overhead
+/// dominates and the loop runs serial on the caller's thread.
+pub const PAR_MIN_WORK: usize = 1 << 16;
+
+/// Invoke `f(row_index, row_chunk)` for every `row_len`-sized chunk of
+/// `data`, sharding contiguous row ranges across scoped threads when
+/// `rows * work_per_row` clears [`PAR_MIN_WORK`].  Rows never split across
+/// shards, so per-row logic (PAD-skip, confidence masking) applies
+/// unchanged inside each shard.  `work_per_row` is the caller's estimate
+/// of per-row cost in element ops (e.g. `n * vocab` for a softmax row) —
+/// `data` itself may be just the output buffer.
+pub fn par_row_chunks<T, F>(data: &mut [T], row_len: usize, work_per_row: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(row_len > 0 && data.len() % row_len == 0, "data must be whole rows");
+    let rows = data.len() / row_len;
+    let threads = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let shards = threads.min(rows);
+    if shards <= 1 || rows.saturating_mul(work_per_row) < PAR_MIN_WORK {
+        for (r, chunk) in data.chunks_mut(row_len).enumerate() {
+            f(r, chunk);
+        }
+        return;
+    }
+    let rows_per_shard = rows.div_ceil(shards);
+    thread::scope(|s| {
+        for (si, shard) in data.chunks_mut(rows_per_shard * row_len).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (j, chunk) in shard.chunks_mut(row_len).enumerate() {
+                    f(si * rows_per_shard + j, chunk);
+                }
+            });
+        }
+    });
+}
 
 pub struct ThreadPool {
     workers: Vec<thread::JoinHandle<()>>,
@@ -78,6 +124,40 @@ mod tests {
         }
         drop(pool); // join
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_row_chunks_visits_every_row_once_serial_and_sharded() {
+        // Tiny work estimate → serial path.
+        let mut small = vec![0u32; 4 * 3];
+        par_row_chunks(&mut small, 3, 1, |r, chunk| {
+            for c in chunk {
+                *c += r as u32 + 1;
+            }
+        });
+        assert_eq!(small, vec![1, 1, 1, 2, 2, 2, 3, 3, 3, 4, 4, 4]);
+        // Huge work estimate → sharded path; same contract.
+        let mut big = vec![0u32; 16 * 5];
+        par_row_chunks(&mut big, 5, PAR_MIN_WORK, |r, chunk| {
+            for c in chunk {
+                *c += r as u32 + 1;
+            }
+        });
+        for r in 0..16 {
+            assert!(big[r * 5..(r + 1) * 5].iter().all(|&c| c == r as u32 + 1), "row {r}");
+        }
+    }
+
+    #[test]
+    fn par_row_chunks_row_count_edge_cases() {
+        let mut one = vec![7u8; 6];
+        par_row_chunks(&mut one, 6, PAR_MIN_WORK, |r, chunk| {
+            assert_eq!(r, 0);
+            chunk.fill(9);
+        });
+        assert_eq!(one, vec![9; 6]);
+        let mut empty: Vec<u8> = Vec::new();
+        par_row_chunks(&mut empty, 4, PAR_MIN_WORK, |_, _| panic!("no rows"));
     }
 
     #[test]

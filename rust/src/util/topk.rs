@@ -25,6 +25,35 @@ pub fn bottom_k_asc(scores: &[f32], k: usize) -> Vec<usize> {
     idx
 }
 
+/// Batched [`top_k_desc`] over a row-major `[rows × row_len]` score matrix,
+/// sharded across scoped threads by row (`util::threadpool::par_row_chunks`)
+/// when the total work warrants it.  Row `r`'s result is identical to
+/// `top_k_desc(&scores[r*row_len..(r+1)*row_len], k)`.
+pub fn top_k_desc_rows(scores: &[f32], row_len: usize, k: usize) -> Vec<Vec<usize>> {
+    batch_rows(scores, row_len, |row| top_k_desc(row, k))
+}
+
+/// Batched [`bottom_k_asc`], same sharding contract as [`top_k_desc_rows`].
+pub fn bottom_k_asc_rows(scores: &[f32], row_len: usize, k: usize) -> Vec<Vec<usize>> {
+    batch_rows(scores, row_len, |row| bottom_k_asc(row, k))
+}
+
+fn batch_rows(
+    scores: &[f32],
+    row_len: usize,
+    per_row: impl Fn(&[f32]) -> Vec<usize> + Sync,
+) -> Vec<Vec<usize>> {
+    assert!(row_len > 0 && scores.len() % row_len == 0, "scores must be whole rows");
+    let rows = scores.len() / row_len;
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); rows];
+    // Sort cost per row ~ row_len·log(row_len); the helper gates on it.
+    let work = row_len * (usize::BITS - row_len.leading_zeros()).max(1) as usize;
+    crate::util::threadpool::par_row_chunks(&mut out, 1, work, |r, slot| {
+        slot[0] = per_row(&scores[r * row_len..(r + 1) * row_len]);
+    });
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -43,6 +72,37 @@ mod tests {
     #[test]
     fn k_clamped() {
         assert_eq!(top_k_desc(&[1.0], 5), vec![0]);
+    }
+
+    #[test]
+    fn batched_rows_match_per_row_calls() {
+        let mut rng = crate::util::rng::Rng::new(23);
+        for _ in 0..20 {
+            let rows = rng.range(1, 6);
+            let n = rng.range(1, 30);
+            let k = rng.range(1, n + 1);
+            let xs: Vec<f32> = (0..rows * n).map(|_| (rng.below(8) as f32) / 2.0).collect();
+            let top = top_k_desc_rows(&xs, n, k);
+            let bot = bottom_k_asc_rows(&xs, n, k);
+            assert_eq!(top.len(), rows);
+            for r in 0..rows {
+                let row = &xs[r * n..(r + 1) * n];
+                assert_eq!(top[r], top_k_desc(row, k), "row {r}");
+                assert_eq!(bot[r], bottom_k_asc(row, k), "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_rows_match_on_sharded_sizes() {
+        // Large enough that par_row_chunks takes the threaded path.
+        let n = 1 << 12;
+        let rows = 8;
+        let xs: Vec<f32> = (0..rows * n).map(|i| ((i * 2654435761) % 997) as f32).collect();
+        let got = top_k_desc_rows(&xs, n, 5);
+        for r in 0..rows {
+            assert_eq!(got[r], top_k_desc(&xs[r * n..(r + 1) * n], 5), "row {r}");
+        }
     }
 
     #[test]

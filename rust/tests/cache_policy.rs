@@ -17,8 +17,8 @@
 use std::time::Instant;
 
 use spa_cache::coordinator::cache::{
-    CachePolicy, CacheState, Exec, IndexPolicy, ManualPolicy, MultistepPolicy,
-    PartialRefresh, Plan, PlanCtx, SpaPolicy,
+    CachePolicy, CacheState, DeltaUpload, Exec, IndexPolicy, ManualPolicy,
+    MultistepPolicy, PartialRefresh, Plan, PlanCtx, SpaPolicy, TokenDelta,
 };
 use spa_cache::coordinator::request::{Request, SlotState};
 use spa_cache::model::tokenizer::MASK;
@@ -418,6 +418,106 @@ fn unsupported_policy_escalates_to_group_invalidate() {
     assert!(slots.iter().all(|s| !s.cache_valid));
     let plan = drive_step(&mut policy, &mut state, &tokens, &mut slots, 2, 1);
     assert!(plan.is_refresh(), "unsupported policy keeps admission ⇒ refresh");
+}
+
+/// Delta upload is a pure bandwidth optimisation: across randomized
+/// admit/cancel/dirty-write traces (with occasional buffer-loss resets),
+/// a device driven by [`TokenDelta`] plans must stay **byte-identical** to
+/// one driven by whole-tensor uploads, and every `Patch` must stage
+/// exactly the rows that changed since the previous plan — no more (wasted
+/// bandwidth), no fewer (stale device rows).
+#[test]
+fn property_delta_upload_matches_full_upload_byte_identical() {
+    spa_cache::util::proptest::check(
+        "delta_upload_matches_full_upload",
+        |r| {
+            // (row, kind, payload): kind 0 = admit (rewrite whole row),
+            // 1 = cancel (row back to MASK), 2 = decode writes (`payload`
+            // token commits at random positions), 3 = device-loss reset.
+            let events: Vec<(usize, usize, usize)> = (0..r.range(1, 24))
+                .map(|_| (r.range(0, B), r.range(0, 4), r.range(0, 6)))
+                .collect();
+            (r.next_u64(), events)
+        },
+        |(seed, events)| {
+            let mut r = spa_cache::util::rng::Rng::new(*seed);
+            let mut tokens = vec![MASK; B * N];
+            // Two simulated device token buffers: full-upload baseline and
+            // the delta-planned one.
+            let mut dev_full = vec![0i32; B * N];
+            let mut dev_delta = vec![0i32; B * N];
+            let mut delta = TokenDelta::default();
+            let mut expect_full = true; // first plan has no mirror
+
+            for &(row, kind, payload) in events {
+                // Mutate the host tokens per the event, tracking exactly
+                // which rows changed since the last plan.
+                let mut changed = [false; B];
+                match kind {
+                    0 => {
+                        for p in 0..N {
+                            let t = r.below(30000) as i32;
+                            changed[row] |= tokens[row * N + p] != t;
+                            tokens[row * N + p] = t;
+                        }
+                    }
+                    1 => {
+                        for p in 0..N {
+                            changed[row] |= tokens[row * N + p] != MASK;
+                            tokens[row * N + p] = MASK;
+                        }
+                    }
+                    2 => {
+                        for _ in 0..payload {
+                            let p = r.range(0, N);
+                            let t = r.below(30000) as i32;
+                            changed[row] |= tokens[row * N + p] != t;
+                            tokens[row * N + p] = t;
+                        }
+                    }
+                    _ => {
+                        delta.reset();
+                        expect_full = true;
+                    }
+                }
+
+                dev_full.copy_from_slice(&tokens);
+                match delta.plan(&tokens, N) {
+                    DeltaUpload::Full => {
+                        if !expect_full {
+                            return Err("unexpected full upload mid-trace".into());
+                        }
+                        dev_delta.copy_from_slice(&tokens);
+                    }
+                    DeltaUpload::Patch => {
+                        if expect_full {
+                            return Err("expected full upload after reset".into());
+                        }
+                        let want: Vec<usize> =
+                            (0..B).filter(|&i| changed[i]).collect();
+                        if delta.rows() != want.as_slice() {
+                            return Err(format!(
+                                "patch rows {:?} != changed rows {want:?}",
+                                delta.rows()
+                            ));
+                        }
+                        for (i, &rr) in delta.rows().iter().enumerate() {
+                            dev_delta[rr * N..(rr + 1) * N].copy_from_slice(
+                                &delta.staged()[i * N..(i + 1) * N],
+                            );
+                        }
+                    }
+                }
+                expect_full = false;
+                if dev_delta != dev_full {
+                    return Err(format!(
+                        "device divergence after event ({row}, {kind}, {payload})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

@@ -232,6 +232,112 @@ fn spa_partial_refresh_keeps_refreshes_below_admissions() {
     teardown(&addr, server, workers);
 }
 
+/// Round-trip for the per-step cost ledger: the stub worker attributes its
+/// step wall time to upload/execute/sample, the delta-upload path skips
+/// clean resident rows, and the whole thing flows scrape → differencing →
+/// `MethodReport` → `ledger` block in `BENCH_serving.json`.
+#[test]
+fn ledger_phases_roundtrip_and_delta_upload_skips_clean_rows() {
+    let (addr, server, workers) = policy_stub_server(
+        2,
+        PolicyStubConfig {
+            batch: 4,
+            step_ms: 2,
+            commits_per_step: 4,
+            refresh_interval: 0,
+            ..PolicyStubConfig::default() // delta_upload: true
+        },
+    );
+    let cfg = LoadGenConfig {
+        mode: ArrivalMode::Open { qps: 80.0 },
+        warmup: Duration::from_millis(100),
+        duration: Duration::from_millis(500),
+        tasks: vec![Task::Gsm8kS],
+        gen_len: Some(GenLenDist::fixed(64)),
+        seed: 17,
+        max_inflight: 64,
+    };
+    let report = loadgen::drive(&addr, "spa-stub", &cfg).expect("drive");
+    assert!(report.requests > 5, "traffic ran: {}", report.requests);
+
+    // Phase attribution: execute (the simulated device step) dominates a
+    // 2ms-step stub and every phase stays within the measured step wall.
+    assert!(report.step_wall_us > 0.0, "step wall measured: {report:?}");
+    assert!(report.execute_us > 0.0, "execute attributed: {report:?}");
+    assert!(report.execute_us <= report.step_wall_us, "{report:?}");
+    let attributed = report.upload_us
+        + report.execute_us
+        + report.collect_us
+        + report.sample_us;
+    // Loose: the stub's wall covers plan/commit overhead the phases don't,
+    // and timer noise cuts both ways — the sum must not *exceed* the wall
+    // by more than jitter.
+    assert!(
+        attributed <= report.step_wall_us * 1.2 + 1_000.0,
+        "phase sum {attributed:.0}us vs step wall {:.0}us",
+        report.step_wall_us
+    );
+
+    // Delta upload: steady-state resident rows with valid caches are
+    // skipped, so strictly fewer rows are uploaded than steps x batch
+    // (= rows_uploaded + rows_skipped, every slot accounted every step).
+    assert!(report.rows_uploaded > 0.0, "admissions upload rows: {report:?}");
+    assert!(
+        report.rows_skipped > 0.0,
+        "steady-state clean rows must be skipped: {report:?}"
+    );
+
+    // Raw exposition: labelled ledger series + row counters, aggregate and
+    // per-worker.
+    let mut c = Client::connect(&addr).unwrap();
+    let stats = c.stats().unwrap();
+    drop(c);
+    for phase in ["upload", "execute", "collect", "sample", "serialize", "step_wall"] {
+        assert!(
+            stats.contains(&format!("spa_step_ledger_us{{phase=\"{phase}\"}}")),
+            "aggregate ledger phase {phase}:\n{stats}"
+        );
+    }
+    assert!(
+        stats.contains("spa_step_ledger_us{phase=\"upload\",worker=\"0\"}"),
+        "per-worker ledger labels:\n{stats}"
+    );
+    assert!(stats.contains("spa_rows_uploaded_total "), "stats:\n{stats}");
+    assert!(stats.contains("spa_rows_skipped_total "), "stats:\n{stats}");
+    teardown(&addr, server, workers);
+
+    // Trajectory: the `ledger` block rides along with every method entry.
+    let path = traj_path("ledger");
+    let _ = std::fs::remove_file(&path);
+    loadgen::append_trajectory(
+        &path,
+        loadgen::config_json(&cfg, 2, "stub", PolicyFlags::default()),
+        &[report],
+    )
+    .unwrap();
+    let doc = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let entries = doc.get("entries").and_then(|e| e.as_arr()).unwrap();
+    let m = &entries[0].get("methods").and_then(|m| m.as_arr()).unwrap()[0];
+    let ledger = m.get("ledger").expect("ledger block in trajectory");
+    for key in [
+        "upload_us",
+        "execute_us",
+        "collect_us",
+        "sample_us",
+        "serialize_us",
+        "step_wall_us",
+        "rows_uploaded",
+        "rows_skipped",
+    ] {
+        assert!(
+            ledger.get(key).and_then(|x| x.as_f64()).is_some(),
+            "ledger column {key} recorded"
+        );
+    }
+    assert!(ledger.get("step_wall_us").and_then(|x| x.as_f64()).unwrap() > 0.0);
+    let _ = std::fs::remove_file(&path);
+}
+
 /// The tentpole acceptance e2e, artifact-free: the adaptive controller +
 /// staggered per-row refresh against the fixed `refresh_interval`
 /// baseline, same load, same decoded-token totals.

@@ -179,6 +179,48 @@ impl PjRtBuffer {
     pub fn on_device_shape(&self) -> Result<Shape> {
         Ok(Shape { ty: self.lit.ty, dims: self.lit.dims.clone() })
     }
+
+    /// Patch whole leading-dimension rows of a resident buffer in place
+    /// from host data (`data` holds `rows.len()` consecutive rows).  The
+    /// delta-upload hot path uses this to refresh only dirty batch rows
+    /// while clean rows keep their device-resident bytes.
+    pub fn copy_rows_from_host<T: NativeType>(
+        &mut self,
+        rows: &[usize],
+        data: &[T],
+    ) -> Result<()> {
+        if T::ELEMENT_TYPE != self.lit.ty {
+            return Err(XlaError::new(format!(
+                "dtype mismatch: buffer is {:?}, patch is {:?}",
+                self.lit.ty,
+                T::ELEMENT_TYPE
+            )));
+        }
+        let Some((&b, tail)) = self.lit.dims.split_first() else {
+            return Err(XlaError::new("cannot row-patch a rank-0 buffer"));
+        };
+        let row_elems: usize = tail.iter().product();
+        if data.len() != rows.len() * row_elems {
+            return Err(XlaError::new(format!(
+                "row patch carries {} elements for {} rows of {row_elems}",
+                data.len(),
+                rows.len()
+            )));
+        }
+        let row_bytes = row_elems * self.lit.ty.byte_size();
+        for (i, &row) in rows.iter().enumerate() {
+            if row >= b {
+                return Err(XlaError::new(format!(
+                    "row {row} out of range for leading dim {b}"
+                )));
+            }
+            let dst = &mut self.lit.data[row * row_bytes..(row + 1) * row_bytes];
+            for (j, x) in data[i * row_elems..(i + 1) * row_elems].iter().enumerate() {
+                dst[j * 4..(j + 1) * 4].copy_from_slice(&x.to_le());
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Parsed HLO module (opaque in the stub).
@@ -295,5 +337,20 @@ mod tests {
     fn client_reports_unavailable() {
         let e = PjRtClient::cpu().unwrap_err();
         assert!(e.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn row_patch_updates_only_named_rows() {
+        let client = PjRtClient { _p: () };
+        let data: Vec<i32> = (0..12).collect(); // 3 rows × 4
+        let mut buf = client.buffer_from_host_buffer::<i32>(&data, &[3, 4], None).unwrap();
+        buf.copy_rows_from_host::<i32>(&[0, 2], &[100, 101, 102, 103, 200, 201, 202, 203])
+            .unwrap();
+        let got = buf.to_literal_sync().unwrap().to_vec::<i32>().unwrap();
+        assert_eq!(got, vec![100, 101, 102, 103, 4, 5, 6, 7, 200, 201, 202, 203]);
+        // Validation: dtype, bounds, arity.
+        assert!(buf.copy_rows_from_host::<f32>(&[0], &[1.0; 4]).is_err());
+        assert!(buf.copy_rows_from_host::<i32>(&[3], &[0; 4]).is_err());
+        assert!(buf.copy_rows_from_host::<i32>(&[0], &[0; 3]).is_err());
     }
 }

@@ -251,24 +251,26 @@ impl LoadGenConfig {
 }
 
 
-/// One completed request as observed by the client side.
+/// One completed request as observed by the client side.  Crate-visible so
+/// the scenario layer (`bench::scenario`) can record observations from its
+/// own traffic shapes and fold them through the same [`aggregate`].
 #[derive(Debug, Clone, Copy)]
-struct Obs {
+pub(crate) struct Obs {
     /// Issue time, seconds since run start (warmup filtering).
-    issued_s: f64,
+    pub(crate) issued_s: f64,
     /// Completion time, seconds since run start.
-    done_s: f64,
+    pub(crate) done_s: f64,
     /// Client-measured wall time (ms), includes the wire.
-    wall_ms: f64,
+    pub(crate) wall_ms: f64,
     /// Time to first committed token (ms): server-reported, except in
     /// pipelined mode where it is the client-observed first streamed frame.
-    ttft_ms: f64,
+    pub(crate) ttft_ms: f64,
     /// Server-reported end-to-end latency (ms), includes queue wait.
-    latency_ms: f64,
+    pub(crate) latency_ms: f64,
     /// Tokens the server decoded for this request.
-    decoded: f64,
+    pub(crate) decoded: f64,
     /// The reply was `{"error": ...}`.
-    error: bool,
+    pub(crate) error: bool,
 }
 
 /// Aggregated outcome of one load run against one server configuration —
@@ -365,12 +367,17 @@ pub struct MethodReport {
     /// Per-worker completions inside the measured window (scraped,
     /// differenced) — the router's load-balance evidence.
     pub per_worker_completed: Vec<(usize, f64)>,
+    /// Scenario tag (`bench::scenario` runs only) — distinguishes scenario
+    /// rows from plain load-shape rows in the trajectory.
+    pub scenario: Option<String>,
+    /// Per-scenario SLO attainment block (`bench::scenario` runs only).
+    pub slo: Option<super::scenario::SloReport>,
     /// Retained latency sample for distribution sketches.
     latency_samples: Vec<f64>,
 }
 
 /// Sleep until `t0 + target` (no-op if already past).
-fn sleep_until(t0: Instant, target: Duration) {
+pub(crate) fn sleep_until(t0: Instant, target: Duration) {
     let elapsed = t0.elapsed();
     if elapsed < target {
         std::thread::sleep(target - elapsed);
@@ -675,7 +682,9 @@ pub fn drive(addr: &str, method: &str, cfg: &LoadGenConfig) -> Result<MethodRepo
 }
 
 /// Fold raw observations + the two stats scrapes into a [`MethodReport`].
-fn aggregate(
+/// Crate-visible so `bench::scenario` folds its traffic through the exact
+/// same warmup filter / counter-differencing the load shapes use.
+pub(crate) fn aggregate(
     method: &str,
     cfg: &LoadGenConfig,
     obs: &[Obs],
@@ -781,6 +790,9 @@ fn aggregate(
         rows_uploaded: diff("spa_rows_uploaded_total"),
         rows_skipped: diff("spa_rows_skipped_total"),
         per_worker_completed,
+        // Stamped by the scenario layer after aggregation.
+        scenario: None,
+        slo: None,
         latency_samples: latency.samples().to_vec(),
     }
 }
@@ -923,7 +935,7 @@ pub fn worker_factory(
 /// Size the server's connection-handler pool above the generator's own
 /// concurrency cap (+ control/scrape connections): generated connections
 /// must never starve in the accept queue, or joins would hang.
-fn conn_threads_for(cfg: &LoadGenConfig) -> usize {
+pub(crate) fn conn_threads_for(cfg: &LoadGenConfig) -> usize {
     match cfg.mode {
         ArrivalMode::Open { .. } => cfg.max_inflight + 8,
         ArrivalMode::Closed { clients } => clients + 8,
@@ -958,6 +970,42 @@ pub fn run_stub(
     stub: crate::bench::stub::StubConfig,
     policy: PolicyFlags,
 ) -> Result<MethodReport> {
+    let srv = spawn_stub_server(method, workers, cfg, stub, policy)?;
+    let adaptive_ran = srv.adaptive_ran;
+    let report = drive(&srv.addr, method, cfg);
+    srv.teardown()?;
+    // Stamp what actually ran: the forced stub variants override the CLI
+    // gate, and the row must say so (the config block alone cannot).
+    report.map(|mut r| {
+        r.adaptive = adaptive_ran;
+        r
+    })
+}
+
+/// A stub serving stack (workers + router + TCP frontend) spun up for one
+/// method — the shared substrate of [`run_stub`] and the scenario runner
+/// (`bench::scenario`), so scenarios exercise the identical pipeline the
+/// CI `bench-serve --stub` smokes do.
+pub(crate) struct StubServer {
+    /// Bound `host:port` of the serving frontend.
+    pub(crate) addr: String,
+    /// Whether the adaptive budget controller was actually attached for
+    /// this method (forced stub variants override the CLI gate).
+    pub(crate) adaptive_ran: bool,
+    router: Router,
+    worker_handles: Vec<JoinHandle<()>>,
+    server: JoinHandle<Result<()>>,
+}
+
+/// Spin up the stub worker lineup + frontend for `method` (same
+/// method-name dispatch as [`run_stub`]) without driving any load.
+pub(crate) fn spawn_stub_server(
+    method: &str,
+    workers: usize,
+    cfg: &LoadGenConfig,
+    stub: crate::bench::stub::StubConfig,
+    policy: PolicyFlags,
+) -> Result<StubServer> {
     use crate::bench::stub;
     let policy_cfg = |staggered: bool, adaptive: Option<bool>, delta_upload: bool| {
         stub::PolicyStubConfig {
@@ -1012,28 +1060,29 @@ pub fn run_stub(
             )
         }
     });
+    Ok(StubServer { addr, adaptive_ran, router, worker_handles, server })
+}
 
-    let report = drive(&addr, method, cfg);
-
-    let shutdown = Client::connect(&addr).and_then(|mut c| c.shutdown());
-    if shutdown.is_err() {
-        router.shutdown();
-    }
-    for h in worker_handles {
-        if h.join().is_err() {
-            anyhow::bail!("stub worker panicked during bench-serve");
+impl StubServer {
+    /// Shut the frontend down (falling back to a direct router shutdown if
+    /// the control connection fails) and join every thread, surfacing
+    /// worker/server panics as errors.
+    pub(crate) fn teardown(self) -> Result<()> {
+        let shutdown = Client::connect(&self.addr).and_then(|mut c| c.shutdown());
+        if shutdown.is_err() {
+            self.router.shutdown();
         }
+        for h in self.worker_handles {
+            if h.join().is_err() {
+                anyhow::bail!("stub worker panicked during bench-serve");
+            }
+        }
+        match self.server.join() {
+            Ok(r) => r?,
+            Err(_) => anyhow::bail!("server thread panicked during bench-serve"),
+        }
+        Ok(())
     }
-    match server.join() {
-        Ok(r) => r?,
-        Err(_) => anyhow::bail!("server thread panicked during bench-serve"),
-    }
-    // Stamp what actually ran: the forced stub variants override the CLI
-    // gate, and the row must say so (the config block alone cannot).
-    report.map(|mut r| {
-        r.adaptive = adaptive_ran;
-        r
-    })
 }
 
 /// Spawn a router + in-process server for one method, run the load against
@@ -1149,22 +1198,30 @@ pub fn print_reports(reports: &[MethodReport]) {
     }
 }
 
+/// Every float in a trajectory entry goes through [`finite_or_null`]:
+/// `Json::Num(NaN)` would serialize as the bare token `NaN`, corrupting the
+/// whole append-only file for every reader.  NaN reaches a report through
+/// more doors than the obvious one — a `Summary` over never-committed TTFTs,
+/// a scraped `spa_ttft_ms_mean NaN` on an idle server, a windowed
+/// queue-wait reconstruction whose snapshots were themselves NaN.
 fn summary_json(s: &Option<Summary>) -> Json {
     match s {
         None => Json::Null,
         Some(s) => Json::obj(vec![
             ("n", Json::Num(s.n as f64)),
-            ("mean", Json::Num(s.mean)),
-            ("min", Json::Num(s.min)),
-            ("p50", Json::Num(s.p50)),
-            ("p90", Json::Num(s.p90)),
-            ("p99", Json::Num(s.p99)),
-            ("max", Json::Num(s.max)),
+            ("mean", finite_or_null(s.mean)),
+            ("min", finite_or_null(s.min)),
+            ("p50", finite_or_null(s.p50)),
+            ("p90", finite_or_null(s.p90)),
+            ("p99", finite_or_null(s.p99)),
+            ("max", finite_or_null(s.max)),
         ]),
     }
 }
 
-fn finite_or_null(x: f64) -> Json {
+/// `x` as JSON, with NaN/±Inf mapped to `null` (JSON has no spelling for
+/// them; emitting the Rust debug form would corrupt the trajectory file).
+pub(crate) fn finite_or_null(x: f64) -> Json {
     if x.is_finite() {
         Json::Num(x)
     } else {
@@ -1174,41 +1231,41 @@ fn finite_or_null(x: f64) -> Json {
 
 /// One method row of a trajectory entry.
 pub fn report_json(r: &MethodReport) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("method", Json::str(&r.method)),
         ("requests", Json::Num(r.requests as f64)),
         ("errors", Json::Num(r.errors as f64)),
         ("dropped", Json::Num(r.dropped as f64)),
-        ("measured_s", Json::Num(r.measured_s)),
+        ("measured_s", finite_or_null(r.measured_s)),
         ("offered_qps", finite_or_null(r.offered_qps)),
-        ("achieved_qps", Json::Num(r.achieved_qps)),
-        ("tps", Json::Num(r.tps)),
+        ("achieved_qps", finite_or_null(r.achieved_qps)),
+        ("tps", finite_or_null(r.tps)),
         ("ttft_ms", summary_json(&r.ttft)),
         ("latency_ms", summary_json(&r.latency)),
         ("wall_ms", summary_json(&r.wall)),
-        ("mean_inflight", Json::Num(r.mean_inflight)),
-        ("queue_wait_ms_mean", Json::Num(r.queue_wait_ms_mean)),
-        ("refreshes", Json::Num(r.refreshes)),
-        ("steps", Json::Num(r.steps)),
-        ("refresh_rate", Json::Num(r.refresh_rate)),
-        ("partial_refreshes", Json::Num(r.partial_refreshes)),
-        ("rows_invalidated", Json::Num(r.rows_invalidated)),
-        ("scheduled_row_refreshes", Json::Num(r.scheduled_row_refreshes)),
-        ("schedule_refits", Json::Num(r.schedule_refits)),
-        ("tier_switches", Json::Num(r.tier_switches)),
-        ("budget_tier", Json::Num(r.budget_tier)),
+        ("mean_inflight", finite_or_null(r.mean_inflight)),
+        ("queue_wait_ms_mean", finite_or_null(r.queue_wait_ms_mean)),
+        ("refreshes", finite_or_null(r.refreshes)),
+        ("steps", finite_or_null(r.steps)),
+        ("refresh_rate", finite_or_null(r.refresh_rate)),
+        ("partial_refreshes", finite_or_null(r.partial_refreshes)),
+        ("rows_invalidated", finite_or_null(r.rows_invalidated)),
+        ("scheduled_row_refreshes", finite_or_null(r.scheduled_row_refreshes)),
+        ("schedule_refits", finite_or_null(r.schedule_refits)),
+        ("tier_switches", finite_or_null(r.tier_switches)),
+        ("budget_tier", finite_or_null(r.budget_tier)),
         ("adaptive", Json::Bool(r.adaptive)),
         (
             "ledger",
             Json::obj(vec![
-                ("upload_us", Json::Num(r.upload_us)),
-                ("execute_us", Json::Num(r.execute_us)),
-                ("collect_us", Json::Num(r.collect_us)),
-                ("sample_us", Json::Num(r.sample_us)),
-                ("serialize_us", Json::Num(r.serialize_us)),
-                ("step_wall_us", Json::Num(r.step_wall_us)),
-                ("rows_uploaded", Json::Num(r.rows_uploaded)),
-                ("rows_skipped", Json::Num(r.rows_skipped)),
+                ("upload_us", finite_or_null(r.upload_us)),
+                ("execute_us", finite_or_null(r.execute_us)),
+                ("collect_us", finite_or_null(r.collect_us)),
+                ("sample_us", finite_or_null(r.sample_us)),
+                ("serialize_us", finite_or_null(r.serialize_us)),
+                ("step_wall_us", finite_or_null(r.step_wall_us)),
+                ("rows_uploaded", finite_or_null(r.rows_uploaded)),
+                ("rows_skipped", finite_or_null(r.rows_skipped)),
             ]),
         ),
         (
@@ -1219,13 +1276,22 @@ pub fn report_json(r: &MethodReport) -> Json {
                     .map(|(id, n)| {
                         Json::obj(vec![
                             ("worker", Json::Num(*id as f64)),
-                            ("completed", Json::Num(*n)),
+                            ("completed", finite_or_null(*n)),
                         ])
                     })
                     .collect(),
             ),
         ),
-    ])
+    ];
+    // Scenario rows carry their tag + schema-versioned SLO block
+    // (DESIGN.md §10); plain load-shape rows omit both keys entirely.
+    if let Some(s) = &r.scenario {
+        pairs.push(("scenario", Json::str(s)));
+    }
+    if let Some(slo) = &r.slo {
+        pairs.push(("slo", super::scenario::slo_json(slo)));
+    }
+    Json::obj(pairs)
 }
 
 /// The `config` block of a trajectory entry — everything needed to decide
@@ -1525,6 +1591,43 @@ mod tests {
         // Little's law over the measured walls: (0.5 + 1.0 + 0.1) s / 2 s.
         assert!((r.mean_inflight - 0.8).abs() < 1e-9);
         assert_eq!(r.per_worker_completed, vec![(0, 6.0), (1, 3.0)]);
+    }
+
+    /// Satellite regression: a datapoint with empty percentiles and NaN in
+    /// every scrape-derived column must still serialize to *valid* JSON
+    /// (`null`, never a bare `NaN` token) and round-trip through the house
+    /// parser.  This is the exact shape an idle/zero-request run produces:
+    /// closed-loop offered_qps is NaN by construction, and a stats scrape
+    /// of an idle server renders `spa_queue_wait_ms_mean NaN`.
+    #[test]
+    fn empty_percentile_report_round_trips_as_null() {
+        let cfg = LoadGenConfig {
+            mode: ArrivalMode::Closed { clients: 2 }, // offered_qps → NaN
+            ..LoadGenConfig::default()
+        };
+        // NaN means with a positive count diff force the windowed
+        // queue-wait reconstruction itself to NaN; the gauge scrape too.
+        let baseline = "spa_queue_wait_ms_mean NaN\nspa_queue_wait_ms_count 0\n";
+        let end = "spa_queue_wait_ms_mean NaN\nspa_queue_wait_ms_count 3\n\
+                   spa_budget_tier NaN\n";
+        let r = aggregate("stub", &cfg, &[], 0, baseline, end);
+        assert!(r.offered_qps.is_nan() && r.queue_wait_ms_mean.is_nan());
+        assert!(r.ttft.is_none(), "no observations → no percentiles");
+
+        let text = report_json(&r).to_string();
+        let back = parse(&text).unwrap_or_else(|e| {
+            panic!("trajectory row must stay parseable: {e:#}\n{text}")
+        });
+        assert_eq!(back.get("ttft_ms"), Some(&Json::Null));
+        assert_eq!(back.get("latency_ms"), Some(&Json::Null));
+        assert_eq!(back.get("offered_qps"), Some(&Json::Null));
+        assert_eq!(back.get("queue_wait_ms_mean"), Some(&Json::Null));
+        assert_eq!(back.get("budget_tier"), Some(&Json::Null));
+        // Finite columns stay numeric.
+        assert_eq!(back.get("requests").and_then(|x| x.as_usize()), Some(0));
+        assert!(back.get("measured_s").and_then(|x| x.as_f64()).is_some());
+        // Plain (non-scenario) rows carry neither tag nor SLO block.
+        assert!(back.get("scenario").is_none() && back.get("slo").is_none());
     }
 
     #[test]

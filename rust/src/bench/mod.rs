@@ -9,6 +9,7 @@
 
 pub mod loadgen;
 pub mod runner;
+pub mod scenario;
 pub mod stub;
 
 use std::time::Instant;

@@ -1,0 +1,1208 @@
+//! Trace-driven scenario suite with per-scenario SLO reporting
+//! (DESIGN.md §10).
+//!
+//! The load shapes in [`super::loadgen`] answer "how much load" — this
+//! module answers "load shaped like *what*".  The paper's throughput
+//! claims were measured under one synthetic request shape; cache dynamics
+//! differ sharply between prompt-dominant and response-dominant traffic,
+//! so before any speedup claim is believable the serving path has to hold
+//! up under production-shaped workloads:
+//!
+//! * **chat** — multi-turn sessions that resubmit their whole transcript
+//!   as the prompt every turn (the shape future prefix-reuse work feeds
+//!   on): prompt-dominant, short replies, think-time gaps.
+//! * **infill** — arbitrary-order mask layouts, the DLM-native workload no
+//!   AR server can express: each request ships a `template` +
+//!   `mask_offsets` spec (protocol v2) and the scenario *verifies* the
+//!   committed positions match the requested non-contiguous layout.
+//! * **mixed** — a short-chat + long-doc population at Poisson arrivals,
+//!   the heterogeneity a single request shape hides.
+//! * **trace** — bursty replay from a recorded trace file (JSON-lines;
+//!   `--trace` replays, `--record-trace` captures the synthesized one), so
+//!   a production arrival pattern can be replayed verbatim.
+//! * **cancel-storm** — interactive traffic that cancels most of what it
+//!   submits mid-decode, exercising slot reclamation under load.
+//!
+//! Every scenario runs artifact-free against the `bench::stub` workers
+//! (`bench-serve --stub --scenario <name>`) and reports **SLO attainment**
+//! rather than bare means: p99 TTFT against a target, goodput (completions
+//! under a latency deadline) — recorded as a tagged trajectory entry whose
+//! schema-versioned `slo` block CI asserts on.  All request content,
+//! arrival times and cancel choices derive from `--seed`, so two same-seed
+//! runs issue identical request schedules.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::server::{self, Client, GenRequest};
+use crate::util::cli::Args;
+use crate::util::json::{parse, Json};
+use crate::util::rng::Rng;
+
+use super::loadgen::{
+    aggregate, finite_or_null, sleep_until, spawn_stub_server, ArrivalMode, LoadGenConfig,
+    MethodReport, Obs, PolicyFlags,
+};
+
+/// Schema version stamped into every `slo` block; bump on any breaking
+/// change to the block layout (readers must check it).
+pub const SLO_SCHEMA: f64 = 1.0;
+
+/// Generated-region length of a chat reply (tokens).
+const CHAT_REPLY_LEN: usize = 8;
+
+/// Transcript budget (chars) resubmitted as the chat prompt.  The stub
+/// serves at `STUB_SEQ_LEN = 128`: 96 prompt chars + BOS + an 8-token
+/// reply leaves headroom, and overflowing transcripts slide (front-trim)
+/// exactly like a context-window truncation would.
+const CHAT_PROMPT_BUDGET: usize = 96;
+
+/// Generated-region length of a cancel-storm request — long enough
+/// (64 tokens at 4 commits/step) that cancels land mid-decode.
+const STORM_GEN_LEN: usize = 64;
+
+/// Streaming requests per cancel-storm burst.
+const STORM_BURST: usize = 4;
+
+/// Mixed-population offered load when the run didn't pass `--qps`.
+const MIXED_DEFAULT_QPS: f64 = 20.0;
+
+/// Prompt alphabet for synthesized traffic — a strict subset of the model
+/// charset, so every synthesized prompt encodes.
+const PROMPT_CHARS: &[u8] = b"0123456789abcdefghijklmnopqrstuvwxyz ";
+
+// ---------------------------------------------------------------------------
+// Scenario configuration
+// ---------------------------------------------------------------------------
+
+/// The five traffic shapes of the scenario suite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// Multi-turn chat sessions resubmitting their transcript each turn.
+    Chat,
+    /// Arbitrary-order infilling via per-request mask layouts.
+    Infill,
+    /// Short-chat + long-doc population at Poisson arrivals.
+    Mixed,
+    /// Bursty replay from a recorded (or synthesized) trace file.
+    Trace,
+    /// Submit-then-cancel bursts exercising slot reclamation.
+    CancelStorm,
+}
+
+impl ScenarioKind {
+    /// Every scenario, in CLI/CI order.
+    pub const ALL: [ScenarioKind; 5] = [
+        ScenarioKind::Chat,
+        ScenarioKind::Infill,
+        ScenarioKind::Mixed,
+        ScenarioKind::Trace,
+        ScenarioKind::CancelStorm,
+    ];
+
+    /// The `--scenario` spelling (also the trajectory tag).
+    pub fn name(self) -> &'static str {
+        match self {
+            ScenarioKind::Chat => "chat",
+            ScenarioKind::Infill => "infill",
+            ScenarioKind::Mixed => "mixed",
+            ScenarioKind::Trace => "trace",
+            ScenarioKind::CancelStorm => "cancel-storm",
+        }
+    }
+
+    /// Inverse of [`ScenarioKind::name`]; `None` for unknown spellings.
+    pub fn from_name(s: &str) -> Option<ScenarioKind> {
+        ScenarioKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+
+    /// Default SLO targets, sized for the stub timing (2 ms steps) so an
+    /// unloaded CI run attains them; real hardware overrides via
+    /// `--slo-ttft`/`--slo-deadline`.
+    fn default_slo(self) -> SloTargets {
+        match self {
+            ScenarioKind::Chat | ScenarioKind::Infill => {
+                SloTargets { ttft_p99_ms: 250.0, deadline_ms: 1000.0 }
+            }
+            ScenarioKind::Mixed | ScenarioKind::Trace | ScenarioKind::CancelStorm => {
+                SloTargets { ttft_p99_ms: 500.0, deadline_ms: 2000.0 }
+            }
+        }
+    }
+}
+
+/// The two thresholds a scenario is judged against.
+#[derive(Debug, Clone, Copy)]
+pub struct SloTargets {
+    /// p99 time-to-first-token must come in under this (ms).
+    pub ttft_p99_ms: f64,
+    /// A completion counts toward goodput only under this latency (ms).
+    pub deadline_ms: f64,
+}
+
+/// Everything one scenario run is parameterised by (on top of the base
+/// [`LoadGenConfig`], which still supplies warmup/duration/seed/qps).
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    /// Which traffic shape to drive.
+    pub kind: ScenarioKind,
+    /// SLO thresholds the report is judged against.
+    pub slo: SloTargets,
+    /// Concurrent sessions (chat / infill clients / storm connections).
+    pub sessions: usize,
+    /// Turns per chat conversation before the transcript resets.
+    pub turns: usize,
+    /// Trace scenario: replay this file instead of synthesizing.
+    pub trace: Option<PathBuf>,
+    /// Trace scenario: record the replayed/synthesized trace here.
+    pub record_trace: Option<PathBuf>,
+}
+
+impl ScenarioConfig {
+    /// Build from CLI flags — `--slo-ttft MS`, `--slo-deadline MS`,
+    /// `--sessions N`, `--turns N` (chat), `--trace FILE` /
+    /// `--record-trace FILE` (trace).  Strict like the rest of the bench
+    /// CLI: malformed values and flags that cannot apply to `kind` are
+    /// errors, never silent fallbacks — a typo'd threshold must not record
+    /// the wrong SLO verdict into the trajectory.
+    pub fn from_args(kind: ScenarioKind, args: &Args) -> Result<ScenarioConfig> {
+        let d = kind.default_slo();
+        let ms = |key: &str, default: f64| -> Result<f64> {
+            match args.get(key) {
+                None => Ok(default),
+                Some(s) => {
+                    let v: f64 = s.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("bad --{key} '{s}' (want milliseconds)")
+                    })?;
+                    anyhow::ensure!(
+                        v.is_finite() && v > 0.0,
+                        "--{key} must be positive (got {s})"
+                    );
+                    Ok(v)
+                }
+            }
+        };
+        let scn = ScenarioConfig {
+            kind,
+            slo: SloTargets {
+                ttft_p99_ms: ms("slo-ttft", d.ttft_p99_ms)?,
+                deadline_ms: ms("slo-deadline", d.deadline_ms)?,
+            },
+            sessions: args.strict_count("sessions")?.unwrap_or(4),
+            turns: args.strict_count("turns")?.unwrap_or(4),
+            trace: args.get("trace").map(PathBuf::from),
+            record_trace: args.get("record-trace").map(PathBuf::from),
+        };
+        if kind != ScenarioKind::Trace {
+            anyhow::ensure!(
+                scn.trace.is_none() && scn.record_trace.is_none(),
+                "--trace/--record-trace apply only to --scenario trace"
+            );
+        }
+        if kind != ScenarioKind::Chat {
+            anyhow::ensure!(
+                args.get("turns").is_none(),
+                "--turns applies only to --scenario chat"
+            );
+        }
+        Ok(scn)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SLO report
+// ---------------------------------------------------------------------------
+
+/// Per-scenario SLO attainment, recorded as the schema-versioned `slo`
+/// block of a tagged trajectory row (see [`slo_json`]).
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    /// The p99-TTFT target judged against (ms).
+    pub ttft_p99_target_ms: f64,
+    /// Measured p99 TTFT (ms); `None` when nothing completed.
+    pub ttft_p99_ms: Option<f64>,
+    /// `ttft_p99_ms <= target`; `None` when unmeasurable.
+    pub ttft_ok: Option<bool>,
+    /// The goodput latency deadline (ms).
+    pub deadline_ms: f64,
+    /// Measured-window completions under the deadline.
+    pub good: usize,
+    /// Measured-window completions total (errors excluded).
+    pub total: usize,
+    /// `good / total`; `None` when nothing completed.
+    pub attainment: Option<f64>,
+    /// Deadline-respecting completions per second of measured window.
+    pub goodput_rps: f64,
+    /// Scenario-specific evidence counters (e.g. infill `layout_ok`).
+    pub extras: Vec<(&'static str, f64)>,
+}
+
+/// The `slo` block of a scenario trajectory row.  Schema-versioned and
+/// NaN-guarded like every other trajectory float.
+pub fn slo_json(s: &SloReport) -> Json {
+    let mut pairs = vec![
+        ("schema", Json::Num(SLO_SCHEMA)),
+        ("ttft_p99_target_ms", finite_or_null(s.ttft_p99_target_ms)),
+        ("ttft_p99_ms", match s.ttft_p99_ms {
+            Some(v) => finite_or_null(v),
+            None => Json::Null,
+        }),
+        ("ttft_ok", match s.ttft_ok {
+            Some(b) => Json::Bool(b),
+            None => Json::Null,
+        }),
+        ("deadline_ms", finite_or_null(s.deadline_ms)),
+        ("good", Json::Num(s.good as f64)),
+        ("total", Json::Num(s.total as f64)),
+        ("deadline_attainment", match s.attainment {
+            Some(v) => finite_or_null(v),
+            None => Json::Null,
+        }),
+        ("goodput_rps", finite_or_null(s.goodput_rps)),
+    ];
+    for &(k, v) in &s.extras {
+        pairs.push((k, finite_or_null(v)));
+    }
+    Json::obj(pairs)
+}
+
+/// Print one SLO verdict line per scenario report, under the standard
+/// bench table.
+pub fn print_slo(reports: &[MethodReport]) {
+    for r in reports {
+        let (Some(name), Some(s)) = (&r.scenario, &r.slo) else { continue };
+        let p99 = s
+            .ttft_p99_ms
+            .map(|v| format!("{v:.0}ms"))
+            .unwrap_or_else(|| "-".to_string());
+        let ok = match s.ttft_ok {
+            Some(true) => "ok",
+            Some(false) => "MISS",
+            None => "n/a",
+        };
+        let att = s
+            .attainment
+            .map(|a| format!("{:.1}%", a * 100.0))
+            .unwrap_or_else(|| "-".to_string());
+        println!(
+            "slo {name} {}: ttft p99 {p99} vs {:.0}ms [{ok}]  \
+             deadline {:.0}ms {}/{} ({att})  goodput {:.2} rps",
+            r.method, s.ttft_p99_target_ms, s.deadline_ms, s.good, s.total, s.goodput_rps
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace file format
+// ---------------------------------------------------------------------------
+
+/// One arrival of a recorded trace: at `at_ms` after run start, issue
+/// `prompt` asking for `gen_len` generated tokens.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Arrival offset from run start (ms) — warmup included, so a trace
+    /// carries its own warmup traffic.
+    pub at_ms: f64,
+    /// Prompt text (must encode under the server charset).
+    pub prompt: String,
+    /// Generated-region length (tokens, > 0).
+    pub gen_len: usize,
+}
+
+/// Write `events` as the JSON-lines trace format (one
+/// `{"at_ms":..,"prompt":..,"gen_len":..}` object per line).
+pub fn write_trace(path: &Path, events: &[TraceEvent]) -> Result<()> {
+    let mut text = String::new();
+    for e in events {
+        let line = Json::obj(vec![
+            ("at_ms", Json::Num(e.at_ms)),
+            ("prompt", Json::str(&e.prompt)),
+            ("gen_len", Json::int(e.gen_len as i64)),
+        ]);
+        text.push_str(&line.to_string());
+        text.push('\n');
+    }
+    std::fs::write(path, text).with_context(|| format!("write trace {}", path.display()))
+}
+
+/// Read a JSON-lines trace, strictly: every non-empty line must carry a
+/// finite non-negative `at_ms`, a string `prompt` and a positive integer
+/// `gen_len` — a malformed trace errors with its line number rather than
+/// silently replaying the wrong load.  Events are returned in arrival
+/// order regardless of on-disk order.
+pub fn read_trace(path: &Path) -> Result<Vec<TraceEvent>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read trace {}", path.display()))?;
+    let mut out = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let at = format!("{}:{}", path.display(), ln + 1);
+        let j = parse(line).with_context(|| format!("{at}: not valid JSON"))?;
+        let at_ms = j
+            .get("at_ms")
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("{at}: missing numeric at_ms"))?;
+        anyhow::ensure!(
+            at_ms.is_finite() && at_ms >= 0.0,
+            "{at}: at_ms must be finite and non-negative"
+        );
+        let prompt = j
+            .get("prompt")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| anyhow::anyhow!("{at}: missing string prompt"))?
+            .to_string();
+        let gen_len = j
+            .get("gen_len")
+            .and_then(|x| x.as_usize())
+            .filter(|&g| g > 0)
+            .ok_or_else(|| anyhow::anyhow!("{at}: gen_len must be a positive integer"))?;
+        out.push(TraceEvent { at_ms, prompt, gen_len });
+    }
+    out.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Seeded request synthesis
+// ---------------------------------------------------------------------------
+
+/// A random prompt of `lo..hi` chars over [`PROMPT_CHARS`].
+fn synth_prompt(rng: &mut Rng, lo: usize, hi: usize) -> String {
+    let n = rng.range(lo, hi);
+    (0..n).map(|_| PROMPT_CHARS[rng.range(0, PROMPT_CHARS.len())] as char).collect()
+}
+
+/// Draw one request shape from the mixed population: 70% short chat
+/// (small prompt, short reply), 30% long-doc (long prompt, long reply).
+/// Both fit the stub's 128-token rows with headroom.
+fn synth_shape(rng: &mut Rng) -> (String, usize) {
+    if rng.bool(0.7) {
+        (synth_prompt(rng, 6, 14), 8 + rng.range(0, 9))
+    } else {
+        (synth_prompt(rng, 28, 46), 48 + rng.range(0, 17))
+    }
+}
+
+/// One chat-turn utterance (charset-safe, a handful of chars so several
+/// turns of transcript fit the stub rows).
+fn chat_utterance(rng: &mut Rng) -> String {
+    format!("#q {}+{}=?#a ", rng.range(0, 10), rng.range(0, 10))
+}
+
+/// Front-trim `h` to its last `budget` bytes (transcripts are ASCII-only
+/// by construction) — the sliding context window of a chat session.
+fn trim_history(h: &mut String, budget: usize) {
+    if h.len() > budget {
+        let cut = h.len() - budget;
+        h.drain(..cut);
+    }
+}
+
+/// One seeded infill spec: a template plus the ascending offsets to mask.
+/// The layout is guaranteed **non-contiguous** (mask–hole–mask at the
+/// front), the shape a left-to-right semi-AR block scheduler cannot
+/// produce — so a passing layout check is real evidence of arbitrary-order
+/// decode.
+pub(crate) fn infill_spec(rng: &mut Rng) -> (String, Vec<usize>) {
+    let len = rng.range(12, 33);
+    let template = synth_prompt(rng, len, len + 1);
+    let mut mask: Vec<bool> = (0..len).map(|_| rng.bool(0.5)).collect();
+    mask[0] = true;
+    mask[1] = false;
+    mask[2] = true;
+    let offsets: Vec<usize> =
+        mask.iter().enumerate().filter_map(|(i, &m)| m.then_some(i)).collect();
+    (template, offsets)
+}
+
+/// Synthesize the mixed-population Poisson trace at `qps` over the whole
+/// (warmup + duration) window.  Pure function of the seeded inputs — the
+/// reproducibility regression leans on this.
+pub(crate) fn synth_mixed_trace(cfg: &LoadGenConfig, qps: f64) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(cfg.seed ^ 0x3317_AB1E);
+    let total_ms = (cfg.warmup + cfg.duration).as_secs_f64() * 1e3;
+    let mut at = 0.0;
+    let mut out = Vec::new();
+    loop {
+        at += -(1.0 - rng.f64()).ln() * 1e3 / qps;
+        if at >= total_ms {
+            return out;
+        }
+        let (prompt, gen_len) = synth_shape(&mut rng);
+        out.push(TraceEvent { at_ms: at, prompt, gen_len });
+    }
+}
+
+/// Synthesize the default bursty trace: exponential gaps between bursts
+/// of 2–6 near-simultaneous arrivals, mixed-population shapes.  Pure
+/// function of the seeded inputs.
+pub(crate) fn synth_bursty_trace(cfg: &LoadGenConfig) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(cfg.seed ^ 0x00B0_0575);
+    let total_ms = (cfg.warmup + cfg.duration).as_secs_f64() * 1e3;
+    let mut at = 0.0;
+    let mut out = Vec::new();
+    loop {
+        at += 120.0 - (1.0 - rng.f64()).ln() * 240.0;
+        if out.is_empty() {
+            // Clamp the first burst into the window: short smoke runs must
+            // always offer load, whatever the first exponential draw says.
+            at = at.min(total_ms * 0.5);
+        }
+        if at >= total_ms {
+            return out;
+        }
+        let burst = rng.range(2, 7);
+        for i in 0..burst {
+            let (prompt, gen_len) = synth_shape(&mut rng);
+            // Spread burst members by 2 ms so the wire sees a stampede,
+            // not a single serialized arrival.
+            out.push(TraceEvent { at_ms: at + 2.0 * i as f64, prompt, gen_len });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario drivers
+// ---------------------------------------------------------------------------
+
+/// Shared evidence counters the generator threads accumulate; folded into
+/// the report's `slo.extras`.
+#[derive(Default)]
+struct Evidence {
+    /// Cancel ops sent (cancel-storm).
+    cancels_issued: AtomicUsize,
+    /// `cancelled` terminal frames observed (cancel-storm).
+    cancels_acked: AtomicUsize,
+    /// Infill requests whose committed positions were checked.
+    layout_checked: AtomicUsize,
+    /// Of those, how many matched the requested mask layout exactly.
+    layout_ok: AtomicUsize,
+    /// Chat turns completed.
+    turns: AtomicUsize,
+    /// Trace/mixed events actually issued (admitted past the cap).
+    replayed: AtomicUsize,
+}
+
+/// A prepared scenario: the (possibly adjusted) load config plus the
+/// concrete work to drive.
+enum Plan {
+    /// `sessions` chat sessions of `turns`-turn conversations.
+    Chat { sessions: usize, turns: usize },
+    /// `clients` closed-loop infill clients.
+    Infill { clients: usize },
+    /// Replay `events` at their recorded arrival times.
+    Replay { events: Vec<TraceEvent> },
+    /// `sessions` connections running submit-then-cancel bursts.
+    CancelStorm { sessions: usize },
+}
+
+/// Resolve a scenario into a concrete [`Plan`], adjusting the load config
+/// so connection sizing and the recorded `offered_qps` describe what the
+/// scenario actually drives.  Trace reads/records happen here — before
+/// any server exists — so a bad trace file fails fast.
+fn prepare(cfg: &LoadGenConfig, scn: &ScenarioConfig) -> Result<(LoadGenConfig, Plan)> {
+    let mut cfg = cfg.clone();
+    let sessions = scn.sessions.max(1);
+    let plan = match scn.kind {
+        ScenarioKind::Chat => {
+            cfg.mode = ArrivalMode::Closed { clients: sessions };
+            Plan::Chat { sessions, turns: scn.turns.max(1) }
+        }
+        ScenarioKind::Infill => {
+            cfg.mode = ArrivalMode::Closed { clients: sessions };
+            Plan::Infill { clients: sessions }
+        }
+        ScenarioKind::Mixed => {
+            let qps = match cfg.mode {
+                ArrivalMode::Open { qps } => qps,
+                _ => MIXED_DEFAULT_QPS,
+            };
+            let events = synth_mixed_trace(&cfg, qps);
+            cfg.mode = ArrivalMode::Open { qps };
+            Plan::Replay { events }
+        }
+        ScenarioKind::Trace => {
+            let events = match &scn.trace {
+                Some(p) => read_trace(p)?,
+                None => synth_bursty_trace(&cfg),
+            };
+            anyhow::ensure!(
+                !events.is_empty(),
+                "trace scenario has no arrivals (empty trace / window too short)"
+            );
+            if let Some(p) = &scn.record_trace {
+                write_trace(p, &events)?;
+            }
+            // Honest offered load: measured-window arrivals over the
+            // window (NaN → null when the trace never reaches it).
+            let warm_ms = cfg.warmup.as_secs_f64() * 1e3;
+            let n = events.iter().filter(|e| e.at_ms >= warm_ms).count();
+            let qps = n as f64 / cfg.duration.as_secs_f64().max(1e-9);
+            cfg.mode = ArrivalMode::Open { qps: if qps > 0.0 { qps } else { f64::NAN } };
+            Plan::Replay { events }
+        }
+        ScenarioKind::CancelStorm => {
+            cfg.mode = ArrivalMode::Closed { clients: sessions };
+            Plan::CancelStorm { sessions }
+        }
+    };
+    Ok((cfg, plan))
+}
+
+/// An [`Obs`] from a terminal frame / blocking reply `r` (v2 session:
+/// anything but a clean `done` is an error for the percentiles).
+fn obs_from_reply(r: &Json, issued_s: f64, done_s: f64, wall_ms: f64) -> Obs {
+    Obs {
+        issued_s,
+        done_s,
+        wall_ms,
+        ttft_ms: r.get("ttft_ms").and_then(|x| x.as_f64()).unwrap_or(f64::NAN),
+        latency_ms: r.get("latency_ms").and_then(|x| x.as_f64()).unwrap_or(f64::NAN),
+        decoded: r.get("decoded").and_then(|x| x.as_f64()).unwrap_or(0.0),
+        error: r.get("event").and_then(|e| e.as_str()) != Some("done"),
+    }
+}
+
+/// Multi-turn chat: each session resubmits its growing transcript as the
+/// prompt, appends the served reply, and thinks (seeded) between turns.
+/// After `turns` turns the conversation resets.
+fn spawn_chat(
+    addr: &str,
+    cfg: &LoadGenConfig,
+    t0: Instant,
+    obs: &Arc<Mutex<Vec<Obs>>>,
+    ev: &Arc<Evidence>,
+    sessions: usize,
+    turns: usize,
+) -> Vec<JoinHandle<()>> {
+    let total = cfg.warmup + cfg.duration;
+    (0..sessions)
+        .map(|s| {
+            let addr = addr.to_string();
+            let cfg = cfg.clone();
+            let obs = Arc::clone(obs);
+            let ev = Arc::clone(ev);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(
+                    cfg.seed ^ (0xC4A7 + s as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                );
+                let mut client = match Client::connect(&addr) {
+                    Ok(c) => c,
+                    Err(_) => return,
+                };
+                let mut history = String::new();
+                let mut turn = 0usize;
+                while t0.elapsed() < total {
+                    if turn >= turns {
+                        history.clear();
+                        turn = 0;
+                    }
+                    // The whole transcript so far rides along as the
+                    // prompt — exactly what prefix reuse would see.
+                    history.push_str(&chat_utterance(&mut rng));
+                    trim_history(&mut history, CHAT_PROMPT_BUDGET);
+                    let req = GenRequest {
+                        prompt: history.clone(),
+                        gen_len: Some(CHAT_REPLY_LEN),
+                        ..GenRequest::default()
+                    };
+                    let issued_s = t0.elapsed().as_secs_f64();
+                    let w0 = Instant::now();
+                    let Ok(r) = client.generate_opts(&req) else { return };
+                    obs.lock().unwrap().push(obs_from_reply(
+                        &r,
+                        issued_s,
+                        t0.elapsed().as_secs_f64(),
+                        w0.elapsed().as_secs_f64() * 1e3,
+                    ));
+                    if let Some(t) = r.get("text").and_then(|t| t.as_str()) {
+                        history.push_str(t);
+                    }
+                    ev.turns.fetch_add(1, Ordering::SeqCst);
+                    turn += 1;
+                    std::thread::sleep(Duration::from_millis(rng.range(5, 40) as u64));
+                }
+            })
+        })
+        .collect()
+}
+
+/// Infilling: closed-loop clients streaming seeded non-contiguous mask
+/// layouts, verifying per request that the union of streamed `positions`
+/// is exactly the requested layout (absolute positions).
+fn spawn_infill(
+    addr: &str,
+    cfg: &LoadGenConfig,
+    t0: Instant,
+    obs: &Arc<Mutex<Vec<Obs>>>,
+    ev: &Arc<Evidence>,
+    clients: usize,
+) -> Vec<JoinHandle<()>> {
+    let total = cfg.warmup + cfg.duration;
+    (0..clients)
+        .map(|c| {
+            let addr = addr.to_string();
+            let cfg = cfg.clone();
+            let obs = Arc::clone(obs);
+            let ev = Arc::clone(ev);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(
+                    cfg.seed ^ (0x1F11 + c as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                );
+                let mut client = match Client::connect(&addr) {
+                    Ok(c) => c,
+                    Err(_) => return,
+                };
+                // Fixed prompt ⇒ known prompt_len (BOS + 5 chars) for the
+                // offset→absolute-position translation below.
+                let prompt = "fill:";
+                let prompt_len = 1 + prompt.len();
+                while t0.elapsed() < total {
+                    let (template, offsets) = infill_spec(&mut rng);
+                    let req = GenRequest {
+                        prompt: prompt.to_string(),
+                        template: Some(template),
+                        mask_offsets: Some(offsets.clone()),
+                        stream: true,
+                        ..GenRequest::default()
+                    };
+                    let issued_s = t0.elapsed().as_secs_f64();
+                    let w0 = Instant::now();
+                    let Ok(pending) = client.submit(&req) else { return };
+                    let mut positions: Vec<i64> = Vec::new();
+                    let terminal = loop {
+                        let Ok(f) = pending.next_event() else { return };
+                        if server::is_terminal(&f) {
+                            break f;
+                        }
+                        if let Some(ps) = f.get("positions").and_then(|p| p.as_arr()) {
+                            positions.extend(ps.iter().filter_map(|p| p.as_i64()));
+                        }
+                    };
+                    let o = obs_from_reply(
+                        &terminal,
+                        issued_s,
+                        t0.elapsed().as_secs_f64(),
+                        w0.elapsed().as_secs_f64() * 1e3,
+                    );
+                    // The acceptance evidence: committed positions must be
+                    // exactly the requested (non-contiguous) layout.
+                    let mut expect: Vec<i64> =
+                        offsets.iter().map(|&o| (prompt_len + o) as i64).collect();
+                    expect.sort_unstable();
+                    positions.sort_unstable();
+                    positions.dedup();
+                    ev.layout_checked.fetch_add(1, Ordering::SeqCst);
+                    if !o.error && positions == expect {
+                        ev.layout_ok.fetch_add(1, Ordering::SeqCst);
+                    }
+                    obs.lock().unwrap().push(o);
+                }
+            })
+        })
+        .collect()
+}
+
+/// Replay a trace: a dispatcher sleeps to each arrival time and hands the
+/// event to a pooled-connection request thread; arrivals past
+/// `max_inflight` outstanding are dropped and counted, like the open loop.
+fn spawn_replay(
+    addr: &str,
+    cfg: &LoadGenConfig,
+    t0: Instant,
+    obs: &Arc<Mutex<Vec<Obs>>>,
+    dropped: &Arc<AtomicUsize>,
+    ev: &Arc<Evidence>,
+    events: Vec<TraceEvent>,
+) -> Vec<JoinHandle<()>> {
+    let total = cfg.warmup + cfg.duration;
+    let addr = addr.to_string();
+    let cfg = cfg.clone();
+    let obs = Arc::clone(obs);
+    let dropped = Arc::clone(dropped);
+    let ev = Arc::clone(ev);
+    let dispatcher = std::thread::spawn(move || {
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let pool: Arc<Mutex<Vec<Client>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut workers: Vec<JoinHandle<()>> = Vec::new();
+        for e in events {
+            let at = Duration::from_secs_f64(e.at_ms / 1e3);
+            if at >= total {
+                break; // the window is the contract; later events don't run
+            }
+            sleep_until(t0, at);
+            if inflight.load(Ordering::SeqCst) >= cfg.max_inflight {
+                if at >= cfg.warmup {
+                    dropped.fetch_add(1, Ordering::SeqCst);
+                }
+                continue;
+            }
+            inflight.fetch_add(1, Ordering::SeqCst);
+            ev.replayed.fetch_add(1, Ordering::SeqCst);
+            let addr = addr.clone();
+            let obs = Arc::clone(&obs);
+            let pool = Arc::clone(&pool);
+            let inflight = Arc::clone(&inflight);
+            workers.push(std::thread::spawn(move || {
+                let client = pool.lock().unwrap().pop();
+                let client = match client {
+                    Some(c) => Some(c),
+                    None => Client::connect(&addr).ok(),
+                };
+                if let Some(mut client) = client {
+                    let req = GenRequest {
+                        prompt: e.prompt,
+                        gen_len: Some(e.gen_len),
+                        ..GenRequest::default()
+                    };
+                    let issued_s = t0.elapsed().as_secs_f64();
+                    let w0 = Instant::now();
+                    if let Ok(r) = client.generate_opts(&req) {
+                        obs.lock().unwrap().push(obs_from_reply(
+                            &r,
+                            issued_s,
+                            t0.elapsed().as_secs_f64(),
+                            w0.elapsed().as_secs_f64() * 1e3,
+                        ));
+                        pool.lock().unwrap().push(client);
+                    }
+                }
+                inflight.fetch_sub(1, Ordering::SeqCst);
+            }));
+            if workers.len() >= 128 {
+                workers.retain(|h| !h.is_finished());
+            }
+        }
+        for h in workers {
+            let _ = h.join();
+        }
+    });
+    vec![dispatcher]
+}
+
+/// Cancellation storm: each session submits a burst of long streaming
+/// requests, lets decode begin, cancels a seeded ~70% of them, and drains
+/// every terminal.  Survivors feed the percentiles; cancels feed the
+/// evidence counters (and the server's `spa_cancelled_total`).
+fn spawn_cancel_storm(
+    addr: &str,
+    cfg: &LoadGenConfig,
+    t0: Instant,
+    obs: &Arc<Mutex<Vec<Obs>>>,
+    ev: &Arc<Evidence>,
+    sessions: usize,
+) -> Vec<JoinHandle<()>> {
+    let total = cfg.warmup + cfg.duration;
+    (0..sessions)
+        .map(|s| {
+            let addr = addr.to_string();
+            let cfg = cfg.clone();
+            let obs = Arc::clone(obs);
+            let ev = Arc::clone(ev);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(
+                    cfg.seed ^ (0xCC51 + s as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                );
+                let mut client = match Client::connect(&addr) {
+                    Ok(c) => c,
+                    Err(_) => return,
+                };
+                while t0.elapsed() < total {
+                    let mut burst = Vec::new();
+                    for _ in 0..STORM_BURST {
+                        let req = GenRequest {
+                            prompt: chat_utterance(&mut rng),
+                            gen_len: Some(STORM_GEN_LEN),
+                            stream: true,
+                            ..GenRequest::default()
+                        };
+                        let issued_s = t0.elapsed().as_secs_f64();
+                        let w0 = Instant::now();
+                        match client.submit(&req) {
+                            Ok(p) => burst.push((p, issued_s, w0)),
+                            Err(_) => return,
+                        }
+                    }
+                    // Let decode start so cancels land mid-flight, then
+                    // cancel a seeded subset.
+                    std::thread::sleep(Duration::from_millis(rng.range(2, 10) as u64));
+                    for (p, _, _) in &burst {
+                        if rng.bool(0.7) {
+                            if p.cancel().is_err() {
+                                return;
+                            }
+                            ev.cancels_issued.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                    for (p, issued_s, w0) in burst {
+                        let Ok(f) = p.wait() else { return };
+                        if f.get("event").and_then(|e| e.as_str()) == Some("cancelled") {
+                            ev.cancels_acked.fetch_add(1, Ordering::SeqCst);
+                        } else {
+                            obs.lock().unwrap().push(obs_from_reply(
+                                &f,
+                                issued_s,
+                                t0.elapsed().as_secs_f64(),
+                                w0.elapsed().as_secs_f64() * 1e3,
+                            ));
+                        }
+                    }
+                }
+            })
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Runner
+// ---------------------------------------------------------------------------
+
+/// Fold the report + raw observations + evidence into the SLO block.
+fn build_slo(
+    cfg: &LoadGenConfig,
+    scn: &ScenarioConfig,
+    r: &MethodReport,
+    obs: &[Obs],
+    ev: &Evidence,
+    end_stats: &str,
+) -> SloReport {
+    let warm = cfg.warmup.as_secs_f64();
+    let measured: Vec<&Obs> =
+        obs.iter().filter(|o| o.issued_s >= warm && !o.error).collect();
+    let total = measured.len();
+    let good = measured
+        .iter()
+        .filter(|o| o.latency_ms.is_finite() && o.latency_ms <= scn.slo.deadline_ms)
+        .count();
+    let p99 = r.ttft.as_ref().map(|s| s.p99);
+    let count = |a: &AtomicUsize| a.load(Ordering::SeqCst) as f64;
+    let extras = match scn.kind {
+        ScenarioKind::Chat => vec![("turns", count(&ev.turns))],
+        ScenarioKind::Infill => vec![
+            ("layout_checked", count(&ev.layout_checked)),
+            ("layout_ok", count(&ev.layout_ok)),
+        ],
+        ScenarioKind::Mixed | ScenarioKind::Trace => {
+            vec![("replayed", count(&ev.replayed))]
+        }
+        // `cancelled_total` is the *server's* count (post-drain absolute
+        // scrape; the bench always starts a fresh server) — conservation
+        // demands it match both client-side counters exactly.
+        ScenarioKind::CancelStorm => vec![
+            ("cancels_issued", count(&ev.cancels_issued)),
+            ("cancels_acked", count(&ev.cancels_acked)),
+            (
+                "cancelled_total",
+                crate::coordinator::metrics::scrape_value(end_stats, "spa_cancelled_total")
+                    .unwrap_or(0.0),
+            ),
+        ],
+    };
+    SloReport {
+        ttft_p99_target_ms: scn.slo.ttft_p99_ms,
+        ttft_p99_ms: p99,
+        ttft_ok: p99.map(|p| p <= scn.slo.ttft_p99_ms),
+        deadline_ms: scn.slo.deadline_ms,
+        good,
+        total,
+        attainment: if total > 0 { Some(good as f64 / total as f64) } else { None },
+        goodput_rps: good as f64 / r.measured_s,
+        extras,
+    }
+}
+
+/// Drive one prepared scenario against a serving frontend at `addr`,
+/// mirroring `loadgen::drive`'s measurement discipline: warmup-boundary
+/// and post-drain stats scrapes, counter differencing, warmup-issued
+/// requests excluded — then stamp the scenario tag + SLO block.
+fn drive_scenario(
+    addr: &str,
+    method: &str,
+    cfg: &LoadGenConfig,
+    scn: &ScenarioConfig,
+    plan: Plan,
+) -> Result<MethodReport> {
+    let t0 = Instant::now();
+    let obs: Arc<Mutex<Vec<Obs>>> = Arc::new(Mutex::new(Vec::new()));
+    let dropped = Arc::new(AtomicUsize::new(0));
+    let ev = Arc::new(Evidence::default());
+
+    let generators = match plan {
+        Plan::Chat { sessions, turns } => {
+            spawn_chat(addr, cfg, t0, &obs, &ev, sessions, turns)
+        }
+        Plan::Infill { clients } => spawn_infill(addr, cfg, t0, &obs, &ev, clients),
+        Plan::Replay { events } => {
+            spawn_replay(addr, cfg, t0, &obs, &dropped, &ev, events)
+        }
+        Plan::CancelStorm { sessions } => {
+            spawn_cancel_storm(addr, cfg, t0, &obs, &ev, sessions)
+        }
+    };
+
+    sleep_until(t0, cfg.warmup);
+    let baseline = match Client::connect(addr).and_then(|mut c| c.stats()) {
+        Ok(text) => text,
+        Err(e) => {
+            crate::warnlog!(
+                "scenario",
+                "warmup-boundary stats scrape failed ({e:#}); \
+                 recorded counters will include warmup work"
+            );
+            String::new()
+        }
+    };
+
+    for h in generators {
+        let _ = h.join();
+    }
+
+    let mut control = Client::connect(addr).context("connect for final scrape")?;
+    let drained = control.drain(Duration::from_secs(30))?;
+    if !drained {
+        crate::warnlog!("scenario", "server did not drain within 30s; final counters may be low");
+    }
+    let end = control.stats()?;
+
+    let obs = obs.lock().unwrap();
+    let mut r = aggregate(method, cfg, &obs, dropped.load(Ordering::SeqCst), &baseline, &end);
+    let slo = build_slo(cfg, scn, &r, &obs, &ev, &end);
+    r.scenario = Some(scn.kind.name().to_string());
+    r.slo = Some(slo);
+    Ok(r)
+}
+
+/// Run `method` over the stub worker lineup under scenario `scn` — the
+/// scenario counterpart of [`super::loadgen::run_stub`], sharing its
+/// method-name dispatch (`stub` / `spa` / `spa-adaptive` / `spa-fixed`)
+/// and teardown discipline.
+pub fn run_stub_scenario(
+    method: &str,
+    workers: usize,
+    cfg: &LoadGenConfig,
+    scn: &ScenarioConfig,
+    stub: crate::bench::stub::StubConfig,
+    policy: PolicyFlags,
+) -> Result<MethodReport> {
+    let (cfg, plan) = prepare(cfg, scn)?;
+    let srv = spawn_stub_server(method, workers, &cfg, stub, policy)?;
+    let adaptive_ran = srv.adaptive_ran;
+    let report = drive_scenario(&srv.addr, method, &cfg, scn, plan);
+    srv.teardown()?;
+    report.map(|mut r| {
+        r.adaptive = adaptive_ran;
+        r
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn scenario_names_round_trip() {
+        for k in ScenarioKind::ALL {
+            assert_eq!(ScenarioKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(ScenarioKind::from_name("chaat"), None);
+        assert_eq!(ScenarioKind::from_name(""), None);
+    }
+
+    #[test]
+    fn scenario_config_is_strict() {
+        let scn = ScenarioConfig::from_args(ScenarioKind::Chat, &args("")).unwrap();
+        assert_eq!(scn.sessions, 4);
+        assert_eq!(scn.turns, 4);
+        assert!((scn.slo.ttft_p99_ms - 250.0).abs() < 1e-9);
+        let scn = ScenarioConfig::from_args(
+            ScenarioKind::Mixed,
+            &args("--slo-ttft 120 --slo-deadline 900 --sessions 2"),
+        )
+        .unwrap();
+        assert!((scn.slo.ttft_p99_ms - 120.0).abs() < 1e-9);
+        assert!((scn.slo.deadline_ms - 900.0).abs() < 1e-9);
+        assert_eq!(scn.sessions, 2);
+        // Malformed values and misapplied flags error, never record wrong.
+        assert!(ScenarioConfig::from_args(ScenarioKind::Chat, &args("--slo-ttft 0")).is_err());
+        assert!(ScenarioConfig::from_args(ScenarioKind::Chat, &args("--slo-ttft abc")).is_err());
+        assert!(
+            ScenarioConfig::from_args(ScenarioKind::Chat, &args("--slo-deadline -5")).is_err()
+        );
+        assert!(ScenarioConfig::from_args(ScenarioKind::Chat, &args("--sessions 0")).is_err());
+        assert!(ScenarioConfig::from_args(ScenarioKind::Infill, &args("--turns 3")).is_err());
+        assert!(ScenarioConfig::from_args(ScenarioKind::Chat, &args("--trace t.jsonl")).is_err());
+        assert!(
+            ScenarioConfig::from_args(ScenarioKind::Mixed, &args("--record-trace t.jsonl"))
+                .is_err()
+        );
+        assert!(
+            ScenarioConfig::from_args(ScenarioKind::Trace, &args("--trace t.jsonl")).is_ok()
+        );
+    }
+
+    #[test]
+    fn infill_spec_is_non_contiguous_and_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..50 {
+            let (ta, oa) = infill_spec(&mut a);
+            let (tb, ob) = infill_spec(&mut b);
+            assert_eq!((&ta, &oa), (&tb, &ob), "same seed, same spec");
+            assert!(oa.windows(2).all(|w| w[0] < w[1]), "ascending unique: {oa:?}");
+            assert!(*oa.last().unwrap() < ta.len(), "offsets in range");
+            // The guaranteed hole: 0 and 2 masked, 1 fixed.
+            assert!(oa.contains(&0) && !oa.contains(&1) && oa.contains(&2), "{oa:?}");
+        }
+        let (tc, oc) = infill_spec(&mut Rng::new(43));
+        let (ta, oa) = infill_spec(&mut Rng::new(42));
+        assert!(
+            (ta, oa) != (tc, oc),
+            "different seeds should draw different specs"
+        );
+    }
+
+    #[test]
+    fn synth_traces_are_seed_deterministic() {
+        let cfg = LoadGenConfig {
+            warmup: Duration::from_millis(200),
+            duration: Duration::from_secs(2),
+            seed: 7,
+            ..LoadGenConfig::default()
+        };
+        let a = synth_mixed_trace(&cfg, 25.0);
+        let b = synth_mixed_trace(&cfg, 25.0);
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same seed → identical schedule");
+        let other = LoadGenConfig { seed: 8, ..cfg.clone() };
+        assert_ne!(a, synth_mixed_trace(&other, 25.0), "seed changes the schedule");
+        let a = synth_bursty_trace(&cfg);
+        assert!(!a.is_empty());
+        assert_eq!(a, synth_bursty_trace(&cfg));
+        assert_ne!(a, synth_bursty_trace(&other));
+        // Arrival times are non-decreasing within a burst-spread trace.
+        assert!(a.windows(2).all(|w| w[0].at_ms <= w[1].at_ms), "sorted arrivals");
+    }
+
+    #[test]
+    fn trace_file_round_trips_and_reads_strictly() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("spa_trace_unit_{}.jsonl", std::process::id()));
+        let cfg = LoadGenConfig {
+            warmup: Duration::from_millis(100),
+            duration: Duration::from_secs(1),
+            seed: 5,
+            ..LoadGenConfig::default()
+        };
+        let events = synth_bursty_trace(&cfg);
+        write_trace(&path, &events).unwrap();
+        assert_eq!(read_trace(&path).unwrap(), events, "record → replay is lossless");
+
+        // Out-of-order events come back sorted by arrival time.
+        std::fs::write(
+            &path,
+            "{\"at_ms\": 50, \"prompt\": \"b\", \"gen_len\": 4}\n\
+             {\"at_ms\": 10, \"prompt\": \"a\", \"gen_len\": 4}\n",
+        )
+        .unwrap();
+        let sorted = read_trace(&path).unwrap();
+        assert_eq!(sorted[0].prompt, "a");
+        assert_eq!(sorted[1].prompt, "b");
+
+        // Strictness: malformed lines error with a location, not skip.
+        for bad in [
+            "not json\n",
+            "{\"prompt\": \"a\", \"gen_len\": 4}\n",
+            "{\"at_ms\": -1, \"prompt\": \"a\", \"gen_len\": 4}\n",
+            "{\"at_ms\": 1, \"gen_len\": 4}\n",
+            "{\"at_ms\": 1, \"prompt\": \"a\"}\n",
+            "{\"at_ms\": 1, \"prompt\": \"a\", \"gen_len\": 0}\n",
+        ] {
+            std::fs::write(&path, bad).unwrap();
+            assert!(read_trace(&path).is_err(), "must reject: {bad}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn slo_json_guards_non_finite_and_carries_schema() {
+        let s = SloReport {
+            ttft_p99_target_ms: 250.0,
+            ttft_p99_ms: None,
+            ttft_ok: None,
+            deadline_ms: 1000.0,
+            good: 0,
+            total: 0,
+            attainment: None,
+            goodput_rps: f64::NAN,
+            extras: vec![("turns", 0.0)],
+        };
+        let j = slo_json(&s);
+        let back = parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("schema").and_then(|x| x.as_f64()), Some(SLO_SCHEMA));
+        assert_eq!(back.get("ttft_p99_ms"), Some(&Json::Null));
+        assert_eq!(back.get("ttft_ok"), Some(&Json::Null));
+        assert_eq!(back.get("deadline_attainment"), Some(&Json::Null));
+        assert_eq!(back.get("goodput_rps"), Some(&Json::Null));
+        assert_eq!(back.get("turns").and_then(|x| x.as_f64()), Some(0.0));
+    }
+
+    #[test]
+    fn build_slo_counts_goodput_under_deadline() {
+        let cfg = LoadGenConfig {
+            warmup: Duration::from_secs(1),
+            ..LoadGenConfig::default()
+        };
+        let mk = |issued_s: f64, latency_ms: f64, ttft_ms: f64, error: bool| Obs {
+            issued_s,
+            done_s: issued_s + latency_ms / 1e3,
+            wall_ms: latency_ms,
+            ttft_ms,
+            latency_ms,
+            decoded: 8.0,
+            error,
+        };
+        let obs = vec![
+            mk(0.5, 100.0, 10.0, false), // warmup: excluded
+            mk(1.5, 100.0, 10.0, false), // good
+            mk(2.0, 400.0, 20.0, false), // good
+            mk(2.5, 5000.0, 30.0, false), // over deadline: completes, not good
+            mk(2.6, 100.0, 10.0, true),  // error: excluded entirely
+        ];
+        let r = aggregate("stub", &cfg, &obs, 0, "", "");
+        let scn = ScenarioConfig {
+            kind: ScenarioKind::Chat,
+            slo: SloTargets { ttft_p99_ms: 25.0, deadline_ms: 1000.0 },
+            sessions: 1,
+            turns: 4,
+            trace: None,
+            record_trace: None,
+        };
+        let ev = Evidence::default();
+        ev.turns.fetch_add(3, Ordering::SeqCst);
+        let s = build_slo(&cfg, &scn, &r, &obs, &ev, "");
+        assert_eq!((s.total, s.good), (3, 2));
+        assert!((s.attainment.unwrap() - 2.0 / 3.0).abs() < 1e-9);
+        // p99 of {10, 20, 30} is 30 > 25 → the TTFT SLO is missed.
+        assert_eq!(s.ttft_ok, Some(false));
+        assert!(s.goodput_rps > 0.0);
+        assert_eq!(s.extras, vec![("turns", 3.0)]);
+        // No completions at all → explicit "unmeasurable", not zeros.
+        let r0 = aggregate("stub", &cfg, &[], 0, "", "");
+        let s0 = build_slo(&cfg, &scn, &r0, &[], &ev, "");
+        assert_eq!((s0.total, s0.good), (0, 0));
+        assert_eq!(s0.ttft_ok, None);
+        assert_eq!(s0.attainment, None);
+    }
+}

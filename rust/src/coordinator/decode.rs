@@ -62,10 +62,13 @@ impl Sampler {
             }
             let row = &mut tokens[b * seq_len..(b + 1) * seq_len];
             // Active range for this slot's policy.
+            // `block_len == usize::MAX` disables blocking (infill requests
+            // force it): saturate the add so the sentinel doesn't overflow
+            // once `block_start` is past zero.
             let (lo, hi) = match self.mode {
                 UnmaskMode::BlockParallel { .. } => (
                     slot.block_start,
-                    (slot.block_start + slot.block_len).min(slot.gen_end),
+                    slot.block_start.saturating_add(slot.block_len).min(slot.gen_end),
                 ),
                 _ => (0, seq_len),
             };
@@ -110,7 +113,8 @@ impl Sampler {
             // Advance the semi-AR block if it is fully decoded.
             if let UnmaskMode::BlockParallel { .. } = self.mode {
                 loop {
-                    let hi = (slot.block_start + slot.block_len).min(slot.gen_end);
+                    let hi =
+                        slot.block_start.saturating_add(slot.block_len).min(slot.gen_end);
                     let block_done =
                         (slot.block_start..hi).all(|n| row[n] != MASK);
                     if block_done && hi < slot.gen_end {

@@ -26,6 +26,13 @@ pub struct GenParams {
     /// Stream incremental `ReqEvent::Tokens` commits to the event sink as
     /// the worker unmasks positions (protocol v2 `"stream":true`).
     pub stream: bool,
+    /// Infill mask layout (protocol v2 `"template"`/`"mask_offsets"`): the
+    /// offsets, relative to `prompt_len` and strictly ascending, of the MASK
+    /// positions inside the template region.  `Some` marks the request as an
+    /// arbitrary-order infill — the generation region is non-contiguous, so
+    /// [`SlotState::assign`] disables semi-AR blocking for it (blocks assume
+    /// a left-to-right contiguous MASK run).
+    pub mask_offsets: Option<Vec<usize>>,
 }
 
 /// A generation request entering the router.
@@ -200,7 +207,16 @@ impl SlotState {
     }
 
     /// Slot state for a freshly admitted request.
+    ///
+    /// An infill request (`GenParams::mask_offsets` set) ignores the caller's
+    /// semi-AR block length: blocking assumes the generation region is one
+    /// contiguous MASK run starting at `prompt_len`, while an infill region
+    /// interleaves fixed template tokens — a finite block would strand MASK
+    /// positions beyond the first block forever (the `BlockParallel` unmask
+    /// mode never looks past the active block).
     pub fn assign(req: &Request, block_len: usize) -> SlotState {
+        let block_len =
+            if req.params.mask_offsets.is_some() { usize::MAX } else { block_len };
         SlotState {
             occupied: true,
             request_id: req.id,
@@ -264,6 +280,32 @@ mod tests {
         assert_eq!(SlotState::assign(&bad, 2).gen_end, 8);
         bad.gen_end = 0;
         assert_eq!(SlotState::assign(&bad, 2).gen_end, 2);
+    }
+
+    /// An infill request's non-contiguous region is incompatible with
+    /// semi-AR blocking: `assign` must override any caller-supplied block
+    /// length with the disable sentinel.
+    #[test]
+    fn assign_disables_blocking_for_infill() {
+        // seq_len 8, prompt 2, template "a_b_" over [2, 6): MASKs at 3, 5.
+        let tokens = vec![BOS, 7, 9, MASK, 9, MASK, PAD, PAD];
+        let req = Request {
+            id: 2,
+            gen_end: 6,
+            tokens,
+            prompt_len: 2,
+            answer: None,
+            task: None,
+            params: GenParams { mask_offsets: Some(vec![1, 3]), ..GenParams::default() },
+            cancel: Arc::new(AtomicBool::new(false)),
+            submitted: Instant::now(),
+        };
+        let slot = SlotState::assign(&req, 2);
+        assert_eq!(slot.block_len, usize::MAX, "blocking disabled for infill");
+        assert_eq!(slot.gen_end, 6, "gen_end spans the whole template region");
+        // A plain request keeps the caller's block length.
+        let plain = short_gen_request();
+        assert_eq!(SlotState::assign(&plain, 2).block_len, 2);
     }
 
     #[test]

@@ -185,6 +185,73 @@ pub fn build_request(
     })
 }
 
+/// Build an *infill* Request: the generation region is rendered from a
+/// `template` whose characters at `mask_offsets` (0-based template
+/// offsets, i.e. relative to the prompt end) are replaced by MASK — the
+/// DLM-native arbitrary-order workload, where fixed template tokens
+/// interleave with masked holes instead of one contiguous MASK run.
+///
+/// Unlike [`build_request`], which silently clamps `gen_len` into the
+/// remaining row, an oversized template is an *error*: clamping would
+/// silently drop template positions and shift the requested layout.
+/// Offsets may arrive in any order (they denote a position set) but must
+/// be unique and in-range.  The resulting request carries the sorted
+/// offsets in [`GenParams::mask_offsets`], which also disables semi-AR
+/// blocking at slot assignment (`SlotState::assign`).
+pub fn build_infill_request(
+    tok: &Tokenizer,
+    seq_len: usize,
+    task: Option<Task>,
+    prompt: &str,
+    template: &str,
+    mask_offsets: &[usize],
+    mut params: GenParams,
+) -> Result<Request> {
+    let mut ids = vec![BOS];
+    ids.extend(tok.encode(prompt)?);
+    let prompt_len = ids.len();
+    let tmpl = tok.encode(template)?;
+    anyhow::ensure!(!tmpl.is_empty(), "template must be non-empty");
+    anyhow::ensure!(
+        prompt_len + tmpl.len() <= seq_len,
+        "prompt + template exceed seq_len ({prompt_len} + {} > {seq_len})",
+        tmpl.len()
+    );
+    let mut offsets = mask_offsets.to_vec();
+    offsets.sort_unstable();
+    anyhow::ensure!(!offsets.is_empty(), "mask_offsets must be non-empty");
+    anyhow::ensure!(
+        offsets.windows(2).all(|w| w[0] != w[1]),
+        "mask_offsets must be unique"
+    );
+    let last = *offsets.last().unwrap();
+    anyhow::ensure!(
+        last < tmpl.len(),
+        "mask_offsets out of range (offset {last} >= template length {})",
+        tmpl.len()
+    );
+    let mut tokens = vec![PAD; seq_len];
+    tokens[..prompt_len].copy_from_slice(&ids);
+    tokens[prompt_len..prompt_len + tmpl.len()].copy_from_slice(&tmpl);
+    for &o in &offsets {
+        tokens[prompt_len + o] = MASK;
+    }
+    params.mask_offsets = Some(offsets);
+    Ok(Request {
+        id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+        tokens,
+        prompt_len,
+        // The region spans the whole template — fixed template tokens
+        // included — so semi-AR/completion scans cover every hole.
+        gen_end: prompt_len + tmpl.len(),
+        answer: None,
+        task,
+        params,
+        cancel: Arc::new(AtomicBool::new(false)),
+        submitted: Instant::now(),
+    })
+}
+
 /// A `{"error": msg}` reply with the message properly JSON-escaped.
 pub fn error_reply(msg: &str) -> String {
     Json::obj(vec![("error", Json::str(msg))]).to_string()
@@ -587,8 +654,38 @@ fn parse_gen_params(msg: &Json, task: Option<Task>) -> Result<(usize, GenParams)
             threshold,
             max_steps: int_param("max_steps")?,
             stream,
+            // Filled by `build_infill_request` once the template is parsed
+            // and validated against it.
+            mask_offsets: None,
         },
     ))
+}
+
+/// Parse the optional infill mask spec: `"template"` (generation-region
+/// text) plus `"mask_offsets"` (0-based template offsets to mask).  The two
+/// keys travel together — one without the other is a protocol error, never
+/// a silently contiguous decode.
+fn parse_mask_spec(msg: &Json) -> Result<Option<(String, Vec<usize>)>> {
+    match (msg.get("template"), msg.get("mask_offsets")) {
+        (None, None) => Ok(None),
+        (Some(t), Some(o)) => {
+            let t = t
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("template must be a string"))?;
+            let arr = o.as_arr().ok_or_else(|| {
+                anyhow::anyhow!("mask_offsets must be an array of non-negative integers")
+            })?;
+            let mut offsets = Vec::with_capacity(arr.len());
+            for v in arr {
+                let x = v.as_i64().filter(|&x| x >= 0).ok_or_else(|| {
+                    anyhow::anyhow!("mask_offsets must be an array of non-negative integers")
+                })?;
+                offsets.push(x as usize);
+            }
+            Ok(Some((t.to_string(), offsets)))
+        }
+        _ => anyhow::bail!("template and mask_offsets must be supplied together"),
+    }
 }
 
 /// Shared head of both generate paths: task + validated params + request.
@@ -600,7 +697,16 @@ fn build_from_msg(
     let prompt = msg.get("prompt").and_then(|p| p.as_str()).unwrap_or("");
     let task = msg.get("task").and_then(|t| t.as_str()).and_then(Task::from_name);
     let (gen_len, params) = parse_gen_params(msg, task)?;
-    build_request(tok, seq_len, task, prompt, gen_len, params)
+    match parse_mask_spec(msg)? {
+        Some((template, offsets)) => {
+            anyhow::ensure!(
+                msg.get("gen_len").is_none(),
+                "template and gen_len are mutually exclusive"
+            );
+            build_infill_request(tok, seq_len, task, prompt, &template, &offsets, params)
+        }
+        None => build_request(tok, seq_len, task, prompt, gen_len, params),
+    }
 }
 
 /// v1 generate: block until the terminal event, reply with a single line.
@@ -864,6 +970,12 @@ pub struct GenRequest {
     pub max_steps: Option<usize>,
     /// Ask for incremental `tokens` frames.
     pub stream: bool,
+    /// Infill template: the generation-region text, with the characters at
+    /// [`GenRequest::mask_offsets`] replaced by MASK server-side.  Travels
+    /// with `mask_offsets`; mutually exclusive with `gen_len`.
+    pub template: Option<String>,
+    /// 0-based template offsets to mask (see [`GenRequest::template`]).
+    pub mask_offsets: Option<Vec<usize>>,
 }
 
 impl GenRequest {
@@ -896,6 +1008,15 @@ impl GenRequest {
         }
         if self.stream {
             pairs.push(("stream", Json::Bool(true)));
+        }
+        if let Some(t) = &self.template {
+            pairs.push(("template", Json::str(t)));
+        }
+        if let Some(offs) = &self.mask_offsets {
+            pairs.push((
+                "mask_offsets",
+                Json::Arr(offs.iter().map(|&o| Json::int(o as i64)).collect()),
+            ));
         }
         Json::obj(pairs)
     }
@@ -1291,6 +1412,78 @@ mod tests {
             let msg = parse(bad).unwrap();
             assert!(parse_gen_params(&msg, None).is_err(), "{bad} must be rejected");
         }
+    }
+
+    /// The infill wire spec builds the exact requested layout: template
+    /// tokens land verbatim, the masked offsets become MASK, the region
+    /// spans the whole template, and blocking is disabled at assignment.
+    #[test]
+    fn infill_request_builds_requested_layout() {
+        use crate::model::tokenizer::CHARSET;
+        let tok = Tokenizer::from_manifest(CHARSET);
+        let msg = parse(
+            r#"{"prompt":"ab","template":"1+2=?","mask_offsets":[4,1],"stream":true}"#,
+        )
+        .unwrap();
+        let req = build_from_msg(&msg, 32, &tok).unwrap();
+        assert_eq!(req.prompt_len, 3, "BOS + 2 prompt chars");
+        assert_eq!(req.gen_end, 8, "region spans the whole template");
+        // Offsets arrive unsorted; they come out sorted and applied.
+        assert_eq!(req.params.mask_offsets, Some(vec![1, 4]));
+        assert_eq!(req.tokens[4], MASK, "offset 1 masked");
+        assert_eq!(req.tokens[7], MASK, "offset 4 masked");
+        let fixed = tok.encode("1+2=?").unwrap();
+        assert_eq!(req.tokens[3], fixed[0], "offset 0 keeps the template char");
+        assert_eq!(req.tokens[5], fixed[2]);
+        assert_eq!(req.tokens[6], fixed[3]);
+        assert_eq!(req.tokens[8], PAD, "PAD tail after the region");
+        let slot = super::super::request::SlotState::assign(&req, 4);
+        assert_eq!(slot.block_len, usize::MAX, "infill disables blocking");
+    }
+
+    #[test]
+    fn infill_mask_spec_is_validated() {
+        use crate::model::tokenizer::CHARSET;
+        let tok = Tokenizer::from_manifest(CHARSET);
+        for bad in [
+            // One half of the spec without the other.
+            r#"{"prompt":"a","template":"123"}"#,
+            r#"{"prompt":"a","mask_offsets":[0]}"#,
+            // gen_len is the contiguous grammar; mixing is ambiguous.
+            r#"{"prompt":"a","template":"123","mask_offsets":[0],"gen_len":8}"#,
+            // Shape errors.
+            r#"{"prompt":"a","template":7,"mask_offsets":[0]}"#,
+            r#"{"prompt":"a","template":"123","mask_offsets":"0"}"#,
+            r#"{"prompt":"a","template":"123","mask_offsets":[]}"#,
+            r#"{"prompt":"a","template":"123","mask_offsets":[-1]}"#,
+            r#"{"prompt":"a","template":"123","mask_offsets":[0.5]}"#,
+            r#"{"prompt":"a","template":"123","mask_offsets":[3]}"#,
+            r#"{"prompt":"a","template":"123","mask_offsets":[1,1]}"#,
+            r#"{"prompt":"a","template":"","mask_offsets":[0]}"#,
+        ] {
+            let msg = parse(bad).unwrap();
+            assert!(build_from_msg(&msg, 32, &tok).is_err(), "{bad} must be rejected");
+        }
+        // An oversized template errors instead of silently clamping.
+        let msg =
+            parse(r#"{"prompt":"a","template":"12345678","mask_offsets":[0]}"#).unwrap();
+        assert!(build_from_msg(&msg, 8, &tok).is_err(), "oversized template");
+    }
+
+    #[test]
+    fn gen_request_body_round_trips_infill_spec() {
+        let r = GenRequest {
+            prompt: "ab".into(),
+            template: Some("1+2=?".into()),
+            mask_offsets: Some(vec![1, 4]),
+            stream: true,
+            ..GenRequest::default()
+        };
+        let wire = parse(&r.body(9).to_string()).unwrap();
+        assert_eq!(wire.get("template").and_then(|t| t.as_str()), Some("1+2=?"));
+        let offs = parse_mask_spec(&wire).unwrap().unwrap().1;
+        assert_eq!(offs, vec![1, 4]);
+        assert!(wire.get("gen_len").is_none());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //!   spa-cache bench-serve --workers 2 --clients 8 --duration 10s   (closed loop)
 //!   spa-cache bench-serve --workers 2 --pipeline 8 --duration 10s  (one v2 session)
 //!   spa-cache bench-serve --stub --pipeline 8 --duration 2s        (no artifacts)
+//!   spa-cache bench-serve --stub --scenario chat --duration 2s     (SLO scenario)
 //!   spa-cache analyze --model llada_s --steps 12
 //!   spa-cache selftest
 
@@ -50,7 +51,10 @@ fn main() -> Result<()> {
                  [--duration 5s] [--warmup 1s] [--tasks gsm8k_s,mmlu_s] [--gen-len 32 | 16:64] \
                  [--out BENCH_serving.json] [--stub]\n\
                  (--stub: stub workers, no artifacts needed; stub methods \
-                 stub|spa|spa-adaptive|spa-fixed run the real policy loop)"
+                 stub|spa|spa-adaptive|spa-fixed run the real policy loop)\n\
+                 scenarios (--stub only): [--scenario chat|infill|mixed|trace|cancel-storm] \
+                 [--slo-ttft MS] [--slo-deadline MS] [--sessions N] [--turns N] \
+                 [--trace FILE] [--record-trace FILE]"
             );
             Ok(())
         }
@@ -235,6 +239,7 @@ fn serve(args: &Args) -> Result<()> {
 /// are unavailable, mirroring the artifact-gated tests.
 fn bench_serve(args: &Args) -> Result<()> {
     use spa_cache::bench::loadgen::{self, LoadGenConfig};
+    use spa_cache::bench::scenario;
 
     // --stub: artifact-free smoke over stub session workers — the whole
     // TCP → router → worker pipeline minus the device execution.  CI uses
@@ -266,17 +271,48 @@ fn bench_serve(args: &Args) -> Result<()> {
             args.get("partial-refresh").is_some(),
             &pseudo_specs,
         )?;
+        // --scenario: drive a production-shaped workload (bench::scenario)
+        // instead of the plain load shapes, and stamp each report with a
+        // scenario tag + SLO block.
+        let scenario = match args.get("scenario") {
+            Some(name) => Some(scenario::ScenarioKind::from_name(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown --scenario '{name}' (valid: {})",
+                    scenario::ScenarioKind::ALL
+                        .iter()
+                        .map(|k| k.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?),
+            None => None,
+        };
         let mut reports = Vec::new();
-        for m in &methods {
-            reports.push(loadgen::run_stub(
-                m,
-                workers,
-                &cfg,
-                spa_cache::bench::stub::StubConfig::default(),
-                policy,
-            )?);
+        if let Some(kind) = scenario {
+            let scn = scenario::ScenarioConfig::from_args(kind, args)?;
+            for m in &methods {
+                reports.push(scenario::run_stub_scenario(
+                    m,
+                    workers,
+                    &cfg,
+                    &scn,
+                    spa_cache::bench::stub::StubConfig::default(),
+                    policy,
+                )?);
+            }
+        } else {
+            for m in &methods {
+                reports.push(loadgen::run_stub(
+                    m,
+                    workers,
+                    &cfg,
+                    spa_cache::bench::stub::StubConfig::default(),
+                    policy,
+                )?);
+            }
         }
         loadgen::print_reports(&reports);
+        scenario::print_slo(&reports);
         let out = loadgen::out_path(args);
         loadgen::append_trajectory(
             &out,
@@ -290,6 +326,10 @@ fn bench_serve(args: &Args) -> Result<()> {
         );
         return Ok(());
     }
+    anyhow::ensure!(
+        args.get("scenario").is_none(),
+        "--scenario requires --stub (scenarios run artifact-free over the stub workers)"
+    );
 
     // Gate on the resolved dir, so an explicit --artifacts is honoured
     // (shared with examples/bench_serve.rs — the two must not drift).

@@ -494,4 +494,75 @@ mod tests {
         let keys: Vec<_> = v.as_obj().unwrap().iter().map(|(k, _)| k.clone()).collect();
         assert_eq!(keys, vec!["z", "a"]);
     }
+
+    /// Randomized round-trip property: `parse(v.to_string()) == v` over the
+    /// whole value model — escape-heavy strings, deep nesting, `Int`s past
+    /// 2^53 (where f64 rounds), and float edge cases (integral floats that
+    /// serialize as integer literals, huge/tiny magnitudes, `-0.0`).
+    #[test]
+    fn prop_random_value_round_trips() {
+        use crate::util::proptest::check;
+        use crate::util::rng::Rng;
+
+        fn gen_value(r: &mut Rng, depth: usize) -> Json {
+            const STR_POOL: &[&str] = &[
+                "",
+                "plain",
+                "q\"uo\\te",
+                "line\nbreak\ttab\rret",
+                "ctrl\u{1}\u{1f}\u{8}\u{c}",
+                "unicode λ→∞ 🚀",
+                "sl/ash",
+                "\\u0041 looks like an escape",
+            ];
+            const INT_POOL: &[i64] = &[
+                0,
+                -1,
+                42,
+                (1i64 << 53) + 1,
+                -(1i64 << 53) - 1,
+                i64::MAX,
+                i64::MIN,
+            ];
+            const NUM_POOL: &[f64] = &[
+                0.25,
+                -1250.0,
+                0.1,
+                -0.0,
+                3.5e-7,
+                1e300,
+                -2.2250738585072014e-308,
+                9.007199254740993e15,
+            ];
+            // Leaves only past depth 3 keeps cases bounded.
+            match r.below(if depth >= 3 { 5 } else { 7 }) {
+                0 => Json::Null,
+                1 => Json::Bool(r.bool(0.5)),
+                2 => Json::Int(*r.choice(INT_POOL)),
+                3 => Json::Num(*r.choice(NUM_POOL)),
+                4 => Json::Str((*r.choice(STR_POOL)).to_string()),
+                5 => Json::Arr((0..r.below(4)).map(|_| gen_value(r, depth + 1)).collect()),
+                _ => Json::Obj(
+                    (0..r.below(4))
+                        .map(|i| (format!("k{i}_{}", r.below(100)), gen_value(r, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+
+        check(
+            "json_round_trip",
+            |r| gen_value(r, 0),
+            |v| {
+                let text = v.to_string();
+                let back =
+                    parse(&text).map_err(|e| format!("reparse of {text:?} failed: {e}"))?;
+                if back == *v {
+                    Ok(())
+                } else {
+                    Err(format!("{text:?} reparsed as {:?}", back.to_string()))
+                }
+            },
+        );
+    }
 }

@@ -1,0 +1,294 @@
+//! Scenario-suite end-to-end tests over stub workers — artifact-free, so
+//! every checkout exercises the full pipeline: scenario generators → TCP
+//! protocol v2 → router → stub worker → stats scrape → SLO block →
+//! `BENCH_serving.json` tagged trajectory row.
+//!
+//! Covers the acceptance evidence directly:
+//! * every scenario appends a trajectory row tagged with its name whose
+//!   `slo` block reports p99-TTFT attainment and goodput;
+//! * the infilling scenario proves non-contiguous mask decode end-to-end
+//!   (committed positions == requested layout, per request);
+//! * two same-seed runs produce byte-identical request schedules
+//!   (recorded-trace equality);
+//! * a cancellation storm conserves batch slots (admission log) and the
+//!   server's `spa_cancelled_total` matches the cancels the clients issued.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use spa_cache::bench::loadgen::{
+    self, ArrivalMode, LoadGenConfig, MethodReport, PolicyFlags,
+};
+use spa_cache::bench::scenario::{
+    self, ScenarioConfig, ScenarioKind, SloTargets, SLO_SCHEMA,
+};
+use spa_cache::bench::stub::StubConfig;
+use spa_cache::util::json::{parse, Json};
+
+fn base_cfg(seed: u64) -> LoadGenConfig {
+    LoadGenConfig {
+        warmup: Duration::from_millis(100),
+        duration: Duration::from_millis(600),
+        seed,
+        ..LoadGenConfig::default()
+    }
+}
+
+fn scn(kind: ScenarioKind) -> ScenarioConfig {
+    ScenarioConfig {
+        kind,
+        slo: SloTargets { ttft_p99_ms: 500.0, deadline_ms: 2000.0 },
+        sessions: 3,
+        turns: 3,
+        trace: None,
+        record_trace: None,
+    }
+}
+
+fn extra(r: &MethodReport, key: &str) -> f64 {
+    let slo = r.slo.as_ref().expect("slo block");
+    slo.extras
+        .iter()
+        .find(|(k, _)| *k == key)
+        .unwrap_or_else(|| panic!("extra '{key}' missing: {:?}", slo.extras))
+        .1
+}
+
+fn run(kind: ScenarioKind, cfg: &LoadGenConfig) -> MethodReport {
+    scenario::run_stub_scenario(
+        "stub",
+        2,
+        cfg,
+        &scn(kind),
+        StubConfig::default(),
+        PolicyFlags::default(),
+    )
+    .expect("scenario run")
+}
+
+/// Common shape every scenario's report must satisfy: the scenario tag,
+/// and an SLO block with a TTFT verdict, goodput and attainment fields.
+fn assert_slo_shape(r: &MethodReport, kind: ScenarioKind) {
+    assert_eq!(r.scenario.as_deref(), Some(kind.name()), "tagged report");
+    let s = r.slo.as_ref().expect("slo block present");
+    assert!(s.total > 0, "measured completions under {}: {r:?}", kind.name());
+    assert!(s.good > 0, "stub decodes are fast; deadline 2s: {s:?}");
+    let att = s.attainment.expect("attainment measurable");
+    assert!((0.0..=1.0).contains(&att), "attainment in [0,1]: {att}");
+    assert!(s.goodput_rps > 0.0, "goodput: {s:?}");
+    assert!(s.ttft_p99_ms.is_some() && s.ttft_ok.is_some(), "ttft verdict: {s:?}");
+}
+
+/// Append `r` to a fresh trajectory file and return the parsed method row.
+fn trajectory_row(tag: &str, cfg: &LoadGenConfig, r: &MethodReport) -> Json {
+    let path = std::env::temp_dir()
+        .join(format!("BENCH_serving_scn_{tag}_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    loadgen::append_trajectory(
+        &path,
+        loadgen::config_json(cfg, 2, "stub", PolicyFlags::default()),
+        std::slice::from_ref(r),
+    )
+    .unwrap();
+    let doc = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let row = doc.get("entries").and_then(|e| e.as_arr()).unwrap()[0]
+        .get("methods")
+        .and_then(|m| m.as_arr())
+        .unwrap()[0]
+        .clone();
+    let _ = std::fs::remove_file(&path);
+    row
+}
+
+#[test]
+fn chat_scenario_reports_slo_and_tags_trajectory() {
+    let cfg = base_cfg(31);
+    let r = run(ScenarioKind::Chat, &cfg);
+    assert_slo_shape(&r, ScenarioKind::Chat);
+    assert!(extra(&r, "turns") > 3.0, "multi-turn traffic ran: {:?}", r.slo);
+
+    // The tagged row round-trips through the trajectory file with its
+    // schema-versioned SLO block.
+    let row = trajectory_row("chat", &cfg, &r);
+    assert_eq!(row.get("scenario").and_then(|s| s.as_str()), Some("chat"));
+    let slo = row.get("slo").expect("slo block in trajectory");
+    assert_eq!(slo.get("schema").and_then(|x| x.as_f64()), Some(SLO_SCHEMA));
+    assert!(slo.get("ttft_p99_target_ms").and_then(|x| x.as_f64()).is_some());
+    assert!(slo.get("ttft_ok").and_then(|x| x.as_bool()).is_some());
+    assert!(slo.get("deadline_attainment").and_then(|x| x.as_f64()).is_some());
+    assert!(slo.get("goodput_rps").and_then(|x| x.as_f64()).unwrap() > 0.0);
+    assert!(slo.get("turns").and_then(|x| x.as_f64()).unwrap() > 3.0);
+
+    // Plain load-shape rows stay untagged: the scenario key is the
+    // discriminator consumers filter on.
+    let plain = loadgen::run_stub(
+        "stub",
+        2,
+        &LoadGenConfig {
+            mode: ArrivalMode::Closed { clients: 2 },
+            warmup: Duration::from_millis(50),
+            duration: Duration::from_millis(200),
+            ..base_cfg(31)
+        },
+        StubConfig::default(),
+        PolicyFlags::default(),
+    )
+    .unwrap();
+    let row = trajectory_row("plain", &cfg, &plain);
+    assert!(row.get("scenario").is_none(), "untagged plain row");
+    assert!(row.get("slo").is_none(), "no slo block on plain row");
+}
+
+/// The infilling acceptance proof: every request ships a non-contiguous
+/// mask layout and the streamed committed positions must match it exactly
+/// — decode happened at the requested arbitrary-order holes, end to end.
+#[test]
+fn infill_scenario_proves_noncontiguous_mask_decode() {
+    let cfg = base_cfg(37);
+    let r = run(ScenarioKind::Infill, &cfg);
+    assert_slo_shape(&r, ScenarioKind::Infill);
+    let checked = extra(&r, "layout_checked");
+    let ok = extra(&r, "layout_ok");
+    assert!(checked > 3.0, "enough layouts exercised: {checked}");
+    assert_eq!(
+        checked, ok,
+        "every committed-position set must equal its requested mask layout"
+    );
+    let row = trajectory_row("infill", &cfg, &r);
+    assert_eq!(row.get("scenario").and_then(|s| s.as_str()), Some("infill"));
+    let slo = row.get("slo").unwrap();
+    assert_eq!(
+        slo.get("layout_ok").and_then(|x| x.as_f64()),
+        slo.get("layout_checked").and_then(|x| x.as_f64()),
+    );
+}
+
+#[test]
+fn mixed_scenario_replays_heterogeneous_population() {
+    let cfg = LoadGenConfig {
+        mode: ArrivalMode::Open { qps: 60.0 },
+        ..base_cfg(41)
+    };
+    let r = run(ScenarioKind::Mixed, &cfg);
+    assert_slo_shape(&r, ScenarioKind::Mixed);
+    assert!(extra(&r, "replayed") > 5.0, "population dispatched: {:?}", r.slo);
+    // Open-loop offered load is recorded for the mixed population.
+    assert!((r.offered_qps - 60.0).abs() < 1e-9, "offered qps kept: {}", r.offered_qps);
+}
+
+/// Satellite (a) regression at the run level: two same-seed runs of the
+/// trace scenario record byte-identical request schedules (arrival times,
+/// prompts, lengths) — `--seed` fully determines what the loadgen offers.
+#[test]
+fn trace_scenario_is_seed_deterministic_and_replays_bursts() {
+    let record = |tag: &str, seed: u64| {
+        let path = std::env::temp_dir()
+            .join(format!("spa_scn_trace_{tag}_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let cfg = base_cfg(seed);
+        let mut s = scn(ScenarioKind::Trace);
+        s.record_trace = Some(path.clone());
+        let r = scenario::run_stub_scenario(
+            "stub",
+            2,
+            &cfg,
+            &s,
+            StubConfig::default(),
+            PolicyFlags::default(),
+        )
+        .expect("trace run");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        (r, text)
+    };
+    let (r1, t1) = record("a", 43);
+    let (_r2, t2) = record("b", 43);
+    let (_r3, t3) = record("c", 44);
+    assert!(!t1.is_empty(), "trace recorded");
+    assert_eq!(t1, t2, "same seed ⇒ byte-identical request schedule");
+    assert_ne!(t1, t3, "seed changes the schedule");
+
+    assert_eq!(r1.scenario.as_deref(), Some("trace"));
+    let s = r1.slo.as_ref().unwrap();
+    assert!(
+        extra(&r1, "replayed") >= 2.0,
+        "bursty replay dispatched: {:?}",
+        s
+    );
+
+    // Replaying the recorded file reproduces the same offered schedule.
+    let path = std::env::temp_dir()
+        .join(format!("spa_scn_trace_replay_{}.jsonl", std::process::id()));
+    std::fs::write(&path, &t1).unwrap();
+    let events = scenario::read_trace(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert!(!events.is_empty());
+    assert!(events.windows(2).all(|w| w[0].at_ms <= w[1].at_ms), "sorted");
+}
+
+/// Satellite (d): cancellation-storm e2e.  Slot conservation via the
+/// admission slot log (every admission lands in a real slot; slots are
+/// reused after cancels free them), and the server-side
+/// `spa_cancelled_total` equals the cancels the clients issued *and* the
+/// `cancelled` terminals they observed — no lost or double-counted cancel
+/// anywhere in router → worker → sweep → reply.
+#[test]
+fn cancel_storm_conserves_slots_and_cancel_counts() {
+    const BATCH: usize = 4;
+    let slot_log: Arc<Mutex<Vec<(u64, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+    let stub = StubConfig {
+        batch: BATCH,
+        // 5ms steps × 16 steps of gen-64 decode ⇒ ~80ms per request:
+        // cancels (issued ≤ ~15ms after submit) always land mid-flight,
+        // so issued == acked == server count exactly, no races.
+        step_ms: 5,
+        commits_per_step: 4,
+        slot_log: Some(Arc::clone(&slot_log)),
+    };
+    let cfg = LoadGenConfig {
+        // No warmup: the post-drain scrape is absolute, so every cancel of
+        // the run must be visible in it.
+        warmup: Duration::from_millis(0),
+        duration: Duration::from_millis(500),
+        ..base_cfg(47)
+    };
+    let r = scenario::run_stub_scenario(
+        "stub",
+        1,
+        &cfg,
+        &scn(ScenarioKind::CancelStorm),
+        stub,
+        PolicyFlags::default(),
+    )
+    .expect("storm run");
+    assert_eq!(r.scenario.as_deref(), Some("cancel-storm"));
+
+    let issued = extra(&r, "cancels_issued");
+    let acked = extra(&r, "cancels_acked");
+    let server = extra(&r, "cancelled_total");
+    assert!(issued > 4.0, "storm issued cancels: {:?}", r.slo);
+    assert_eq!(issued, acked, "every cancel acked with a `cancelled` terminal");
+    assert_eq!(issued, server, "spa_cancelled_total matches issued cancels");
+
+    // Survivors (the ~30% not cancelled) completed and feed the SLO.
+    let s = r.slo.as_ref().unwrap();
+    assert!(s.total > 0, "survivors completed: {s:?}");
+    assert_eq!(r.errors, 0, "cancels are not errors");
+
+    // Slot conservation: every admission landed in a real batch slot, and
+    // cancelled slots were freed and re-admitted (more admissions than the
+    // machine has slots).
+    let log = slot_log.lock().unwrap();
+    assert!(!log.is_empty(), "admissions logged");
+    assert!(
+        log.iter().all(|&(_, slot)| slot < BATCH),
+        "slot indices stay in the batch: {log:?}"
+    );
+    assert!(
+        log.len() > BATCH,
+        "freed slots must be re-used across the storm ({} admissions)",
+        log.len()
+    );
+    let ids: std::collections::HashSet<u64> = log.iter().map(|&(id, _)| id).collect();
+    assert_eq!(ids.len(), log.len(), "each request admitted exactly once");
+}

@@ -6,7 +6,8 @@
 //! in DESIGN.md §10.
 
 use spa_cache::bench::{time_ms, Table};
-use spa_cache::coordinator::cache::{DeltaUpload, TokenDelta};
+use spa_cache::coordinator::cache::prefix::{chain_key, prefix_key, PREFIX_SEED};
+use spa_cache::coordinator::cache::{DeltaUpload, PrefixStore, TokenDelta};
 use spa_cache::runtime::tensor::{literal_f32, literal_i32, literal_zeros_f32};
 use spa_cache::util::cli::Args;
 use spa_cache::util::rng::Rng;
@@ -155,6 +156,102 @@ fn main() -> anyhow::Result<()> {
         format!("{:.3}", s.mean),
         format!("{:.3}", s.p50),
         format!("{:.3}", s.p90),
+    ]);
+    table.print();
+    table.append_to("bench_results.txt");
+
+    // --- incremental prefix hashing vs full rehash ------------------------
+    // A chat session extends its transcript by a handful of tokens per
+    // turn; the admission path must not pay O(prompt) hashing per turn.
+    // Compare rehashing the whole prompt each turn against extending the
+    // running chain key by only the new suffix.
+    let turns = 64usize;
+    let per_turn = 16usize;
+    let prompt: Vec<i32> = (0..turns * per_turn).map(|_| rng.below(30000) as i32).collect();
+    let mut table = Table::new(
+        &format!("Hotpath — prefix hashing, {turns} turns x {per_turn} tok"),
+        &["variant", "mean ms", "p50", "p90"],
+    );
+    let s = time_ms(3, iters, || {
+        let mut acc = 0u64;
+        for t in 1..=turns {
+            acc ^= prefix_key(&prompt[..t * per_turn]); // full rehash per turn
+        }
+        std::hint::black_box(acc);
+    });
+    table.row(vec![
+        "full-rehash".into(),
+        format!("{:.4}", s.mean),
+        format!("{:.4}", s.p50),
+        format!("{:.4}", s.p90),
+    ]);
+    let s = time_ms(3, iters, || {
+        let mut acc = 0u64;
+        let mut chain = PREFIX_SEED;
+        for t in 0..turns {
+            for &tok in &prompt[t * per_turn..(t + 1) * per_turn] {
+                chain = chain_key(chain, tok); // extend by the suffix only
+            }
+            acc ^= chain;
+        }
+        std::hint::black_box(acc);
+    });
+    table.row(vec![
+        "incremental".into(),
+        format!("{:.4}", s.mean),
+        format!("{:.4}", s.p50),
+        format!("{:.4}", s.p90),
+    ]);
+    table.print();
+    table.append_to("bench_results.txt");
+
+    // --- prefix store insert + longest-match lookup ----------------------
+    // The store sits on the admission path: donation (insert) on every
+    // completion, longest-prefix lookup on every admission.  Population
+    // mirrors a chat mix — many sessions, transcripts growing turn by turn.
+    let sessions = 32usize;
+    let mut table = Table::new(
+        &format!("Hotpath — prefix store, {sessions} sessions x {turns} turns"),
+        &["op", "mean ms", "p50", "p90"],
+    );
+    let rows: Vec<Vec<i32>> = (0..sessions)
+        .map(|_| (0..turns * per_turn).map(|_| rng.below(30000) as i32).collect())
+        .collect();
+    let s = time_ms(3, iters, || {
+        let mut store = PrefixStore::new(64 << 20);
+        for row in &rows {
+            for t in 1..=turns {
+                store.insert(&row[..t * per_turn], "bench", None);
+            }
+        }
+        std::hint::black_box(store.len());
+    });
+    table.row(vec![
+        "insert".into(),
+        format!("{:.4}", s.mean),
+        format!("{:.4}", s.p50),
+        format!("{:.4}", s.p90),
+    ]);
+    let mut store = PrefixStore::new(64 << 20);
+    for row in &rows {
+        for t in 1..=turns {
+            store.insert(&row[..t * per_turn], "bench", None);
+        }
+    }
+    let s = time_ms(3, iters, || {
+        let mut depth = 0usize;
+        for row in &rows {
+            if let Some(hit) = store.lookup(row, "bench") {
+                depth += hit.depth;
+            }
+        }
+        std::hint::black_box(depth);
+    });
+    table.row(vec![
+        "lookup".into(),
+        format!("{:.4}", s.mean),
+        format!("{:.4}", s.p50),
+        format!("{:.4}", s.p90),
     ]);
     table.print();
     table.append_to("bench_results.txt");

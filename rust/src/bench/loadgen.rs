@@ -364,6 +364,27 @@ pub struct MethodReport {
     pub rows_uploaded: f64,
     /// Token rows the delta path kept device-resident inside the window.
     pub rows_skipped: f64,
+    /// Prefix-store lookups that found a donated prefix inside the window
+    /// (scraped, differenced; 0 without `--prefix-cache`).
+    pub prefix_hits: f64,
+    /// Prefix-store lookups that found nothing inside the window.
+    pub prefix_misses: f64,
+    /// Prefix-store LRU evictions under the byte cap inside the window.
+    pub prefix_evictions: f64,
+    /// Entries dropped by tier-swap signature purges inside the window.
+    pub prefix_purges: f64,
+    /// Admissions actually seeded warm from the store inside the window.
+    pub warm_admissions: f64,
+    /// Submissions the router steered by cache affinity (vs plain JSQ)
+    /// inside the window.
+    pub affinity_dispatches: f64,
+    /// hits / (hits + misses) over the window.  `Some` only when
+    /// `--prefix-cache on` ran — absent from the trajectory row otherwise,
+    /// like the `scenario` tag, so warm and cold rows are distinguishable.
+    pub prefix_hit_rate: Option<f64>,
+    /// TTFT p50 of a warm-serving run (ms); `Some` only with
+    /// `--prefix-cache on` — the warm-vs-cold trajectory column.
+    pub warm_ttft_ms: Option<f64>,
     /// Per-worker completions inside the measured window (scraped,
     /// differenced) — the router's load-balance evidence.
     pub per_worker_completed: Vec<(usize, f64)>,
@@ -789,6 +810,17 @@ pub(crate) fn aggregate(
         step_wall_us: ledger_phase("step_wall"),
         rows_uploaded: diff("spa_rows_uploaded_total"),
         rows_skipped: diff("spa_rows_skipped_total"),
+        prefix_hits: diff("spa_prefix_hits_total"),
+        prefix_misses: diff("spa_prefix_misses_total"),
+        prefix_evictions: diff("spa_prefix_evictions_total"),
+        prefix_purges: diff("spa_prefix_purges_total"),
+        warm_admissions: diff("spa_warm_admissions_total"),
+        affinity_dispatches: diff("spa_affinity_dispatch_total"),
+        // Stamped by the run front-end, which knows whether the prefix
+        // store was actually configured (the counters alone cannot say —
+        // an all-miss warm run and a cold run both scrape zeros).
+        prefix_hit_rate: None,
+        warm_ttft_ms: None,
         per_worker_completed,
         // Stamped by the scenario layer after aggregation.
         scenario: None,
@@ -978,8 +1010,24 @@ pub fn run_stub(
     // gate, and the row must say so (the config block alone cannot).
     report.map(|mut r| {
         r.adaptive = adaptive_ran;
+        stamp_prefix_columns(&mut r, policy);
         r
     })
+}
+
+/// Stamp the warm-serving trajectory columns on a report when the prefix
+/// store actually ran (`--prefix-cache on`): windowed hit rate and the
+/// warm TTFT p50 alias.  Lives with the run front-ends, not `aggregate` —
+/// only they know the flag (an all-miss warm run and a cold run scrape
+/// identical zero counters).
+pub(crate) fn stamp_prefix_columns(r: &mut MethodReport, policy: PolicyFlags) {
+    if !policy.prefix_cache {
+        return;
+    }
+    let denom = r.prefix_hits + r.prefix_misses;
+    r.prefix_hit_rate =
+        Some(if denom > 0.0 { r.prefix_hits / denom } else { 0.0 });
+    r.warm_ttft_ms = r.ttft.as_ref().map(|s| s.p50);
 }
 
 /// A stub serving stack (workers + router + TCP frontend) spun up for one
@@ -1042,8 +1090,20 @@ pub(crate) fn spawn_stub_server(
             "unknown policy-stub method '{other}' (want spa|spa-adaptive|spa-fixed)"
         ),
         // Any other label drives the plain session stub (the tests use
-        // descriptive labels like "stub-pipelined").
-        _ => (false, stub::stub_router(workers, &stub)),
+        // descriptive labels like "stub-pipelined").  The prefix-cache
+        // gates ride PolicyFlags into it too — the warm-chat smokes run
+        // method "stub", not a policy lineup.
+        _ => (
+            false,
+            stub::stub_router(
+                workers,
+                &stub::StubConfig {
+                    prefix_cache: policy.prefix_cache,
+                    prefix_mem: policy.prefix_mem,
+                    ..stub.clone()
+                },
+            ),
+        ),
     };
     let listener = TcpListener::bind("127.0.0.1:0").context("bind loadgen port")?;
     let addr = listener.local_addr()?.to_string();
@@ -1283,6 +1343,21 @@ pub fn report_json(r: &MethodReport) -> Json {
             ),
         ),
     ];
+    // Warm-serving rows (`--prefix-cache on`) carry the prefix columns;
+    // cold rows omit them entirely — readers tell warm from cold by key
+    // presence, exactly like the scenario tag below.
+    if let Some(hr) = r.prefix_hit_rate {
+        pairs.push(("prefix_hit_rate", finite_or_null(hr)));
+        pairs.push(("prefix_hits", finite_or_null(r.prefix_hits)));
+        pairs.push(("prefix_misses", finite_or_null(r.prefix_misses)));
+        pairs.push(("prefix_evictions", finite_or_null(r.prefix_evictions)));
+        pairs.push(("prefix_purges", finite_or_null(r.prefix_purges)));
+        pairs.push(("warm_admissions", finite_or_null(r.warm_admissions)));
+        pairs.push(("affinity_dispatches", finite_or_null(r.affinity_dispatches)));
+    }
+    if let Some(w) = r.warm_ttft_ms {
+        pairs.push(("warm_ttft_ms", finite_or_null(w)));
+    }
     // Scenario rows carry their tag + schema-versioned SLO block
     // (DESIGN.md §10); plain load-shape rows omit both keys entirely.
     if let Some(s) = &r.scenario {
@@ -1334,6 +1409,14 @@ pub fn config_json(
             match policy.refit_interval {
                 None => Json::Null,
                 Some(i) => Json::Num(i as f64),
+            },
+        ),
+        ("prefix_cache", Json::Bool(policy.prefix_cache)),
+        (
+            "prefix_mem",
+            match policy.prefix_mem {
+                None => Json::Null,
+                Some(b) => Json::Num(b as f64),
             },
         ),
         ("warmup_s", Json::Num(cfg.warmup.as_secs_f64())),
@@ -1626,8 +1709,25 @@ mod tests {
         // Finite columns stay numeric.
         assert_eq!(back.get("requests").and_then(|x| x.as_usize()), Some(0));
         assert!(back.get("measured_s").and_then(|x| x.as_f64()).is_some());
-        // Plain (non-scenario) rows carry neither tag nor SLO block.
+        // Plain (non-scenario) rows carry neither tag nor SLO block, and
+        // cold rows carry none of the warm-serving columns.
         assert!(back.get("scenario").is_none() && back.get("slo").is_none());
+        assert!(back.get("prefix_hit_rate").is_none());
+        assert!(back.get("warm_ttft_ms").is_none());
+
+        // A warm-stamped report grows the prefix columns (hit rate stays a
+        // number even with zero traffic — 0 hits of 0 lookups reads as 0).
+        let mut warm = aggregate("stub", &cfg, &[], 0, baseline, end);
+        stamp_prefix_columns(
+            &mut warm,
+            PolicyFlags { prefix_cache: true, ..PolicyFlags::default() },
+        );
+        let back = parse(&report_json(&warm).to_string()).unwrap();
+        assert_eq!(back.get("prefix_hit_rate").and_then(|x| x.as_f64()), Some(0.0));
+        assert!(back.get("prefix_hits").is_some());
+        assert!(back.get("warm_admissions").is_some());
+        // No observations → no TTFT summary → the alias column stays out.
+        assert!(back.get("warm_ttft_ms").is_none());
     }
 
     #[test]

@@ -45,8 +45,8 @@ use crate::util::json::{parse, Json};
 use crate::util::rng::Rng;
 
 use super::loadgen::{
-    aggregate, finite_or_null, sleep_until, spawn_stub_server, ArrivalMode, LoadGenConfig,
-    MethodReport, Obs, PolicyFlags,
+    aggregate, finite_or_null, sleep_until, spawn_stub_server, stamp_prefix_columns,
+    ArrivalMode, LoadGenConfig, MethodReport, Obs, PolicyFlags,
 };
 
 /// Schema version stamped into every `slo` block; bump on any breaking
@@ -312,18 +312,28 @@ pub struct TraceEvent {
     pub prompt: String,
     /// Generated-region length (tokens, > 0).
     pub gen_len: usize,
+    /// Stable session key, when the arrival belongs to a conversation
+    /// (prefix-cache affinity keys on it).  Absent in traces recorded
+    /// before the field existed — old files still replay.
+    pub session: Option<String>,
 }
 
 /// Write `events` as the JSON-lines trace format (one
-/// `{"at_ms":..,"prompt":..,"gen_len":..}` object per line).
+/// `{"at_ms":..,"prompt":..,"gen_len":..}` object per line; `session`
+/// rides along only when present, so session-free traces stay
+/// byte-compatible with the original format).
 pub fn write_trace(path: &Path, events: &[TraceEvent]) -> Result<()> {
     let mut text = String::new();
     for e in events {
-        let line = Json::obj(vec![
+        let mut pairs = vec![
             ("at_ms", Json::Num(e.at_ms)),
             ("prompt", Json::str(&e.prompt)),
             ("gen_len", Json::int(e.gen_len as i64)),
-        ]);
+        ];
+        if let Some(s) = &e.session {
+            pairs.push(("session", Json::str(s)));
+        }
+        let line = Json::obj(pairs);
         text.push_str(&line.to_string());
         text.push('\n');
     }
@@ -364,7 +374,8 @@ pub fn read_trace(path: &Path) -> Result<Vec<TraceEvent>> {
             .and_then(|x| x.as_usize())
             .filter(|&g| g > 0)
             .ok_or_else(|| anyhow::anyhow!("{at}: gen_len must be a positive integer"))?;
-        out.push(TraceEvent { at_ms, prompt, gen_len });
+        let session = j.get("session").and_then(|x| x.as_str()).map(String::from);
+        out.push(TraceEvent { at_ms, prompt, gen_len, session });
     }
     out.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
     Ok(out)
@@ -437,7 +448,7 @@ pub(crate) fn synth_mixed_trace(cfg: &LoadGenConfig, qps: f64) -> Vec<TraceEvent
             return out;
         }
         let (prompt, gen_len) = synth_shape(&mut rng);
-        out.push(TraceEvent { at_ms: at, prompt, gen_len });
+        out.push(TraceEvent { at_ms: at, prompt, gen_len, session: None });
     }
 }
 
@@ -464,7 +475,7 @@ pub(crate) fn synth_bursty_trace(cfg: &LoadGenConfig) -> Vec<TraceEvent> {
             let (prompt, gen_len) = synth_shape(&mut rng);
             // Spread burst members by 2 ms so the wire sees a stampede,
             // not a single serialized arrival.
-            out.push(TraceEvent { at_ms: at + 2.0 * i as f64, prompt, gen_len });
+            out.push(TraceEvent { at_ms: at + 2.0 * i as f64, prompt, gen_len, session: None });
         }
     }
 }
@@ -598,6 +609,11 @@ fn spawn_chat(
                     Ok(c) => c,
                     Err(_) => return,
                 };
+                // Stable per-conversation key: seed-scoped so two runs of
+                // the same seed produce identical session identities, and
+                // reused across turns — the handle prefix-cache affinity
+                // routes on.
+                let session_key = format!("chat-{}-{s}", cfg.seed);
                 let mut history = String::new();
                 let mut turn = 0usize;
                 while t0.elapsed() < total {
@@ -612,6 +628,7 @@ fn spawn_chat(
                     let req = GenRequest {
                         prompt: history.clone(),
                         gen_len: Some(CHAT_REPLY_LEN),
+                        session: Some(session_key.clone()),
                         ..GenRequest::default()
                     };
                     let issued_s = t0.elapsed().as_secs_f64();
@@ -761,6 +778,7 @@ fn spawn_replay(
                     let req = GenRequest {
                         prompt: e.prompt,
                         gen_len: Some(e.gen_len),
+                        session: e.session,
                         ..GenRequest::default()
                     };
                     let issued_s = t0.elapsed().as_secs_f64();
@@ -999,6 +1017,7 @@ pub fn run_stub_scenario(
     srv.teardown()?;
     report.map(|mut r| {
         r.adaptive = adaptive_ran;
+        stamp_prefix_columns(&mut r, policy);
         r
     })
 }
@@ -1119,6 +1138,24 @@ mod tests {
         let sorted = read_trace(&path).unwrap();
         assert_eq!(sorted[0].prompt, "a");
         assert_eq!(sorted[1].prompt, "b");
+
+        // Session keys round-trip when present and stay absent otherwise —
+        // pre-session trace files keep replaying unchanged.
+        let with_session = vec![
+            TraceEvent { at_ms: 1.0, prompt: "a".into(), gen_len: 4, session: None },
+            TraceEvent {
+                at_ms: 2.0,
+                prompt: "b".into(),
+                gen_len: 4,
+                session: Some("chat-7-0".into()),
+            },
+        ];
+        write_trace(&path, &with_session).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        assert!(!lines.next().unwrap().contains("session"), "no key when absent");
+        assert!(lines.next().unwrap().contains("\"session\""));
+        assert_eq!(read_trace(&path).unwrap(), with_session, "session round-trips");
 
         // Strictness: malformed lines error with a location, not skip.
         for bad in [

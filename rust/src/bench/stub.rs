@@ -27,8 +27,8 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::cache::{
-    stub_tiers, AdaptiveConfig, AdaptiveController, CachePolicy, CacheState, Exec, PlanCtx,
-    PolicyFlags, SpaPolicy, StepObs,
+    prefix::DEFAULT_CAP_BYTES, stub_tiers, AdaptiveConfig, AdaptiveController, CachePolicy,
+    CacheState, Exec, PlanCtx, PolicyFlags, PrefixStore, SpaPolicy, StepObs,
 };
 use crate::coordinator::ledger::StepLedger;
 use crate::coordinator::metrics::Metrics;
@@ -39,6 +39,36 @@ use crate::model::tokenizer::MASK;
 
 /// Sequence length stub servers are driven at (matches the toy manifests).
 pub const STUB_SEQ_LEN: usize = 128;
+
+/// Modelled prefill throughput: uncovered prompt tokens absorbed per paced
+/// step before a resident commits its first token.  Prefill is modelled
+/// **unconditionally** (with or without `--prefix-cache`) so a warm run and
+/// a cold run differ only in how much prompt the prefix store covers —
+/// that difference is exactly the warm-vs-cold TTFT gap the CI chat smoke
+/// gates on (DESIGN.md §11).
+pub const PREFILL_TOKENS_PER_STEP: usize = 16;
+
+/// Prefix-store signature tag for the plain stub, which has no budget-tier
+/// family to swap (the policy stub tags with the active tier's name).
+const STUB_PREFIX_TAG: &str = "stub";
+
+/// Steps a resident spends prefilling `uncovered` prompt tokens.
+fn prefill_steps_for(uncovered: usize) -> usize {
+    uncovered.saturating_add(PREFILL_TOKENS_PER_STEP - 1) / PREFILL_TOKENS_PER_STEP
+}
+
+/// Mirror the store's counters into a metrics block (assignment, not
+/// increment — the store is the single source of truth, like `CacheState`).
+fn mirror_prefix_counters(metrics: &mut Metrics, store: &PrefixStore) {
+    let c = &store.counters;
+    metrics.prefix_hits = c.hits as u64;
+    metrics.prefix_misses = c.misses as u64;
+    metrics.prefix_evictions = c.evictions as u64;
+    metrics.prefix_purges = c.purges as u64;
+    metrics.warm_admissions = c.warm_admissions as u64;
+    metrics.prefix_hit_depth_sum = c.hit_depth_sum as u64;
+    metrics.prefix_hit_depth_count = c.hit_depth_count as u64;
+}
 
 /// Knobs for one stub worker.
 #[derive(Debug, Clone)]
@@ -52,11 +82,24 @@ pub struct StubConfig {
     /// Optional shared admission log of `(request id, slot index)` — the
     /// session tests assert a cancelled request's freed slot is re-used.
     pub slot_log: Option<Arc<Mutex<Vec<(u64, usize)>>>>,
+    /// Cross-request prefix store (`--prefix-cache on`): finished and
+    /// cancelled residents donate their prompt region; matching admissions
+    /// skip the covered share of modelled prefill (DESIGN.md §11).
+    pub prefix_cache: bool,
+    /// Prefix store byte cap (`--prefix-mem`); `None` = the default cap.
+    pub prefix_mem: Option<usize>,
 }
 
 impl Default for StubConfig {
     fn default() -> Self {
-        StubConfig { batch: 4, step_ms: 2, commits_per_step: 4, slot_log: None }
+        StubConfig {
+            batch: 4,
+            step_ms: 2,
+            commits_per_step: 4,
+            slot_log: None,
+            prefix_cache: false,
+            prefix_mem: None,
+        }
     }
 }
 
@@ -70,6 +113,9 @@ struct Resident {
     committed: usize,
     steps: usize,
     ttft_ms: Option<f64>,
+    /// Paced steps left of modelled prefill before the first commit
+    /// (already net of any warm prefix-store coverage).
+    prefill_steps: usize,
 }
 
 impl Resident {
@@ -107,6 +153,11 @@ pub fn stub_router(workers: usize, cfg: &StubConfig) -> (Router, Vec<JoinHandle<
 fn run_stub(cfg: StubConfig, rx: Receiver<Command>, status: Arc<WorkerStatus>) {
     let batch = cfg.batch.max(1);
     let step = Duration::from_millis(cfg.step_ms);
+    let mut prefix_store: Option<PrefixStore> = if cfg.prefix_cache {
+        Some(PrefixStore::new(cfg.prefix_mem.unwrap_or(DEFAULT_CAP_BYTES)))
+    } else {
+        None
+    };
     let mut metrics = Metrics::default();
     let mut queue: VecDeque<(Request, Sender<ReqEvent>)> = VecDeque::new();
     let mut slots: Vec<Option<Resident>> = (0..batch).map(|_| None).collect();
@@ -164,6 +215,10 @@ fn run_stub(cfg: StubConfig, rx: Receiver<Command>, status: Arc<WorkerStatus>) {
                     let mut m = metrics.clone();
                     m.queue_depth = queue.len();
                     m.active_slots = slots.iter().filter(|s| s.is_some()).count();
+                    if let Some(store) = &prefix_store {
+                        mirror_prefix_counters(&mut m, store);
+                    }
+                    m.affinity_dispatches = status.affinity_dispatches() as u64;
                     let _ = reply.send(m);
                 }
                 Command::Shutdown => return,
@@ -171,7 +226,8 @@ fn run_stub(cfg: StubConfig, rx: Receiver<Command>, status: Arc<WorkerStatus>) {
         }
 
         // Cancellation sweep: queued requests leave without a slot,
-        // resident ones free theirs mid-decode.
+        // resident ones free theirs mid-decode (donating their prompt
+        // region — a cancelled prefix is still a valid warm seed).
         for (req, reply) in std::mem::take(&mut queue) {
             if req.is_cancelled() {
                 let _ = reply.send(ReqEvent::Cancelled { id: req.id, decoded: 0 });
@@ -185,6 +241,15 @@ fn run_stub(cfg: StubConfig, rx: Receiver<Command>, status: Arc<WorkerStatus>) {
             let hit = slot.as_ref().map(|r| r.req.is_cancelled()).unwrap_or(false);
             if hit {
                 let r = slot.take().expect("cancelled resident present");
+                if let Some(store) = &mut prefix_store {
+                    let upto = r.req.prompt_len.min(r.req.tokens.len());
+                    store.insert(
+                        &r.req.tokens[..upto],
+                        STUB_PREFIX_TAG,
+                        r.req.params.session.as_deref(),
+                    );
+                    status.set_prefix_bloom(store.summary());
+                }
                 let _ = r
                     .reply
                     .send(ReqEvent::Cancelled { id: r.req.id, decoded: r.committed });
@@ -213,6 +278,16 @@ fn run_stub(cfg: StubConfig, rx: Receiver<Command>, status: Arc<WorkerStatus>) {
                 .filter(|(_, &t)| t == MASK)
                 .map(|(i, _)| i)
                 .collect();
+            // Warm start: the store's longest matching donated prefix
+            // skips its share of modelled prefill.
+            let head = req.prompt_len.min(req.tokens.len());
+            let mut hit_depth = 0usize;
+            if let Some(store) = &mut prefix_store {
+                if let Some(hit) = store.lookup(&req.tokens[..head], STUB_PREFIX_TAG) {
+                    hit_depth = hit.depth;
+                    store.counters.warm_admissions += 1;
+                }
+            }
             *slot = Some(Resident {
                 req,
                 reply,
@@ -220,6 +295,7 @@ fn run_stub(cfg: StubConfig, rx: Receiver<Command>, status: Arc<WorkerStatus>) {
                 committed: 0,
                 steps: 0,
                 ttft_ms: None,
+                prefill_steps: prefill_steps_for(head - hit_depth),
             });
             admitted = true;
         }
@@ -236,6 +312,13 @@ fn run_stub(cfg: StubConfig, rx: Receiver<Command>, status: Arc<WorkerStatus>) {
         for slot in slots.iter_mut() {
             let done = {
                 let Some(r) = slot.as_mut() else { continue };
+                if r.prefill_steps > 0 {
+                    // Modelled prefill: the uncovered prompt share holds
+                    // the slot before its first commit (decode-step and
+                    // max-steps accounting start after).
+                    r.prefill_steps -= 1;
+                    continue;
+                }
                 r.steps += 1;
                 let ncommit =
                     cfg.commits_per_step.max(1).min(r.masks.len() - r.committed);
@@ -260,6 +343,19 @@ fn run_stub(cfg: StubConfig, rx: Receiver<Command>, status: Arc<WorkerStatus>) {
             };
             if done {
                 let r = slot.take().expect("finished resident present");
+                // Donate the prompt region (stub commits write synthetic
+                // tokens, so only the prompt is stable across turns) and
+                // publish the refreshed affinity bloom *before* Done — the
+                // client's next chat turn must not race a stale bloom.
+                if let Some(store) = &mut prefix_store {
+                    let upto = r.req.prompt_len.min(r.req.tokens.len());
+                    store.insert(
+                        &r.req.tokens[..upto],
+                        STUB_PREFIX_TAG,
+                        r.req.params.session.as_deref(),
+                    );
+                    status.set_prefix_bloom(store.summary());
+                }
                 let latency_ms = r.req.submitted.elapsed().as_secs_f64() * 1e3;
                 let ttft = r.ttft_ms.unwrap_or(f64::NAN);
                 metrics.record_completion(ttft, latency_ms, r.committed);
@@ -408,6 +504,15 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
     } else {
         None
     };
+    // Cross-request prefix store, tagged with the active budget tier's
+    // name so a controller tier swap purges every entry computed under the
+    // old step variant (DESIGN.md §11).
+    let mut prefix_store: Option<PrefixStore> = if cfg.flags.prefix_cache {
+        Some(PrefixStore::new(cfg.flags.prefix_mem.unwrap_or(DEFAULT_CAP_BYTES)))
+    } else {
+        None
+    };
+    let mut last_tier = ctrl.as_ref().map(|c| c.active_tier()).unwrap_or(0);
     let plan_tokens = vec![0i32; batch * STUB_SEQ_LEN];
     // Per-step cost ledger (accumulated across the worker's lifetime) and
     // the reusable host staging buffer the upload accounting memcpys
@@ -468,6 +573,10 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
                     let mut m = metrics.clone();
                     m.queue_depth = queue.len();
                     m.active_slots = residents.iter().filter(|s| s.is_some()).count();
+                    if let Some(store) = &prefix_store {
+                        mirror_prefix_counters(&mut m, store);
+                    }
+                    m.affinity_dispatches = status.affinity_dispatches() as u64;
                     let _ = reply.send(m);
                 }
                 Command::Shutdown => return,
@@ -488,6 +597,19 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
             let hit = slot.as_ref().map(|r| r.req.is_cancelled()).unwrap_or(false);
             if hit {
                 let r = slot.take().expect("cancelled resident present");
+                if let Some(store) = &mut prefix_store {
+                    let tag = ctrl
+                        .as_ref()
+                        .map(|c| c.tier().name.clone())
+                        .unwrap_or_else(|| STUB_PREFIX_TAG.to_string());
+                    let upto = r.req.prompt_len.min(r.req.tokens.len());
+                    store.insert(
+                        &r.req.tokens[..upto],
+                        &tag,
+                        r.req.params.session.as_deref(),
+                    );
+                    status.set_prefix_bloom(store.summary());
+                }
                 let _ = r
                     .reply
                     .send(ReqEvent::Cancelled { id: r.req.id, decoded: r.committed });
@@ -499,6 +621,7 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
 
         // FIFO admission through the production per-slot dirty machinery.
         let mut admitted_rows: Vec<usize> = Vec::new();
+        let mut warm_hits: Vec<(usize, usize)> = Vec::new();
         for (si, slot) in residents.iter_mut().enumerate() {
             if slot.is_some() {
                 continue;
@@ -513,6 +636,20 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
                 .filter(|(_, &t)| t == MASK)
                 .map(|(i, _)| i)
                 .collect();
+            // Warm start: probe under the active tier's signature tag.
+            let head = req.prompt_len.min(req.tokens.len());
+            let mut hit_depth = 0usize;
+            if let Some(store) = &mut prefix_store {
+                let tag = ctrl
+                    .as_ref()
+                    .map(|c| c.tier().name.clone())
+                    .unwrap_or_else(|| STUB_PREFIX_TAG.to_string());
+                if let Some(hit) = store.lookup(&req.tokens[..head], &tag) {
+                    hit_depth = hit.depth;
+                    store.counters.warm_admissions += 1;
+                    warm_hits.push((si, hit.depth));
+                }
+            }
             slots[si] = SlotState::assign(&req, 16);
             *slot = Some(Resident {
                 req,
@@ -521,11 +658,22 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
                 committed: 0,
                 steps: 0,
                 ttft_ms: None,
+                prefill_steps: prefill_steps_for(head - hit_depth),
             });
             admitted_rows.push(si);
         }
         if !admitted_rows.is_empty() {
             state.admit(&admitted_rows, policy.partial_refresh(), &mut slots);
+            // Pre-credit the warm share of partial-service cover *after*
+            // the dirty marking, mirroring `Method::warm_admit_row` — the
+            // heal loop then only re-derives each hit row's cold suffix.
+            let hb = ctrl
+                .as_ref()
+                .map(|c| c.heal_budget())
+                .unwrap_or(STUB_HEAL_BUDGET);
+            for &(si, depth) in &warm_hits {
+                slots[si].cache_cover += depth * hb / STUB_SEQ_LEN;
+            }
         }
 
         // One paced decode step: the production plan → commit sequence
@@ -587,6 +735,12 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
         for (si, slot) in residents.iter_mut().enumerate() {
             let done = {
                 let Some(r) = slot.as_mut() else { continue };
+                if r.prefill_steps > 0 {
+                    // Modelled prefill, net of warm prefix coverage — see
+                    // `PREFILL_TOKENS_PER_STEP`.
+                    r.prefill_steps -= 1;
+                    continue;
+                }
                 r.steps += 1;
                 let ncommit =
                     cfg.commits_per_step.max(1).min(r.masks.len() - r.committed);
@@ -613,6 +767,21 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
             if done {
                 let r = slot.take().expect("finished resident present");
                 slots[si] = SlotState::empty();
+                // Donate under the active tier's tag, publishing the bloom
+                // before Done (see the plain stub for why).
+                if let Some(store) = &mut prefix_store {
+                    let tag = ctrl
+                        .as_ref()
+                        .map(|c| c.tier().name.clone())
+                        .unwrap_or_else(|| STUB_PREFIX_TAG.to_string());
+                    let upto = r.req.prompt_len.min(r.req.tokens.len());
+                    store.insert(
+                        &r.req.tokens[..upto],
+                        &tag,
+                        r.req.params.session.as_deref(),
+                    );
+                    status.set_prefix_bloom(store.summary());
+                }
                 let latency_ms = r.req.submitted.elapsed().as_secs_f64() * 1e3;
                 let ttft = r.ttft_ms.unwrap_or(f64::NAN);
                 metrics.record_completion(ttft, latency_ms, r.committed);
@@ -645,6 +814,19 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
                 proxy_drift: cfg.proxy_drift.as_deref(),
             });
         }
+        // A controller tier swap invalidates every prefix entry donated
+        // under the old step variant — purge to the new signature so a
+        // warm admission can never seed stale-tier rows.
+        if let Some(c) = &ctrl {
+            let tier = c.active_tier();
+            if tier != last_tier {
+                last_tier = tier;
+                if let Some(store) = &mut prefix_store {
+                    store.purge_except(&c.tier().name);
+                    status.set_prefix_bloom(store.summary());
+                }
+            }
+        }
         // The stubbed "device" cost is the step pacing delay; attribute it
         // to `execute` and close out this step's wall span (host work
         // measured + the simulated device time).
@@ -661,6 +843,10 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
         metrics.schedule_refits = ctrl.as_ref().map(|c| c.refits()).unwrap_or(0);
         metrics.tier_switches = ctrl.as_ref().map(|c| c.switches()).unwrap_or(0);
         metrics.budget_tier = ctrl.as_ref().map(|c| c.active_tier()).unwrap_or(0);
+        if let Some(store) = &prefix_store {
+            mirror_prefix_counters(&mut metrics, store);
+        }
+        metrics.affinity_dispatches = status.affinity_dispatches() as u64;
         metrics.ledger = ledger_total.clone();
         next_step = Instant::now() + step;
     }

@@ -18,6 +18,7 @@ use super::adaptive::{
     discover_tiers, heal_budget_for, AdaptiveConfig, AdaptiveController, StepObs,
 };
 use super::policy::{CachePolicy, Exec, PlanCtx};
+use super::prefix::{PrefixCounters, PrefixStore, DEFAULT_CAP_BYTES};
 use super::state::CacheState;
 use super::{MethodSpec, PolicyFlags};
 use crate::coordinator::ledger::{timed, StepLedger};
@@ -152,6 +153,12 @@ pub struct Method {
     tok_buf: Option<PjRtBuffer>,
     /// Host mirror + staging for the delta-upload planner.
     tok_delta: TokenDelta,
+    /// Cross-request prefix store (`--prefix-cache on`): completed slots
+    /// donate their token prefixes, matching admissions seed warm through
+    /// [`Method::warm_admit_row`].  Entries are tagged with the active
+    /// step variant's name — the tier family member that produced them —
+    /// and purged on tier swaps (DESIGN.md §11).
+    prefix: Option<PrefixStore>,
 }
 
 impl Method {
@@ -187,6 +194,7 @@ impl Method {
             last_conf: Vec::new(),
             tok_buf: None,
             tok_delta: TokenDelta::default(),
+            prefix: None,
         })
     }
 
@@ -214,7 +222,60 @@ impl Method {
             };
             self.enable_adaptive(engine, cfg)?;
         }
+        if flags.prefix_cache {
+            self.prefix =
+                Some(PrefixStore::new(flags.prefix_mem.unwrap_or(DEFAULT_CAP_BYTES)));
+        }
         Ok(())
+    }
+
+    /// Donate a finished (or cancelled-after-progress) row's token prefix
+    /// to the prefix store, tagged with the active step variant — a later
+    /// admission sharing the prefix (a chat follow-up turn resubmitting
+    /// its history) seeds warm from it.  No-op without `--prefix-cache`.
+    pub fn donate_prefix(&mut self, tokens: &[i32], session: Option<&str>) {
+        let tag = self.step_var.info.name.clone();
+        if let Some(store) = &mut self.prefix {
+            store.insert(tokens, &tag, session);
+        }
+    }
+
+    /// Consult the prefix store for the longest donated prefix matching a
+    /// freshly admitted row and seed the slot warm: the matched depth
+    /// pre-credits the slot's partial-service cover, so the spa heal loop
+    /// only services the cold suffix (the token bytes themselves ride the
+    /// delta-upload path unchanged — [`TokenDelta`] patches rows, and the
+    /// matched prefix is byte-identical by construction).  Returns the hit
+    /// depth; `None` without a store or on a miss.
+    pub fn warm_admit_row(
+        &mut self,
+        row_tokens: &[i32],
+        prompt_len: usize,
+        slot: &mut SlotState,
+    ) -> Option<usize> {
+        let tag = self.step_var.info.name.clone();
+        let heal_budget = self.heal_budget;
+        let (_, n, _) = self.geometry();
+        let store = self.prefix.as_mut()?;
+        let head = &row_tokens[..prompt_len.min(row_tokens.len())];
+        let hit = store.lookup(head, &tag)?;
+        // A dirty row needs ~`heal_budget` covered steps; credit the warm
+        // fraction so only the suffix is left to heal.
+        slot.cache_cover += hit.depth * heal_budget / n.max(1);
+        store.counters.warm_admissions += 1;
+        Some(hit.depth)
+    }
+
+    /// Prefix-store observability counters, for the worker's metrics
+    /// mirror (`None` without `--prefix-cache`).
+    pub fn prefix_counters(&self) -> Option<PrefixCounters> {
+        self.prefix.as_ref().map(|s| s.counters)
+    }
+
+    /// Affinity bloom over the store's resident prefixes, for the worker's
+    /// load-gauge publish (`None` without `--prefix-cache`).
+    pub fn prefix_summary(&self) -> Option<u64> {
+        self.prefix.as_ref().map(|s| s.summary())
     }
 
     /// Attach the adaptive budget controller: discover the hot-swappable
@@ -345,13 +406,23 @@ impl Method {
         // change between steps.
         let mut heal_budget = self.heal_budget;
         let mut sched_per_step = self.row_refresh_per_step;
+        let mut swapped = false;
         if let Some(ctrl) = &self.adaptive {
             let tier = ctrl.tier();
             if tier.name != self.step_var.info.name {
                 self.step_var = engine.load_variant(&tier.name)?;
+                swapped = true;
             }
             heal_budget = ctrl.heal_budget();
             sched_per_step = ctrl.row_refresh_per_step();
+        }
+        if swapped {
+            // Tier swap invalidates every donated row computed under the old
+            // step variant: purge all prefix entries whose tag no longer
+            // matches so a warm admission can never seed stale-signature rows.
+            if let Some(store) = &mut self.prefix {
+                store.purge_except(&self.step_var.info.name);
+            }
         }
 
         let plan = {

@@ -36,6 +36,7 @@ pub mod manual;
 pub mod method;
 pub mod multistep;
 pub mod policy;
+pub mod prefix;
 pub mod spa;
 pub mod state;
 pub mod vanilla;
@@ -44,6 +45,7 @@ pub use adaptive::{
     discover_tiers, heal_budget_for, stub_tiers, AdaptiveConfig, AdaptiveController,
     BudgetTier, StepObs,
 };
+pub use prefix::{PrefixCounters, PrefixHit, PrefixStore};
 pub use manual::{IndexPolicy, ManualPolicy};
 pub use method::{
     runtime_input_prefix, update_confidence, DeltaUpload, Method, StepOut, TokenDelta,
@@ -79,6 +81,14 @@ pub struct PolicyFlags {
     /// `--refit-interval N`: decode steps between online schedule refits
     /// (`None` = the controller default).
     pub refit_interval: Option<usize>,
+    /// `--prefix-cache on`: keep a per-worker [`PrefixStore`] of donated
+    /// token prefixes and seed matching admissions warm (cross-request
+    /// reuse + cache-affinity routing, DESIGN.md §11).  Default off —
+    /// cold-start baselines stay the recorded default.
+    pub prefix_cache: bool,
+    /// `--prefix-mem BYTES`: prefix-store byte cap per worker
+    /// (`None` = [`prefix::DEFAULT_CAP_BYTES`]).
+    pub prefix_mem: Option<usize>,
 }
 
 impl Default for PolicyFlags {
@@ -89,13 +99,16 @@ impl Default for PolicyFlags {
             adaptive: false,
             row_refresh_per_step: None,
             refit_interval: None,
+            prefix_cache: false,
+            prefix_mem: None,
         }
     }
 }
 
 impl PolicyFlags {
     /// Parse `--partial-refresh on|off`, `--refresh-interval N`,
-    /// `--adaptive on|off`, `--row-refresh N` and `--refit-interval N`.
+    /// `--adaptive on|off`, `--row-refresh N`, `--refit-interval N`,
+    /// `--prefix-cache on|off` and `--prefix-mem BYTES`.
     pub fn from_args(args: &Args) -> Result<PolicyFlags> {
         let parse_gate = |key: &str, default: bool| -> Result<bool> {
             match args.get(key) {
@@ -118,6 +131,8 @@ impl PolicyFlags {
             adaptive,
             row_refresh_per_step: args.strict_count("row-refresh")?,
             refit_interval: args.strict_count("refit-interval")?,
+            prefix_cache: parse_gate("prefix-cache", false)?,
+            prefix_mem: args.strict_count("prefix-mem")?,
         })
     }
 }
@@ -301,5 +316,12 @@ mod tests {
         assert!(PolicyFlags::from_args(&parse("--adaptive onn")).is_err());
         assert!(PolicyFlags::from_args(&parse("--row-refresh 0")).is_err());
         assert!(PolicyFlags::from_args(&parse("--refit-interval x")).is_err());
+        // Prefix-cache gates: same on|off grammar, byte cap parses strictly.
+        let p = PolicyFlags::from_args(&parse("--prefix-cache on --prefix-mem 65536")).unwrap();
+        assert!(p.prefix_cache);
+        assert_eq!(p.prefix_mem, Some(65536));
+        assert!(!PolicyFlags::from_args(&parse("")).unwrap().prefix_cache, "default off");
+        assert!(PolicyFlags::from_args(&parse("--prefix-cache yes!")).is_err());
+        assert!(PolicyFlags::from_args(&parse("--prefix-mem 8M")).is_err());
     }
 }

@@ -1,0 +1,448 @@
+//! Prefix-keyed hidden-state store + cache-affinity summaries (DESIGN.md §11).
+//!
+//! Cross-request reuse for the warm-serving regime: when a slot completes
+//! (or is cancelled after committing work), the worker donates its token
+//! prefix here; the next admission with a matching prefix — a chat turn
+//! resubmitting its accumulated history, a shared system prompt — is
+//! seeded warm instead of healing the whole row from cold.
+//!
+//! Three design points:
+//!
+//! * **Incremental hash chain.**  Keys are a left fold of a SplitMix64
+//!   finalizer over the token prefix (`chain_key`), so a chat turn's key
+//!   extends its previous turn's key in O(new tokens) and lookup computes
+//!   every prefix depth's key in one forward pass.  The map is keyed by
+//!   the chain value; entries store the prefix itself, so a (vanishingly
+//!   unlikely) 64-bit collision degrades to a miss, never a wrong seed.
+//! * **Tag invalidation (SpinelDB-style).**  Every entry carries the cache
+//!   signature tag of the step variant that produced it (the adaptive
+//!   controller's active tier name).  A tier swap changes the cache
+//!   geometry, so the swap site calls [`PrefixStore::purge_except`] —
+//!   lookups additionally verify the tag, so even a racing donation can
+//!   never serve a stale-signature hit.
+//! * **Bounded + LRU.**  The store holds at most `cap_bytes` of prefix
+//!   tokens (default 8 MiB, `--prefix-mem`); inserts evict
+//!   least-recently-used entries (hits refresh recency) and the byte
+//!   accounting is an invariant the property test below asserts after
+//!   every operation.
+//!
+//! The router's affinity dispatch rides on [`PrefixStore::summary`]: a
+//! 64-bit bloom over each entry's *head* key (first [`AFFINITY_HEAD`]
+//! tokens) and session key, published in the worker's load gauge.  A
+//! request computes the same two bits ([`request_bits`]) — head-only, not
+//! every depth, so a long prompt cannot saturate the filter.
+
+use std::collections::HashMap;
+
+/// Seed for the hash chain (the key of the empty prefix).
+pub const PREFIX_SEED: u64 = 0x5AFE_CAC4E_5EED ^ 0x9E37_79B9_7F4A_7C15;
+
+/// How many leading tokens feed the affinity bloom.  Head-keying keeps the
+/// 64-bit filter sparse: one bit per stored conversation head instead of
+/// one per prefix depth (a 96-token prompt would set ~77% of the bits and
+/// make affinity vacuous).
+pub const AFFINITY_HEAD: usize = 16;
+
+/// Shortest prefix worth storing or matching: seeding a handful of tokens
+/// saves less than the bookkeeping costs.
+pub const MIN_DEPTH: usize = 4;
+
+/// Default store budget (`--prefix-mem` overrides).
+pub const DEFAULT_CAP_BYTES: usize = 8 << 20;
+
+/// Fixed per-entry overhead charged against the byte cap (map slot, key,
+/// tag string header, LRU clock) on top of the 4 bytes/token payload.
+const ENTRY_OVERHEAD: usize = 96;
+
+/// Extend a prefix chain key by one token (SplitMix64 finalizer).
+#[inline]
+pub fn chain_key(prev: u64, tok: i32) -> u64 {
+    let mut z = prev ^ (tok as u32 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Chain key of a whole token prefix (left fold of [`chain_key`]).
+pub fn prefix_key(tokens: &[i32]) -> u64 {
+    tokens.iter().fold(PREFIX_SEED, |k, &t| chain_key(k, t))
+}
+
+/// Chain key over a session identifier (byte-wise fold, same chain).
+pub fn session_key(session: &str) -> u64 {
+    session.bytes().fold(PREFIX_SEED ^ 0x5E55, |k, b| chain_key(k, b as i32))
+}
+
+/// One bloom bit for a well-mixed key.
+#[inline]
+pub fn bloom_bit(key: u64) -> u64 {
+    1u64 << (key & 63)
+}
+
+/// The affinity bits a *request* advertises: its head-prefix bit plus (when
+/// the request belongs to a session) its session bit.  Zero when the prompt
+/// is shorter than [`MIN_DEPTH`] — too shallow to seed, so no affinity.
+pub fn request_bits(tokens: &[i32], session: Option<&str>) -> u64 {
+    if tokens.len() < MIN_DEPTH {
+        return 0;
+    }
+    let head = &tokens[..tokens.len().min(AFFINITY_HEAD)];
+    bloom_bit(prefix_key(head)) | session.map(|s| bloom_bit(session_key(s))).unwrap_or(0)
+}
+
+/// A successful longest-prefix match: the admitted row's first `depth`
+/// tokens are byte-identical to a donated prefix with the live cache tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixHit {
+    pub depth: usize,
+    pub key: u64,
+}
+
+/// Store observability counters, mirrored into `Metrics` by the owner
+/// (`spa_prefix_{hits,misses,evictions,purges}_total`,
+/// `spa_prefix_hit_depth_{sum,count}`, `spa_warm_admissions_total`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixCounters {
+    pub hits: usize,
+    pub misses: usize,
+    pub evictions: usize,
+    pub purges: usize,
+    /// Admissions actually seeded warm by the scheduler (a hit the caller
+    /// converted into slot state, not just a probe).
+    pub warm_admissions: usize,
+    pub hit_depth_sum: usize,
+    pub hit_depth_count: usize,
+}
+
+#[derive(Debug)]
+struct Entry {
+    tokens: Vec<i32>,
+    tag: String,
+    /// LRU clock value at last insert/hit.
+    seq: u64,
+    /// Affinity bits this entry contributes to `summary()`.
+    bits: u64,
+}
+
+impl Entry {
+    fn bytes(&self) -> usize {
+        self.tokens.len() * 4 + self.tag.len() + ENTRY_OVERHEAD
+    }
+}
+
+/// Per-worker LRU store of donated token prefixes keyed by chain key.
+///
+/// Pure host state: the stub workers and the engine-backed `Method` both
+/// own one, so warm-vs-cold comparisons record artifact-free.
+#[derive(Debug)]
+pub struct PrefixStore {
+    map: HashMap<u64, Entry>,
+    cap_bytes: usize,
+    bytes: usize,
+    clock: u64,
+    pub counters: PrefixCounters,
+}
+
+impl PrefixStore {
+    pub fn new(cap_bytes: usize) -> Self {
+        PrefixStore {
+            map: HashMap::new(),
+            cap_bytes,
+            bytes: 0,
+            clock: 0,
+            counters: PrefixCounters::default(),
+        }
+    }
+
+    pub fn cap_bytes(&self) -> usize {
+        self.cap_bytes
+    }
+
+    /// Resident payload bytes (token prefixes + fixed per-entry overhead).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Donate a completed/evicted row's token prefix under cache tag `tag`.
+    /// Prefixes below [`MIN_DEPTH`] (or above the whole cap) are dropped.
+    pub fn insert(&mut self, tokens: &[i32], tag: &str, session: Option<&str>) {
+        if tokens.len() < MIN_DEPTH {
+            return;
+        }
+        self.clock += 1;
+        let head = &tokens[..tokens.len().min(AFFINITY_HEAD)];
+        let bits =
+            bloom_bit(prefix_key(head)) | session.map(|s| bloom_bit(session_key(s))).unwrap_or(0);
+        let entry = Entry { tokens: tokens.to_vec(), tag: tag.to_string(), seq: self.clock, bits };
+        if entry.bytes() > self.cap_bytes {
+            return; // can never fit; don't churn the whole store for it
+        }
+        let key = prefix_key(tokens);
+        if let Some(old) = self.map.insert(key, entry) {
+            self.bytes -= old.bytes();
+        }
+        self.bytes += self.map[&key].bytes();
+        while self.bytes > self.cap_bytes {
+            self.evict_lru();
+        }
+    }
+
+    fn evict_lru(&mut self) {
+        if let Some(&victim) = self.map.iter().min_by_key(|(_, e)| e.seq).map(|(k, _)| k) {
+            let e = self.map.remove(&victim).expect("victim resident");
+            self.bytes -= e.bytes();
+            self.counters.evictions += 1;
+        }
+    }
+
+    /// Longest stored prefix of `tokens` under the live cache tag.  Walks
+    /// the incrementally-computed depth keys deepest-first and verifies the
+    /// stored tokens byte-for-byte, so a hit is always safe to seed from.
+    /// Counts one hit (with depth) or one miss per call; a hit refreshes
+    /// the entry's LRU recency.
+    pub fn lookup(&mut self, tokens: &[i32], tag: &str) -> Option<PrefixHit> {
+        // keys[d] = chain key of tokens[..d]
+        let mut keys = Vec::with_capacity(tokens.len() + 1);
+        let mut k = PREFIX_SEED;
+        keys.push(k);
+        for &t in tokens {
+            k = chain_key(k, t);
+            keys.push(k);
+        }
+        for depth in (MIN_DEPTH..=tokens.len()).rev() {
+            let key = keys[depth];
+            if let Some(e) = self.map.get_mut(&key) {
+                if e.tag == tag && e.tokens.len() == depth && e.tokens[..] == tokens[..depth] {
+                    self.clock += 1;
+                    e.seq = self.clock;
+                    self.counters.hits += 1;
+                    self.counters.hit_depth_sum += depth;
+                    self.counters.hit_depth_count += 1;
+                    return Some(PrefixHit { depth, key });
+                }
+            }
+        }
+        self.counters.misses += 1;
+        None
+    }
+
+    /// SpinelDB-style tag invalidation: drop every entry whose cache tag is
+    /// not `keep` (the controller's new tier).  Returns the purge count.
+    pub fn purge_except(&mut self, keep: &str) -> usize {
+        let before = self.map.len();
+        self.map.retain(|_, e| e.tag == keep);
+        self.bytes = self.map.values().map(Entry::bytes).sum();
+        let purged = before - self.map.len();
+        self.counters.purges += purged;
+        purged
+    }
+
+    /// 64-bit affinity bloom over resident entries (head + session bits),
+    /// published in the worker's load gauge for `Router::submit`.
+    pub fn summary(&self) -> u64 {
+        self.map.values().fold(0u64, |acc, e| acc | e.bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn chain_key_extends_incrementally() {
+        let toks: Vec<i32> = (0..64).map(|i| i * 7 % 30).collect();
+        // Extending the fold one token at a time equals rehashing from
+        // scratch at every depth — the O(new tokens) chat-turn property.
+        let mut k = PREFIX_SEED;
+        for d in 0..toks.len() {
+            assert_eq!(k, prefix_key(&toks[..d]));
+            k = chain_key(k, toks[d]);
+        }
+        assert_eq!(k, prefix_key(&toks));
+        // And keys separate: flipping one early token changes the key.
+        let mut other = toks.clone();
+        other[0] ^= 1;
+        assert_ne!(prefix_key(&other), prefix_key(&toks));
+    }
+
+    #[test]
+    fn lookup_returns_longest_verified_match() {
+        let mut s = PrefixStore::new(DEFAULT_CAP_BYTES);
+        let turn1: Vec<i32> = (0..20).collect();
+        let turn2: Vec<i32> = (0..28).collect(); // turn1 + reply
+        s.insert(&turn1, "tier_a", Some("sess"));
+        s.insert(&turn2[..8], "tier_a", Some("sess"));
+        let hit = s.lookup(&turn2, "tier_a").expect("prefix resident");
+        assert_eq!(hit.depth, 20, "deepest stored prefix wins");
+        assert_eq!(hit.key, prefix_key(&turn1));
+        // Wrong tag: same tokens, but the cache signature changed.
+        assert_eq!(s.lookup(&turn2, "tier_b"), None);
+        // Too-shallow prompts never match.
+        assert_eq!(s.lookup(&turn2[..MIN_DEPTH - 1], "tier_a"), None);
+        assert_eq!(s.counters.hits, 1);
+        assert_eq!(s.counters.misses, 2);
+        assert_eq!(s.counters.hit_depth_sum, 20);
+    }
+
+    #[test]
+    fn lru_eviction_respects_recency_and_cap() {
+        // Cap sized for exactly two 16-token entries.
+        let one = 16 * 4 + 1 + ENTRY_OVERHEAD;
+        let mut s = PrefixStore::new(2 * one);
+        let mk = |base: i32| (base..base + 16).collect::<Vec<i32>>();
+        s.insert(&mk(0), "t", None);
+        s.insert(&mk(100), "t", None);
+        assert_eq!(s.len(), 2);
+        // Touch the older entry, then overflow: the untouched one dies.
+        assert!(s.lookup(&mk(0), "t").is_some());
+        s.insert(&mk(200), "t", None);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.counters.evictions, 1);
+        assert!(s.lookup(&mk(0), "t").is_some(), "recently hit entry survives");
+        assert!(s.lookup(&mk(100), "t").is_none(), "LRU entry evicted");
+        assert!(s.lookup(&mk(200), "t").is_some());
+        assert!(s.bytes() <= s.cap_bytes());
+    }
+
+    #[test]
+    fn purge_drops_exactly_the_stale_tags() {
+        let mut s = PrefixStore::new(DEFAULT_CAP_BYTES);
+        s.insert(&[1, 2, 3, 4, 5], "lo", None);
+        s.insert(&[9, 8, 7, 6, 5], "lo", None);
+        s.insert(&[1, 2, 3, 4, 5, 6], "hi", None);
+        assert_eq!(s.purge_except("hi"), 2);
+        assert_eq!(s.counters.purges, 2);
+        assert_eq!(s.len(), 1);
+        assert!(s.map.values().all(|e| e.tag == "hi"));
+        assert_eq!(s.lookup(&[1, 2, 3, 4, 5], "lo"), None, "stale tag never hits");
+        assert!(s.lookup(&[1, 2, 3, 4, 5, 6], "hi").is_some());
+        assert_eq!(s.bytes(), s.map.values().map(Entry::bytes).sum::<usize>());
+    }
+
+    #[test]
+    fn summary_bits_cover_requests_head_and_session() {
+        let mut s = PrefixStore::new(DEFAULT_CAP_BYTES);
+        assert_eq!(s.summary(), 0);
+        let toks: Vec<i32> = (0..40).collect();
+        s.insert(&toks, "t", Some("sess-1"));
+        let bloom = s.summary();
+        // A follow-up turn shares the head-16 tokens, so its request bits
+        // are covered even though its full prefix key differs.
+        let next: Vec<i32> = (0..48).collect();
+        let bits = request_bits(&next, Some("sess-1"));
+        assert_ne!(bits, 0);
+        assert_eq!(bloom & bits, bits, "bloom covers head+session bits");
+        // Shallow prompts advertise nothing.
+        assert_eq!(request_bits(&toks[..2], Some("sess-1")), 0);
+    }
+
+    /// ISSUE-8 satellite: randomized donate/lookup/purge/evict traces.
+    /// (a) every hit's seed bytes equal the query prefix under the live tag
+    ///     — so a warm-seeded slot stages exactly what a cold recompute of
+    ///     those positions would stage; (b) a tag purge leaves no
+    ///     stale-signature entry resident and no later lookup ever hits a
+    ///     stale tag; (c) resident bytes never exceed the configured cap.
+    #[test]
+    fn prefix_store_trace_invariants() {
+        #[derive(Debug, Clone)]
+        enum Op {
+            Insert { toks: Vec<i32>, tag: usize, session: Option<u8> },
+            Lookup { toks: Vec<i32>, tag: usize },
+            TierSwap { tag: usize },
+        }
+        const TAGS: [&str; 3] = ["stub__spa_lo", "stub__spa_mid", "stub__spa_hi"];
+        let gen = |r: &mut Rng| {
+            let cap = 1 + r.range(1, 8) * 200; // tight caps force evictions
+            let n_ops = r.range(10, 60);
+            let ops: Vec<Op> = (0..n_ops)
+                .map(|_| {
+                    // Small token alphabet + shared stems make prefix
+                    // collisions between distinct donations likely.
+                    let len = r.range(1, 24);
+                    let stem = r.below(3) as i32;
+                    let toks: Vec<i32> =
+                        (0..len).map(|i| stem + (i as i32 % 4) + r.below(2) as i32).collect();
+                    let tag = r.range(0, TAGS.len());
+                    match r.below(10) {
+                        0..=4 => Op::Insert { toks, tag, session: Some(r.below(4) as u8) },
+                        5..=8 => Op::Lookup { toks, tag },
+                        _ => Op::TierSwap { tag },
+                    }
+                })
+                .collect();
+            (cap, ops)
+        };
+        check("prefix_store_trace_invariants", gen, |(cap, ops)| {
+            let mut store = PrefixStore::new(*cap);
+            // Model: everything ever donated, as (tag, tokens) — hits must
+            // be sound against it (inserted ∧ not-stale), even though the
+            // model ignores eviction (eviction only loses hits, never
+            // fabricates them).
+            let mut donated: Vec<(usize, Vec<i32>)> = Vec::new();
+            let mut live_tags: Vec<bool> = vec![true; TAGS.len()];
+            for op in ops {
+                match op {
+                    Op::Insert { toks, tag, session } => {
+                        let sess = session.map(|s| format!("s{s}"));
+                        store.insert(toks, TAGS[*tag], sess.as_deref());
+                        if toks.len() >= MIN_DEPTH {
+                            donated.push((*tag, toks.clone()));
+                        }
+                    }
+                    Op::Lookup { toks, tag } => {
+                        if let Some(hit) = store.lookup(toks, TAGS[*tag]) {
+                            if !live_tags[*tag] {
+                                return Err(format!("hit on purged tag {}", TAGS[*tag]));
+                            }
+                            if hit.depth < MIN_DEPTH || hit.depth > toks.len() {
+                                return Err(format!("bad hit depth {}", hit.depth));
+                            }
+                            // (a) the seed is byte-identical to what a cold
+                            // recompute would produce for those positions:
+                            // some donation under this tag equals the query
+                            // prefix exactly.
+                            let seeded = &toks[..hit.depth];
+                            if !donated.iter().any(|(t, d)| t == tag && d[..] == *seeded) {
+                                return Err(format!(
+                                    "hit depth {} has no matching donation",
+                                    hit.depth
+                                ));
+                            }
+                        }
+                    }
+                    Op::TierSwap { tag } => {
+                        store.purge_except(TAGS[*tag]);
+                        for (i, live) in live_tags.iter_mut().enumerate() {
+                            *live = i == *tag;
+                        }
+                        // Purged donations can never legally hit again.
+                        donated.retain(|(t, _)| t == tag);
+                        // (b) nothing stale stays resident.
+                        if store.map.values().any(|e| e.tag != TAGS[*tag]) {
+                            return Err("stale-tag entry resident after purge".into());
+                        }
+                    }
+                }
+                // (c) byte cap + accounting invariants, after every op.
+                if store.bytes() > store.cap_bytes() {
+                    return Err(format!("bytes {} > cap {}", store.bytes(), store.cap_bytes()));
+                }
+                let actual: usize = store.map.values().map(Entry::bytes).sum();
+                if actual != store.bytes() {
+                    return Err(format!("byte accounting drift {actual} vs {}", store.bytes()));
+                }
+            }
+            Ok(())
+        });
+    }
+}

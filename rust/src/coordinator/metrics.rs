@@ -68,6 +68,26 @@ pub struct Metrics {
     /// 0 with `--adaptive off`).  Merged as the **max** across workers —
     /// summing tier indices would be meaningless.
     pub budget_tier: usize,
+    /// Prefix-store lookups that matched a donated prefix (DESIGN.md §11).
+    pub prefix_hits: u64,
+    /// Prefix-store lookups that found nothing reusable.
+    pub prefix_misses: u64,
+    /// Prefix-store entries dropped by LRU byte-cap pressure.
+    pub prefix_evictions: u64,
+    /// Prefix-store entries dropped by cache-signature tag invalidation
+    /// (adaptive tier swaps).
+    pub prefix_purges: u64,
+    /// Admissions actually seeded warm from the prefix store.
+    pub warm_admissions: u64,
+    /// Sum of matched prefix depths (tokens) across hits — with
+    /// `prefix_hit_depth_count` this exports the hit-depth distribution
+    /// the Prometheus histogram way (`_sum`/`_count` pair).
+    pub prefix_hit_depth_sum: u64,
+    /// Number of hit-depth observations (== `prefix_hits`; kept separate
+    /// so the pair reads like a standard histogram).
+    pub prefix_hit_depth_count: u64,
+    /// Dispatches to this worker the router decided by prefix affinity.
+    pub affinity_dispatches: u64,
     /// Per-step hot-path cost ledger: μs per phase (upload / execute /
     /// collect / sample / serialize / step_wall) plus the delta-upload row
     /// counters, exported as `spa_step_ledger_us{phase="..."}` and
@@ -107,6 +127,14 @@ impl Default for Metrics {
             schedule_refits: 0,
             tier_switches: 0,
             budget_tier: 0,
+            prefix_hits: 0,
+            prefix_misses: 0,
+            prefix_evictions: 0,
+            prefix_purges: 0,
+            warm_admissions: 0,
+            prefix_hit_depth_sum: 0,
+            prefix_hit_depth_count: 0,
+            affinity_dispatches: 0,
             ledger: StepLedger::default(),
             ttft: Welford::default(),
             latency: Welford::default(),
@@ -187,6 +215,14 @@ impl Metrics {
         // Tier indices don't sum: the aggregate reports the highest
         // budget tier any worker is running at.
         self.budget_tier = self.budget_tier.max(other.budget_tier);
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_misses += other.prefix_misses;
+        self.prefix_evictions += other.prefix_evictions;
+        self.prefix_purges += other.prefix_purges;
+        self.warm_admissions += other.warm_admissions;
+        self.prefix_hit_depth_sum += other.prefix_hit_depth_sum;
+        self.prefix_hit_depth_count += other.prefix_hit_depth_count;
+        self.affinity_dispatches += other.affinity_dispatches;
         self.ledger.add(&other.ledger);
         self.queue_depth += other.queue_depth;
         self.active_slots += other.active_slots;
@@ -214,6 +250,14 @@ impl Metrics {
             ("spa_schedule_refits_total", self.schedule_refits as f64),
             ("spa_tier_switches_total", self.tier_switches as f64),
             ("spa_budget_tier", self.budget_tier as f64),
+            ("spa_prefix_hits_total", self.prefix_hits as f64),
+            ("spa_prefix_misses_total", self.prefix_misses as f64),
+            ("spa_prefix_evictions_total", self.prefix_evictions as f64),
+            ("spa_prefix_purges_total", self.prefix_purges as f64),
+            ("spa_warm_admissions_total", self.warm_admissions as f64),
+            ("spa_prefix_hit_depth_sum", self.prefix_hit_depth_sum as f64),
+            ("spa_prefix_hit_depth_count", self.prefix_hit_depth_count as f64),
+            ("spa_affinity_dispatch_total", self.affinity_dispatches as f64),
             ("spa_rows_uploaded_total", self.ledger.rows_uploaded as f64),
             ("spa_rows_skipped_total", self.ledger.rows_skipped as f64),
             ("spa_queue_depth", self.queue_depth as f64),
@@ -345,6 +389,39 @@ mod tests {
         assert!(text.contains("spa_budget_tier 0"));
         assert!(text.contains("spa_cancelled_total 0"));
         assert!(text.contains("spa_stream_frames_total 0"));
+        assert!(text.contains("spa_prefix_hits_total 0"));
+        assert!(text.contains("spa_warm_admissions_total 0"));
+        assert!(text.contains("spa_affinity_dispatch_total 0"));
+    }
+
+    #[test]
+    fn prefix_counters_merge_and_scrape() {
+        let mut a = Metrics::default();
+        a.prefix_hits = 3;
+        a.prefix_misses = 1;
+        a.prefix_evictions = 2;
+        a.prefix_purges = 4;
+        a.warm_admissions = 3;
+        a.prefix_hit_depth_sum = 60;
+        a.prefix_hit_depth_count = 3;
+        a.affinity_dispatches = 5;
+        let mut b = Metrics::default();
+        b.prefix_hits = 1;
+        b.prefix_hit_depth_sum = 12;
+        b.prefix_hit_depth_count = 1;
+        a.merge(&b);
+        assert_eq!(a.prefix_hits, 4);
+        assert_eq!(a.prefix_hit_depth_sum, 72);
+        assert_eq!(a.prefix_hit_depth_count, 4);
+        let text = a.render();
+        assert_eq!(scrape_value(&text, "spa_prefix_hits_total"), Some(4.0));
+        assert_eq!(scrape_value(&text, "spa_prefix_misses_total"), Some(1.0));
+        assert_eq!(scrape_value(&text, "spa_prefix_evictions_total"), Some(2.0));
+        assert_eq!(scrape_value(&text, "spa_prefix_purges_total"), Some(4.0));
+        assert_eq!(scrape_value(&text, "spa_warm_admissions_total"), Some(3.0));
+        assert_eq!(scrape_value(&text, "spa_prefix_hit_depth_sum"), Some(72.0));
+        assert_eq!(scrape_value(&text, "spa_prefix_hit_depth_count"), Some(4.0));
+        assert_eq!(scrape_value(&text, "spa_affinity_dispatch_total"), Some(5.0));
     }
 
     #[test]

@@ -33,6 +33,11 @@ pub struct GenParams {
     /// [`SlotState::assign`] disables semi-AR blocking for it (blocks assume
     /// a left-to-right contiguous MASK run).
     pub mask_offsets: Option<Vec<usize>>,
+    /// Stable session key (protocol v2 `"session"`): ties the turns of one
+    /// conversation together so the prefix store and the router's affinity
+    /// dispatch can attribute multi-turn reuse (DESIGN.md §11).  Purely an
+    /// optimisation hint — `None` requests still prefix-match by content.
+    pub session: Option<String>,
 }
 
 /// A generation request entering the router.

@@ -15,7 +15,7 @@
 //! and each worker thread constructs its own engine; the manifest is parsed
 //! once up front and cloned into the factory (see `Engine::from_manifest`).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -25,18 +25,30 @@ use anyhow::Result;
 
 use crate::info;
 
+use super::cache::prefix;
 use super::metrics::Metrics;
 use super::request::{ReqEvent, Request};
 use super::scheduler::{Command, Worker};
 
+/// How much worse (in JSQ score) a prefix-affine worker may be and still
+/// win the dispatch: warm reuse saves roughly a prompt prefill, worth a
+/// couple of queued requests, but a genuinely overloaded worker must lose
+/// to a cold idle one (stale affinity never trumps load — DESIGN.md §11).
+pub const AFFINITY_SLACK: usize = 2;
+
 /// Shared load gauges for one worker: the router increments `inflight` at
 /// dispatch, the worker decrements it at completion and publishes its queue
-/// depth / free slot count every loop iteration.
+/// depth / free slot count every loop iteration.  Workers with a prefix
+/// store additionally publish its affinity bloom ([`prefix::PrefixStore::summary`])
+/// and the router counts affinity-decided dispatches here for the worker
+/// to mirror into `spa_affinity_dispatch_total`.
 #[derive(Debug, Default)]
 pub struct WorkerStatus {
     inflight: AtomicUsize,
     queue_depth: AtomicUsize,
     free_slots: AtomicUsize,
+    prefix_bloom: AtomicU64,
+    affinity_dispatches: AtomicUsize,
 }
 
 impl WorkerStatus {
@@ -63,12 +75,30 @@ impl WorkerStatus {
         self.free_slots.store(f, Ordering::SeqCst);
     }
 
-    /// Point-in-time read of all three gauges.
+    /// Publish the worker's prefix-store affinity bloom (worker side; on
+    /// every donation/purge, *before* the completion event is sent, so a
+    /// follow-up turn racing the publish still sees the fresh bits).
+    pub fn set_prefix_bloom(&self, bits: u64) {
+        self.prefix_bloom.store(bits, Ordering::SeqCst);
+    }
+
+    /// Count one dispatch decided by prefix affinity (router side).
+    pub fn inc_affinity(&self) {
+        self.affinity_dispatches.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Affinity-decided dispatch count (worker mirrors into its metrics).
+    pub fn affinity_dispatches(&self) -> usize {
+        self.affinity_dispatches.load(Ordering::SeqCst)
+    }
+
+    /// Point-in-time read of all gauges.
     pub fn load(&self) -> WorkerLoad {
         WorkerLoad {
             inflight: self.inflight.load(Ordering::SeqCst),
             queue_depth: self.queue_depth.load(Ordering::SeqCst),
             free_slots: self.free_slots.load(Ordering::SeqCst),
+            prefix_bloom: self.prefix_bloom.load(Ordering::SeqCst),
         }
     }
 }
@@ -82,6 +112,9 @@ pub struct WorkerLoad {
     pub queue_depth: usize,
     /// Free batch slots as last published by the worker.
     pub free_slots: usize,
+    /// Prefix-store affinity bloom as last published by the worker
+    /// (0 = no store / nothing resident).
+    pub prefix_bloom: u64,
 }
 
 impl WorkerLoad {
@@ -92,12 +125,29 @@ impl WorkerLoad {
         self.inflight.saturating_sub(self.free_slots) + self.queue_depth
     }
 
-    /// The router's total dispatch order: JSQ score, then inflight count,
-    /// then cyclic distance from the rotating cursor (round-robins exact
-    /// ties).  `pick_worker` and `Router::submit` both rank by this key, so
-    /// the policy has exactly one definition.
-    fn order_key(&self, idx: usize, start: usize, n: usize) -> (usize, usize, usize) {
-        (self.jsq_score(), self.inflight, (idx + n - start % n) % n)
+    /// The router's total dispatch order: slack-adjusted JSQ score (an
+    /// affine worker forgives up to [`AFFINITY_SLACK`] of load), then
+    /// affinity itself, then the raw JSQ tie-breaks — inflight count,
+    /// cyclic distance from the rotating cursor, and finally the worker
+    /// index, so the order is total and deterministic for any gauge state.
+    /// `pick_worker` and `Router::submit` both rank by this key, so the
+    /// policy has exactly one definition.
+    fn order_key(
+        &self,
+        idx: usize,
+        start: usize,
+        n: usize,
+        affine: bool,
+    ) -> (usize, usize, usize, usize, usize, usize) {
+        let jsq = self.jsq_score();
+        (
+            jsq.saturating_sub(if affine { AFFINITY_SLACK } else { 0 }),
+            usize::from(!affine),
+            jsq,
+            self.inflight,
+            (idx + n - start % n) % n,
+            idx,
+        )
     }
 }
 
@@ -106,7 +156,17 @@ impl WorkerLoad {
 pub fn pick_worker(loads: &[WorkerLoad], start: usize) -> usize {
     assert!(!loads.is_empty(), "router has no workers");
     let n = loads.len();
-    (0..n).min_by_key(|&i| loads[i].order_key(i, start, n)).unwrap()
+    (0..n).min_by_key(|&i| loads[i].order_key(i, start, n, false)).unwrap()
+}
+
+/// [`pick_worker`] with per-worker prefix affinity: an affine worker wins
+/// any tie and forgives up to [`AFFINITY_SLACK`] of JSQ score, but heavier
+/// imbalance falls back to pure JSQ (stale affinity never beats load).
+pub fn pick_worker_affine(loads: &[WorkerLoad], start: usize, affine: &[bool]) -> usize {
+    assert!(!loads.is_empty(), "router has no workers");
+    assert_eq!(loads.len(), affine.len(), "affinity vector must match loads");
+    let n = loads.len();
+    (0..n).min_by_key(|&i| loads[i].order_key(i, start, n, affine[i])).unwrap()
 }
 
 /// One worker's router-side endpoint: command channel + shared load gauges.
@@ -228,26 +288,41 @@ impl Router {
         self.workers.iter().map(|w| w.status.load()).collect()
     }
 
-    /// Dispatch a request to the least-loaded worker; progress and the
-    /// terminal event arrive on `reply` ([`ReqEvent`]).  Returns the chosen
-    /// worker id, or `None` if every worker channel is closed (the dropped
-    /// `reply` sender then surfaces as a recv error at the caller).
+    /// Dispatch a request to the least-loaded worker, preferring (within
+    /// [`AFFINITY_SLACK`]) a worker whose advertised prefix bloom covers
+    /// the request's head-prefix/session bits — cache-affinity routing:
+    /// the worker most likely to hold this conversation's donated prefix
+    /// gets the follow-up turn.  Progress and the terminal event arrive on
+    /// `reply` ([`ReqEvent`]).  Returns the chosen worker id, or `None` if
+    /// every worker channel is closed (the dropped `reply` sender then
+    /// surfaces as a recv error at the caller).
     pub fn submit(&self, req: Request, reply: Sender<ReqEvent>) -> Option<usize> {
         let mut cursor = self.cursor.lock().unwrap();
         let start = *cursor;
         *cursor = cursor.wrapping_add(1);
         let loads = self.loads();
+        // Workers without a prefix store publish an empty bloom, so the
+        // affinity vector is all-false there and this is pure JSQ.
+        let head = &req.tokens[..req.prompt_len.min(req.tokens.len())];
+        let bits = prefix::request_bits(head, req.params.session.as_deref());
+        let affine: Vec<bool> =
+            loads.iter().map(|l| bits != 0 && l.prefix_bloom & bits == bits).collect();
         // Try in policy order so a dead worker (closed channel) falls
         // through to the next-best candidate.
         let n = self.workers.len();
         let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by_key(|&i| loads[i].order_key(i, start, n));
+        order.sort_by_key(|&i| loads[i].order_key(i, start, n, affine[i]));
         let mut req = req;
         for i in order {
             let ep = &self.workers[i];
             ep.status.inc_inflight();
             match ep.tx.send(Command::Submit(req, reply.clone())) {
-                Ok(()) => return Some(ep.id),
+                Ok(()) => {
+                    if affine[i] {
+                        ep.status.inc_affinity();
+                    }
+                    return Some(ep.id);
+                }
                 Err(std::sync::mpsc::SendError(cmd)) => {
                     ep.status.dec_inflight();
                     match cmd {
@@ -339,7 +414,7 @@ mod tests {
     use std::time::Instant;
 
     fn load(inflight: usize, queue_depth: usize, free_slots: usize) -> WorkerLoad {
-        WorkerLoad { inflight, queue_depth, free_slots }
+        WorkerLoad { inflight, queue_depth, free_slots, prefix_bloom: 0 }
     }
 
     #[test]
@@ -362,6 +437,35 @@ mod tests {
         assert_eq!(pick_worker(&loads, 1), 1);
         assert_eq!(pick_worker(&loads, 2), 2);
         assert_eq!(pick_worker(&loads, 3), 0);
+    }
+
+    /// ISSUE-8 satellite: the affinity dispatch table — affinity beats JSQ
+    /// within the slack, heavy load beats stale affinity beyond it, and a
+    /// pure tie (no affinity anywhere) still rotates round-robin, always
+    /// deterministically.
+    #[test]
+    fn affinity_dispatch_table() {
+        // Affinity beats JSQ: the affine worker carries AFFINITY_SLACK
+        // more load than the idle cold one and still wins.
+        let loads = vec![load(AFFINITY_SLACK, 0, 0), load(0, 0, 0)];
+        assert_eq!(pick_worker_affine(&loads, 0, &[true, false]), 0);
+        // ...and wins any exact tie outright.
+        let loads = vec![load(1, 0, 0), load(1, 0, 0)];
+        assert_eq!(pick_worker_affine(&loads, 0, &[false, true]), 1);
+        // JSQ beats stale affinity: one unit past the slack, load wins.
+        let loads = vec![load(AFFINITY_SLACK + 1, 0, 0), load(0, 0, 0)];
+        assert_eq!(pick_worker_affine(&loads, 0, &[true, false]), 1);
+        // Pure tie, no affinity: the cursor rotation decides, and the same
+        // (loads, start) always picks the same worker.
+        let loads = vec![load(0, 0, 4), load(0, 0, 4), load(0, 0, 4)];
+        for start in 0..6 {
+            let pick = pick_worker_affine(&loads, start, &[false; 3]);
+            assert_eq!(pick, start % 3);
+            assert_eq!(pick, pick_worker_affine(&loads, start, &[false; 3]));
+        }
+        // Two affine candidates tie: rotation decides among them.
+        let loads = vec![load(0, 0, 4), load(0, 0, 4)];
+        assert_eq!(pick_worker_affine(&loads, 1, &[true, true]), 1);
     }
 
     fn req(id: u64) -> Request {
@@ -411,6 +515,27 @@ mod tests {
             assert_eq!(router.submit(req(i), reply.clone()), Some(1));
         }
         assert_eq!(rxs[0].try_iter().count(), 4);
+    }
+
+    #[test]
+    fn submit_steers_to_prefix_affine_worker() {
+        let (router, rxs) = bare_router(2);
+        let toks: Vec<i32> = (1..=8).collect();
+        let mut r = req(7);
+        r.tokens = toks.clone();
+        r.prompt_len = 8;
+        r.gen_end = 8;
+        r.params.session = Some("sess".into());
+        // Worker 1 advertises a bloom covering the request's head+session
+        // bits; rotation alone would hand the first dispatch to worker 0.
+        let bits = prefix::request_bits(&toks, Some("sess"));
+        assert_ne!(bits, 0);
+        router.workers[1].status.set_prefix_bloom(bits);
+        let (reply, _keep) = channel();
+        assert_eq!(router.submit(r, reply), Some(1));
+        assert_eq!(rxs[1].try_iter().count(), 1);
+        assert_eq!(router.workers[1].status.affinity_dispatches(), 1);
+        assert_eq!(router.workers[0].status.affinity_dispatches(), 0);
     }
 
     /// Regression test for the stats-scrape interleave: the router must

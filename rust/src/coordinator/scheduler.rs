@@ -270,6 +270,19 @@ impl Worker {
             }
             self.metrics.cancelled += 1;
             self.status.dec_inflight();
+            // A cancelled row's prompt region is still a valid, fully
+            // healed prefix — donate it (the generated tail may hold
+            // uncommitted MASKs, so it stays out of the store).
+            if let Some(r) = &req {
+                let upto = slot.prompt_len.min(n);
+                self.method.donate_prefix(
+                    &self.tokens[bi * n..bi * n + upto],
+                    r.params.session.as_deref(),
+                );
+                if let Some(bits) = self.method.prefix_summary() {
+                    self.status.set_prefix_bloom(bits);
+                }
+            }
             for t in &mut self.tokens[bi * n..(bi + 1) * n] {
                 *t = PAD;
             }
@@ -322,6 +335,24 @@ impl Worker {
         // in place on subsequent steps or escalates to a group-global
         // invalidate (`PartialRefresh::Unsupported`).
         self.method.on_admitted(&admitted_rows, &mut self.slots);
+        // Warm-seed from the cross-request prefix store (DESIGN.md §11): a
+        // hit pre-credits the slot's partial-service cover so the heal loop
+        // only re-derives the cold suffix.  Runs after `on_admitted` so the
+        // credit survives the dirty marking, not the other way around.
+        for &slot_i in &admitted_rows {
+            let prompt_len = self.slots[slot_i].prompt_len;
+            if let Some(depth) = self.method.warm_admit_row(
+                &self.tokens[slot_i * n..(slot_i + 1) * n],
+                prompt_len,
+                &mut self.slots[slot_i],
+            ) {
+                debug!(
+                    "sched",
+                    "worker {} warm-admitted slot {slot_i} at prefix depth {depth}",
+                    self.id
+                );
+            }
+        }
         self.mirror_cache_counters();
     }
 
@@ -338,6 +369,16 @@ impl Worker {
         self.metrics.schedule_refits = self.method.schedule_refits();
         self.metrics.tier_switches = self.method.tier_switches();
         self.metrics.budget_tier = self.method.budget_tier();
+        if let Some(pc) = self.method.prefix_counters() {
+            self.metrics.prefix_hits = pc.hits as u64;
+            self.metrics.prefix_misses = pc.misses as u64;
+            self.metrics.prefix_evictions = pc.evictions as u64;
+            self.metrics.prefix_purges = pc.purges as u64;
+            self.metrics.warm_admissions = pc.warm_admissions as u64;
+            self.metrics.prefix_hit_depth_sum = pc.hit_depth_sum as u64;
+            self.metrics.prefix_hit_depth_count = pc.hit_depth_count as u64;
+        }
+        self.metrics.affinity_dispatches = self.status.affinity_dispatches() as u64;
     }
 
     /// The effective step cap for the request in slot `bi`: the
@@ -425,6 +466,17 @@ impl Worker {
             let slot = std::mem::replace(&mut self.slots[bi], SlotState::empty());
             let req = self.requests[bi].take();
             let row = self.tokens[bi * n..(bi + 1) * n].to_vec();
+            // Donate the finished prompt+reply to the prefix store and
+            // publish the refreshed affinity bloom *before* the Done event
+            // leaves — a chat client's next turn would otherwise race a
+            // stale bloom at the router.
+            if let Some(r) = &req {
+                let upto = r.gen_end.min(row.len());
+                self.method.donate_prefix(&row[..upto], r.params.session.as_deref());
+                if let Some(bits) = self.method.prefix_summary() {
+                    self.status.set_prefix_bloom(bits);
+                }
+            }
             // Count commits from the original mask count.
             let decoded = req
                 .as_ref()

@@ -647,6 +647,14 @@ fn parse_gen_params(msg: &Json, task: Option<Task>) -> Result<(usize, GenParams)
             .as_bool()
             .ok_or_else(|| anyhow::anyhow!("stream must be a boolean"))?,
     };
+    let session = match msg.get("session") {
+        None => None,
+        Some(v) => Some(
+            v.as_str()
+                .ok_or_else(|| anyhow::anyhow!("session must be a string"))?
+                .to_string(),
+        ),
+    };
     Ok((
         gen_len,
         GenParams {
@@ -657,6 +665,7 @@ fn parse_gen_params(msg: &Json, task: Option<Task>) -> Result<(usize, GenParams)
             // Filled by `build_infill_request` once the template is parsed
             // and validated against it.
             mask_offsets: None,
+            session,
         },
     ))
 }
@@ -976,6 +985,9 @@ pub struct GenRequest {
     pub template: Option<String>,
     /// 0-based template offsets to mask (see [`GenRequest::template`]).
     pub mask_offsets: Option<Vec<usize>>,
+    /// Stable session key — requests sharing it are treated as turns of
+    /// one conversation for prefix-cache affinity routing.
+    pub session: Option<String>,
 }
 
 impl GenRequest {
@@ -1017,6 +1029,9 @@ impl GenRequest {
                 "mask_offsets",
                 Json::Arr(offs.iter().map(|&o| Json::int(o as i64)).collect()),
             ));
+        }
+        if let Some(s) = &self.session {
+            pairs.push(("session", Json::str(s)));
         }
         Json::obj(pairs)
     }
@@ -1496,6 +1511,8 @@ mod tests {
             threshold: Some(0.9),
             max_steps: Some(64),
             stream: true,
+            session: Some("chat-7-0".into()),
+            ..GenRequest::default()
         };
         let body = r.body((1 << 53) + 1);
         let wire = parse(&body.to_string()).unwrap();
@@ -1509,5 +1526,16 @@ mod tests {
         assert_eq!(p.threshold, Some(0.9));
         assert_eq!(p.max_steps, Some(64));
         assert!(p.stream);
+        assert_eq!(p.session.as_deref(), Some("chat-7-0"));
+
+        // Session-free requests put no session key on the wire and parse
+        // back to None — old clients/servers interoperate.
+        let wire = parse(&GenRequest::new("hi").body(1).to_string()).unwrap();
+        assert!(wire.get("session").is_none());
+        let (_, p) = parse_gen_params(&wire, None).unwrap();
+        assert_eq!(p.session, None);
+        // A non-string session is a protocol error, not a silent ignore.
+        let bad = parse("{\"op\":\"generate\",\"id\":1,\"prompt\":\"x\",\"session\":3}").unwrap();
+        assert!(parse_gen_params(&bad, None).is_err());
     }
 }

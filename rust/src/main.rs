@@ -45,7 +45,8 @@ fn main() -> Result<()> {
                  [--model llada_s] [--method vanilla|spa|dllm_cache|fast_dllm|dkv_cache|d2_cache|elastic_cache|multistep] \
                  [--task gsm8k_s] [--samples N] [--addr host:port] [--workers N] [--threshold 0.9]\n\
                  policy: [--partial-refresh on|off] [--refresh-interval N] \
-                 [--adaptive on|off] [--row-refresh N] [--refit-interval N]\n\
+                 [--adaptive on|off] [--row-refresh N] [--refit-interval N] \
+                 [--prefix-cache on|off] [--prefix-mem BYTES]\n\
                  serve: [--max-line BYTES] [--conn-threads N]\n\
                  bench-serve: [--methods vanilla,spa] [--qps 8 | --clients N | --pipeline D] \
                  [--duration 5s] [--warmup 1s] [--tasks gsm8k_s,mmlu_s] [--gen-len 32 | 16:64] \

@@ -226,6 +226,72 @@ fn trace_scenario_is_seed_deterministic_and_replays_bursts() {
     assert!(events.windows(2).all(|w| w[0].at_ms <= w[1].at_ms), "sorted");
 }
 
+/// Prefix-cache e2e over the chat scenario: with `--prefix-cache on`,
+/// multi-turn sessions that resubmit their transcript must hit the
+/// cross-request prefix store (turn N's prompt extends turn N-1's), seed
+/// slots warm, and stamp the `prefix_hit_rate` / warm columns into the
+/// trajectory row — while a cold run of the same shape records none of
+/// the prefix keys, so warm and cold rows stay distinguishable.
+#[test]
+fn chat_scenario_hits_prefix_cache_when_enabled() {
+    let cfg = LoadGenConfig {
+        warmup: Duration::from_millis(100),
+        duration: Duration::from_millis(900),
+        ..base_cfg(53)
+    };
+    let warm_policy = PolicyFlags { prefix_cache: true, ..PolicyFlags::default() };
+    let warm = scenario::run_stub_scenario(
+        "stub",
+        2,
+        &cfg,
+        &scn(ScenarioKind::Chat),
+        StubConfig::default(),
+        warm_policy,
+    )
+    .expect("warm chat run");
+    assert_slo_shape(&warm, ScenarioKind::Chat);
+
+    // The store saw real traffic: lookups happened, transcripts re-hit
+    // their donated prefixes, and hits seeded slots warm.
+    assert!(
+        warm.prefix_hits + warm.prefix_misses > 0.0,
+        "prefix store consulted on admission: {warm:?}"
+    );
+    assert!(warm.prefix_hits > 0.0, "chat turns re-hit donated prefixes: {warm:?}");
+    assert!(warm.warm_admissions > 0.0, "hits seeded slots warm: {warm:?}");
+    let hit_rate = warm.prefix_hit_rate.expect("stamped on warm runs");
+    assert!(
+        hit_rate > 0.0 && hit_rate <= 1.0,
+        "hit rate measurable and sane: {hit_rate}"
+    );
+    assert!(warm.warm_ttft_ms.is_some(), "warm ttft column stamped");
+
+    // Trajectory row carries the warm columns.
+    let row = trajectory_row("chat_warm", &cfg, &warm);
+    assert!(
+        row.get("prefix_hit_rate").and_then(|x| x.as_f64()).unwrap() > 0.0,
+        "warm row records its hit rate: {row:?}"
+    );
+    assert!(row.get("prefix_hits").is_some() && row.get("warm_admissions").is_some());
+
+    // Cold control: same shape, cache off — no prefix traffic, no prefix
+    // keys in the row (key presence is the warm/cold discriminator).
+    let cold = scenario::run_stub_scenario(
+        "stub",
+        2,
+        &cfg,
+        &scn(ScenarioKind::Chat),
+        StubConfig::default(),
+        PolicyFlags::default(),
+    )
+    .expect("cold chat run");
+    assert_eq!(cold.prefix_hits + cold.prefix_misses, 0.0, "store disabled: {cold:?}");
+    assert_eq!(cold.prefix_hit_rate, None, "no hit-rate column on cold runs");
+    let row = trajectory_row("chat_cold", &cfg, &cold);
+    assert!(row.get("prefix_hit_rate").is_none(), "cold row stays key-free: {row:?}");
+    assert!(row.get("warm_ttft_ms").is_none());
+}
+
 /// Satellite (d): cancellation-storm e2e.  Slot conservation via the
 /// admission slot log (every admission lands in a real slot; slots are
 /// reused after cancels free them), and the server-side
@@ -244,6 +310,7 @@ fn cancel_storm_conserves_slots_and_cancel_counts() {
         step_ms: 5,
         commits_per_step: 4,
         slot_log: Some(Arc::clone(&slot_log)),
+        ..StubConfig::default()
     };
     let cfg = LoadGenConfig {
         // No warmup: the post-drain scrape is absolute, so every cancel of

@@ -132,6 +132,7 @@ fn v2_cancel_frees_slot_and_readmits() {
         step_ms: 10,
         commits_per_step: 1,
         slot_log: Some(Arc::clone(&slot_log)),
+        ..StubConfig::default()
     };
     let (addr, server, workers) = session_server(1, stub, ServerConfig::default());
 

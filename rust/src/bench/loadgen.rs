@@ -378,6 +378,34 @@ pub struct MethodReport {
     /// Submissions the router steered by cache affinity (vs plain JSQ)
     /// inside the window.
     pub affinity_dispatches: f64,
+    /// Pages made resident (admissions + faults) inside the window
+    /// (scraped, differenced; 0 without `--page-bytes`).
+    pub pages_resident: f64,
+    /// Cold pages reclaimed by the pager's eviction loop inside the window.
+    pub pages_evicted: f64,
+    /// Page frames returned to the free pool inside the window
+    /// (eviction + slot release).
+    pub pages_reclaimed: f64,
+    /// Scheduled refreshes deferred — rows served stale under the grace
+    /// bound inside the window (scraped, differenced; 0 without `--grace`).
+    pub stale_served: f64,
+    /// Admissions delayed by degraded-mode token buckets inside the window.
+    pub rate_limited: f64,
+    /// Transitions into degraded mode inside the window.
+    pub degraded_entries: f64,
+    /// Transitions out of degraded mode inside the window.
+    pub degraded_exits: f64,
+    /// Whether any worker was still degraded at the end of the run
+    /// (gauge — end-of-run value, like `budget_tier`).
+    pub degraded_mode: f64,
+    /// Peak drift debt any worker reached (gauge; ≤ the `--grace` bound
+    /// by construction — the recorded proof stale rows stayed in bounds).
+    pub drift_debt_peak: f64,
+    /// The paged slot-memory path ran for this row (`--page-bytes` and/or
+    /// `--grace`).  Stamped by the run front-ends, like the prefix
+    /// columns — the counters alone cannot distinguish an idle paged run
+    /// from an unpaged one; rows without it omit the paged columns.
+    pub paged: bool,
     /// hits / (hits + misses) over the window.  `Some` only when
     /// `--prefix-cache on` ran — absent from the trajectory row otherwise,
     /// like the `scenario` tag, so warm and cold rows are distinguishable.
@@ -816,6 +844,20 @@ pub(crate) fn aggregate(
         prefix_purges: diff("spa_prefix_purges_total"),
         warm_admissions: diff("spa_warm_admissions_total"),
         affinity_dispatches: diff("spa_affinity_dispatch_total"),
+        pages_resident: diff("spa_pages_resident_total"),
+        pages_evicted: diff("spa_pages_evicted_total"),
+        pages_reclaimed: diff("spa_pages_reclaimed_total"),
+        stale_served: diff("spa_stale_served_total"),
+        rate_limited: diff("spa_rate_limited_total"),
+        degraded_entries: diff("spa_degraded_entries_total"),
+        degraded_exits: diff("spa_degraded_exits_total"),
+        // Gauges, not counters: end-of-run values are the signal (peak
+        // debt is monotone per worker; degraded_mode is the live state).
+        degraded_mode: scrape_value(end, "spa_degraded_mode").unwrap_or(0.0),
+        drift_debt_peak: scrape_value(end, "spa_drift_debt_peak").unwrap_or(0.0),
+        // Stamped by the run front-ends, which know whether the pager /
+        // overload controller were actually configured.
+        paged: false,
         // Stamped by the run front-end, which knows whether the prefix
         // store was actually configured (the counters alone cannot say —
         // an all-miss warm run and a cold run both scrape zeros).
@@ -867,6 +909,13 @@ pub fn validate_policy_flags(
         anyhow::bail!(
             "--row-refresh/--refit-interval apply to none of the selected \
              methods (staggered scheduled refresh is spa-only)"
+        );
+    }
+    if policy.paged() && !spa {
+        anyhow::bail!(
+            "--page-bytes/--grace apply to none of the selected methods \
+             (the paged slot-memory manager and overload controller are \
+             spa-only)"
         );
     }
     Ok(())
@@ -1011,6 +1060,7 @@ pub fn run_stub(
     report.map(|mut r| {
         r.adaptive = adaptive_ran;
         stamp_prefix_columns(&mut r, policy);
+        stamp_paged_columns(&mut r, policy);
         r
     })
 }
@@ -1028,6 +1078,16 @@ pub(crate) fn stamp_prefix_columns(r: &mut MethodReport, policy: PolicyFlags) {
     r.prefix_hit_rate =
         Some(if denom > 0.0 { r.prefix_hits / denom } else { 0.0 });
     r.warm_ttft_ms = r.ttft.as_ref().map(|s| s.p50);
+}
+
+/// Stamp the paged-serving discriminator on a report when the slot-memory
+/// manager / overload controller ran (`--page-bytes`/`--grace`).  Same
+/// rationale as [`stamp_prefix_columns`]: only the front-end knows the
+/// flags — an idle paged run and an unpaged run scrape identical zeros.
+pub(crate) fn stamp_paged_columns(r: &mut MethodReport, policy: PolicyFlags) {
+    if policy.paged() {
+        r.paged = true;
+    }
 }
 
 /// A stub serving stack (workers + router + TCP frontend) spun up for one
@@ -1358,6 +1418,20 @@ pub fn report_json(r: &MethodReport) -> Json {
     if let Some(w) = r.warm_ttft_ms {
         pairs.push(("warm_ttft_ms", finite_or_null(w)));
     }
+    // Paged rows (`--page-bytes`/`--grace`) carry the slot-memory and
+    // overload columns; unpaged rows omit them — key presence is the
+    // discriminator, like the prefix columns above.
+    if r.paged {
+        pairs.push(("pages_resident", finite_or_null(r.pages_resident)));
+        pairs.push(("pages_evicted", finite_or_null(r.pages_evicted)));
+        pairs.push(("pages_reclaimed", finite_or_null(r.pages_reclaimed)));
+        pairs.push(("stale_served", finite_or_null(r.stale_served)));
+        pairs.push(("rate_limited", finite_or_null(r.rate_limited)));
+        pairs.push(("degraded_entries", finite_or_null(r.degraded_entries)));
+        pairs.push(("degraded_exits", finite_or_null(r.degraded_exits)));
+        pairs.push(("degraded_mode", finite_or_null(r.degraded_mode)));
+        pairs.push(("drift_debt_peak", finite_or_null(r.drift_debt_peak)));
+    }
     // Scenario rows carry their tag + schema-versioned SLO block
     // (DESIGN.md §10); plain load-shape rows omit both keys entirely.
     if let Some(s) = &r.scenario {
@@ -1417,6 +1491,20 @@ pub fn config_json(
             match policy.prefix_mem {
                 None => Json::Null,
                 Some(b) => Json::Num(b as f64),
+            },
+        ),
+        (
+            "page_bytes",
+            match policy.page_bytes {
+                None => Json::Null,
+                Some(b) => Json::Num(b as f64),
+            },
+        ),
+        (
+            "grace",
+            match policy.grace {
+                None => Json::Null,
+                Some(g) => Json::Num(g as f64),
             },
         ),
         ("warmup_s", Json::Num(cfg.warmup.as_secs_f64())),
@@ -1590,7 +1678,15 @@ mod tests {
             ..PolicyFlags::default()
         };
         assert!(validate_policy_flags(rowref, false, std::slice::from_ref(&manual)).is_err());
-        assert!(validate_policy_flags(rowref, false, &[spa]).is_ok());
+        assert!(validate_policy_flags(rowref, false, std::slice::from_ref(&spa)).is_ok());
+        // Slot-memory gates are spa-only too: the pager and overload
+        // controller live behind the spa capability in Method::configure.
+        let paged = PolicyFlags { page_bytes: Some(4096), ..PolicyFlags::default() };
+        assert!(validate_policy_flags(paged, false, std::slice::from_ref(&manual)).is_err());
+        assert!(validate_policy_flags(paged, false, std::slice::from_ref(&spa)).is_ok());
+        let graced = PolicyFlags { grace: Some(32), ..PolicyFlags::default() };
+        assert!(validate_policy_flags(graced, false, std::slice::from_ref(&manual)).is_err());
+        assert!(validate_policy_flags(graced, false, &[spa]).is_ok());
     }
 
     #[test]
@@ -1714,6 +1810,11 @@ mod tests {
         assert!(back.get("scenario").is_none() && back.get("slo").is_none());
         assert!(back.get("prefix_hit_rate").is_none());
         assert!(back.get("warm_ttft_ms").is_none());
+        // ...and unpaged rows carry none of the slot-memory columns.
+        assert!(back.get("pages_resident").is_none());
+        assert!(back.get("stale_served").is_none());
+        assert!(back.get("degraded_mode").is_none());
+        assert!(back.get("drift_debt_peak").is_none());
 
         // A warm-stamped report grows the prefix columns (hit rate stays a
         // number even with zero traffic — 0 hits of 0 lookups reads as 0).
@@ -1728,6 +1829,19 @@ mod tests {
         assert!(back.get("warm_admissions").is_some());
         // No observations → no TTFT summary → the alias column stays out.
         assert!(back.get("warm_ttft_ms").is_none());
+
+        // A paged-stamped report grows the slot-memory columns (zeros stay
+        // numeric — an idle paged run reads as 0, not as key absence).
+        let mut paged = aggregate("stub", &cfg, &[], 0, baseline, end);
+        stamp_paged_columns(
+            &mut paged,
+            PolicyFlags { page_bytes: Some(4096), ..PolicyFlags::default() },
+        );
+        let back = parse(&report_json(&paged).to_string()).unwrap();
+        assert_eq!(back.get("pages_resident").and_then(|x| x.as_f64()), Some(0.0));
+        assert_eq!(back.get("stale_served").and_then(|x| x.as_f64()), Some(0.0));
+        assert_eq!(back.get("degraded_entries").and_then(|x| x.as_f64()), Some(0.0));
+        assert_eq!(back.get("drift_debt_peak").and_then(|x| x.as_f64()), Some(0.0));
     }
 
     #[test]

@@ -22,6 +22,11 @@
 //!   a production arrival pattern can be replayed verbatim.
 //! * **cancel-storm** — interactive traffic that cancels most of what it
 //!   submits mid-decode, exercising slot reclamation under load.
+//! * **overload** — an open-loop ramp past the service knee: a short-chat
+//!   + long-doc mix whose arrival rate climbs linearly to a peak,
+//!   recording sustained goodput, the stale-served fraction and the
+//!   degraded-mode entry/exit counters — the acceptance workload for the
+//!   paged slot-memory manager + overload controller (DESIGN.md §12).
 //!
 //! Every scenario runs artifact-free against the `bench::stub` workers
 //! (`bench-serve --stub --scenario <name>`) and reports **SLO attainment**
@@ -45,8 +50,8 @@ use crate::util::json::{parse, Json};
 use crate::util::rng::Rng;
 
 use super::loadgen::{
-    aggregate, finite_or_null, sleep_until, spawn_stub_server, stamp_prefix_columns,
-    ArrivalMode, LoadGenConfig, MethodReport, Obs, PolicyFlags,
+    aggregate, finite_or_null, sleep_until, spawn_stub_server, stamp_paged_columns,
+    stamp_prefix_columns, ArrivalMode, LoadGenConfig, MethodReport, Obs, PolicyFlags,
 };
 
 /// Schema version stamped into every `slo` block; bump on any breaking
@@ -72,6 +77,14 @@ const STORM_BURST: usize = 4;
 /// Mixed-population offered load when the run didn't pass `--qps`.
 const MIXED_DEFAULT_QPS: f64 = 20.0;
 
+/// Overload-ramp peak when the run didn't pass `--qps` — far past the
+/// stub's service knee, so the ramp actually overloads.
+const OVERLOAD_DEFAULT_PEAK_QPS: f64 = 400.0;
+
+/// Distinct session keys the overload ramp's short-chat population cycles
+/// through — the identities the degraded-mode token buckets shape on.
+const OVERLOAD_SESSIONS: usize = 8;
+
 /// Prompt alphabet for synthesized traffic — a strict subset of the model
 /// charset, so every synthesized prompt encodes.
 const PROMPT_CHARS: &[u8] = b"0123456789abcdefghijklmnopqrstuvwxyz ";
@@ -80,7 +93,7 @@ const PROMPT_CHARS: &[u8] = b"0123456789abcdefghijklmnopqrstuvwxyz ";
 // Scenario configuration
 // ---------------------------------------------------------------------------
 
-/// The five traffic shapes of the scenario suite.
+/// The six traffic shapes of the scenario suite.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScenarioKind {
     /// Multi-turn chat sessions resubmitting their transcript each turn.
@@ -93,16 +106,19 @@ pub enum ScenarioKind {
     Trace,
     /// Submit-then-cancel bursts exercising slot reclamation.
     CancelStorm,
+    /// Open-loop ramp past the knee: goodput + degraded-mode evidence.
+    Overload,
 }
 
 impl ScenarioKind {
     /// Every scenario, in CLI/CI order.
-    pub const ALL: [ScenarioKind; 5] = [
+    pub const ALL: [ScenarioKind; 6] = [
         ScenarioKind::Chat,
         ScenarioKind::Infill,
         ScenarioKind::Mixed,
         ScenarioKind::Trace,
         ScenarioKind::CancelStorm,
+        ScenarioKind::Overload,
     ];
 
     /// The `--scenario` spelling (also the trajectory tag).
@@ -113,6 +129,7 @@ impl ScenarioKind {
             ScenarioKind::Mixed => "mixed",
             ScenarioKind::Trace => "trace",
             ScenarioKind::CancelStorm => "cancel-storm",
+            ScenarioKind::Overload => "overload",
         }
     }
 
@@ -129,7 +146,10 @@ impl ScenarioKind {
             ScenarioKind::Chat | ScenarioKind::Infill => {
                 SloTargets { ttft_p99_ms: 250.0, deadline_ms: 1000.0 }
             }
-            ScenarioKind::Mixed | ScenarioKind::Trace | ScenarioKind::CancelStorm => {
+            ScenarioKind::Mixed
+            | ScenarioKind::Trace
+            | ScenarioKind::CancelStorm
+            | ScenarioKind::Overload => {
                 SloTargets { ttft_p99_ms: 500.0, deadline_ms: 2000.0 }
             }
         }
@@ -161,6 +181,11 @@ pub struct ScenarioConfig {
     pub trace: Option<PathBuf>,
     /// Trace scenario: record the replayed/synthesized trace here.
     pub record_trace: Option<PathBuf>,
+    /// Overload scenario: peak of the arrival-rate ramp (rps).  `--qps`
+    /// overrides; `None` → [`OVERLOAD_DEFAULT_PEAK_QPS`].  The base
+    /// config's default open-loop rate is *not* reused here — an unflagged
+    /// overload run must still ramp past the knee.
+    pub peak_qps: Option<f64>,
 }
 
 impl ScenarioConfig {
@@ -197,6 +222,12 @@ impl ScenarioConfig {
             turns: args.strict_count("turns")?.unwrap_or(4),
             trace: args.get("trace").map(PathBuf::from),
             record_trace: args.get("record-trace").map(PathBuf::from),
+            // `--qps` is validated (and recorded) by LoadGenConfig; here it
+            // only needs re-reading as the overload ramp's peak override.
+            peak_qps: match args.get("qps") {
+                Some(s) => s.trim().parse::<f64>().ok().filter(|q| q.is_finite() && *q > 0.0),
+                None => None,
+            },
         };
         if kind != ScenarioKind::Trace {
             anyhow::ensure!(
@@ -480,6 +511,43 @@ pub(crate) fn synth_bursty_trace(cfg: &LoadGenConfig) -> Vec<TraceEvent> {
     }
 }
 
+/// Synthesize the overload ramp: deterministic arrivals whose rate climbs
+/// linearly from `peak / 10` to `peak` over the whole (warmup + duration)
+/// window.  The population is the mixed shape — 70% short chat carrying
+/// one of [`OVERLOAD_SESSIONS`] stable session keys (the identities the
+/// degraded-mode token buckets shape on), 30% long-doc — so the summed
+/// worst-case `[B, N]` footprint of a full batch exceeds any page budget
+/// smaller than `batch × n_pages` frames.  Pure function of the seeded
+/// inputs, like the other synthesizers.
+pub(crate) fn synth_overload_trace(cfg: &LoadGenConfig, peak: f64) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(cfg.seed ^ 0x04E1_10AD);
+    let total_ms = (cfg.warmup + cfg.duration).as_secs_f64() * 1e3;
+    let lo = peak / 10.0;
+    let mut at = 0.0;
+    let mut out = Vec::new();
+    let mut k = 0usize;
+    loop {
+        // Instantaneous rate at the current offset; the gap to the next
+        // arrival shrinks as the ramp climbs.
+        let rate = lo + (peak - lo) * (at / total_ms).min(1.0);
+        at += 1e3 / rate;
+        if at >= total_ms {
+            return out;
+        }
+        let (prompt, gen_len, session) = if rng.bool(0.7) {
+            (
+                synth_prompt(&mut rng, 6, 14),
+                8 + rng.range(0, 9),
+                Some(format!("ovl-{}-{}", cfg.seed, k % OVERLOAD_SESSIONS)),
+            )
+        } else {
+            (synth_prompt(&mut rng, 28, 46), 48 + rng.range(0, 17), None)
+        };
+        k += 1;
+        out.push(TraceEvent { at_ms: at, prompt, gen_len, session });
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Scenario drivers
 // ---------------------------------------------------------------------------
@@ -563,6 +631,14 @@ fn prepare(cfg: &LoadGenConfig, scn: &ScenarioConfig) -> Result<(LoadGenConfig, 
         ScenarioKind::CancelStorm => {
             cfg.mode = ArrivalMode::Closed { clients: sessions };
             Plan::CancelStorm { sessions }
+        }
+        ScenarioKind::Overload => {
+            let peak = scn.peak_qps.unwrap_or(OVERLOAD_DEFAULT_PEAK_QPS);
+            let events = synth_overload_trace(&cfg, peak);
+            // Recorded offered load is the ramp's peak — the rate the run
+            // is judged against, not the (lower) window average.
+            cfg.mode = ArrivalMode::Open { qps: peak };
+            Plan::Replay { events }
         }
     };
     Ok((cfg, plan))
@@ -923,6 +999,24 @@ fn build_slo(
                     .unwrap_or(0.0),
             ),
         ],
+        // Degraded-serving evidence: absolute post-drain scrapes (fresh
+        // server per run, like `cancelled_total` above).  Zeros on a
+        // baseline run without `--page-bytes`/`--grace` — the CI overload
+        // gate discriminates the paired rows on exactly that.
+        ScenarioKind::Overload => {
+            let g = |name: &str| {
+                crate::coordinator::metrics::scrape_value(end_stats, name).unwrap_or(0.0)
+            };
+            vec![
+                ("replayed", count(&ev.replayed)),
+                ("stale_served", g("spa_stale_served_total")),
+                ("degraded_entries", g("spa_degraded_entries_total")),
+                ("degraded_exits", g("spa_degraded_exits_total")),
+                ("rate_limited", g("spa_rate_limited_total")),
+                ("pages_evicted", g("spa_pages_evicted_total")),
+                ("drift_debt_peak", g("spa_drift_debt_peak")),
+            ]
+        }
     };
     SloReport {
         ttft_p99_target_ms: scn.slo.ttft_p99_ms,
@@ -1018,6 +1112,7 @@ pub fn run_stub_scenario(
     report.map(|mut r| {
         r.adaptive = adaptive_ran;
         stamp_prefix_columns(&mut r, policy);
+        stamp_paged_columns(&mut r, policy);
         r
     })
 }
@@ -1069,6 +1164,50 @@ mod tests {
         assert!(
             ScenarioConfig::from_args(ScenarioKind::Trace, &args("--trace t.jsonl")).is_ok()
         );
+        // Overload obeys the same applicability rules as the other
+        // non-chat shapes, and reads `--qps` as its ramp-peak override.
+        let scn = ScenarioConfig::from_args(ScenarioKind::Overload, &args("")).unwrap();
+        assert_eq!(scn.peak_qps, None);
+        let scn =
+            ScenarioConfig::from_args(ScenarioKind::Overload, &args("--qps 300")).unwrap();
+        assert_eq!(scn.peak_qps, Some(300.0));
+        assert!(
+            ScenarioConfig::from_args(ScenarioKind::Overload, &args("--turns 3")).is_err()
+        );
+        assert!(ScenarioConfig::from_args(
+            ScenarioKind::Overload,
+            &args("--trace t.jsonl")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn overload_trace_ramps_and_is_seed_deterministic() {
+        let cfg = LoadGenConfig {
+            warmup: Duration::from_millis(200),
+            duration: Duration::from_secs(2),
+            seed: 7,
+            ..LoadGenConfig::default()
+        };
+        let a = synth_overload_trace(&cfg, 200.0);
+        assert!(!a.is_empty());
+        assert_eq!(a, synth_overload_trace(&cfg, 200.0), "same seed → same schedule");
+        let other = LoadGenConfig { seed: 8, ..cfg.clone() };
+        assert_ne!(a, synth_overload_trace(&other, 200.0));
+        assert!(a.windows(2).all(|w| w[0].at_ms < w[1].at_ms), "strictly increasing");
+        // The ramp: the second half of the window sees more arrivals than
+        // the first (rate climbs from peak/10 toward peak).
+        let total_ms = (cfg.warmup + cfg.duration).as_secs_f64() * 1e3;
+        let early = a.iter().filter(|e| e.at_ms < total_ms / 2.0).count();
+        let late = a.len() - early;
+        assert!(late > early, "ramp must accelerate: {early} early vs {late} late");
+        // Short-chat arrivals carry one of the stable session keys; the
+        // long-doc share carries none.
+        let keyed = a.iter().filter(|e| e.session.is_some()).count();
+        assert!(keyed > 0 && keyed < a.len());
+        let distinct: std::collections::HashSet<&String> =
+            a.iter().filter_map(|e| e.session.as_ref()).collect();
+        assert!(distinct.len() <= OVERLOAD_SESSIONS);
     }
 
     #[test]
@@ -1225,6 +1364,7 @@ mod tests {
             turns: 4,
             trace: None,
             record_trace: None,
+            peak_qps: None,
         };
         let ev = Evidence::default();
         ev.turns.fetch_add(3, Ordering::SeqCst);

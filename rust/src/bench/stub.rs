@@ -27,10 +27,13 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::cache::{
-    prefix::DEFAULT_CAP_BYTES, stub_tiers, AdaptiveConfig, AdaptiveController, CachePolicy,
+    resolve_cap_bytes, stub_tiers, AdaptiveConfig, AdaptiveController, CachePolicy,
     CacheState, Exec, PlanCtx, PolicyFlags, PrefixStore, SpaPolicy, StepObs,
 };
 use crate::coordinator::ledger::StepLedger;
+use crate::coordinator::mem::{
+    MemSnapshot, OverloadConfig, OverloadController, Pager, PagerConfig,
+};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ReqEvent, Request, Response, SlotState};
 use crate::coordinator::router::{Router, WorkerEndpoint, WorkerStatus};
@@ -154,7 +157,7 @@ fn run_stub(cfg: StubConfig, rx: Receiver<Command>, status: Arc<WorkerStatus>) {
     let batch = cfg.batch.max(1);
     let step = Duration::from_millis(cfg.step_ms);
     let mut prefix_store: Option<PrefixStore> = if cfg.prefix_cache {
-        Some(PrefixStore::new(cfg.prefix_mem.unwrap_or(DEFAULT_CAP_BYTES)))
+        Some(PrefixStore::new(resolve_cap_bytes(cfg.prefix_mem, None)))
     } else {
         None
     };
@@ -508,10 +511,27 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
     // name so a controller tier swap purges every entry computed under the
     // old step variant (DESIGN.md §11).
     let mut prefix_store: Option<PrefixStore> = if cfg.flags.prefix_cache {
-        Some(PrefixStore::new(cfg.flags.prefix_mem.unwrap_or(DEFAULT_CAP_BYTES)))
+        // The store's byte cap resolves against the pager budget when one
+        // is configured; explicit `--prefix-mem` still wins (DESIGN.md §12).
+        Some(PrefixStore::new(resolve_cap_bytes(
+            cfg.flags.prefix_mem,
+            cfg.flags.page_bytes,
+        )))
     } else {
         None
     };
+    // Paged slot-memory manager + overload controller (`--page-bytes` /
+    // `--grace`): admission spends *pages free* under the byte budget
+    // (cold tails evict first), and scheduled refreshes defer under queue
+    // pressure within the bounded drift debt (DESIGN.md §12).
+    let mut pager: Option<Pager> = cfg
+        .flags
+        .page_bytes
+        .map(|b| Pager::new(batch, STUB_SEQ_LEN, PagerConfig::with_budget(b)));
+    let mut overload: Option<OverloadController> = cfg
+        .flags
+        .grace
+        .map(|g| OverloadController::new(OverloadConfig::with_grace(g as f64)));
     let mut last_tier = ctrl.as_ref().map(|c| c.active_tier()).unwrap_or(0);
     let plan_tokens = vec![0i32; batch * STUB_SEQ_LEN];
     // Per-step cost ledger (accumulated across the worker's lifetime) and
@@ -577,6 +597,7 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
                         mirror_prefix_counters(&mut m, store);
                     }
                     m.affinity_dispatches = status.affinity_dispatches() as u64;
+                    m.set_mem(&MemSnapshot::collect(pager.as_ref(), overload.as_ref()));
                     let _ = reply.send(m);
                 }
                 Command::Shutdown => return,
@@ -616,17 +637,40 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
                 metrics.cancelled += 1;
                 status.dec_inflight();
                 slots[si] = SlotState::empty();
+                if let Some(p) = &mut pager {
+                    p.release(si);
+                }
             }
         }
 
         // FIFO admission through the production per-slot dirty machinery.
+        // With a pager/overload configured the paged gate applies: a
+        // rate-limited request rotates to the back of the queue (delayed,
+        // never dropped), and a request the page budget cannot back yet
+        // stalls the round from the front — page pressure must not starve
+        // a long-context request behind short ones.
         let mut admitted_rows: Vec<usize> = Vec::new();
         let mut warm_hits: Vec<(usize, usize)> = Vec::new();
-        for (si, slot) in residents.iter_mut().enumerate() {
-            if slot.is_some() {
-                continue;
-            }
+        let mut free_rows: VecDeque<usize> =
+            (0..batch).filter(|&si| residents[si].is_none()).collect();
+        let mut delayed: Vec<(Request, Sender<ReqEvent>)> = Vec::new();
+        for _ in 0..queue.len() {
+            let Some(&si) = free_rows.front() else { break };
             let Some((req, reply)) = queue.pop_front() else { break };
+            if let Some(o) = &mut overload {
+                if !o.admit_allowed(req.params.session.as_deref()) {
+                    delayed.push((req, reply));
+                    continue;
+                }
+            }
+            if let Some(p) = &mut pager {
+                let extent = req.tokens.len().min(STUB_SEQ_LEN);
+                if !p.admit(si, extent) {
+                    queue.push_front((req, reply));
+                    break;
+                }
+            }
+            free_rows.pop_front();
             metrics
                 .record_queue_wait(req.submitted.elapsed().as_secs_f64() * 1e3);
             let masks: Vec<usize> = req
@@ -650,8 +694,13 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
                     warm_hits.push((si, hit.depth));
                 }
             }
-            slots[si] = SlotState::assign(&req, 16);
-            *slot = Some(Resident {
+            // The decode window is clamped to what the mapped pages back
+            // (identity when every page mapped — see `assign_paged`).
+            slots[si] = match pager.as_ref().map(|p| p.mapped_tokens(si)) {
+                Some(mapped) => SlotState::assign_paged(&req, 16, mapped),
+                None => SlotState::assign(&req, 16),
+            };
+            residents[si] = Some(Resident {
                 req,
                 reply,
                 masks,
@@ -662,6 +711,7 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
             });
             admitted_rows.push(si);
         }
+        queue.extend(delayed);
         if !admitted_rows.is_empty() {
             state.admit(&admitted_rows, policy.partial_refresh(), &mut slots);
             // Pre-credit the warm share of partial-service cover *after*
@@ -689,7 +739,7 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
             .as_ref()
             .map(|c| c.row_refresh_per_step())
             .unwrap_or(cfg.flags.row_refresh_per_step.unwrap_or(1));
-        let plan = {
+        let mut plan = {
             let cx = PlanCtx {
                 state: &state,
                 tokens: &plan_tokens,
@@ -702,6 +752,30 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
             };
             policy.plan(&cx)
         };
+        let full_plan = !matches!(plan.exec, Exec::Cached { .. });
+        // Overload shed (`--grace`): under queue pressure, scheduled
+        // refreshes defer within the bounded drift debt and their rows
+        // are served stale this step (they keep committing instead of
+        // pausing — see the refresh pause below).  A deferred row must
+        // also drop its service entry: scheduled rows were still
+        // cache-valid at plan time, so a surviving entry would heal a row
+        // the commit never re-dirtied.
+        if let Some(o) = &mut overload {
+            if !full_plan {
+                let freeq = residents.iter().filter(|s| s.is_none()).count();
+                let pressure = if queue.len() + freeq == 0 {
+                    0.0
+                } else {
+                    queue.len() as f64 / (queue.len() + freeq) as f64
+                };
+                let drift = ctrl.as_ref().map(|c| c.mean_drift()).unwrap_or(0.0);
+                if o.shed_scheduled(pressure, drift, &mut plan.scheduled) > 0 {
+                    let kept = plan.scheduled.clone();
+                    plan.serviced
+                        .retain(|sv| !slots[sv.row].cache_valid || kept.contains(&sv.row));
+                }
+            }
+        }
         // Delta-aware upload accounting, **between plan and commit**
         // (commit revalidates serviced rows, so validity must be read
         // here): refresh-class plans re-upload every occupied row; cached
@@ -711,7 +785,6 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
         // phase carries honest, row-proportional time.
         let step_t0 = Instant::now();
         {
-            let full_plan = !matches!(plan.exec, Exec::Cached { .. });
             upload_staging.clear();
             for (row, slot) in slots.iter().enumerate().take(batch) {
                 if !slot.occupied {
@@ -741,6 +814,14 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
                     r.prefill_steps -= 1;
                     continue;
                 }
+                if !full_plan && plan.scheduled.contains(&si) {
+                    // A scheduled per-row refresh occupies the row's
+                    // service this step: its commit waits exactly like
+                    // modelled prefill.  Rows the overload controller
+                    // deferred are no longer in `scheduled` — they commit
+                    // (served stale) instead of paying this pause.
+                    continue;
+                }
                 r.steps += 1;
                 let ncommit =
                     cfg.commits_per_step.max(1).min(r.masks.len() - r.committed);
@@ -767,6 +848,9 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
             if done {
                 let r = slot.take().expect("finished resident present");
                 slots[si] = SlotState::empty();
+                if let Some(p) = &mut pager {
+                    p.release(si);
+                }
                 // Donate under the active tier's tag, publishing the bloom
                 // before Done (see the plain stub for why).
                 if let Some(store) = &mut prefix_store {
@@ -814,6 +898,39 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
                 proxy_drift: cfg.proxy_drift.as_deref(),
             });
         }
+        // Page upkeep after the commits: re-classify pages beyond each
+        // row's advanced frontier (a dirty row's tail is cold — its cover
+        // is being re-derived anyway), then fault the frontier's pages
+        // back resident.  A fault means evicted content must be
+        // re-derived before use: the row's partial-service cover
+        // restarts; an unsatisfiable fault also drops validity so the
+        // heal loop re-services the row once frames free up.
+        if let Some(p) = &mut pager {
+            for (si, slot) in residents.iter().enumerate() {
+                let Some(r) = slot else { continue };
+                let hot = (r.req.prompt_len + r.committed).min(STUB_SEQ_LEN);
+                p.observe_slot(si, hot, !slots[si].cache_valid);
+                match p.ensure_resident(si, hot) {
+                    Some(0) => {}
+                    Some(_) => slots[si].cache_cover = 0,
+                    None => {
+                        slots[si].cache_valid = false;
+                        slots[si].cache_cover = 0;
+                    }
+                }
+            }
+        }
+        // Overload pressure observation — degraded mode exits only after
+        // the configured dwell of consecutive calm steps.
+        if let Some(o) = &mut overload {
+            let freeq = residents.iter().filter(|s| s.is_none()).count();
+            let pressure = if queue.len() + freeq == 0 {
+                0.0
+            } else {
+                queue.len() as f64 / (queue.len() + freeq) as f64
+            };
+            o.observe(pressure);
+        }
         // A controller tier swap invalidates every prefix entry donated
         // under the old step variant — purge to the new signature so a
         // warm admission can never seed stale-tier rows.
@@ -847,6 +964,7 @@ fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<Wor
             mirror_prefix_counters(&mut metrics, store);
         }
         metrics.affinity_dispatches = status.affinity_dispatches() as u64;
+        metrics.set_mem(&MemSnapshot::collect(pager.as_ref(), overload.as_ref()));
         metrics.ledger = ledger_total.clone();
         next_step = Instant::now() + step;
     }

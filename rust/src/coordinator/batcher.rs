@@ -32,6 +32,11 @@ pub struct BatcherConfig {
     /// first free slot.  The serving worker overwrites this from the
     /// active policy's capability.
     pub admission_forces_refresh: bool,
+    /// Page-budget admission path (`--page-bytes`): tokens per page of the
+    /// worker's slot-memory pager.  When set, the worker admits by *pages
+    /// free* rather than slots free ([`Batcher::admit_paged`]); `None`
+    /// keeps the dense fixed-geometry admission.
+    pub page_tokens: Option<usize>,
 }
 
 impl Default for BatcherConfig {
@@ -41,8 +46,23 @@ impl Default for BatcherConfig {
             min_free: 2,
             max_wait: Duration::from_millis(200),
             admission_forces_refresh: true,
+            page_tokens: None,
         }
     }
+}
+
+/// Per-request verdict of the paged admission gate (`admit_paged`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitGate {
+    /// Admit into a free slot now.
+    Admit,
+    /// Delay (degraded-mode rate limit): rotate to the back of the queue —
+    /// the request is shaped, never dropped.
+    Delay,
+    /// The pager cannot back this request's extent yet: leave it at the
+    /// front and stop admitting this round (FIFO head-of-line, so page
+    /// pressure cannot starve a long-context request behind short ones).
+    NoPages,
 }
 
 /// FIFO admission queue in front of one worker's batch slots.
@@ -122,6 +142,51 @@ impl Batcher {
         }
         let take = free_slots.min(self.queue.len());
         let out: Vec<Request> = self.queue.drain(..take).collect();
+        self.admitted += out.len() as u64;
+        out
+    }
+
+    /// Paged admission (`BatcherConfig::page_tokens`): same timing gate as
+    /// [`Self::admit`], but each candidate passes through `gate` — the
+    /// worker's pages-free + overload check.  [`AdmitGate::Delay`]ed
+    /// requests rotate to the back (token-bucket shaping under degraded
+    /// mode); [`AdmitGate::NoPages`] stalls the round with the request
+    /// still at the front.  One pass over the queue, so a round always
+    /// terminates.
+    pub fn admit_paged(
+        &mut self,
+        free_slots: usize,
+        now: Instant,
+        mut gate: impl FnMut(&Request) -> AdmitGate,
+    ) -> Vec<Request> {
+        if self.queue.is_empty() || free_slots == 0 {
+            return Vec::new();
+        }
+        let oldest_wait =
+            self.queue.front().map(|r| now.duration_since(r.submitted)).unwrap_or_default();
+        let min_free = if self.cfg.admission_forces_refresh { self.cfg.min_free } else { 1 };
+        let should =
+            free_slots >= min_free.min(self.cfg.batch) || oldest_wait >= self.cfg.max_wait;
+        if !should {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let mut delayed = Vec::new();
+        for _ in 0..self.queue.len() {
+            if out.len() == free_slots {
+                break;
+            }
+            let Some(req) = self.queue.pop_front() else { break };
+            match gate(&req) {
+                AdmitGate::Admit => out.push(req),
+                AdmitGate::Delay => delayed.push(req),
+                AdmitGate::NoPages => {
+                    self.queue.push_front(req);
+                    break;
+                }
+            }
+        }
+        self.queue.extend(delayed);
         self.admitted += out.len() as u64;
         out
     }
@@ -218,6 +283,50 @@ mod tests {
         let second = b.admit(4, Instant::now());
         let ids: Vec<u64> = first.iter().chain(second.iter()).map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn paged_admission_rotates_delayed_and_stalls_on_pages() {
+        let mut b = Batcher::new(BatcherConfig {
+            batch: 4,
+            min_free: 1,
+            max_wait: Duration::from_secs(10),
+            admission_forces_refresh: false,
+            page_tokens: Some(16),
+        });
+        for i in 0..4 {
+            b.submit(req(i, 0));
+        }
+        // Gate: rate-limit id 0, stall on id 2 (no pages), admit the rest.
+        let admitted = b.admit_paged(4, Instant::now(), |r| match r.id {
+            0 => AdmitGate::Delay,
+            2 => AdmitGate::NoPages,
+            _ => AdmitGate::Admit,
+        });
+        assert_eq!(admitted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        // Stalled request stays at the front; delayed one rotated behind.
+        let rest = b.admit_paged(4, Instant::now(), |_| AdmitGate::Admit);
+        assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3, 0]);
+        assert_eq!(b.queue_len(), 0);
+        assert_eq!(b.admitted, 4, "delay/stall never drop a request");
+    }
+
+    #[test]
+    fn paged_admission_all_delayed_terminates() {
+        let mut b = Batcher::new(BatcherConfig {
+            min_free: 1,
+            admission_forces_refresh: false,
+            ..BatcherConfig::default()
+        });
+        for i in 0..3 {
+            b.submit(req(i, 0));
+        }
+        // Every request rate-limited: one pass, queue order preserved.
+        let admitted = b.admit_paged(4, Instant::now(), |_| AdmitGate::Delay);
+        assert!(admitted.is_empty());
+        assert_eq!(b.queue_len(), 3);
+        let rest = b.admit_paged(4, Instant::now(), |_| AdmitGate::Admit);
+        assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
     }
 
     #[test]

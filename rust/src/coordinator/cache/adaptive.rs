@@ -355,6 +355,16 @@ impl AdaptiveController {
     pub fn schedule(&self) -> &RhoSchedule {
         &self.schedule
     }
+
+    /// Mean of the EWMA per-layer drift estimate — the staleness cost the
+    /// overload controller charges per deferred row refresh
+    /// (`coordinator::mem::OverloadController::shed_scheduled`).
+    pub fn mean_drift(&self) -> f64 {
+        if self.drift.is_empty() {
+            return 0.0;
+        }
+        self.drift.iter().sum::<f64>() / self.drift.len() as f64
+    }
 }
 
 /// The synthetic three-level tier family the artifact-free stub benches

@@ -18,10 +18,13 @@ use super::adaptive::{
     discover_tiers, heal_budget_for, AdaptiveConfig, AdaptiveController, StepObs,
 };
 use super::policy::{CachePolicy, Exec, PlanCtx};
-use super::prefix::{PrefixCounters, PrefixStore, DEFAULT_CAP_BYTES};
+use super::prefix::{resolve_cap_bytes, PrefixCounters, PrefixStore};
 use super::state::CacheState;
 use super::{MethodSpec, PolicyFlags};
 use crate::coordinator::ledger::{timed, StepLedger};
+use crate::coordinator::mem::{
+    MemSnapshot, OverloadConfig, OverloadController, Pager, PagerConfig,
+};
 use crate::coordinator::request::SlotState;
 use crate::util::threadpool::par_row_chunks;
 
@@ -159,6 +162,19 @@ pub struct Method {
     /// step variant's name — the tier family member that produced them —
     /// and purged on tier swaps (DESIGN.md §11).
     prefix: Option<PrefixStore>,
+    /// Paged slot-memory accounting (`--page-bytes`): maps each slot's
+    /// cache rows through fixed-size token pages under a global byte
+    /// budget, with cold-page eviction past the commit frontier
+    /// (DESIGN.md §12).  Admission consults pages free, not slots free.
+    pager: Option<Pager>,
+    /// Overload controller (`--grace`): defers scheduled refreshes under
+    /// queue pressure within a bounded drift debt, then degrades to
+    /// token-bucket admission shaping before any request is dropped.
+    overload: Option<OverloadController>,
+    /// Queue pressure from the most recent [`Method::observe`] call —
+    /// the overload controller's shed decision in the *next* step reads
+    /// it (plan-time has no queue visibility of its own).
+    last_pressure: f64,
 }
 
 impl Method {
@@ -195,6 +211,9 @@ impl Method {
             tok_buf: None,
             tok_delta: TokenDelta::default(),
             prefix: None,
+            pager: None,
+            overload: None,
+            last_pressure: 0.0,
         })
     }
 
@@ -223,8 +242,26 @@ impl Method {
             self.enable_adaptive(engine, cfg)?;
         }
         if flags.prefix_cache {
-            self.prefix =
-                Some(PrefixStore::new(flags.prefix_mem.unwrap_or(DEFAULT_CAP_BYTES)));
+            // The store's byte cap resolves against the pager budget when
+            // one is configured: explicit `--prefix-mem` still wins.
+            self.prefix = Some(PrefixStore::new(resolve_cap_bytes(
+                flags.prefix_mem,
+                flags.page_bytes,
+            )));
+        }
+        // Like `--adaptive`, the paged-memory gates are spa-kind
+        // capabilities: only spa methods carry the partial-service cover
+        // the pager's cold classification reads, so other methods in a
+        // mixed lineup keep their dense-geometry baselines.
+        if self.step_var.info.kind == "spa" {
+            if let Some(budget) = flags.page_bytes {
+                let (b, n, _) = self.geometry();
+                self.pager = Some(Pager::new(b, n, PagerConfig::with_budget(budget)));
+            }
+            if let Some(grace) = flags.grace {
+                self.overload =
+                    Some(OverloadController::new(OverloadConfig::with_grace(grace as f64)));
+            }
         }
         Ok(())
     }
@@ -276,6 +313,102 @@ impl Method {
     /// load-gauge publish (`None` without `--prefix-cache`).
     pub fn prefix_summary(&self) -> Option<u64> {
         self.prefix.as_ref().map(|s| s.summary())
+    }
+
+    /// Whether the paged slot-memory path is active (`--page-bytes`).
+    pub fn paged(&self) -> bool {
+        self.pager.is_some()
+    }
+
+    /// Tokens per page of the pager (`None` without `--page-bytes`).
+    pub fn page_tokens(&self) -> Option<usize> {
+        self.pager.as_ref().map(|p| p.page_tokens())
+    }
+
+    /// Whether admission must run through the paged/overload gate
+    /// ([`crate::coordinator::batcher::Batcher::admit_paged`]) instead of
+    /// the dense slots-free path.
+    pub fn admission_gated(&self) -> bool {
+        self.pager.is_some() || self.overload.is_some()
+    }
+
+    /// Page frames admissible right now — free frames plus reclaimable
+    /// cold pages (`None` without a pager).  The scheduler's admission
+    /// gate spends this *pages free* currency instead of slots free.
+    pub fn pages_free(&self) -> Option<usize> {
+        self.pager.as_ref().map(|p| p.pages_free())
+    }
+
+    /// Pages a row of `tokens` committed positions maps to (`None`
+    /// without a pager).
+    pub fn pages_for(&self, tokens: usize) -> Option<usize> {
+        self.pager.as_ref().map(|p| p.pages_for(tokens))
+    }
+
+    /// Map an admitted row's extent through the page table, evicting cold
+    /// pages on shortfall.  `true` when the pages were mapped (trivially
+    /// so without a pager); `false` means the budget is exhausted and the
+    /// admission must wait.
+    pub fn pager_admit(&mut self, row: usize, extent_tokens: usize) -> bool {
+        match &mut self.pager {
+            Some(p) => p.admit(row, extent_tokens),
+            None => true,
+        }
+    }
+
+    /// Tokens covered by the row's mapped pages (`None` without a pager) —
+    /// the clamp [`SlotState::assign_paged`] applies.
+    pub fn pager_mapped_tokens(&self, row: usize) -> Option<usize> {
+        self.pager.as_ref().map(|p| p.mapped_tokens(row))
+    }
+
+    /// Return a departing row's page frames to the free pool (completion
+    /// or cancellation).  No-op without a pager.
+    pub fn pager_release(&mut self, row: usize) {
+        if let Some(p) = &mut self.pager {
+            p.release(row);
+        }
+    }
+
+    /// Per-step page upkeep for every resident row: re-classify pages
+    /// beyond the commit frontier (a dirty row's tail is cold — its cover
+    /// is being re-derived anyway), then fault the frontier's pages back
+    /// resident.  A fault means evicted content must be re-derived: the
+    /// row's partial-service cover restarts; an unsatisfiable fault (the
+    /// budget is pinned) additionally drops the row's validity so the
+    /// heal loop re-services it once frames free up.
+    pub fn pager_track(&mut self, slots: &mut [SlotState]) {
+        let Some(p) = &mut self.pager else { return };
+        for (row, s) in slots.iter_mut().enumerate() {
+            if !s.occupied {
+                continue;
+            }
+            p.observe_slot(row, s.gen_end, !s.cache_valid);
+            match p.ensure_resident(row, s.gen_end) {
+                Some(0) => {}
+                Some(_) => s.cache_cover = 0,
+                None => {
+                    s.cache_valid = false;
+                    s.cache_cover = 0;
+                }
+            }
+        }
+    }
+
+    /// Degraded-mode admission gate: `true` unless the overload
+    /// controller is degraded and `session`'s token bucket is empty.
+    /// Trivially `true` without `--grace`.
+    pub fn admit_allowed(&mut self, session: Option<&str>) -> bool {
+        match &mut self.overload {
+            Some(o) => o.admit_allowed(session),
+            None => true,
+        }
+    }
+
+    /// Point-in-time pager + overload accounting for the worker's metrics
+    /// mirror (zeros when neither component is configured).
+    pub fn mem_snapshot(&self) -> MemSnapshot {
+        MemSnapshot::collect(self.pager.as_ref(), self.overload.as_ref())
     }
 
     /// Attach the adaptive budget controller: discover the hot-swappable
@@ -346,6 +479,14 @@ impl Method {
                 free_slots,
                 proxy_drift: drift.as_deref(),
             });
+        }
+        self.last_pressure = if queue_depth + free_slots == 0 {
+            0.0
+        } else {
+            queue_depth as f64 / (queue_depth + free_slots) as f64
+        };
+        if let Some(ovl) = &mut self.overload {
+            ovl.observe(self.last_pressure);
         }
     }
 
@@ -425,7 +566,7 @@ impl Method {
             }
         }
 
-        let plan = {
+        let mut plan = {
             let cx = PlanCtx {
                 state: &self.state,
                 tokens,
@@ -438,6 +579,21 @@ impl Method {
             };
             self.policy.plan(&cx)
         };
+        // Overload shed (`--grace`): under queue pressure, defer scheduled
+        // refreshes within the bounded drift debt — the deferred rows are
+        // served stale this step and re-proposed by the policy next step.
+        // A deferred row must also drop its service entry: scheduled rows
+        // were still cache-valid at plan time (dirty rows were not), so a
+        // surviving service entry would heal a row that was never
+        // re-dirtied by the commit.
+        if let Some(ovl) = &mut self.overload {
+            let drift = self.adaptive.as_ref().map(|c| c.mean_drift()).unwrap_or(0.0);
+            if ovl.shed_scheduled(self.last_pressure, drift, &mut plan.scheduled) > 0 {
+                let kept = plan.scheduled.clone();
+                plan.serviced
+                    .retain(|sv| !slots[sv.row].cache_valid || kept.contains(&sv.row));
+            }
+        }
 
         let step_var = Rc::clone(&self.step_var);
         // Delta-aware token upload: clean rows keep their device-resident

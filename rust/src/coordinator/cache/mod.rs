@@ -45,7 +45,7 @@ pub use adaptive::{
     discover_tiers, heal_budget_for, stub_tiers, AdaptiveConfig, AdaptiveController,
     BudgetTier, StepObs,
 };
-pub use prefix::{PrefixCounters, PrefixHit, PrefixStore};
+pub use prefix::{resolve_cap_bytes, PrefixCounters, PrefixHit, PrefixStore};
 pub use manual::{IndexPolicy, ManualPolicy};
 pub use method::{
     runtime_input_prefix, update_confidence, DeltaUpload, Method, StepOut, TokenDelta,
@@ -87,8 +87,19 @@ pub struct PolicyFlags {
     /// cold-start baselines stay the recorded default.
     pub prefix_cache: bool,
     /// `--prefix-mem BYTES`: prefix-store byte cap per worker
-    /// (`None` = [`prefix::DEFAULT_CAP_BYTES`]).
+    /// (`None` = derived from `page_bytes` when paged, else
+    /// [`prefix::DEFAULT_CAP_BYTES`] — see [`prefix::resolve_cap_bytes`]).
     pub prefix_mem: Option<usize>,
+    /// `--page-bytes BYTES`: per-worker slot-memory byte budget — attaches
+    /// the page allocator (`coordinator::mem::Pager`): paged admission,
+    /// cold-page eviction, PAD tails reclaimed (DESIGN.md §12).  Default
+    /// off (dense fixed-geometry rows).
+    pub page_bytes: Option<usize>,
+    /// `--grace N`: drift-debt bound — attaches the overload controller
+    /// (`coordinator::mem::OverloadController`): scheduled refreshes defer
+    /// under queue pressure and rows serve stale within this bound before
+    /// degraded-mode rate limiting engages.  Default off.
+    pub grace: Option<usize>,
 }
 
 impl Default for PolicyFlags {
@@ -101,6 +112,8 @@ impl Default for PolicyFlags {
             refit_interval: None,
             prefix_cache: false,
             prefix_mem: None,
+            page_bytes: None,
+            grace: None,
         }
     }
 }
@@ -108,7 +121,8 @@ impl Default for PolicyFlags {
 impl PolicyFlags {
     /// Parse `--partial-refresh on|off`, `--refresh-interval N`,
     /// `--adaptive on|off`, `--row-refresh N`, `--refit-interval N`,
-    /// `--prefix-cache on|off` and `--prefix-mem BYTES`.
+    /// `--prefix-cache on|off`, `--prefix-mem BYTES`, `--page-bytes BYTES`
+    /// and `--grace N`.
     pub fn from_args(args: &Args) -> Result<PolicyFlags> {
         let parse_gate = |key: &str, default: bool| -> Result<bool> {
             match args.get(key) {
@@ -133,7 +147,15 @@ impl PolicyFlags {
             refit_interval: args.strict_count("refit-interval")?,
             prefix_cache: parse_gate("prefix-cache", false)?,
             prefix_mem: args.strict_count("prefix-mem")?,
+            page_bytes: args.strict_count("page-bytes")?,
+            grace: args.strict_count("grace")?,
         })
+    }
+
+    /// Whether either slot-memory gate (pager or overload controller) is
+    /// set — the bench paths stamp paged trajectory columns iff so.
+    pub fn paged(&self) -> bool {
+        self.page_bytes.is_some() || self.grace.is_some()
     }
 }
 
@@ -323,5 +345,13 @@ mod tests {
         assert!(!PolicyFlags::from_args(&parse("")).unwrap().prefix_cache, "default off");
         assert!(PolicyFlags::from_args(&parse("--prefix-cache yes!")).is_err());
         assert!(PolicyFlags::from_args(&parse("--prefix-mem 8M")).is_err());
+        // Slot-memory gates: page budget + grace bound, strict.
+        let p = PolicyFlags::from_args(&parse("--page-bytes 4096 --grace 32")).unwrap();
+        assert_eq!(p.page_bytes, Some(4096));
+        assert_eq!(p.grace, Some(32));
+        assert!(p.paged());
+        assert!(!PolicyFlags::from_args(&parse("")).unwrap().paged(), "default off");
+        assert!(PolicyFlags::from_args(&parse("--page-bytes 4k")).is_err());
+        assert!(PolicyFlags::from_args(&parse("--grace x")).is_err());
     }
 }

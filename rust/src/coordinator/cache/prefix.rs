@@ -50,6 +50,25 @@ pub const MIN_DEPTH: usize = 4;
 /// Default store budget (`--prefix-mem` overrides).
 pub const DEFAULT_CAP_BYTES: usize = 8 << 20;
 
+/// Share of the pager's slot-memory budget the prefix store may consume
+/// when no explicit `--prefix-mem` override is given (see
+/// [`resolve_cap_bytes`]).
+pub const PAGE_BUDGET_SHARE: usize = 4;
+
+/// Resolve the store's byte cap against the slot-memory budget: an
+/// explicit `--prefix-mem` always wins (the override); otherwise, when the
+/// pager is active (`--page-bytes`), donations are bounded by a
+/// [`PAGE_BUDGET_SHARE`]th of the same budget that bounds resident pages —
+/// one knob bounds total cache memory instead of two independent caps;
+/// with neither flag the historical default applies.
+pub fn resolve_cap_bytes(prefix_mem: Option<usize>, page_bytes: Option<usize>) -> usize {
+    match (prefix_mem, page_bytes) {
+        (Some(explicit), _) => explicit,
+        (None, Some(budget)) => (budget / PAGE_BUDGET_SHARE).max(1),
+        (None, None) => DEFAULT_CAP_BYTES,
+    }
+}
+
 /// Fixed per-entry overhead charged against the byte cap (map slot, key,
 /// tag string header, LRU clock) on top of the 4 bytes/token payload.
 const ENTRY_OVERHEAD: usize = 96;
@@ -257,6 +276,18 @@ mod tests {
     use super::*;
     use crate::util::proptest::check;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn cap_resolves_against_the_page_budget() {
+        // Explicit override always wins.
+        assert_eq!(resolve_cap_bytes(Some(1234), Some(1 << 20)), 1234);
+        assert_eq!(resolve_cap_bytes(Some(1234), None), 1234);
+        // Pager active: the prefix store shares the slot-memory budget.
+        assert_eq!(resolve_cap_bytes(None, Some(1 << 20)), (1 << 20) / PAGE_BUDGET_SHARE);
+        assert_eq!(resolve_cap_bytes(None, Some(1)), 1, "floored at one byte");
+        // Neither flag: historical default.
+        assert_eq!(resolve_cap_bytes(None, None), DEFAULT_CAP_BYTES);
+    }
 
     #[test]
     fn chain_key_extends_incrementally() {

@@ -1,0 +1,65 @@
+//! Slot-memory management: paged cache accounting + overload control.
+//!
+//! `pager` divides each slot's fixed `[B, N]` cache rows into fixed-size
+//! token pages with a resident/cold/evicted state machine under a global
+//! byte budget — the single owner of slot-memory accounting (the prefix
+//! store's byte cap resolves against the same budget, DESIGN.md §12).
+//! `overload` layers a fresh→stale→grace row lifecycle on top of the
+//! PR-5 adaptive loop: under queue pressure scheduled refreshes are
+//! deferred and stale rows served within a bounded drift debt, then the
+//! system sheds to an explicit degraded mode with per-client token-bucket
+//! rate limits before any request is dropped.
+
+pub mod overload;
+pub mod pager;
+
+pub use overload::{OverloadConfig, OverloadController, OverloadCounters, DRIFT_FALLBACK};
+pub use pager::{PageState, Pager, PagerConfig, PagerCounters, DEFAULT_PAGE_TOKENS};
+
+/// Point-in-time mirror of pager + overload accounting, in the shape the
+/// metrics layer exports (see `Metrics`): monotone counters plus the two
+/// gauges (`degraded_mode`, `drift_debt_peak`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MemSnapshot {
+    /// Pages ever made resident (admissions + faults).
+    pub pages_resident: u64,
+    /// Cold pages reclaimed by the eviction loop.
+    pub pages_evicted: u64,
+    /// Page frames returned to the free pool (eviction + release).
+    pub pages_reclaimed: u64,
+    /// Scheduled refreshes deferred — rows served stale under grace.
+    pub stale_served: u64,
+    /// Admissions delayed by the degraded-mode token buckets.
+    pub rate_limited: u64,
+    /// Transitions into degraded mode.
+    pub degraded_entries: u64,
+    /// Transitions out of degraded mode.
+    pub degraded_exits: u64,
+    /// Whether the controller is currently degraded (gauge, merge-max).
+    pub degraded_mode: bool,
+    /// Peak drift debt reached so far (gauge, merge-max; ≤ grace bound).
+    pub drift_debt_peak: f64,
+}
+
+impl MemSnapshot {
+    /// Collect a snapshot from whichever of the two components are live.
+    pub fn collect(pager: Option<&Pager>, overload: Option<&OverloadController>) -> Self {
+        let mut s = MemSnapshot::default();
+        if let Some(p) = pager {
+            let c = p.counters();
+            s.pages_resident = c.resident_total;
+            s.pages_evicted = c.evicted_total;
+            s.pages_reclaimed = c.reclaimed_total;
+        }
+        if let Some(o) = overload {
+            let c = o.counters();
+            s.stale_served = c.stale_served;
+            s.rate_limited = c.rate_limited;
+            s.degraded_entries = c.degraded_entries;
+            s.degraded_exits = c.degraded_exits;
+            s.degraded_mode = o.degraded();
+            s.drift_debt_peak = c.debt_peak;
+        }
+        s
+    }
+}

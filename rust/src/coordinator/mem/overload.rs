@@ -1,0 +1,309 @@
+//! Overload controller: fresh→stale→grace row lifecycle + degraded mode.
+//!
+//! Extends the PR-5 adaptive loop with bounded-staleness serving
+//! (SpinelDB's stale-while-revalidate lifecycle, SNIPPETS.md §2): under
+//! queue pressure, scheduled per-row refreshes are *deferred* and the
+//! stale rows served anyway, with the accumulated staleness tracked as a
+//! **drift debt** (each deferral charges the controller's current EWMA
+//! drift estimate; each executed refresh repays it).  The debt is capped
+//! at the configured `grace` bound — `shed_scheduled` never defers past
+//! it, so the peak-debt gauge proves stale rows were served within the
+//! bound.  When the bound binds, the controller sheds to an explicit
+//! **degraded mode**: scheduled refreshes run again (repaying debt) and
+//! admissions are shaped by per-client token buckets.  Rate-limited
+//! requests are *delayed* (rotated to the back of the queue), never
+//! dropped.  Degraded mode exits after `dwell` consecutive calm steps.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Drift charged per deferral when the adaptive controller has no
+/// estimate yet (or is not running).
+pub const DRIFT_FALLBACK: f64 = 0.25;
+
+/// Overload-controller knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct OverloadConfig {
+    /// Drift-debt bound: total EWMA drift the controller may accumulate
+    /// across deferred refreshes before entering degraded mode.
+    pub grace: f64,
+    /// Queue-pressure threshold (`queue / (queue + free)`) above which
+    /// refresh deferral starts.
+    pub pressure_high: f64,
+    /// Consecutive calm steps required to exit degraded mode.
+    pub dwell: usize,
+    /// Token-bucket refill rate per client, tokens per second.
+    pub bucket_rate: f64,
+    /// Token-bucket burst capacity per client.
+    pub bucket_burst: f64,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        OverloadConfig {
+            grace: 32.0,
+            pressure_high: 0.5,
+            dwell: 4,
+            // Shaping, not throttling: the per-client rate sits above one
+            // worker's fair-share service rate so the buckets only bind on
+            // a client flooding past its share — aggregate goodput under
+            // degraded mode must stay at capacity, never bucket-bound.
+            bucket_rate: 64.0,
+            bucket_burst: 16.0,
+        }
+    }
+}
+
+impl OverloadConfig {
+    /// Config with an explicit grace bound (the `--grace` flag).
+    pub fn with_grace(grace: f64) -> Self {
+        OverloadConfig { grace, ..OverloadConfig::default() }
+    }
+}
+
+/// Monotone overload counters (exported as `spa_*_total`) plus the
+/// peak-debt gauge.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OverloadCounters {
+    /// Scheduled refreshes deferred — rows served stale under grace.
+    pub stale_served: u64,
+    /// Admissions delayed by degraded-mode token buckets.
+    pub rate_limited: u64,
+    /// Transitions into degraded mode.
+    pub degraded_entries: u64,
+    /// Transitions out of degraded mode.
+    pub degraded_exits: u64,
+    /// Peak drift debt reached (≤ `grace` by construction).
+    pub debt_peak: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Bucket {
+    level: f64,
+    last: Instant,
+}
+
+/// The controller. One per worker, stepped from the serving loop.
+#[derive(Debug)]
+pub struct OverloadController {
+    cfg: OverloadConfig,
+    debt: f64,
+    degraded: bool,
+    calm: usize,
+    buckets: HashMap<String, Bucket>,
+    counters: OverloadCounters,
+}
+
+impl OverloadController {
+    /// Build a controller with the given knobs.
+    pub fn new(cfg: OverloadConfig) -> Self {
+        OverloadController {
+            cfg,
+            debt: 0.0,
+            degraded: false,
+            calm: 0,
+            buckets: HashMap::new(),
+            counters: OverloadCounters::default(),
+        }
+    }
+
+    /// Whether the controller is currently in degraded mode.
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// Current drift debt (always ≤ `grace`).
+    pub fn debt(&self) -> f64 {
+        self.debt
+    }
+
+    /// Configured knobs.
+    pub fn config(&self) -> &OverloadConfig {
+        &self.cfg
+    }
+
+    /// Monotone counters + peak-debt gauge.
+    pub fn counters(&self) -> OverloadCounters {
+        self.counters
+    }
+
+    /// Defer scheduled row refreshes under pressure.  `scheduled` is the
+    /// plan's stalest-first refresh list; deferrals pop from the back
+    /// (least-stale rows first) so the oldest rows still refresh.  Each
+    /// deferral charges `drift` (the adaptive EWMA estimate, or
+    /// [`DRIFT_FALLBACK`]) against the grace bound; when the next charge
+    /// would exceed it the controller enters degraded mode instead of
+    /// deferring further.  With no pressure — or in degraded mode, where
+    /// refreshes must run — executed refreshes repay the debt.  Returns
+    /// the number of rows deferred this step.
+    pub fn shed_scheduled(
+        &mut self,
+        pressure: f64,
+        drift: f64,
+        scheduled: &mut Vec<usize>,
+    ) -> usize {
+        let drift = if drift.is_finite() && drift > 0.0 { drift } else { DRIFT_FALLBACK };
+        if scheduled.is_empty() || self.degraded || pressure <= self.cfg.pressure_high {
+            // Refreshes execute: each repays one deferral's worth of debt.
+            self.debt = (self.debt - drift * scheduled.len() as f64).max(0.0);
+            return 0;
+        }
+        let mut deferred = 0usize;
+        while !scheduled.is_empty() {
+            if self.debt + drift > self.cfg.grace {
+                self.degraded = true;
+                self.calm = 0;
+                self.counters.degraded_entries += 1;
+                break;
+            }
+            scheduled.pop();
+            self.debt += drift;
+            deferred += 1;
+        }
+        self.counters.stale_served += deferred as u64;
+        if self.debt > self.counters.debt_peak {
+            self.counters.debt_peak = self.debt;
+        }
+        deferred
+    }
+
+    /// Per-step pressure observation: degraded mode exits after `dwell`
+    /// consecutive steps below the pressure threshold (debt forgiven,
+    /// buckets reset).
+    pub fn observe(&mut self, pressure: f64) {
+        if self.degraded && pressure < self.cfg.pressure_high {
+            self.calm += 1;
+            if self.calm >= self.cfg.dwell {
+                self.degraded = false;
+                self.calm = 0;
+                self.debt = 0.0;
+                self.buckets.clear();
+                self.counters.degraded_exits += 1;
+            }
+        } else {
+            self.calm = 0;
+        }
+    }
+
+    /// Admission gate. Outside degraded mode every request passes; in
+    /// degraded mode each client (session key, or a shared anonymous
+    /// bucket) draws from a token bucket.  A dry bucket delays the
+    /// request — the caller rotates it to the back of the queue; it is
+    /// never dropped.
+    pub fn admit_allowed(&mut self, client: Option<&str>) -> bool {
+        self.admit_allowed_at(client, Instant::now())
+    }
+
+    /// [`Self::admit_allowed`] with an injectable clock (tests).
+    pub fn admit_allowed_at(&mut self, client: Option<&str>, now: Instant) -> bool {
+        if !self.degraded {
+            return true;
+        }
+        let key = client.unwrap_or("anon");
+        let burst = self.cfg.bucket_burst;
+        let rate = self.cfg.bucket_rate;
+        let b = self
+            .buckets
+            .entry(key.to_string())
+            .or_insert(Bucket { level: burst, last: now });
+        let dt = now.saturating_duration_since(b.last).as_secs_f64();
+        b.level = (b.level + rate * dt).min(burst);
+        b.last = now;
+        if b.level >= 1.0 {
+            b.level -= 1.0;
+            true
+        } else {
+            self.counters.rate_limited += 1;
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn no_pressure_means_no_deferrals() {
+        let mut c = OverloadController::new(OverloadConfig::default());
+        let mut sched = vec![0, 1, 2];
+        assert_eq!(c.shed_scheduled(0.2, 0.5, &mut sched), 0);
+        assert_eq!(sched.len(), 3);
+        assert_eq!(c.counters().stale_served, 0);
+    }
+
+    #[test]
+    fn debt_accumulates_to_grace_then_degrades() {
+        let mut c = OverloadController::new(OverloadConfig::with_grace(1.0));
+        // drift 0.4: two deferrals fit (0.8), third would breach 1.0.
+        let mut sched = vec![0, 1, 2, 3];
+        let deferred = c.shed_scheduled(0.9, 0.4, &mut sched);
+        assert_eq!(deferred, 2);
+        assert_eq!(sched.len(), 2);
+        assert!(c.degraded());
+        assert_eq!(c.counters().degraded_entries, 1);
+        assert!(c.counters().debt_peak <= 1.0);
+        // Degraded: refreshes run again and repay debt.
+        let mut sched = vec![0, 1];
+        assert_eq!(c.shed_scheduled(0.9, 0.4, &mut sched), 0);
+        assert_eq!(sched.len(), 2);
+        assert!(c.debt() < 0.8);
+    }
+
+    #[test]
+    fn deferrals_pop_least_stale_end() {
+        let mut c = OverloadController::new(OverloadConfig::with_grace(10.0));
+        // Stalest-first list: row 7 is stalest, row 2 least stale.
+        let mut sched = vec![7, 5, 2];
+        c.shed_scheduled(0.9, 4.0, &mut sched);
+        // Two deferrals fit (8.0 ≤ 10 < 12): rows 2 and 5 deferred.
+        assert_eq!(sched, vec![7]);
+    }
+
+    #[test]
+    fn degraded_exits_after_dwell_calm_steps() {
+        let mut c = OverloadController::new(OverloadConfig {
+            grace: 0.1,
+            dwell: 3,
+            ..OverloadConfig::default()
+        });
+        let mut sched = vec![0];
+        c.shed_scheduled(0.9, 0.2, &mut sched);
+        assert!(c.degraded());
+        c.observe(0.1);
+        c.observe(0.9); // pressure spike resets the calm streak
+        c.observe(0.1);
+        c.observe(0.1);
+        assert!(c.degraded());
+        c.observe(0.1);
+        assert!(!c.degraded());
+        assert_eq!(c.counters().degraded_exits, 1);
+        assert_eq!(c.debt(), 0.0);
+    }
+
+    #[test]
+    fn token_bucket_rate_limits_per_client_in_degraded_mode() {
+        let mut c = OverloadController::new(OverloadConfig {
+            grace: 0.1,
+            bucket_rate: 1.0,
+            bucket_burst: 2.0,
+            ..OverloadConfig::default()
+        });
+        let t0 = Instant::now();
+        // Not degraded: everything passes.
+        assert!(c.admit_allowed_at(Some("a"), t0));
+        let mut sched = vec![0];
+        c.shed_scheduled(0.9, 0.2, &mut sched);
+        assert!(c.degraded());
+        // Burst of 2 per client, then dry.
+        assert!(c.admit_allowed_at(Some("a"), t0));
+        assert!(c.admit_allowed_at(Some("a"), t0));
+        assert!(!c.admit_allowed_at(Some("a"), t0));
+        // Other clients draw from their own buckets.
+        assert!(c.admit_allowed_at(Some("b"), t0));
+        assert_eq!(c.counters().rate_limited, 1);
+        // Refill after a second at rate 1/s.
+        assert!(c.admit_allowed_at(Some("a"), t0 + Duration::from_secs(1)));
+    }
+}

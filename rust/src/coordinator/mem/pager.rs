@@ -1,0 +1,551 @@
+//! Page allocator for slot cache rows.
+//!
+//! Each batch slot's `[N]` token row is split into fixed-size token pages
+//! (`PagerConfig::page_tokens`).  Pages move through a
+//! resident → cold → evicted state machine under a global byte budget
+//! expressed in page *frames* (`budget_bytes / page_bytes`):
+//!
+//! - **Resident** pages hold a frame and back live positions — pages below
+//!   a slot's hot watermark (the commit frontier) are never demoted or
+//!   reclaimed.
+//! - **Cold** pages still hold a frame but are reclaimable: PAD tails past
+//!   the assigned extent, and low-`cache_cover` regions past the commit
+//!   frontier (`observe_slot`).
+//! - **Evicted** pages gave their frame back; using one again requires
+//!   `ensure_resident`, which faults the page back in — the caller must
+//!   re-derive its cache contents (reset `cache_cover`) before serving.
+//!
+//! The budget is enforced at frame *allocation*: a page only becomes
+//! resident when a frame is free (possibly after evicting cold pages), so
+//! resident bytes ≤ budget holds by construction.  Admission is by pages
+//! free (free frames + reclaimable cold pages) rather than slots free —
+//! see `Batcher::admit_paged`.
+
+/// Default page size in tokens (matches the stub prefill block).
+pub const DEFAULT_PAGE_TOKENS: usize = 16;
+
+/// Default bytes accounted per token of cache row (one `i32` token id in
+/// the host mirror; engine paths scale this by their cache signature).
+pub const DEFAULT_BYTES_PER_TOKEN: usize = 4;
+
+/// Lifecycle state of one page of one slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageState {
+    /// Never mapped (or released): holds no frame, backs no data.
+    Unmapped,
+    /// Holds a frame and backs live positions.
+    Resident,
+    /// Holds a frame but is reclaimable by the eviction loop.
+    Cold,
+    /// Frame reclaimed; contents must be re-derived before use.
+    Evicted,
+}
+
+/// Pager geometry + budget.
+#[derive(Debug, Clone, Copy)]
+pub struct PagerConfig {
+    /// Tokens per page.
+    pub page_tokens: usize,
+    /// Accounted bytes per token.
+    pub bytes_per_token: usize,
+    /// Global byte budget across all slots of the worker.
+    pub budget_bytes: usize,
+}
+
+impl PagerConfig {
+    /// Config for a byte budget with default page geometry.
+    pub fn with_budget(budget_bytes: usize) -> Self {
+        PagerConfig {
+            page_tokens: DEFAULT_PAGE_TOKENS,
+            bytes_per_token: DEFAULT_BYTES_PER_TOKEN,
+            budget_bytes,
+        }
+    }
+
+    /// Bytes per page frame.
+    pub fn page_bytes(&self) -> usize {
+        (self.page_tokens * self.bytes_per_token).max(1)
+    }
+}
+
+/// Monotone pager counters (exported as `spa_pages_*_total`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PagerCounters {
+    /// Pages ever made resident (admissions + faults).
+    pub resident_total: u64,
+    /// Cold pages reclaimed by the eviction loop.
+    pub evicted_total: u64,
+    /// Frames returned to the free pool (eviction + slot release).
+    pub reclaimed_total: u64,
+    /// Admissions refused because the shortfall could not be reclaimed.
+    pub admit_rejects: u64,
+}
+
+/// Page allocator over `batch` slots of `seq_len` tokens each.
+#[derive(Debug)]
+pub struct Pager {
+    cfg: PagerConfig,
+    batch: usize,
+    /// Pages per slot row.
+    n_pages: usize,
+    /// `batch * n_pages` page states, slot-major.
+    states: Vec<PageState>,
+    /// Per slot: pages backing the assigned extent `[0, live)`.
+    live: Vec<usize>,
+    /// Per slot: hot watermark — pages `[0, hot)` are never reclaimed.
+    hot: Vec<usize>,
+    total_frames: usize,
+    free_frames: usize,
+    counters: PagerCounters,
+}
+
+impl Pager {
+    /// Build a pager for `batch` slots of `seq_len` tokens under `cfg`.
+    /// The frame pool is `budget_bytes / page_bytes`, floored at one frame
+    /// so a degenerate budget still serves (the floor is the only case
+    /// where resident bytes can exceed the configured budget).
+    pub fn new(batch: usize, seq_len: usize, cfg: PagerConfig) -> Self {
+        let page_tokens = cfg.page_tokens.max(1);
+        let cfg = PagerConfig { page_tokens, ..cfg };
+        let n_pages = seq_len.div_ceil(page_tokens).max(1);
+        let total_frames = (cfg.budget_bytes / cfg.page_bytes()).max(1);
+        Pager {
+            cfg,
+            batch,
+            n_pages,
+            states: vec![PageState::Unmapped; batch * n_pages],
+            live: vec![0; batch],
+            hot: vec![0; batch],
+            total_frames,
+            free_frames: total_frames,
+            counters: PagerCounters::default(),
+        }
+    }
+
+    /// Pages needed to back `tokens` positions (≥ 1 for any occupied row).
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.cfg.page_tokens).clamp(1, self.n_pages)
+    }
+
+    /// Tokens per page.
+    pub fn page_tokens(&self) -> usize {
+        self.cfg.page_tokens
+    }
+
+    /// Pages per slot row.
+    pub fn pages_per_slot(&self) -> usize {
+        self.n_pages
+    }
+
+    /// Frames currently unallocated.
+    pub fn frames_free(&self) -> usize {
+        self.free_frames
+    }
+
+    /// Total frames in the pool.
+    pub fn frames_total(&self) -> usize {
+        self.total_frames
+    }
+
+    /// Pages available to a new admission: free frames plus cold pages the
+    /// eviction loop can reclaim on demand.  This is the batcher's
+    /// admission currency (`admit_paged`).
+    pub fn pages_free(&self) -> usize {
+        self.free_frames + self.cold_pages()
+    }
+
+    /// Currently resident pages across all slots.
+    pub fn resident_pages(&self) -> usize {
+        self.states.iter().filter(|s| **s == PageState::Resident).count()
+    }
+
+    /// Bytes held by resident pages.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_pages() * self.cfg.page_bytes()
+    }
+
+    /// Currently cold (reclaimable) pages across all slots.
+    pub fn cold_pages(&self) -> usize {
+        self.states.iter().filter(|s| **s == PageState::Cold).count()
+    }
+
+    /// Monotone counters.
+    pub fn counters(&self) -> PagerCounters {
+        self.counters
+    }
+
+    /// State of one page of one slot.
+    pub fn page_state(&self, slot: usize, page: usize) -> PageState {
+        self.states[slot * self.n_pages + page]
+    }
+
+    /// Pages backing `slot`'s assigned extent.
+    pub fn live_pages(&self, slot: usize) -> usize {
+        self.live[slot]
+    }
+
+    /// `slot`'s hot watermark in pages.
+    pub fn hot_pages(&self, slot: usize) -> usize {
+        self.hot[slot]
+    }
+
+    /// Tokens the pager has mapped for `slot`'s extent (page-granular).
+    pub fn mapped_tokens(&self, slot: usize) -> usize {
+        self.live[slot] * self.cfg.page_tokens
+    }
+
+    fn idx(&self, slot: usize, page: usize) -> usize {
+        slot * self.n_pages + page
+    }
+
+    /// Admit a request of `extent_tokens` into `slot`: map enough pages
+    /// resident to back the extent, evicting cold pages elsewhere if the
+    /// free pool is short.  The PAD tail past the extent is mapped cold
+    /// only while spare frames remain (pre-allocated slack the eviction
+    /// loop reclaims first — never worth forcing an eviction for).
+    /// Returns false (and counts a reject) when the shortfall cannot be
+    /// reclaimed; the slot is left untouched.
+    pub fn admit(&mut self, slot: usize, extent_tokens: usize) -> bool {
+        debug_assert_eq!(self.live[slot], 0, "admit into an occupied slot");
+        let need = self.pages_for(extent_tokens);
+        if self.free_frames < need {
+            let shortfall = need - self.free_frames;
+            self.evict_cold(shortfall, Some(slot));
+        }
+        if self.free_frames < need {
+            self.counters.admit_rejects += 1;
+            return false;
+        }
+        for p in 0..need {
+            let i = self.idx(slot, p);
+            self.states[i] = PageState::Resident;
+        }
+        self.free_frames -= need;
+        self.counters.resident_total += need as u64;
+        self.live[slot] = need;
+        // Hot starts at the full admitted extent; decode observations
+        // move it to the commit frontier.
+        self.hot[slot] = need;
+        for p in need..self.n_pages {
+            if self.free_frames == 0 {
+                break;
+            }
+            let i = self.idx(slot, p);
+            self.states[i] = PageState::Cold;
+            self.free_frames -= 1;
+        }
+        true
+    }
+
+    /// Per-step observation of an occupied slot: `hot_tokens` is the
+    /// commit frontier (positions that must stay resident); when
+    /// `cover_low` the region past the frontier is demoted to cold
+    /// (reclaimable — its cache content is low-value), otherwise any cold
+    /// pages there re-warm for free (they still hold their frame).
+    pub fn observe_slot(&mut self, slot: usize, hot_tokens: usize, cover_low: bool) {
+        if self.live[slot] == 0 {
+            return;
+        }
+        let hot = self.pages_for(hot_tokens).min(self.live[slot]);
+        self.hot[slot] = hot;
+        for p in hot..self.live[slot] {
+            let i = self.idx(slot, p);
+            match (self.states[i], cover_low) {
+                (PageState::Resident, true) => self.states[i] = PageState::Cold,
+                (PageState::Cold, false) => self.states[i] = PageState::Resident,
+                _ => {}
+            }
+        }
+    }
+
+    /// Make pages `[0, pages_for(upto_tokens))` of `slot` resident before
+    /// use.  Cold pages re-warm free; evicted/unmapped pages fault back in
+    /// (evicting cold pages elsewhere if needed).  Returns the number of
+    /// faulted pages — when > 0 the caller must re-derive their cache
+    /// contents (reset `cache_cover`) before serving — or `None` when the
+    /// frames cannot be found (caller should stall the row this step).
+    pub fn ensure_resident(&mut self, slot: usize, upto_tokens: usize) -> Option<usize> {
+        let need = self.pages_for(upto_tokens);
+        let mut faulted = 0usize;
+        for p in 0..need {
+            let i = self.idx(slot, p);
+            match self.states[i] {
+                PageState::Resident => {}
+                PageState::Cold => self.states[i] = PageState::Resident,
+                PageState::Evicted | PageState::Unmapped => {
+                    if self.free_frames == 0 {
+                        self.evict_cold(1, Some(slot));
+                    }
+                    if self.free_frames == 0 {
+                        return None;
+                    }
+                    self.free_frames -= 1;
+                    self.states[i] = PageState::Resident;
+                    faulted += 1;
+                }
+            }
+        }
+        self.counters.resident_total += faulted as u64;
+        if self.live[slot] < need {
+            self.live[slot] = need;
+        }
+        Some(faulted)
+    }
+
+    /// Release every frame `slot` holds (completion or cancellation).
+    pub fn release(&mut self, slot: usize) {
+        for p in 0..self.n_pages {
+            let i = self.idx(slot, p);
+            if matches!(self.states[i], PageState::Resident | PageState::Cold) {
+                self.free_frames += 1;
+                self.counters.reclaimed_total += 1;
+            }
+            self.states[i] = PageState::Unmapped;
+        }
+        self.live[slot] = 0;
+        self.hot[slot] = 0;
+    }
+
+    /// Eviction loop: reclaim up to `want` cold pages.  PAD tails past
+    /// each slot's live extent go first (pure slack), then cold pages in
+    /// the low-cover region `[hot, live)`.  Pages of `exclude` below its
+    /// live extent are skipped (a faulting slot must not cannibalise the
+    /// pages it is about to use).  Returns pages reclaimed.
+    pub fn evict_cold(&mut self, want: usize, exclude: Option<usize>) -> usize {
+        let mut got = 0usize;
+        // Pass 1: PAD tails (pages past live extent).
+        for slot in 0..self.batch {
+            for p in self.live[slot]..self.n_pages {
+                if got >= want {
+                    break;
+                }
+                let i = self.idx(slot, p);
+                if self.states[i] == PageState::Cold {
+                    self.states[i] = PageState::Evicted;
+                    self.free_frames += 1;
+                    got += 1;
+                }
+            }
+        }
+        // Pass 2: low-cover regions past the hot frontier.
+        for slot in 0..self.batch {
+            if Some(slot) == exclude {
+                continue;
+            }
+            for p in self.hot[slot]..self.live[slot] {
+                if got >= want {
+                    break;
+                }
+                let i = self.idx(slot, p);
+                if self.states[i] == PageState::Cold {
+                    self.states[i] = PageState::Evicted;
+                    self.free_frames += 1;
+                    got += 1;
+                }
+            }
+        }
+        self.counters.evicted_total += got as u64;
+        self.counters.reclaimed_total += got as u64;
+        got
+    }
+
+    /// Mapped pages (resident + cold) across all slots — conservation
+    /// partner of `frames_free` (`mapped + free == total`).
+    pub fn mapped_pages(&self) -> usize {
+        self.states
+            .iter()
+            .filter(|s| matches!(**s, PageState::Resident | PageState::Cold))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn admit_maps_extent_and_tail() {
+        // 4 slots × 128 tokens, 16-token pages, budget for 16 frames.
+        let mut p = Pager::new(4, 128, PagerConfig::with_budget(16 * 64));
+        assert_eq!(p.frames_total(), 16);
+        assert!(p.admit(0, 40)); // 3 pages resident
+        assert_eq!(p.live_pages(0), 3);
+        assert_eq!(p.resident_pages(), 3);
+        // Tail mapped cold up to the spare-frame supply.
+        assert!(p.cold_pages() > 0);
+        assert_eq!(p.mapped_pages() + p.frames_free(), p.frames_total());
+    }
+
+    #[test]
+    fn admission_evicts_cold_tails_before_rejecting() {
+        let mut p = Pager::new(4, 128, PagerConfig::with_budget(8 * 64)); // 8 frames
+        assert!(p.admit(0, 64)); // 4 resident + up to 4 cold tail
+        assert_eq!(p.frames_free(), 0);
+        // Second admission must reclaim slot 0's cold tail.
+        assert!(p.admit(1, 64));
+        assert_eq!(p.resident_pages(), 8);
+        assert!(p.counters().evicted_total >= 4);
+        // Third admission cannot fit: everything resident, nothing cold.
+        assert!(!p.admit(2, 16));
+        assert_eq!(p.counters().admit_rejects, 1);
+    }
+
+    #[test]
+    fn fault_after_eviction_reports_rederive() {
+        let mut p = Pager::new(2, 128, PagerConfig::with_budget(8 * 64));
+        assert!(p.admit(0, 128)); // all 8 pages resident
+        // Frontier at 32 tokens, low cover: pages 2..8 go cold.
+        p.observe_slot(0, 32, true);
+        assert_eq!(p.cold_pages(), 6);
+        assert!(p.admit(1, 64)); // evicts 4 of slot 0's cold pages
+        // Slot 0 now needs its full extent back: faults are reported.
+        let faulted = p.ensure_resident(0, 128);
+        assert!(faulted.is_none() || faulted.unwrap() > 0);
+        // Release everything: all frames return.
+        p.release(0);
+        p.release(1);
+        assert_eq!(p.frames_free(), p.frames_total());
+        assert_eq!(p.mapped_pages(), 0);
+    }
+
+    #[derive(Debug, Clone)]
+    enum Op {
+        Admit { slot: usize, extent: usize },
+        Decode { slot: usize, hot: usize, cover_low: bool },
+        Use { slot: usize, upto: usize },
+        Cancel { slot: usize },
+        Sweep { want: usize },
+    }
+
+    #[derive(Debug, Clone)]
+    struct Trace {
+        batch: usize,
+        seq_len: usize,
+        frames: usize,
+        ops: Vec<Op>,
+    }
+
+    fn gen_trace(r: &mut Rng) -> Trace {
+        let batch = r.range(1, 5);
+        let seq_len = 64 + 16 * r.range(0, 5);
+        let n_pages = seq_len / 16;
+        // Tight budgets: sometimes below one slot's worth of pages.
+        let frames = r.range(1, (batch * n_pages).max(2));
+        let n_ops = r.range(1, 60);
+        let mut ops = Vec::with_capacity(n_ops);
+        for _ in 0..n_ops {
+            let slot = r.range(0, batch.max(1));
+            ops.push(match r.below(10) {
+                0..=2 => Op::Admit { slot, extent: r.range(1, seq_len + 1) },
+                3..=5 => Op::Decode {
+                    slot,
+                    hot: r.range(0, seq_len + 1),
+                    cover_low: r.bool(0.5),
+                },
+                6..=7 => Op::Use { slot, upto: r.range(1, seq_len + 1) },
+                8 => Op::Cancel { slot },
+                _ => Op::Sweep { want: r.range(1, 9) },
+            });
+        }
+        Trace { batch, seq_len, frames, ops }
+    }
+
+    fn check_invariants(p: &Pager, occupied: &[bool], t: &Trace) -> Result<(), String> {
+        // Conservation of page frames.
+        if p.mapped_pages() + p.frames_free() != p.frames_total() {
+            return Err(format!(
+                "frame conservation broken: mapped {} + free {} != total {}",
+                p.mapped_pages(),
+                p.frames_free(),
+                p.frames_total()
+            ));
+        }
+        // Resident bytes within budget (modulo the one-frame floor).
+        let budget = t.frames * 64;
+        if p.resident_bytes() > budget.max(64) {
+            return Err(format!("resident {} bytes over budget {}", p.resident_bytes(), budget));
+        }
+        // No live page reclaimed: every page below an occupied slot's hot
+        // watermark is resident.
+        for slot in 0..t.batch {
+            if !occupied[slot] {
+                continue;
+            }
+            for page in 0..p.hot_pages(slot) {
+                if p.page_state(slot, page) != PageState::Resident {
+                    return Err(format!(
+                        "hot page ({slot},{page}) not resident: {:?}",
+                        p.page_state(slot, page)
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn pager_trace_invariants() {
+        proptest::check("pager_trace_invariants", gen_trace, |t| {
+            let mut p = Pager::new(t.batch, t.seq_len, PagerConfig::with_budget(t.frames * 64));
+            let mut occupied = vec![false; t.batch];
+            for op in &t.ops {
+                match *op {
+                    Op::Admit { slot, extent } => {
+                        if !occupied[slot] {
+                            occupied[slot] = p.admit(slot, extent);
+                        }
+                    }
+                    Op::Decode { slot, hot, cover_low } => {
+                        if occupied[slot] {
+                            p.observe_slot(slot, hot, cover_low);
+                        }
+                    }
+                    Op::Use { slot, upto } => {
+                        if occupied[slot] {
+                            // Evicted pages must be re-derived (faulted
+                            // resident) before use; on success the whole
+                            // used range is resident.
+                            if p.ensure_resident(slot, upto).is_some() {
+                                let need = p.pages_for(upto);
+                                for page in 0..need {
+                                    if p.page_state(slot, page) != PageState::Resident {
+                                        return Err(format!(
+                                            "used page ({slot},{page}) not resident after \
+                                             ensure_resident"
+                                        ));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Op::Cancel { slot } => {
+                        if occupied[slot] {
+                            p.release(slot);
+                            occupied[slot] = false;
+                        }
+                    }
+                    Op::Sweep { want } => {
+                        p.evict_cold(want, None);
+                    }
+                }
+                check_invariants(&p, &occupied, t)?;
+            }
+            // Drain: after releasing every slot all frames are free.
+            for slot in 0..t.batch {
+                if occupied[slot] {
+                    p.release(slot);
+                }
+            }
+            if p.frames_free() != p.frames_total() {
+                return Err(format!(
+                    "release leaked frames: free {} != total {}",
+                    p.frames_free(),
+                    p.frames_total()
+                ));
+            }
+            Ok(())
+        });
+    }
+}

@@ -88,6 +88,31 @@ pub struct Metrics {
     pub prefix_hit_depth_count: u64,
     /// Dispatches to this worker the router decided by prefix affinity.
     pub affinity_dispatches: u64,
+    /// Slot-memory pages ever made resident by the pager (admissions +
+    /// faults; DESIGN.md §12).  0 without `--page-bytes`.
+    pub pages_resident: u64,
+    /// Cold pages reclaimed by the pager's eviction loop.
+    pub pages_evicted: u64,
+    /// Page frames returned to the free pool (eviction + slot release).
+    pub pages_reclaimed: u64,
+    /// Scheduled row refreshes deferred under pressure — rows served stale
+    /// within the grace bound (overload controller; 0 without `--grace`).
+    pub stale_served: u64,
+    /// Admissions delayed by degraded-mode per-client token buckets
+    /// (rotated to the back of the queue, never dropped).
+    pub rate_limited: u64,
+    /// Transitions into degraded mode.
+    pub degraded_entries: u64,
+    /// Transitions out of degraded mode.
+    pub degraded_exits: u64,
+    /// Whether the overload controller is currently degraded (gauge;
+    /// merged as the **max** across workers — any degraded worker makes
+    /// the aggregate degraded).
+    pub degraded_mode: bool,
+    /// Peak drift debt the overload controller reached (gauge, merge-max;
+    /// ≤ the configured `--grace` bound by construction — the recorded
+    /// proof that stale rows were served within it).
+    pub drift_debt_peak: f64,
     /// Per-step hot-path cost ledger: μs per phase (upload / execute /
     /// collect / sample / serialize / step_wall) plus the delta-upload row
     /// counters, exported as `spa_step_ledger_us{phase="..."}` and
@@ -135,6 +160,15 @@ impl Default for Metrics {
             prefix_hit_depth_sum: 0,
             prefix_hit_depth_count: 0,
             affinity_dispatches: 0,
+            pages_resident: 0,
+            pages_evicted: 0,
+            pages_reclaimed: 0,
+            stale_served: 0,
+            rate_limited: 0,
+            degraded_entries: 0,
+            degraded_exits: 0,
+            degraded_mode: false,
+            drift_debt_peak: 0.0,
             ledger: StepLedger::default(),
             ttft: Welford::default(),
             latency: Welford::default(),
@@ -168,6 +202,21 @@ impl Metrics {
             self.queue_wait.push(wait_ms);
             self.queue_wait_samples.push(wait_ms);
         }
+    }
+
+    /// Mirror the slot-memory subsystem's accounting (absolute values —
+    /// the pager/overload counters are the source of truth, this is the
+    /// export surface; the two gauges ride along).
+    pub fn set_mem(&mut self, snap: &crate::coordinator::mem::MemSnapshot) {
+        self.pages_resident = snap.pages_resident;
+        self.pages_evicted = snap.pages_evicted;
+        self.pages_reclaimed = snap.pages_reclaimed;
+        self.stale_served = snap.stale_served;
+        self.rate_limited = snap.rate_limited;
+        self.degraded_entries = snap.degraded_entries;
+        self.degraded_exits = snap.degraded_exits;
+        self.degraded_mode = snap.degraded_mode;
+        self.drift_debt_peak = snap.drift_debt_peak;
     }
 
     /// Decoded tokens per wall-clock second since startup.
@@ -223,6 +272,17 @@ impl Metrics {
         self.prefix_hit_depth_sum += other.prefix_hit_depth_sum;
         self.prefix_hit_depth_count += other.prefix_hit_depth_count;
         self.affinity_dispatches += other.affinity_dispatches;
+        self.pages_resident += other.pages_resident;
+        self.pages_evicted += other.pages_evicted;
+        self.pages_reclaimed += other.pages_reclaimed;
+        self.stale_served += other.stale_served;
+        self.rate_limited += other.rate_limited;
+        self.degraded_entries += other.degraded_entries;
+        self.degraded_exits += other.degraded_exits;
+        // Any degraded worker degrades the aggregate; debt peaks compare,
+        // they don't sum.
+        self.degraded_mode |= other.degraded_mode;
+        self.drift_debt_peak = self.drift_debt_peak.max(other.drift_debt_peak);
         self.ledger.add(&other.ledger);
         self.queue_depth += other.queue_depth;
         self.active_slots += other.active_slots;
@@ -258,6 +318,15 @@ impl Metrics {
             ("spa_prefix_hit_depth_sum", self.prefix_hit_depth_sum as f64),
             ("spa_prefix_hit_depth_count", self.prefix_hit_depth_count as f64),
             ("spa_affinity_dispatch_total", self.affinity_dispatches as f64),
+            ("spa_pages_resident_total", self.pages_resident as f64),
+            ("spa_pages_evicted_total", self.pages_evicted as f64),
+            ("spa_pages_reclaimed_total", self.pages_reclaimed as f64),
+            ("spa_stale_served_total", self.stale_served as f64),
+            ("spa_rate_limited_total", self.rate_limited as f64),
+            ("spa_degraded_entries_total", self.degraded_entries as f64),
+            ("spa_degraded_exits_total", self.degraded_exits as f64),
+            ("spa_degraded_mode", if self.degraded_mode { 1.0 } else { 0.0 }),
+            ("spa_drift_debt_peak", self.drift_debt_peak),
             ("spa_rows_uploaded_total", self.ledger.rows_uploaded as f64),
             ("spa_rows_skipped_total", self.ledger.rows_skipped as f64),
             ("spa_queue_depth", self.queue_depth as f64),
@@ -422,6 +491,46 @@ mod tests {
         assert_eq!(scrape_value(&text, "spa_prefix_hit_depth_sum"), Some(72.0));
         assert_eq!(scrape_value(&text, "spa_prefix_hit_depth_count"), Some(4.0));
         assert_eq!(scrape_value(&text, "spa_affinity_dispatch_total"), Some(5.0));
+    }
+
+    #[test]
+    fn mem_series_merge_and_scrape() {
+        use crate::coordinator::mem::MemSnapshot;
+        let mut a = Metrics::default();
+        a.set_mem(&MemSnapshot {
+            pages_resident: 10,
+            pages_evicted: 4,
+            pages_reclaimed: 6,
+            stale_served: 3,
+            rate_limited: 2,
+            degraded_entries: 1,
+            degraded_exits: 1,
+            degraded_mode: false,
+            drift_debt_peak: 1.5,
+        });
+        let mut b = Metrics::default();
+        b.set_mem(&MemSnapshot {
+            pages_resident: 5,
+            degraded_mode: true,
+            drift_debt_peak: 4.25,
+            ..MemSnapshot::default()
+        });
+        a.merge(&b);
+        assert_eq!(a.pages_resident, 15, "counters add");
+        assert_eq!(a.pages_evicted, 4);
+        assert_eq!(a.stale_served, 3);
+        assert!(a.degraded_mode, "any degraded worker degrades the aggregate");
+        assert!((a.drift_debt_peak - 4.25).abs() < 1e-9, "peak merges as max");
+        let text = a.render();
+        assert_eq!(scrape_value(&text, "spa_pages_resident_total"), Some(15.0));
+        assert_eq!(scrape_value(&text, "spa_pages_evicted_total"), Some(4.0));
+        assert_eq!(scrape_value(&text, "spa_pages_reclaimed_total"), Some(6.0));
+        assert_eq!(scrape_value(&text, "spa_stale_served_total"), Some(3.0));
+        assert_eq!(scrape_value(&text, "spa_rate_limited_total"), Some(2.0));
+        assert_eq!(scrape_value(&text, "spa_degraded_entries_total"), Some(1.0));
+        assert_eq!(scrape_value(&text, "spa_degraded_exits_total"), Some(1.0));
+        assert_eq!(scrape_value(&text, "spa_degraded_mode"), Some(1.0));
+        assert_eq!(scrape_value(&text, "spa_drift_debt_peak"), Some(4.25));
     }
 
     #[test]

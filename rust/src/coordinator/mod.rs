@@ -15,6 +15,7 @@ pub mod cache;
 pub mod decode;
 pub mod group;
 pub mod ledger;
+pub mod mem;
 pub mod metrics;
 pub mod request;
 pub mod router;

@@ -246,6 +246,22 @@ impl SlotState {
             started: Some(Instant::now()),
         }
     }
+
+    /// [`Self::assign`] through a page table: the pager backs positions at
+    /// page granularity, so the slot's reachable extent is whatever the
+    /// page map covers (`mapped_tokens`), not the dense row.  The
+    /// generation region is additionally clamped to the mapped extent —
+    /// admission maps enough pages for the full extent, so in the steady
+    /// state this is the identity; it only bites if a page map ever ends
+    /// short of the region (the row then completes at the page boundary
+    /// instead of silently decoding into unbacked positions).
+    pub fn assign_paged(req: &Request, block_len: usize, mapped_tokens: usize) -> SlotState {
+        let mut slot = SlotState::assign(req, block_len);
+        let mapped_end = mapped_tokens.clamp(slot.prompt_len, req.tokens.len());
+        slot.gen_end = slot.gen_end.min(mapped_end);
+        slot.block_start = slot.block_start.min(slot.gen_end);
+        slot
+    }
 }
 
 #[cfg(test)]
@@ -311,6 +327,24 @@ mod tests {
         // A plain request keeps the caller's block length.
         let plain = short_gen_request();
         assert_eq!(SlotState::assign(&plain, 2).block_len, 2);
+    }
+
+    /// Paged assignment clamps the generation region to the page-mapped
+    /// extent: positions the pager never backed are unreachable.
+    #[test]
+    fn assign_paged_clamps_to_the_page_map() {
+        let req = short_gen_request(); // region [2, 5), row len 8
+        // Pages cover the full extent: identity with dense assign.
+        let full = SlotState::assign_paged(&req, 2, 16);
+        assert_eq!(full.gen_end, 5);
+        assert_eq!(full.block_start, 2);
+        // Pages end mid-region: the region clamps to the mapped extent.
+        let short = SlotState::assign_paged(&req, 2, 4);
+        assert_eq!(short.gen_end, 4, "unbacked positions unreachable");
+        // Degenerate map below the prompt clamps to the prompt boundary.
+        let tiny = SlotState::assign_paged(&req, 2, 0);
+        assert_eq!(tiny.gen_end, 2);
+        assert_eq!(tiny.block_start, 2);
     }
 
     #[test]

@@ -47,7 +47,7 @@ use crate::model::tokenizer::{Tokenizer, MASK, PAD};
 use crate::runtime::engine::Engine;
 use crate::{debug, info};
 
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::{AdmitGate, Batcher, BatcherConfig};
 use super::cache::{Method, StepOut};
 use super::decode::{slot_done, Sampler};
 use super::group::{apply_step_out, masks_in_row};
@@ -116,6 +116,9 @@ impl Worker {
         // admission costs no group refresh (partial-refresh healing, or a
         // stateless method), batching admissions up buys nothing.
         let admission_forces_refresh = method.admission_forces_refresh();
+        // The page-budget admission path follows the method's pager: a
+        // configured `--page-bytes` overrides whatever the caller seeded.
+        let page_tokens = method.page_tokens().or(batcher_cfg.page_tokens);
         Worker {
             id,
             engine,
@@ -124,6 +127,7 @@ impl Worker {
             batcher: Batcher::new(BatcherConfig {
                 batch: b,
                 admission_forces_refresh,
+                page_tokens,
                 ..batcher_cfg
             }),
             tokenizer,
@@ -255,6 +259,7 @@ impl Worker {
             }
             let slot = std::mem::replace(&mut self.slots[bi], SlotState::empty());
             let req = self.requests[bi].take();
+            self.method.pager_release(bi);
             let decoded = req
                 .as_ref()
                 .map(|r| {
@@ -303,7 +308,32 @@ impl Worker {
             return;
         }
         let now = Instant::now();
-        let admitted = self.batcher.admit(free.len(), now);
+        // Paged/overload gate (`--page-bytes` / `--grace`): admission
+        // spends *pages free* rather than slots free, and degraded-mode
+        // token buckets shape (never drop) per-client admission.  The
+        // closure reserves pages against a running balance so one round
+        // cannot oversubscribe the budget across several admits.
+        let admitted = if self.method.admission_gated() {
+            let method = &mut self.method;
+            let mut pages_avail = method.pages_free();
+            self.batcher.admit_paged(free.len(), now, |req| {
+                let need = method.pages_for(req.tokens.len());
+                if let (Some(avail), Some(need)) = (pages_avail.as_ref(), need) {
+                    if need > *avail {
+                        return AdmitGate::NoPages;
+                    }
+                }
+                if !method.admit_allowed(req.params.session.as_deref()) {
+                    return AdmitGate::Delay;
+                }
+                if let (Some(avail), Some(need)) = (pages_avail.as_mut(), need) {
+                    *avail -= need;
+                }
+                AdmitGate::Admit
+            })
+        } else {
+            self.batcher.admit(free.len(), now)
+        };
         if admitted.is_empty() {
             return;
         }
@@ -322,7 +352,14 @@ impl Worker {
                 .unwrap_or(self.default_block_len);
             self.metrics
                 .record_queue_wait(now.duration_since(req.submitted).as_secs_f64() * 1e3);
-            self.slots[slot_i] = SlotState::assign(&req, block);
+            // Map the admitted extent through the page table; the slot's
+            // decode window is clamped to what the pages actually back
+            // (identity when every page mapped — see `assign_paged`).
+            let mapped_ok = self.method.pager_admit(slot_i, len);
+            self.slots[slot_i] = match self.method.pager_mapped_tokens(slot_i) {
+                Some(mapped) if mapped_ok => SlotState::assign_paged(&req, block, mapped),
+                _ => SlotState::assign(&req, block),
+            };
             if let Some(pos) = self.pending.iter().position(|(id, _)| *id == req.id) {
                 let (_, ch) = self.pending.remove(pos);
                 self.replies[slot_i] = Some(ch);
@@ -379,6 +416,7 @@ impl Worker {
             self.metrics.prefix_hit_depth_count = pc.hit_depth_count as u64;
         }
         self.metrics.affinity_dispatches = self.status.affinity_dispatches() as u64;
+        self.metrics.set_mem(&self.method.mem_snapshot());
     }
 
     /// The effective step cap for the request in slot `bi`: the
@@ -418,6 +456,10 @@ impl Worker {
         let active = self.slots.iter().filter(|s| s.occupied).count();
         let free = self.slots.len() - active;
         self.method.observe(commits, active, self.batcher.queue_len(), free);
+        // Page upkeep after the commit: re-classify pages beyond each
+        // row's advanced frontier and fault the frontier's pages resident
+        // (no-op without `--page-bytes`).
+        self.method.pager_track(&mut self.slots);
         self.mirror_cache_counters();
         // Per-step commit hook: true first-token TTFT (the first step that
         // actually committed a MASK position, measured from submission so
@@ -465,6 +507,7 @@ impl Worker {
             }
             let slot = std::mem::replace(&mut self.slots[bi], SlotState::empty());
             let req = self.requests[bi].take();
+            self.method.pager_release(bi);
             let row = self.tokens[bi * n..(bi + 1) * n].to_vec();
             // Donate the finished prompt+reply to the prefix store and
             // publish the refreshed affinity bloom *before* the Done event

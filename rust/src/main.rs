@@ -46,16 +46,19 @@ fn main() -> Result<()> {
                  [--task gsm8k_s] [--samples N] [--addr host:port] [--workers N] [--threshold 0.9]\n\
                  policy: [--partial-refresh on|off] [--refresh-interval N] \
                  [--adaptive on|off] [--row-refresh N] [--refit-interval N] \
-                 [--prefix-cache on|off] [--prefix-mem BYTES]\n\
+                 [--prefix-cache on|off] [--prefix-mem BYTES] \
+                 [--page-bytes BYTES] [--grace N]\n\
                  serve: [--max-line BYTES] [--conn-threads N]\n\
                  bench-serve: [--methods vanilla,spa] [--qps 8 | --clients N | --pipeline D] \
                  [--duration 5s] [--warmup 1s] [--tasks gsm8k_s,mmlu_s] [--gen-len 32 | 16:64] \
                  [--out BENCH_serving.json] [--stub]\n\
                  (--stub: stub workers, no artifacts needed; stub methods \
                  stub|spa|spa-adaptive|spa-fixed run the real policy loop)\n\
-                 scenarios (--stub only): [--scenario chat|infill|mixed|trace|cancel-storm] \
+                 scenarios (--stub only): \
+                 [--scenario chat|infill|mixed|trace|cancel-storm|overload] \
                  [--slo-ttft MS] [--slo-deadline MS] [--sessions N] [--turns N] \
-                 [--trace FILE] [--record-trace FILE]"
+                 [--trace FILE] [--record-trace FILE] \
+                 (overload: --qps sets the ramp peak, default 400)"
             );
             Ok(())
         }

@@ -8,6 +8,7 @@
 //! than closed timing loops (DESIGN.md §10).
 
 pub mod loadgen;
+pub mod report;
 pub mod runner;
 pub mod scenario;
 pub mod stub;

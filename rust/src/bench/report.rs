@@ -1,0 +1,646 @@
+//! `BENCH_serving.json` serialization: the per-method report row, its JSON
+//! encoders, the schema-versioned append-only trajectory writer, and the
+//! human-readable serving table.
+//!
+//! Split out of `bench::loadgen` so the traffic-driving machinery and the
+//! recording format live apart: this module owns *what a trajectory row
+//! looks like* (key names, key order, optional-column presence rules,
+//! NaN→null mapping), and the load generator / scenario runner own how the
+//! numbers are produced.  The schema is frozen by the byte-identical
+//! regression test at the bottom — a row serializes to exactly the same
+//! bytes it did before the split, so every existing trajectory reader and
+//! CI guard keeps parsing unchanged.
+//!
+//! `loadgen` re-exports everything here under its old paths
+//! (`loadgen::MethodReport`, `loadgen::append_trajectory`, ...), so callers
+//! keep one import surface.
+
+use std::path::Path;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse, Json};
+use crate::util::stats::{Histogram, Summary};
+
+use super::loadgen::{ArrivalMode, LoadGenConfig, PolicyFlags};
+use super::Table;
+
+/// Schema version stamped into `BENCH_serving.json`; bump on any breaking
+/// change to the entry layout (readers must check it).
+pub const TRAJECTORY_SCHEMA: f64 = 1.0;
+
+/// Aggregated outcome of one load run against one server configuration —
+/// one row of the `BENCH_serving.json` per-method table.
+#[derive(Debug, Clone)]
+pub struct MethodReport {
+    /// Method label (`spa`, `vanilla`, ...).
+    pub method: String,
+    /// Requests completed inside the measured window.
+    pub requests: usize,
+    /// Of those, how many came back as `{"error": ...}`.
+    pub errors: usize,
+    /// Open-loop arrivals inside the measured window dropped at the
+    /// `max_inflight` cap (overload; warmup-window drops are not counted).
+    pub dropped: usize,
+    /// Length of the measured window actually observed (s).
+    pub measured_s: f64,
+    /// Configured offered load (open loop) or NaN (closed loop).
+    pub offered_qps: f64,
+    /// Completions per second inside the measured window.
+    pub achieved_qps: f64,
+    /// Decoded tokens per second inside the measured window.
+    pub tps: f64,
+    /// TTFT percentiles over measured requests (server-reported).
+    pub ttft: Option<Summary>,
+    /// End-to-end latency percentiles (server-reported, includes queue).
+    pub latency: Option<Summary>,
+    /// Client-side wall-time percentiles (latency + wire).
+    pub wall: Option<Summary>,
+    /// Mean concurrently in-flight requests over the measured window
+    /// (Little's law: Σ wall time / window).  The pipelined mode's
+    /// headline number — >1 on a single connection means head-of-line
+    /// blocking is gone; ≈`clients` in the closed loop.
+    pub mean_inflight: f64,
+    /// Mean batcher queue wait *inside the measured window*, reconstructed
+    /// from the scraped mean+count pairs at the warmup boundary and end of
+    /// run (a lifetime mean would smear warmup cold-start waits into every
+    /// trajectory entry).
+    pub queue_wait_ms_mean: f64,
+    /// Cache refreshes inside the measured window (scraped, differenced).
+    pub refreshes: f64,
+    /// Engine steps inside the measured window (scraped, differenced).
+    pub steps: f64,
+    /// Full-refresh steps per engine step inside the window — the
+    /// per-method refresh-rate column of the trajectory (0 when no steps
+    /// were observed).
+    pub refresh_rate: f64,
+    /// Dirty rows healed by targeted partial servicing inside the window
+    /// (scraped, differenced) — admissions that did not cost a refresh.
+    pub partial_refreshes: f64,
+    /// Rows whose cache validity was dropped on admission inside the
+    /// window (scraped, differenced; includes the blanket-invalidate
+    /// blast radius for policies without partial support).
+    pub rows_invalidated: f64,
+    /// Staggered per-row scheduled refreshes begun inside the window
+    /// (scraped, differenced) — interval maintenance paid row-by-row
+    /// instead of as group-global refresh steps.
+    pub scheduled_row_refreshes: f64,
+    /// Online ρ-schedule refits inside the window (scraped, differenced;
+    /// 0 with `--adaptive off`).
+    pub schedule_refits: f64,
+    /// Budget-tier switches inside the window (scraped, differenced) —
+    /// monotone evidence the controller acted, even when the end-of-run
+    /// `budget_tier` gauge has moved back to where it started.
+    pub tier_switches: f64,
+    /// Budget tier at the end of the run (gauge — the highest tier any
+    /// worker was running at; 0 with `--adaptive off`).
+    pub budget_tier: f64,
+    /// The adaptive budget controller was attached for **this method's**
+    /// run.  Per-method because the stub lineup can force it per method
+    /// name (`spa-adaptive`/`spa-fixed`) and an engine lineup applies the
+    /// `--adaptive` gate only to spa-kind methods — the config block's
+    /// flag alone would misdescribe the other rows.
+    pub adaptive: bool,
+    /// Per-step cost-ledger phases inside the measured window (μs;
+    /// `spa_step_ledger_us{phase=...}`, scraped + differenced).
+    pub upload_us: f64,
+    /// Device execution time inside the window (μs).
+    pub execute_us: f64,
+    /// Device→host readback time inside the window (μs).
+    pub collect_us: f64,
+    /// Host sampling/commit time inside the window (μs).
+    pub sample_us: f64,
+    /// Frame-serialization time inside the window (μs; per-server).
+    pub serialize_us: f64,
+    /// Whole-step wall time inside the window (μs).
+    pub step_wall_us: f64,
+    /// Token rows uploaded inside the window (scraped, differenced) —
+    /// under delta upload, strictly fewer than steps×batch when any row
+    /// stayed clean across a step.
+    pub rows_uploaded: f64,
+    /// Token rows the delta path kept device-resident inside the window.
+    pub rows_skipped: f64,
+    /// Prefix-store lookups that found a donated prefix inside the window
+    /// (scraped, differenced; 0 without `--prefix-cache`).
+    pub prefix_hits: f64,
+    /// Prefix-store lookups that found nothing inside the window.
+    pub prefix_misses: f64,
+    /// Prefix-store LRU evictions under the byte cap inside the window.
+    pub prefix_evictions: f64,
+    /// Entries dropped by tier-swap signature purges inside the window.
+    pub prefix_purges: f64,
+    /// Admissions actually seeded warm from the store inside the window.
+    pub warm_admissions: f64,
+    /// Submissions the router steered by cache affinity (vs plain JSQ)
+    /// inside the window.
+    pub affinity_dispatches: f64,
+    /// Pages made resident (admissions + faults) inside the window
+    /// (scraped, differenced; 0 without `--page-bytes`).
+    pub pages_resident: f64,
+    /// Cold pages reclaimed by the pager's eviction loop inside the window.
+    pub pages_evicted: f64,
+    /// Page frames returned to the free pool inside the window
+    /// (eviction + slot release).
+    pub pages_reclaimed: f64,
+    /// Scheduled refreshes deferred — rows served stale under the grace
+    /// bound inside the window (scraped, differenced; 0 without `--grace`).
+    pub stale_served: f64,
+    /// Admissions delayed by degraded-mode token buckets inside the window.
+    pub rate_limited: f64,
+    /// Transitions into degraded mode inside the window.
+    pub degraded_entries: f64,
+    /// Transitions out of degraded mode inside the window.
+    pub degraded_exits: f64,
+    /// Whether any worker was still degraded at the end of the run
+    /// (gauge — end-of-run value, like `budget_tier`).
+    pub degraded_mode: f64,
+    /// Peak drift debt any worker reached (gauge; ≤ the `--grace` bound
+    /// by construction — the recorded proof stale rows stayed in bounds).
+    pub drift_debt_peak: f64,
+    /// The paged slot-memory path ran for this row (`--page-bytes` and/or
+    /// `--grace`).  Stamped by the run front-ends, like the prefix
+    /// columns — the counters alone cannot distinguish an idle paged run
+    /// from an unpaged one; rows without it omit the paged columns.
+    pub paged: bool,
+    /// hits / (hits + misses) over the window.  `Some` only when
+    /// `--prefix-cache on` ran — absent from the trajectory row otherwise,
+    /// like the `scenario` tag, so warm and cold rows are distinguishable.
+    pub prefix_hit_rate: Option<f64>,
+    /// TTFT p50 of a warm-serving run (ms); `Some` only with
+    /// `--prefix-cache on` — the warm-vs-cold trajectory column.
+    pub warm_ttft_ms: Option<f64>,
+    /// Per-worker completions inside the measured window (scraped,
+    /// differenced) — the router's load-balance evidence.
+    pub per_worker_completed: Vec<(usize, f64)>,
+    /// Scenario tag (`bench::scenario` runs only) — distinguishes scenario
+    /// rows from plain load-shape rows in the trajectory.
+    pub scenario: Option<String>,
+    /// Per-scenario SLO attainment block (`bench::scenario` runs only).
+    pub slo: Option<super::scenario::SloReport>,
+    /// Retained latency sample for distribution sketches (filled by
+    /// `loadgen::aggregate`).
+    pub(crate) latency_samples: Vec<f64>,
+}
+
+fn fmt_pct(s: &Option<Summary>) -> (String, String, String) {
+    match s {
+        Some(s) => {
+            (format!("{:.0}", s.p50), format!("{:.0}", s.p90), format!("{:.0}", s.p99))
+        }
+        None => ("-".into(), "-".into(), "-".into()),
+    }
+}
+
+/// Print the per-method serving table (and a latency-distribution
+/// sparkline per method) in the house bench style.
+pub fn print_reports(reports: &[MethodReport]) {
+    let mut t = Table::new(
+        "bench-serve: serving under load",
+        &[
+            "method", "req", "err", "drop", "qps", "tps", "inflight", "ttft p50",
+            "p90", "p99", "lat p50", "p90", "p99", "refresh", "ref/step", "partial",
+            "rowref", "refits", "tier",
+        ],
+    );
+    for r in reports {
+        let (tp50, tp90, tp99) = fmt_pct(&r.ttft);
+        let (lp50, lp90, lp99) = fmt_pct(&r.latency);
+        t.row(vec![
+            r.method.clone(),
+            r.requests.to_string(),
+            r.errors.to_string(),
+            r.dropped.to_string(),
+            format!("{:.2}", r.achieved_qps),
+            format!("{:.2}", r.tps),
+            format!("{:.2}", r.mean_inflight),
+            tp50,
+            tp90,
+            tp99,
+            lp50,
+            lp90,
+            lp99,
+            format!("{:.0}", r.refreshes),
+            format!("{:.3}", r.refresh_rate),
+            format!("{:.0}", r.partial_refreshes),
+            format!("{:.0}", r.scheduled_row_refreshes),
+            format!("{:.0}", r.schedule_refits),
+            format!("{:.0}", r.budget_tier),
+        ]);
+    }
+    t.print();
+    for r in reports {
+        if r.latency_samples.len() >= 2 {
+            let hi = r.latency_samples.iter().cloned().fold(f64::MIN, f64::max);
+            if hi > 0.0 {
+                let mut h = Histogram::new(0.0, hi * 1.01, 32);
+                for &x in &r.latency_samples {
+                    h.push(x);
+                }
+                println!("latency ms {:>10}  0 |{}| {:.0}", r.method, h.sparkline(), hi);
+            }
+        }
+        let shares: Vec<String> = r
+            .per_worker_completed
+            .iter()
+            .map(|(id, n)| format!("{id}:{n:.0}"))
+            .collect();
+        if !shares.is_empty() {
+            println!("per-worker {:>10}  {}", r.method, shares.join("  "));
+        }
+    }
+}
+
+/// Every float in a trajectory entry goes through [`finite_or_null`]:
+/// `Json::Num(NaN)` would serialize as the bare token `NaN`, corrupting the
+/// whole append-only file for every reader.  NaN reaches a report through
+/// more doors than the obvious one — a `Summary` over never-committed TTFTs,
+/// a scraped `spa_ttft_ms_mean NaN` on an idle server, a windowed
+/// queue-wait reconstruction whose snapshots were themselves NaN.
+fn summary_json(s: &Option<Summary>) -> Json {
+    match s {
+        None => Json::Null,
+        Some(s) => Json::obj(vec![
+            ("n", Json::Num(s.n as f64)),
+            ("mean", finite_or_null(s.mean)),
+            ("min", finite_or_null(s.min)),
+            ("p50", finite_or_null(s.p50)),
+            ("p90", finite_or_null(s.p90)),
+            ("p99", finite_or_null(s.p99)),
+            ("max", finite_or_null(s.max)),
+        ]),
+    }
+}
+
+/// `x` as JSON, with NaN/±Inf mapped to `null` (JSON has no spelling for
+/// them; emitting the Rust debug form would corrupt the trajectory file).
+pub(crate) fn finite_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// One method row of a trajectory entry.
+pub fn report_json(r: &MethodReport) -> Json {
+    let mut pairs = vec![
+        ("method", Json::str(&r.method)),
+        ("requests", Json::Num(r.requests as f64)),
+        ("errors", Json::Num(r.errors as f64)),
+        ("dropped", Json::Num(r.dropped as f64)),
+        ("measured_s", finite_or_null(r.measured_s)),
+        ("offered_qps", finite_or_null(r.offered_qps)),
+        ("achieved_qps", finite_or_null(r.achieved_qps)),
+        ("tps", finite_or_null(r.tps)),
+        ("ttft_ms", summary_json(&r.ttft)),
+        ("latency_ms", summary_json(&r.latency)),
+        ("wall_ms", summary_json(&r.wall)),
+        ("mean_inflight", finite_or_null(r.mean_inflight)),
+        ("queue_wait_ms_mean", finite_or_null(r.queue_wait_ms_mean)),
+        ("refreshes", finite_or_null(r.refreshes)),
+        ("steps", finite_or_null(r.steps)),
+        ("refresh_rate", finite_or_null(r.refresh_rate)),
+        ("partial_refreshes", finite_or_null(r.partial_refreshes)),
+        ("rows_invalidated", finite_or_null(r.rows_invalidated)),
+        ("scheduled_row_refreshes", finite_or_null(r.scheduled_row_refreshes)),
+        ("schedule_refits", finite_or_null(r.schedule_refits)),
+        ("tier_switches", finite_or_null(r.tier_switches)),
+        ("budget_tier", finite_or_null(r.budget_tier)),
+        ("adaptive", Json::Bool(r.adaptive)),
+        (
+            "ledger",
+            Json::obj(vec![
+                ("upload_us", finite_or_null(r.upload_us)),
+                ("execute_us", finite_or_null(r.execute_us)),
+                ("collect_us", finite_or_null(r.collect_us)),
+                ("sample_us", finite_or_null(r.sample_us)),
+                ("serialize_us", finite_or_null(r.serialize_us)),
+                ("step_wall_us", finite_or_null(r.step_wall_us)),
+                ("rows_uploaded", finite_or_null(r.rows_uploaded)),
+                ("rows_skipped", finite_or_null(r.rows_skipped)),
+            ]),
+        ),
+        (
+            "per_worker_completed",
+            Json::Arr(
+                r.per_worker_completed
+                    .iter()
+                    .map(|(id, n)| {
+                        Json::obj(vec![
+                            ("worker", Json::Num(*id as f64)),
+                            ("completed", finite_or_null(*n)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    // Warm-serving rows (`--prefix-cache on`) carry the prefix columns;
+    // cold rows omit them entirely — readers tell warm from cold by key
+    // presence, exactly like the scenario tag below.
+    if let Some(hr) = r.prefix_hit_rate {
+        pairs.push(("prefix_hit_rate", finite_or_null(hr)));
+        pairs.push(("prefix_hits", finite_or_null(r.prefix_hits)));
+        pairs.push(("prefix_misses", finite_or_null(r.prefix_misses)));
+        pairs.push(("prefix_evictions", finite_or_null(r.prefix_evictions)));
+        pairs.push(("prefix_purges", finite_or_null(r.prefix_purges)));
+        pairs.push(("warm_admissions", finite_or_null(r.warm_admissions)));
+        pairs.push(("affinity_dispatches", finite_or_null(r.affinity_dispatches)));
+    }
+    if let Some(w) = r.warm_ttft_ms {
+        pairs.push(("warm_ttft_ms", finite_or_null(w)));
+    }
+    // Paged rows (`--page-bytes`/`--grace`) carry the slot-memory and
+    // overload columns; unpaged rows omit them — key presence is the
+    // discriminator, like the prefix columns above.
+    if r.paged {
+        pairs.push(("pages_resident", finite_or_null(r.pages_resident)));
+        pairs.push(("pages_evicted", finite_or_null(r.pages_evicted)));
+        pairs.push(("pages_reclaimed", finite_or_null(r.pages_reclaimed)));
+        pairs.push(("stale_served", finite_or_null(r.stale_served)));
+        pairs.push(("rate_limited", finite_or_null(r.rate_limited)));
+        pairs.push(("degraded_entries", finite_or_null(r.degraded_entries)));
+        pairs.push(("degraded_exits", finite_or_null(r.degraded_exits)));
+        pairs.push(("degraded_mode", finite_or_null(r.degraded_mode)));
+        pairs.push(("drift_debt_peak", finite_or_null(r.drift_debt_peak)));
+    }
+    // Scenario rows carry their tag + schema-versioned SLO block
+    // (DESIGN.md §10); plain load-shape rows omit both keys entirely.
+    if let Some(s) = &r.scenario {
+        pairs.push(("scenario", Json::str(s)));
+    }
+    if let Some(slo) = &r.slo {
+        pairs.push(("slo", super::scenario::slo_json(slo)));
+    }
+    Json::obj(pairs)
+}
+
+/// The `config` block of a trajectory entry — everything needed to decide
+/// whether two entries are comparable, the policy gates included (two
+/// runs differing only in `--partial-refresh` must be distinguishable).
+pub fn config_json(
+    cfg: &LoadGenConfig,
+    workers: usize,
+    model: &str,
+    policy: PolicyFlags,
+) -> Json {
+    let (mode, load) = match cfg.mode {
+        ArrivalMode::Open { qps } => ("open", Json::Num(qps)),
+        ArrivalMode::Closed { clients } => ("closed", Json::Num(clients as f64)),
+        ArrivalMode::Pipelined { depth } => ("pipelined", Json::Num(depth as f64)),
+    };
+    Json::obj(vec![
+        ("mode", Json::str(mode)),
+        ("load", load),
+        ("workers", Json::Num(workers as f64)),
+        ("model", Json::str(model)),
+        ("partial_refresh", Json::Bool(policy.partial_refresh)),
+        (
+            "refresh_interval",
+            match policy.refresh_interval {
+                None => Json::Null,
+                Some(i) => Json::Num(i as f64),
+            },
+        ),
+        ("adaptive", Json::Bool(policy.adaptive)),
+        (
+            "row_refresh_per_step",
+            match policy.row_refresh_per_step {
+                None => Json::Null,
+                Some(i) => Json::Num(i as f64),
+            },
+        ),
+        (
+            "refit_interval",
+            match policy.refit_interval {
+                None => Json::Null,
+                Some(i) => Json::Num(i as f64),
+            },
+        ),
+        ("prefix_cache", Json::Bool(policy.prefix_cache)),
+        (
+            "prefix_mem",
+            match policy.prefix_mem {
+                None => Json::Null,
+                Some(b) => Json::Num(b as f64),
+            },
+        ),
+        (
+            "page_bytes",
+            match policy.page_bytes {
+                None => Json::Null,
+                Some(b) => Json::Num(b as f64),
+            },
+        ),
+        (
+            "grace",
+            match policy.grace {
+                None => Json::Null,
+                Some(g) => Json::Num(g as f64),
+            },
+        ),
+        ("warmup_s", Json::Num(cfg.warmup.as_secs_f64())),
+        ("duration_s", Json::Num(cfg.duration.as_secs_f64())),
+        (
+            "tasks",
+            Json::Arr(cfg.tasks.iter().map(|t| Json::str(t.name())).collect()),
+        ),
+        (
+            "gen_len",
+            match cfg.gen_len {
+                None => Json::Null,
+                Some(d) => Json::obj(vec![
+                    ("lo", Json::Num(d.lo as f64)),
+                    ("hi", Json::Num(d.hi as f64)),
+                ]),
+            },
+        ),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("max_inflight", Json::Num(cfg.max_inflight as f64)),
+    ])
+}
+
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Append one entry (config + per-method reports + git rev + timestamp) to
+/// the schema-versioned trajectory file at `path`, creating it if absent.
+///
+/// The file is `{"schema": 1, "entries": [...]}`; successive PRs append
+/// comparable datapoints rather than overwriting history.  An existing
+/// file that fails to parse or carries a different schema is an error —
+/// never silently clobbered.
+pub fn append_trajectory(path: &Path, config: Json, reports: &[MethodReport]) -> Result<()> {
+    let mut entries: Vec<Json> = match std::fs::read_to_string(path) {
+        Ok(text) => {
+            let doc = parse(&text)
+                .with_context(|| format!("existing {} is not valid JSON", path.display()))?;
+            let schema = doc.get("schema").and_then(|s| s.as_f64());
+            anyhow::ensure!(
+                schema == Some(TRAJECTORY_SCHEMA),
+                "{}: schema {:?} != {TRAJECTORY_SCHEMA} (refusing to mix)",
+                path.display(),
+                schema,
+            );
+            doc.get("entries").and_then(|e| e.as_arr()).map(|a| a.to_vec()).unwrap_or_default()
+        }
+        // Only a genuinely absent file starts a fresh history; any other
+        // read failure (corrupt UTF-8, permissions, transient IO) must not
+        // silently clobber the existing trajectory on the write below.
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => {
+            return Err(e).with_context(|| format!("read {}", path.display()));
+        }
+    };
+    let unix = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    entries.push(Json::obj(vec![
+        ("git_rev", Json::Str(git_rev())),
+        ("unix_time", Json::Num(unix)),
+        ("config", config),
+        ("methods", Json::Arr(reports.iter().map(report_json).collect())),
+    ]));
+    let doc = Json::obj(vec![
+        ("schema", Json::Num(TRAJECTORY_SCHEMA)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    // Atomic replace: write a sibling temp file and rename it over the
+    // trajectory.  A truncating in-place write could destroy the whole
+    // append-only history on a mid-write kill or a full disk.
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, doc.to_string() + "\n")
+        .with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} over {}", tmp.display(), path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fully-populated row with easy-to-serialize values.  One field
+    /// (`queue_wait_ms_mean`) is NaN on purpose so the bytes also pin the
+    /// NaN→null mapping.
+    fn sample_report() -> MethodReport {
+        MethodReport {
+            method: "spa".into(),
+            requests: 2,
+            errors: 0,
+            dropped: 1,
+            measured_s: 2.0,
+            offered_qps: 4.0,
+            achieved_qps: 1.5,
+            tps: 32.0,
+            ttft: Some(Summary {
+                n: 2,
+                mean: 60.0,
+                std: 10.0,
+                min: 50.0,
+                max: 70.0,
+                p50: 50.0,
+                p90: 70.0,
+                p99: 70.0,
+            }),
+            latency: None,
+            wall: None,
+            mean_inflight: 0.5,
+            queue_wait_ms_mean: f64::NAN,
+            refreshes: 3.0,
+            steps: 100.0,
+            refresh_rate: 0.03,
+            partial_refreshes: 5.0,
+            rows_invalidated: 1.0,
+            scheduled_row_refreshes: 2.0,
+            schedule_refits: 0.0,
+            tier_switches: 0.0,
+            budget_tier: 0.0,
+            adaptive: true,
+            upload_us: 10.0,
+            execute_us: 20.0,
+            collect_us: 30.0,
+            sample_us: 40.0,
+            serialize_us: 50.0,
+            step_wall_us: 60.0,
+            rows_uploaded: 7.0,
+            rows_skipped: 8.0,
+            prefix_hits: 1.0,
+            prefix_misses: 1.0,
+            prefix_evictions: 0.0,
+            prefix_purges: 0.0,
+            warm_admissions: 1.0,
+            affinity_dispatches: 2.0,
+            pages_resident: 4.0,
+            pages_evicted: 1.0,
+            pages_reclaimed: 2.0,
+            stale_served: 3.0,
+            rate_limited: 0.0,
+            degraded_entries: 1.0,
+            degraded_exits: 1.0,
+            degraded_mode: 0.0,
+            drift_debt_peak: 9.0,
+            paged: false,
+            prefix_hit_rate: None,
+            warm_ttft_ms: None,
+            per_worker_completed: vec![(0, 2.0)],
+            scenario: None,
+            slo: None,
+            latency_samples: Vec::new(),
+        }
+    }
+
+    /// Satellite regression: the trajectory row serializes to **the exact
+    /// bytes** it did when this code lived inside `bench::loadgen` — key
+    /// names, key order, integral-float rendering, NaN→null, and the
+    /// presence rules for the optional prefix/paged/scenario columns are
+    /// all frozen here.  Any diff in this string is a schema change and
+    /// must bump [`TRAJECTORY_SCHEMA`].
+    #[test]
+    fn trajectory_row_bytes_are_frozen() {
+        let base = concat!(
+            "{\"method\":\"spa\",\"requests\":2,\"errors\":0,\"dropped\":1,",
+            "\"measured_s\":2,\"offered_qps\":4,\"achieved_qps\":1.5,\"tps\":32,",
+            "\"ttft_ms\":{\"n\":2,\"mean\":60,\"min\":50,\"p50\":50,\"p90\":70,",
+            "\"p99\":70,\"max\":70},\"latency_ms\":null,\"wall_ms\":null,",
+            "\"mean_inflight\":0.5,\"queue_wait_ms_mean\":null,\"refreshes\":3,",
+            "\"steps\":100,\"refresh_rate\":0.03,\"partial_refreshes\":5,",
+            "\"rows_invalidated\":1,\"scheduled_row_refreshes\":2,",
+            "\"schedule_refits\":0,\"tier_switches\":0,\"budget_tier\":0,",
+            "\"adaptive\":true,\"ledger\":{\"upload_us\":10,\"execute_us\":20,",
+            "\"collect_us\":30,\"sample_us\":40,\"serialize_us\":50,",
+            "\"step_wall_us\":60,\"rows_uploaded\":7,\"rows_skipped\":8},",
+            "\"per_worker_completed\":[{\"worker\":0,\"completed\":2}]",
+        );
+        let r = sample_report();
+        assert_eq!(report_json(&r).to_string(), format!("{base}}}"));
+
+        // Stamping the optional column families appends exactly these keys
+        // in exactly this order — nothing in the base row moves.
+        let mut warm = sample_report();
+        warm.prefix_hit_rate = Some(0.5);
+        warm.warm_ttft_ms = Some(12.5);
+        warm.paged = true;
+        warm.scenario = Some("chat".into());
+        let tail = concat!(
+            ",\"prefix_hit_rate\":0.5,\"prefix_hits\":1,\"prefix_misses\":1,",
+            "\"prefix_evictions\":0,\"prefix_purges\":0,\"warm_admissions\":1,",
+            "\"affinity_dispatches\":2,\"warm_ttft_ms\":12.5,",
+            "\"pages_resident\":4,\"pages_evicted\":1,\"pages_reclaimed\":2,",
+            "\"stale_served\":3,\"rate_limited\":0,\"degraded_entries\":1,",
+            "\"degraded_exits\":1,\"degraded_mode\":0,\"drift_debt_peak\":9,",
+            "\"scenario\":\"chat\"}",
+        );
+        assert_eq!(report_json(&warm).to_string(), format!("{base}{tail}"));
+    }
+}

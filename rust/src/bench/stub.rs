@@ -1,89 +1,66 @@
-//! Stub engine workers for artifact-free serving tests and smokes.
+//! Artifact-free serving factories: the **production** worker loop over
+//! the simulator backend.
 //!
-//! A stub worker speaks the full [`Command`] mailbox protocol the real
-//! `scheduler::Worker` does — slot-based FIFO admission, incremental MASK
-//! commits, streamed [`ReqEvent::Tokens`] frames, cooperative cancellation
-//! (slot freed mid-decode), honest [`Metrics`] — with only the device
-//! execution replaced by a fixed per-step delay.  The v2 session tests and
-//! the CI `bench-serve --stub` smoke drive the whole
-//! TCP → router → worker pipeline through these on any checkout: no
-//! artifacts, no PJRT.
+//! Historically this module carried two hand-mirrored stub decode loops
+//! that re-implemented the scheduler's admission/cancel/commit protocol
+//! around a fixed per-step delay.  They are gone: `stub_router` /
+//! `policy_stub_router` now assemble the real
+//! [`Worker`](crate::coordinator::scheduler::Worker) — production
+//! [`Method`], batcher, pager, prefix store, overload controller, metrics
+//! pipeline — over a [`SimBackend`](crate::runtime::SimBackend) that
+//! emulates variant execution in host memory (DESIGN.md §13).  The v2
+//! session tests and the CI `bench-serve --stub` smoke drive the whole
+//! TCP → router → worker pipeline through the exact coordinator code the
+//! engine path runs: no artifacts, no PJRT.
 //!
-//! Determinism contract the tests lean on: request `id` picks the decoded
-//! character (`id % 10`), commits land in ascending position order, and
-//! the final `Response::text` equals the concatenation of every streamed
-//! delta.
+//! Determinism contract the tests lean on: the simulator's sharp-logit
+//! schedule commits the first `commits_per_step` MASK positions per row
+//! each step in ascending order (one digit character per position,
+//! `(position + seed) % 10`), and the final `Response::text` equals the
+//! concatenation of every streamed delta.
 //!
-//! Two worker flavours: the plain session stub ([`StubConfig`] /
-//! [`stub_router`]) and the **policy** stub ([`PolicyStubConfig`] /
-//! [`policy_stub_router`]), which runs the real spa cache-policy decision
-//! loop — staggered scheduled refresh and the adaptive budget controller
-//! included — over the same stubbed execution.
+//! [`StubConfig`] / [`PolicyStubConfig`] survive as thin config shims so
+//! the old stub knobs keep their spelling; each maps onto a
+//! [`SimConfig`] plus production `Method` configuration (see DESIGN.md §13
+//! for the knob-by-knob mapping).
 
-use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
 
-use crate::coordinator::cache::{
-    resolve_cap_bytes, stub_tiers, AdaptiveConfig, AdaptiveController, CachePolicy,
-    CacheState, Exec, PlanCtx, PolicyFlags, PrefixStore, SpaPolicy, StepObs,
-};
-use crate::coordinator::ledger::StepLedger;
-use crate::coordinator::mem::{
-    MemSnapshot, OverloadConfig, OverloadController, Pager, PagerConfig,
-};
-use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{ReqEvent, Request, Response, SlotState};
-use crate::coordinator::router::{Router, WorkerEndpoint, WorkerStatus};
-use crate::coordinator::scheduler::Command;
-use crate::model::tokenizer::MASK;
+use anyhow::Result;
 
-/// Sequence length stub servers are driven at (matches the toy manifests).
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::cache::{Method, MethodSpec, PolicyFlags};
+use crate::coordinator::decode::{Sampler, UnmaskMode};
+use crate::coordinator::router::Router;
+use crate::coordinator::scheduler::Worker;
+use crate::runtime::{SimBackend, SimConfig};
+
+// The simulator owns the prefill model now; re-exported so existing
+// callers (tests, scenario trace maths) keep their import path.
+pub use crate::runtime::backend::{PREFILL_TOKENS_PER_STEP, SIM_MODEL};
+
+/// Sequence length stub servers are driven at (the sim variants'
+/// geometry; matches the toy engine manifests).
 pub const STUB_SEQ_LEN: usize = 128;
 
-/// Modelled prefill throughput: uncovered prompt tokens absorbed per paced
-/// step before a resident commits its first token.  Prefill is modelled
-/// **unconditionally** (with or without `--prefix-cache`) so a warm run and
-/// a cold run differ only in how much prompt the prefix store covers —
-/// that difference is exactly the warm-vs-cold TTFT gap the CI chat smoke
-/// gates on (DESIGN.md §11).
-pub const PREFILL_TOKENS_PER_STEP: usize = 16;
+/// Confidence threshold the sim-backed workers sample at — the sim's
+/// sharp-logit schedule puts chosen positions at softmax ≈ 1.0 and
+/// everything else at 1/64, so 0.9 commits exactly the scheduled set.
+const STUB_THRESHOLD: f64 = 0.9;
 
-/// Prefix-store signature tag for the plain stub, which has no budget-tier
-/// family to swap (the policy stub tags with the active tier's name).
-const STUB_PREFIX_TAG: &str = "stub";
-
-/// Steps a resident spends prefilling `uncovered` prompt tokens.
-fn prefill_steps_for(uncovered: usize) -> usize {
-    uncovered.saturating_add(PREFILL_TOKENS_PER_STEP - 1) / PREFILL_TOKENS_PER_STEP
-}
-
-/// Mirror the store's counters into a metrics block (assignment, not
-/// increment — the store is the single source of truth, like `CacheState`).
-fn mirror_prefix_counters(metrics: &mut Metrics, store: &PrefixStore) {
-    let c = &store.counters;
-    metrics.prefix_hits = c.hits as u64;
-    metrics.prefix_misses = c.misses as u64;
-    metrics.prefix_evictions = c.evictions as u64;
-    metrics.prefix_purges = c.purges as u64;
-    metrics.warm_admissions = c.warm_admissions as u64;
-    metrics.prefix_hit_depth_sum = c.hit_depth_sum as u64;
-    metrics.prefix_hit_depth_count = c.hit_depth_count as u64;
-}
-
-/// Knobs for one stub worker.
+/// Knobs for one sim-backed worker (plain session flavour).
 #[derive(Debug, Clone)]
 pub struct StubConfig {
     /// Batch slots (concurrent residents per worker).
     pub batch: usize,
-    /// Wall time per decode step.
+    /// Modelled wall time per decode step.
     pub step_ms: u64,
     /// MASK positions committed per resident per step.
     pub commits_per_step: usize,
     /// Optional shared admission log of `(request id, slot index)` — the
-    /// session tests assert a cancelled request's freed slot is re-used.
+    /// session tests assert a cancelled request's freed slot is re-used,
+    /// and the conservation suite replays it against completion counters.
     pub slot_log: Option<Arc<Mutex<Vec<(u64, usize)>>>>,
     /// Cross-request prefix store (`--prefix-cache on`): finished and
     /// cancelled residents donate their prompt region; matching admissions
@@ -106,295 +83,15 @@ impl Default for StubConfig {
     }
 }
 
-/// One request resident in a stub slot.
-struct Resident {
-    req: Request,
-    reply: Sender<ReqEvent>,
-    /// MASK positions of the request's row, ascending.
-    masks: Vec<usize>,
-    /// How many of `masks` have been committed so far.
-    committed: usize,
-    steps: usize,
-    ttft_ms: Option<f64>,
-    /// Paced steps left of modelled prefill before the first commit
-    /// (already net of any warm prefix-store coverage).
-    prefill_steps: usize,
-}
-
-impl Resident {
-    fn decode_char(&self) -> char {
-        char::from_digit((self.req.id % 10) as u32, 10).unwrap_or('x')
-    }
-}
-
-/// Spawn one stub worker thread; the endpoint plugs straight into
-/// [`Router::new`].
-pub fn spawn_stub_worker(id: usize, cfg: StubConfig) -> (WorkerEndpoint, JoinHandle<()>) {
-    let (tx, rx) = channel::<Command>();
-    let status = Arc::new(WorkerStatus::default());
-    status.set_free_slots(cfg.batch.max(1));
-    let worker_status = Arc::clone(&status);
-    let handle = std::thread::Builder::new()
-        .name(format!("spa-stub-{id}"))
-        .spawn(move || run_stub(cfg, rx, worker_status))
-        .expect("spawn stub worker");
-    (WorkerEndpoint { id, tx, status }, handle)
-}
-
-/// A router over `workers` stub workers plus their join handles.
-pub fn stub_router(workers: usize, cfg: &StubConfig) -> (Router, Vec<JoinHandle<()>>) {
-    let mut eps = Vec::new();
-    let mut handles = Vec::new();
-    for id in 0..workers.max(1) {
-        let (ep, h) = spawn_stub_worker(id, cfg.clone());
-        eps.push(ep);
-        handles.push(h);
-    }
-    (Router::new(eps), handles)
-}
-
-fn run_stub(cfg: StubConfig, rx: Receiver<Command>, status: Arc<WorkerStatus>) {
-    let batch = cfg.batch.max(1);
-    let step = Duration::from_millis(cfg.step_ms);
-    let mut prefix_store: Option<PrefixStore> = if cfg.prefix_cache {
-        Some(PrefixStore::new(resolve_cap_bytes(cfg.prefix_mem, None)))
-    } else {
-        None
-    };
-    let mut metrics = Metrics::default();
-    let mut queue: VecDeque<(Request, Sender<ReqEvent>)> = VecDeque::new();
-    let mut slots: Vec<Option<Resident>> = (0..batch).map(|_| None).collect();
-    let mut next_step = Instant::now();
-    let mut cmds: Vec<Command> = Vec::new();
-    loop {
-        let busy = !queue.is_empty() || slots.iter().any(Option::is_some);
-        status.set_queue_depth(queue.len());
-        status.set_free_slots(slots.iter().filter(|s| s.is_none()).count());
-
-        // Gather commands: block when idle, otherwise wait out the step
-        // pacing (commands arriving mid-step are handled before it runs).
-        cmds.clear();
-        if !busy {
-            match rx.recv() {
-                Ok(c) => cmds.push(c),
-                Err(_) => return,
-            }
-        } else {
-            let now = Instant::now();
-            if now < next_step {
-                match rx.recv_timeout(next_step - now) {
-                    Ok(c) => cmds.push(c),
-                    Err(RecvTimeoutError::Timeout) => {}
-                    Err(RecvTimeoutError::Disconnected) => return,
-                }
-            }
-        }
-        loop {
-            match rx.try_recv() {
-                Ok(c) => cmds.push(c),
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => return,
-            }
-        }
-        for cmd in cmds.drain(..) {
-            match cmd {
-                Command::Submit(req, reply) => {
-                    metrics.requests_submitted += 1;
-                    queue.push_back((req, reply));
-                }
-                Command::Cancel(id) => {
-                    for (req, _) in queue.iter().filter(|(r, _)| r.id == id) {
-                        req.cancel.store(true, std::sync::atomic::Ordering::Relaxed);
-                    }
-                    for r in slots.iter().flatten() {
-                        if r.req.id == id {
-                            r.req
-                                .cancel
-                                .store(true, std::sync::atomic::Ordering::Relaxed);
-                        }
-                    }
-                }
-                Command::Stats(reply) => {
-                    let mut m = metrics.clone();
-                    m.queue_depth = queue.len();
-                    m.active_slots = slots.iter().filter(|s| s.is_some()).count();
-                    if let Some(store) = &prefix_store {
-                        mirror_prefix_counters(&mut m, store);
-                    }
-                    m.affinity_dispatches = status.affinity_dispatches() as u64;
-                    let _ = reply.send(m);
-                }
-                Command::Shutdown => return,
-            }
-        }
-
-        // Cancellation sweep: queued requests leave without a slot,
-        // resident ones free theirs mid-decode (donating their prompt
-        // region — a cancelled prefix is still a valid warm seed).
-        for (req, reply) in std::mem::take(&mut queue) {
-            if req.is_cancelled() {
-                let _ = reply.send(ReqEvent::Cancelled { id: req.id, decoded: 0 });
-                metrics.cancelled += 1;
-                status.dec_inflight();
-            } else {
-                queue.push_back((req, reply));
-            }
-        }
-        for slot in slots.iter_mut() {
-            let hit = slot.as_ref().map(|r| r.req.is_cancelled()).unwrap_or(false);
-            if hit {
-                let r = slot.take().expect("cancelled resident present");
-                if let Some(store) = &mut prefix_store {
-                    let upto = r.req.prompt_len.min(r.req.tokens.len());
-                    store.insert(
-                        &r.req.tokens[..upto],
-                        STUB_PREFIX_TAG,
-                        r.req.params.session.as_deref(),
-                    );
-                    status.set_prefix_bloom(store.summary());
-                }
-                let _ = r
-                    .reply
-                    .send(ReqEvent::Cancelled { id: r.req.id, decoded: r.committed });
-                metrics.cancelled += 1;
-                status.dec_inflight();
-            }
-        }
-
-        // FIFO admission into free slots; each admission batch costs one
-        // simulated refresh (the counter the loadgen tests difference).
-        let mut admitted = false;
-        for (si, slot) in slots.iter_mut().enumerate() {
-            if slot.is_some() {
-                continue;
-            }
-            let Some((req, reply)) = queue.pop_front() else { break };
-            if let Some(log) = &cfg.slot_log {
-                log.lock().unwrap().push((req.id, si));
-            }
-            metrics
-                .record_queue_wait(req.submitted.elapsed().as_secs_f64() * 1e3);
-            let masks: Vec<usize> = req
-                .tokens
-                .iter()
-                .enumerate()
-                .filter(|(_, &t)| t == MASK)
-                .map(|(i, _)| i)
-                .collect();
-            // Warm start: the store's longest matching donated prefix
-            // skips its share of modelled prefill.
-            let head = req.prompt_len.min(req.tokens.len());
-            let mut hit_depth = 0usize;
-            if let Some(store) = &mut prefix_store {
-                if let Some(hit) = store.lookup(&req.tokens[..head], STUB_PREFIX_TAG) {
-                    hit_depth = hit.depth;
-                    store.counters.warm_admissions += 1;
-                }
-            }
-            *slot = Some(Resident {
-                req,
-                reply,
-                masks,
-                committed: 0,
-                steps: 0,
-                ttft_ms: None,
-                prefill_steps: prefill_steps_for(head - hit_depth),
-            });
-            admitted = true;
-        }
-        if admitted {
-            metrics.refreshes += 1;
-        }
-
-        // One paced group step over the resident slots.
-        let due = Instant::now() >= next_step;
-        if !due || !slots.iter().any(Option::is_some) {
-            continue;
-        }
-        metrics.steps += 1;
-        for slot in slots.iter_mut() {
-            let done = {
-                let Some(r) = slot.as_mut() else { continue };
-                if r.prefill_steps > 0 {
-                    // Modelled prefill: the uncovered prompt share holds
-                    // the slot before its first commit (decode-step and
-                    // max-steps accounting start after).
-                    r.prefill_steps -= 1;
-                    continue;
-                }
-                r.steps += 1;
-                let ncommit =
-                    cfg.commits_per_step.max(1).min(r.masks.len() - r.committed);
-                let from = r.committed;
-                r.committed += ncommit;
-                let positions = r.masks[from..r.committed].to_vec();
-                if r.ttft_ms.is_none() && !positions.is_empty() {
-                    r.ttft_ms =
-                        Some(r.req.submitted.elapsed().as_secs_f64() * 1e3);
-                }
-                if r.req.params.stream && !positions.is_empty() {
-                    let delta = r.decode_char().to_string().repeat(positions.len());
-                    let _ = r.reply.send(ReqEvent::Tokens {
-                        id: r.req.id,
-                        delta,
-                        positions,
-                    });
-                    metrics.stream_frames += 1;
-                }
-                let cap = r.req.params.max_steps.unwrap_or(usize::MAX);
-                r.committed >= r.masks.len() || r.steps >= cap
-            };
-            if done {
-                let r = slot.take().expect("finished resident present");
-                // Donate the prompt region (stub commits write synthetic
-                // tokens, so only the prompt is stable across turns) and
-                // publish the refreshed affinity bloom *before* Done — the
-                // client's next chat turn must not race a stale bloom.
-                if let Some(store) = &mut prefix_store {
-                    let upto = r.req.prompt_len.min(r.req.tokens.len());
-                    store.insert(
-                        &r.req.tokens[..upto],
-                        STUB_PREFIX_TAG,
-                        r.req.params.session.as_deref(),
-                    );
-                    status.set_prefix_bloom(store.summary());
-                }
-                let latency_ms = r.req.submitted.elapsed().as_secs_f64() * 1e3;
-                let ttft = r.ttft_ms.unwrap_or(f64::NAN);
-                metrics.record_completion(ttft, latency_ms, r.committed);
-                let text = r.decode_char().to_string().repeat(r.committed);
-                let mut tokens = r.req.tokens.clone();
-                for &p in &r.masks[..r.committed] {
-                    tokens[p] = 0;
-                }
-                let _ = r.reply.send(ReqEvent::Done(Response {
-                    id: r.req.id,
-                    text,
-                    tokens,
-                    prompt_len: r.req.prompt_len,
-                    decoded: r.committed,
-                    steps: r.steps,
-                    ttft_ms: ttft,
-                    latency_ms,
-                }));
-                status.dec_inflight();
-            }
-        }
-        next_step = Instant::now() + step;
-    }
-}
-
-/// Knobs for a **policy** stub worker: the real [`SpaPolicy`] decision
-/// loop (and, with `flags.adaptive`, the real [`AdaptiveController`]) run
-/// over a stubbed engine — every refresh/schedule/tier decision is the
-/// production one, only the device execution is a fixed delay.  This is
-/// what lets the CI `bench-serve --stub` smoke and the loadgen e2e tests
-/// measure the adaptive controller artifact-free.
+/// Knobs for a **policy** worker lineup: the same production worker, with
+/// the spa policy's scheduled-refresh/staggering/delta-upload gates and —
+/// via `flags` — the adaptive controller, prefix store, pager and
+/// overload controller, exactly as `spa-cache serve` would attach them.
 #[derive(Debug, Clone)]
 pub struct PolicyStubConfig {
     /// Batch slots (concurrent residents per worker).
     pub batch: usize,
-    /// Wall time per decode step.
+    /// Modelled wall time per decode step.
     pub step_ms: u64,
     /// MASK positions committed per resident per step.
     pub commits_per_step: usize,
@@ -404,17 +101,18 @@ pub struct PolicyStubConfig {
     /// fixed-interval baseline (stalest row ⇒ group-global full refresh).
     pub staggered: bool,
     /// Policy gates (`--partial-refresh`, `--adaptive`, `--row-refresh`,
-    /// `--refit-interval`), exactly as the CLI records them.
+    /// `--refit-interval`, `--prefix-cache`, `--page-bytes`, `--grace`),
+    /// exactly as the CLI records them — applied via `Method::configure`.
     pub flags: PolicyFlags,
-    /// Synthetic per-layer proxy residual stats fed to the controller
-    /// (`None` = the commit-activity fallback path).
+    /// Synthetic per-layer proxy residual stats surfaced by the simulator
+    /// (`None` = the controller's commit-activity fallback path).
     pub proxy_drift: Option<Vec<f64>>,
-    /// Delta-aware token upload: on cached steps only dirty rows transfer
-    /// (clean rows stay device-resident), mirroring the production
-    /// `TokenDelta` path.  `false` is the full-upload baseline — every
-    /// occupied row re-uploads every step — kept so the trajectory can
-    /// show the upload share shrinking under delta.
+    /// Delta-aware token upload: on cached steps only dirty rows transfer.
+    /// `false` is the full-upload baseline — every occupied row re-uploads
+    /// every step, holding `rows_skipped` at exactly zero.
     pub delta_upload: bool,
+    /// Optional shared admission audit log (see [`StubConfig::slot_log`]).
+    pub slot_log: Option<Arc<Mutex<Vec<(u64, usize)>>>>,
 }
 
 impl Default for PolicyStubConfig {
@@ -428,544 +126,138 @@ impl Default for PolicyStubConfig {
             flags: PolicyFlags::default(),
             proxy_drift: None,
             delta_upload: true,
+            slot_log: None,
         }
     }
 }
 
-/// Spawn one policy stub worker thread; the endpoint plugs straight into
-/// [`Router::new`].
-pub fn spawn_policy_stub_worker(
+/// The simulator a worker runs over, synthesized from the shim knobs.
+/// Seeded per worker so multi-worker digit schedules differ (any fixed
+/// seed keeps single-worker runs reproducible).
+fn sim_backend(
     id: usize,
-    cfg: PolicyStubConfig,
-) -> (WorkerEndpoint, JoinHandle<()>) {
-    let (tx, rx) = channel::<Command>();
-    let status = Arc::new(WorkerStatus::default());
-    status.set_free_slots(cfg.batch.max(1));
-    let worker_status = Arc::clone(&status);
-    let handle = std::thread::Builder::new()
-        .name(format!("spa-polstub-{id}"))
-        .spawn(move || run_policy_stub(cfg, rx, worker_status))
-        .expect("spawn policy stub worker");
-    (WorkerEndpoint { id, tx, status }, handle)
+    batch: usize,
+    step_ms: u64,
+    commits_per_step: usize,
+    proxy_drift: Option<Vec<f64>>,
+) -> SimBackend {
+    SimBackend::new(SimConfig {
+        batch: batch.max(1),
+        seq_len: STUB_SEQ_LEN,
+        step_ms,
+        commits_per_step,
+        seed: id as u64,
+        proxy_drift,
+    })
 }
 
-/// A router over `workers` policy stub workers plus their join handles.
+/// A router over `workers` sim-backed production workers (plain session
+/// flavour: spa default policy, no scheduled refresh) plus their join
+/// handles.
+pub fn stub_router(
+    workers: usize,
+    cfg: &StubConfig,
+) -> Result<(Router, Vec<JoinHandle<Result<()>>>)> {
+    let cfg = cfg.clone();
+    Router::spawn(workers.max(1), move |id| {
+        let backend =
+            sim_backend(id, cfg.batch, cfg.step_ms, cfg.commits_per_step, None);
+        let spec = MethodSpec::Spa { variant: "spa_default".into(), refresh_interval: 0 };
+        let mut method = Method::new(&backend, SIM_MODEL, spec)?;
+        let flags = PolicyFlags {
+            prefix_cache: cfg.prefix_cache,
+            prefix_mem: cfg.prefix_mem,
+            ..PolicyFlags::default()
+        };
+        method.configure(&backend, &flags)?;
+        let sampler = Sampler::greedy(UnmaskMode::Parallel { threshold: STUB_THRESHOLD });
+        let mut worker = Worker::new(
+            id,
+            Box::new(backend),
+            method,
+            sampler,
+            BatcherConfig::default(),
+            4 * STUB_SEQ_LEN,
+        );
+        if let Some(log) = &cfg.slot_log {
+            worker.set_slot_log(Arc::clone(log));
+        }
+        Ok(worker)
+    })
+}
+
+/// A router over `workers` sim-backed production workers with the full
+/// policy surface (scheduled refresh, staggering, adaptive controller,
+/// pager/overload/prefix gates) plus their join handles.
 pub fn policy_stub_router(
     workers: usize,
     cfg: &PolicyStubConfig,
-) -> (Router, Vec<JoinHandle<()>>) {
-    let mut eps = Vec::new();
-    let mut handles = Vec::new();
-    for id in 0..workers.max(1) {
-        let (ep, h) = spawn_policy_stub_worker(id, cfg.clone());
-        eps.push(ep);
-        handles.push(h);
-    }
-    (Router::new(eps), handles)
+) -> Result<(Router, Vec<JoinHandle<Result<()>>>)> {
+    let cfg = cfg.clone();
+    Router::spawn(workers.max(1), move |id| {
+        let backend = sim_backend(
+            id,
+            cfg.batch,
+            cfg.step_ms,
+            cfg.commits_per_step,
+            cfg.proxy_drift.clone(),
+        );
+        let spec = MethodSpec::Spa {
+            variant: "spa_default".into(),
+            refresh_interval: cfg.refresh_interval,
+        };
+        let mut method = Method::new(&backend, SIM_MODEL, spec)?;
+        method.configure(&backend, &cfg.flags)?;
+        method.set_staggered(cfg.staggered);
+        method.set_delta_upload(cfg.delta_upload);
+        let sampler = Sampler::greedy(UnmaskMode::Parallel { threshold: STUB_THRESHOLD });
+        let mut worker = Worker::new(
+            id,
+            Box::new(backend),
+            method,
+            sampler,
+            BatcherConfig::default(),
+            4 * STUB_SEQ_LEN,
+        );
+        if let Some(log) = &cfg.slot_log {
+            worker.set_slot_log(Arc::clone(log));
+        }
+        Ok(worker)
+    })
 }
 
-/// Heal budget the non-adaptive policy stub plans with (the mid stub
-/// tier's static schedule).
-const STUB_HEAL_BUDGET: usize = 4;
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-fn run_policy_stub(cfg: PolicyStubConfig, rx: Receiver<Command>, status: Arc<WorkerStatus>) {
-    let batch = cfg.batch.max(1);
-    let step = Duration::from_millis(cfg.step_ms);
-    let mut metrics = Metrics::default();
-    let mut queue: VecDeque<(Request, Sender<ReqEvent>)> = VecDeque::new();
-    let mut residents: Vec<Option<Resident>> = (0..batch).map(|_| None).collect();
-    // The production decision loop: per-slot validity state + spa policy
-    // (+ the adaptive controller over the synthetic tier family).
-    let mut slots: Vec<SlotState> = vec![SlotState::empty(); batch];
-    let mut state = CacheState::default();
-    let mut policy = SpaPolicy::new("spa_default".into(), cfg.refresh_interval);
-    policy.set_partial(cfg.flags.partial_refresh);
-    policy.set_staggered(cfg.staggered);
-    let mut ctrl: Option<AdaptiveController> = if cfg.flags.adaptive {
-        let tiers = stub_tiers();
-        let start = 1usize.min(tiers.len() - 1); // mid tier
-        // Same knob resolution as `Method::configure`: flags override the
-        // shared `AdaptiveConfig` defaults, so a stub entry and an engine
-        // entry recording the same flag values measured the same cadence.
-        let defaults = AdaptiveConfig::default();
-        Some(AdaptiveController::new(
-            tiers,
-            start,
-            vec![0.1, 0.3, 0.2, 0.15],
-            AdaptiveConfig {
-                refit_interval: cfg
-                    .flags
-                    .refit_interval
-                    .unwrap_or(defaults.refit_interval),
-                row_refresh_per_step: cfg
-                    .flags
-                    .row_refresh_per_step
-                    .unwrap_or(defaults.row_refresh_per_step),
-                ..defaults
+    #[test]
+    fn stub_router_builds_production_workers_over_the_sim() {
+        let (router, handles) = stub_router(2, &StubConfig::default()).unwrap();
+        assert_eq!(handles.len(), 2);
+        router.shutdown();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn policy_router_applies_the_adaptive_and_paged_gates() {
+        let cfg = PolicyStubConfig {
+            flags: PolicyFlags {
+                adaptive: true,
+                prefix_cache: true,
+                page_bytes: Some(64 * 1024),
+                grace: Some(32),
+                ..PolicyFlags::default()
             },
-        ))
-    } else {
-        None
-    };
-    // Cross-request prefix store, tagged with the active budget tier's
-    // name so a controller tier swap purges every entry computed under the
-    // old step variant (DESIGN.md §11).
-    let mut prefix_store: Option<PrefixStore> = if cfg.flags.prefix_cache {
-        // The store's byte cap resolves against the pager budget when one
-        // is configured; explicit `--prefix-mem` still wins (DESIGN.md §12).
-        Some(PrefixStore::new(resolve_cap_bytes(
-            cfg.flags.prefix_mem,
-            cfg.flags.page_bytes,
-        )))
-    } else {
-        None
-    };
-    // Paged slot-memory manager + overload controller (`--page-bytes` /
-    // `--grace`): admission spends *pages free* under the byte budget
-    // (cold tails evict first), and scheduled refreshes defer under queue
-    // pressure within the bounded drift debt (DESIGN.md §12).
-    let mut pager: Option<Pager> = cfg
-        .flags
-        .page_bytes
-        .map(|b| Pager::new(batch, STUB_SEQ_LEN, PagerConfig::with_budget(b)));
-    let mut overload: Option<OverloadController> = cfg
-        .flags
-        .grace
-        .map(|g| OverloadController::new(OverloadConfig::with_grace(g as f64)));
-    let mut last_tier = ctrl.as_ref().map(|c| c.active_tier()).unwrap_or(0);
-    let plan_tokens = vec![0i32; batch * STUB_SEQ_LEN];
-    // Per-step cost ledger (accumulated across the worker's lifetime) and
-    // the reusable host staging buffer the upload accounting memcpys
-    // through — a real row copy per uploaded row, so the `upload` phase
-    // measures genuine work, scaled by exactly the rows the delta path
-    // keeps.
-    let mut ledger_total = StepLedger::default();
-    let mut upload_staging: Vec<i32> = Vec::new();
-    let mut next_step = Instant::now();
-    let mut cmds: Vec<Command> = Vec::new();
-    loop {
-        let busy = !queue.is_empty() || residents.iter().any(Option::is_some);
-        status.set_queue_depth(queue.len());
-        status.set_free_slots(residents.iter().filter(|s| s.is_none()).count());
-
-        cmds.clear();
-        if !busy {
-            match rx.recv() {
-                Ok(c) => cmds.push(c),
-                Err(_) => return,
-            }
-        } else {
-            let now = Instant::now();
-            if now < next_step {
-                match rx.recv_timeout(next_step - now) {
-                    Ok(c) => cmds.push(c),
-                    Err(RecvTimeoutError::Timeout) => {}
-                    Err(RecvTimeoutError::Disconnected) => return,
-                }
-            }
-        }
-        loop {
-            match rx.try_recv() {
-                Ok(c) => cmds.push(c),
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => return,
-            }
-        }
-        for cmd in cmds.drain(..) {
-            match cmd {
-                Command::Submit(req, reply) => {
-                    metrics.requests_submitted += 1;
-                    queue.push_back((req, reply));
-                }
-                Command::Cancel(id) => {
-                    for (req, _) in queue.iter().filter(|(r, _)| r.id == id) {
-                        req.cancel.store(true, std::sync::atomic::Ordering::Relaxed);
-                    }
-                    for r in residents.iter().flatten() {
-                        if r.req.id == id {
-                            r.req
-                                .cancel
-                                .store(true, std::sync::atomic::Ordering::Relaxed);
-                        }
-                    }
-                }
-                Command::Stats(reply) => {
-                    let mut m = metrics.clone();
-                    m.queue_depth = queue.len();
-                    m.active_slots = residents.iter().filter(|s| s.is_some()).count();
-                    if let Some(store) = &prefix_store {
-                        mirror_prefix_counters(&mut m, store);
-                    }
-                    m.affinity_dispatches = status.affinity_dispatches() as u64;
-                    m.set_mem(&MemSnapshot::collect(pager.as_ref(), overload.as_ref()));
-                    let _ = reply.send(m);
-                }
-                Command::Shutdown => return,
-            }
-        }
-
-        // Cancellation sweep (queued, then resident — freed slots PAD).
-        for (req, reply) in std::mem::take(&mut queue) {
-            if req.is_cancelled() {
-                let _ = reply.send(ReqEvent::Cancelled { id: req.id, decoded: 0 });
-                metrics.cancelled += 1;
-                status.dec_inflight();
-            } else {
-                queue.push_back((req, reply));
-            }
-        }
-        for (si, slot) in residents.iter_mut().enumerate() {
-            let hit = slot.as_ref().map(|r| r.req.is_cancelled()).unwrap_or(false);
-            if hit {
-                let r = slot.take().expect("cancelled resident present");
-                if let Some(store) = &mut prefix_store {
-                    let tag = ctrl
-                        .as_ref()
-                        .map(|c| c.tier().name.clone())
-                        .unwrap_or_else(|| STUB_PREFIX_TAG.to_string());
-                    let upto = r.req.prompt_len.min(r.req.tokens.len());
-                    store.insert(
-                        &r.req.tokens[..upto],
-                        &tag,
-                        r.req.params.session.as_deref(),
-                    );
-                    status.set_prefix_bloom(store.summary());
-                }
-                let _ = r
-                    .reply
-                    .send(ReqEvent::Cancelled { id: r.req.id, decoded: r.committed });
-                metrics.cancelled += 1;
-                status.dec_inflight();
-                slots[si] = SlotState::empty();
-                if let Some(p) = &mut pager {
-                    p.release(si);
-                }
-            }
-        }
-
-        // FIFO admission through the production per-slot dirty machinery.
-        // With a pager/overload configured the paged gate applies: a
-        // rate-limited request rotates to the back of the queue (delayed,
-        // never dropped), and a request the page budget cannot back yet
-        // stalls the round from the front — page pressure must not starve
-        // a long-context request behind short ones.
-        let mut admitted_rows: Vec<usize> = Vec::new();
-        let mut warm_hits: Vec<(usize, usize)> = Vec::new();
-        let mut free_rows: VecDeque<usize> =
-            (0..batch).filter(|&si| residents[si].is_none()).collect();
-        let mut delayed: Vec<(Request, Sender<ReqEvent>)> = Vec::new();
-        for _ in 0..queue.len() {
-            let Some(&si) = free_rows.front() else { break };
-            let Some((req, reply)) = queue.pop_front() else { break };
-            if let Some(o) = &mut overload {
-                if !o.admit_allowed(req.params.session.as_deref()) {
-                    delayed.push((req, reply));
-                    continue;
-                }
-            }
-            if let Some(p) = &mut pager {
-                let extent = req.tokens.len().min(STUB_SEQ_LEN);
-                if !p.admit(si, extent) {
-                    queue.push_front((req, reply));
-                    break;
-                }
-            }
-            free_rows.pop_front();
-            metrics
-                .record_queue_wait(req.submitted.elapsed().as_secs_f64() * 1e3);
-            let masks: Vec<usize> = req
-                .tokens
-                .iter()
-                .enumerate()
-                .filter(|(_, &t)| t == MASK)
-                .map(|(i, _)| i)
-                .collect();
-            // Warm start: probe under the active tier's signature tag.
-            let head = req.prompt_len.min(req.tokens.len());
-            let mut hit_depth = 0usize;
-            if let Some(store) = &mut prefix_store {
-                let tag = ctrl
-                    .as_ref()
-                    .map(|c| c.tier().name.clone())
-                    .unwrap_or_else(|| STUB_PREFIX_TAG.to_string());
-                if let Some(hit) = store.lookup(&req.tokens[..head], &tag) {
-                    hit_depth = hit.depth;
-                    store.counters.warm_admissions += 1;
-                    warm_hits.push((si, hit.depth));
-                }
-            }
-            // The decode window is clamped to what the mapped pages back
-            // (identity when every page mapped — see `assign_paged`).
-            slots[si] = match pager.as_ref().map(|p| p.mapped_tokens(si)) {
-                Some(mapped) => SlotState::assign_paged(&req, 16, mapped),
-                None => SlotState::assign(&req, 16),
-            };
-            residents[si] = Some(Resident {
-                req,
-                reply,
-                masks,
-                committed: 0,
-                steps: 0,
-                ttft_ms: None,
-                prefill_steps: prefill_steps_for(head - hit_depth),
-            });
-            admitted_rows.push(si);
-        }
-        queue.extend(delayed);
-        if !admitted_rows.is_empty() {
-            state.admit(&admitted_rows, policy.partial_refresh(), &mut slots);
-            // Pre-credit the warm share of partial-service cover *after*
-            // the dirty marking, mirroring `Method::warm_admit_row` — the
-            // heal loop then only re-derives each hit row's cold suffix.
-            let hb = ctrl
-                .as_ref()
-                .map(|c| c.heal_budget())
-                .unwrap_or(STUB_HEAL_BUDGET);
-            for &(si, depth) in &warm_hits {
-                slots[si].cache_cover += depth * hb / STUB_SEQ_LEN;
-            }
-        }
-
-        // One paced decode step: the production plan → commit sequence
-        // (refresh / staggered-scheduled / healing decisions are all
-        // real), then the stubbed "device" commits tokens.
-        let due = Instant::now() >= next_step;
-        if !due || !residents.iter().any(Option::is_some) {
-            continue;
-        }
-        let heal_budget =
-            ctrl.as_ref().map(|c| c.heal_budget()).unwrap_or(STUB_HEAL_BUDGET);
-        let sched_per_step = ctrl
-            .as_ref()
-            .map(|c| c.row_refresh_per_step())
-            .unwrap_or(cfg.flags.row_refresh_per_step.unwrap_or(1));
-        let mut plan = {
-            let cx = PlanCtx {
-                state: &state,
-                tokens: &plan_tokens,
-                slots: &slots,
-                last_conf: &[],
-                batch,
-                seq_len: STUB_SEQ_LEN,
-                heal_budget,
-                sched_per_step,
-            };
-            policy.plan(&cx)
+            proxy_drift: Some(vec![0.1, 0.2, 0.3, 0.4]),
+            ..PolicyStubConfig::default()
         };
-        let full_plan = !matches!(plan.exec, Exec::Cached { .. });
-        // Overload shed (`--grace`): under queue pressure, scheduled
-        // refreshes defer within the bounded drift debt and their rows
-        // are served stale this step (they keep committing instead of
-        // pausing — see the refresh pause below).  A deferred row must
-        // also drop its service entry: scheduled rows were still
-        // cache-valid at plan time, so a surviving entry would heal a row
-        // the commit never re-dirtied.
-        if let Some(o) = &mut overload {
-            if !full_plan {
-                let freeq = residents.iter().filter(|s| s.is_none()).count();
-                let pressure = if queue.len() + freeq == 0 {
-                    0.0
-                } else {
-                    queue.len() as f64 / (queue.len() + freeq) as f64
-                };
-                let drift = ctrl.as_ref().map(|c| c.mean_drift()).unwrap_or(0.0);
-                if o.shed_scheduled(pressure, drift, &mut plan.scheduled) > 0 {
-                    let kept = plan.scheduled.clone();
-                    plan.serviced
-                        .retain(|sv| !slots[sv.row].cache_valid || kept.contains(&sv.row));
-                }
-            }
+        let (router, handles) = policy_stub_router(1, &cfg).unwrap();
+        assert_eq!(handles.len(), 1);
+        router.shutdown();
+        for h in handles {
+            h.join().unwrap().unwrap();
         }
-        // Delta-aware upload accounting, **between plan and commit**
-        // (commit revalidates serviced rows, so validity must be read
-        // here): refresh-class plans re-upload every occupied row; cached
-        // plans upload only cache-dirty rows under `delta_upload`, and the
-        // clean remainder stays device-resident.  Each uploaded row is a
-        // real memcpy into the reusable staging buffer so the `upload`
-        // phase carries honest, row-proportional time.
-        let step_t0 = Instant::now();
-        {
-            upload_staging.clear();
-            for (row, slot) in slots.iter().enumerate().take(batch) {
-                if !slot.occupied {
-                    continue;
-                }
-                if !cfg.delta_upload || full_plan || !slot.cache_valid {
-                    upload_staging.extend_from_slice(
-                        &plan_tokens[row * STUB_SEQ_LEN..(row + 1) * STUB_SEQ_LEN],
-                    );
-                    ledger_total.rows_uploaded += 1;
-                } else {
-                    ledger_total.rows_skipped += 1;
-                }
-            }
-            ledger_total.upload_ns += step_t0.elapsed().as_nanos() as u64;
-        }
-        state.commit(&plan, &mut slots);
-        let sample_t0 = Instant::now();
-        let mut commits_this_step = 0usize;
-        let active_rows = residents.iter().filter(|s| s.is_some()).count();
-        for (si, slot) in residents.iter_mut().enumerate() {
-            let done = {
-                let Some(r) = slot.as_mut() else { continue };
-                if r.prefill_steps > 0 {
-                    // Modelled prefill, net of warm prefix coverage — see
-                    // `PREFILL_TOKENS_PER_STEP`.
-                    r.prefill_steps -= 1;
-                    continue;
-                }
-                if !full_plan && plan.scheduled.contains(&si) {
-                    // A scheduled per-row refresh occupies the row's
-                    // service this step: its commit waits exactly like
-                    // modelled prefill.  Rows the overload controller
-                    // deferred are no longer in `scheduled` — they commit
-                    // (served stale) instead of paying this pause.
-                    continue;
-                }
-                r.steps += 1;
-                let ncommit =
-                    cfg.commits_per_step.max(1).min(r.masks.len() - r.committed);
-                let from = r.committed;
-                r.committed += ncommit;
-                commits_this_step += ncommit;
-                let positions = r.masks[from..r.committed].to_vec();
-                if r.ttft_ms.is_none() && !positions.is_empty() {
-                    r.ttft_ms =
-                        Some(r.req.submitted.elapsed().as_secs_f64() * 1e3);
-                }
-                if r.req.params.stream && !positions.is_empty() {
-                    let delta = r.decode_char().to_string().repeat(positions.len());
-                    let _ = r.reply.send(ReqEvent::Tokens {
-                        id: r.req.id,
-                        delta,
-                        positions,
-                    });
-                    metrics.stream_frames += 1;
-                }
-                let cap = r.req.params.max_steps.unwrap_or(usize::MAX);
-                r.committed >= r.masks.len() || r.steps >= cap
-            };
-            if done {
-                let r = slot.take().expect("finished resident present");
-                slots[si] = SlotState::empty();
-                if let Some(p) = &mut pager {
-                    p.release(si);
-                }
-                // Donate under the active tier's tag, publishing the bloom
-                // before Done (see the plain stub for why).
-                if let Some(store) = &mut prefix_store {
-                    let tag = ctrl
-                        .as_ref()
-                        .map(|c| c.tier().name.clone())
-                        .unwrap_or_else(|| STUB_PREFIX_TAG.to_string());
-                    let upto = r.req.prompt_len.min(r.req.tokens.len());
-                    store.insert(
-                        &r.req.tokens[..upto],
-                        &tag,
-                        r.req.params.session.as_deref(),
-                    );
-                    status.set_prefix_bloom(store.summary());
-                }
-                let latency_ms = r.req.submitted.elapsed().as_secs_f64() * 1e3;
-                let ttft = r.ttft_ms.unwrap_or(f64::NAN);
-                metrics.record_completion(ttft, latency_ms, r.committed);
-                let text = r.decode_char().to_string().repeat(r.committed);
-                let mut tokens = r.req.tokens.clone();
-                for &p in &r.masks[..r.committed] {
-                    tokens[p] = 0;
-                }
-                let _ = r.reply.send(ReqEvent::Done(Response {
-                    id: r.req.id,
-                    text,
-                    tokens,
-                    prompt_len: r.req.prompt_len,
-                    decoded: r.committed,
-                    steps: r.steps,
-                    ttft_ms: ttft,
-                    latency_ms,
-                }));
-                status.dec_inflight();
-            }
-        }
-        ledger_total.sample_ns += sample_t0.elapsed().as_nanos() as u64;
-        if let Some(c) = &mut ctrl {
-            let free = residents.iter().filter(|s| s.is_none()).count();
-            c.observe(&StepObs {
-                commits: commits_this_step,
-                active_rows,
-                queue_depth: queue.len(),
-                free_slots: free,
-                proxy_drift: cfg.proxy_drift.as_deref(),
-            });
-        }
-        // Page upkeep after the commits: re-classify pages beyond each
-        // row's advanced frontier (a dirty row's tail is cold — its cover
-        // is being re-derived anyway), then fault the frontier's pages
-        // back resident.  A fault means evicted content must be
-        // re-derived before use: the row's partial-service cover
-        // restarts; an unsatisfiable fault also drops validity so the
-        // heal loop re-services the row once frames free up.
-        if let Some(p) = &mut pager {
-            for (si, slot) in residents.iter().enumerate() {
-                let Some(r) = slot else { continue };
-                let hot = (r.req.prompt_len + r.committed).min(STUB_SEQ_LEN);
-                p.observe_slot(si, hot, !slots[si].cache_valid);
-                match p.ensure_resident(si, hot) {
-                    Some(0) => {}
-                    Some(_) => slots[si].cache_cover = 0,
-                    None => {
-                        slots[si].cache_valid = false;
-                        slots[si].cache_cover = 0;
-                    }
-                }
-            }
-        }
-        // Overload pressure observation — degraded mode exits only after
-        // the configured dwell of consecutive calm steps.
-        if let Some(o) = &mut overload {
-            let freeq = residents.iter().filter(|s| s.is_none()).count();
-            let pressure = if queue.len() + freeq == 0 {
-                0.0
-            } else {
-                queue.len() as f64 / (queue.len() + freeq) as f64
-            };
-            o.observe(pressure);
-        }
-        // A controller tier swap invalidates every prefix entry donated
-        // under the old step variant — purge to the new signature so a
-        // warm admission can never seed stale-tier rows.
-        if let Some(c) = &ctrl {
-            let tier = c.active_tier();
-            if tier != last_tier {
-                last_tier = tier;
-                if let Some(store) = &mut prefix_store {
-                    store.purge_except(&c.tier().name);
-                    status.set_prefix_bloom(store.summary());
-                }
-            }
-        }
-        // The stubbed "device" cost is the step pacing delay; attribute it
-        // to `execute` and close out this step's wall span (host work
-        // measured + the simulated device time).
-        ledger_total.execute_ns += step.as_nanos() as u64;
-        ledger_total.step_wall_ns +=
-            step_t0.elapsed().as_nanos() as u64 + step.as_nanos() as u64;
-        // Mirror the production counters — `CacheState`/controller stay
-        // the single source of truth, exactly like the real worker.
-        metrics.steps = state.steps;
-        metrics.refreshes = state.refreshes;
-        metrics.partial_refreshes = state.partial_refreshes;
-        metrics.rows_invalidated = state.rows_invalidated;
-        metrics.scheduled_row_refreshes = state.scheduled_row_refreshes;
-        metrics.schedule_refits = ctrl.as_ref().map(|c| c.refits()).unwrap_or(0);
-        metrics.tier_switches = ctrl.as_ref().map(|c| c.switches()).unwrap_or(0);
-        metrics.budget_tier = ctrl.as_ref().map(|c| c.active_tier()).unwrap_or(0);
-        if let Some(store) = &prefix_store {
-            mirror_prefix_counters(&mut metrics, store);
-        }
-        metrics.affinity_dispatches = status.affinity_dispatches() as u64;
-        metrics.set_mem(&MemSnapshot::collect(pager.as_ref(), overload.as_ref()));
-        metrics.ledger = ledger_total.clone();
-        next_step = Instant::now() + step;
     }
 }

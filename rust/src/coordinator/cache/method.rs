@@ -1,17 +1,18 @@
 //! `Method`: a [`CachePolicy`](super::CachePolicy) bound to one model +
-//! engine, plus the **shared step executor** — the single
+//! backend, plus the **shared step executor** — the single
 //! upload → run → collect path every policy's plans execute through
 //! (previously copy-pasted across five match arms of the old
-//! `methods.rs` monolith).
+//! `methods.rs` monolith).  The executor speaks the
+//! [`Backend`] trait, so the same path serves the XLA engine and the
+//! artifact-free simulator (DESIGN.md §13).
 
 use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
-use xla::PjRtBuffer;
 
-use crate::runtime::engine::{Engine, LoadedVariant};
-use crate::runtime::manifest::VariantInfo;
+use crate::runtime::backend::{Backend, Buffer, VariantHandle};
+use crate::runtime::manifest::{Manifest, VariantInfo};
 use crate::runtime::tensor::Dtype;
 
 use super::adaptive::{
@@ -115,7 +116,7 @@ impl TokenDelta {
     }
 }
 
-/// A cache method bound to one model + engine, holding group cache state.
+/// A cache method bound to one model + backend, holding group cache state.
 pub struct Method {
     /// Which cache strategy this method implements.
     pub spec: MethodSpec,
@@ -125,11 +126,11 @@ pub struct Method {
     /// (per-slot validity lives on [`SlotState`]).
     pub state: CacheState,
     policy: Box<dyn CachePolicy>,
-    step_var: Rc<LoadedVariant>,
-    refresh_var: Option<Rc<LoadedVariant>>,
-    /// Device-resident cache buffers, in the step variant's trailing
+    step_var: Rc<VariantHandle>,
+    refresh_var: Option<Rc<VariantHandle>>,
+    /// Backend-resident cache buffers, in the step variant's trailing
     /// input order (never copied back to the host — see engine perf notes).
-    caches: Option<Vec<PjRtBuffer>>,
+    caches: Option<Vec<Buffer>>,
     /// Vocab size, resolved once at bind time from the variant's `logits`
     /// IoSpec or the model's manifest arch — never a silent fallback (a
     /// malformed manifest would mis-stride the sampler).
@@ -151,11 +152,14 @@ pub struct Method {
     /// Last-step per-position confidence; only maintained when the active
     /// policy declares it needs one (the host softmax is O(B·N·V)).
     last_conf: Vec<f32>,
-    /// Device-resident token buffer from the previous step; `None` until
+    /// Backend-resident token buffer from the previous step; `None` until
     /// the first upload (or after a step error dropped it).
-    tok_buf: Option<PjRtBuffer>,
+    tok_buf: Option<Buffer>,
     /// Host mirror + staging for the delta-upload planner.
     tok_delta: TokenDelta,
+    /// Delta-upload gate: `false` forces a full token upload every step
+    /// (the fixed/no-delta baseline — `rows_skipped` stays exactly 0).
+    delta_upload: bool,
     /// Cross-request prefix store (`--prefix-cache on`): completed slots
     /// donate their token prefixes, matching admissions seed warm through
     /// [`Method::warm_admit_row`].  Entries are tagged with the active
@@ -179,20 +183,20 @@ pub struct Method {
 
 impl Method {
     /// Bind `spec` to a model: resolves and loads the step (and, where the
-    /// method has one, refresh) executables from the engine's variant
+    /// method has one, refresh) executables from the backend's variant
     /// registry.
-    pub fn new(engine: &Engine, model: &str, spec: MethodSpec) -> Result<Method> {
+    pub fn new(backend: &dyn Backend, model: &str, spec: MethodSpec) -> Result<Method> {
         let policy = spec.policy();
         let (step_name, refresh_name) = policy.variant_names(model);
-        let step_var = engine.load_variant(&step_name)?;
+        let step_var = backend.load_variant(&step_name)?;
         let refresh_var = match refresh_name {
-            Some(n) => Some(engine.load_variant(&n)?),
+            Some(n) => Some(backend.load_variant(&n)?),
             None => None,
         };
         // Vocab resolution is a bind-time **hard error**, never a silent
         // fallback: a manifest missing both a `logits` IoSpec and the
         // model arch would otherwise mis-stride every sampler read.
-        let vocab = resolve_vocab(engine, model, &step_var.info)?;
+        let vocab = resolve_vocab(backend.manifest(), model, &step_var.info)?;
         let heal_budget = heal_budget_for(&step_var.info);
         Ok(Method {
             spec,
@@ -210,6 +214,7 @@ impl Method {
             last_conf: Vec::new(),
             tok_buf: None,
             tok_delta: TokenDelta::default(),
+            delta_upload: true,
             prefix: None,
             pager: None,
             overload: None,
@@ -227,7 +232,7 @@ impl Method {
     /// bench lineup keeps its baselines instead of erroring them into a
     /// SKIP (the front-ends separately validate that *some* selected
     /// method can apply the gate, via `loadgen::validate_policy_flags`).
-    pub fn configure(&mut self, engine: &Engine, flags: &PolicyFlags) -> Result<()> {
+    pub fn configure(&mut self, backend: &dyn Backend, flags: &PolicyFlags) -> Result<()> {
         self.policy.set_partial(flags.partial_refresh);
         if let Some(n) = flags.row_refresh_per_step {
             self.row_refresh_per_step = n;
@@ -239,7 +244,7 @@ impl Method {
                 row_refresh_per_step: self.row_refresh_per_step,
                 ..defaults
             };
-            self.enable_adaptive(engine, cfg)?;
+            self.enable_adaptive(backend, cfg)?;
         }
         if flags.prefix_cache {
             // The store's byte cap resolves against the pager budget when
@@ -412,26 +417,27 @@ impl Method {
     }
 
     /// Attach the adaptive budget controller: discover the hot-swappable
-    /// budget-tier family for this method's step variant in the engine
+    /// budget-tier family for this method's step variant in the backend
     /// registry and start at the configured variant's own tier.  Only
     /// spa-kind methods carry a tier family (the ablation ratio/rank
     /// variants); anything else is a configuration error.
-    pub fn enable_adaptive(&mut self, engine: &Engine, cfg: AdaptiveConfig) -> Result<()> {
+    pub fn enable_adaptive(&mut self, backend: &dyn Backend, cfg: AdaptiveConfig) -> Result<()> {
         anyhow::ensure!(
             self.step_var.info.kind == "spa",
             "--adaptive requires an spa-kind method (step variant {} is '{}')",
             self.step_var.info.name,
             self.step_var.info.kind
         );
-        let tiers = discover_tiers(&engine.manifest, &self.step_var.info);
+        let manifest = backend.manifest();
+        let tiers = discover_tiers(manifest, &self.step_var.info);
         let start = tiers
             .iter()
             .position(|t| t.name == self.step_var.info.name)
             .context("base variant missing from its own tier family")?;
         // Calibration drift shape: the model's measured profile when the
         // manifest has one, else the variant's compiled schedule.
-        let n_layers = engine.manifest.model(&self.model)?.arch.n_layers.max(2);
-        let mut base = engine.manifest.model(&self.model)?.drift_profile.clone();
+        let n_layers = manifest.model(&self.model)?.arch.n_layers.max(2);
+        let mut base = manifest.model(&self.model)?.drift_profile.clone();
         if base.len() < 2 {
             base = (1..=n_layers)
                 .map(|l| self.step_var.info.schedule.rho(l, n_layers))
@@ -448,8 +454,23 @@ impl Method {
     }
 
     /// The loaded step executable (shape/geometry introspection).
-    pub fn step_variant(&self) -> &LoadedVariant {
+    pub fn step_variant(&self) -> &VariantHandle {
         &self.step_var
+    }
+
+    /// Gate the delta-upload planner: `false` forces a full token upload
+    /// every step — the no-delta baseline lineups use to hold
+    /// `rows_skipped` at exactly zero.
+    pub fn set_delta_upload(&mut self, on: bool) {
+        self.delta_upload = on;
+    }
+
+    /// Gate the staggered per-row scheduled refresh (`false` restores the
+    /// rigid fixed-interval baseline the serving benches compare the
+    /// adaptive controller against).  No-op for policies without a
+    /// scheduled refresh.
+    pub fn set_staggered(&mut self, on: bool) {
+        self.policy.set_staggered(on);
     }
 
     /// Whether admission costs a full-price refresh step (the batcher's
@@ -531,7 +552,7 @@ impl Method {
     /// the outcome back into the per-slot cache state.
     pub fn step(
         &mut self,
-        engine: &Engine,
+        backend: &dyn Backend,
         tokens: &[i32],
         slots: &mut [SlotState],
     ) -> Result<StepOut> {
@@ -551,7 +572,7 @@ impl Method {
         if let Some(ctrl) = &self.adaptive {
             let tier = ctrl.tier();
             if tier.name != self.step_var.info.name {
-                self.step_var = engine.load_variant(&tier.name)?;
+                self.step_var = backend.load_variant(&tier.name)?;
                 swapped = true;
             }
             heal_budget = ctrl.heal_budget();
@@ -603,16 +624,17 @@ impl Method {
         // full re-upload on the next step.
         let tok_lit = {
             let t0 = Instant::now();
-            let buf = self.upload_tokens(engine, tokens, b, n, &mut ledger)?;
+            let buf = self.upload_tokens(backend, tokens, b, n, &mut ledger)?;
             ledger.upload_ns += t0.elapsed().as_nanos() as u64;
             buf
         };
         let mut out = match &plan.exec {
             Exec::Stateless => {
-                let outs =
-                    timed(&mut ledger.execute_ns, || engine.run_buffers(&step_var, &[&tok_lit]))?;
+                let outs = timed(&mut ledger.execute_ns, || {
+                    backend.run_buffers(&step_var, &[&tok_lit])
+                })?;
                 StepOut {
-                    logits: Some(timed(&mut ledger.collect_ns, || engine.read_f32(&outs[0]))?),
+                    logits: Some(timed(&mut ledger.collect_ns, || backend.read_f32(&outs[0]))?),
                     new_tokens: None,
                     was_refresh: false,
                     proxy_drift: None,
@@ -622,10 +644,10 @@ impl Method {
             Exec::Refresh => {
                 let rv = self.refresh_var.clone().context("method has no refresh variant")?;
                 let (first, caches) =
-                    timed(&mut ledger.execute_ns, || run_collect(engine, &rv, &[&tok_lit]))?;
+                    timed(&mut ledger.execute_ns, || run_collect(backend, &rv, &[&tok_lit]))?;
                 self.caches = Some(caches);
                 StepOut {
-                    logits: Some(timed(&mut ledger.collect_ns, || engine.read_f32(&first))?),
+                    logits: Some(timed(&mut ledger.collect_ns, || backend.read_f32(&first))?),
                     new_tokens: None,
                     was_refresh: true,
                     proxy_drift: None,
@@ -637,15 +659,15 @@ impl Method {
                 let full_k = rv.info.manual_k;
                 let idx: Vec<i32> = (0..b).flat_map(|_| 0..full_k as i32).collect();
                 let (idx_lit, zeros) = timed(&mut ledger.upload_ns, || -> Result<_> {
-                    Ok((engine.upload_i32(&[b, full_k], &idx)?, zero_caches(engine, &rv)?))
+                    Ok((backend.upload_i32(&[b, full_k], &idx)?, zero_caches(backend, &rv)?))
                 })?;
-                let mut inputs: Vec<&PjRtBuffer> = vec![&tok_lit, &idx_lit];
+                let mut inputs: Vec<&Buffer> = vec![&tok_lit, &idx_lit];
                 inputs.extend(zeros.iter());
                 let (first, caches) =
-                    timed(&mut ledger.execute_ns, || run_collect(engine, &rv, &inputs))?;
+                    timed(&mut ledger.execute_ns, || run_collect(backend, &rv, &inputs))?;
                 self.caches = Some(caches);
                 StepOut {
-                    logits: Some(timed(&mut ledger.collect_ns, || engine.read_f32(&first))?),
+                    logits: Some(timed(&mut ledger.collect_ns, || backend.read_f32(&first))?),
                     new_tokens: None,
                     was_refresh: true,
                     proxy_drift: None,
@@ -661,7 +683,7 @@ impl Method {
                             ix.len()
                         );
                         Some(timed(&mut ledger.upload_ns, || {
-                            engine.upload_i32(&[b, ix.len() / b], ix)
+                            backend.upload_i32(&[b, ix.len() / b], ix)
                         })?)
                     }
                     None => None,
@@ -670,13 +692,13 @@ impl Method {
                     .caches
                     .take()
                     .context("cached step before any refresh primed the group")?;
-                let mut inputs: Vec<&PjRtBuffer> = vec![&tok_lit];
+                let mut inputs: Vec<&Buffer> = vec![&tok_lit];
                 if let Some(l) = &idx_lit {
                     inputs.push(l);
                 }
                 inputs.extend(caches.iter());
                 let run = timed(&mut ledger.execute_ns, || {
-                    run_collect(engine, &step_var, &inputs)
+                    run_collect(backend, &step_var, &inputs)
                 });
                 let (first, new_caches) = match run {
                     Ok(x) => x,
@@ -692,7 +714,7 @@ impl Method {
                     StepOut {
                         logits: None,
                         new_tokens: Some(
-                            timed(&mut ledger.collect_ns, || engine.read_i32(&first))?,
+                            timed(&mut ledger.collect_ns, || backend.read_i32(&first))?,
                         ),
                         was_refresh: false,
                         proxy_drift: None,
@@ -701,7 +723,7 @@ impl Method {
                 } else {
                     StepOut {
                         logits: Some(
-                            timed(&mut ledger.collect_ns, || engine.read_f32(&first))?,
+                            timed(&mut ledger.collect_ns, || backend.read_f32(&first))?,
                         ),
                         new_tokens: None,
                         was_refresh: false,
@@ -711,10 +733,15 @@ impl Method {
                 }
             }
         };
-        // The step ran to completion: the device token buffer is live for
+        // The step ran to completion: the backend token buffer is live for
         // the next step's delta plan.
         self.tok_buf = Some(tok_lit);
         self.state.commit(&plan, slots);
+        // Out-of-graph residual stats (the simulator's configured drift
+        // signal) fill in only where the variant exported nothing in-graph.
+        if out.proxy_drift.is_none() {
+            out.proxy_drift = backend.take_proxy_drift();
+        }
         // Hold any exported residual stats for the worker's post-commit
         // `observe` call (the controller wants them aligned with that
         // step's commit dynamics).
@@ -732,30 +759,31 @@ impl Method {
         Ok(out)
     }
 
-    /// Token upload through the delta planner: full upload when the device
-    /// buffer is missing or the shape changed, else an in-place row patch
-    /// of exactly the changed rows.  Row counters land in `ledger`.
+    /// Token upload through the delta planner: full upload when the
+    /// resident buffer is missing, the shape changed, or delta uploads are
+    /// gated off, else an in-place row patch of exactly the changed rows.
+    /// Row counters land in `ledger`.
     fn upload_tokens(
         &mut self,
-        engine: &Engine,
+        backend: &dyn Backend,
         tokens: &[i32],
         b: usize,
         n: usize,
         ledger: &mut StepLedger,
-    ) -> Result<PjRtBuffer> {
+    ) -> Result<Buffer> {
         let mut resident = self.tok_buf.take();
-        if resident.is_none() {
+        if resident.is_none() || !self.delta_upload {
             self.tok_delta.reset();
         }
         match self.tok_delta.plan(tokens, n) {
             DeltaUpload::Full => {
                 ledger.rows_uploaded += b as u64;
-                engine.upload_i32(&[b, n], tokens)
+                backend.upload_i32(&[b, n], tokens)
             }
             DeltaUpload::Patch => {
                 let mut buf = resident.take().expect("patch plan implies resident buffer");
                 let rows = self.tok_delta.rows();
-                engine.patch_rows_i32(&mut buf, rows, self.tok_delta.staged())?;
+                backend.patch_rows_i32(&mut buf, rows, self.tok_delta.staged())?;
                 ledger.rows_uploaded += rows.len() as u64;
                 ledger.rows_skipped += (b - rows.len()) as u64;
                 Ok(buf)
@@ -768,7 +796,7 @@ impl Method {
 /// has one (outputs first, then inputs), else the model's manifest arch.
 /// A manifest providing neither is rejected outright — the old silent
 /// `unwrap_or(64)` mis-strided the sampler on malformed manifests.
-fn resolve_vocab(engine: &Engine, model: &str, info: &VariantInfo) -> Result<usize> {
+fn resolve_vocab(manifest: &Manifest, model: &str, info: &VariantInfo) -> Result<usize> {
     if let Some(io) = info
         .outputs
         .iter()
@@ -785,7 +813,7 @@ fn resolve_vocab(engine: &Engine, model: &str, info: &VariantInfo) -> Result<usi
     }
     // In-graph decode variants (multistep) carry no logits tensor; the
     // model arch is authoritative there.
-    let arch_vocab = engine.manifest.model(model).map(|m| m.arch.vocab_size);
+    let arch_vocab = manifest.model(model).map(|m| m.arch.vocab_size);
     arch_vocab.with_context(|| {
         format!(
             "variant {} declares no logits IoSpec and model '{model}' is not \
@@ -796,15 +824,15 @@ fn resolve_vocab(engine: &Engine, model: &str, info: &VariantInfo) -> Result<usi
 }
 
 /// Shared executor tail: run `var`, hand output 0 to the caller and keep
-/// outputs 1.. as the new device cache set.
+/// outputs 1.. as the new backend-resident cache set.
 fn run_collect(
-    engine: &Engine,
-    var: &LoadedVariant,
-    inputs: &[&PjRtBuffer],
-) -> Result<(PjRtBuffer, Vec<PjRtBuffer>)> {
-    let mut outs = engine.run_buffers(var, inputs)?;
+    backend: &dyn Backend,
+    var: &VariantHandle,
+    inputs: &[&Buffer],
+) -> Result<(Buffer, Vec<Buffer>)> {
+    let mut outs = backend.run_buffers(var, inputs)?;
     anyhow::ensure!(!outs.is_empty(), "variant {} produced no outputs", var.info.name);
-    let rest: Vec<PjRtBuffer> = outs.drain(1..).collect();
+    let rest: Vec<Buffer> = outs.drain(1..).collect();
     let first = outs.pop().expect("output 0 present");
     Ok((first, rest))
 }
@@ -825,7 +853,7 @@ pub fn runtime_input_prefix(info: &VariantInfo) -> usize {
 
 /// Zero-initialised cache buffers matching a variant's cache inputs
 /// (everything past the runtime-input prefix).
-fn zero_caches(engine: &Engine, var: &LoadedVariant) -> Result<Vec<PjRtBuffer>> {
+fn zero_caches(backend: &dyn Backend, var: &VariantHandle) -> Result<Vec<Buffer>> {
     let prefix = runtime_input_prefix(&var.info).min(var.info.inputs.len());
     var.info.inputs[prefix..]
         .iter()
@@ -836,7 +864,7 @@ fn zero_caches(engine: &Engine, var: &LoadedVariant) -> Result<Vec<PjRtBuffer>> 
                 i.name,
                 var.info.name
             );
-            engine.upload_zeros_f32(&i.shape)
+            backend.upload_zeros_f32(&i.shape)
         })
         .collect()
 }

@@ -159,6 +159,11 @@ pub trait CachePolicy {
     /// gate).  Policies without the capability ignore it.
     fn set_partial(&mut self, _on: bool) {}
 
+    /// Toggle staggered per-row scheduled refresh (`false` restores the
+    /// rigid fixed-interval baseline: stalest row ⇒ group-global full
+    /// refresh).  Policies without scheduled refresh ignore it.
+    fn set_staggered(&mut self, _on: bool) {}
+
     /// Decide this step's execution plan — pure host logic.
     fn plan(&mut self, cx: &PlanCtx<'_>) -> Plan;
 }

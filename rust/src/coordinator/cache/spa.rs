@@ -68,6 +68,10 @@ impl CachePolicy for SpaPolicy {
         self.partial = on;
     }
 
+    fn set_staggered(&mut self, on: bool) {
+        SpaPolicy::set_staggered(self, on);
+    }
+
     fn plan(&mut self, cx: &PlanCtx<'_>) -> Plan {
         if !cx.state.primed || cx.state.force_refresh {
             return Plan::refresh();

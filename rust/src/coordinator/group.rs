@@ -11,7 +11,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::model::tokenizer::MASK;
-use crate::runtime::engine::Engine;
+use crate::runtime::backend::Backend;
 
 use super::cache::{Method, StepOut};
 use super::decode::{slot_done, Sampler};
@@ -106,7 +106,7 @@ pub fn apply_step_out(
 
 /// Decode a whole group to completion.
 pub fn run_group(
-    engine: &Engine,
+    backend: &dyn Backend,
     method: &mut Method,
     sampler: &mut Sampler,
     tokens: &mut Vec<i32>,
@@ -129,7 +129,7 @@ pub fn run_group(
             break;
         }
         let t0 = Instant::now();
-        let out: StepOut = method.step(engine, tokens, slots)?;
+        let out: StepOut = method.step(backend, tokens, slots)?;
         let committed = apply_step_out(out, tokens, slots, sampler, (b, n, v))?;
         let ms = t0.elapsed().as_secs_f64() * 1e3;
         step_ms.push(ms);

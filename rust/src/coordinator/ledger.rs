@@ -23,11 +23,16 @@
 //! `spa_step_ledger_us{phase="..."}` through the metrics pipeline.
 //!
 //! `serialize` is special: frames are rendered on connection threads, not
-//! worker threads, so it is a process-global counter folded into the
-//! *aggregate* exposition only (`Metrics::render_workers`) — per-worker
-//! attribution of connection-thread work would be fiction.
+//! worker threads, so it is carried by a shared [`SerializeCounter`] owned
+//! by the server's router and folded into the *aggregate* exposition only
+//! (`Metrics::render_workers`) — per-worker attribution of
+//! connection-thread work would be fiction.  Scoping the counter to the
+//! router (rather than a process-global static) keeps concurrent servers
+//! in one test process from cross-contaminating each other's
+//! `spa_step_ledger_us{phase="serialize"}` aggregates.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Accumulated per-phase hot-path costs (ns) plus delta-upload counters.
@@ -41,8 +46,8 @@ pub struct StepLedger {
     pub collect_ns: u64,
     /// Host sampling/commit time (ns).
     pub sample_ns: u64,
-    /// Frame serialization time (ns) — usually carried by the process
-    /// global (see [`record_serialize_ns`]) rather than per worker.
+    /// Frame serialization time (ns) — usually carried by the router's
+    /// shared [`SerializeCounter`] rather than per worker.
     pub serialize_ns: u64,
     /// Whole-step wall time (ns), the span the phases decompose.
     pub step_wall_ns: u64,
@@ -93,20 +98,26 @@ pub fn timed<T>(slot: &mut u64, f: impl FnOnce() -> T) -> T {
     out
 }
 
-/// Process-global serialize-phase accumulator (ns).  Connection threads
+/// Serialize-phase accumulator (ns), shared between one router and the
+/// connection writers of the server fronting it.  Connection threads
 /// render frames outside any worker scope; they record here and
-/// `Metrics::render_workers` folds the total into the aggregate ledger.
-static SERIALIZE_NS: AtomicU64 = AtomicU64::new(0);
+/// `Router::stats` folds the total into the aggregate ledger.  Cloning
+/// shares the underlying counter; `default()` mints an independent one, so
+/// two routers in one process never see each other's serialize time.
+#[derive(Debug, Clone, Default)]
+pub struct SerializeCounter(Arc<AtomicU64>);
 
-/// Record frame-rendering time from a connection thread.
-pub fn record_serialize_ns(ns: u64) {
-    SERIALIZE_NS.fetch_add(ns, Ordering::Relaxed);
-}
+impl SerializeCounter {
+    /// Record frame-rendering time from a connection thread.
+    pub fn record(&self, ns: u64) {
+        self.0.fetch_add(ns, Ordering::Relaxed);
+    }
 
-/// Total frame-rendering time recorded so far (ns, monotone — scrapers
-/// difference it across a window like any other counter).
-pub fn serialize_total_ns() -> u64 {
-    SERIALIZE_NS.load(Ordering::Relaxed)
+    /// Total frame-rendering time recorded so far (ns, monotone — scrapers
+    /// difference it across a window like any other counter).
+    pub fn total(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
 }
 
 #[cfg(test)]
@@ -157,9 +168,25 @@ mod tests {
     }
 
     #[test]
-    fn global_serialize_counter_is_monotone() {
-        let before = serialize_total_ns();
-        record_serialize_ns(123);
-        assert!(serialize_total_ns() >= before + 123);
+    fn serialize_counter_is_monotone_and_shared_by_clone() {
+        let c = SerializeCounter::default();
+        let before = c.total();
+        c.record(123);
+        assert_eq!(c.total(), before + 123);
+        // A clone shares the accumulator (router ↔ connection writers).
+        let shared = c.clone();
+        shared.record(7);
+        assert_eq!(c.total(), before + 130);
+    }
+
+    #[test]
+    fn serialize_counters_are_independent_per_instance() {
+        // Two routers in one process (multi-server tests) must not
+        // cross-contaminate each other's serialize aggregates.
+        let a = SerializeCounter::default();
+        let b = SerializeCounter::default();
+        a.record(1000);
+        assert_eq!(a.total(), 1000);
+        assert_eq!(b.total(), 0);
     }
 }

@@ -14,7 +14,7 @@
 
 use std::time::Instant;
 
-use super::ledger::{self, StepLedger};
+use super::ledger::StepLedger;
 use crate::util::stats::{Reservoir, Summary, Welford};
 
 /// Cap on retained samples per series: means (Welford) stay exact, while
@@ -117,8 +117,9 @@ pub struct Metrics {
     /// collect / sample / serialize / step_wall) plus the delta-upload row
     /// counters, exported as `spa_step_ledger_us{phase="..."}` and
     /// `spa_rows_{uploaded,skipped}_total`.  The serialize phase is
-    /// process-global (connection threads) and folded into the aggregate
-    /// at [`Metrics::render_workers`] time only.
+    /// carried by the router's shared `SerializeCounter` (connection
+    /// threads) and folded into the aggregate at
+    /// [`Metrics::render_workers`] time only.
     pub ledger: StepLedger,
     /// Time-to-first-token stream, measured from `Request::submitted`.
     pub ttft: Welford,
@@ -366,19 +367,20 @@ impl Metrics {
 
     /// Exposition text for a set of per-worker snapshots: aggregate series
     /// first (unlabelled, as a single-worker server would emit), then the
-    /// same series per worker with `{worker="<id>"}` labels.  The
-    /// process-global serialize phase (frames render on connection
-    /// threads, not worker threads) joins the aggregate ledger here — and
-    /// only here, so unit tests rendering private `Metrics` never see
-    /// another test's frames.
-    pub fn render_workers(snaps: &[(usize, Metrics)]) -> String {
+    /// same series per worker with `{worker="<id>"}` labels.
+    /// `serialize_extra_ns` is the server-scoped serialize total (frames
+    /// render on connection threads, not worker threads — the router owns
+    /// the counter); it joins the aggregate ledger here — and only here,
+    /// so per-worker series and other servers in the same process never
+    /// see another server's frames.
+    pub fn render_workers(snaps: &[(usize, Metrics)], serialize_extra_ns: u64) -> String {
         let mut total = Metrics::default();
         // `total.started` begins at "now"; merging pulls it back to the
         // earliest worker epoch so the aggregate tps is meaningful.
         for (_, m) in snaps {
             total.merge(m);
         }
-        total.ledger.serialize_ns += ledger::serialize_total_ns();
+        total.ledger.serialize_ns += serialize_extra_ns;
         let mut s = total.render();
         for (id, m) in snaps {
             s.push_str(&m.render_with_labels(&format!("{{worker=\"{id}\"}}")));
@@ -586,7 +588,7 @@ mod tests {
         let mut w1 = Metrics::default();
         w1.record_completion(20.0, 200.0, 8);
         w1.queue_depth = 1;
-        let text = Metrics::render_workers(&[(0, w0), (1, w1)]);
+        let text = Metrics::render_workers(&[(0, w0), (1, w1)], 0);
         // Aggregate first, unlabelled.
         assert!(text.contains("spa_requests_completed 2\n"), "aggregate:\n{text}");
         // Then per-worker labelled series.
@@ -600,7 +602,7 @@ mod tests {
         w0.record_completion(10.0, 100.0, 8);
         let mut w1 = Metrics::default();
         w1.record_completion(20.0, 200.0, 4);
-        let text = Metrics::render_workers(&[(0, w0), (1, w1)]);
+        let text = Metrics::render_workers(&[(0, w0), (1, w1)], 0);
         assert_eq!(scrape_value(&text, "spa_requests_completed"), Some(2.0));
         assert_eq!(scrape_value(&text, "spa_tokens_decoded"), Some(12.0));
         assert_eq!(scrape_value(&text, "no_such_series"), None);
@@ -638,7 +640,7 @@ mod tests {
         assert!(solo.contains("spa_rows_uploaded_total 3\n"), "{solo}");
         assert!(solo.contains("spa_rows_skipped_total 5\n"), "{solo}");
         // Merged exposition: aggregate sums, per-worker labels composed.
-        let text = Metrics::render_workers(&[(0, w0), (1, w1)]);
+        let text = Metrics::render_workers(&[(0, w0), (1, w1)], 4_000);
         assert_eq!(
             scrape_value(&text, "spa_step_ledger_us{phase=\"upload\"}"),
             Some(3.0),
@@ -650,9 +652,15 @@ mod tests {
             text.contains("spa_step_ledger_us{phase=\"upload\",worker=\"0\"} 2\n"),
             "composed labels:\n{text}"
         );
-        // The global serialize counter joins the aggregate (monotone ≥ 0).
+        // The server-scoped serialize total joins the aggregate — and only
+        // the aggregate, never a per-worker series.
+        assert_eq!(
+            scrape_value(&text, "spa_step_ledger_us{phase=\"serialize\"}"),
+            Some(4.0),
+            "{text}"
+        );
         assert!(
-            scrape_value(&text, "spa_step_ledger_us{phase=\"serialize\"}").is_some(),
+            text.contains("spa_step_ledger_us{phase=\"serialize\",worker=\"0\"} 0\n"),
             "{text}"
         );
     }

@@ -26,6 +26,7 @@ use anyhow::Result;
 use crate::info;
 
 use super::cache::prefix;
+use super::ledger::SerializeCounter;
 use super::metrics::Metrics;
 use super::request::{ReqEvent, Request};
 use super::scheduler::{Command, Worker};
@@ -189,13 +190,28 @@ pub struct Router {
     /// Serialises pick+increment so concurrent submits see each other's
     /// inflight bumps, and rotates ties round-robin.
     cursor: Arc<Mutex<usize>>,
+    /// Serialize-phase ledger shared with the server's connection writers
+    /// (clones share the accumulator).  Scoped per router so concurrent
+    /// servers in one test process never cross-contaminate the
+    /// `spa_step_ledger_us{phase="serialize"}` aggregate.
+    serialize: SerializeCounter,
 }
 
 impl Router {
     /// Build a router over existing endpoints (tests; embedded setups).
     pub fn new(workers: Vec<WorkerEndpoint>) -> Router {
         assert!(!workers.is_empty(), "router needs at least one worker");
-        Router { workers, cursor: Arc::new(Mutex::new(0)) }
+        Router {
+            workers,
+            cursor: Arc::new(Mutex::new(0)),
+            serialize: SerializeCounter::default(),
+        }
+    }
+
+    /// The serialize-phase counter the server's connection writers should
+    /// record into (a clone shares the accumulator).
+    pub fn serialize_counter(&self) -> SerializeCounter {
+        self.serialize.clone()
     }
 
     /// Spawn `n` worker threads, each constructing its own `Worker` via
@@ -374,7 +390,7 @@ impl Router {
                 snaps.push((id, m));
             }
         }
-        Metrics::render_workers(&snaps)
+        Metrics::render_workers(&snaps, self.serialize.total())
     }
 
     /// Block until every worker reports zero inflight requests and an empty

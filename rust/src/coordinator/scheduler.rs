@@ -1,8 +1,8 @@
 //! Per-worker continuous-batching decode loop (DESIGN.md §8).
 //!
-//! A [`Worker`] owns one engine + method + batcher + slot set and runs
+//! A [`Worker`] owns one backend + method + batcher + slot set and runs
 //! single-threaded over them (PJRT handles intra-op parallelism; PJRT
-//! handles are `!Send`, so each worker constructs its engine on its own
+//! handles are `!Send`, so each worker constructs its backend on its own
 //! thread — see `router::Router::spawn`).  Requests arrive over an mpsc
 //! channel; progress leaves through per-request event channels
 //! ([`ReqEvent`]): zero or more streamed token commits, then exactly one
@@ -37,14 +37,14 @@
 //! session is exactly when the first `tokens` frame is emitted.
 
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::model::tasks::extract_answer;
 use crate::model::tokenizer::{Tokenizer, MASK, PAD};
-use crate::runtime::engine::Engine;
+use crate::runtime::backend::Backend;
 use crate::{debug, info};
 
 use super::batcher::{AdmitGate, Batcher, BatcherConfig};
@@ -72,13 +72,13 @@ pub enum Command {
     Shutdown,
 }
 
-/// One decode group's worth of serving state: engine, cache method, batcher
-/// queue, resident slots and per-request event channels.  `run` is the
-/// worker loop.
+/// One decode group's worth of serving state: backend, cache method,
+/// batcher queue, resident slots and per-request event channels.  `run` is
+/// the worker loop.
 pub struct Worker {
     /// Worker index, used as the Prometheus `{worker="<id>"}` label.
     pub id: usize,
-    engine: Engine,
+    backend: Box<dyn Backend>,
     method: Method,
     sampler: Sampler,
     batcher: Batcher,
@@ -95,21 +95,25 @@ pub struct Worker {
     status: Arc<WorkerStatus>,
     max_steps_per_request: usize,
     default_block_len: usize,
+    /// Optional admission audit log `(request id, slot)` shared with a
+    /// test harness — the conservation checks replay it against the
+    /// completion counters (`None` in production).
+    slot_log: Option<Arc<Mutex<Vec<(u64, usize)>>>>,
 }
 
 impl Worker {
-    /// Assemble a worker over an engine + cache method; the batcher's batch
+    /// Assemble a worker over a backend + cache method; the batcher's batch
     /// size is forced to the method's geometry (slots are batch rows).
     pub fn new(
         id: usize,
-        engine: Engine,
+        backend: Box<dyn Backend>,
         method: Method,
         sampler: Sampler,
         batcher_cfg: BatcherConfig,
         max_steps_per_request: usize,
     ) -> Worker {
         let (b, n, _) = method.geometry();
-        let tokenizer = Tokenizer::from_manifest(&engine.manifest.charset);
+        let tokenizer = Tokenizer::from_manifest(&backend.manifest().charset);
         let status = Arc::new(WorkerStatus::default());
         status.set_free_slots(b);
         // The batcher's admission cost model follows the policy: when
@@ -121,7 +125,7 @@ impl Worker {
         let page_tokens = method.page_tokens().or(batcher_cfg.page_tokens);
         Worker {
             id,
-            engine,
+            backend,
             method,
             sampler,
             batcher: Batcher::new(BatcherConfig {
@@ -140,6 +144,7 @@ impl Worker {
             status,
             max_steps_per_request,
             default_block_len: 16,
+            slot_log: None,
         }
     }
 
@@ -147,6 +152,13 @@ impl Worker {
     pub fn set_status(&mut self, status: Arc<WorkerStatus>) {
         status.set_free_slots(self.slots.len());
         self.status = status;
+    }
+
+    /// Attach a shared admission audit log: every `(request id, slot)`
+    /// admission is appended, for the conservation checks in the test
+    /// harness.
+    pub fn set_slot_log(&mut self, log: Arc<Mutex<Vec<(u64, usize)>>>) {
+        self.slot_log = Some(log);
     }
 
     /// Run until `Shutdown` (or channel close) — one worker thread's main
@@ -364,6 +376,9 @@ impl Worker {
                 let (_, ch) = self.pending.remove(pos);
                 self.replies[slot_i] = Some(ch);
             }
+            if let Some(log) = &self.slot_log {
+                log.lock().unwrap().push((req.id, slot_i));
+            }
             self.requests[slot_i] = Some(req);
             admitted_rows.push(slot_i);
             debug!("sched", "worker {} admitted request into slot {slot_i}", self.id);
@@ -378,17 +393,21 @@ impl Worker {
         // credit survives the dirty marking, not the other way around.
         for &slot_i in &admitted_rows {
             let prompt_len = self.slots[slot_i].prompt_len;
-            if let Some(depth) = self.method.warm_admit_row(
+            let warm = self.method.warm_admit_row(
                 &self.tokens[slot_i * n..(slot_i + 1) * n],
                 prompt_len,
                 &mut self.slots[slot_i],
-            ) {
+            );
+            if let Some(depth) = warm {
                 debug!(
                     "sched",
                     "worker {} warm-admitted slot {slot_i} at prefix depth {depth}",
                     self.id
                 );
             }
+            // Backends modelling prefill cost (the simulator) charge the
+            // uncovered prompt share; the engine ignores this.
+            self.backend.note_admitted(slot_i, prompt_len, warm.unwrap_or(0));
         }
         self.mirror_cache_counters();
     }
@@ -433,7 +452,7 @@ impl Worker {
     fn step(&mut self) -> Result<()> {
         let (b, n, v) = self.method.geometry();
         let out: StepOut =
-            self.method.step(&self.engine, &self.tokens, &mut self.slots)?;
+            self.method.step(&*self.backend, &self.tokens, &mut self.slots)?;
         // Copy the per-step cost ledger out before `apply_step_out` consumes
         // the StepOut (a field move would leave `out` partially moved);
         // host-side sampling/commit time lands in `sample`.

@@ -75,7 +75,7 @@ use crate::model::tokenizer::{Tokenizer, BOS, MASK, PAD};
 use crate::util::json::{parse, Json};
 use crate::util::threadpool::ThreadPool;
 
-use super::ledger;
+use super::ledger::SerializeCounter;
 use super::request::{GenParams, ReqEvent, Request};
 use super::router::Router;
 
@@ -98,17 +98,18 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 /// reused across frames — no per-frame `to_string` allocation) and flushed
 /// with a single `write_all`; frames queued in the same tick batch into one
 /// buffer fill and one socket write (see [`forward_events`]).  Render time
-/// feeds the process-wide `serialize` ledger phase
-/// (`ledger::record_serialize_ns`) — socket time deliberately excluded, it
-/// is the client's backpressure, not our serialisation cost.
+/// feeds the `serialize` ledger phase through the router's shared
+/// [`SerializeCounter`] — socket time deliberately excluded, it is the
+/// client's backpressure, not our serialisation cost.
 struct ConnWriter {
     stream: TcpStream,
     buf: String,
+    serialize: SerializeCounter,
 }
 
 impl ConnWriter {
-    fn new(stream: TcpStream) -> ConnWriter {
-        ConnWriter { stream, buf: String::new() }
+    fn new(stream: TcpStream, serialize: SerializeCounter) -> ConnWriter {
+        ConnWriter { stream, buf: String::new(), serialize }
     }
 
     /// Render `frames` into the reusable buffer (one line each) and write
@@ -120,7 +121,7 @@ impl ConnWriter {
             f.write_to(&mut self.buf);
             self.buf.push('\n');
         }
-        ledger::record_serialize_ns(t0.elapsed().as_nanos() as u64);
+        self.serialize.record(t0.elapsed().as_nanos() as u64);
         self.stream.write_all(self.buf.as_bytes())
     }
 
@@ -133,7 +134,7 @@ impl ConnWriter {
         let t0 = Instant::now();
         self.buf.push_str(line);
         self.buf.push('\n');
-        ledger::record_serialize_ns(t0.elapsed().as_nanos() as u64);
+        self.serialize.record(t0.elapsed().as_nanos() as u64);
         self.stream.write_all(self.buf.as_bytes())
     }
 }
@@ -453,8 +454,10 @@ fn handle_conn(
 ) -> Result<bool> {
     let max_line = cfg.max_line.max(1);
     let peer = stream.peer_addr().ok();
-    let writer: Arc<Mutex<ConnWriter>> =
-        Arc::new(Mutex::new(ConnWriter::new(stream.try_clone()?)));
+    let writer: Arc<Mutex<ConnWriter>> = Arc::new(Mutex::new(ConnWriter::new(
+        stream.try_clone()?,
+        router.serialize_counter(),
+    )));
     let mut reader = BufReader::new(stream);
     let mut proto: i64 = 1;
     let sessions: SessionMap = Arc::new(Mutex::new(HashMap::new()));
@@ -1185,7 +1188,12 @@ impl Client {
     /// single reply line each, exactly the pre-session protocol.
     pub fn connect_v1(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
-        let writer = Arc::new(Mutex::new(ConnWriter::new(stream.try_clone()?)));
+        // Client-side rendering charges a private counter — it is not part
+        // of any server's serialize aggregate.
+        let writer = Arc::new(Mutex::new(ConnWriter::new(
+            stream.try_clone()?,
+            SerializeCounter::default(),
+        )));
         let state = Arc::new(ClientState::default());
         let reader_state = Arc::clone(&state);
         std::thread::Builder::new()
@@ -1330,7 +1338,8 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let client = TcpStream::connect(addr).unwrap();
         let (server_side, _) = listener.accept().unwrap();
-        let mut w = ConnWriter::new(server_side);
+        let counter = SerializeCounter::default();
+        let mut w = ConnWriter::new(server_side, counter.clone());
         let frames = [
             Json::obj(vec![("event", Json::str("tokens")), ("id", Json::int(1))]),
             Json::obj(vec![("event", Json::str("done")), ("id", Json::int(1))]),
@@ -1345,8 +1354,8 @@ mod tests {
         assert_eq!(parse(&second).unwrap().get("event").unwrap().as_str(), Some("done"));
         let third = lines.next().unwrap().unwrap();
         assert_eq!(parse(&third).unwrap().get("error").unwrap().as_str(), Some("oops"));
-        // Rendering time was charged to the process-wide serialize phase.
-        assert!(ledger::serialize_total_ns() > 0);
+        // Rendering time was charged to the writer's serialize counter.
+        assert!(counter.total() > 0);
     }
 
     #[test]

@@ -210,7 +210,7 @@ fn serve(args: &Args) -> Result<()> {
             .with_refresh_interval(policy.refresh_interval);
         let mut method = Method::new(&engine, &model, spec)?;
         method.configure(&engine, &policy)?;
-        Ok(Worker::new(id, engine, method, sam.clone(), batcher.clone(), 4 * seq_len))
+        Ok(Worker::new(id, Box::new(engine), method, sam.clone(), batcher.clone(), 4 * seq_len))
     })?;
 
     // Frontend knobs: request-line cap + concurrent connection handlers.

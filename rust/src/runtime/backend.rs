@@ -1,0 +1,601 @@
+//! Backend abstraction: the execution surface [`Method`] drives, with the
+//! XLA [`Engine`] as the production implementation and an artifact-free
+//! [`SimBackend`] that emulates variant execution in host memory.
+//!
+//! The trait captures exactly what the coordinator's step executor needs —
+//! manifest access, variant loading, buffer upload/patch/readback and
+//! batched execution — so one production worker loop
+//! (`coordinator::scheduler::Worker`) serves both backends.  Everything
+//! above this seam (scheduler, batcher, cache policies, adaptive
+//! controller, pager, prefix store, overload controller, metrics) is
+//! backend-agnostic; `bench-serve --stub` and the tier-1 serving tests run
+//! the identical coordinator code the engine path does, with only the
+//! device swapped for the simulator (DESIGN.md §13).
+//!
+//! [`Method`]: crate::coordinator::cache::Method
+//!
+//! # SimBackend determinism contract
+//!
+//! * Step outputs are a pure function of the input token rows and the
+//!   configured seed: for each occupied row, the first
+//!   `commits_per_step` MASK positions get a sharp logit on a digit token
+//!   (`(position + seed) % 10`), everything else stays flat — so the
+//!   production sampler at the sim variants' threshold (0.9) commits
+//!   exactly those positions, in ascending order, one decoded char each.
+//! * Device time is modelled as a fixed `step_ms` sleep per execution,
+//!   plus one extra step per [`PREFILL_TOKENS_PER_STEP`] uncovered prompt
+//!   tokens accumulated from admissions ([`Backend::note_admitted`]) —
+//!   warm prefix-store admissions skip the covered share, which is the
+//!   warm-vs-cold TTFT gap the CI chat gate measures.
+//! * The synthesized manifest carries a three-tier spa variant family
+//!   (`sim__spa_lo` ρ̄=.125 / `sim__spa_default` ρ̄=.25 / `sim__spa_hi`
+//!   ρ̄=.5) with identical cache signatures, so `discover_tiers` finds a
+//!   real hot-swappable family and the adaptive controller runs unchanged.
+//! * Per-layer proxy-drift signals are emitted only when configured
+//!   (`SimConfig::proxy_drift`); by default the controller exercises its
+//!   commit-activity fallback, exactly like a variant that does not
+//!   export in-graph residuals.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Duration;
+
+use anyhow::Result;
+use xla::PjRtBuffer;
+
+use super::engine::{Engine, LoadedVariant};
+use super::manifest::{IoSpec, Manifest, ModelArch, ModelInfo, VariantInfo};
+use super::tensor::Dtype;
+use crate::model::schedule::RhoSchedule;
+use crate::model::tokenizer::{CHARSET, MASK};
+use crate::util::json::Json;
+
+/// The synthetic model the simulator's manifest registers.
+pub const SIM_MODEL: &str = "sim";
+
+/// Logit width of the sim variants (matches the toy tokenizer).
+pub const SIM_VOCAB: usize = 64;
+
+/// Modelled prefill throughput: uncovered prompt tokens absorbed per extra
+/// paced step.  Prefill is modelled **unconditionally** (with or without
+/// `--prefix-cache`) so a warm run and a cold run differ only in how much
+/// prompt the prefix store covers — that difference is exactly the
+/// warm-vs-cold TTFT gap the CI chat smoke gates on (DESIGN.md §11).
+pub const PREFILL_TOKENS_PER_STEP: usize = 16;
+
+/// Layers in the synthetic model (drift profiles, k tables).
+const SIM_LAYERS: usize = 4;
+
+/// Token id of the digit '0' ('0' is the first charset char after the four
+/// specials — pinned by `tokenizer::tests::ids_match_python_layout`).
+const SIM_CHAR_BASE: i32 = 4;
+
+/// A device- or host-resident tensor, opaque to the coordinator: the
+/// engine backend wraps PJRT buffers, the simulator plain host vectors.
+#[derive(Clone)]
+pub enum Buffer {
+    /// Device-resident PJRT buffer (engine backend).
+    Device(PjRtBuffer),
+    /// Host-resident i32 tensor (sim backend).
+    HostI32 {
+        /// Tensor shape (row-major).
+        shape: Vec<usize>,
+        /// Packed elements.
+        data: Vec<i32>,
+    },
+    /// Host-resident f32 tensor (sim backend).
+    HostF32 {
+        /// Tensor shape (row-major).
+        shape: Vec<usize>,
+        /// Packed elements.
+        data: Vec<f32>,
+    },
+}
+
+impl Buffer {
+    fn device(&self) -> Result<&PjRtBuffer> {
+        match self {
+            Buffer::Device(b) => Ok(b),
+            _ => anyhow::bail!("host buffer handed to the engine backend"),
+        }
+    }
+}
+
+impl std::fmt::Debug for Buffer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Buffer::Device(_) => write!(f, "Buffer::Device"),
+            Buffer::HostI32 { shape, .. } => write!(f, "Buffer::HostI32{shape:?}"),
+            Buffer::HostF32 { shape, .. } => write!(f, "Buffer::HostF32{shape:?}"),
+        }
+    }
+}
+
+/// A loaded variant as the coordinator sees it: the manifest IO contract
+/// plus the backend's private execution handle.
+pub struct VariantHandle {
+    /// IO contract from the manifest (shared by both backends).
+    pub info: VariantInfo,
+    repr: VariantRepr,
+}
+
+enum VariantRepr {
+    /// Compiled PJRT executable (engine backend).
+    Engine(Rc<LoadedVariant>),
+    /// Simulated execution — the info block alone drives it.
+    Sim,
+}
+
+/// The execution surface `Method` actually uses.  Object-safe and
+/// `&self`-only (backends use interior mutability; a worker owns exactly
+/// one backend and drives it single-threaded).
+pub trait Backend {
+    /// The manifest this backend serves (geometry, charset, registry).
+    fn manifest(&self) -> &Manifest;
+
+    /// Load (or fetch cached) a variant by registry name.
+    fn load_variant(&self, name: &str) -> Result<Rc<VariantHandle>>;
+
+    /// Execute a variant over runtime inputs; outputs stay backend-resident
+    /// (one buffer per output leaf, `variant.info.outputs` order).
+    fn run_buffers(&self, variant: &VariantHandle, inputs: &[&Buffer]) -> Result<Vec<Buffer>>;
+
+    /// Upload an i32 tensor.
+    fn upload_i32(&self, shape: &[usize], data: &[i32]) -> Result<Buffer>;
+
+    /// Upload a zero-filled f32 tensor (cache initialisation).
+    fn upload_zeros_f32(&self, shape: &[usize]) -> Result<Buffer>;
+
+    /// Delta upload: patch only the named leading-dim rows of a resident
+    /// buffer from host data (`data` = `rows.len()` packed rows).
+    fn patch_rows_i32(&self, buf: &mut Buffer, rows: &[usize], data: &[i32]) -> Result<()>;
+
+    /// Read an f32 buffer back to the host.
+    fn read_f32(&self, buf: &Buffer) -> Result<Vec<f32>>;
+
+    /// Read an i32 buffer back to the host.
+    fn read_i32(&self, buf: &Buffer) -> Result<Vec<i32>>;
+
+    /// Per-layer proxy residual stats for the step just executed, when the
+    /// backend surfaces them out-of-graph (the sim's configured drift
+    /// signal).  Engine variants export theirs in-graph through the output
+    /// contract instead, so the default is `None`.
+    fn take_proxy_drift(&self) -> Option<Vec<f64>> {
+        None
+    }
+
+    /// Admission notice: `row` was seeded with a prompt of `prompt_len`
+    /// tokens, of which `warm_depth` were covered by the prefix store.
+    /// The sim charges modelled prefill for the uncovered share; the
+    /// engine's prefill cost is real device work and needs no model.
+    fn note_admitted(&self, _row: usize, _prompt_len: usize, _warm_depth: usize) {}
+}
+
+impl Backend for Engine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load_variant(&self, name: &str) -> Result<Rc<VariantHandle>> {
+        let lv = Engine::load_variant(self, name)?;
+        Ok(Rc::new(VariantHandle {
+            info: lv.info.clone(),
+            repr: VariantRepr::Engine(lv),
+        }))
+    }
+
+    fn run_buffers(&self, variant: &VariantHandle, inputs: &[&Buffer]) -> Result<Vec<Buffer>> {
+        let VariantRepr::Engine(lv) = &variant.repr else {
+            anyhow::bail!("variant {} was not loaded by this engine", variant.info.name);
+        };
+        let devs: Vec<&PjRtBuffer> =
+            inputs.iter().map(|b| b.device()).collect::<Result<_>>()?;
+        Ok(Engine::run_buffers(self, lv, &devs)?
+            .into_iter()
+            .map(Buffer::Device)
+            .collect())
+    }
+
+    fn upload_i32(&self, shape: &[usize], data: &[i32]) -> Result<Buffer> {
+        Ok(Buffer::Device(Engine::upload_i32(self, shape, data)?))
+    }
+
+    fn upload_zeros_f32(&self, shape: &[usize]) -> Result<Buffer> {
+        Ok(Buffer::Device(Engine::upload_zeros_f32(self, shape)?))
+    }
+
+    fn patch_rows_i32(&self, buf: &mut Buffer, rows: &[usize], data: &[i32]) -> Result<()> {
+        match buf {
+            Buffer::Device(b) => Engine::patch_rows_i32(self, b, rows, data),
+            _ => anyhow::bail!("host buffer handed to the engine backend"),
+        }
+    }
+
+    fn read_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {
+        match buf {
+            Buffer::Device(b) => Engine::read_f32(self, b),
+            Buffer::HostF32 { data, .. } => Ok(data.clone()),
+            Buffer::HostI32 { .. } => anyhow::bail!("read_f32 on an i32 buffer"),
+        }
+    }
+
+    fn read_i32(&self, buf: &Buffer) -> Result<Vec<i32>> {
+        match buf {
+            Buffer::Device(b) => Engine::read_i32(self, b),
+            Buffer::HostI32 { data, .. } => Ok(data.clone()),
+            Buffer::HostF32 { .. } => anyhow::bail!("read_i32 on an f32 buffer"),
+        }
+    }
+}
+
+/// Knobs for one [`SimBackend`].
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Batch slots (geometry of the synthesized variants).
+    pub batch: usize,
+    /// Row length (geometry of the synthesized variants).
+    pub seq_len: usize,
+    /// Modelled device time per execution (the step pacing).
+    pub step_ms: u64,
+    /// MASK positions committed per resident row per step.
+    pub commits_per_step: usize,
+    /// Seed for the deterministic digit schedule.
+    pub seed: u64,
+    /// Per-layer proxy residual stats emitted after every step (`None` =
+    /// the adaptive controller's commit-activity fallback path).
+    pub proxy_drift: Option<Vec<f64>>,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            batch: 4,
+            seq_len: 128,
+            step_ms: 2,
+            commits_per_step: 4,
+            seed: 0,
+            proxy_drift: None,
+        }
+    }
+}
+
+/// Artifact-free backend: emulates variant execution in host memory with
+/// deterministic, seedable step outputs (see the module docs for the
+/// contract).  Drives the full production coordinator on any checkout —
+/// no artifacts, no PJRT.
+pub struct SimBackend {
+    manifest: Manifest,
+    cfg: SimConfig,
+    variants: RefCell<HashMap<String, Rc<VariantHandle>>>,
+    /// Uncovered prompt tokens admitted since the last step — drained into
+    /// extra modelled prefill time by the next execution.
+    prefill_debt: RefCell<usize>,
+}
+
+impl SimBackend {
+    /// Build a simulator (and its synthesized manifest) from knobs.
+    pub fn new(cfg: SimConfig) -> SimBackend {
+        SimBackend {
+            manifest: sim_manifest(&cfg),
+            cfg,
+            variants: RefCell::new(HashMap::new()),
+            prefill_debt: RefCell::new(0),
+        }
+    }
+
+    /// The configured knobs.
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// Sharp-logit schedule: for each row, the first `commits_per_step`
+    /// MASK positions get logit 50 on their digit token — softmax ≈ 1.0,
+    /// clearing the 0.9 threshold; everything else stays flat (1/64 per
+    /// token, far below it).
+    fn sim_logits(&self, tokens: &[i32], batch: usize, n: usize) -> Vec<f32> {
+        let mut logits = vec![0f32; batch * n * SIM_VOCAB];
+        let per_step = self.cfg.commits_per_step.max(1);
+        for row in 0..batch {
+            let toks = &tokens[row * n..(row + 1) * n];
+            let mut picked = 0usize;
+            for (pos, &t) in toks.iter().enumerate() {
+                if t != MASK {
+                    continue;
+                }
+                if picked >= per_step {
+                    break;
+                }
+                let d = ((pos as u64 + self.cfg.seed) % 10) as i32;
+                logits[(row * n + pos) * SIM_VOCAB + (SIM_CHAR_BASE + d) as usize] = 50.0;
+                picked += 1;
+            }
+        }
+        logits
+    }
+}
+
+impl Backend for SimBackend {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load_variant(&self, name: &str) -> Result<Rc<VariantHandle>> {
+        if let Some(v) = self.variants.borrow().get(name) {
+            return Ok(Rc::clone(v));
+        }
+        let info = self.manifest.variant(name)?.clone();
+        let v = Rc::new(VariantHandle { info, repr: VariantRepr::Sim });
+        self.variants.borrow_mut().insert(name.to_string(), Rc::clone(&v));
+        Ok(v)
+    }
+
+    fn run_buffers(&self, variant: &VariantHandle, inputs: &[&Buffer]) -> Result<Vec<Buffer>> {
+        let info = &variant.info;
+        anyhow::ensure!(
+            inputs.len() == info.inputs.len(),
+            "variant {} expects {} runtime inputs, got {}",
+            info.name,
+            info.inputs.len(),
+            inputs.len()
+        );
+        // Modelled device time: one paced step, plus the prefill share of
+        // prompt tokens admitted since the last execution.
+        let debt = std::mem::take(&mut *self.prefill_debt.borrow_mut());
+        let extra = debt.div_ceil(PREFILL_TOKENS_PER_STEP) as u64;
+        if self.cfg.step_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.cfg.step_ms * (1 + extra)));
+        }
+        let tokens = match inputs.first() {
+            Some(Buffer::HostI32 { data, .. }) => data,
+            _ => anyhow::bail!("sim variant {} expects host token rows as input 0", info.name),
+        };
+        let (b, n) = (info.batch, info.seq_len);
+        anyhow::ensure!(
+            tokens.len() == b * n,
+            "sim variant {} expects {}x{} tokens, got {}",
+            info.name,
+            b,
+            n,
+            tokens.len()
+        );
+        let mut outs = vec![Buffer::HostF32 {
+            shape: vec![b, n, SIM_VOCAB],
+            data: self.sim_logits(tokens, b, n),
+        }];
+        // Cache outputs: pass resident input caches through by name (the
+        // cached step), or mint fresh zeros (the refresh step).
+        for spec in info.outputs.iter().skip(1) {
+            let resident = info
+                .inputs
+                .iter()
+                .position(|i| i.name == spec.name)
+                .and_then(|idx| inputs.get(idx))
+                .map(|bu| (*bu).clone());
+            outs.push(resident.unwrap_or_else(|| Buffer::HostF32 {
+                shape: spec.shape.clone(),
+                data: vec![0.0; spec.shape.iter().product()],
+            }));
+        }
+        Ok(outs)
+    }
+
+    fn upload_i32(&self, shape: &[usize], data: &[i32]) -> Result<Buffer> {
+        Ok(Buffer::HostI32 { shape: shape.to_vec(), data: data.to_vec() })
+    }
+
+    fn upload_zeros_f32(&self, shape: &[usize]) -> Result<Buffer> {
+        Ok(Buffer::HostF32 {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        })
+    }
+
+    fn patch_rows_i32(&self, buf: &mut Buffer, rows: &[usize], data: &[i32]) -> Result<()> {
+        let Buffer::HostI32 { shape, data: resident } = buf else {
+            anyhow::bail!("sim backend can only patch host i32 buffers");
+        };
+        let stride: usize = shape.iter().skip(1).product();
+        anyhow::ensure!(
+            stride > 0 && data.len() == rows.len() * stride,
+            "patch_rows_i32: {} rows of stride {stride}, got {} elements",
+            rows.len(),
+            data.len()
+        );
+        for (i, &r) in rows.iter().enumerate() {
+            anyhow::ensure!((r + 1) * stride <= resident.len(), "patch row {r} out of range");
+            resident[r * stride..(r + 1) * stride]
+                .copy_from_slice(&data[i * stride..(i + 1) * stride]);
+        }
+        Ok(())
+    }
+
+    fn read_f32(&self, buf: &Buffer) -> Result<Vec<f32>> {
+        match buf {
+            Buffer::HostF32 { data, .. } => Ok(data.clone()),
+            _ => anyhow::bail!("read_f32 on a non-f32 sim buffer"),
+        }
+    }
+
+    fn read_i32(&self, buf: &Buffer) -> Result<Vec<i32>> {
+        match buf {
+            Buffer::HostI32 { data, .. } => Ok(data.clone()),
+            _ => anyhow::bail!("read_i32 on a non-i32 sim buffer"),
+        }
+    }
+
+    fn take_proxy_drift(&self) -> Option<Vec<f64>> {
+        self.cfg.proxy_drift.clone()
+    }
+
+    fn note_admitted(&self, _row: usize, prompt_len: usize, warm_depth: usize) {
+        *self.prefill_debt.borrow_mut() += prompt_len.saturating_sub(warm_depth);
+    }
+}
+
+/// One synthesized registry variant.  Step variants carry a uniform
+/// per-layer k table so `mean_rho`/`heal_budget_for` land on the familiar
+/// three-level ladder (ρ̄ .125/.25/.5 ⇒ heal 8/4/2 at the defaults).
+fn sim_variant(cfg: &SimConfig, frag: &str, kind: &str, k: usize) -> VariantInfo {
+    let (b, n) = (cfg.batch.max(1), cfg.seq_len.max(1));
+    let tokens = IoSpec { name: "tokens".into(), shape: vec![b, n], dtype: Dtype::I32 };
+    let kcache = IoSpec { name: "kcache".into(), shape: vec![b, n], dtype: Dtype::F32 };
+    let vcache = IoSpec { name: "vcache".into(), shape: vec![b, n], dtype: Dtype::F32 };
+    let logits = IoSpec {
+        name: "logits".into(),
+        shape: vec![b, n, SIM_VOCAB],
+        dtype: Dtype::F32,
+    };
+    let (inputs, outputs) = match kind {
+        "spa" => (
+            vec![tokens, kcache.clone(), vcache.clone()],
+            vec![logits, kcache, vcache],
+        ),
+        "spa_refresh" => (vec![tokens], vec![logits, kcache, vcache]),
+        _ => (vec![tokens], vec![logits]),
+    };
+    let rho = if k == 0 { 0.5 } else { (k as f64 / n as f64).min(0.5) };
+    VariantInfo {
+        name: format!("{SIM_MODEL}__{frag}"),
+        kind: kind.into(),
+        model: SIM_MODEL.into(),
+        file: String::new(),
+        batch: b,
+        seq_len: n,
+        identifier: "sim".into(),
+        rank: 16,
+        k_per_layer: if k == 0 { Vec::new() } else { vec![k; SIM_LAYERS] },
+        manual_k: 0,
+        msteps: 1,
+        threshold: 0.9,
+        kernel_backend: "sim".into(),
+        params: Vec::new(),
+        inputs,
+        outputs,
+        schedule: RhoSchedule::uniform(rho),
+    }
+}
+
+/// The simulator's synthesized manifest: one toy model plus a spa variant
+/// family (three hot-swappable budget tiers + the default's refresh pair)
+/// and a vanilla baseline.
+fn sim_manifest(cfg: &SimConfig) -> Manifest {
+    let (b, n) = (cfg.batch.max(1), cfg.seq_len.max(1));
+    let model = ModelInfo {
+        arch: ModelArch {
+            name: SIM_MODEL.into(),
+            vocab_size: SIM_VOCAB,
+            d_model: 16,
+            n_layers: SIM_LAYERS,
+            n_heads: 2,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 32,
+        },
+        weights_file: String::new(),
+        tensors: Vec::new(),
+        default_rank: 16,
+        fitted_schedule: RhoSchedule::uniform(0.25),
+        drift_profile: vec![0.1, 0.3, 0.2, 0.15],
+        eval_accuracy: BTreeMap::new(),
+    };
+    let mut variants = BTreeMap::new();
+    for v in [
+        sim_variant(cfg, "spa_lo", "spa", n / 8),
+        sim_variant(cfg, "spa_default", "spa", n / 4),
+        sim_variant(cfg, "spa_hi", "spa", n / 2),
+        sim_variant(cfg, "spa_default_refresh", "spa_refresh", n / 4),
+        sim_variant(cfg, "vanilla", "vanilla", 0),
+    ] {
+        variants.insert(v.name.clone(), v);
+    }
+    Manifest {
+        dir: PathBuf::from("sim://"),
+        batch: b,
+        seq_len: n,
+        charset: CHARSET.to_string(),
+        models: BTreeMap::from([(SIM_MODEL.to_string(), model)]),
+        variants,
+        tasks: BTreeMap::new(),
+        goldens: Json::Null,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_manifest_forms_a_hot_swappable_tier_family() {
+        use crate::coordinator::cache::{discover_tiers, heal_budget_for};
+        let sim = SimBackend::new(SimConfig::default());
+        let m = sim.manifest();
+        let base = m.variant("sim__spa_default").unwrap();
+        let tiers = discover_tiers(m, base);
+        assert_eq!(
+            tiers.iter().map(|t| t.name.as_str()).collect::<Vec<_>>(),
+            vec!["sim__spa_lo", "sim__spa_default", "sim__spa_hi"],
+            "ascending-rho family; refresh/vanilla excluded"
+        );
+        assert_eq!(
+            tiers.iter().map(|t| t.heal_budget).collect::<Vec<_>>(),
+            vec![8, 4, 2]
+        );
+        assert_eq!(heal_budget_for(base), 4);
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.seq_len, 128);
+    }
+
+    #[test]
+    fn sim_step_commits_deterministic_digits_and_passes_caches_through() {
+        let cfg = SimConfig { step_ms: 0, commits_per_step: 2, seed: 3, ..Default::default() };
+        let sim = SimBackend::new(cfg);
+        let step = sim.load_variant("sim__spa_default").unwrap();
+        let (b, n) = (4usize, 128usize);
+        // Row 0: prompt then MASKs at 5, 6, 7; other rows PAD-only.
+        let mut toks = vec![0i32; b * n];
+        toks[0] = 2;
+        for p in 5..8 {
+            toks[p] = MASK;
+        }
+        let tok_buf = sim.upload_i32(&[b, n], &toks).unwrap();
+        let mut kcache = sim.upload_zeros_f32(&[b, n]).unwrap();
+        if let Buffer::HostF32 { data, .. } = &mut kcache {
+            data[0] = 7.5; // marker proving pass-through, not re-zeroing
+        }
+        let vcache = sim.upload_zeros_f32(&[b, n]).unwrap();
+        let outs = sim.run_buffers(&step, &[&tok_buf, &kcache, &vcache]).unwrap();
+        assert_eq!(outs.len(), 3);
+        let logits = sim.read_f32(&outs[0]).unwrap();
+        assert_eq!(logits.len(), b * n * SIM_VOCAB);
+        // First two MASKs sharp on digit (pos + seed) % 10; third flat.
+        for pos in [5usize, 6] {
+            let d = ((pos as u64 + 3) % 10) as usize;
+            let row = &logits[pos * SIM_VOCAB..(pos + 1) * SIM_VOCAB];
+            assert_eq!(row[SIM_CHAR_BASE as usize + d], 50.0, "pos {pos}");
+            assert_eq!(row.iter().filter(|&&x| x != 0.0).count(), 1);
+        }
+        assert!(logits[7 * SIM_VOCAB..8 * SIM_VOCAB].iter().all(|&x| x == 0.0));
+        let k_out = sim.read_f32(&outs[1]).unwrap();
+        assert_eq!(k_out[0], 7.5, "cached step passes resident caches through");
+        // Refresh mints fresh zero caches instead.
+        let refresh = sim.load_variant("sim__spa_default_refresh").unwrap();
+        let outs = sim.run_buffers(&refresh, &[&tok_buf]).unwrap();
+        assert_eq!(outs.len(), 3);
+        assert!(sim.read_f32(&outs[1]).unwrap().iter().all(|&x| x == 0.0));
+        // Identical inputs ⇒ identical outputs (determinism).
+        let again = sim.run_buffers(&step, &[&tok_buf, &kcache, &vcache]).unwrap();
+        assert_eq!(sim.read_f32(&again[0]).unwrap(), logits);
+    }
+
+    #[test]
+    fn patch_rows_updates_only_named_rows() {
+        let sim = SimBackend::new(SimConfig { step_ms: 0, ..Default::default() });
+        let mut buf = sim.upload_i32(&[3, 4], &[1i32; 12]).unwrap();
+        sim.patch_rows_i32(&mut buf, &[2, 0], &[9, 9, 9, 9, 7, 7, 7, 7]).unwrap();
+        let out = sim.read_i32(&buf).unwrap();
+        assert_eq!(out, vec![7, 7, 7, 7, 1, 1, 1, 1, 9, 9, 9, 9]);
+        assert!(sim.patch_rows_i32(&mut buf, &[3], &[0, 0, 0, 0]).is_err());
+    }
+}

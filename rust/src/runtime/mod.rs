@@ -1,10 +1,12 @@
 //! Runtime layer: PJRT client wrapper executing the AOT-compiled HLO
 //! artifacts from the L3 hot path (python never runs at serving time).
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
 pub mod tensor;
 pub mod weights;
 
+pub use backend::{Backend, Buffer, SimBackend, SimConfig, VariantHandle};
 pub use engine::{Engine, LoadedVariant};
 pub use manifest::{Manifest, VariantInfo};

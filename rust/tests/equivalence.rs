@@ -1,0 +1,206 @@
+//! Backend-equivalence suite (DESIGN.md §13): the production
+//! `Scheduler`/`Method`/`Batcher`/pager/prefix stack over `SimBackend`
+//! reproduces the conservation guarantees the retired hand-mirrored stub
+//! workers enforced, under the same seeds and scenarios the CI gates
+//! drive.  Where the old mirrors asserted these books against their own
+//! reimplementation of the worker loop, this suite asserts them against
+//! the one real loop:
+//!
+//! * cancel storm (policy lineup): slot-log batch-slot conservation and
+//!   `cancels_issued == cancels_acked == spa_cancelled_total`;
+//! * warm chat: prefix hit / warm-admission books stay consistent
+//!   (`warm_admissions ≤ prefix_hits`, every admission consulted the
+//!   store, hit rate stamped in (0, 1]);
+//! * paged + grace: the frame pool conserves (every frame the run made
+//!   resident is returned by drain), eviction is a subset of reclaims,
+//!   and the overload controller's drift-debt peak respects the
+//!   configured grace bound.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use spa_cache::bench::loadgen::{ArrivalMode, LoadGenConfig, MethodReport, PolicyFlags};
+use spa_cache::bench::scenario::{self, ScenarioConfig, ScenarioKind, SloTargets};
+use spa_cache::bench::stub::StubConfig;
+
+fn scn(kind: ScenarioKind) -> ScenarioConfig {
+    ScenarioConfig {
+        kind,
+        slo: SloTargets { ttft_p99_ms: 500.0, deadline_ms: 2000.0 },
+        sessions: 3,
+        turns: 3,
+        trace: None,
+        record_trace: None,
+    }
+}
+
+fn extra(r: &MethodReport, key: &str) -> f64 {
+    let slo = r.slo.as_ref().expect("slo block");
+    slo.extras
+        .iter()
+        .find(|(k, _)| *k == key)
+        .unwrap_or_else(|| panic!("extra '{key}' missing: {:?}", slo.extras))
+        .1
+}
+
+/// The retired *policy* stub loop's cancel books, now asserted against the
+/// production worker: every admission lands in a real batch slot, freed
+/// slots are re-used, and the cancel count is conserved end to end
+/// (client issued == `cancelled` terminals observed == server counter).
+#[test]
+fn policy_lineup_conserves_slots_and_cancels_under_storm() {
+    const BATCH: usize = 4;
+    let slot_log: Arc<Mutex<Vec<(u64, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+    let stub = StubConfig {
+        batch: BATCH,
+        // Long decodes so cancels land mid-flight (see the scenario-suite
+        // storm test for the timing rationale).
+        step_ms: 5,
+        commits_per_step: 4,
+        slot_log: Some(Arc::clone(&slot_log)),
+        ..StubConfig::default()
+    };
+    let cfg = LoadGenConfig {
+        // No warmup: the post-drain scrape is absolute, so every cancel of
+        // the run must be visible in it.
+        warmup: Duration::from_millis(0),
+        duration: Duration::from_millis(500),
+        seed: 61,
+        ..LoadGenConfig::default()
+    };
+    // Method "spa": the full policy surface (scheduled refresh, partial
+    // servicing) rides along — the retired policy mirror's flavour.
+    let r = scenario::run_stub_scenario(
+        "spa",
+        1,
+        &cfg,
+        &scn(ScenarioKind::CancelStorm),
+        stub,
+        PolicyFlags::default(),
+    )
+    .expect("storm run");
+    assert_eq!(r.scenario.as_deref(), Some("cancel-storm"));
+    assert_eq!(r.errors, 0, "cancels are not errors: {r:?}");
+
+    let issued = extra(&r, "cancels_issued");
+    let acked = extra(&r, "cancels_acked");
+    let server = extra(&r, "cancelled_total");
+    assert!(issued > 4.0, "storm issued cancels: {:?}", r.slo);
+    assert_eq!(issued, acked, "every cancel acked with a `cancelled` terminal");
+    assert_eq!(issued, server, "spa_cancelled_total matches issued cancels");
+
+    let log = slot_log.lock().unwrap();
+    assert!(!log.is_empty(), "admissions logged");
+    assert!(
+        log.iter().all(|&(_, slot)| slot < BATCH),
+        "slot indices stay in the batch: {log:?}"
+    );
+    assert!(
+        log.len() > BATCH,
+        "freed slots must be re-used across the storm ({} admissions)",
+        log.len()
+    );
+    let ids: std::collections::HashSet<u64> = log.iter().map(|&(id, _)| id).collect();
+    assert_eq!(ids.len(), log.len(), "each request admitted exactly once");
+}
+
+/// The warm-serving books through the production admission path: every
+/// warm admission stems from a store hit (`warm_admissions ≤ hits`), the
+/// store was consulted on admissions, and the stamped hit rate is sane.
+#[test]
+fn warm_chat_prefix_books_stay_consistent() {
+    let cfg = LoadGenConfig {
+        warmup: Duration::from_millis(100),
+        duration: Duration::from_millis(900),
+        seed: 67,
+        ..LoadGenConfig::default()
+    };
+    let warm = scenario::run_stub_scenario(
+        "spa",
+        2,
+        &cfg,
+        &scn(ScenarioKind::Chat),
+        StubConfig::default(),
+        PolicyFlags { prefix_cache: true, ..PolicyFlags::default() },
+    )
+    .expect("warm chat run");
+    assert_eq!(warm.scenario.as_deref(), Some("chat"));
+
+    assert!(
+        warm.prefix_hits + warm.prefix_misses > 0.0,
+        "prefix store consulted on admission: {warm:?}"
+    );
+    assert!(warm.prefix_hits > 0.0, "chat turns re-hit donated prefixes: {warm:?}");
+    assert!(warm.warm_admissions > 0.0, "hits seeded slots warm: {warm:?}");
+    assert!(
+        warm.warm_admissions <= warm.prefix_hits,
+        "every warm admission stems from a hit ({} warm vs {} hits)",
+        warm.warm_admissions,
+        warm.prefix_hits
+    );
+    let hit_rate = warm.prefix_hit_rate.expect("stamped on warm runs");
+    assert!((0.0..=1.0).contains(&hit_rate), "hit rate in [0,1]: {hit_rate}");
+    assert!(hit_rate > 0.0, "hits happened, rate must show them");
+}
+
+/// The paged/overload books through the production admission gate: the
+/// frame pool conserves across the whole run (by drain every frame ever
+/// made resident has been returned — resident ≤ budget is sustainable
+/// precisely because nothing leaks), eviction is a subset of reclaims,
+/// and the drift-debt peak respects the `--grace` bound.
+#[test]
+fn paged_serving_conserves_frames_and_bounds_drift_debt() {
+    const GRACE: usize = 8;
+    let cfg = LoadGenConfig {
+        mode: ArrivalMode::Open { qps: 80.0 },
+        // No warmup: the post-drain scrape is absolute, so the drain-time
+        // frame-conservation identity below holds exactly.
+        warmup: Duration::from_millis(0),
+        duration: Duration::from_millis(600),
+        seed: 71,
+        ..LoadGenConfig::default()
+    };
+    let stub = StubConfig { batch: 4, step_ms: 2, commits_per_step: 4, ..StubConfig::default() };
+    // 1 KiB budget = 16 frames of 16-token pages: deliberately below the
+    // 4 slots × 8 pages a full batch would pin, so the pager's admission
+    // gate and eviction loop genuinely arbitrate.
+    let r = scenario::run_stub_scenario(
+        "spa",
+        1,
+        &cfg,
+        &scn(ScenarioKind::Mixed),
+        stub,
+        PolicyFlags {
+            page_bytes: Some(1024),
+            grace: Some(GRACE),
+            ..PolicyFlags::default()
+        },
+    )
+    .expect("paged mixed run");
+    assert!(r.paged, "paged discriminator stamped");
+    assert_eq!(r.errors, 0, "degraded serving shapes, never errors: {r:?}");
+    assert!(r.requests > 0, "traffic served under the page budget");
+
+    assert!(r.pages_resident > 0.0, "admissions allocated frames: {r:?}");
+    // Drain-time frame conservation: release() returns every frame a slot
+    // holds (resident or cold), so by the post-drain scrape the returns
+    // cover at least every counted residency — a leaked frame would leave
+    // `pages_reclaimed` short of `pages_resident` forever.
+    assert!(
+        r.pages_reclaimed >= r.pages_resident,
+        "frame pool leaked: {} made resident vs {} reclaimed",
+        r.pages_resident,
+        r.pages_reclaimed
+    );
+    assert!(
+        r.pages_evicted <= r.pages_reclaimed,
+        "eviction is a subset of reclaims: {} evicted vs {} reclaimed",
+        r.pages_evicted,
+        r.pages_reclaimed
+    );
+    assert!(
+        r.drift_debt_peak <= GRACE as f64,
+        "drift debt peak {} over the grace bound {GRACE}",
+        r.drift_debt_peak
+    );
+}

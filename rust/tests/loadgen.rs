@@ -1,15 +1,13 @@
-//! Load-generator end-to-end tests over *stub* workers — no artifacts or
-//! PJRT runtime needed, so unlike the serving test this exercises the whole
-//! loadgen pipeline (TCP protocol → router → worker mailbox → stats scrape
-//! → drain barrier → `BENCH_serving.json`) on every checkout.
+//! Load-generator end-to-end tests over sim-backed workers — no artifacts
+//! or PJRT runtime needed, so unlike the serving test this exercises the
+//! whole loadgen pipeline (TCP protocol → router → worker mailbox → stats
+//! scrape → drain barrier → `BENCH_serving.json`) on every checkout.
 //!
-//! The stub workers live in `spa_cache::bench::stub`: the plain session
-//! stub (slot-based incremental decode, streaming, cancellation) and the
-//! **policy** stub, which runs the real spa cache-policy decision loop —
-//! including the adaptive budget controller and staggered per-row
-//! scheduled refresh — over a stubbed engine.  Only the device execution
-//! is simulated; every refresh/schedule/tier decision is the production
-//! one.
+//! The worker factories live in `spa_cache::bench::stub`: both assemble
+//! the **production** `Worker`/`Method`/`Batcher` stack over a
+//! `runtime::SimBackend` that emulates variant execution in host memory.
+//! Only the device execution is simulated; every admission, refresh,
+//! schedule and tier decision is the production one (DESIGN.md §13).
 
 use std::net::TcpListener;
 use std::thread::JoinHandle;
@@ -31,9 +29,9 @@ const SEQ_LEN: usize = 128;
 fn stub_server(
     workers: usize,
     step_ms: u64,
-) -> (String, JoinHandle<anyhow::Result<()>>, Vec<JoinHandle<()>>) {
+) -> (String, JoinHandle<anyhow::Result<()>>, Vec<JoinHandle<anyhow::Result<()>>>) {
     let (router, handles) =
-        stub_router(workers, &StubConfig { step_ms, ..StubConfig::default() });
+        stub_router(workers, &StubConfig { step_ms, ..StubConfig::default() }).unwrap();
     serve(router, handles)
 }
 
@@ -41,15 +39,15 @@ fn stub_server(
 fn policy_stub_server(
     workers: usize,
     cfg: PolicyStubConfig,
-) -> (String, JoinHandle<anyhow::Result<()>>, Vec<JoinHandle<()>>) {
-    let (router, handles) = policy_stub_router(workers, &cfg);
+) -> (String, JoinHandle<anyhow::Result<()>>, Vec<JoinHandle<anyhow::Result<()>>>) {
+    let (router, handles) = policy_stub_router(workers, &cfg).unwrap();
     serve(router, handles)
 }
 
 fn serve(
     router: spa_cache::coordinator::router::Router,
-    handles: Vec<JoinHandle<()>>,
-) -> (String, JoinHandle<anyhow::Result<()>>, Vec<JoinHandle<()>>) {
+    handles: Vec<JoinHandle<anyhow::Result<()>>>,
+) -> (String, JoinHandle<anyhow::Result<()>>, Vec<JoinHandle<anyhow::Result<()>>>) {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let server = std::thread::spawn(move || {
@@ -71,12 +69,12 @@ fn traj_path(tag: &str) -> std::path::PathBuf {
 fn teardown(
     addr: &str,
     server: JoinHandle<anyhow::Result<()>>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Vec<JoinHandle<anyhow::Result<()>>>,
 ) {
     let mut c = Client::connect(addr).unwrap();
     c.shutdown().unwrap();
     for h in workers {
-        h.join().unwrap();
+        h.join().unwrap().unwrap();
     }
     server.join().unwrap().unwrap();
 }

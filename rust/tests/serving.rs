@@ -43,7 +43,7 @@ fn spawn_engine_router() -> Option<(Router, Vec<std::thread::JoinHandle<anyhow::
             max_wait: Duration::from_millis(50),
             ..BatcherConfig::default()
         };
-        Ok(Worker::new(id, engine, method, sampler, batcher, 4 * seq_len))
+        Ok(Worker::new(id, Box::new(engine), method, sampler, batcher, 4 * seq_len))
     });
     match spawned {
         Ok((router, handles)) => Some((router, handles, seq_len, charset)),

@@ -1,5 +1,6 @@
-//! Protocol-v2 session-layer tests over stub workers (`bench::stub`) — no
-//! artifacts or PJRT needed, so every checkout exercises the full
+//! Protocol-v2 session-layer tests over sim-backed production workers
+//! (`bench::stub` factories over `runtime::SimBackend`) — no artifacts or
+//! PJRT needed, so every checkout exercises the full
 //! TCP → session demux → router → worker pipeline: out-of-order completion
 //! over one connection, streamed frame ordering, cancel-mid-decode freeing
 //! (and re-admitting) a batch slot, v1 bare-line compatibility on the same
@@ -24,8 +25,8 @@ fn session_server(
     workers: usize,
     stub: StubConfig,
     cfg: ServerConfig,
-) -> (String, JoinHandle<anyhow::Result<()>>, Vec<JoinHandle<()>>) {
-    let (router, handles) = stub_router(workers, &stub);
+) -> (String, JoinHandle<anyhow::Result<()>>, Vec<JoinHandle<anyhow::Result<()>>>) {
+    let (router, handles) = stub_router(workers, &stub).unwrap();
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let server = std::thread::spawn(move || {
@@ -34,11 +35,15 @@ fn session_server(
     (addr, server, handles)
 }
 
-fn teardown(addr: &str, server: JoinHandle<anyhow::Result<()>>, workers: Vec<JoinHandle<()>>) {
+fn teardown(
+    addr: &str,
+    server: JoinHandle<anyhow::Result<()>>,
+    workers: Vec<JoinHandle<anyhow::Result<()>>>,
+) {
     let mut c = Client::connect(addr).unwrap();
     c.shutdown().unwrap();
     for h in workers {
-        h.join().unwrap();
+        h.join().unwrap().unwrap();
     }
     server.join().unwrap().unwrap();
 }
